@@ -1,0 +1,152 @@
+//! Design-choice ablations beyond the paper (DESIGN.md §10):
+//!
+//! 1. **Salient-width sweep** — the W4↔W8 continuum: SDR with 3..8
+//!    target bits on the same data (the paper only reports 4 and 8).
+//! 2. **Rounding-mode ablation** — Algorithm 1's round-to-nearest with
+//!    the all-ones floor guard vs plain flooring vs stochastic
+//!    rounding, isolating the value of the guard + RTN choice.
+//! 3. **Flag-sharing granularity** — one flag per group vs one flag
+//!    shared by two adjacent groups (halves flag storage, costs
+//!    accuracy), probing the effective-bits frontier.
+//!
+//! ```bash
+//! cargo run --release --example ablations
+//! ```
+
+use qrazor::quant::{qmax, round_half_even};
+use qrazor::sdr::signmag::{group_or, leading_one};
+use qrazor::sdr::SdrSpec;
+use qrazor::tensor::Tensor;
+use qrazor::util::rng::Rng;
+
+/// Activation-shaped test data.
+fn data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.heavy_tailed(1.0, 0.02, 30.0)).collect()
+}
+
+fn rel_err(x: &[f32], y: &[f32]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&a, &b) in x.iter().zip(y) {
+        num += ((a - b) as f64).powi(2);
+        den += (a as f64).powi(2);
+    }
+    (num / den).sqrt()
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Rounding {
+    /// Algorithm 1: round-to-nearest with the all-ones floor guard.
+    RtnGuarded,
+    /// Truncate only.
+    Floor,
+    /// Probabilistic: round up with p = (dropped LSBs)/2^flag.
+    Stochastic,
+}
+
+/// SDR fake-quant with a configurable rounding mode and flag sharing.
+fn sdr_variant(
+    xs: &[f32],
+    base_bits: u32,
+    target_bits: u32,
+    group: usize,
+    share: usize, // groups sharing one flag
+    mode: Rounding,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let q = qmax(base_bits);
+    let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale = if amax > 0.0 { amax / q as f32 } else { 0.0 };
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    let ints: Vec<i32> = xs
+        .iter()
+        .map(|&x| round_half_even(x * inv).clamp(-q, q))
+        .collect();
+    let sal = target_bits - 1;
+    let all_ones = (1u32 << sal) - 1;
+    let span = group * share;
+    let mut out = Vec::with_capacity(xs.len());
+    for chunk in ints.chunks(span) {
+        let flag = match leading_one(group_or(chunk)) {
+            None => 0,
+            Some(r) => r.saturating_sub(sal - 1),
+        };
+        for &v in chunk {
+            let mag = v.unsigned_abs();
+            let mut code = mag >> flag;
+            match mode {
+                Rounding::RtnGuarded => {
+                    if code != all_ones && flag > 0 && (mag >> (flag - 1)) & 1 == 1 {
+                        code += 1;
+                    }
+                }
+                Rounding::Floor => {}
+                Rounding::Stochastic => {
+                    if code != all_ones && flag > 0 {
+                        let dropped = mag & ((1 << flag) - 1);
+                        if rng.uniform() < dropped as f64 / (1u64 << flag) as f64 {
+                            code += 1;
+                        }
+                    }
+                }
+            }
+            let rec = ((code << flag) as f32) * scale;
+            out.push(if v < 0 { -rec } else { rec });
+        }
+    }
+    out
+}
+
+fn main() {
+    let xs = data(64 * 1024, 7);
+    let mut rng = Rng::new(11);
+
+    println!("=== 1. salient-width sweep (g16, 16-bit base) ===");
+    println!("{:>6} {:>12} {:>10}", "bits", "eff. bits", "rel err");
+    let mut prev = f64::INFINITY;
+    for target in [3u32, 4, 5, 6, 7, 8] {
+        let out = sdr_variant(&xs, 16, target, 16, 1, Rounding::RtnGuarded, &mut rng);
+        let e = rel_err(&xs, &out);
+        let eff = SdrSpec::new(16, target, 16).effective_bits();
+        println!("{:>6} {:>12.3} {:>10.4}", target, eff, e);
+        assert!(e < prev, "error must fall with salient width");
+        prev = e;
+    }
+
+    println!("\n=== 2. rounding-mode ablation (W4, g16) ===");
+    let mut results = Vec::new();
+    for mode in [Rounding::RtnGuarded, Rounding::Floor, Rounding::Stochastic] {
+        let out = sdr_variant(&xs, 16, 4, 16, 1, mode, &mut rng);
+        let e = rel_err(&xs, &out);
+        // magnitude bias: flooring shrinks |x| systematically; RTN and
+        // stochastic are (near-)centered. Signed bias cancels across ±
+        // so it is not diagnostic here.
+        let mag_bias: f64 = xs
+            .iter()
+            .zip(&out)
+            .map(|(&a, &b)| (b.abs() - a.abs()) as f64)
+            .sum::<f64>()
+            / xs.len() as f64;
+        println!("{:?}: rel err {:.4}, magnitude bias {:+.2e}", mode, e, mag_bias);
+        results.push((mode, e, mag_bias));
+    }
+    let rtn = results[0].1;
+    let floor = results[1].1;
+    assert!(rtn <= floor, "the paper's RTN must not lose to flooring");
+    // flooring is strictly downward-biased on magnitudes
+    assert!(results[1].2 < 0.0 && results[0].2.abs() < results[1].2.abs());
+
+    println!("\n=== 3. flag-sharing granularity (W4, g16 base) ===");
+    println!("{:>8} {:>12} {:>10}", "share", "eff. bits", "rel err");
+    let mut prev = 0f64;
+    for share in [1usize, 2, 4, 8] {
+        let out = sdr_variant(&xs, 16, 4, 16, share, Rounding::RtnGuarded, &mut rng);
+        let e = rel_err(&xs, &out);
+        let eff = 4.0 + 4.0 / (16 * share) as f64;
+        println!("{:>8} {:>12.4} {:>10.4}", share, eff, e);
+        assert!(e >= prev, "coarser flags cannot reduce error");
+        prev = e;
+    }
+    println!("\nablations OK");
+}

@@ -1,0 +1,49 @@
+//! KV-cache memory comparison — the paper's deployment motivation for
+//! KV4: at a fixed memory budget, the SDR-compressed pool holds ~3.76×
+//! the tokens of an FP16 pool (7.5× vs this build's FP32 caches).
+//!
+//! ```bash
+//! cargo run --release --example kv_memory
+//! ```
+
+use qrazor::baselines::{Fp16, QRazor};
+use qrazor::config::ModelConfig;
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::util::rng::Rng;
+
+fn main() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let w = ModelWeights::init_random(&cfg, 1);
+    let mut rng = Rng::new(2);
+    let seqs: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..32).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+
+    let tokens = 256;
+    println!("KV cache bytes after {tokens} tokens ({} layers, kv_dim {}):", cfg.layers, cfg.head_dim() * cfg.kv_heads);
+    let mut results = Vec::new();
+    for (name, scheme) in [
+        ("FP32 cache", Box::new(Fp16) as Box<dyn qrazor::baselines::Scheme>),
+        ("QRazor KV4 g16", Box::new(QRazor::w4a4kv4(16))),
+        ("QRazor KV4 g32", Box::new(QRazor::w4a4kv4(32))),
+    ] {
+        let qm = QuantModel::build(&w, scheme, &cal);
+        let mut cache = qm.new_cache(if name.ends_with("g32") { 32 } else { 16 });
+        for pos in 0..tokens {
+            qm.forward_token((pos % cfg.vocab) as u32, pos, &mut cache);
+        }
+        let bytes = cache.bytes();
+        println!("  {:<16} {:>10} bytes ({:>5.2} bits/value)", name, bytes, bits_per_value(&cfg, tokens, bytes));
+        results.push((name, bytes));
+    }
+    let ratio = results[0].1 as f64 / results[1].1 as f64;
+    println!("\ncompression vs FP32: {ratio:.2}x (≈{:.2}x vs FP16) — paper's effective 4.25 bits", ratio / 2.0);
+    assert!(ratio > 7.0);
+}
+
+fn bits_per_value(cfg: &ModelConfig, tokens: usize, bytes: usize) -> f64 {
+    let values = 2 * cfg.layers * (cfg.head_dim() * cfg.kv_heads) * tokens;
+    bytes as f64 * 8.0 / values as f64
+}

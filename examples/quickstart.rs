@@ -1,0 +1,67 @@
+//! Quickstart: the QRazor transform in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the paper's pipeline on a small tensor: stage-1 absmax
+//! quantization → stage-2 SDR compression → packed storage → the
+//! decompression-free GEMM, printing what happens at each step.
+
+use qrazor::quant::{Granularity, QuantTensor};
+use qrazor::sdr::gemm::{gemm_decompress, gemm_razored, gemm_razored_int};
+use qrazor::sdr::packed::PackedSdrMatrix;
+use qrazor::sdr::{SdrMatrix, SdrSpec};
+use qrazor::tensor::{matmul_bt, Tensor};
+use qrazor::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // Activation-shaped data: mostly small values, rare large outliers.
+    let mut x = Tensor::zeros(&[4, 64]);
+    for v in x.data_mut().iter_mut() {
+        *v = rng.heavy_tailed(1.0, 0.02, 30.0);
+    }
+    let mut w = Tensor::zeros(&[8, 64]);
+    rng.fill_normal(w.data_mut(), 0.0, 0.1);
+
+    // ---- stage 1: absolute-max scaling to the base precision ---------
+    // activations -> 16-bit per-tensor; weights -> 8-bit per-channel
+    let qx = QuantTensor::quantize(&x, 16, Granularity::PerTensor);
+    let qw = QuantTensor::quantize(&w, 8, Granularity::PerChannel);
+    println!("stage 1: activations -> int16 (scale {:.2e}), weights -> int8/channel", qx.scales[0]);
+
+    // ---- stage 2: significant data razoring to 4 bits ----------------
+    let a = SdrMatrix::compress(SdrSpec::new(16, 4, 16), &qx);
+    let wm = SdrMatrix::compress(SdrSpec::new(8, 4, 16), &qw);
+    println!(
+        "stage 2: SDR g16 -> {} bits/value effective; {:.0}% of activation codes razored to 0",
+        a.spec.effective_bits(),
+        100.0 * a.zeroed_fraction()
+    );
+
+    // ---- packed storage ----------------------------------------------
+    let packed = PackedSdrMatrix::from_matrix(&a);
+    println!(
+        "packed: {} values in {} bytes = {:.3} bits/value (fp16 would be {} bytes)",
+        a.rows * a.cols,
+        packed.payload_bytes(),
+        packed.measured_effective_bits(),
+        a.rows * a.cols * 2,
+    );
+
+    // ---- decompression-free GEMM --------------------------------------
+    let razored = gemm_razored_int(&a, &wm);
+    let reference = gemm_decompress(&a, &wm);
+    assert_eq!(razored.data(), reference.data());
+    println!("razored GEMM == decompress-then-GEMM: bit-exact over {} outputs", razored.len());
+
+    // ...and it approximates the FP math:
+    let fp = matmul_bt(&x, &w);
+    let q = gemm_razored(&a, &wm);
+    let rel = qrazor::baselines::rel_error(&fp, &q);
+    println!("relative error vs FP32 matmul: {:.3}", rel);
+    assert!(rel < 0.35);
+    println!("quickstart OK");
+}

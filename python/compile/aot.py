@@ -1,0 +1,138 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+Why text: jax ≥ 0.5 serializes HloModuleProto with 64-bit instruction
+ids, which xla_extension 0.5.1 (the version the `xla` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (under --outdir, default ../artifacts):
+  meta.json               config, shapes, parameter order
+  train_step.hlo.txt      (step, tokens[B,S], params‖m‖v…) → (loss, …)
+  lm_logits_fp.hlo.txt    (tokens[1,S], params…) → logits
+  lm_logits_w4a4.hlo.txt  same, every GEMM through the L1 Pallas kernels
+  sdr_fakequant.hlo.txt   the standalone SDR kernel (parity tests)
+
+`make artifacts` re-runs this only when compile/*.py changes.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import sdr as ksdr
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--model", default="nano", choices=sorted(M.PRESETS))
+    ap.add_argument("--train-batch", type=int, default=8)
+    ap.add_argument("--train-seq", type=int, default=64)
+    ap.add_argument("--eval-seq", type=int, default=128)
+    # legacy single-file interface used by older Makefiles
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.model]
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    order = M.param_order(cfg)
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in order]
+
+    artifacts = {}
+
+    def emit(name, lowered):
+        text = to_hlo_text(lowered)
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        artifacts[name] = f"{name}.hlo.txt"
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # --- train step -------------------------------------------------------
+    tokens_train = jax.ShapeDtypeStruct((args.train_batch, args.train_seq), jnp.int32)
+    step_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def train_step(step, tokens, *flat):
+        return T.train_step_flat(cfg, step, tokens, *flat)
+
+    emit(
+        "train_step",
+        jax.jit(train_step).lower(step_spec, tokens_train, *(param_specs * 3)),
+    )
+
+    # --- fp logits --------------------------------------------------------
+    tokens_eval = jax.ShapeDtypeStruct((1, args.eval_seq), jnp.int32)
+
+    def logits_fp(tokens, *flat):
+        params = dict(zip([n for n, _ in order], flat))
+        return (M.forward(params, tokens, cfg),)
+
+    emit("lm_logits_fp", jax.jit(logits_fp).lower(tokens_eval, *param_specs))
+
+    # --- quantized logits (L1 Pallas kernels inside) -----------------------
+    qc = M.QuantConfig()
+
+    def logits_w4a4(tokens, *flat):
+        params = dict(zip([n for n, _ in order], flat))
+        return (M.forward(params, tokens, cfg, qc),)
+
+    emit("lm_logits_w4a4", jax.jit(logits_w4a4).lower(tokens_eval, *param_specs))
+
+    # --- standalone SDR kernel ---------------------------------------------
+    def fakequant(x, scale):
+        return (
+            ksdr.sdr_fake_quant_pallas(
+                x, scale, base_bits=16, target_bits=4, group=16
+            ),
+        )
+
+    emit(
+        "sdr_fakequant",
+        jax.jit(fakequant).lower(
+            jax.ShapeDtypeStruct((64, 256), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+    )
+
+    meta = {
+        "model": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "dim": cfg.dim,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "ffn_hidden": cfg.ffn_hidden,
+            "seq_max": cfg.seq_max,
+        },
+        "train": {"batch": args.train_batch, "seq": args.train_seq},
+        "eval": {"batch": 1, "seq": args.eval_seq},
+        "sdr_kernel": {"rows": 64, "cols": 256, "base_bits": 16,
+                       "target_bits": 4, "group": 16},
+        "params": [{"name": n, "shape": list(s)} for n, s in order],
+        "artifacts": artifacts,
+    }
+    (outdir / "meta.json").write_text(json.dumps(meta, indent=2))
+    print(f"wrote {outdir / 'meta.json'}")
+
+    if args.out:  # legacy: copy the fp logits artifact to --out
+        pathlib.Path(args.out).write_text((outdir / "lm_logits_fp.hlo.txt").read_text())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for the QRazor transform (L1 correctness reference).
+
+Implements the paper's two stages exactly, vectorized over the last
+axis, with no Pallas involvement: `absmax_quant` (stage 1) and
+`sdr_fake_quant` (stage 2: leading-one razoring + RTN with the all-ones
+floor guard). The Pallas kernels in `sdr.py` must match this oracle
+bit-for-bit (the dequantized lattices are integer multiples of the
+scale, so equality is exact, not approximate) — enforced by
+`python/tests/test_kernels.py` under hypothesis sweeps. The same
+semantics are implemented bit-level in Rust (`rust/src/sdr/razor.rs`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> int:
+    """Largest representable magnitude for a signed bit width."""
+    return (1 << (bits - 1)) - 1
+
+
+def absmax_scale(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-tensor absolute-max scale: |x|_max / qmax (0 for zero input)."""
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0, amax / qmax(bits), 0.0)
+
+
+def absmax_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Stage 1: round-to-nearest-even symmetric quantization to int32."""
+    q = qmax(bits)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    # jnp.round implements round-half-even, matching Rust's
+    # round_ties_even — required for exact cross-language parity.
+    return jnp.clip(jnp.round(x * inv), -q, q).astype(jnp.int32)
+
+
+def sdr_compress_int(q: jnp.ndarray, base_bits: int, target_bits: int,
+                     group: int):
+    """Stage 2 on integer values: returns (codes, flags, signs).
+
+    `q` has shape [..., n] with n divisible by `group`. Codes are the
+    salient magnitudes (target_bits-1 wide), flags the per-group LSB
+    truncation counts.
+    """
+    del base_bits  # width is implied by the int32 values
+    sal = target_bits - 1
+    all_ones = (1 << sal) - 1
+    mag = jnp.abs(q)
+    shape = mag.shape
+    n = shape[-1]
+    assert n % group == 0, f"last dim {n} not divisible by group {group}"
+    gshape = shape[:-1] + (n // group, group)
+    mg = mag.reshape(gshape)
+    # group bitwise-OR (the razoring-point detector, Appendix A.2)
+    m_or = jax.lax.reduce(mg, jnp.int32(0), jax.lax.bitwise_or, (len(gshape) - 1,))
+    # leading-one index = 31 - clz; flag = max(r - (sal-1), 0)
+    r = 31 - jax.lax.clz(jnp.maximum(m_or, 1))
+    flag = jnp.where(m_or > 0, jnp.maximum(r - (sal - 1), 0), 0).astype(jnp.int32)
+    flag_b = jnp.repeat(flag[..., None], group, axis=-1).reshape(shape)
+    trunc = jax.lax.shift_right_logical(mag, flag_b)
+    round_bit = jnp.where(
+        flag_b > 0,
+        jax.lax.shift_right_logical(mag, jnp.maximum(flag_b - 1, 0)) & 1,
+        0,
+    )
+    # all-ones floor guard (Algorithm 1)
+    codes = jnp.where(trunc == all_ones, trunc, trunc + round_bit)
+    return codes, flag, jnp.sign(q)
+
+
+def sdr_fake_quant(x: jnp.ndarray, scale: jnp.ndarray, base_bits: int,
+                   target_bits: int, group: int) -> jnp.ndarray:
+    """Full QRazor fake-quant: stage 1 + stage 2 + dequantize.
+
+    When target_bits >= base_bits, stage 2 is the identity (the Table 1
+    base-precision scenarios).
+    """
+    q = absmax_quant(x, scale, base_bits)
+    if target_bits >= base_bits:
+        return q.astype(jnp.float32) * scale
+    codes, flag, sign = sdr_compress_int(q, base_bits, target_bits, group)
+    flag_b = jnp.repeat(flag[..., None], group, axis=-1).reshape(x.shape)
+    recon = jax.lax.shift_left(codes, flag_b)
+    return (sign * recon).astype(jnp.float32) * scale
+
+
+def qrazor_weight_ref(w, group: int, target_bits: int = 4) -> jnp.ndarray:
+    """Per-channel (row) weight fake-quant: 8-bit base + SDR to
+    `target_bits`."""
+    w_amax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+    w_scale = jnp.where(w_amax > 0, w_amax / qmax(8), 0.0)
+    qw = jnp.clip(jnp.round(w / jnp.where(w_scale > 0, w_scale, 1.0)),
+                  -127, 127).astype(jnp.int32)
+    qw = jnp.where(w_amax > 0, qw, 0)
+    if target_bits >= 8:
+        return qw.astype(jnp.float32) * w_scale
+    codes, flag, sign = sdr_compress_int(qw, 8, target_bits, group)
+    flag_b = jnp.repeat(flag[..., None], group, axis=-1).reshape(w.shape)
+    return (sign * jax.lax.shift_left(codes, flag_b)).astype(jnp.float32) * w_scale
+
+
+def qrazor_linear_ref(x, w, x_scale, w_group, a_group, a_target: int = 4,
+                      w_target: int = 4):
+    """Reference quantized linear: y = Q_a(x) @ Q_w(w)^T.
+
+    Weights: per-channel (row) 8-bit base, SDR to `w_target`, group
+    `w_group`. Activations: per-tensor static 16-bit base, SDR to
+    `a_target`, group `a_group`.
+    """
+    w_hat = qrazor_weight_ref(w, w_group, w_target)
+    x_hat = sdr_fake_quant(x, x_scale, 16, a_target, a_group)
+    return x_hat @ w_hat.T

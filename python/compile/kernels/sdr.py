@@ -1,0 +1,124 @@
+"""L1 Pallas kernels: SDR fake-quantization and the razored linear.
+
+Two kernels, both lowered with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls; see DESIGN.md §9 for the real-TPU
+mapping):
+
+* :func:`sdr_fake_quant_pallas` — tiles the input over rows, performs
+  the full stage-1 + stage-2 QRazor transform per tile on the VPU
+  (integer ops only between the two scale multiplies).
+* :func:`qrazor_linear_pallas` — the paper's compute hot-spot: a tiled
+  ``Q_a(x) @ Q_w(w)ᵀ`` where both operands are fake-quantized *inside*
+  the kernel. BlockSpec streams (bm × K) activation tiles and
+  (bn × K) weight tiles HBM→VMEM; the MXU-shaped ``jnp.dot`` consumes
+  them. On real TPU the dequant shift folds into the accumulator scale
+  (the barrel-shifter-as-exp2-multiply described in DESIGN.md §9).
+
+Both are bit-exact against ``ref.py`` — integer lattices, no tolerance.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _sdr_tile(x, scale, base_bits: int, target_bits: int, group: int):
+    """The in-kernel SDR transform on one VMEM tile (pure jnp ops)."""
+    q = ref.absmax_quant(x, scale, base_bits)
+    if target_bits >= base_bits:
+        return q.astype(jnp.float32) * scale
+    sal = target_bits - 1
+    all_ones = (1 << sal) - 1
+    mag = jnp.abs(q)
+    rows, n = x.shape
+    mg = mag.reshape(rows, n // group, group)
+    m_or = jax.lax.reduce(mg, jnp.int32(0), jax.lax.bitwise_or, (2,))
+    r = 31 - jax.lax.clz(jnp.maximum(m_or, 1))
+    flag = jnp.where(m_or > 0, jnp.maximum(r - (sal - 1), 0), 0)
+    flag_b = jnp.repeat(flag[..., None], group, axis=-1).reshape(rows, n)
+    trunc = jax.lax.shift_right_logical(mag, flag_b)
+    round_bit = jnp.where(
+        flag_b > 0,
+        jax.lax.shift_right_logical(mag, jnp.maximum(flag_b - 1, 0)) & 1,
+        0,
+    )
+    codes = jnp.where(trunc == all_ones, trunc, trunc + round_bit)
+    recon = jax.lax.shift_left(codes, flag_b)
+    return (jnp.sign(q) * recon).astype(jnp.float32) * scale
+
+
+def sdr_fake_quant_pallas(x, scale, *, base_bits: int, target_bits: int,
+                          group: int, block_rows: int = 64):
+    """QRazor fake-quant of a 2-D array, tiled over rows.
+
+    ``scale`` is a (1, 1) array (static per-tensor scale as an operand,
+    so one compiled kernel serves every calibrated site).
+    """
+    rows, n = x.shape
+    assert n % group == 0, f"{n} % {group}"
+    bm = min(block_rows, rows)
+    assert rows % bm == 0, f"rows {rows} not divisible by block {bm}"
+
+    def kernel(x_ref, s_ref, o_ref):
+        o_ref[...] = _sdr_tile(x_ref[...], s_ref[0, 0], base_bits,
+                               target_bits, group)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=True,
+    )(x, scale)
+
+
+def qrazor_linear_pallas(x, w, x_scale, *, w_group: int = 16,
+                         a_group: int = 16, block_m: int = 64,
+                         block_n: int = 64):
+    """Quantized linear ``y = Q_a(x) @ Q_w(w)ᵀ`` as a tiled Pallas kernel.
+
+    ``x``: [M, K] activations, per-tensor static scale ``x_scale`` (1,1).
+    ``w``: [N, K] weights, per-channel scales computed in-kernel.
+    Grid tiles (block_m × K) × (block_n × K); K is kept whole per tile —
+    our model dims (≤1k) fit VMEM comfortably (DESIGN.md §9 budgets it).
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, f"{m}%{bm} / {n}%{bn}"
+
+    def kernel(x_ref, w_ref, s_ref, o_ref):
+        xt = _sdr_tile(x_ref[...], s_ref[0, 0], 16, 4, a_group)
+        # per-channel stage-1 + SDR on the weight tile (rows are whole
+        # output channels, so tiling over n preserves per-channel scales)
+        w_hat = ref.qrazor_weight_ref(w_ref[...], w_group, 4)
+        # MXU-shaped contraction on the dequantized lattices
+        o_ref[...] = jnp.dot(xt, w_hat.T, preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, x_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("base_bits", "target_bits", "group"))
+def sdr_fake_quant_jit(x, scale, base_bits: int, target_bits: int, group: int):
+    """Jitted oracle wrapper (used by model.py when Pallas is disabled)."""
+    return ref.sdr_fake_quant(x, scale, base_bits, target_bits, group)

@@ -1,0 +1,197 @@
+"""L2: the JAX transformer — same architecture and parameter naming as
+the Rust reference (`rust/src/model/mod.rs`), so checkpoints and logits
+cross the language boundary exactly.
+
+Architecture: token embedding → N × (RMSNorm → MHA with RoPE (GQA-aware)
+→ residual → RMSNorm → SwiGLU → residual) → final RMSNorm → lm_head.
+Optionally every GEMM boundary is routed through the L1 QRazor kernels
+(`quant=` config) to produce the quantized-serving artifact.
+
+Build-time only: this module is imported by `aot.py` and the pytest
+suite, never by the Rust runtime.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels import sdr as ksdr
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int
+    dim: int
+    layers: int
+    heads: int
+    kv_heads: int
+    ffn_hidden: int
+    seq_max: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.head_dim * self.kv_heads
+
+
+# Mirrors rust/src/config.rs presets exactly.
+PRESETS = {
+    "nano": Config("nano", 256, 64, 2, 2, 2, 128, 128),
+    "tiny": Config("tiny", 512, 256, 4, 4, 4, 512, 256),
+    "small": Config("small", 512, 512, 6, 8, 8, 1024, 256),
+    "mistral-tiny": Config("mistral-tiny", 512, 256, 4, 8, 2, 512, 256),
+    "medium": Config("medium", 4096, 768, 12, 12, 12, 2048, 512),
+}
+
+
+def param_order(cfg: Config):
+    """Canonical (name, shape) list — must match
+    ModelWeights::param_specs in rust/src/model/mod.rs."""
+    out = [("embed", (cfg.vocab, cfg.dim))]
+    for li in range(cfg.layers):
+        out += [
+            (f"layers.{li}.attn_norm", (cfg.dim,)),
+            (f"layers.{li}.wq", (cfg.dim, cfg.dim)),
+            (f"layers.{li}.wk", (cfg.kv_dim, cfg.dim)),
+            (f"layers.{li}.wv", (cfg.kv_dim, cfg.dim)),
+            (f"layers.{li}.wo", (cfg.dim, cfg.dim)),
+            (f"layers.{li}.ffn_norm", (cfg.dim,)),
+            (f"layers.{li}.w_gate", (cfg.ffn_hidden, cfg.dim)),
+            (f"layers.{li}.w_up", (cfg.ffn_hidden, cfg.dim)),
+            (f"layers.{li}.w_down", (cfg.dim, cfg.ffn_hidden)),
+        ]
+    out += [("final_norm", (cfg.dim,)), ("lm_head", (cfg.vocab, cfg.dim))]
+    return out
+
+
+def init_params(cfg: Config, key) -> dict:
+    """1/sqrt(fan_in) normal init; norms start at 1."""
+    params = {}
+    for name, shape in param_order(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def rmsnorm(x, gain, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def apply_rope(x, n_heads, head_dim, pos0=0):
+    """RoPE with pairing (i, i+half) — identical to the Rust version."""
+    t = x.shape[-2]
+    half = head_dim // 2
+    pos = jnp.arange(pos0, pos0 + t, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(half, dtype=jnp.float32)[None, :]
+    theta = pos / (10_000.0 ** (2.0 * idx / head_dim))
+    # [t, 1, half] so it broadcasts across the head axis of xh
+    sin, cos = jnp.sin(theta)[:, None, :], jnp.cos(theta)[:, None, :]
+    shape = x.shape[:-1] + (n_heads, head_dim)
+    xh = x.reshape(shape)
+    a = xh[..., :half]
+    b = xh[..., half:]
+    ra = a * cos - b * sin
+    rb = b * cos + a * sin
+    return jnp.concatenate([ra, rb], axis=-1).reshape(x.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """QRazor fake-quant settings for the serving artifact. Scales are
+    computed dynamically in-graph (per-tensor absmax) — the Rust path
+    with calibrated static scales is the normative accuracy pipeline;
+    this artifact exists to run the L1 kernels end-to-end in the lowered
+    HLO."""
+    a_group: int = 16
+    w_group: int = 16
+    a_target: int = 4
+    w_target: int = 4
+    use_pallas: bool = True
+
+
+def _quant_linear(x2d, w, qc: QuantConfig):
+    """Quantized y = Q_a(x) @ Q_w(w)^T on 2-D x."""
+    scale = kref.absmax_scale(x2d, 16).reshape(1, 1)
+    if qc.use_pallas:
+        return ksdr.qrazor_linear_pallas(
+            x2d, w, scale, w_group=qc.w_group, a_group=qc.a_group
+        )
+    return kref.qrazor_linear_ref(x2d, w, scale[0, 0], qc.w_group,
+                                  qc.a_group, qc.a_target, qc.w_target)
+
+
+def _linear(x, w, qc):
+    """x [..., k] @ w[n, k]^T with optional quantization."""
+    if qc is None:
+        return x @ w.T
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    y = _quant_linear(x2d, w, qc)
+    return y.reshape(lead + (w.shape[0],))
+
+
+def forward(params: dict, tokens, cfg: Config, qc: QuantConfig | None = None):
+    """Full-sequence causal forward → logits [batch, seq, vocab]."""
+    b, t = tokens.shape
+    hd = cfg.head_dim
+    x = params["embed"][tokens]  # [b, t, dim]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for li in range(cfg.layers):
+        p = lambda n: params[f"layers.{li}.{n}"]
+        h = rmsnorm(x, p("attn_norm"))
+        q = _linear(h, p("wq"), qc)
+        k = _linear(h, p("wk"), qc)
+        v = _linear(h, p("wv"), qc)
+        q = apply_rope(q, cfg.heads, hd)
+        k = apply_rope(k, cfg.kv_heads, hd)
+        qh = q.reshape(b, t, cfg.heads, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, t, cfg.kv_heads, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, t, cfg.kv_heads, hd).transpose(0, 2, 1, 3)
+        if cfg.kv_heads != cfg.heads:
+            rep = cfg.heads // cfg.kv_heads
+            kh = jnp.repeat(kh, rep, axis=1)
+            vh = jnp.repeat(vh, rep, axis=1)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, cfg.dim)
+        x = x + _linear(ctx, p("wo"), qc)
+        h = rmsnorm(x, p("ffn_norm"))
+        gate = _linear(h, p("w_gate"), qc)
+        up = _linear(h, p("w_up"), qc)
+        act = jax.nn.silu(gate) * up
+        x = x + _linear(act, p("w_down"), qc)
+    x = rmsnorm(x, params["final_norm"])
+    return _linear(x, params["lm_head"], qc)
+
+
+def loss_fn(params, tokens, cfg: Config):
+    """Next-token cross entropy (mean over positions)."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    targets = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("preset",))
+def logits_fp(tokens, *flat_params, preset: str):
+    cfg = PRESETS[preset]
+    names = [n for n, _ in param_order(cfg)]
+    params = dict(zip(names, flat_params))
+    return forward(params, tokens, cfg)

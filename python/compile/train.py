@@ -1,0 +1,54 @@
+"""L2 training step: Adam on next-token cross-entropy.
+
+The whole optimizer lives inside the lowered `train_step` HLO, so the
+Rust driver (examples/e2e_train_serve.rs) only shuttles flat parameter/
+moment arrays in and out of PJRT — python never runs at training time.
+Flat ordering follows `model.param_order`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+LR = 3e-3
+BETA1 = 0.9
+BETA2 = 0.95
+EPS = 1e-8
+WD = 0.01
+
+
+def train_step_flat(cfg: M.Config, step, tokens, *flat):
+    """One Adam step on flattened state.
+
+    `flat` = params ++ m ++ v (each `len(order)` arrays).
+    Returns (loss, new_params ++ new_m ++ new_v).
+    """
+    order = [n for n, _ in M.param_order(cfg)]
+    n = len(order)
+    assert len(flat) == 3 * n, f"expected {3 * n} arrays, got {len(flat)}"
+    params = dict(zip(order, flat[:n]))
+    m = dict(zip(order, flat[n : 2 * n]))
+    v = dict(zip(order, flat[2 * n :]))
+
+    loss, grads = jax.value_and_grad(M.loss_fn)(params, tokens, cfg)
+
+    t = step + 1.0
+    bc1 = 1.0 - BETA1 ** t
+    bc2 = 1.0 - BETA2 ** t
+    new_p, new_m, new_v = [], [], []
+    for name in order:
+        g = grads[name]
+        mi = BETA1 * m[name] + (1.0 - BETA1) * g
+        vi = BETA2 * v[name] + (1.0 - BETA2) * g * g
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + EPS)
+        decay = 0.0 if name.endswith("norm") else WD
+        new_p.append(params[name] - LR * (update + decay * params[name]))
+        new_m.append(mi)
+        new_v.append(vi)
+    return (loss, *new_p, *new_m, *new_v)
+
+
+def zero_moments(cfg: M.Config):
+    """Initial Adam state (zeros shaped like the parameters)."""
+    return [jnp.zeros(shape, jnp.float32) for _, shape in M.param_order(cfg)]

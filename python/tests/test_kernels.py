@@ -1,0 +1,175 @@
+"""L1 correctness: Pallas SDR kernels vs the pure-jnp oracle (ref.py),
+plus a hand-computed bit-level reference for absolute ground truth.
+
+The dequantized lattices are exact integer multiples of the scale, so
+kernel-vs-oracle comparisons use strict equality, not allclose.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sdr
+
+
+# ---------------------------------------------------------------------------
+# ground-truth bit-level SDR in plain python
+# ---------------------------------------------------------------------------
+def py_sdr_group(vals, sal, max_flag):
+    """Reference: one group of base-precision ints -> reconstructed ints."""
+    m_or = 0
+    for v in vals:
+        m_or |= abs(v)
+    if m_or == 0:
+        flag = 0
+    else:
+        r = m_or.bit_length() - 1
+        flag = min(max(r - (sal - 1), 0), max_flag)
+    all_ones = (1 << sal) - 1
+    out = []
+    for v in vals:
+        mag = abs(v)
+        code = mag >> flag
+        if code != all_ones and flag > 0 and (mag >> (flag - 1)) & 1:
+            code += 1
+        rec = code << flag
+        out.append(-rec if v < 0 else rec)
+    return out, flag
+
+
+def py_sdr(ints, sal, max_flag, group):
+    out = []
+    for i in range(0, len(ints), group):
+        rec, _ = py_sdr_group(ints[i:i + group], sal, max_flag)
+        out.extend(rec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# oracle vs ground truth
+# ---------------------------------------------------------------------------
+@given(
+    st.lists(st.integers(min_value=-32767, max_value=32767),
+             min_size=16, max_size=64).filter(lambda l: len(l) % 16 == 0),
+)
+@settings(max_examples=60, deadline=None)
+def test_oracle_matches_bit_level_reference(vals):
+    q = jnp.asarray(vals, jnp.int32).reshape(1, -1)
+    codes, flag, sign = ref.sdr_compress_int(q, 16, 4, 16)
+    flag_b = jnp.repeat(flag[..., None], 16, axis=-1).reshape(q.shape)
+    recon = np.asarray(sign * jax.lax.shift_left(codes, flag_b)).flatten()
+    expect = py_sdr(vals, sal=3, max_flag=12, group=16)
+    np.testing.assert_array_equal(recon, np.asarray(expect))
+
+
+def test_all_ones_floor_guard():
+    # 0b11111100 = 252: salient 111 -> floor, never carry into sign
+    q = jnp.asarray([[252] + [0] * 15], jnp.int32)
+    codes, flag, _ = ref.sdr_compress_int(q, 16, 4, 16)
+    assert int(flag[0, 0]) == 5
+    assert int(codes[0, 0]) == 0b111
+
+
+def test_round_up_case():
+    # 182 = 0b10110110: salient 101, round bit 1 -> 110
+    q = jnp.asarray([[182] + [0] * 15], jnp.int32)
+    codes, flag, _ = ref.sdr_compress_int(q, 16, 4, 16)
+    assert int(flag[0, 0]) == 5
+    assert int(codes[0, 0]) == 0b110
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel vs oracle — exact equality
+# ---------------------------------------------------------------------------
+@given(
+    rows=st.sampled_from([1, 2, 4, 8]),
+    cols_g=st.sampled_from([(32, 16), (64, 16), (64, 32), (128, 32)]),
+    target=st.sampled_from([4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_pallas_fakequant_equals_oracle(rows, cols_g, target, seed):
+    cols, group = cols_g
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, cols), jnp.float32) * 3.0
+    scale = ref.absmax_scale(x, 16).reshape(1, 1)
+    got = sdr.sdr_fake_quant_pallas(
+        x, scale, base_bits=16, target_bits=target, group=group, block_rows=rows
+    )
+    want = ref.sdr_fake_quant(x, scale[0, 0], 16, target, group)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pallas_fakequant_tiles_rows():
+    # multi-tile grid must agree with single-tile
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (64, 64), jnp.float32)
+    scale = ref.absmax_scale(x, 16).reshape(1, 1)
+    a = sdr.sdr_fake_quant_pallas(x, scale, base_bits=16, target_bits=4,
+                                  group=16, block_rows=16)
+    b = ref.sdr_fake_quant(x, scale[0, 0], 16, 4, 16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pallas_linear_equals_ref(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (8, 64), jnp.float32)
+    w = jax.random.normal(k2, (16, 64), jnp.float32) * 0.1
+    scale = ref.absmax_scale(x, 16).reshape(1, 1)
+    got = sdr.qrazor_linear_pallas(x, w, scale, w_group=16, a_group=16,
+                                   block_m=8, block_n=16)
+    want = ref.qrazor_linear_ref(x, w, scale[0, 0], 16, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_outlier_dominates_group():
+    # one big value forces small ones to zero (the Fig. 2(c) mechanism)
+    x = jnp.asarray([[1000.0] + [0.5] * 15], jnp.float32)
+    scale = ref.absmax_scale(x, 16)
+    out = np.asarray(ref.sdr_fake_quant(x, scale, 16, 4, 16))
+    assert out[0, 0] != 0.0
+    assert np.all(out[0, 1:] == 0.0)
+
+
+def test_base_precision_passthrough():
+    # target == base -> plain stage-1 quantization (Table 1 scenarios)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 32), jnp.float32)
+    scale = ref.absmax_scale(x, 16)
+    out = ref.sdr_fake_quant(x, scale, 16, 16, 16)
+    err = np.max(np.abs(np.asarray(out) - np.asarray(x)))
+    assert err <= float(scale) * 0.5 + 1e-7
+
+
+def test_group_size_monotonicity():
+    # larger groups -> (weakly) worse reconstruction on heavy-tailed data
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (16, 128), jnp.float32)
+    x = x * (1.0 + 20.0 * (jax.random.uniform(key, x.shape) > 0.99))
+    scale = ref.absmax_scale(x, 16)
+    errs = []
+    for g in [8, 32, 128]:
+        out = ref.sdr_fake_quant(x, scale, 16, 4, g)
+        errs.append(float(jnp.mean((out - x) ** 2)))
+    assert errs[0] <= errs[1] * 1.05 <= errs[2] * 1.1 * 1.05
+
+
+def test_w4a8_more_accurate_than_w4a4():
+    key = jax.random.PRNGKey(13)
+    x = jax.random.normal(key, (8, 64), jnp.float32)
+    scale = ref.absmax_scale(x, 16)
+    e4 = float(jnp.mean((ref.sdr_fake_quant(x, scale, 16, 4, 16) - x) ** 2))
+    e8 = float(jnp.mean((ref.sdr_fake_quant(x, scale, 16, 8, 16) - x) ** 2))
+    assert e8 < e4
+
+
+def test_zero_input_is_fixed_point():
+    x = jnp.zeros((4, 32), jnp.float32)
+    scale = ref.absmax_scale(x, 16)
+    out = ref.sdr_fake_quant(x, scale, 16, 4, 16)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 32)))

@@ -1,0 +1,98 @@
+"""L2 model tests: shapes, causality, parity plumbing, training signal."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import train as T
+
+
+CFG = M.PRESETS["nano"]
+
+
+def _params(seed=0):
+    return M.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def test_param_order_matches_shapes():
+    params = _params()
+    for name, shape in M.param_order(CFG):
+        assert params[name].shape == shape, name
+
+
+def test_forward_shape_and_finite():
+    params = _params()
+    tokens = jnp.asarray([[1, 2, 3, 4, 5, 6]], jnp.int32)
+    logits = M.forward(params, tokens, CFG)
+    assert logits.shape == (1, 6, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality():
+    params = _params()
+    a = M.forward(params, jnp.asarray([[5, 6, 7, 8]], jnp.int32), CFG)
+    b = M.forward(params, jnp.asarray([[5, 6, 7, 9]], jnp.int32), CFG)
+    np.testing.assert_allclose(np.asarray(a[0, :3]), np.asarray(b[0, :3]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(a[0, 3] - b[0, 3]))) > 1e-4
+
+
+def test_gqa_forward():
+    cfg = M.PRESETS["mistral-tiny"]
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    tokens = jnp.asarray([[1, 2, 3]], jnp.int32)
+    logits = M.forward(params, tokens, cfg)
+    assert logits.shape == (1, 3, cfg.vocab)
+
+
+def test_loss_decreases_over_steps():
+    params = _params(2)
+    order = [n for n, _ in M.param_order(CFG)]
+    m = {n: jnp.zeros_like(params[n]) for n in order}
+    v = {n: jnp.zeros_like(params[n]) for n in order}
+    key = jax.random.PRNGKey(3)
+    # simple learnable structure: token t+1 = (t + 1) % 32
+    base = jnp.arange(64, dtype=jnp.int32) % 32
+    tokens = jnp.stack([base + i for i in range(4)]) % 32
+
+    step_fn = jax.jit(lambda s, tk, *flat: T.train_step_flat(CFG, s, tk, *flat))
+    flat = [params[n] for n in order] + [m[n] for n in order] + [v[n] for n in order]
+    losses = []
+    for s in range(8):
+        del key
+        out = step_fn(jnp.float32(s), tokens, *flat)
+        losses.append(float(out[0]))
+        flat = list(out[1:])
+        key = None
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_quantized_forward_noise_ordering():
+    params = _params(4)
+    tokens = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    fp = M.forward(params, tokens, CFG)
+
+    def rel(a_target, w_target):
+        qc = M.QuantConfig(a_target=a_target, w_target=w_target,
+                           use_pallas=False)
+        q = M.forward(params, tokens, CFG, qc)
+        return float(jnp.linalg.norm(q - fp) / jnp.linalg.norm(fp))
+
+    e_w8a8 = rel(8, 8)
+    e_w4a8 = rel(8, 4)
+    e_w4a4 = rel(4, 4)
+    assert e_w8a8 < e_w4a8 < e_w4a4 * 1.001, (e_w8a8, e_w4a8, e_w4a4)
+    assert e_w8a8 < 0.1, e_w8a8
+    assert e_w4a4 < 1.0, e_w4a4
+
+
+def test_rope_matches_expected_rotation():
+    hd = 8
+    x = jnp.ones((1, 2, hd), jnp.float32)
+    out = M.apply_rope(x, 1, hd)
+    # position 0 identity
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.ones(hd), rtol=1e-6)
+    # norms preserved per pair at position 1
+    a, b = np.asarray(out[0, 1, :4]), np.asarray(out[0, 1, 4:])
+    np.testing.assert_allclose(a * a + b * b, np.full(4, 2.0), rtol=1e-5)

@@ -1,0 +1,93 @@
+//! Figure 2 — (a,b) histograms of the leading-'1' position of
+//! activations / Query / Key after stage-1 quantization (before 4-bit
+//! compression), and (c) the fraction of zeroed elements before vs
+//! after compression, per tensor kind.
+//!
+//! Shape claims: the activation mass concentrates in a mid band of bit
+//! positions; the fraction of groups whose leading one sits in the top
+//! bits is small (paper: ~9% above the 12th bit); zeroed-element growth
+//! is large for activations/weights and modest for Q/K/V.
+
+use qrazor::eval::harness::{build_experiment, EvalScale};
+use qrazor::quant::{Granularity, QuantTensor};
+use qrazor::sdr::signmag::{group_or, leading_one};
+use qrazor::sdr::{SdrMatrix, SdrSpec};
+use qrazor::util::stats::Histogram;
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    let preset = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "tiny".into());
+    let exp = build_experiment(preset.split(',').next().unwrap().trim(), scale, 1)?;
+
+    let kinds: Vec<(&str, Vec<String>, u32)> = vec![
+        ("activation", (0..exp.config.layers).map(|l| format!("l{l}.attn_in")).collect(), 16),
+        ("query", (0..exp.config.layers).map(|l| format!("l{l}.q")).collect(), 16),
+        ("key", (0..exp.config.layers).map(|l| format!("l{l}.k")).collect(), 8),
+        ("value", (0..exp.config.layers).map(|l| format!("l{l}.v")).collect(), 8),
+        ("weight", vec![], 8), // handled specially below
+    ];
+
+    println!("\n=== Fig. 2(a,b) — leading-one position of per-group OR (stage-1 lattice) ===");
+    let mut zeroed: Vec<(String, f64, f64)> = Vec::new();
+    for (kind, sites, bits) in &kinds {
+        let mut hist = Histogram::new(0.0, *bits as f64, *bits as usize);
+        let mut zero_before = 0usize;
+        let mut zero_after = 0usize;
+        let mut total = 0usize;
+        let mut observe = |q: &QuantTensor, group: usize| {
+            let spec = SdrSpec::new(*&q.bits, 4, group);
+            let cols = q.shape[1];
+            for row in q.values.chunks(cols) {
+                for chunk in row.chunks(group) {
+                    if let Some(r) = leading_one(group_or(chunk)) {
+                        hist.push(r as f64 + 0.5);
+                    }
+                }
+            }
+            zero_before += q.values.iter().filter(|&&v| v == 0).count();
+            let m = SdrMatrix::compress(spec, q);
+            zero_after += m.codes.iter().filter(|c| c.code == 0).count();
+            total += q.values.len();
+        };
+        if *kind == "weight" {
+            for l in &exp.weights.layers {
+                for w in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+                    observe(&QuantTensor::quantize(w, 8, Granularity::PerChannel), 16);
+                }
+            }
+        } else {
+            for site in sites {
+                let sample = exp.cal.sample(site).expect("calibrated site");
+                observe(&QuantTensor::quantize(sample, *bits, Granularity::PerTensor), 16);
+            }
+        }
+        println!("\n[{kind}] ({bits}-bit base, g16 OR leading-one):");
+        print!("{}", hist.ascii(|i| format!("bit {i}"), 40));
+        // fraction of groups with leading one in the top quarter of bits
+        let top_start = (*bits as usize) * 3 / 4;
+        let top: f64 = (top_start..*bits as usize).map(|i| hist.frac(i)).sum();
+        println!("groups with leading-one ≥ bit {top_start}: {:.1}%", top * 100.0);
+        zeroed.push((
+            kind.to_string(),
+            100.0 * zero_before as f64 / total as f64,
+            100.0 * zero_after as f64 / total as f64,
+        ));
+    }
+
+    println!("\n=== Fig. 2(c) — zeroed elements before/after 4-bit compression ===");
+    println!("{:<12} {:>10} {:>10}", "kind", "before %", "after %");
+    for (k, b, a) in &zeroed {
+        println!("{:<12} {:>10.2} {:>10.2}", k, b, a);
+        assert!(a >= b, "{k}: compression cannot un-zero elements");
+    }
+    // activations/weights gain zeros substantially more than V
+    let get = |n: &str| zeroed.iter().find(|(k, _, _)| k == n).unwrap();
+    let act_gain = get("activation").2 - get("activation").1;
+    let v_gain = get("value").2 - get("value").1;
+    assert!(
+        act_gain > v_gain,
+        "activation zero-gain ({act_gain:.2}) should exceed value's ({v_gain:.2})"
+    );
+    println!("fig2 OK");
+    Ok(())
+}

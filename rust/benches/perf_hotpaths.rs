@@ -1,0 +1,105 @@
+//! Performance microbenches for the L3 hot paths — the §Perf
+//! (EXPERIMENTS.md) measurement harness.
+//!
+//! Paths measured:
+//!   1. SDR compression throughput (values/s) — the online activation/
+//!      KV encode path.
+//!   2. Decompression-free integer GEMM (GMAC/s).
+//!   3. Nibble pack/unpack (values/s) — KV-pool write/read.
+//!   4. Quantized transformer decode step (tokens/s, single sequence).
+//!   5. f32 reference matmul (GFLOP/s) for roofline context.
+
+use qrazor::quant::{Granularity, QuantTensor};
+use qrazor::sdr::gemm::gemm_razored_int;
+use qrazor::sdr::packed::{pack_nibbles, unpack_nibbles, PackedSdrMatrix};
+use qrazor::sdr::{SdrMatrix, SdrSpec};
+use qrazor::tensor::{matmul_bt, Tensor};
+use qrazor::util::rng::Rng;
+use qrazor::util::stats::bench_loop;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // 1. SDR compression throughput
+    let rows = 256;
+    let cols = 1024;
+    let mut x = Tensor::zeros(&[rows, cols]);
+    for v in x.data_mut().iter_mut() {
+        *v = rng.heavy_tailed(1.0, 0.02, 25.0);
+    }
+    let q = QuantTensor::quantize(&x, 16, Granularity::PerTensor);
+    let spec = SdrSpec::new(16, 4, 16);
+    let r = bench_loop(5, 40, || std::hint::black_box(SdrMatrix::compress(spec, &q)));
+    let vals_per_s = (rows * cols) as f64 / r.mean_s;
+    println!("sdr_compress      {:>12.1} Mvalues/s   ({})", vals_per_s / 1e6, r.human());
+
+    // 2. decompression-free GEMM
+    let (m, n, k) = (64, 256, 1024);
+    let mut a_f = Tensor::zeros(&[m, k]);
+    rng.fill_normal(a_f.data_mut(), 0.0, 1.0);
+    let mut w_f = Tensor::zeros(&[n, k]);
+    rng.fill_normal(w_f.data_mut(), 0.0, 0.05);
+    let a = SdrMatrix::compress(spec, &QuantTensor::quantize(&a_f, 16, Granularity::PerTensor));
+    let w = SdrMatrix::compress(
+        SdrSpec::new(8, 4, 16),
+        &QuantTensor::quantize(&w_f, 8, Granularity::PerChannel),
+    );
+    let r = bench_loop(3, 20, || std::hint::black_box(gemm_razored_int(&a, &w)));
+    let gmacs = (m * n * k) as f64 / r.mean_s / 1e9;
+    println!("razored_gemm      {:>12.2} GMAC/s      ({})", gmacs, r.human());
+
+    // 3. nibble pack/unpack
+    let mcodes = SdrMatrix::compress(spec, &q);
+    let r = bench_loop(5, 60, || std::hint::black_box(pack_nibbles(&mcodes.codes)));
+    println!(
+        "nibble_pack       {:>12.1} Mvalues/s   ({})",
+        mcodes.codes.len() as f64 / r.mean_s / 1e6,
+        r.human()
+    );
+    let packed = PackedSdrMatrix::from_matrix(&mcodes);
+    let r = bench_loop(5, 60, || {
+        std::hint::black_box(unpack_nibbles(&packed.nibbles, rows * cols))
+    });
+    println!(
+        "nibble_unpack     {:>12.1} Mvalues/s   ({})",
+        (rows * cols) as f64 / r.mean_s / 1e6,
+        r.human()
+    );
+
+    // 4. quantized decode step (tiny model)
+    let cfg = qrazor::config::ModelConfig::preset("tiny").unwrap();
+    let wts = qrazor::model::ModelWeights::init_random(&cfg, 3);
+    let calib: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..32).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = qrazor::model::quantized::calibrate(&wts, &calib);
+    let qm = qrazor::model::quantized::QuantModel::build(
+        &wts,
+        Box::new(qrazor::baselines::QRazor::w4a4kv4(16)),
+        &cal,
+    );
+    let mut cache = qm.new_cache(16);
+    // warm the cache to a realistic 64-token context
+    for pos in 0..64 {
+        qm.forward_token((pos % cfg.vocab) as u32, pos, &mut cache);
+    }
+    let mut pos = 64;
+    let r = bench_loop(2, 20, || {
+        let l = qm.forward_token(7, pos, &mut cache);
+        pos += 1;
+        std::hint::black_box(l)
+    });
+    println!(
+        "decode_step(tiny) {:>12.1} tok/s       ({})",
+        1.0 / r.mean_s,
+        r.human()
+    );
+
+    // 5. f32 roofline context
+    let r = bench_loop(3, 20, || std::hint::black_box(matmul_bt(&a_f, &w_f)));
+    println!(
+        "f32_matmul        {:>12.2} GFLOP/s     ({})",
+        2.0 * (m * n * k) as f64 / r.mean_s / 1e9,
+        r.human()
+    );
+}

@@ -1,0 +1,45 @@
+//! Table 10 (Appendix A.6) — second architecture (the Mistral-7B
+//! analog: GQA attention) compared against the weight-scaling baseline
+//! families at W4A4: SmoothQuant, OS+-class (SmoothQuant α=0.75), and
+//! AWQ-class, plus QRazor g16/g32 and W4A4KV4 variants.
+//!
+//! Shape claim: QRazor wins the W4A4 comparison on the GQA model too —
+//! the "reliability across architectures" argument.
+
+use qrazor::baselines::awq::AwqScheme;
+use qrazor::baselines::smoothquant::SmoothQuantScheme;
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    let preset = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "mistral-tiny".into());
+    for preset in preset.split(',') {
+        let exp = build_experiment(preset.trim(), scale, 1)?;
+        let rows = vec![
+            exp.eval_fp(),
+            exp.eval_scheme(Box::new(SmoothQuantScheme::w4a4(0.5))),
+            exp.eval_scheme(Box::new(SmoothQuantScheme::w4a4(0.75))), // OS+-class
+            exp.eval_scheme(Box::new(AwqScheme::w4a4(128))),
+            exp.eval_scheme(Box::new(QRazor::w4a4(16))),
+            exp.eval_scheme(Box::new(QRazor::w4a4(32))),
+            exp.eval_scheme(Box::new(QRazor::w4a4kv4(16))),
+            exp.eval_scheme(Box::new(QRazor::w4a4kv4(32))),
+        ];
+        println!(
+            "{}",
+            render_table(&format!("Table 10 — GQA architecture ({preset})"), &rows)
+        );
+        let qrazor = rows.iter().find(|r| r.name == "QRazor-W4A4 g16").unwrap();
+        for baseline in &rows[1..4] {
+            assert!(
+                qrazor.ppl_wiki < baseline.ppl_wiki,
+                "QRazor ppl {} must beat {} ({})",
+                qrazor.ppl_wiki,
+                baseline.name,
+                baseline.ppl_wiki
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Table 1 — zero-shot accuracy of the base precision scenarios.
+//!
+//! Paper claim (shape): W8A16 and W8A16KV8 sit within noise of FP16;
+//! W8A8 collapses. Regenerates the table for our trained models.
+//!
+//! ```bash
+//! cargo bench --bench table1_base_precision
+//! QRAZOR_BENCH_QUICK=1 cargo bench ...   # CI scale
+//! BENCH_MODELS=nano,tiny cargo bench ... # model selection
+//! ```
+
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+use qrazor::sdr::SdrSpec;
+
+fn models() -> Vec<String> {
+    std::env::var("BENCH_MODELS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    for preset in models() {
+        let exp = build_experiment(&preset, scale, 1)?;
+        // base-precision-only scenarios: target == base, no SDR stage.
+        let w8a8 = QRazor {
+            w: SdrSpec::new(8, 8, 16),
+            a: SdrSpec::new(8, 8, 16),
+            kv_spec: None,
+        };
+        let w8a16 = QRazor {
+            w: SdrSpec::new(8, 8, 16),
+            a: SdrSpec::new(16, 16, 16),
+            kv_spec: None,
+        };
+        let w8a16kv8 = QRazor {
+            w: SdrSpec::new(8, 8, 16),
+            a: SdrSpec::new(16, 16, 16),
+            kv_spec: Some(SdrSpec::new(8, 8, 16)),
+        };
+        let rows = vec![
+            exp.eval_fp(),
+            exp.eval_scheme(Box::new(w8a8)),
+            exp.eval_scheme(Box::new(w8a16)),
+            exp.eval_scheme(Box::new(w8a16kv8)),
+        ];
+        println!("{}", render_table(&format!("Table 1 — base precision ({preset})"), &rows));
+        // the paper's ordering, asserted so regressions fail the bench
+        let (fp, a8, a16, a16kv8) = (&rows[0], &rows[1], &rows[2], &rows[3]);
+        assert!(
+            a16.ppl_wiki <= a8.ppl_wiki + 1e-6,
+            "W8A16 ppl {} must not exceed W8A8 {}",
+            a16.ppl_wiki,
+            a8.ppl_wiki
+        );
+        assert!(
+            (a16.ppl_wiki - fp.ppl_wiki).abs() / fp.ppl_wiki < 0.05,
+            "W8A16 must sit within 5% of FP (got {} vs {})",
+            a16.ppl_wiki,
+            fp.ppl_wiki
+        );
+        assert!((a16kv8.ppl_wiki - fp.ppl_wiki).abs() / fp.ppl_wiki < 0.05);
+    }
+    Ok(())
+}

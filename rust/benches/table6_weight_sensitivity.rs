@@ -1,0 +1,36 @@
+//! Table 6 (Appendix A.1) — weight-vs-activation compression
+//! sensitivity from the same W8A16 base, group size 8:
+//! W4A8 vs W8A8 vs W4A16.
+//!
+//! Shape claim: W8A8 is the best of the three (weight compression to 4
+//! bits costs at least as much as activation compression to 8).
+
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    let preset = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "tiny".into());
+    for preset in preset.split(',') {
+        let exp = build_experiment(preset.trim(), scale, 1)?;
+        let rows = vec![
+            exp.eval_fp(),
+            exp.eval_scheme(Box::new(QRazor::ablation(4, 8, 8))),  // W4A8
+            exp.eval_scheme(Box::new(QRazor::ablation(8, 8, 8))),  // W8A8
+            exp.eval_scheme(Box::new(QRazor::ablation(4, 16, 8))), // W4A16
+        ];
+        println!(
+            "{}",
+            render_table(&format!("Table 6 — weight sensitivity, g8 ({preset})"), &rows)
+        );
+        let (w4a8, w8a8, w4a16) = (&rows[1], &rows[2], &rows[3]);
+        assert!(
+            w8a8.ppl_wiki <= w4a8.ppl_wiki * 1.02 && w8a8.ppl_wiki <= w4a16.ppl_wiki * 1.02,
+            "W8A8 ({}) must be best of {{W4A8 {}, W4A16 {}}}",
+            w8a8.ppl_wiki,
+            w4a8.ppl_wiki,
+            w4a16.ppl_wiki
+        );
+    }
+    Ok(())
+}

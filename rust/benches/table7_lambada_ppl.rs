@@ -1,0 +1,65 @@
+//! Table 7 (Appendix A.3) — Lambada-style perplexity across group sizes
+//! {8,16,32,64,128} × configs {W4A8, W4A4, W4A8KV4, W4A4KV4}.
+//!
+//! Shape claims: every config's ppl rises with group size; KV4 variants
+//! are worse than their FP-KV counterparts; the W4A4KV4 g128 corner is
+//! the worst cell (the paper's 19.2 blow-up cell).
+
+use qrazor::baselines::QRazor;
+use qrazor::eval::harness::{build_experiment, EvalScale};
+use qrazor::eval::perplexity::perplexity;
+use qrazor::model::quantized::QuantModel;
+
+fn main() -> anyhow::Result<()> {
+    let scale = EvalScale::from_env();
+    let preset = std::env::var("BENCH_MODELS").unwrap_or_else(|_| "tiny".into());
+    for preset in preset.split(',') {
+        let exp = build_experiment(preset.trim(), scale, 1)?;
+        let fp = qrazor::model::FpModel { weights: exp.weights.clone() };
+        let base = perplexity(&fp, &exp.lambada_seqs);
+        println!("\n=== Table 7 — Lambada ppl vs group size ({preset}) ===");
+        println!("baseline (FP): {base:.3}");
+        println!("{:<10} {:>8} {:>8} {:>8} {:>8} {:>8}", "config", "g8", "g16", "g32", "g64", "g128");
+        let groups = [8usize, 16, 32, 64, 128];
+        let mut grid: Vec<(String, Vec<f64>)> = Vec::new();
+        for (name, mk) in [
+            ("W4A8", Box::new(QRazor::w4a8) as Box<dyn Fn(usize) -> QRazor>),
+            ("W4A4", Box::new(QRazor::w4a4)),
+            ("W4A8KV4", Box::new(QRazor::w4a8kv4)),
+            ("W4A4KV4", Box::new(QRazor::w4a4kv4)),
+        ] {
+            let mut row = Vec::new();
+            for &g in &groups {
+                let qm = QuantModel::build(&exp.weights, Box::new(mk(g)), &exp.cal);
+                row.push(perplexity(&qm, &exp.lambada_seqs));
+            }
+            println!(
+                "{:<10} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+                name, row[0], row[1], row[2], row[3], row[4]
+            );
+            grid.push((name.to_string(), row));
+        }
+        // monotone-in-group-size within each config (8% noise tolerance)
+        for (name, row) in &grid {
+            for w in row.windows(2) {
+                assert!(
+                    w[0] <= w[1] * 1.08,
+                    "{name}: ppl must rise with group size ({} -> {})",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        // worst corner is the most aggressive config at g128
+        let worst = grid
+            .iter()
+            .flat_map(|(_, r)| r.iter().copied())
+            .fold(0f64, f64::max);
+        let corner = grid.last().unwrap().1[4]; // W4A4KV4 g128
+        assert!(
+            corner >= worst * 0.9,
+            "W4A4KV4 g128 ({corner}) should be (near-)worst (max {worst})"
+        );
+    }
+    Ok(())
+}

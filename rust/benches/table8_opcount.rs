@@ -1,0 +1,56 @@
+//! Table 8 (Appendix A.4) — quantization-overhead operation counts:
+//! QuaRot's Hadamard rotations (FLOPs) vs QRazor's SDR compression +
+//! barrel shifts (IOPs), at the paper's dimensions and across a sweep.
+//! Also *measures* the two code paths' wall-clock on this machine.
+
+use qrazor::hw::opcount::{hadamard_fwht, table8_rows, OpKind};
+use qrazor::util::stats::bench_loop;
+
+fn main() {
+    println!("\n=== Table 8 — op counts (M=128, N=64, H=8, G=32) ===");
+    let rows = table8_rows(128, 64, 8, 32);
+    println!("{:<18} {:<16} {:>10} {:>6}", "operation", "formula", "count", "kind");
+    for r in &rows {
+        println!(
+            "{:<18} {:<16} {:>10} {:>6}",
+            r.operation,
+            r.formula,
+            r.count,
+            match r.kind {
+                OpKind::Flop => "FLOPs",
+                OpKind::Iop => "IOPs",
+            }
+        );
+    }
+    assert_eq!(rows[0].count, 8_192);
+    assert_eq!(rows[1].count, 65_536);
+    assert_eq!(rows[2].count, 512);
+    assert_eq!(rows[3].count, 256);
+
+    println!("\nextension: fast-WHT (N log N) Hadamard = {} FLOPs — still ≫ SDR", hadamard_fwht(128, 64));
+
+    println!("\nsweep over group size (SDR ops, M=128 N=64):");
+    for g in [8u64, 16, 32, 64, 128] {
+        let r = table8_rows(128, 64, 8, g);
+        println!("  g{:<4} compression {:>6} + shifts {:>6}", g, r[2].count, r[3].count);
+    }
+
+    // measured wall-clock of the actual implementations
+    use qrazor::baselines::quarot::rotate_rows;
+    use qrazor::quant::{Granularity, QuantTensor};
+    use qrazor::sdr::{SdrMatrix, SdrSpec};
+    use qrazor::tensor::Tensor;
+    use qrazor::util::rng::Rng;
+    let mut rng = Rng::new(1);
+    let mut x = Tensor::zeros(&[128, 64]);
+    rng.fill_normal(x.data_mut(), 0.0, 1.0);
+    let q = QuantTensor::quantize(&x, 16, Granularity::PerTensor);
+    let rot = bench_loop(5, 50, || std::hint::black_box(rotate_rows(&x, 3)));
+    let sdr = bench_loop(5, 50, || {
+        std::hint::black_box(SdrMatrix::compress(SdrSpec::new(16, 4, 32), &q))
+    });
+    println!("\nmeasured on this machine (128×64):");
+    println!("  hadamard rotate : {}", rot.human());
+    println!("  SDR compress    : {}", sdr.human());
+    println!("table8 OK");
+}

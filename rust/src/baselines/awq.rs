@@ -1,0 +1,159 @@
+//! AWQ-class baseline: activation-aware weight-only scaling.
+//!
+//! AWQ (Lin et al., 2024) observes that ~1% of weight channels matter
+//! far more than the rest — the ones multiplied by large activations —
+//! and protects them by scaling them up before weight quantization
+//! (and down after, folded into the activation path). Weight-only in
+//! spirit; the W4A4 row in Table 10 pairs it with per-token RTN
+//! activations, as the paper's comparison does.
+
+use super::rtn::{rtn_groupwise, rtn_per_row};
+use super::Scheme;
+use crate::tensor::Tensor;
+
+/// Grid-search the AWQ scaling exponent on a small grid, maximizing
+/// layer-output fidelity on the calibration sample.
+pub fn awq_scales(calib: &Tensor<f32>, w: &Tensor<f32>, w_bits: u32, group: usize) -> Vec<f32> {
+    let cols = w.shape()[1];
+    let mut a_mean = vec![1e-8f32; cols];
+    for row in calib.data().chunks(cols) {
+        for (m, &v) in a_mean.iter_mut().zip(row) {
+            *m += v.abs();
+        }
+    }
+    let t = calib.shape()[0] as f32;
+    for m in a_mean.iter_mut() {
+        *m /= t;
+    }
+    // candidate exponents α ∈ {0, 0.25, 0.5, 0.75, 1.0}
+    let mut best: (f64, Vec<f32>) = (f64::INFINITY, vec![1.0; cols]);
+    for alpha_i in 0..5 {
+        let alpha = alpha_i as f32 * 0.25;
+        let s: Vec<f32> = a_mean.iter().map(|&a| a.powf(alpha).max(1e-5)).collect();
+        // evaluate: quantize W·diag(s), compare (W·diag(s))q·diag(s)⁻¹ to W
+        let mut err = 0f64;
+        for row in w.data().chunks(cols) {
+            let scaled: Vec<f32> = row.iter().zip(&s).map(|(&v, &sj)| v * sj).collect();
+            let q = rtn_groupwise(&scaled, w_bits, group);
+            for ((&orig, &qv), (&sj, &am)) in
+                row.iter().zip(&q).zip(s.iter().zip(&a_mean))
+            {
+                let back = qv / sj;
+                // activation-weighted error — what AWQ actually minimizes
+                err += (((orig - back) * am) as f64).powi(2);
+            }
+        }
+        if err < best.0 {
+            best = (err, s);
+        }
+    }
+    best.1
+}
+
+/// AWQ-class scheme: scaled weight-only quantization + per-token RTN
+/// activations (for the W4A4 comparison rows).
+pub struct AwqScheme {
+    pub w_bits: u32,
+    pub a_bits: Option<u32>,
+    pub w_group: usize,
+}
+
+impl AwqScheme {
+    pub fn w4a4(w_group: usize) -> AwqScheme {
+        AwqScheme { w_bits: 4, a_bits: Some(4), w_group }
+    }
+
+    pub fn weight_only(w_group: usize) -> AwqScheme {
+        AwqScheme { w_bits: 4, a_bits: None, w_group }
+    }
+}
+
+impl Scheme for AwqScheme {
+    fn name(&self) -> String {
+        match self.a_bits {
+            Some(a) => format!("AWQ-W{}A{a} g{}", self.w_bits, self.w_group),
+            None => format!("AWQ-W{} g{}", self.w_bits, self.w_group),
+        }
+    }
+
+    fn prep_weight(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> Tensor<f32> {
+        let cols = w.shape()[1];
+        let s = match calib {
+            Some(c) => awq_scales(c, w, self.w_bits, self.w_group),
+            None => vec![1.0; cols],
+        };
+        let mut out = Vec::with_capacity(w.len());
+        for row in w.data().chunks(cols) {
+            let scaled: Vec<f32> = row.iter().zip(&s).map(|(&v, &sj)| v * sj).collect();
+            let q = rtn_groupwise(&scaled, self.w_bits, self.w_group);
+            out.extend(q.iter().zip(&s).map(|(&qv, &sj)| qv * sj / (sj * sj))); // = qv/sj
+        }
+        // Scales are folded back into the weight (qv/sj) so the
+        // activation path needs no change — matching AWQ's deployment.
+        Tensor::from_vec(w.shape(), out)
+    }
+
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        match self.a_bits {
+            Some(bits) => rtn_per_row(x, bits),
+            None => x.clone(),
+        }
+    }
+
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        x.clone()
+    }
+
+    fn quantizes_kv(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rel_error;
+    use crate::baselines::tests::{activation_matrix, weight_matrix};
+    use crate::tensor::matmul_bt;
+
+    #[test]
+    fn scales_protect_hot_channels() {
+        let x = activation_matrix(64, 128, 1);
+        let w = weight_matrix(16, 128, 2);
+        let s = awq_scales(&x, &w, 4, 128);
+        assert_eq!(s.len(), 128);
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn awq_beats_plain_rtn_on_output_error() {
+        let x = activation_matrix(64, 128, 3);
+        let w = weight_matrix(16, 128, 4);
+        let ref_out = matmul_bt(&x, &w);
+        let awq = AwqScheme::weight_only(128);
+        let w_awq = awq.prep_weight(&w, Some(&x));
+        let w_rtn = AwqScheme::weight_only(128).prep_weight(&w, None);
+        let e_awq = rel_error(&ref_out, &matmul_bt(&x, &w_awq));
+        let e_rtn = rel_error(&ref_out, &matmul_bt(&x, &w_rtn));
+        assert!(e_awq <= e_rtn * 1.02, "awq {e_awq} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn weight_only_keeps_acts_fp() {
+        let x = activation_matrix(4, 32, 5);
+        let awq = AwqScheme::weight_only(32);
+        assert_eq!(awq.act(&x, None), x);
+        assert!(!awq.quantizes_kv());
+    }
+
+    #[test]
+    fn folded_scales_leave_lattice_scaled_by_inv_s() {
+        // output weights are qv/sj: finite and close to original W
+        let w = weight_matrix(8, 64, 6);
+        let x = activation_matrix(32, 64, 7);
+        let awq = AwqScheme::w4a4(64);
+        let wq = awq.prep_weight(&w, Some(&x));
+        assert!(wq.data().iter().all(|v| v.is_finite()));
+        assert!(rel_error(&w, &wq) < 0.3);
+    }
+}

@@ -1,0 +1,317 @@
+//! Comparator quantization schemes from the paper's evaluation tables.
+//!
+//! Every scheme implements [`Scheme`]: an offline weight transform, an
+//! online activation transform, and a KV/query transform. The model
+//! (`crate::model`) is scheme-agnostic — it calls these hooks at every
+//! GEMM boundary, so QRazor and all baselines run through the *same*
+//! forward pass and their accuracy numbers are directly comparable,
+//! mirroring how the paper holds the model fixed across Table 2 rows.
+//!
+//! Implemented baselines (→ paper rows they stand in for):
+//! * [`rtn`] — per-group round-to-nearest / dynamic max-scaled
+//!   quantization (the "DMQ" QRazor §4.2 contrasts against; also the
+//!   weight quantizer inside QuaRot(RTN) and QServe).
+//! * [`smoothquant`] — SmoothQuant-style activation→weight scale
+//!   migration (Table 10's SmoothQuant / OS+-class rows).
+//! * [`quarot`] — randomized-Hadamard rotation before quantization
+//!   (QuaRot(RTN)); with [`gptq`] weight solving → QuaRot(GPTQ).
+//! * [`gptq`] — greedy error-compensating weight quantizer (GPTQ-lite).
+//! * [`awq`] — activation-aware per-channel weight scaling (AWQ-class).
+//! * [`qllm`] — outlier-channel splitting (QLLM's channel reassembly,
+//!   simplified to its accuracy-relevant core).
+//! * [`qserve`] — progressive W4(A8)KV4 quantization (Table 3 rows).
+
+pub mod awq;
+pub mod gptq;
+pub mod qllm;
+pub mod qserve;
+pub mod quarot;
+pub mod rtn;
+pub mod smoothquant;
+
+use crate::quant::Granularity;
+use crate::sdr::razor::{qrazor_fake_quant, qrazor_fake_quant_static, SdrSpec};
+use crate::tensor::Tensor;
+
+/// Per-layer online activation transform: `f(x, static_scale) → x̂`.
+pub type ActFn = Box<dyn Fn(&Tensor<f32>, Option<f32>) -> Tensor<f32> + Send + Sync>;
+
+/// A linear layer prepared by a scheme: the fake-quantized effective
+/// weight, plus (for stateful schemes like SmoothQuant's smoothing
+/// vector or QLLM's channel splits) a layer-specific activation
+/// transform that must be paired with this exact weight.
+pub struct PreparedLinear {
+    /// Effective weight `[out, in']` (`in'` may exceed `in` for
+    /// channel-splitting schemes).
+    pub weight: Tensor<f32>,
+    /// Layer-specific activation transform; `None` → use the scheme's
+    /// shared [`Scheme::act`].
+    pub act_override: Option<ActFn>,
+}
+
+impl PreparedLinear {
+    /// Full quantized linear: transform the activation, multiply by the
+    /// prepared weight. `y = q_a(x) · Ŵᵀ`.
+    pub fn forward(
+        &self,
+        x: &Tensor<f32>,
+        static_scale: Option<f32>,
+        scheme: &dyn Scheme,
+    ) -> Tensor<f32> {
+        let xq = match &self.act_override {
+            Some(f) => f(x, static_scale),
+            None => scheme.act(x, static_scale),
+        };
+        crate::tensor::matmul_bt(&xq, &self.weight)
+    }
+}
+
+/// A weight/activation/KV quantization scheme, applied as fake-quant
+/// transforms around every linear layer and attention GEMM.
+pub trait Scheme: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Offline weight preparation for a `[out, in]` matrix. `calib` is a
+    /// sample of activations `[tokens, in]` that feed this linear
+    /// (schemes that don't need calibration ignore it). Returns the
+    /// effective fake-quantized weight used by the forward pass.
+    fn prep_weight(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> Tensor<f32>;
+
+    /// Prepare a full linear layer. Stateless schemes get this for free
+    /// from [`Scheme::prep_weight`]; stateful ones override it to bind
+    /// their per-layer activation transform.
+    fn prep_linear(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> PreparedLinear {
+        PreparedLinear { weight: self.prep_weight(w, calib), act_override: None }
+    }
+
+    /// Online activation transform before a linear. `static_scale` is
+    /// the calibrated per-tensor scale for static schemes (QRazor);
+    /// dynamic schemes ignore it.
+    fn act(&self, x: &Tensor<f32>, static_scale: Option<f32>) -> Tensor<f32>;
+
+    /// Transform for Q/K/V tensors entering attention GEMMs and the KV
+    /// cache. `x` is `[tokens, head_dim]` per head.
+    fn kv(&self, x: &Tensor<f32>, static_scale: Option<f32>) -> Tensor<f32>;
+
+    /// Whether this scheme quantizes the KV cache at all (KV4 variants).
+    fn quantizes_kv(&self) -> bool {
+        true
+    }
+}
+
+/// FP16 baseline: identity everywhere (the tables' first row).
+pub struct Fp16;
+
+impl Scheme for Fp16 {
+    fn name(&self) -> String {
+        "FP16".into()
+    }
+    fn prep_weight(&self, w: &Tensor<f32>, _c: Option<&Tensor<f32>>) -> Tensor<f32> {
+        w.clone()
+    }
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        x.clone()
+    }
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        x.clone()
+    }
+    fn quantizes_kv(&self) -> bool {
+        false
+    }
+}
+
+/// The QRazor scheme itself (paper §4): stage-1 absmax (per-channel W /
+/// per-tensor A,KV static) + stage-2 SDR.
+pub struct QRazor {
+    /// Weight SDR spec (base 8, target 4 typically).
+    pub w: SdrSpec,
+    /// Activation SDR spec (base 16, target 4 or 8).
+    pub a: SdrSpec,
+    /// KV spec; `None` = KV kept at FP16 (the plain W4A4 scenario).
+    pub kv_spec: Option<SdrSpec>,
+}
+
+impl QRazor {
+    /// W4A4 with group size `g` over base W8A16.
+    pub fn w4a4(g: usize) -> QRazor {
+        QRazor {
+            w: SdrSpec::new(8, 4, g),
+            a: SdrSpec::new(16, 4, g),
+            kv_spec: None,
+        }
+    }
+
+    /// W4A4KV4 with group size `g` over base W8A16KV8.
+    pub fn w4a4kv4(g: usize) -> QRazor {
+        QRazor { kv_spec: Some(SdrSpec::new(8, 4, g)), ..QRazor::w4a4(g) }
+    }
+
+    /// W4A8 with group size `g` (8 salient activation bits).
+    pub fn w4a8(g: usize) -> QRazor {
+        QRazor {
+            w: SdrSpec::new(8, 4, g),
+            a: SdrSpec::new(16, 8, g),
+            kv_spec: None,
+        }
+    }
+
+    /// W4A8KV4.
+    pub fn w4a8kv4(g: usize) -> QRazor {
+        QRazor { kv_spec: Some(SdrSpec::new(8, 4, g)), ..QRazor::w4a8(g) }
+    }
+
+    /// Partial-compression ablations from Appendix A.1 (Table 6):
+    /// W8A8 / W4A8 / W4A16 over the same W8A16 base.
+    pub fn ablation(w_target: u32, a_target: u32, g: usize) -> QRazor {
+        QRazor {
+            w: SdrSpec::new(8, w_target, g),
+            a: SdrSpec::new(16, a_target, g),
+            kv_spec: None,
+        }
+    }
+}
+
+impl Scheme for QRazor {
+    fn name(&self) -> String {
+        let kv = match &self.kv_spec {
+            Some(k) => format!("KV{}", k.target_bits),
+            None => String::new(),
+        };
+        format!(
+            "QRazor-W{}A{}{} g{}",
+            self.w.target_bits, self.a.target_bits, kv, self.a.group
+        )
+    }
+
+    fn prep_weight(&self, w: &Tensor<f32>, _c: Option<&Tensor<f32>>) -> Tensor<f32> {
+        if self.w.target_bits >= self.w.base_bits {
+            // target == base: stage-2 is a no-op, plain stage-1 quant.
+            return crate::quant::fake_quant(w, self.w.base_bits, Granularity::PerChannel);
+        }
+        qrazor_fake_quant(w, self.w, Granularity::PerChannel)
+    }
+
+    fn act(&self, x: &Tensor<f32>, static_scale: Option<f32>) -> Tensor<f32> {
+        quant_or_razor(x, self.a, static_scale)
+    }
+
+    fn kv(&self, x: &Tensor<f32>, static_scale: Option<f32>) -> Tensor<f32> {
+        match &self.kv_spec {
+            None => x.clone(),
+            Some(spec) => quant_or_razor(x, *spec, static_scale),
+        }
+    }
+
+    fn quantizes_kv(&self) -> bool {
+        self.kv_spec.is_some()
+    }
+}
+
+/// Per-tensor transform shared by activations and KV: when `target ==
+/// base` stage 2 is skipped (plain stage-1 quant — the Table 1 base
+/// precision scenarios); otherwise full QRazor. Static scales are
+/// honored in both paths.
+fn quant_or_razor(x: &Tensor<f32>, spec: SdrSpec, static_scale: Option<f32>) -> Tensor<f32> {
+    if spec.target_bits >= spec.base_bits {
+        return match static_scale {
+            Some(s) => crate::quant::QuantTensor::quantize_static(x, spec.base_bits, &[s])
+                .dequantize(),
+            None => crate::quant::fake_quant(x, spec.base_bits, Granularity::PerTensor),
+        };
+    }
+    match static_scale {
+        Some(s) => qrazor_fake_quant_static(x, spec, s),
+        None => qrazor_fake_quant(x, spec, Granularity::PerTensor),
+    }
+}
+
+/// Relative Frobenius error ‖x − q(x)‖/‖x‖ — the quick scheme-quality
+/// metric used by unit tests and the ablation benches.
+pub fn rel_error(x: &Tensor<f32>, q: &Tensor<f32>) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&a, &b) in x.data().iter().zip(q.data()) {
+        num += ((a - b) as f64).powi(2);
+        den += (a as f64).powi(2);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn activation_matrix(rows: usize, cols: usize, seed: u64) -> Tensor<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor::zeros(&[rows, cols]);
+        // Channel-structured outliers, like real LLM activations: a few
+        // channels are persistently hot.
+        let hot: Vec<bool> = (0..cols).map(|_| rng.chance(0.03)).collect();
+        for r in 0..rows {
+            for c in 0..cols {
+                let scale = if hot[c] { 20.0 } else { 1.0 };
+                x.data_mut()[r * cols + c] = rng.normal_f32(0.0, scale);
+            }
+        }
+        x
+    }
+
+    pub(crate) fn weight_matrix(out: usize, inp: usize, seed: u64) -> Tensor<f32> {
+        let mut rng = Rng::new(seed);
+        let mut w = Tensor::zeros(&[out, inp]);
+        rng.fill_normal(w.data_mut(), 0.0, (2.0 / inp as f32).sqrt());
+        w
+    }
+
+    #[test]
+    fn fp16_is_identity() {
+        let x = activation_matrix(4, 32, 1);
+        let s = Fp16;
+        assert_eq!(s.act(&x, None), x);
+        assert_eq!(s.prep_weight(&x, None), x);
+        assert!(!s.quantizes_kv());
+    }
+
+    #[test]
+    fn qrazor_names() {
+        assert_eq!(QRazor::w4a4(16).name(), "QRazor-W4A4 g16");
+        assert_eq!(QRazor::w4a4kv4(32).name(), "QRazor-W4A4KV4 g32");
+        assert_eq!(QRazor::w4a8kv4(16).name(), "QRazor-W4A8KV4 g16");
+    }
+
+    #[test]
+    fn qrazor_act_error_shrinks_with_salient_bits() {
+        let x = activation_matrix(16, 256, 3);
+        let e4 = rel_error(&x, &QRazor::w4a4(16).act(&x, None));
+        let e8 = rel_error(&x, &QRazor::w4a8(16).act(&x, None));
+        assert!(e8 < e4, "e8={e8} e4={e4}");
+        assert!(e4 < 1.0);
+    }
+
+    #[test]
+    fn qrazor_kv_none_passthrough() {
+        let x = activation_matrix(4, 64, 5);
+        let s = QRazor::w4a4(16);
+        assert_eq!(s.kv(&x, None), x);
+        assert!(QRazor::w4a4kv4(16).kv(&x, None) != x);
+    }
+
+    #[test]
+    fn ablation_w8a8_uses_base_quant_only() {
+        let x = activation_matrix(8, 64, 7);
+        let s = QRazor::ablation(8, 8, 8);
+        // a: base 16 -> target 8 (SDR with 7 salient bits)
+        let q = s.act(&x, None);
+        assert!(rel_error(&x, &q) < 0.05);
+        // w: target == base 8 -> plain absmax
+        let w = weight_matrix(8, 64, 9);
+        let qw = s.prep_weight(&w, None);
+        let direct = crate::quant::fake_quant(&w, 8, Granularity::PerChannel);
+        assert_eq!(qw, direct);
+    }
+}

@@ -1,0 +1,218 @@
+//! QLLM-class baseline: outlier channel disassembly/reassembly.
+//!
+//! QLLM (Liu et al., 2024) splits activation channels whose magnitude
+//! exceeds a threshold into several sub-channels (each carrying a
+//! fraction of the value), so no single channel dominates the
+//! quantization range; weight rows are duplicated to match, keeping the
+//! product exact. We implement the accuracy-relevant core: top-θ%
+//! channels split into `k` parts chosen so each part fits the
+//! non-outlier range, then per-token RTN on the expanded tensor, then
+//! re-assembly. The Table 2 "QLLM" rows use this scheme.
+
+use super::rtn::rtn_groupwise;
+use super::rtn::rtn_per_row;
+use super::{PreparedLinear, Scheme};
+use crate::tensor::Tensor;
+
+/// Decide the channel expansion from calibration data: channels whose
+/// absmax exceeds `theta ×` the median absmax are split into
+/// `ceil(absmax / (theta·median))` parts.
+pub fn channel_splits(calib: &Tensor<f32>, theta: f32) -> Vec<u32> {
+    let cols = calib.shape()[1];
+    let mut amax = vec![0f32; cols];
+    for row in calib.data().chunks(cols) {
+        for (m, &v) in amax.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    let mut sorted = amax.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[cols / 2].max(1e-8);
+    let limit = theta * median;
+    amax.iter()
+        .map(|&a| if a > limit { (a / limit).ceil() as u32 } else { 1 })
+        .collect()
+}
+
+/// Expand activations: channel j with split k becomes k channels each
+/// holding x_j / k.
+pub fn disassemble(x: &Tensor<f32>, splits: &[u32]) -> Tensor<f32> {
+    let (rows, cols) = (x.shape()[0], x.shape()[1]);
+    assert_eq!(cols, splits.len());
+    let new_cols: usize = splits.iter().map(|&k| k as usize).sum();
+    let mut out = Tensor::zeros(&[rows, new_cols]);
+    for r in 0..rows {
+        let src = x.row(r);
+        let dst = out.row_mut(r);
+        let mut c = 0;
+        for (j, &k) in splits.iter().enumerate() {
+            let part = src[j] / k as f32;
+            for _ in 0..k {
+                dst[c] = part;
+                c += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Expand weight columns to match split channels (duplicate columns).
+pub fn expand_weight(w: &Tensor<f32>, splits: &[u32]) -> Tensor<f32> {
+    let (rows, cols) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(cols, splits.len());
+    let new_cols: usize = splits.iter().map(|&k| k as usize).sum();
+    let mut out = Tensor::zeros(&[rows, new_cols]);
+    for r in 0..rows {
+        let src = w.row(r);
+        let dst = out.row_mut(r);
+        let mut c = 0;
+        for (j, &k) in splits.iter().enumerate() {
+            for _ in 0..k {
+                dst[c] = src[j];
+                c += 1;
+            }
+        }
+    }
+    out
+}
+
+/// QLLM-class scheme. `prep_linear` derives the split pattern from
+/// calibration and returns an *expanded, quantized* weight whose bound
+/// activation transform disassembles + quantizes to match. The GEMM
+/// runs on the expanded dimension — exactness of disassembly is
+/// property-tested.
+pub struct QllmScheme {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub theta: f32,
+}
+
+impl QllmScheme {
+    pub fn w4a4() -> QllmScheme {
+        QllmScheme { w_bits: 4, a_bits: 4, theta: 4.0 }
+    }
+
+    pub fn w4a8() -> QllmScheme {
+        QllmScheme { w_bits: 4, a_bits: 8, theta: 4.0 }
+    }
+
+    fn quantize_expanded(&self, expanded: &Tensor<f32>) -> Tensor<f32> {
+        let cols = expanded.shape()[1];
+        let data: Vec<f32> = expanded
+            .data()
+            .chunks(cols)
+            .flat_map(|row| rtn_groupwise(row, self.w_bits, cols))
+            .collect();
+        Tensor::from_vec(expanded.shape(), data)
+    }
+}
+
+impl Scheme for QllmScheme {
+    fn name(&self) -> String {
+        format!("QLLM-W{}A{}", self.w_bits, self.a_bits)
+    }
+
+    fn prep_weight(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> Tensor<f32> {
+        let splits = match calib {
+            Some(c) => channel_splits(c, self.theta),
+            None => vec![1; w.shape()[1]],
+        };
+        self.quantize_expanded(&expand_weight(w, &splits))
+    }
+
+    fn prep_linear(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> PreparedLinear {
+        let splits = match calib {
+            Some(c) => channel_splits(c, self.theta),
+            None => vec![1; w.shape()[1]],
+        };
+        let weight = self.quantize_expanded(&expand_weight(w, &splits));
+        let a_bits = self.a_bits;
+        let act = move |x: &Tensor<f32>, _ss: Option<f32>| {
+            let expanded = if splits.len() == x.shape()[x.ndim() - 1] {
+                disassemble(x, &splits)
+            } else {
+                x.clone()
+            };
+            rtn_per_row(&expanded, a_bits)
+        };
+        PreparedLinear { weight, act_override: Some(Box::new(act)) }
+    }
+
+    /// Shared path (no splits known): plain per-token RTN.
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        rtn_per_row(x, self.a_bits)
+    }
+
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        // QLLM leaves KV in FP16 (the paper's Table 2 footnote).
+        x.clone()
+    }
+
+    fn quantizes_kv(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rel_error;
+    use crate::baselines::tests::{activation_matrix, weight_matrix};
+    use crate::tensor::matmul_bt;
+
+    #[test]
+    fn splits_flag_only_outlier_channels() {
+        let x = activation_matrix(64, 128, 1);
+        let splits = channel_splits(&x, 4.0);
+        let n_split = splits.iter().filter(|&&k| k > 1).count();
+        assert!(n_split > 0, "some hot channels must split");
+        assert!(n_split < 32, "most channels must not split (got {n_split})");
+    }
+
+    #[test]
+    fn disassembly_is_exact_in_fp() {
+        let x = activation_matrix(8, 64, 2);
+        let w = weight_matrix(4, 64, 3);
+        let splits = channel_splits(&x, 3.0);
+        let xd = disassemble(&x, &splits);
+        let wd = expand_weight(&w, &splits);
+        let a = matmul_bt(&x, &w);
+        let b = matmul_bt(&xd, &wd);
+        assert!(rel_error(&a, &b) < 1e-5, "{}", rel_error(&a, &b));
+    }
+
+    #[test]
+    fn splitting_reduces_dynamic_range() {
+        let x = activation_matrix(32, 128, 4);
+        let splits = channel_splits(&x, 3.0);
+        let xd = disassemble(&x, &splits);
+        // per-row max/median ratio should shrink
+        let ratio = |t: &Tensor<f32>| {
+            let mut worst = 0f32;
+            for r in 0..t.shape()[0] {
+                let row = t.row(r);
+                let mut mags: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+                mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let med = mags[mags.len() / 2].max(1e-6);
+                worst = worst.max(mags[mags.len() - 1] / med);
+            }
+            worst
+        };
+        assert!(ratio(&xd) < ratio(&x), "{} -> {}", ratio(&x), ratio(&xd));
+    }
+
+    #[test]
+    fn scheme_end_to_end_better_than_naive_on_outliers() {
+        let x = activation_matrix(32, 128, 5);
+        let w = weight_matrix(16, 128, 6);
+        let ref_out = matmul_bt(&x, &w);
+        let qllm = QllmScheme::w4a4();
+        let pl = qllm.prep_linear(&w, Some(&x));
+        let e_qllm = rel_error(&ref_out, &pl.forward(&x, None, &qllm));
+        // naive: same bits, no splitting
+        let naive = QllmScheme::w4a4();
+        let pl_n = naive.prep_linear(&w, None);
+        let e_naive = rel_error(&ref_out, &pl_n.forward(&x, None, &naive));
+        assert!(e_qllm < e_naive, "qllm {e_qllm} vs naive {e_naive}");
+    }
+}

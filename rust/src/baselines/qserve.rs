@@ -1,0 +1,173 @@
+//! QServe-class baseline: W4A8KV4 with progressive group quantization
+//! and SmoothAttention-style smoothing (Lin et al., 2024b) — the Table 3
+//! comparator.
+//!
+//! QServe's recipe: weights to 4-bit through a *two-level* (progressive)
+//! scheme — first 8-bit per-channel, then 4-bit per-group *within* the
+//! int8 lattice so dequantization stays in int8 arithmetic; activations
+//! 8-bit per-token; KV cache 4-bit per-head-group with the key smoothed
+//! before quantization.
+
+use super::rtn::{rtn_groupwise, rtn_per_row};
+use super::Scheme;
+use crate::quant::{qmax, round_half_even};
+use crate::tensor::Tensor;
+
+/// Progressive (two-level) weight quantization: int8 per-channel outer
+/// scale, then int4 sub-quantization per group of `g` on the int8
+/// values. Returns the fake-quantized result.
+pub fn progressive_w4(w: &Tensor<f32>, g: usize) -> Tensor<f32> {
+    assert_eq!(w.ndim(), 2);
+    let cols = w.shape()[1];
+    let mut out = Vec::with_capacity(w.len());
+    for row in w.data().chunks(cols) {
+        // level 1: per-channel int8
+        let amax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            out.extend(row.iter().map(|_| 0.0));
+            continue;
+        }
+        let s8 = amax / qmax(8) as f32;
+        let int8: Vec<i32> = row
+            .iter()
+            .map(|&v| round_half_even(v / s8).clamp(-127, 127))
+            .collect();
+        // level 2: int4 per group within the int8 lattice — the group
+        // scale is a *small integer* (ceil(gmax/7)), so dequant to int8
+        // is an integer multiply, QServe's key trick.
+        for chunk in int8.chunks(g) {
+            let gmax = chunk.iter().map(|v| v.abs()).max().unwrap_or(0);
+            if gmax == 0 {
+                out.extend(chunk.iter().map(|_| 0.0));
+                continue;
+            }
+            let s4 = ((gmax + qmax(4) - 1) / qmax(4)).max(1); // ceil-div (i32 div_ceil is unstable)
+            // Clamp so the reconstructed int8 value q·s4 stays on the
+            // int8 lattice range (QServe's compute path requires it).
+            let lim = (qmax(8) / s4).min(qmax(4));
+            for &v in chunk {
+                let q = (v as f32 / s4 as f32).round_ties_even() as i32;
+                let q = q.clamp(-lim, lim);
+                out.push((q * s4) as f32 * s8);
+            }
+        }
+    }
+    Tensor::from_vec(w.shape(), out)
+}
+
+/// The QServe baseline scheme (W4A8KV4).
+pub struct QServeScheme {
+    pub w_group: usize,
+    /// Key-smoothing strength for the KV path.
+    pub kv_smooth: f32,
+}
+
+impl QServeScheme {
+    pub fn w4a8kv4(w_group: usize) -> QServeScheme {
+        QServeScheme { w_group, kv_smooth: 0.5 }
+    }
+}
+
+impl Scheme for QServeScheme {
+    fn name(&self) -> String {
+        format!("QServe-W4A8KV4 g{}", self.w_group)
+    }
+
+    fn prep_weight(&self, w: &Tensor<f32>, _c: Option<&Tensor<f32>>) -> Tensor<f32> {
+        progressive_w4(w, self.w_group)
+    }
+
+    /// Per-token 8-bit activations.
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        rtn_per_row(x, 8)
+    }
+
+    /// 4-bit KV with per-group (head-dim) scaling; keys get a mild
+    /// smoothing toward unit variance first (SmoothAttention-lite).
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        let cols = x.shape()[x.ndim() - 1];
+        // column-wise smoothing factors from this tensor's own stats
+        let mut amax = vec![1e-6f32; cols];
+        for row in x.data().chunks(cols) {
+            for (m, &v) in amax.iter_mut().zip(row) {
+                *m = m.max(v.abs());
+            }
+        }
+        let s: Vec<f32> = amax.iter().map(|&a| a.powf(self.kv_smooth)).collect();
+        let mut t = x.clone();
+        for row in t.data_mut().chunks_mut(cols) {
+            for (v, &sj) in row.iter_mut().zip(&s) {
+                *v /= sj;
+            }
+        }
+        let q = Tensor::from_vec(t.shape(), rtn_groupwise(t.data(), 4, 64));
+        // unsmooth
+        let mut out = q;
+        for row in out.data_mut().chunks_mut(cols) {
+            for (v, &sj) in row.iter_mut().zip(&s) {
+                *v *= sj;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rel_error;
+    use crate::baselines::tests::{activation_matrix, weight_matrix};
+
+    #[test]
+    fn progressive_lattice_is_int8_compatible() {
+        // every fake-quant value = (q4 · s4) · s8 with q4·s4 ∈ [-127,127]
+        let w = weight_matrix(8, 64, 1);
+        let qw = progressive_w4(&w, 16);
+        for r in 0..8 {
+            let amax = w.row(r).iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let s8 = amax / 127.0;
+            for &v in qw.row(r) {
+                let int8 = v / s8;
+                assert!(
+                    (int8 - int8.round()).abs() < 1e-3,
+                    "not on int8 lattice: {v} ({int8})"
+                );
+                assert!(int8.round().abs() <= 127.0);
+            }
+        }
+    }
+
+    #[test]
+    fn progressive_error_reasonable() {
+        let w = weight_matrix(16, 128, 2);
+        let e = rel_error(&w, &progressive_w4(&w, 32));
+        assert!(e < 0.25, "e={e}");
+    }
+
+    #[test]
+    fn act_is_8bit_per_token() {
+        let x = activation_matrix(8, 64, 3);
+        let q = QServeScheme::w4a8kv4(128).act(&x, None);
+        assert!(rel_error(&x, &q) < 0.05);
+    }
+
+    #[test]
+    fn kv_smoothing_beats_plain_rtn4() {
+        let x = activation_matrix(32, 64, 4);
+        let scheme = QServeScheme::w4a8kv4(128);
+        let e_s = rel_error(&x, &scheme.kv(&x, None));
+        let plain = Tensor::from_vec(x.shape(), rtn_groupwise(x.data(), 4, 64));
+        let e_p = rel_error(&x, &plain);
+        assert!(e_s <= e_p * 1.05, "smoothed {e_s} vs plain {e_p}");
+    }
+
+    #[test]
+    fn zero_weight_rows_stay_zero() {
+        let mut w = weight_matrix(4, 32, 5);
+        for v in w.row_mut(1) {
+            *v = 0.0;
+        }
+        let q = progressive_w4(&w, 8);
+        assert!(q.row(1).iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,264 @@
+//! QuaRot-style randomized-Hadamard rotation baseline.
+//!
+//! QuaRot (Ashkboos et al., 2024) multiplies activations (and the
+//! matching weight dimension) by a randomized Hadamard matrix before
+//! quantization: rotation spreads outlier energy across all channels,
+//! flattening the distribution so plain RTN-4bit works. The computation
+//! is preserved because `(xH)(WH)ᵀ = xWᵀ` for orthogonal `H`.
+//!
+//! This module implements the fast Walsh–Hadamard transform with a
+//! deterministic random sign diagonal (the "randomized" part), and the
+//! [`QuaRotScheme`] wrapper: RTN weights (optionally GPTQ-solved —
+//! QuaRot(GPTQ)) in the rotated basis, dynamic per-token activations,
+//! per-group KV. The paper's Table 2 compares QRazor against exactly
+//! these two variants.
+
+use super::gptq::gptq_quantize;
+use super::rtn::{rtn_groupwise, rtn_per_row};
+use super::Scheme;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// In-place fast Walsh–Hadamard transform (orthonormal: scaled by
+/// 1/√n). `xs.len()` must be a power of two.
+pub fn fwht(xs: &mut [f32]) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "FWHT needs power-of-two length, got {n}");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (xs[j], xs[j + h]);
+                xs[j] = a + b;
+                xs[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for v in xs.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// Deterministic ±1 diagonal for the randomized Hadamard of size `n`.
+pub fn sign_diagonal(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x51C0_FFEE);
+    (0..n).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect()
+}
+
+/// Apply the randomized Hadamard rotation `x ← (x·D)H` row-wise to a
+/// `[rows, n]` matrix. Orthogonal, deterministic in `seed`.
+pub fn rotate_rows(x: &Tensor<f32>, seed: u64) -> Tensor<f32> {
+    assert_eq!(x.ndim(), 2);
+    let n = x.shape()[1];
+    let diag = sign_diagonal(n, seed);
+    let mut out = x.clone();
+    let cols = n;
+    for row in out.data_mut().chunks_mut(cols) {
+        for (v, d) in row.iter_mut().zip(&diag) {
+            *v *= d;
+        }
+        fwht(row);
+    }
+    out
+}
+
+/// Inverse of [`rotate_rows`] (Hᵀ then D, both self-inverse up to order).
+pub fn unrotate_rows(x: &Tensor<f32>, seed: u64) -> Tensor<f32> {
+    assert_eq!(x.ndim(), 2);
+    let n = x.shape()[1];
+    let diag = sign_diagonal(n, seed);
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_mut(n) {
+        fwht(row); // H is symmetric and orthonormal: H⁻¹ = H
+        for (v, d) in row.iter_mut().zip(&diag) {
+            *v *= d;
+        }
+    }
+    out
+}
+
+/// Weight solver for the rotated basis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightSolver {
+    /// Plain round-to-nearest — QuaRot(RTN).
+    Rtn,
+    /// Greedy error compensation — QuaRot(GPTQ).
+    Gptq,
+}
+
+/// The QuaRot baseline scheme.
+pub struct QuaRotScheme {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub kv_bits: Option<u32>,
+    pub solver: WeightSolver,
+    pub seed: u64,
+}
+
+impl QuaRotScheme {
+    pub fn rtn_w4a4kv4() -> QuaRotScheme {
+        QuaRotScheme { w_bits: 4, a_bits: 4, kv_bits: Some(4), solver: WeightSolver::Rtn, seed: 7 }
+    }
+
+    pub fn gptq_w4a4kv4() -> QuaRotScheme {
+        QuaRotScheme { solver: WeightSolver::Gptq, ..QuaRotScheme::rtn_w4a4kv4() }
+    }
+}
+
+impl Scheme for QuaRotScheme {
+    fn name(&self) -> String {
+        let s = match self.solver {
+            WeightSolver::Rtn => "RTN",
+            WeightSolver::Gptq => "GPTQ",
+        };
+        let kv = self.kv_bits.map(|b| format!("KV{b}")).unwrap_or_default();
+        format!("QuaRot({s})-W{}A{}{}", self.w_bits, self.a_bits, kv)
+    }
+
+    /// Quantize `W` in the rotated basis: W_rot = W·(DH) row-wise over
+    /// the input dim (so (x·DH)·W_rotᵀ = x·Wᵀ). Per-channel RTN or GPTQ.
+    fn prep_weight(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> Tensor<f32> {
+        let wrot = rotate_rows(w, self.seed); // rotate input dim (cols of [out,in])
+        match self.solver {
+            WeightSolver::Rtn => {
+                let cols = wrot.shape()[1];
+                let data: Vec<f32> = wrot
+                    .data()
+                    .chunks(cols)
+                    .flat_map(|row| rtn_groupwise(row, self.w_bits, cols))
+                    .collect();
+                Tensor::from_vec(wrot.shape(), data)
+            }
+            WeightSolver::Gptq => {
+                let calib_rot = calib.map(|c| rotate_rows(c, self.seed));
+                gptq_quantize(&wrot, calib_rot.as_ref(), self.w_bits)
+            }
+        }
+    }
+
+    /// Rotate activations online, then per-token RTN (QuaRot's dynamic
+    /// per-token scaling).
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        let xrot = rotate_rows(x, self.seed);
+        rtn_per_row(&xrot, self.a_bits)
+    }
+
+    /// KV path: rotation along the head dim + per-group (g=128) RTN,
+    /// then rotate *back* — attention math happens in the original
+    /// basis in our simulator, so the rotation only shapes quantization
+    /// noise, exactly its role in QuaRot.
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        match self.kv_bits {
+            None => x.clone(),
+            Some(bits) => {
+                let rot = rotate_rows(x, self.seed ^ 0x4B56_5345);
+                let q = Tensor::from_vec(rot.shape(), rtn_groupwise(rot.data(), bits, 128));
+                unrotate_rows(&q, self.seed ^ 0x4B56_5345)
+            }
+        }
+    }
+
+    fn quantizes_kv(&self) -> bool {
+        self.kv_bits.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rel_error;
+    use crate::baselines::tests::{activation_matrix, weight_matrix};
+    use crate::tensor::matmul_bt;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fwht_is_involution() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut x = orig.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in orig.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_norm() {
+        let mut rng = Rng::new(2);
+        let mut x: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        fwht(&mut x);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn rotation_roundtrip() {
+        let x = activation_matrix(4, 64, 3);
+        let back = unrotate_rows(&rotate_rows(&x, 9), 9);
+        for (a, b) in x.data().iter().zip(back.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_matmul() {
+        // (x DH)(W DH)ᵀ == x Wᵀ
+        let x = activation_matrix(3, 32, 4);
+        let w = weight_matrix(5, 32, 5);
+        let ref_out = matmul_bt(&x, &w);
+        let rot_out = matmul_bt(&rotate_rows(&x, 11), &rotate_rows(&w, 11));
+        for (a, b) in ref_out.data().iter().zip(rot_out.data()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rotation_flattens_outliers() {
+        // Kurtosis (outlier-ness) must drop substantially after rotation.
+        let x = activation_matrix(32, 256, 6);
+        let rot = rotate_rows(&x, 13);
+        let kurt = |t: &Tensor<f32>| {
+            let n = t.len() as f64;
+            let mean = t.data().iter().map(|&v| v as f64).sum::<f64>() / n;
+            let var = t.data().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+            t.data().iter().map(|&v| (v as f64 - mean).powi(4)).sum::<f64>() / n / var.powi(2)
+        };
+        assert!(kurt(&rot) < kurt(&x) * 0.5, "kurt {} -> {}", kurt(&x), kurt(&rot));
+    }
+
+    #[test]
+    fn quarot_beats_plain_rtn_on_outliers() {
+        // The reason QuaRot exists: 4-bit per-token RTN after rotation
+        // has lower error than without, on outlier-heavy activations.
+        let x = activation_matrix(16, 256, 7);
+        let plain = rtn_per_row(&x, 4);
+        let q = QuaRotScheme::rtn_w4a4kv4();
+        let rotated = q.act(&x, None);
+        // compare in the computation's terms: matmul against a weight
+        let w = weight_matrix(8, 256, 8);
+        let wq_plain = super::super::rtn::RtnScheme::w4a4(256).prep_weight(&w, None);
+        let wq_rot = q.prep_weight(&w, None);
+        let ref_out = matmul_bt(&x, &w);
+        let e_plain = rel_error(&ref_out, &matmul_bt(&plain, &wq_plain));
+        let e_rot = rel_error(&ref_out, &matmul_bt(&rotated, &wq_rot));
+        assert!(e_rot < e_plain, "rot {e_rot} vs plain {e_plain}");
+    }
+
+    #[test]
+    fn kv_roundtrip_error_small() {
+        let x = activation_matrix(8, 128, 9);
+        let q = QuaRotScheme::rtn_w4a4kv4();
+        let e = rel_error(&x, &q.kv(&x, None));
+        assert!(e < 0.25, "kv error {e}");
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(QuaRotScheme::rtn_w4a4kv4().name(), "QuaRot(RTN)-W4A4KV4");
+        assert_eq!(QuaRotScheme::gptq_w4a4kv4().name(), "QuaRot(GPTQ)-W4A4KV4");
+    }
+}

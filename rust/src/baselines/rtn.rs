@@ -1,0 +1,238 @@
+//! Per-group round-to-nearest quantization — "dynamic max-scaled
+//! quantization" (DMQ) in the paper's §4.2 comparison, and the workhorse
+//! weight/activation quantizer inside the QuaRot(RTN), QServe and
+//! OmniQuant-class baselines.
+//!
+//! Unlike QRazor, every group gets a *floating-point scale* computed
+//! from its own absolute maximum (this is the per-group dequantization
+//! cost the decompression-free unit avoids), so its effective bits are
+//! `bits + 16/g` (FP16 scale per group).
+
+use super::Scheme;
+use crate::quant::{qmax, round_half_even};
+use crate::tensor::Tensor;
+
+/// Quantize a slice to `bits` with one dynamic absmax scale per group.
+pub fn rtn_groupwise(xs: &[f32], bits: u32, group: usize) -> Vec<f32> {
+    let q = qmax(bits) as f32;
+    let mut out = Vec::with_capacity(xs.len());
+    for chunk in xs.chunks(group.max(1)) {
+        let amax = chunk.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if amax == 0.0 {
+            out.extend(chunk.iter().map(|_| 0.0));
+            continue;
+        }
+        let scale = amax / q;
+        // Emulate FP16 storage of the group scale (the format the
+        // effective-bits accounting assumes).
+        let scale = f16_round(scale);
+        for &x in chunk {
+            let v = round_half_even(x / scale).clamp(-(q as i32), q as i32);
+            out.push(v as f32 * scale);
+        }
+    }
+    out
+}
+
+/// Round an f32 to the nearest representable f16 (scales are stored as
+/// FP16 in real deployments; keeps our effective-bits claims honest).
+pub fn f16_round(x: f32) -> f32 {
+    // Manual f32->f16->f32 round-trip (Rust has no stable f16 yet).
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = ((bits >> 23) & 0xFF) as i32 - 127;
+    if x == 0.0 || exp < -24 {
+        return f32::from_bits(sign); // ±0
+    }
+    if exp > 15 {
+        return f32::from_bits(sign | 0x7770_0000); // clamp to ~f16 max
+    }
+    let mant = bits & 0x007F_FFFF;
+    if exp >= -14 {
+        // normal f16: keep 10 mantissa bits, round-to-nearest-even
+        let shift = 13;
+        let halfway = 1u32 << (shift - 1);
+        let rem = mant & ((1 << shift) - 1);
+        let mut m10 = mant >> shift;
+        if rem > halfway || (rem == halfway && (m10 & 1) == 1) {
+            m10 += 1;
+        }
+        let mut e = exp;
+        if m10 == 1 << 10 {
+            m10 = 0;
+            e += 1;
+        }
+        let out = sign | (((e + 127) as u32) << 23) | (m10 << 13);
+        f32::from_bits(out)
+    } else {
+        // subnormal f16: quantize magnitude to multiples of 2^-24
+        let step = 2f32.powi(-24);
+        let v = (x / step).round() * step;
+        if v == 0.0 {
+            f32::from_bits(sign)
+        } else {
+            v
+        }
+    }
+}
+
+/// RTN as a full [`Scheme`]: group-wise weights, dynamic per-token
+/// activations (the common W4A4 baseline recipe, e.g. Atom's dense path
+/// or QuaRot's online side).
+pub struct RtnScheme {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub kv_bits: Option<u32>,
+    pub w_group: usize,
+    /// Per-token (row-wise) dynamic activation scaling when true;
+    /// per-tensor otherwise.
+    pub per_token_act: bool,
+}
+
+impl RtnScheme {
+    pub fn w4a4(w_group: usize) -> RtnScheme {
+        RtnScheme { w_bits: 4, a_bits: 4, kv_bits: None, w_group, per_token_act: true }
+    }
+
+    pub fn w4a4kv4(w_group: usize) -> RtnScheme {
+        RtnScheme { kv_bits: Some(4), ..RtnScheme::w4a4(w_group) }
+    }
+}
+
+/// Per-row (token) RTN at full row granularity.
+pub fn rtn_per_row(x: &Tensor<f32>, bits: u32) -> Tensor<f32> {
+    assert_eq!(x.ndim(), 2);
+    let cols = x.shape()[1];
+    let data: Vec<f32> = x
+        .data()
+        .chunks(cols)
+        .flat_map(|row| rtn_groupwise(row, bits, cols))
+        .collect();
+    Tensor::from_vec(x.shape(), data)
+}
+
+impl Scheme for RtnScheme {
+    fn name(&self) -> String {
+        let kv = self.kv_bits.map(|b| format!("KV{b}")).unwrap_or_default();
+        format!("RTN-W{}A{}{} g{}", self.w_bits, self.a_bits, kv, self.w_group)
+    }
+
+    fn prep_weight(&self, w: &Tensor<f32>, _c: Option<&Tensor<f32>>) -> Tensor<f32> {
+        assert_eq!(w.ndim(), 2);
+        let cols = w.shape()[1];
+        let data: Vec<f32> = w
+            .data()
+            .chunks(cols)
+            .flat_map(|row| rtn_groupwise(row, self.w_bits, self.w_group))
+            .collect();
+        Tensor::from_vec(w.shape(), data)
+    }
+
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        if self.per_token_act {
+            rtn_per_row(x, self.a_bits)
+        } else {
+            let data = rtn_groupwise(x.data(), self.a_bits, x.len());
+            Tensor::from_vec(x.shape(), data)
+        }
+    }
+
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        match self.kv_bits {
+            None => x.clone(),
+            // Per-group KV quantization with g=128 along the head dim
+            // rows (Quarot-style granularity).
+            Some(bits) => {
+                let data = rtn_groupwise(x.data(), bits, 128);
+                Tensor::from_vec(x.shape(), data)
+            }
+        }
+    }
+
+    fn quantizes_kv(&self) -> bool {
+        self.kv_bits.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rel_error;
+    use crate::util::rng::Rng;
+
+    fn noisy(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.heavy_tailed(1.0, 0.02, 25.0)).collect()
+    }
+
+    #[test]
+    fn f16_round_exact_on_f16_values() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 1.5, 65504.0_f32.min(1000.0)] {
+            assert_eq!(f16_round(v), v);
+        }
+    }
+
+    #[test]
+    fn f16_round_error_is_small() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let x = rng.normal_f32(0.0, 10.0);
+            let r = f16_round(x);
+            if x != 0.0 {
+                assert!(((r - x) / x).abs() < 1e-3, "{x} -> {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn groupwise_error_bounded() {
+        let xs = noisy(256, 1);
+        let q = rtn_groupwise(&xs, 4, 32);
+        for (chunk, qchunk) in xs.chunks(32).zip(q.chunks(32)) {
+            let amax = chunk.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let step = amax / 7.0;
+            for (&a, &b) in chunk.iter().zip(qchunk) {
+                assert!((a - b).abs() <= step * 0.51 + 1e-6, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_groups_reduce_error() {
+        let xs = noisy(1024, 3);
+        let t = Tensor::from_vec(&[1024], xs.clone());
+        let e8 = rel_error(&t, &Tensor::from_vec(&[1024], rtn_groupwise(&xs, 4, 8)));
+        let e128 = rel_error(&t, &Tensor::from_vec(&[1024], rtn_groupwise(&xs, 4, 128)));
+        assert!(e8 < e128, "e8={e8} e128={e128}");
+    }
+
+    #[test]
+    fn zero_group_stays_zero() {
+        let q = rtn_groupwise(&[0.0; 16], 4, 8);
+        assert!(q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn per_token_outlier_isolation() {
+        // A hot token shouldn't wreck other tokens under per-token RTN.
+        let mut x = Tensor::zeros(&[2, 8]);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v = if i < 8 { 100.0 } else { 0.5 };
+        }
+        let q = rtn_per_row(&x, 4);
+        // row 1 quantized on its own scale: error small relative to 0.5
+        for &v in q.row(1) {
+            assert!((v - 0.5).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn scheme_roundtrip_quality_and_name() {
+        let s = RtnScheme::w4a4kv4(128);
+        assert_eq!(s.name(), "RTN-W4A4KV4 g128");
+        let w = crate::baselines::tests::weight_matrix(16, 64, 5);
+        let e = rel_error(&w, &s.prep_weight(&w, None));
+        assert!(e > 0.0 && e < 0.2, "e={e}");
+        assert!(s.quantizes_kv());
+    }
+}

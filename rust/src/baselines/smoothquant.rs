@@ -1,0 +1,221 @@
+//! SmoothQuant-style scale migration (Xiao et al., 2024).
+//!
+//! Activation outliers live in specific channels; SmoothQuant divides
+//! each activation channel by `s_j = max|X_j|^α / max|W_j|^(1−α)` and
+//! multiplies the matching weight column by `s_j`, shifting quantization
+//! difficulty from activations to weights. Exact in FP; after the
+//! migration both sides are quantized with plain RTN. This is the
+//! SmoothQuant / Outlier-Suppression-class row of Tables 2 and 10 —
+//! the method QRazor beats by >12 points at W4A4.
+
+use super::rtn::{rtn_groupwise, rtn_per_row};
+use super::{PreparedLinear, Scheme};
+use crate::tensor::Tensor;
+
+/// Compute per-channel smoothing factors from calibration activations
+/// and the weight matrix. `alpha` is the migration strength (0.5 in the
+/// paper).
+pub fn smoothing_factors(calib: &Tensor<f32>, w: &Tensor<f32>, alpha: f32) -> Vec<f32> {
+    let cols = w.shape()[1];
+    assert_eq!(calib.shape()[1], cols);
+    let mut a_max = vec![1e-8f32; cols];
+    for row in calib.data().chunks(cols) {
+        for (m, &v) in a_max.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    let mut w_max = vec![1e-8f32; cols];
+    for row in w.data().chunks(cols) {
+        for (m, &v) in w_max.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    a_max
+        .iter()
+        .zip(&w_max)
+        .map(|(&a, &wm)| (a.powf(alpha) / wm.powf(1.0 - alpha)).max(1e-5))
+        .collect()
+}
+
+/// SmoothQuant as a [`Scheme`]. The smoothing vector is derived per
+/// linear from the calibration sample handed to `prep_linear`; the
+/// returned layer binds the inverse scaling into its activation
+/// transform — mirroring how real SmoothQuant folds `diag(s)⁻¹` into
+/// the preceding LayerNorm.
+pub struct SmoothQuantScheme {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub alpha: f32,
+}
+
+impl SmoothQuantScheme {
+    pub fn w4a4(alpha: f32) -> SmoothQuantScheme {
+        SmoothQuantScheme { w_bits: 4, a_bits: 4, alpha }
+    }
+
+    pub fn w8a8(alpha: f32) -> SmoothQuantScheme {
+        SmoothQuantScheme { w_bits: 8, a_bits: 8, alpha }
+    }
+
+    /// Weight side of the migration: `(W·diag(s))` then per-channel RTN.
+    fn quantize_scaled_weight(&self, w: &Tensor<f32>, s: &[f32]) -> Tensor<f32> {
+        let cols = w.shape()[1];
+        let mut scaled = w.clone();
+        for row in scaled.data_mut().chunks_mut(cols) {
+            for (v, &sj) in row.iter_mut().zip(s) {
+                *v *= sj;
+            }
+        }
+        let data: Vec<f32> = scaled
+            .data()
+            .chunks(cols)
+            .flat_map(|row| rtn_groupwise(row, self.w_bits, cols))
+            .collect();
+        Tensor::from_vec(w.shape(), data)
+    }
+}
+
+impl Scheme for SmoothQuantScheme {
+    fn name(&self) -> String {
+        format!("SmoothQuant-W{}A{} α={}", self.w_bits, self.a_bits, self.alpha)
+    }
+
+    fn prep_weight(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> Tensor<f32> {
+        let s = match calib {
+            Some(c) => smoothing_factors(c, w, self.alpha),
+            None => vec![1.0; w.shape()[1]],
+        };
+        self.quantize_scaled_weight(w, &s)
+    }
+
+    fn prep_linear(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> PreparedLinear {
+        let s = match calib {
+            Some(c) => smoothing_factors(c, w, self.alpha),
+            None => vec![1.0; w.shape()[1]],
+        };
+        let weight = self.quantize_scaled_weight(w, &s);
+        let a_bits = self.a_bits;
+        // The layer-bound act transform: divide by this linear's s,
+        // then per-token RTN. The forward pass multiplies by the
+        // *smoothed* weight, so diag(s)·diag(s)⁻¹ cancels and the layer
+        // output is unchanged up to quantization noise.
+        let act = move |x: &Tensor<f32>, _ss: Option<f32>| {
+            let cols = x.shape()[x.ndim() - 1];
+            let mut out = x.clone();
+            if s.len() == cols {
+                for row in out.data_mut().chunks_mut(cols) {
+                    for (v, &sj) in row.iter_mut().zip(&s) {
+                        *v /= sj;
+                    }
+                }
+            }
+            rtn_per_row(&out, a_bits)
+        };
+        PreparedLinear { weight, act_override: Some(Box::new(act)) }
+    }
+
+    /// Shared (uncalibrated) activation path: plain per-token RTN.
+    fn act(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        rtn_per_row(x, self.a_bits)
+    }
+
+    fn kv(&self, x: &Tensor<f32>, _s: Option<f32>) -> Tensor<f32> {
+        // SmoothQuant does not quantize the KV cache; keep FP.
+        x.clone()
+    }
+
+    fn quantizes_kv(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rel_error;
+    use crate::baselines::tests::{activation_matrix, weight_matrix};
+    use crate::tensor::matmul_bt;
+
+    #[test]
+    fn factors_scale_with_activation_outliers() {
+        let x = activation_matrix(64, 128, 1);
+        let w = weight_matrix(16, 128, 2);
+        let s = smoothing_factors(&x, &w, 0.5);
+        // channels with larger activation max get larger s
+        let mut amax = vec![0f32; 128];
+        for row in x.data().chunks(128) {
+            for (m, &v) in amax.iter_mut().zip(row) {
+                *m = m.max(v.abs());
+            }
+        }
+        let hot = (0..128).max_by(|&a, &b| amax[a].partial_cmp(&amax[b]).unwrap()).unwrap();
+        let cold = (0..128).min_by(|&a, &b| amax[a].partial_cmp(&amax[b]).unwrap()).unwrap();
+        assert!(s[hot] > s[cold], "s_hot={} s_cold={}", s[hot], s[cold]);
+    }
+
+    #[test]
+    fn migration_preserves_fp_output() {
+        // Without quantization, (x/s)·(W·s)ᵀ == x·Wᵀ exactly.
+        let x = activation_matrix(8, 64, 3);
+        let w = weight_matrix(4, 64, 4);
+        let s = smoothing_factors(&x, &w, 0.5);
+        let mut xs = x.clone();
+        for row in xs.data_mut().chunks_mut(64) {
+            for (v, &sj) in row.iter_mut().zip(&s) {
+                *v /= sj;
+            }
+        }
+        let mut ws = w.clone();
+        for row in ws.data_mut().chunks_mut(64) {
+            for (v, &sj) in row.iter_mut().zip(&s) {
+                *v *= sj;
+            }
+        }
+        let a = matmul_bt(&x, &w);
+        let b = matmul_bt(&xs, &ws);
+        assert!(rel_error(&a, &b) < 1e-5);
+    }
+
+    #[test]
+    fn smoothing_helps_at_w8a8(){
+        // SmoothQuant's home turf: W8A8 on outlier-heavy activations.
+        let x = activation_matrix(64, 256, 5);
+        let w = weight_matrix(32, 256, 6);
+        let ref_out = matmul_bt(&x, &w);
+        // plain W8A8 per-token RTN
+        let wq = Tensor::from_vec(
+            w.shape(),
+            w.data().chunks(256).flat_map(|r| rtn_groupwise(r, 8, 256)).collect::<Vec<_>>(),
+        );
+        let e_plain = rel_error(&ref_out, &matmul_bt(&rtn_per_row(&x, 8), &wq));
+        let sq = SmoothQuantScheme::w8a8(0.5);
+        let pl = sq.prep_linear(&w, Some(&x));
+        let e_smooth = rel_error(&ref_out, &pl.forward(&x, None, &sq));
+        assert!(e_smooth < e_plain, "smooth {e_smooth} vs plain {e_plain}");
+    }
+
+    #[test]
+    fn w4a4_still_struggles() {
+        // The paper's point: SmoothQuant at W4A4 leaves large error —
+        // sanity-check it is clearly worse than W8A8.
+        let x = activation_matrix(32, 128, 7);
+        let w = weight_matrix(16, 128, 8);
+        let ref_out = matmul_bt(&x, &w);
+        let run = |sq: SmoothQuantScheme| {
+            let pl = sq.prep_linear(&w, Some(&x));
+            rel_error(&ref_out, &pl.forward(&x, None, &sq))
+        };
+        let e8 = run(SmoothQuantScheme::w8a8(0.5));
+        let e4 = run(SmoothQuantScheme::w4a4(0.5));
+        assert!(e4 > 5.0 * e8, "e4={e4} e8={e8}");
+    }
+
+    #[test]
+    fn act_without_prep_is_plain_rtn() {
+        let x = activation_matrix(4, 32, 9);
+        let sq = SmoothQuantScheme::w4a4(0.5);
+        let a = sq.act(&x, None);
+        let b = rtn_per_row(&x, 4);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,204 @@
+//! Configuration system: model architecture presets, quantization
+//! configuration, and experiment settings. JSON-serializable so the
+//! launcher, the AOT pipeline (python side reads the same file) and the
+//! benches share one source of truth.
+
+use crate::util::json::Json;
+
+/// Transformer architecture (LLaMA-style: RMSNorm, RoPE, SwiGLU, GQA).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// KV heads (< heads ⇒ grouped-query attention, the Mistral-style
+    /// second architecture of Table 10).
+    pub kv_heads: usize,
+    /// SwiGLU hidden size.
+    pub ffn_hidden: usize,
+    pub seq_max: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// Parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let d = self.dim;
+        let kv_dim = self.head_dim() * self.kv_heads;
+        let per_layer = d * d // wq
+            + d * kv_dim * 2 // wk, wv
+            + d * d // wo
+            + 2 * d * self.ffn_hidden // gate, up
+            + self.ffn_hidden * d // down
+            + 2 * d; // two rmsnorm gains
+        self.vocab * d * 2 + self.layers * per_layer + d
+    }
+
+    /// Named presets. Dimensions are powers of two so the Hadamard
+    /// baselines apply without padding.
+    pub fn preset(name: &str) -> anyhow::Result<ModelConfig> {
+        let c = match name {
+            // CI-scale
+            "nano" => ModelConfig {
+                name: "nano".into(),
+                vocab: 256,
+                dim: 64,
+                layers: 2,
+                heads: 2,
+                kv_heads: 2,
+                ffn_hidden: 128,
+                seq_max: 128,
+            },
+            // default experiment model (the "LLaMA-2-7B analog")
+            "tiny" => ModelConfig {
+                name: "tiny".into(),
+                vocab: 512,
+                dim: 256,
+                layers: 4,
+                heads: 4,
+                kv_heads: 4,
+                ffn_hidden: 512,
+                seq_max: 256,
+            },
+            // the deeper variant (the "13B analog" — same family, more
+            // capacity, mirroring the paper's scale column)
+            "small" => ModelConfig {
+                name: "small".into(),
+                vocab: 512,
+                dim: 512,
+                layers: 6,
+                heads: 8,
+                kv_heads: 8,
+                ffn_hidden: 1024,
+                seq_max: 256,
+            },
+            // GQA architecture (the "Mistral-7B analog" for Table 10)
+            "mistral-tiny" => ModelConfig {
+                name: "mistral-tiny".into(),
+                vocab: 512,
+                dim: 256,
+                layers: 4,
+                heads: 8,
+                kv_heads: 2,
+                ffn_hidden: 512,
+                seq_max: 256,
+            },
+            // ~100M-class config for the end-to-end driver at full tilt
+            "medium" => ModelConfig {
+                name: "medium".into(),
+                vocab: 4096,
+                dim: 768,
+                layers: 12,
+                heads: 12,
+                kv_heads: 12,
+                ffn_hidden: 2048,
+                seq_max: 512,
+            },
+            other => anyhow::bail!("unknown model preset '{other}'"),
+        };
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.clone())),
+            ("vocab", Json::from(self.vocab)),
+            ("dim", Json::from(self.dim)),
+            ("layers", Json::from(self.layers)),
+            ("heads", Json::from(self.heads)),
+            ("kv_heads", Json::from(self.kv_heads)),
+            ("ffn_hidden", Json::from(self.ffn_hidden)),
+            ("seq_max", Json::from(self.seq_max)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        let get = |k: &str| -> anyhow::Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("field '{k}' not a number"))
+        };
+        Ok(ModelConfig {
+            name: j.req("name")?.as_str().unwrap_or("custom").to_string(),
+            vocab: get("vocab")?,
+            dim: get("dim")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            kv_heads: get("kv_heads")?,
+            ffn_hidden: get("ffn_hidden")?,
+            seq_max: get("seq_max")?,
+        })
+    }
+}
+
+/// Serving/experiment configuration for the coordinator.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max concurrent sequences in a decode batch.
+    pub max_batch: usize,
+    /// Max new tokens per request.
+    pub max_new_tokens: usize,
+    /// Token budget per scheduler step (prefill chunking).
+    pub max_step_tokens: usize,
+    /// KV pool capacity in tokens.
+    pub kv_pool_tokens: usize,
+    /// SDR group size for the compressed KV pool.
+    pub kv_group: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_new_tokens: 64,
+            max_step_tokens: 512,
+            kv_pool_tokens: 16_384,
+            kv_group: 16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for p in ["nano", "tiny", "small", "mistral-tiny", "medium"] {
+            let c = ModelConfig::preset(p).unwrap();
+            assert_eq!(c.name, p);
+            assert_eq!(c.dim % c.heads, 0);
+            assert_eq!(c.heads % c.kv_heads, 0);
+        }
+        assert!(ModelConfig::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn param_counts_ordered_by_size() {
+        let nano = ModelConfig::preset("nano").unwrap().param_count();
+        let tiny = ModelConfig::preset("tiny").unwrap().param_count();
+        let small = ModelConfig::preset("small").unwrap().param_count();
+        let medium = ModelConfig::preset("medium").unwrap().param_count();
+        assert!(nano < tiny && tiny < small && small < medium);
+        assert!(medium > 80_000_000, "medium = {medium}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::preset("mistral-tiny").unwrap();
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn gqa_preset_has_fewer_kv_heads() {
+        let c = ModelConfig::preset("mistral-tiny").unwrap();
+        assert!(c.kv_heads < c.heads);
+        assert_eq!(c.head_dim(), 32);
+    }
+}

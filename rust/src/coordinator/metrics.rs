@@ -1,0 +1,122 @@
+//! Serving metrics: request counts, token throughput, TTFT/latency
+//! percentiles, KV memory high-water mark. Rendered as text by the CLI
+//! and dumped as JSON by the benches.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Percentiles;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub scheduler_steps: u64,
+    pub ttft: Percentiles,
+    pub latency: Percentiles,
+    pub kv_bytes_peak: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            requests_submitted: 0,
+            requests_completed: 0,
+            prompt_tokens: 0,
+            generated_tokens: 0,
+            scheduler_steps: 0,
+            ttft: Percentiles::default(),
+            latency: Percentiles::default(),
+            kv_bytes_peak: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Generated tokens per wall-clock second.
+    pub fn tokens_per_s(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e > 0.0 {
+            self.generated_tokens as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    pub fn observe_kv_bytes(&mut self, bytes: usize) {
+        self.kv_bytes_peak = self.kv_bytes_peak.max(bytes);
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {}/{} done | tokens: {} prompt + {} generated | \
+             {:.1} tok/s | steps: {} | ttft p50 {:.1}ms p99 {:.1}ms | \
+             latency p50 {:.1}ms | kv peak {} KiB",
+            self.requests_completed,
+            self.requests_submitted,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.tokens_per_s(),
+            self.scheduler_steps,
+            self.ttft.pct(50.0) * 1e3,
+            self.ttft.pct(99.0) * 1e3,
+            self.latency.pct(50.0) * 1e3,
+            self.kv_bytes_peak / 1024,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("requests_submitted", Json::from(self.requests_submitted as usize)),
+            ("requests_completed", Json::from(self.requests_completed as usize)),
+            ("prompt_tokens", Json::from(self.prompt_tokens as usize)),
+            ("generated_tokens", Json::from(self.generated_tokens as usize)),
+            ("scheduler_steps", Json::from(self.scheduler_steps as usize)),
+            ("tokens_per_s", Json::from(self.tokens_per_s())),
+            ("ttft_p50_ms", Json::from(self.ttft.pct(50.0) * 1e3)),
+            ("latency_p50_ms", Json::from(self.latency.pct(50.0) * 1e3)),
+            ("kv_bytes_peak", Json::from(self.kv_bytes_peak)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_render() {
+        let mut m = Metrics::new();
+        m.requests_submitted = 3;
+        m.requests_completed = 2;
+        m.generated_tokens = 100;
+        m.ttft.push(0.010);
+        m.latency.push(0.200);
+        m.observe_kv_bytes(2048);
+        m.observe_kv_bytes(1024);
+        assert_eq!(m.kv_bytes_peak, 2048);
+        let s = m.render();
+        assert!(s.contains("2/3 done"), "{s}");
+        assert!(s.contains("kv peak 2 KiB"), "{s}");
+        assert!(m.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let m = Metrics::new();
+        let j = m.to_json().to_string();
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
+}

@@ -1,0 +1,28 @@
+//! L3 serving coordinator — the QServe/vLLM-shaped layer that turns the
+//! quantized model into a service.
+//!
+//! * [`request`] — request/response types and ids.
+//! * [`batcher`] — admission queue + continuous-batching policy
+//!   (prefill/decode separation, token budgets, FCFS or
+//!   shortest-prefill-first).
+//! * [`kv`] — the KV-cache pool: per-sequence SDR-compressed caches
+//!   with global token-capacity accounting and backpressure — the
+//!   deployment surface of the paper's KV4 claim (a 4-bit pool holds
+//!   ~3.7× the tokens of an FP16 one at equal memory).
+//! * [`scheduler`] — the step loop: admit → prefill → decode-batch →
+//!   retire, sequences decoded in parallel.
+//! * [`server`] — a threaded front-end: submit requests from any
+//!   thread, poll or block for completions.
+//! * [`metrics`] — throughput/latency accounting rendered by the CLI
+//!   and the serving example.
+
+pub mod batcher;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use request::{Request, RequestId, Response};
+pub use scheduler::Engine;
+pub use server::Server;

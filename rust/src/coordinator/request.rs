@@ -1,0 +1,80 @@
+//! Request/response types for the serving layer.
+
+use std::time::Instant;
+
+/// Monotonic request identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// Sampling policy for generated tokens.
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    /// Deterministic argmax.
+    Greedy,
+    /// Temperature sampling with a per-request seed.
+    Temperature { temp: f32, seed: u64 },
+}
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// Generation stops early on this token (e.g. end-of-text).
+    pub stop_token: Option<u32>,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: Sampling::Greedy,
+            stop_token: None,
+            arrived: Instant::now(),
+        }
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    StopToken,
+    Error,
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Seconds from arrival to first generated token.
+    pub ttft_s: f64,
+    /// Seconds from arrival to completion.
+    pub total_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::new(RequestId(3), vec![1, 2, 3], 16);
+        assert_eq!(r.id, RequestId(3));
+        assert!(matches!(r.sampling, Sampling::Greedy));
+        assert!(r.stop_token.is_none());
+    }
+
+    #[test]
+    fn request_ids_order() {
+        assert!(RequestId(1) < RequestId(2));
+    }
+}

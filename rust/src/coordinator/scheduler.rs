@@ -1,0 +1,386 @@
+//! The serving engine: admit → prefill → decode-batch → retire.
+//!
+//! One `step()` is the continuous-batching quantum: newly admitted
+//! requests are prefilled (their prompt tokens run through the model,
+//! filling their KV caches), then every active sequence decodes exactly
+//! one token. Decode is data-parallel across sequences (each owns its
+//! cache; the model is `Sync`). Finished sequences release their pool
+//! reservation immediately, letting the batcher admit waiting work —
+//! the vLLM-style property that keeps the batch full.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{Batcher, Policy};
+use crate::coordinator::kv::KvPool;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{FinishReason, Request, RequestId, Response, Sampling};
+use crate::model::quantized::{DecodeCache, QuantModel};
+use crate::tensor::argmax;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// A sequence mid-generation.
+struct Active {
+    req: Request,
+    generated: Vec<u32>,
+    /// Next token to feed (last prompt token during prefill handoff,
+    /// then the last generated token).
+    next_token: u32,
+    /// Absolute position of `next_token`.
+    pos: usize,
+    first_token_at: Option<Instant>,
+}
+
+/// Single-threaded serving engine (wrap with [`super::server::Server`]
+/// for a threaded front-end).
+pub struct Engine {
+    pub model: QuantModel,
+    pub config: ServeConfig,
+    pub metrics: Metrics,
+    batcher: Batcher,
+    pool: KvPool,
+    active: BTreeMap<RequestId, Active>,
+    next_id: u64,
+    done: Vec<Response>,
+}
+
+impl Engine {
+    pub fn new(model: QuantModel, config: ServeConfig) -> Engine {
+        Engine {
+            batcher: Batcher::new(Policy::Fcfs, config.max_batch, config.max_step_tokens),
+            pool: KvPool::new(config.kv_pool_tokens, config.kv_group),
+            active: BTreeMap::new(),
+            next_id: 0,
+            done: Vec::new(),
+            metrics: Metrics::new(),
+            model,
+            config,
+        }
+    }
+
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.batcher.policy = policy;
+    }
+
+    /// Queue a request; returns its id.
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize, sampling: Sampling) -> RequestId {
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        let max_new = max_new.min(self.config.max_new_tokens);
+        let mut req = Request::new(id, prompt, max_new);
+        req.sampling = sampling;
+        self.submit_request(req);
+        id
+    }
+
+    /// Queue a fully-specified request (stop token, custom sampling…).
+    /// The caller owns id uniqueness when using this entry point.
+    pub fn submit_request(&mut self, req: Request) {
+        self.next_id = self.next_id.max(req.id.0 + 1);
+        self.metrics.requests_submitted += 1;
+        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        self.batcher.push(req);
+    }
+
+    /// Anything left to do?
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.batcher.is_empty()
+    }
+
+    /// Drain completed responses.
+    pub fn take_completed(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// One scheduling quantum. Returns the number of tokens generated.
+    pub fn step(&mut self) -> usize {
+        self.metrics.scheduler_steps += 1;
+        // 1. admit + prefill
+        let pool = &mut self.pool;
+        let model = &self.model;
+        let admitted = {
+            let active = self.active.len();
+            // tentative accounting: the pool only reserves after the
+            // batcher decides, so accumulate would-be reservations here
+            let mut tentative = pool.reserved_tokens();
+            let capacity = pool.capacity_tokens;
+            self.batcher.admit(active, |need| {
+                if tentative + need <= capacity {
+                    tentative += need;
+                    true
+                } else {
+                    false
+                }
+            })
+        };
+        for req in admitted {
+            let ok = pool.admit(req.id, req.prompt.len() + req.max_new_tokens, model);
+            debug_assert!(ok, "batcher admitted beyond pool capacity");
+            let mut cache = pool.take(req.id);
+            // prefill: run all prompt tokens except the last; the last
+            // becomes the first decode input.
+            let prompt = &req.prompt;
+            assert!(!prompt.is_empty(), "empty prompt");
+            for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+                model.forward_token(tok, pos, &mut cache);
+            }
+            pool.put_back(req.id, cache);
+            let next_token = *prompt.last().unwrap();
+            let pos = prompt.len() - 1;
+            self.active.insert(
+                req.id,
+                Active { next_token, pos, generated: Vec::new(), first_token_at: None, req },
+            );
+        }
+
+        // 2. decode one token per active sequence, in parallel
+        let ids: Vec<RequestId> = self.active.keys().copied().collect();
+        if ids.is_empty() {
+            return 0;
+        }
+        let mut work: Vec<(RequestId, u32, usize, DecodeCache)> = ids
+            .iter()
+            .map(|&id| {
+                let a = &self.active[&id];
+                (id, a.next_token, a.pos, self.pool.take(id))
+            })
+            .collect();
+        let model = &self.model;
+        let results: Vec<(Vec<f32>, DecodeCache)> = {
+            let inputs: Vec<(u32, usize, DecodeCache)> = work
+                .drain(..)
+                .map(|(_, t, p, c)| (t, p, c))
+                .collect();
+            // move caches into a mutex-free parallel map via indices
+            let cells: Vec<std::sync::Mutex<Option<(u32, usize, DecodeCache)>>> =
+                inputs.into_iter().map(|x| std::sync::Mutex::new(Some(x))).collect();
+            parallel_map(cells.len(), |i| {
+                let (tok, pos, mut cache) = cells[i].lock().unwrap().take().unwrap();
+                let logits = model.forward_token(tok, pos, &mut cache);
+                (logits, cache)
+            })
+        };
+
+        let mut generated = 0usize;
+        for (id, (logits, cache)) in ids.iter().zip(results) {
+            self.pool.put_back(*id, cache);
+            let a = self.active.get_mut(id).unwrap();
+            let tok = sample(&logits, &a.req.sampling, a.pos as u64);
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(Instant::now());
+            }
+            a.generated.push(tok);
+            a.next_token = tok;
+            a.pos += 1;
+            generated += 1;
+        }
+        self.metrics.generated_tokens += generated as u64;
+        self.metrics.observe_kv_bytes(self.pool.bytes());
+
+        // 3. retire finished sequences
+        let finished: Vec<RequestId> = self
+            .active
+            .iter()
+            .filter(|(_, a)| {
+                a.generated.len() >= a.req.max_new_tokens
+                    || a.req.stop_token.is_some_and(|s| a.generated.last() == Some(&s))
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in finished {
+            let a = self.active.remove(&id).unwrap();
+            self.pool.release(id);
+            let now = Instant::now();
+            let ttft = a
+                .first_token_at
+                .map(|t| (t - a.req.arrived).as_secs_f64())
+                .unwrap_or(0.0);
+            let finish = if a.req.stop_token.is_some_and(|s| a.generated.last() == Some(&s)) {
+                FinishReason::StopToken
+            } else {
+                FinishReason::Length
+            };
+            self.metrics.requests_completed += 1;
+            self.metrics.ttft.push(ttft);
+            self.metrics
+                .latency
+                .push((now - a.req.arrived).as_secs_f64());
+            self.done.push(Response {
+                id,
+                prompt_len: a.req.prompt.len(),
+                tokens: a.generated,
+                finish,
+                ttft_s: ttft,
+                total_s: (now - a.req.arrived).as_secs_f64(),
+            });
+        }
+        generated
+    }
+
+    /// Run until every queued request completes; returns all responses.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            self.step();
+            out.extend(self.take_completed());
+        }
+        out
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.pool.bytes()
+    }
+}
+
+fn sample(logits: &[f32], sampling: &Sampling, pos_salt: u64) -> u32 {
+    match sampling {
+        Sampling::Greedy => argmax(logits) as u32,
+        Sampling::Temperature { temp, seed } => {
+            let mut rng = Rng::new(seed ^ pos_salt.wrapping_mul(0x9E3779B97F4A7C15));
+            let inv_t = 1.0 / temp.max(1e-3);
+            let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let weights: Vec<f64> = logits
+                .iter()
+                .map(|&l| (((l - max) * inv_t) as f64).exp())
+                .collect();
+            let total: f64 = weights.iter().sum();
+            let mut u = rng.uniform() * total;
+            for (i, w) in weights.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    return i as u32;
+                }
+            }
+            (logits.len() - 1) as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{Fp16, QRazor};
+    use crate::config::ModelConfig;
+    use crate::model::quantized::calibrate;
+    use crate::model::ModelWeights;
+
+    fn engine(scheme: Box<dyn crate::baselines::Scheme>) -> Engine {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 5);
+        let mut rng = Rng::new(6);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let qm = crate::model::quantized::QuantModel::build(&w, scheme, &cal);
+        Engine::new(qm, ServeConfig { max_batch: 4, max_new_tokens: 8, ..Default::default() })
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(Box::new(Fp16));
+        let id = e.submit(vec![1, 2, 3], 4, Sampling::Greedy);
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, id);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert!(e.is_idle());
+        assert_eq!(e.kv_bytes(), 0, "pool must drain");
+    }
+
+    #[test]
+    fn batched_requests_all_complete_deterministically() {
+        let mut e = engine(Box::new(QRazor::w4a4kv4(16)));
+        for i in 0..6 {
+            e.submit(vec![1 + i, 2, 3, 4], 5, Sampling::Greedy);
+        }
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|r| r.tokens.len() == 5));
+        // same prompts via a fresh engine give identical outputs (greedy)
+        let mut e2 = engine(Box::new(QRazor::w4a4kv4(16)));
+        for i in 0..6 {
+            e2.submit(vec![1 + i, 2, 3, 4], 5, Sampling::Greedy);
+        }
+        let out2 = e2.run_to_completion();
+        for (a, b) in out.iter().zip(&out2) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn batched_equals_sequential_greedy() {
+        // continuous batching must not change any sequence's output
+        let prompts: Vec<Vec<u32>> = vec![vec![5, 6, 7], vec![9, 2], vec![1, 1, 1, 1]];
+        let mut batched = engine(Box::new(Fp16));
+        for p in &prompts {
+            batched.submit(p.clone(), 4, Sampling::Greedy);
+        }
+        let mut got: Vec<_> = batched.run_to_completion();
+        got.sort_by_key(|r| r.id);
+        for (p, r) in prompts.iter().zip(&got) {
+            let mut solo = engine(Box::new(Fp16));
+            solo.submit(p.clone(), 4, Sampling::Greedy);
+            let s = solo.run_to_completion();
+            assert_eq!(s[0].tokens, r.tokens, "prompt {p:?}");
+        }
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early() {
+        let mut e = engine(Box::new(Fp16));
+        // find which token greedy decoding produces first, then use it
+        // as the stop token of a second identical request
+        let _ = e.submit(vec![3, 4, 5], 6, Sampling::Greedy);
+        let first = e.run_to_completion()[0].tokens[0];
+        let mut e = engine(Box::new(Fp16));
+        let id = e.submit(vec![3, 4, 5], 6, Sampling::Greedy);
+        // set stop token by re-pushing with the field set
+        // (public API: modify via batcher before running)
+        // simplest: drain and re-add
+        let _ = id;
+        let mut req = Request::new(RequestId(99), vec![3, 4, 5], 6);
+        req.stop_token = Some(first);
+        e.submit_request(req);
+        let out = e.run_to_completion();
+        let stopped = out.iter().find(|r| r.id == RequestId(99)).unwrap();
+        assert_eq!(stopped.tokens.len(), 1);
+        assert_eq!(stopped.finish, FinishReason::StopToken);
+    }
+
+    #[test]
+    fn kv_backpressure_delays_but_completes() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 5);
+        let mut rng = Rng::new(6);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let qm = crate::model::quantized::QuantModel::build(&w, Box::new(Fp16), &cal);
+        // tiny pool: only one request fits at a time (3+4=7 tokens)
+        let mut e = Engine::new(
+            qm,
+            ServeConfig { max_batch: 4, max_new_tokens: 8, kv_pool_tokens: 8, ..Default::default() },
+        );
+        for _ in 0..3 {
+            e.submit(vec![1, 2, 3], 4, Sampling::Greedy);
+        }
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 3, "all complete despite backpressure");
+    }
+
+    #[test]
+    fn temperature_sampling_is_seeded_deterministic() {
+        let run = |seed| {
+            let mut e = engine(Box::new(Fp16));
+            e.submit(vec![2, 3], 6, Sampling::Temperature { temp: 1.0, seed });
+            e.run_to_completion()[0].tokens.clone()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

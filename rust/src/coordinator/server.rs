@@ -1,0 +1,169 @@
+//! Threaded serving front-end: a worker thread owns the [`Engine`];
+//! clients submit from any thread over a channel and receive
+//! completions on a response channel. (The vendored dependency set has
+//! no tokio, so this is plain `std::thread` + `mpsc` — adequate for a
+//! CPU-bound engine where the model step dominates.)
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::config::ServeConfig;
+use crate::coordinator::request::{RequestId, Response, Sampling};
+use crate::coordinator::scheduler::Engine;
+use crate::model::quantized::QuantModel;
+
+enum Msg {
+    Submit {
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampling: Sampling,
+        reply: mpsc::Sender<RequestId>,
+    },
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    completions: mpsc::Receiver<Response>,
+    worker: Option<JoinHandle<String>>,
+}
+
+impl Server {
+    /// Spawn the engine on a worker thread.
+    pub fn spawn(model: QuantModel, config: ServeConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (done_tx, done_rx) = mpsc::channel::<Response>();
+        let worker = std::thread::spawn(move || {
+            let mut engine = Engine::new(model, config);
+            loop {
+                // drain control messages (non-blocking when busy,
+                // blocking when idle so we don't spin)
+                let msg = if engine.is_idle() {
+                    match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(m) => Some(m),
+                        Err(mpsc::TryRecvError::Empty) => None,
+                        Err(mpsc::TryRecvError::Disconnected) => break,
+                    }
+                };
+                match msg {
+                    Some(Msg::Submit { prompt, max_new, sampling, reply }) => {
+                        let id = engine.submit(prompt, max_new, sampling);
+                        let _ = reply.send(id);
+                        continue; // keep draining submissions first
+                    }
+                    Some(Msg::Shutdown) => {
+                        // finish in-flight work before exiting
+                        while !engine.is_idle() {
+                            engine.step();
+                            for r in engine.take_completed() {
+                                let _ = done_tx.send(r);
+                            }
+                        }
+                        break;
+                    }
+                    None => {}
+                }
+                if !engine.is_idle() {
+                    engine.step();
+                    for r in engine.take_completed() {
+                        let _ = done_tx.send(r);
+                    }
+                }
+            }
+            engine.metrics.render()
+        });
+        Server { tx, completions: done_rx, worker: Some(worker) }
+    }
+
+    /// Submit a request; blocks briefly for the assigned id.
+    pub fn submit(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampling: Sampling,
+    ) -> anyhow::Result<RequestId> {
+        let (reply, get) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit { prompt, max_new, sampling, reply })
+            .map_err(|_| anyhow::anyhow!("server worker gone"))?;
+        get.recv().map_err(|_| anyhow::anyhow!("server worker gone"))
+    }
+
+    /// Block for the next completion.
+    pub fn next_completion(&self) -> anyhow::Result<Response> {
+        self.completions
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker gone"))
+    }
+
+    /// Shut down, finishing in-flight requests; returns the metrics
+    /// summary line.
+    pub fn shutdown(mut self) -> String {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker
+            .take()
+            .map(|w| w.join().unwrap_or_else(|_| "worker panicked".into()))
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::QRazor;
+    use crate::config::ModelConfig;
+    use crate::model::quantized::calibrate;
+    use crate::model::ModelWeights;
+    use crate::util::rng::Rng;
+
+    fn model() -> QuantModel {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 8);
+        let mut rng = Rng::new(9);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal)
+    }
+
+    #[test]
+    fn threaded_server_round_trip() {
+        let server = Server::spawn(model(), ServeConfig { max_new_tokens: 4, ..Default::default() });
+        let id1 = server.submit(vec![1, 2, 3], 3, Sampling::Greedy).unwrap();
+        let id2 = server.submit(vec![4, 5], 3, Sampling::Greedy).unwrap();
+        assert_ne!(id1, id2);
+        let mut got = vec![server.next_completion().unwrap(), server.next_completion().unwrap()];
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got[0].id, id1);
+        assert_eq!(got[0].tokens.len(), 3);
+        assert_eq!(got[1].tokens.len(), 3);
+        let summary = server.shutdown();
+        assert!(summary.contains("2/2 done"), "{summary}");
+    }
+
+    #[test]
+    fn shutdown_finishes_inflight() {
+        let server = Server::spawn(model(), ServeConfig::default());
+        for i in 0..4 {
+            server.submit(vec![i + 1, 2], 4, Sampling::Greedy).unwrap();
+        }
+        let summary = server.shutdown();
+        assert!(summary.contains("4/4 done"), "{summary}");
+    }
+}

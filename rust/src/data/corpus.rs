@@ -1,0 +1,275 @@
+//! Synthetic corpora standing in for WikiText-2 and Lambada-OpenAI.
+//!
+//! * [`wiki_corpus`] — a Zipf-distributed topic-Markov word model:
+//!   word frequencies follow a power law, word order follows per-topic
+//!   bigram tendencies, sentences and paragraphs have realistic length
+//!   distributions. Learnable structure at several scales, like
+//!   encyclopedic text. Used for calibration and the main perplexity
+//!   column.
+//! * [`lambada_corpus`] — long-range-dependency passages: a protagonist
+//!   noun is introduced early and *must* be the final word of the
+//!   passage (the Lambada task construction), so models are rewarded
+//!   for carrying context across the whole sequence — the regime where
+//!   KV-cache quantization error shows up.
+//!
+//! Both are deterministic in the seed; different seeds give disjoint
+//! train/eval splits.
+
+use crate::util::rng::Rng;
+
+/// A synthetic vocabulary of pronounceable words, deterministic.
+pub fn make_word_list(n: usize, rng: &mut Rng) -> Vec<String> {
+    const ONSETS: &[&str] = &[
+        "b", "br", "c", "ch", "d", "dr", "f", "fl", "g", "gr", "h", "j", "k", "l", "m", "n",
+        "p", "pl", "pr", "qu", "r", "s", "sh", "sl", "st", "t", "th", "tr", "v", "w", "z",
+    ];
+    const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ou"];
+    const CODAS: &[&str] = &["", "n", "r", "s", "t", "l", "m", "nd", "st", "ck"];
+    let mut words = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::new();
+    while words.len() < n {
+        let syllables = 1 + rng.index(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push_str(*rng.choose(ONSETS));
+            w.push_str(*rng.choose(VOWELS));
+        }
+        w.push_str(*rng.choose(CODAS));
+        if seen.insert(w.clone()) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// The shared synthetic vocabulary for a world seed — both corpora and
+/// the task generators draw from it so train/eval/task text live in one
+/// distribution (splitting one corpus replaces WikiText's train/valid
+/// split).
+pub fn world_words(seed: u64) -> Vec<String> {
+    make_word_list(2_000, &mut Rng::new(seed).split(1))
+}
+
+/// Zipf-Markov "wiki" corpus: `n_words` total words of text.
+pub fn wiki_corpus(n_words: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let vocab_n = 2_000;
+    let words = world_words(seed);
+    let n_topics = 16;
+    // per-topic preferred successor offsets: crude bigram structure
+    let topic_shift: Vec<usize> = (0..n_topics).map(|_| rng.index(vocab_n)).collect();
+    let mut out = String::new();
+    let mut topic = rng.index(n_topics);
+    let mut prev_rank = rng.zipf(vocab_n, 1.1);
+    let mut words_emitted = 0;
+    let mut sentence_len = 0;
+    let mut para_sentences = 0;
+    while words_emitted < n_words {
+        // topic drift at paragraph boundaries
+        let rank = if rng.chance(0.85) {
+            // bigram-ish: successor strongly correlated with prev via
+            // the topic shift — low conditional entropy so small models
+            // learn real structure (tasks stay discriminative)
+            (prev_rank + topic_shift[topic] + rng.zipf(12, 1.4)) % vocab_n
+        } else {
+            rng.zipf(vocab_n, 1.1)
+        };
+        out.push_str(&words[rank]);
+        words_emitted += 1;
+        sentence_len += 1;
+        prev_rank = rank;
+        let end_sentence = sentence_len >= 4 && rng.chance(0.18);
+        if end_sentence {
+            out.push('.');
+            sentence_len = 0;
+            para_sentences += 1;
+            if para_sentences >= 3 && rng.chance(0.3) {
+                out.push('\n');
+                para_sentences = 0;
+                topic = rng.index(n_topics);
+            } else {
+                out.push(' ');
+            }
+        } else {
+            out.push(' ');
+        }
+    }
+    out
+}
+
+/// One Lambada-style passage: protagonist introduced early, repeated in
+/// the middle, and required as the final word.
+pub fn lambada_passage(rng: &mut Rng, words: &[String]) -> String {
+    let protagonist = rng.choose(words).clone();
+    let mut s = String::new();
+    let intro_len = 6 + rng.index(6);
+    for _ in 0..intro_len {
+        s.push_str(&words[rng.zipf(words.len(), 1.05)]);
+        s.push(' ');
+    }
+    s.push_str(&protagonist);
+    s.push_str(". ");
+    // middle: mention the protagonist again among distractors
+    let mid_sentences = 2 + rng.index(3);
+    for _ in 0..mid_sentences {
+        let len = 5 + rng.index(5);
+        for i in 0..len {
+            if i == len / 2 && rng.chance(0.6) {
+                s.push_str(&protagonist);
+            } else {
+                s.push_str(&words[rng.zipf(words.len(), 1.05)]);
+            }
+            s.push(' ');
+        }
+        s.push_str(". ");
+    }
+    // final sentence ends with the protagonist (the prediction target)
+    let tail = 4 + rng.index(4);
+    for _ in 0..tail {
+        s.push_str(&words[rng.zipf(words.len(), 1.05)]);
+        s.push(' ');
+    }
+    s.push_str(&protagonist);
+    s.push('.');
+    s
+}
+
+/// Lambada-style corpus of `n_passages` passages drawn from the world
+/// vocabulary of `world_seed` (so a model trained on the wiki corpus
+/// shares its token distribution); `seed` varies the passages.
+pub fn lambada_corpus(n_passages: usize, world_seed: u64, seed: u64) -> String {
+    let mut rng = Rng::new(seed ^ 0x1A3BADA);
+    // the head of the world vocabulary = the frequent words
+    let words: Vec<String> = world_words(world_seed).into_iter().take(400).collect();
+    let mut out = String::new();
+    for _ in 0..n_passages {
+        out.push_str(&lambada_passage(&mut rng, &words));
+        out.push('\n');
+    }
+    out
+}
+
+/// Split a corpus into train/eval texts at a word boundary
+/// (`eval_frac` of the words go to eval — the WikiText-style split).
+pub fn split_corpus(text: &str, eval_frac: f64) -> (String, String) {
+    let words: Vec<&str> = text.split_inclusive(' ').collect();
+    let cut = ((words.len() as f64) * (1.0 - eval_frac)) as usize;
+    (words[..cut].concat(), words[cut..].concat())
+}
+
+/// Pack a token stream into fixed-length training sequences.
+pub fn pack_sequences(tokens: &[u32], seq_len: usize) -> Vec<Vec<u32>> {
+    tokens
+        .chunks(seq_len)
+        .filter(|c| c.len() == seq_len)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_list_unique_and_sized() {
+        let mut rng = Rng::new(1);
+        let words = make_word_list(500, &mut rng);
+        assert_eq!(words.len(), 500);
+        let set: std::collections::HashSet<_> = words.iter().collect();
+        assert_eq!(set.len(), 500);
+        assert!(words.iter().all(|w| !w.is_empty() && w.is_ascii()));
+    }
+
+    #[test]
+    fn wiki_corpus_deterministic_and_sized() {
+        let a = wiki_corpus(500, 42);
+        let b = wiki_corpus(500, 42);
+        assert_eq!(a, b);
+        let c = wiki_corpus(500, 43);
+        assert_ne!(a, c);
+        let n_words = a.split_whitespace().count();
+        assert!((450..650).contains(&n_words), "{n_words} words");
+    }
+
+    #[test]
+    fn wiki_corpus_is_zipfian() {
+        let text = wiki_corpus(20_000, 7);
+        let mut counts: std::collections::HashMap<&str, usize> = Default::default();
+        for w in text.split_whitespace() {
+            let w = w.trim_end_matches(['.', '\n']);
+            if !w.is_empty() {
+                *counts.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // head token should be far more frequent than the 100th
+        assert!(freqs[0] > freqs.get(100).copied().unwrap_or(1) * 5);
+    }
+
+    #[test]
+    fn lambada_passages_end_with_repeated_word() {
+        let mut rng = Rng::new(3);
+        let words = make_word_list(200, &mut rng.split(1));
+        for _ in 0..20 {
+            let p = lambada_passage(&mut rng, &words);
+            let last = p
+                .trim_end_matches('.')
+                .split_whitespace()
+                .last()
+                .unwrap()
+                .to_string();
+            // final word must appear earlier in the passage too
+            let earlier = p[..p.len() - last.len() - 1].contains(&last);
+            assert!(earlier, "passage {p}");
+        }
+    }
+
+    #[test]
+    fn pack_sequences_drops_ragged_tail() {
+        let toks: Vec<u32> = (0..105).collect();
+        let seqs = pack_sequences(&toks, 32);
+        assert_eq!(seqs.len(), 3);
+        assert!(seqs.iter().all(|s| s.len() == 32));
+        assert_eq!(seqs[2][31], 95);
+    }
+
+    #[test]
+    fn split_corpus_partitions_words() {
+        let text = wiki_corpus(2_000, 3);
+        let (train, eval) = split_corpus(&text, 0.25);
+        assert!(!train.is_empty() && !eval.is_empty());
+        let n = |s: &str| s.split_whitespace().count();
+        let frac = n(&eval) as f64 / (n(&train) + n(&eval)) as f64;
+        assert!((0.2..0.3).contains(&frac), "eval frac {frac}");
+    }
+
+    #[test]
+    fn lambada_shares_world_vocabulary() {
+        let wiki = wiki_corpus(3_000, 9);
+        let lam = lambada_corpus(10, 9, 1);
+        let wiki_words: std::collections::HashSet<&str> = wiki
+            .split_whitespace()
+            .map(|w| w.trim_end_matches(['.', '\n']))
+            .collect();
+        let total = lam.split_whitespace().count();
+        let shared = lam
+            .split_whitespace()
+            .map(|w| w.trim_end_matches(['.', '\n']))
+            .filter(|w| wiki_words.contains(w))
+            .count();
+        assert!(
+            shared as f64 / total as f64 > 0.6,
+            "only {shared}/{total} lambada words in wiki vocab"
+        );
+    }
+
+    #[test]
+    fn corpora_are_tokenizable() {
+        let text = wiki_corpus(2_000, 11);
+        let tok = crate::data::tokenizer::Tokenizer::train(&text[..text.len().min(4000)], 512);
+        let ids = tok.encode(&text[..500.min(text.len())]);
+        assert!(!ids.is_empty());
+        assert!(ids.iter().all(|&i| (i as usize) < tok.vocab_size()));
+    }
+}

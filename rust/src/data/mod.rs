@@ -1,0 +1,10 @@
+//! Data substrate: synthetic corpora and the tokenizer.
+//!
+//! The paper calibrates and evaluates on WikiText-2 and Lambada-OpenAI;
+//! neither is available offline, so [`corpus`] synthesizes two
+//! distributionally distinct stand-ins (documented in DESIGN.md §1) and
+//! [`tokenizer`] provides a BPE-lite tokenizer trained on them. All
+//! generation is seed-deterministic.
+
+pub mod corpus;
+pub mod tokenizer;

@@ -1,0 +1,275 @@
+//! Shared experiment harness used by every `benches/table*` driver and
+//! the examples: acquire a *trained* model (training runs once through
+//! the PJRT `train_step` artifact and is checkpointed under
+//! `artifacts/<preset>/`), build corpora/tokenizer/tasks, calibrate,
+//! and evaluate any list of quantization schemes through the identical
+//! pipeline — the property that makes the table rows comparable.
+
+use std::path::PathBuf;
+
+use crate::baselines::Scheme;
+use crate::config::ModelConfig;
+use crate::data::corpus::{lambada_corpus, pack_sequences, split_corpus, wiki_corpus};
+use crate::data::tokenizer::Tokenizer;
+use crate::eval::perplexity::perplexity;
+use crate::eval::tasks::{accuracy, build_suite, Task};
+use crate::model::quantized::{calibrate, CalibrationData, QuantModel};
+use crate::model::{checkpoint, FpModel, LanguageModel, ModelWeights};
+
+/// Evaluation scale knobs; `quick()` keeps CI fast, `full()` is the
+/// EXPERIMENTS.md configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalScale {
+    pub train_steps: usize,
+    pub calib_seqs: usize,
+    pub eval_seqs: usize,
+    pub eval_seq_len: usize,
+    pub task_items: usize,
+}
+
+impl EvalScale {
+    pub fn full() -> EvalScale {
+        EvalScale {
+            train_steps: 600,
+            calib_seqs: 32,
+            eval_seqs: 16,
+            // matches the train_step sequence length — RoPE positions
+            // beyond the trained range would confound the comparison
+            eval_seq_len: 64,
+            task_items: 16,
+        }
+    }
+
+    pub fn quick() -> EvalScale {
+        EvalScale {
+            train_steps: 40,
+            calib_seqs: 8,
+            eval_seqs: 6,
+            eval_seq_len: 48,
+            task_items: 8,
+        }
+    }
+
+    /// `full()` unless `QRAZOR_BENCH_QUICK` is set.
+    pub fn from_env() -> EvalScale {
+        if std::env::var("QRAZOR_BENCH_QUICK").is_ok() {
+            EvalScale::quick()
+        } else {
+            EvalScale::full()
+        }
+    }
+}
+
+/// Everything a table bench needs.
+pub struct Experiment {
+    pub config: ModelConfig,
+    pub weights: ModelWeights,
+    pub cal: CalibrationData,
+    pub tokenizer: Tokenizer,
+    /// WikiText-2 stand-in evaluation sequences (held-out seed).
+    pub wiki_seqs: Vec<Vec<u32>>,
+    /// Lambada stand-in evaluation sequences.
+    pub lambada_seqs: Vec<Vec<u32>>,
+    pub tasks: Vec<Task>,
+    pub scale: EvalScale,
+}
+
+fn artifacts_root() -> PathBuf {
+    std::env::var("QRAZOR_ARTIFACTS_ROOT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Load the checkpoint for `preset` if present, otherwise train through
+/// the PJRT `train_step` artifact and checkpoint the result. Fails if
+/// the artifacts for the preset were never generated (`make artifacts`).
+pub fn trained_weights(
+    preset: &str,
+    scale: EvalScale,
+    seed: u64,
+) -> anyhow::Result<(ModelWeights, Vec<f32>)> {
+    let cfg = ModelConfig::preset(preset)?;
+    let dir = artifacts_root().join(preset);
+    let ckpt = dir.join(format!("model-s{}-t{}.qrzc", seed, scale.train_steps));
+    if ckpt.exists() {
+        return Ok((checkpoint::load_model(&ckpt, &cfg)?, Vec::new()));
+    }
+    let manifest = crate::runtime::Manifest::load(&dir).map_err(|e| {
+        anyhow::anyhow!("no artifacts for preset '{preset}' ({e}); run `make artifacts`")
+    })?;
+    anyhow::ensure!(manifest.model == cfg, "artifact model config mismatch");
+    let rt = crate::runtime::Runtime::cpu()?;
+    // train split of the world corpus (eval split held out in
+    // build_experiment — same distribution, disjoint text)
+    let world = wiki_corpus(80_000, world_seed(seed));
+    let (train_text, _eval) = split_corpus(&world, 0.2);
+    let tok = train_tokenizer(&cfg, &train_text);
+    let tokens = tok.encode(&train_text);
+    let out = crate::runtime::trainer::train_on_corpus(
+        &rt,
+        &manifest,
+        &tokens,
+        scale.train_steps,
+        seed,
+        |s, l| {
+            if s % 50 == 0 {
+                eprintln!("  train step {s}: loss {l:.3}");
+            }
+        },
+    )?;
+    checkpoint::save_model(&ckpt, &out.weights)?;
+    Ok((out.weights, out.losses))
+}
+
+/// Tokenizer sized to the model's vocabulary (byte-level for vocab 256).
+pub fn train_tokenizer(cfg: &ModelConfig, text: &str) -> Tokenizer {
+    let sample = &text[..text.len().min(30_000)];
+    Tokenizer::train(sample, cfg.vocab)
+}
+
+fn world_seed(seed: u64) -> u64 {
+    seed ^ 0x517A1
+}
+
+/// Build the full experiment for a preset (trains if needed).
+pub fn build_experiment(preset: &str, scale: EvalScale, seed: u64) -> anyhow::Result<Experiment> {
+    let cfg = ModelConfig::preset(preset)?;
+    let (weights, _losses) = trained_weights(preset, scale, seed)?;
+    // one world corpus; train on the head, evaluate on the held-out
+    // tail (the WikiText-2 train/validation arrangement)
+    let world = wiki_corpus(80_000, world_seed(seed));
+    let (train_text, eval_text) = split_corpus(&world, 0.2);
+    let tokenizer = train_tokenizer(&cfg, &train_text);
+
+    let wiki_tokens = tokenizer.encode(&eval_text);
+    let wiki_seqs: Vec<Vec<u32>> = pack_sequences(&wiki_tokens, scale.eval_seq_len)
+        .into_iter()
+        .take(scale.eval_seqs)
+        .collect();
+    let lam_text = lambada_corpus(scale.eval_seqs * 3, world_seed(seed), seed ^ 0x1AB);
+    let lam_tokens = tokenizer.encode(&lam_text);
+    let lambada_seqs: Vec<Vec<u32>> = pack_sequences(&lam_tokens, scale.eval_seq_len)
+        .into_iter()
+        .take(scale.eval_seqs)
+        .collect();
+    anyhow::ensure!(!wiki_seqs.is_empty() && !lambada_seqs.is_empty(), "eval corpora empty");
+
+    // calibration on the paper's recipe: random samples from the train
+    // split (128 in the paper; scale.calib_seqs here)
+    let calib_tokens = tokenizer.encode(&train_text[..train_text.len().min(40_000)]);
+    let calib_seqs: Vec<Vec<u32>> = pack_sequences(&calib_tokens, scale.eval_seq_len)
+        .into_iter()
+        .take(scale.calib_seqs)
+        .collect();
+    let cal = calibrate(&weights, &calib_seqs);
+
+    let tasks = build_suite(&eval_text, &tokenizer, scale.task_items, world_seed(seed), seed ^ 0x7A53);
+    Ok(Experiment {
+        config: cfg,
+        weights,
+        cal,
+        tokenizer,
+        wiki_seqs,
+        lambada_seqs,
+        tasks,
+        scale,
+    })
+}
+
+/// One scheme's results across the standard metric set.
+#[derive(Clone, Debug)]
+pub struct SchemeResult {
+    pub name: String,
+    pub ppl_wiki: f64,
+    pub ppl_lambada: f64,
+    pub task_acc: Vec<(String, f64)>,
+    pub avg_acc: f64,
+}
+
+impl Experiment {
+    /// Evaluate the FP reference (the tables' first row).
+    pub fn eval_fp(&self) -> SchemeResult {
+        let model = FpModel { weights: self.weights.clone() };
+        self.eval_model(&model, "FP16 (f32 ref)")
+    }
+
+    /// Quantize under `scheme` and run the full metric set.
+    pub fn eval_scheme(&self, scheme: Box<dyn Scheme>) -> SchemeResult {
+        let qm = QuantModel::build(&self.weights, scheme, &self.cal);
+        let name = qm.name();
+        self.eval_model(&qm, &name)
+    }
+
+    fn eval_model(&self, model: &dyn LanguageModel, name: &str) -> SchemeResult {
+        let ppl_wiki = perplexity(model, &self.wiki_seqs);
+        let ppl_lambada = perplexity(model, &self.lambada_seqs);
+        let mut task_acc = Vec::new();
+        let mut sum = 0.0;
+        for t in &self.tasks {
+            let acc = accuracy(model, t);
+            sum += acc;
+            task_acc.push((t.name.to_string(), acc));
+        }
+        SchemeResult {
+            name: name.to_string(),
+            ppl_wiki,
+            ppl_lambada,
+            task_acc,
+            avg_acc: sum / self.tasks.len() as f64,
+        }
+    }
+}
+
+/// Render a block of rows as the paper-style table.
+pub fn render_table(title: &str, rows: &[SchemeResult]) -> String {
+    let mut s = format!("\n=== {title} ===\n");
+    s.push_str(&format!(
+        "{:<28} {:>9} {:>9}",
+        "Method", "Wiki-PPL", "Lam-PPL"
+    ));
+    if let Some(r0) = rows.first() {
+        for (tname, _) in &r0.task_acc {
+            s.push_str(&format!(" {:>14}", tname));
+        }
+    }
+    s.push_str(&format!(" {:>7}\n", "Avg"));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<28} {:>9.3} {:>9.3}",
+            r.name, r.ppl_wiki, r.ppl_lambada
+        ));
+        for (_, acc) in &r.task_acc {
+            s.push_str(&format!(" {:>14.2}", acc));
+        }
+        s.push_str(&format!(" {:>7.2}\n", r.avg_acc));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_resolve() {
+        let f = EvalScale::full();
+        let q = EvalScale::quick();
+        assert!(f.train_steps > q.train_steps);
+        assert!(f.task_items > q.task_items);
+    }
+
+    #[test]
+    fn render_table_formats() {
+        let rows = vec![SchemeResult {
+            name: "FP16".into(),
+            ppl_wiki: 5.47,
+            ppl_lambada: 3.4,
+            task_acc: vec![("piqa-syn".into(), 79.1)],
+            avg_acc: 79.1,
+        }];
+        let t = render_table("Table 2", &rows);
+        assert!(t.contains("FP16"));
+        assert!(t.contains("5.470"));
+        assert!(t.contains("piqa-syn"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Evaluation harness — the lm-evaluation-harness substitute.
+//!
+//! [`perplexity`] computes teacher-forced perplexity over packed
+//! sequences (the paper's WikiText-2 / Lambada columns); [`tasks`]
+//! scores five synthetic zero-shot multiple-choice tasks with the same
+//! length-normalized log-likelihood rule lm-eval uses for PIQA/ARC/
+//! HellaSwag/Winogrande. Both consume any
+//! [`crate::model::LanguageModel`], so every scheme runs through an
+//! identical pipeline.
+
+pub mod harness;
+pub mod perplexity;
+pub mod tasks;
+
+pub use perplexity::*;
+pub use tasks::*;

@@ -1,0 +1,135 @@
+//! Teacher-forced perplexity.
+//!
+//! `ppl = exp( − mean over positions of log p(token_{t+1} | tokens_{≤t}) )`,
+//! averaged across evaluation sequences. Sequences are evaluated in
+//! parallel (they are independent), which is where the eval harness
+//! spends its time.
+
+use crate::model::LanguageModel;
+use crate::tensor::log_softmax_rows;
+use crate::util::threadpool::parallel_map;
+
+/// Sum of negative log-likelihoods and token count for one sequence.
+pub fn sequence_nll(model: &dyn LanguageModel, tokens: &[u32]) -> (f64, usize) {
+    assert!(tokens.len() >= 2, "need at least 2 tokens");
+    let logits = model.full_logits(tokens);
+    let logp = log_softmax_rows(&logits);
+    let mut nll = 0f64;
+    for t in 0..tokens.len() - 1 {
+        let next = tokens[t + 1] as usize;
+        nll -= logp.at(&[t, next]) as f64;
+    }
+    (nll, tokens.len() - 1)
+}
+
+/// Perplexity over a set of sequences.
+pub fn perplexity(model: &dyn LanguageModel, sequences: &[Vec<u32>]) -> f64 {
+    assert!(!sequences.is_empty());
+    let results = parallel_map(sequences.len(), |i| sequence_nll(model, &sequences[i]));
+    let (nll, count) = results
+        .iter()
+        .fold((0f64, 0usize), |(a, b), &(n, c)| (a + n, b + c));
+    (nll / count as f64).exp()
+}
+
+/// Log-likelihood of a continuation given a prefix (the lm-eval scoring
+/// primitive): sum of log p over the continuation tokens only.
+pub fn continuation_loglik(model: &dyn LanguageModel, prefix: &[u32], cont: &[u32]) -> f64 {
+    assert!(!prefix.is_empty() && !cont.is_empty());
+    let mut full = prefix.to_vec();
+    full.extend_from_slice(cont);
+    let logits = model.full_logits(&full);
+    let logp = log_softmax_rows(&logits);
+    let mut ll = 0f64;
+    for (i, &tok) in cont.iter().enumerate() {
+        // token cont[i] is predicted at position prefix.len()+i-1
+        let pos = prefix.len() + i - 1;
+        ll += logp.at(&[pos, tok as usize]) as f64;
+    }
+    ll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{FpModel, ModelWeights};
+    use crate::tensor::Tensor;
+
+    /// A fixed-distribution dummy model: logits independent of input,
+    /// so the perplexity is known in closed form.
+    struct UniformModel {
+        cfg: ModelConfig,
+    }
+
+    impl LanguageModel for UniformModel {
+        fn config(&self) -> &ModelConfig {
+            &self.cfg
+        }
+        fn full_logits(&self, tokens: &[u32]) -> Tensor<f32> {
+            Tensor::zeros(&[tokens.len(), self.cfg.vocab])
+        }
+        fn name(&self) -> String {
+            "uniform".into()
+        }
+    }
+
+    #[test]
+    fn uniform_model_ppl_equals_vocab() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let vocab = cfg.vocab as f64;
+        let m = UniformModel { cfg };
+        let seqs = vec![vec![1u32, 2, 3, 4, 5], vec![9, 8, 7]];
+        let ppl = perplexity(&m, &seqs);
+        assert!((ppl - vocab).abs() / vocab < 1e-5, "ppl={ppl}");
+    }
+
+    #[test]
+    fn real_model_ppl_finite_and_above_one() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let m = FpModel { weights: ModelWeights::init_random(&cfg, 4) };
+        let seqs = vec![vec![1u32, 5, 9, 13, 2, 6], vec![3u32, 3, 3, 3]];
+        let ppl = perplexity(&m, &seqs);
+        assert!(ppl.is_finite() && ppl > 1.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn continuation_loglik_is_negative_and_additive() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let m = UniformModel { cfg: cfg.clone() };
+        let ll1 = continuation_loglik(&m, &[1, 2], &[3]);
+        let ll2 = continuation_loglik(&m, &[1, 2], &[3, 4]);
+        let logv = (cfg.vocab as f64).ln();
+        assert!((ll1 + logv).abs() < 1e-5);
+        assert!((ll2 + 2.0 * logv).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ppl_of_predictable_sequence_lower_for_better_model() {
+        // A model that puts high mass on token 0 scores better on
+        // all-zero sequences than the uniform model.
+        struct BiasedModel {
+            cfg: ModelConfig,
+        }
+        impl LanguageModel for BiasedModel {
+            fn config(&self) -> &ModelConfig {
+                &self.cfg
+            }
+            fn full_logits(&self, tokens: &[u32]) -> Tensor<f32> {
+                let mut t = Tensor::zeros(&[tokens.len(), self.cfg.vocab]);
+                for i in 0..tokens.len() {
+                    t.set(&[i, 0], 5.0);
+                }
+                t
+            }
+            fn name(&self) -> String {
+                "biased".into()
+            }
+        }
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let seqs = vec![vec![0u32; 16]];
+        let ppl_u = perplexity(&UniformModel { cfg: cfg.clone() }, &seqs);
+        let ppl_b = perplexity(&BiasedModel { cfg }, &seqs);
+        assert!(ppl_b < ppl_u / 10.0, "{ppl_b} vs {ppl_u}");
+    }
+}

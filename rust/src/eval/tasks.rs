@@ -1,0 +1,285 @@
+//! Synthetic zero-shot task suite — the stand-in for PIQA, ARC-e,
+//! ARC-c, HellaSwag and Winogrande.
+//!
+//! Each task is a set of multiple-choice items scored exactly the way
+//! lm-evaluation-harness scores the real ones: pick the choice with the
+//! highest *length-normalized* continuation log-likelihood. Items are
+//! built from the synthetic corpora so the "correct" choice is the one
+//! consistent with corpus statistics (or, for the winogrande analog,
+//! with long-range coreference). Quantization noise perturbs logits and
+//! lowers accuracy — the same mechanism the paper measures.
+
+use crate::data::corpus;
+use crate::data::tokenizer::Tokenizer;
+use crate::eval::perplexity::continuation_loglik;
+use crate::model::LanguageModel;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// One multiple-choice item: token-level prefix + candidate continuations.
+#[derive(Clone, Debug)]
+pub struct Item {
+    pub prefix: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+/// A named task = a bag of items.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: &'static str,
+    pub items: Vec<Item>,
+}
+
+/// Accuracy of a model on a task (length-normalized loglik argmax).
+pub fn accuracy(model: &dyn LanguageModel, task: &Task) -> f64 {
+    let correct: usize = parallel_map(task.items.len(), |i| {
+        let item = &task.items[i];
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (c, choice) in item.choices.iter().enumerate() {
+            let ll = continuation_loglik(model, &item.prefix, choice) / choice.len() as f64;
+            if ll > best.0 {
+                best = (ll, c);
+            }
+        }
+        usize::from(best.1 == item.answer)
+    })
+    .into_iter()
+    .sum();
+    100.0 * correct as f64 / task.items.len() as f64
+}
+
+fn encode_capped(tok: &Tokenizer, text: &str, cap: usize) -> Vec<u32> {
+    let mut ids = tok.encode(text);
+    if ids.len() > cap {
+        ids.drain(..ids.len() - cap);
+    }
+    ids
+}
+
+/// Build all five tasks from a corpus text + tokenizer. `n` items each.
+/// `world_seed` ties the coreference task's nouns to the corpus
+/// vocabulary the model was trained on.
+pub fn build_suite(text: &str, tok: &Tokenizer, n: usize, world_seed: u64, seed: u64) -> Vec<Task> {
+    let sentences: Vec<&str> = text
+        .split('.')
+        .map(|s| s.trim())
+        .filter(|s| s.split_whitespace().count() >= 6)
+        .collect();
+    assert!(sentences.len() >= 16, "corpus too small: {} sentences", sentences.len());
+    let mut rng = Rng::new(seed ^ 0x7A5C);
+    vec![
+        cloze_task("piqa-syn", &sentences, tok, n, &mut rng, 2, false),
+        cloze_task("arc-e-syn", &sentences, tok, n, &mut rng, 4, false),
+        cloze_task("arc-c-syn", &sentences, tok, n, &mut rng, 4, true),
+        continuation_task("hellaswag-syn", &sentences, tok, n, &mut rng),
+        coreference_task("winogrande-syn", tok, n, world_seed, &mut rng),
+    ]
+}
+
+/// Cloze: complete a sentence with its true tail vs distractor tails
+/// from other sentences. `hard` draws distractors from adjacent
+/// sentences (same topic ⇒ harder, the ARC-c analog).
+fn cloze_task(
+    name: &'static str,
+    sentences: &[&str],
+    tok: &Tokenizer,
+    n: usize,
+    rng: &mut Rng,
+    n_choices: usize,
+    hard: bool,
+) -> Task {
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let si = rng.index(sentences.len());
+        let words: Vec<&str> = sentences[si].split_whitespace().collect();
+        let split = words.len() * 2 / 3;
+        let prefix_text = words[..split].join(" ");
+        let true_tail = format!(" {}", words[split..].join(" "));
+        let mut choices = vec![tok.encode(&true_tail)];
+        let mut guard = 0;
+        while choices.len() < n_choices && guard < 100 {
+            guard += 1;
+            let dj = if hard {
+                // nearby sentence: same topical region of the corpus
+                (si + 1 + rng.index(8)) % sentences.len()
+            } else {
+                rng.index(sentences.len())
+            };
+            if dj == si {
+                continue;
+            }
+            let dw: Vec<&str> = sentences[dj].split_whitespace().collect();
+            let take = (words.len() - split).min(dw.len());
+            if take == 0 {
+                continue;
+            }
+            let tail = format!(" {}", dw[dw.len() - take..].join(" "));
+            choices.push(tok.encode(&tail));
+        }
+        if choices.len() < n_choices {
+            continue;
+        }
+        // shuffle answer position deterministically
+        let answer = rng.index(n_choices);
+        choices.swap(0, answer);
+        items.push(Item {
+            prefix: encode_capped(tok, &prefix_text, 48),
+            choices,
+            answer,
+        });
+    }
+    Task { name, items }
+}
+
+/// HellaSwag analog: choose the true *next sentence* after a 2-sentence
+/// context; longer continuations than the cloze tasks.
+fn continuation_task(
+    name: &'static str,
+    sentences: &[&str],
+    tok: &Tokenizer,
+    n: usize,
+    rng: &mut Rng,
+) -> Task {
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let si = rng.index(sentences.len().saturating_sub(3));
+        let context = format!("{}. {}.", sentences[si], sentences[si + 1]);
+        let true_next = format!(" {}.", sentences[si + 2]);
+        let mut choices = vec![tok.encode(&true_next)];
+        let mut guard = 0;
+        while choices.len() < 4 && guard < 50 {
+            guard += 1;
+            let dj = rng.index(sentences.len());
+            if dj.abs_diff(si) <= 2 {
+                continue;
+            }
+            choices.push(tok.encode(&format!(" {}.", sentences[dj])));
+        }
+        if choices.len() < 4 {
+            continue;
+        }
+        let answer = rng.index(4);
+        choices.swap(0, answer);
+        items.push(Item {
+            prefix: encode_capped(tok, &context, 48),
+            choices,
+            answer,
+        });
+    }
+    Task { name, items }
+}
+
+/// Winogrande analog from Lambada-style passages: the final word must be
+/// the protagonist (seen earlier) rather than a distractor noun.
+fn coreference_task(
+    name: &'static str,
+    tok: &Tokenizer,
+    n: usize,
+    world_seed: u64,
+    rng: &mut Rng,
+) -> Task {
+    let words: Vec<String> = corpus::world_words(world_seed).into_iter().take(400).collect();
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let passage = corpus::lambada_passage(rng, &words);
+        // strip the final word — it's the answer
+        let body = passage.trim_end_matches('.');
+        let Some(last_space) = body.rfind(' ') else { continue };
+        let prefix_text = &body[..last_space];
+        let answer_word = &body[last_space..]; // includes leading space
+        let mut distractor = rng.choose(&words).clone();
+        let mut guard = 0;
+        while answer_word.trim() == distractor && guard < 20 {
+            distractor = rng.choose(&words).clone();
+            guard += 1;
+        }
+        let mut choices = vec![tok.encode(answer_word), tok.encode(&format!(" {distractor}"))];
+        let answer = rng.index(2);
+        choices.swap(0, answer);
+        items.push(Item {
+            prefix: encode_capped(tok, prefix_text, 56),
+            choices,
+            answer,
+        });
+    }
+    Task { name, items }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::LanguageModel;
+    use crate::tensor::Tensor;
+
+    fn suite() -> (Vec<Task>, Tokenizer) {
+        let text = corpus::wiki_corpus(6_000, 11);
+        let tok = Tokenizer::train(&text[..8_000.min(text.len())], 512);
+        let tasks = build_suite(&text, &tok, 12, 11, 1);
+        (tasks, tok)
+    }
+
+    #[test]
+    fn suite_has_five_tasks_with_items() {
+        let (tasks, _) = suite();
+        assert_eq!(tasks.len(), 5);
+        for t in &tasks {
+            assert_eq!(t.items.len(), 12, "{}", t.name);
+            for item in &t.items {
+                assert!(!item.prefix.is_empty());
+                assert!(item.answer < item.choices.len());
+                assert!(item.choices.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_distributed() {
+        let (tasks, _) = suite();
+        // answer index must not always be 0 (shuffling works)
+        let nonzero: usize = tasks
+            .iter()
+            .flat_map(|t| &t.items)
+            .filter(|i| i.answer != 0)
+            .count();
+        assert!(nonzero > 5, "answers look unshuffled");
+    }
+
+    /// An oracle model that always prefers the true continuation —
+    /// implemented by remembering the items via closure is impossible
+    /// through the trait, so instead check a uniform model scores near
+    /// chance on the 2-choice task.
+    struct UniformModel {
+        cfg: ModelConfig,
+    }
+    impl LanguageModel for UniformModel {
+        fn config(&self) -> &ModelConfig {
+            &self.cfg
+        }
+        fn full_logits(&self, tokens: &[u32]) -> Tensor<f32> {
+            Tensor::zeros(&[tokens.len(), self.cfg.vocab])
+        }
+        fn name(&self) -> String {
+            "uniform".into()
+        }
+    }
+
+    #[test]
+    fn uniform_model_scores_near_chance() {
+        let text = corpus::wiki_corpus(6_000, 13);
+        let tok = Tokenizer::train(&text[..8_000.min(text.len())], 512);
+        let tasks = build_suite(&text, &tok, 40, 13, 2);
+        let cfg = ModelConfig {
+            vocab: tok.vocab_size(),
+            ..ModelConfig::preset("nano").unwrap()
+        };
+        let m = UniformModel { cfg };
+        // 2-choice task ≈ 50%, 4-choice ≈ 25%; uniform logits break ties
+        // by choice order so allow wide bands.
+        let acc2 = accuracy(&m, &tasks[0]);
+        let acc4 = accuracy(&m, &tasks[1]);
+        assert!((20.0..80.0).contains(&acc2), "acc2={acc2}");
+        assert!((5.0..60.0).contains(&acc4), "acc4={acc4}");
+    }
+}

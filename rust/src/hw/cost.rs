@@ -1,0 +1,257 @@
+//! Analytical area/power model for MAC units — regenerates Table 5.
+//!
+//! The paper synthesizes Verilog with Synopsys DC on an industrial LP
+//! 65nm library and measures power with PrimeTime PX. Without an EDA
+//! flow, we use the standard pre-synthesis *unit-gate* estimator: every
+//! block is decomposed into gate-equivalents (GE, one 2-input NAND),
+//! scaled by a per-process area constant and an activity-weighted power
+//! constant. The constants below are documented physical ballparks for
+//! a 65nm LP process; the claim this model supports is Table 5's
+//! *ratios* (proposed INT4×4+shifter vs INT16×8 and INT8×8), which are
+//! structural and robust to the constants. The Table 5 bench prints
+//! model vs paper side by side.
+
+/// Gate-equivalent counts for primitive cells.
+const GE_FA: f64 = 6.5; // full adder
+const GE_AND: f64 = 1.4; // partial-product AND2
+const GE_MUX: f64 = 1.8; // 2:1 mux (barrel-shifter stage cell)
+const GE_DFF: f64 = 5.5; // flip-flop bit
+const GE_ADD: f64 = 7.0; // carry-propagate adder bit (incl. carry tree share)
+
+/// 65nm LP area per GE (µm²) — NAND2 footprint incl. routing share.
+const AREA_PER_GE: f64 = 1.40;
+
+/// Dynamic power per GE at the synthesis corner, by block activity
+/// class (mW/GE). Calibrated so the INT16×8 column lands near the
+/// paper's 0.124 mW total; the *relative* activities (multiplier ≫
+/// register ≫ shifter) are the standard assumption.
+const POWER_MULT: f64 = 5.2e-5;
+/// FP multiplier block: higher switching + pipeline clock load.
+const POWER_FPMULT: f64 = 1.6e-4;
+const POWER_SHIFT: f64 = 4.6e-5;
+/// Registers/accumulators burn clock power every cycle regardless of
+/// data activity — the dominant term in narrow units (cf. paper's
+/// 0.0451 of 0.0546 mW for the proposed design).
+const POWER_REG: f64 = 1.7e-4;
+
+/// One structural block of a MAC unit.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub name: &'static str,
+    pub gates: f64,
+    pub power_per_ge: f64,
+}
+
+impl Block {
+    pub fn area_um2(&self) -> f64 {
+        self.gates * AREA_PER_GE
+    }
+
+    pub fn power_mw(&self) -> f64 {
+        self.gates * self.power_per_ge
+    }
+}
+
+/// A complete MAC design: multiplier (+ optional shifter) + reg/accum.
+#[derive(Clone, Debug)]
+pub struct MacDesign {
+    pub name: &'static str,
+    pub multiplier: Block,
+    pub shifter: Option<Block>,
+    pub reg_accum: Block,
+}
+
+impl MacDesign {
+    pub fn area_um2(&self) -> f64 {
+        self.multiplier.area_um2()
+            + self.shifter.as_ref().map(|b| b.area_um2()).unwrap_or(0.0)
+            + self.reg_accum.area_um2()
+    }
+
+    pub fn power_mw(&self) -> f64 {
+        self.multiplier.power_mw()
+            + self.shifter.as_ref().map(|b| b.power_mw()).unwrap_or(0.0)
+            + self.reg_accum.power_mw()
+    }
+}
+
+/// Unsigned array multiplier m×n: (m−1)·n full adders + m·n AND gates.
+pub fn int_multiplier_gates(m: u32, n: u32) -> f64 {
+    ((m - 1) as f64) * (n as f64) * GE_FA + (m as f64) * (n as f64) * GE_AND
+}
+
+/// Barrel shifter: `width` lanes × `stages` mux stages.
+pub fn barrel_shifter_gates(width: u32, stages: u32) -> f64 {
+    (width as f64) * (stages as f64) * GE_MUX
+}
+
+/// Register + accumulator of `width` bits: CPA + DFFs.
+pub fn reg_accum_gates(width: u32) -> f64 {
+    (width as f64) * (GE_ADD + GE_DFF)
+}
+
+/// Integer MAC with an m×n multiplier and accumulator width `acc`.
+pub fn int_mac(name: &'static str, m: u32, n: u32, acc: u32) -> MacDesign {
+    MacDesign {
+        name,
+        multiplier: Block {
+            name: "multiplier",
+            gates: int_multiplier_gates(m, n),
+            power_per_ge: POWER_MULT,
+        },
+        shifter: None,
+        reg_accum: Block {
+            name: "reg+accum",
+            gates: reg_accum_gates(acc),
+            power_per_ge: POWER_REG,
+        },
+    }
+}
+
+/// The proposed decompression-free unit: 4×4 (sign+3-bit) multiplier,
+/// 16-bit barrel shifter (5 stages), and a narrow register/accumulator:
+/// group partials accumulate in an 11-bit register (6-bit product +
+/// log₂g growth); the 32-bit wide accumulator is touched once per group
+/// (amortized ≈ 32/g ≈ 2 bits) plus the shifter's 7-bit output register
+/// — modeled as 20 effective DFF+ADD bits, matching the paper's
+/// observation that the proposed reg+accum is *smaller* than INT8×8's.
+pub fn proposed_int4_mac() -> MacDesign {
+    MacDesign {
+        name: "INT 4x4 proposed",
+        multiplier: Block {
+            name: "multiplier",
+            gates: int_multiplier_gates(4, 4),
+            power_per_ge: POWER_MULT,
+        },
+        shifter: Some(Block {
+            name: "barrel shifter",
+            gates: barrel_shifter_gates(16, 5),
+            power_per_ge: POWER_SHIFT,
+        }),
+        reg_accum: Block {
+            name: "reg+accum",
+            gates: reg_accum_gates(20),
+            power_per_ge: POWER_REG,
+        },
+    }
+}
+
+/// FP16 MAC: 11×11 mantissa array + exponent/normalize/round datapath
+/// (normalization barrel, sticky/round logic, subnormal shifter,
+/// special-case logic, pipeline registers) + an FP16 accumulate path.
+pub fn fp16_mac() -> MacDesign {
+    let mant = int_multiplier_gates(11, 11);
+    let exp_add = 6.0 * GE_ADD;
+    let normalizer = barrel_shifter_gates(22, 5);
+    let subnormal = barrel_shifter_gates(22, 5);
+    let rounding = 120.0;
+    let specials = 160.0;
+    let pipeline = 2.0 * 38.0 * GE_DFF;
+    // FP accumulate: align shifter + 27-bit add + normalize + round + regs
+    let fp_acc = barrel_shifter_gates(27, 5) + 27.0 * GE_ADD + normalizer + 120.0 + 38.0 * GE_DFF;
+    MacDesign {
+        name: "FP 16x16",
+        multiplier: Block {
+            name: "multiplier",
+            gates: mant + exp_add + normalizer + subnormal + rounding + specials + pipeline,
+            power_per_ge: POWER_FPMULT,
+        },
+        shifter: None,
+        reg_accum: Block { name: "reg+accum", gates: fp_acc, power_per_ge: POWER_REG },
+    }
+}
+
+/// The four Table 5 designs in paper order.
+pub fn table5_designs() -> Vec<MacDesign> {
+    vec![
+        fp16_mac(),
+        int_mac("INT 16x8", 16, 8, 32),
+        int_mac("INT 8x8", 8, 8, 24),
+        proposed_int4_mac(),
+    ]
+}
+
+/// The paper's measured values (area µm², power mW) for comparison.
+pub fn table5_paper_reference() -> Vec<(&'static str, f64, f64)> {
+    vec![
+        ("FP 16x16", 4169.3, 0.4620),
+        ("INT 16x8", 1683.2, 0.1239),
+        ("INT 8x8", 990.4, 0.0811),
+        ("INT 4x4 proposed", 653.8, 0.0546),
+    ]
+}
+
+/// Percentage saving of `b` relative to `a`.
+pub fn saving_pct(a: f64, b: f64) -> f64 {
+    100.0 * (1.0 - b / a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_counts_scale_with_width() {
+        assert!(int_multiplier_gates(16, 8) > int_multiplier_gates(8, 8));
+        assert!(int_multiplier_gates(8, 8) > 4.0 * int_multiplier_gates(4, 4) * 0.8);
+    }
+
+    #[test]
+    fn proposed_unit_area_saving_matches_paper_shape() {
+        // Paper: 61.2% vs INT16×8, 34% vs INT8×8.
+        let designs = table5_designs();
+        let a16x8 = designs[1].area_um2();
+        let a8x8 = designs[2].area_um2();
+        let prop = designs[3].area_um2();
+        let s_vs_16x8 = saving_pct(a16x8, prop);
+        let s_vs_8x8 = saving_pct(a8x8, prop);
+        assert!((50.0..72.0).contains(&s_vs_16x8), "vs 16x8: {s_vs_16x8:.1}%");
+        assert!((22.0..46.0).contains(&s_vs_8x8), "vs 8x8: {s_vs_8x8:.1}%");
+    }
+
+    #[test]
+    fn proposed_unit_power_saving_matches_paper_shape() {
+        // Paper: 56% vs INT16×8, 33.7% vs INT8×8.
+        let designs = table5_designs();
+        let p16x8 = designs[1].power_mw();
+        let p8x8 = designs[2].power_mw();
+        let prop = designs[3].power_mw();
+        let s_vs_16x8 = saving_pct(p16x8, prop);
+        let s_vs_8x8 = saving_pct(p8x8, prop);
+        assert!((45.0..68.0).contains(&s_vs_16x8), "vs 16x8: {s_vs_16x8:.1}%");
+        assert!((20.0..48.0).contains(&s_vs_8x8), "vs 8x8: {s_vs_8x8:.1}%");
+    }
+
+    #[test]
+    fn fp16_dominates_everything() {
+        let designs = table5_designs();
+        let fp = &designs[0];
+        for d in &designs[1..] {
+            assert!(fp.area_um2() > 1.5 * d.area_um2(), "{}", d.name);
+            assert!(fp.power_mw() > 2.0 * d.power_mw(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn model_within_ballpark_of_paper_absolutes() {
+        // Unit-gate estimates should land within ±40% of the synthesis
+        // numbers cell-by-cell (pre-synthesis estimators are that rough),
+        // and much closer on ratios (asserted above).
+        for (design, (name, area, power)) in
+            table5_designs().iter().zip(table5_paper_reference())
+        {
+            assert_eq!(design.name, name);
+            let a_ratio = design.area_um2() / area;
+            let p_ratio = design.power_mw() / power;
+            assert!((0.6..1.7).contains(&a_ratio), "{name} area ratio {a_ratio:.2}");
+            assert!((0.5..2.0).contains(&p_ratio), "{name} power ratio {p_ratio:.2}");
+        }
+    }
+
+    #[test]
+    fn shifter_is_minority_of_proposed_unit() {
+        let p = proposed_int4_mac();
+        let sh = p.shifter.as_ref().unwrap().area_um2();
+        assert!(sh < 0.5 * p.area_um2(), "shifter {sh} vs total {}", p.area_um2());
+    }
+}

@@ -1,0 +1,17 @@
+//! Hardware side of QRazor (paper §4.3, §5.4, Appendix A.2/A.4).
+//!
+//! Three pieces:
+//! * [`datapath`] — a bit-accurate simulator of the SDR encoder
+//!   (Fig. 4: OR-tree → leading-zero detector → truncate/round) and the
+//!   decompression-free MAC unit (Fig. 3(b): 4×4 multiplier + 16-bit
+//!   barrel shifter + accumulator). Every gate-level behavior is
+//!   cross-checked against the software coder in `crate::sdr`.
+//! * [`cost`] — an analytical area/power model of MAC units in a 65nm
+//!   LP process (unit-gate method), calibrated to the paper's FP16
+//!   column and regenerating Table 5's comparisons.
+//! * [`opcount`] — FLOPs/IOPs accounting for quantization overhead ops
+//!   (Hadamard rotation vs SDR compression + barrel shift), Table 8.
+
+pub mod cost;
+pub mod datapath;
+pub mod opcount;

@@ -1,0 +1,124 @@
+//! Operation-count model for quantization overhead — Table 8 (A.4).
+//!
+//! QuaRot must apply Hadamard rotations online (FLOPs proportional to
+//! the rotated matrix), while QRazor's overhead is the SDR compression
+//! (an OR + truncate/round per element, amortized per group) and one
+//! barrel shift per group — integer ops, orders of magnitude fewer.
+//! These formulas regenerate the paper's table exactly and extend it
+//! with a parameter sweep.
+
+/// Operation kind (floating point vs integer) — the table's point is
+/// that QuaRot's overhead is FLOPs while QRazor's is cheap IOPs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Flop,
+    Iop,
+}
+
+/// One row of the Table 8 comparison.
+#[derive(Clone, Debug)]
+pub struct OpCountRow {
+    pub operation: &'static str,
+    pub formula: &'static str,
+    pub count: u64,
+    pub kind: OpKind,
+}
+
+/// Dense Hadamard rotation of an M×N matrix, counted as the paper does
+/// (one MAC per output element per matrix application = M·N).
+pub fn hadamard_single(m: u64, n: u64) -> u64 {
+    m * n
+}
+
+/// Per-head Hadamard over H heads (the attention-side rotations).
+pub fn hadamard_heads(m: u64, n: u64, h: u64) -> u64 {
+    h * m * n
+}
+
+/// SDR compression of an M×N tensor with group size G: the paper counts
+/// 2 group-amortized IOPs per element pair — (M·N·2)/G.
+pub fn sdr_compression(m: u64, n: u64, g: u64) -> u64 {
+    m * n * 2 / g
+}
+
+/// Barrel shifts during the razored GEMM epilogue: one per group —
+/// (M·N)/G.
+pub fn barrel_shifts(m: u64, n: u64, g: u64) -> u64 {
+    m * n / g
+}
+
+/// The four Table 8 rows at given dimensions.
+pub fn table8_rows(m: u64, n: u64, h: u64, g: u64) -> Vec<OpCountRow> {
+    vec![
+        OpCountRow {
+            operation: "Single Hadamard",
+            formula: "M x N",
+            count: hadamard_single(m, n),
+            kind: OpKind::Flop,
+        },
+        OpCountRow {
+            operation: "Hadamard Heads",
+            formula: "H x M x N",
+            count: hadamard_heads(m, n, h),
+            kind: OpKind::Flop,
+        },
+        OpCountRow {
+            operation: "SDR Compression",
+            formula: "(M x N x 2)/G",
+            count: sdr_compression(m, n, g),
+            kind: OpKind::Iop,
+        },
+        OpCountRow {
+            operation: "Barrel Shifter",
+            formula: "(M x N)/G",
+            count: barrel_shifts(m, n, g),
+            kind: OpKind::Iop,
+        },
+    ]
+}
+
+/// A fast-Walsh-Hadamard variant of the rotation cost (N·log2 N per row
+/// instead of N² dense) — an extension beyond the paper's accounting,
+/// reported alongside so the comparison is fair to an optimized QuaRot.
+pub fn hadamard_fwht(m: u64, n: u64) -> u64 {
+    m * n * (64 - (n.max(2) - 1).leading_zeros() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_numbers_exactly() {
+        // Paper: M=128, N=64, H=8, G=32 → 8192 / 65536 / 512 / 256.
+        let rows = table8_rows(128, 64, 8, 32);
+        assert_eq!(rows[0].count, 8_192);
+        assert_eq!(rows[1].count, 65_536);
+        assert_eq!(rows[2].count, 512);
+        assert_eq!(rows[3].count, 256);
+        assert_eq!(rows[0].kind, OpKind::Flop);
+        assert_eq!(rows[2].kind, OpKind::Iop);
+    }
+
+    #[test]
+    fn sdr_overhead_is_orders_of_magnitude_lower() {
+        let rows = table8_rows(128, 64, 8, 32);
+        let quarot: u64 = rows[..2].iter().map(|r| r.count).sum();
+        let qrazor: u64 = rows[2..].iter().map(|r| r.count).sum();
+        assert!(quarot > 90 * qrazor, "{quarot} vs {qrazor}");
+    }
+
+    #[test]
+    fn fwht_still_loses_to_sdr() {
+        // Even the log-factor Hadamard costs more than SDR compression.
+        let fwht = hadamard_fwht(128, 64);
+        let sdr = sdr_compression(128, 64, 32) + barrel_shifts(128, 64, 32);
+        assert!(fwht > 10 * sdr, "{fwht} vs {sdr}");
+    }
+
+    #[test]
+    fn group_size_scales_sdr_cost_inversely() {
+        assert_eq!(sdr_compression(128, 64, 16), 2 * sdr_compression(128, 64, 32));
+        assert_eq!(barrel_shifts(128, 64, 128), 64);
+    }
+}

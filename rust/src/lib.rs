@@ -1,0 +1,41 @@
+//! # QRazor — reliable 4-bit LLM quantization by Significant Data Razoring
+//!
+//! A full-system reproduction of *"QRazor: Reliable and Effortless 4-bit
+//! LLM Quantization by Significant Data Razoring"* (Lee, Choi, Chang,
+//! 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`quant`] — stage 1: absolute-max static quantization to the base
+//!   precision scenario (W8 / A16 / KV8, sign-magnitude integers).
+//! * [`sdr`] — stage 2: Significant Data Razoring — per-group leading-one
+//!   razoring to 4-bit codes + flag bits, packed storage, and the
+//!   decompression-free integer GEMM of the paper's §4.3.
+//! * [`baselines`] — the comparator quantizers from the paper's tables
+//!   (per-group RTN/DMQ, SmoothQuant-style migration, QuaRot-style
+//!   Hadamard rotation ± GPTQ-lite, QServe-style W4A8KV4).
+//! * [`hw`] — the hardware side: bit-accurate SDR datapath simulator,
+//!   MAC-unit area/power cost model (Table 5), op-count model (Table 8).
+//! * [`model`] — a LLaMA-architecture transformer with QRazor hooks at
+//!   every GEMM boundary and an SDR-compressed KV cache.
+//! * [`data`] / [`eval`] — synthetic corpora, tokenizer, perplexity and
+//!   zero-shot task harness (the lm-eval substitute).
+//! * [`runtime`] — PJRT client wrapper loading the L2 JAX artifacts
+//!   (`artifacts/*.hlo.txt`), used for training and cross-validation.
+//! * [`coordinator`] — the serving layer: router, continuous batcher,
+//!   prefill/decode scheduler, SDR KV-cache pool, metrics.
+//! * [`util`] / [`tensor`] — zero-dependency substrates.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hw;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sdr;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,142 @@
+//! QRazor CLI — the L3 launcher.
+//!
+//! ```text
+//! qrazor train --model nano --steps 300         # PJRT training loop
+//! qrazor eval  --model nano --scheme w4a4kv4:16 # tables' metric set
+//! qrazor serve --model nano --requests 16       # serving demo
+//! qrazor hw-report                              # Table 5 + Table 8
+//! ```
+
+use qrazor::baselines::{Fp16, QRazor, Scheme};
+use qrazor::config::ServeConfig;
+use qrazor::coordinator::request::Sampling;
+use qrazor::coordinator::Engine;
+use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+use qrazor::hw::cost::{saving_pct, table5_designs, table5_paper_reference};
+use qrazor::hw::opcount::table8_rows;
+use qrazor::model::quantized::QuantModel;
+use qrazor::util::cli::Cli;
+use qrazor::util::rng::Rng;
+
+fn cli() -> Cli {
+    Cli::new("qrazor", "QRazor 4-bit LLM quantization — reproduction CLI")
+        .subcommand("train", "train the model through the PJRT train_step artifact")
+        .subcommand("eval", "evaluate a quantization scheme (ppl + zero-shot tasks)")
+        .subcommand("serve", "run the serving coordinator on synthetic requests")
+        .subcommand("hw-report", "print the hardware cost model (Tables 5 & 8)")
+        .opt("model", Some("nano"), "model preset (nano|tiny|small|mistral-tiny)")
+        .opt("steps", Some("300"), "training steps")
+        .opt("seed", Some("1"), "experiment seed")
+        .opt("scheme", Some("w4a4kv4:16"), "scheme: fp16 | w4a4:G | w4a4kv4:G | w4a8:G | w4a8kv4:G")
+        .opt("requests", Some("16"), "serve: number of synthetic requests")
+        .opt("max-new", Some("32"), "serve: tokens to generate per request")
+        .flag("quick", "use the quick evaluation scale")
+}
+
+fn parse_scheme(s: &str) -> anyhow::Result<Box<dyn Scheme>> {
+    if s == "fp16" {
+        return Ok(Box::new(Fp16));
+    }
+    let (kind, g) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("scheme format: kind:group, got '{s}'"))?;
+    let g: usize = g.parse()?;
+    Ok(match kind {
+        "w4a4" => Box::new(QRazor::w4a4(g)),
+        "w4a4kv4" => Box::new(QRazor::w4a4kv4(g)),
+        "w4a8" => Box::new(QRazor::w4a8(g)),
+        "w4a8kv4" => Box::new(QRazor::w4a8kv4(g)),
+        other => anyhow::bail!("unknown scheme kind '{other}'"),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = cli().parse()?;
+    let scale = if args.has("quick") { EvalScale::quick() } else { EvalScale::from_env() };
+    let preset = args.get_str("model")?;
+    let seed = args.get_u64("seed")?;
+
+    match args.subcommand.as_deref() {
+        Some("train") => {
+            let steps = args.get_usize("steps")?;
+            let scale = EvalScale { train_steps: steps, ..scale };
+            let (w, losses) = qrazor::eval::harness::trained_weights(&preset, scale, seed)?;
+            if losses.is_empty() {
+                println!("checkpoint already present for {preset} (seed {seed}, {steps} steps)");
+            } else {
+                println!(
+                    "trained {} params for {} steps: loss {:.3} -> {:.3}",
+                    qrazor::config::ModelConfig::preset(&preset)?.param_count(),
+                    losses.len(),
+                    losses.first().unwrap(),
+                    losses.last().unwrap()
+                );
+            }
+            let _ = w;
+        }
+        Some("eval") => {
+            let exp = build_experiment(&preset, scale, seed)?;
+            let scheme = parse_scheme(&args.get_str("scheme")?)?;
+            let rows = vec![exp.eval_fp(), exp.eval_scheme(scheme)];
+            println!("{}", render_table(&format!("eval ({preset})"), &rows));
+        }
+        Some("serve") => {
+            let exp = build_experiment(&preset, scale, seed)?;
+            let scheme = parse_scheme(&args.get_str("scheme")?)?;
+            let qm = QuantModel::build(&exp.weights, scheme, &exp.cal);
+            let mut engine = Engine::new(qm, ServeConfig::default());
+            let n = args.get_usize("requests")?;
+            let max_new = args.get_usize("max-new")?;
+            let mut rng = Rng::new(seed);
+            for _ in 0..n {
+                let len = 4 + rng.index(24);
+                let prompt: Vec<u32> = (0..len)
+                    .map(|_| rng.below(exp.config.vocab as u64) as u32)
+                    .collect();
+                engine.submit(prompt, max_new, Sampling::Greedy);
+            }
+            let t0 = std::time::Instant::now();
+            let done = engine.run_to_completion();
+            println!(
+                "served {} requests in {:.2}s\n{}",
+                done.len(),
+                t0.elapsed().as_secs_f64(),
+                engine.metrics.render()
+            );
+        }
+        Some("hw-report") => {
+            println!("Table 5 — MAC unit area/power (unit-gate model vs paper):");
+            println!(
+                "{:<18} {:>12} {:>12} {:>12} {:>12}",
+                "design", "area µm²", "paper", "power mW", "paper"
+            );
+            for (d, (_, pa, pp)) in table5_designs().iter().zip(table5_paper_reference()) {
+                println!(
+                    "{:<18} {:>12.1} {:>12.1} {:>12.4} {:>12.4}",
+                    d.name,
+                    d.area_um2(),
+                    pa,
+                    d.power_mw(),
+                    pp
+                );
+            }
+            let ds = table5_designs();
+            println!(
+                "proposed vs INT16x8: area -{:.1}% power -{:.1}% (paper: -61.2% / -56%)",
+                saving_pct(ds[1].area_um2(), ds[3].area_um2()),
+                saving_pct(ds[1].power_mw(), ds[3].power_mw()),
+            );
+            println!("\nTable 8 — op counts (M=128 N=64 H=8 G=32):");
+            for r in table8_rows(128, 64, 8, 32) {
+                println!(
+                    "{:<18} {:<16} {:>8} {:?}",
+                    r.operation, r.formula, r.count, r.kind
+                );
+            }
+        }
+        _ => {
+            eprintln!("{}", cli().help_text());
+        }
+    }
+    Ok(())
+}

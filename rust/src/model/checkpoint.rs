@@ -1,0 +1,120 @@
+//! Checkpoint I/O: named-tensor binary format shared by the PJRT
+//! training driver (which writes updated parameters returned from the
+//! L2 `train_step` executable) and the serving/eval paths (which read
+//! them back). Format:
+//!
+//! ```text
+//! magic "QRZC" | u32 version | u32 count | count × entry
+//! entry = u32 name_len | name bytes | tensor (see Tensor::write_to)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::ModelWeights;
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"QRZC";
+const VERSION: u32 = 1;
+
+/// Write named tensors.
+pub fn save_named(
+    path: &Path,
+    named: &[(String, Tensor<f32>)],
+) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(named.len() as u32).to_le_bytes())?;
+    for (name, t) in named {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        t.write_to(&mut f)?;
+    }
+    Ok(())
+}
+
+/// Read named tensors.
+pub fn load_named(path: &Path) -> anyhow::Result<BTreeMap<String, Tensor<f32>>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a QRazor checkpoint (bad magic)");
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    f.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    anyhow::ensure!(count < 100_000, "implausible tensor count {count}");
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        f.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(name_len < 4096, "implausible name length");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let t = Tensor::read_from(&mut f)?;
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Save a full model.
+pub fn save_model(path: &Path, w: &ModelWeights) -> anyhow::Result<()> {
+    save_named(path, &w.to_named())
+}
+
+/// Load a full model for a known config.
+pub fn load_model(path: &Path, config: &ModelConfig) -> anyhow::Result<ModelWeights> {
+    ModelWeights::from_named(config, load_named(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_roundtrip() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 9);
+        let dir = std::env::temp_dir().join("qrazor_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.qrzc");
+        save_model(&path, &w).unwrap();
+        let back = load_model(&path, &cfg).unwrap();
+        assert_eq!(back.embed, w.embed);
+        assert_eq!(back.layers[0].w_gate, w.layers[0].w_gate);
+        assert_eq!(back.lm_head, w.lm_head);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("qrazor_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.qrzc");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load_named(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_reported_by_name() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 9);
+        let mut named = w.to_named();
+        named.retain(|(n, _)| n != "final_norm");
+        let dir = std::env::temp_dir().join("qrazor_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("partial.qrzc");
+        save_named(&path, &named).unwrap();
+        let loaded = load_named(&path).unwrap();
+        let err = ModelWeights::from_named(&cfg, loaded).unwrap_err();
+        assert!(err.to_string().contains("final_norm"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,241 @@
+//! KV caches for incremental decoding: a plain FP32 cache (baseline)
+//! and the **SDR-compressed cache** — the paper's KV4 storage, where
+//! each appended K/V row is stage-1 quantized with the calibrated
+//! static scale and stage-2 razored per group, stored *packed*
+//! (4-bit codes + 4-bit flags). Memory accounting is exact; the
+//! coordinator's pool (`crate::coordinator::kv`) builds on these.
+
+use crate::sdr::packed::{pack_flags, pack_nibbles, unpack_flags, unpack_nibbles};
+use crate::sdr::razor::{compress_group, SdrCode, SdrSpec};
+use crate::tensor::Tensor;
+
+/// Plain FP32 KV cache for one sequence: per-layer `[tokens, kv_dim]`.
+#[derive(Clone, Debug)]
+pub struct FpKvCache {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub kv_dim: usize,
+    pub tokens: usize,
+}
+
+impl FpKvCache {
+    pub fn new(layers: usize, kv_dim: usize) -> FpKvCache {
+        FpKvCache { k: vec![Vec::new(); layers], v: vec![Vec::new(); layers], kv_dim, tokens: 0 }
+    }
+
+    pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.kv_dim);
+        self.k[layer].extend_from_slice(k_row);
+        self.v[layer].extend_from_slice(v_row);
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    pub fn k_matrix(&self, layer: usize) -> Tensor<f32> {
+        Tensor::from_vec(&[self.k[layer].len() / self.kv_dim, self.kv_dim], self.k[layer].clone())
+    }
+
+    pub fn v_matrix(&self, layer: usize) -> Tensor<f32> {
+        Tensor::from_vec(&[self.v[layer].len() / self.kv_dim, self.kv_dim], self.v[layer].clone())
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(|v| v.len() * 4).sum()
+    }
+}
+
+/// One SDR-compressed plane (all K or all V rows of one layer).
+#[derive(Clone, Debug, Default)]
+struct SdrPlane {
+    nibbles: Vec<u8>,
+    flag_nibbles: Vec<u8>,
+    rows: usize,
+}
+
+/// SDR-compressed KV cache for one sequence. Rows are compressed on
+/// append (the paper's *online* KV compression) with static per-site
+/// scales; reads reconstruct via shift — or hand out raw codes for the
+/// decompression-free attention path.
+#[derive(Clone, Debug)]
+pub struct SdrKvCache {
+    pub spec: SdrSpec,
+    pub kv_dim: usize,
+    /// Static stage-1 scales per layer: (k_scale, v_scale).
+    pub scales: Vec<(f32, f32)>,
+    k_planes: Vec<SdrPlane>,
+    v_planes: Vec<SdrPlane>,
+}
+
+impl SdrKvCache {
+    /// `scales[l]` = calibrated (k, v) dequant scales for layer `l`.
+    pub fn new(layers: usize, kv_dim: usize, spec: SdrSpec, scales: Vec<(f32, f32)>) -> SdrKvCache {
+        assert_eq!(scales.len(), layers);
+        assert_eq!(spec.target_bits, 4, "packed KV cache is the KV4 format");
+        assert_eq!(
+            kv_dim % spec.group,
+            0,
+            "kv_dim {kv_dim} must be divisible by group {}",
+            spec.group
+        );
+        SdrKvCache {
+            spec,
+            kv_dim,
+            scales,
+            k_planes: vec![SdrPlane::default(); layers],
+            v_planes: vec![SdrPlane::default(); layers],
+        }
+    }
+
+    pub fn tokens(&self, layer: usize) -> usize {
+        self.k_planes[layer].rows
+    }
+
+    fn compress_row(&self, row: &[f32], scale: f32, plane: &mut SdrPlane) {
+        let q = crate::quant::qmax(self.spec.base_bits);
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let ints: Vec<i32> = row
+            .iter()
+            .map(|&x| crate::quant::round_half_even(x * inv).clamp(-q, q))
+            .collect();
+        let mut codes = vec![SdrCode::default(); self.kv_dim];
+        let mut flags = Vec::with_capacity(self.kv_dim / self.spec.group);
+        for (chunk, out) in ints
+            .chunks(self.spec.group)
+            .zip(codes.chunks_mut(self.spec.group))
+        {
+            flags.push(compress_group(&self.spec, chunk, out));
+        }
+        plane.nibbles.extend(pack_nibbles(&codes));
+        plane.flag_nibbles.extend(pack_flags(&flags));
+        plane.rows += 1;
+    }
+
+    /// Append one token's K and V rows for a layer.
+    pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        assert_eq!(k_row.len(), self.kv_dim);
+        assert_eq!(v_row.len(), self.kv_dim);
+        let (ks, vs) = self.scales[layer];
+        let mut kp = std::mem::take(&mut self.k_planes[layer]);
+        self.compress_row(k_row, ks, &mut kp);
+        self.k_planes[layer] = kp;
+        let mut vp = std::mem::take(&mut self.v_planes[layer]);
+        self.compress_row(v_row, vs, &mut vp);
+        self.v_planes[layer] = vp;
+    }
+
+    fn reconstruct_plane(&self, plane: &SdrPlane, scale: f32) -> Tensor<f32> {
+        let gpr = self.kv_dim / self.spec.group;
+        let codes = unpack_nibbles(&plane.nibbles, plane.rows * self.kv_dim);
+        let flags = unpack_flags(&plane.flag_nibbles, plane.rows * gpr);
+        let mut data = Vec::with_capacity(plane.rows * self.kv_dim);
+        for (i, c) in codes.iter().enumerate() {
+            let g = i / self.spec.group;
+            data.push(c.reconstruct(flags[g]) as f32 * scale);
+        }
+        Tensor::from_vec(&[plane.rows, self.kv_dim], data)
+    }
+
+    /// Dequantized K matrix `[tokens, kv_dim]` for attention.
+    pub fn k_matrix(&self, layer: usize) -> Tensor<f32> {
+        self.reconstruct_plane(&self.k_planes[layer], self.scales[layer].0)
+    }
+
+    pub fn v_matrix(&self, layer: usize) -> Tensor<f32> {
+        self.reconstruct_plane(&self.v_planes[layer], self.scales[layer].1)
+    }
+
+    /// Exact payload bytes (codes + flags) across all layers.
+    pub fn bytes(&self) -> usize {
+        self.k_planes
+            .iter()
+            .chain(&self.v_planes)
+            .map(|p| p.nibbles.len() + p.flag_nibbles.len())
+            .sum()
+    }
+
+    /// Measured effective bits per stored value.
+    pub fn effective_bits(&self) -> f64 {
+        let values: usize = self
+            .k_planes
+            .iter()
+            .chain(&self.v_planes)
+            .map(|p| p.rows * self.kv_dim)
+            .sum();
+        if values == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 * 8.0 / values as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spec() -> SdrSpec {
+        SdrSpec::new(8, 4, 16)
+    }
+
+    fn filled_cache(layers: usize, kv_dim: usize, tokens: usize) -> (SdrKvCache, FpKvCache) {
+        let mut rng = Rng::new(5);
+        let scales = vec![(0.02f32, 0.02f32); layers];
+        let mut sdr = SdrKvCache::new(layers, kv_dim, spec(), scales);
+        let mut fp = FpKvCache::new(layers, kv_dim);
+        for _ in 0..tokens {
+            for l in 0..layers {
+                let k: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                sdr.append(l, &k, &v);
+                fp.append(l, &k, &v);
+            }
+        }
+        (sdr, fp)
+    }
+
+    #[test]
+    fn append_and_shapes() {
+        let (sdr, fp) = filled_cache(2, 64, 10);
+        assert_eq!(sdr.tokens(0), 10);
+        assert_eq!(sdr.k_matrix(1).shape(), &[10, 64]);
+        assert_eq!(fp.k_matrix(1).shape(), &[10, 64]);
+    }
+
+    #[test]
+    fn reconstruction_is_close() {
+        let (sdr, fp) = filled_cache(2, 64, 16);
+        for l in 0..2 {
+            let rel = crate::baselines::rel_error(&fp.k_matrix(l), &sdr.k_matrix(l));
+            assert!(rel < 0.35, "layer {l} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn memory_is_about_4_bits_per_value() {
+        let (sdr, fp) = filled_cache(2, 128, 32);
+        let eff = sdr.effective_bits();
+        // spec: 4 + 4/16 = 4.25 bits/value
+        assert!((4.2..4.35).contains(&eff), "effective bits {eff}");
+        // ~7.5x smaller than fp32 (paper's 4x vs fp16)
+        let ratio = fp.bytes() as f64 / sdr.bytes() as f64;
+        assert!(ratio > 7.0, "compression ratio {ratio}");
+    }
+
+    #[test]
+    fn saturating_outliers_clamped_not_wrapped() {
+        let mut sdr = SdrKvCache::new(1, 16, spec(), vec![(0.01, 0.01)]);
+        let k = vec![100.0f32; 16]; // far beyond scale*127
+        sdr.append(0, &k, &k);
+        let back = sdr.k_matrix(0);
+        // clamped to +127*scale territory, sign preserved
+        assert!(back.data().iter().all(|&v| v > 0.0 && v <= 1.28));
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn rejects_misaligned_group() {
+        SdrKvCache::new(1, 60, SdrSpec::new(8, 4, 16), vec![(1.0, 1.0)]);
+    }
+}

@@ -1,0 +1,410 @@
+//! LLaMA-architecture transformer (RMSNorm → attention with RoPE →
+//! residual → RMSNorm → SwiGLU → residual), implemented twice over the
+//! same weights:
+//!
+//! * the **FP32 reference forward** in this module (the "FP16" rows of
+//!   every table — CPU f32 stands in for GPU fp16), and
+//! * the **quantized forward** in [`quantized`], which routes every GEMM
+//!   boundary through a [`crate::baselines::Scheme`] (QRazor or any
+//!   baseline), including quantized Q·Kᵀ and the SDR KV cache.
+//!
+//! The same architecture is mirrored in `python/compile/model.py` (L2);
+//! logits parity between the two paths is checked by the runtime
+//! integration test.
+
+pub mod checkpoint;
+pub mod kvcache;
+pub mod quantized;
+
+use crate::config::ModelConfig;
+use crate::tensor::{add_assign, matmul_bt, rmsnorm, silu, softmax_rows, Tensor};
+use crate::util::rng::Rng;
+
+/// Weights of one transformer block. All linears are `[out, in]`
+/// row-major (rows = output channels → per-channel quantization scales).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Tensor<f32>,
+    pub wk: Tensor<f32>,
+    pub wv: Tensor<f32>,
+    pub wo: Tensor<f32>,
+    pub ffn_norm: Vec<f32>,
+    pub w_gate: Tensor<f32>,
+    pub w_up: Tensor<f32>,
+    pub w_down: Tensor<f32>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub embed: Tensor<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Tensor<f32>,
+}
+
+impl ModelWeights {
+    /// Random initialization (truncated-normal-ish, 1/√fan_in).
+    pub fn init_random(config: &ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let d = config.dim;
+        let kv_dim = config.head_dim() * config.kv_heads;
+        let mat = |out: usize, inp: usize, r: &mut Rng| {
+            let mut t = Tensor::zeros(&[out, inp]);
+            let std = (1.0 / inp as f32).sqrt();
+            r.fill_normal(t.data_mut(), 0.0, std);
+            t
+        };
+        let layers = (0..config.layers)
+            .map(|li| {
+                let mut r = rng.split(li as u64 + 100);
+                LayerWeights {
+                    attn_norm: vec![1.0; d],
+                    wq: mat(d, d, &mut r),
+                    wk: mat(kv_dim, d, &mut r),
+                    wv: mat(kv_dim, d, &mut r),
+                    wo: mat(d, d, &mut r),
+                    ffn_norm: vec![1.0; d],
+                    w_gate: mat(config.ffn_hidden, d, &mut r),
+                    w_up: mat(config.ffn_hidden, d, &mut r),
+                    w_down: mat(d, config.ffn_hidden, &mut r),
+                }
+            })
+            .collect();
+        ModelWeights {
+            config: config.clone(),
+            embed: mat(config.vocab, d, &mut rng),
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: mat(config.vocab, d, &mut rng),
+        }
+    }
+
+    /// Canonical flat parameter list: `(name, shape)` in the order the
+    /// L2 (JAX) side and the checkpoint format both use.
+    pub fn param_specs(config: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+        let d = config.dim;
+        let kv_dim = config.head_dim() * config.kv_heads;
+        let mut out = vec![("embed".to_string(), vec![config.vocab, d])];
+        for li in 0..config.layers {
+            let p = |n: &str| format!("layers.{li}.{n}");
+            out.push((p("attn_norm"), vec![d]));
+            out.push((p("wq"), vec![d, d]));
+            out.push((p("wk"), vec![kv_dim, d]));
+            out.push((p("wv"), vec![kv_dim, d]));
+            out.push((p("wo"), vec![d, d]));
+            out.push((p("ffn_norm"), vec![d]));
+            out.push((p("w_gate"), vec![config.ffn_hidden, d]));
+            out.push((p("w_up"), vec![config.ffn_hidden, d]));
+            out.push((p("w_down"), vec![d, config.ffn_hidden]));
+        }
+        out.push(("final_norm".to_string(), vec![d]));
+        out.push(("lm_head".to_string(), vec![config.vocab, d]));
+        out
+    }
+
+    /// Flatten into `(name, tensor)` pairs matching [`Self::param_specs`].
+    pub fn to_named(&self) -> Vec<(String, Tensor<f32>)> {
+        let mut out = vec![("embed".to_string(), self.embed.clone())];
+        for (li, l) in self.layers.iter().enumerate() {
+            let p = |n: &str| format!("layers.{li}.{n}");
+            out.push((p("attn_norm"), Tensor::from_vec(&[l.attn_norm.len()], l.attn_norm.clone())));
+            out.push((p("wq"), l.wq.clone()));
+            out.push((p("wk"), l.wk.clone()));
+            out.push((p("wv"), l.wv.clone()));
+            out.push((p("wo"), l.wo.clone()));
+            out.push((p("ffn_norm"), Tensor::from_vec(&[l.ffn_norm.len()], l.ffn_norm.clone())));
+            out.push((p("w_gate"), l.w_gate.clone()));
+            out.push((p("w_up"), l.w_up.clone()));
+            out.push((p("w_down"), l.w_down.clone()));
+        }
+        out.push((
+            "final_norm".to_string(),
+            Tensor::from_vec(&[self.final_norm.len()], self.final_norm.clone()),
+        ));
+        out.push(("lm_head".to_string(), self.lm_head.clone()));
+        out
+    }
+
+    /// Rebuild from named tensors (inverse of [`Self::to_named`]).
+    pub fn from_named(
+        config: &ModelConfig,
+        mut named: std::collections::BTreeMap<String, Tensor<f32>>,
+    ) -> anyhow::Result<ModelWeights> {
+        let mut take = |name: &str| -> anyhow::Result<Tensor<f32>> {
+            named
+                .remove(name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))
+        };
+        let embed = take("embed")?;
+        let mut layers = Vec::with_capacity(config.layers);
+        for li in 0..config.layers {
+            let p = |n: &str| format!("layers.{li}.{n}");
+            layers.push(LayerWeights {
+                attn_norm: take(&p("attn_norm"))?.into_vec(),
+                wq: take(&p("wq"))?,
+                wk: take(&p("wk"))?,
+                wv: take(&p("wv"))?,
+                wo: take(&p("wo"))?,
+                ffn_norm: take(&p("ffn_norm"))?.into_vec(),
+                w_gate: take(&p("w_gate"))?,
+                w_up: take(&p("w_up"))?,
+                w_down: take(&p("w_down"))?,
+            });
+        }
+        Ok(ModelWeights {
+            config: config.clone(),
+            embed,
+            layers,
+            final_norm: take("final_norm")?.into_vec(),
+            lm_head: take("lm_head")?,
+        })
+    }
+}
+
+/// Rotary position embedding applied in place to `[tokens, n_heads*hd]`
+/// laid out head-major, for absolute positions `pos0..pos0+tokens`.
+pub fn apply_rope(x: &mut Tensor<f32>, n_heads: usize, head_dim: usize, pos0: usize) {
+    let tokens = x.shape()[0];
+    assert_eq!(x.shape()[1], n_heads * head_dim);
+    let half = head_dim / 2;
+    for t in 0..tokens {
+        let pos = (pos0 + t) as f32;
+        let row = x.row_mut(t);
+        for h in 0..n_heads {
+            let base = h * head_dim;
+            for i in 0..half {
+                let theta = pos / 10_000f32.powf(2.0 * i as f32 / head_dim as f32);
+                let (sin, cos) = theta.sin_cos();
+                let (a, b) = (row[base + i], row[base + half + i]);
+                row[base + i] = a * cos - b * sin;
+                row[base + half + i] = b * cos + a * sin;
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention over full sequences (GQA-aware).
+/// `q`: `[t, heads*hd]`, `k`/`v`: `[t, kv_heads*hd]` → `[t, heads*hd]`.
+pub fn causal_attention(
+    q: &Tensor<f32>,
+    k: &Tensor<f32>,
+    v: &Tensor<f32>,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+) -> Tensor<f32> {
+    let t = q.shape()[0];
+    let group = n_heads / n_kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut out = Tensor::zeros(&[t, n_heads * head_dim]);
+    for h in 0..n_heads {
+        let kvh = h / group;
+        // gather per-head views
+        let mut qh = Tensor::zeros(&[t, head_dim]);
+        let mut kh = Tensor::zeros(&[t, head_dim]);
+        let mut vh = Tensor::zeros(&[t, head_dim]);
+        for i in 0..t {
+            qh.row_mut(i).copy_from_slice(&q.row(i)[h * head_dim..(h + 1) * head_dim]);
+            kh.row_mut(i).copy_from_slice(&k.row(i)[kvh * head_dim..(kvh + 1) * head_dim]);
+            vh.row_mut(i).copy_from_slice(&v.row(i)[kvh * head_dim..(kvh + 1) * head_dim]);
+        }
+        let mut scores = matmul_bt(&qh, &kh); // [t, t]
+        for i in 0..t {
+            let row = scores.row_mut(i);
+            for (j, s) in row.iter_mut().enumerate() {
+                *s = if j <= i { *s * scale } else { f32::NEG_INFINITY };
+            }
+        }
+        softmax_rows(&mut scores);
+        let ctx = crate::tensor::matmul(&scores, &vh); // [t, hd]
+        for i in 0..t {
+            out.row_mut(i)[h * head_dim..(h + 1) * head_dim].copy_from_slice(ctx.row(i));
+        }
+    }
+    out
+}
+
+/// FP32 reference forward over a full token sequence → logits
+/// `[tokens, vocab]`. Teacher-forced evaluation and the FP16 table rows.
+pub fn forward_full(w: &ModelWeights, tokens: &[u32]) -> Tensor<f32> {
+    let cfg = &w.config;
+    let (d, hd) = (cfg.dim, cfg.head_dim());
+    let t = tokens.len();
+    // embedding lookup
+    let mut x = Tensor::zeros(&[t, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(w.embed.row(tok as usize));
+    }
+    let mut normed = Tensor::zeros(&[t, d]);
+    for layer in &w.layers {
+        // attention block
+        for i in 0..t {
+            rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
+        }
+        let mut q = matmul_bt(&normed, &layer.wq);
+        let mut k = matmul_bt(&normed, &layer.wk);
+        let v = matmul_bt(&normed, &layer.wv);
+        apply_rope(&mut q, cfg.heads, hd, 0);
+        apply_rope(&mut k, cfg.kv_heads, hd, 0);
+        let ctx = causal_attention(&q, &k, &v, cfg.heads, cfg.kv_heads, hd);
+        let attn_out = matmul_bt(&ctx, &layer.wo);
+        add_assign(&mut x, &attn_out);
+        // ffn block
+        for i in 0..t {
+            rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
+        }
+        let gate = matmul_bt(&normed, &layer.w_gate);
+        let up = matmul_bt(&normed, &layer.w_up);
+        let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
+        for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+            *o = silu(g) * u;
+        }
+        let ffn_out = matmul_bt(&h, &layer.w_down);
+        add_assign(&mut x, &ffn_out);
+    }
+    for i in 0..t {
+        rmsnorm(x.row(i), &w.final_norm, 1e-5, normed.row_mut(i));
+    }
+    matmul_bt(&normed, &w.lm_head)
+}
+
+/// A language model that can produce full-sequence logits — the
+/// interface the evaluation harness (`crate::eval`) consumes, satisfied
+/// by both the FP reference and [`quantized::QuantModel`].
+pub trait LanguageModel: Sync {
+    fn config(&self) -> &ModelConfig;
+    fn full_logits(&self, tokens: &[u32]) -> Tensor<f32>;
+    fn name(&self) -> String;
+}
+
+/// FP32 reference model wrapper.
+pub struct FpModel {
+    pub weights: ModelWeights,
+}
+
+impl LanguageModel for FpModel {
+    fn config(&self) -> &ModelConfig {
+        &self.weights.config
+    }
+    fn full_logits(&self, tokens: &[u32]) -> Tensor<f32> {
+        forward_full(&self.weights, tokens)
+    }
+    fn name(&self) -> String {
+        "FP32-ref".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano() -> ModelWeights {
+        ModelWeights::init_random(&ModelConfig::preset("nano").unwrap(), 1)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let w = nano();
+        let logits = forward_full(&w, &[1, 2, 3, 4, 5]);
+        assert_eq!(logits.shape(), &[5, w.config.vocab]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position i must not depend on tokens after i
+        let w = nano();
+        let a = forward_full(&w, &[5, 6, 7, 8]);
+        let b = forward_full(&w, &[5, 6, 7, 99]);
+        for j in 0..w.config.vocab {
+            for i in 0..3 {
+                assert!(
+                    (a.at(&[i, j]) - b.at(&[i, j])).abs() < 1e-4,
+                    "pos {i} logit {j} changed"
+                );
+            }
+        }
+        // ...and position 3 must differ (different input token)
+        let diff: f32 = (0..w.config.vocab)
+            .map(|j| (a.at(&[3, j]) - b.at(&[3, j])).abs())
+            .sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let mut x = Tensor::from_vec(&[2, 8], (0..16).map(|i| i as f32 / 7.0).collect());
+        let orig = x.clone();
+        apply_rope(&mut x, 2, 4, 0);
+        // position 0 is identity (theta=0)
+        for j in 0..8 {
+            assert!((x.at(&[0, j]) - orig.at(&[0, j])).abs() < 1e-6);
+        }
+        // rotation preserves per-pair norms at any position
+        for h in 0..2 {
+            for i in 0..2 {
+                let (a0, b0) = (orig.at(&[i, h * 4]), orig.at(&[i, h * 4 + 2]));
+                let (a1, b1) = (x.at(&[i, h * 4]), x.at(&[i, h * 4 + 2]));
+                let n0 = a0 * a0 + b0 * b0;
+                let n1 = a1 * a1 + b1 * b1;
+                assert!((n0 - n1).abs() < 1e-5, "h={h} i={i}: {n0} vs {n1}");
+            }
+        }
+        // position 1 differs from position 0's transform
+        let mut y = orig.clone();
+        apply_rope(&mut y, 2, 4, 1);
+        assert!(y.data().iter().zip(x.data()).any(|(a, b)| (a - b).abs() > 1e-4));
+    }
+
+    #[test]
+    fn gqa_forward_works() {
+        let cfg = ModelConfig::preset("mistral-tiny").unwrap();
+        let w = ModelWeights::init_random(&cfg, 2);
+        let logits = forward_full(&w, &[1, 2, 3]);
+        assert_eq!(logits.shape(), &[3, cfg.vocab]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn named_roundtrip() {
+        let w = nano();
+        let named: std::collections::BTreeMap<_, _> = w.to_named().into_iter().collect();
+        let back = ModelWeights::from_named(&w.config, named).unwrap();
+        assert_eq!(back.embed, w.embed);
+        assert_eq!(back.layers[1].w_down, w.layers[1].w_down);
+        assert_eq!(back.final_norm, w.final_norm);
+    }
+
+    #[test]
+    fn param_specs_match_to_named() {
+        let w = nano();
+        let specs = ModelWeights::param_specs(&w.config);
+        let named = w.to_named();
+        assert_eq!(specs.len(), named.len());
+        for ((sn, ss), (nn, nt)) in specs.iter().zip(&named) {
+            assert_eq!(sn, nn);
+            assert_eq!(ss.as_slice(), nt.shape());
+        }
+    }
+
+    #[test]
+    fn param_count_matches_spec_sum() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let total: usize = ModelWeights::param_specs(&cfg)
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        assert_eq!(total, cfg.param_count());
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = nano();
+        let b = nano();
+        assert_eq!(a.embed, b.embed);
+        assert_eq!(a.layers[0].wq, b.layers[0].wq);
+    }
+}

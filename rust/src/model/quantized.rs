@@ -1,0 +1,537 @@
+//! Scheme-quantized transformer forward (paper Fig. 5).
+//!
+//! The quantization flow mirrors the paper's Appendix A.7 diagram: every
+//! linear's input activation is quantized (static per-tensor scales from
+//! calibration for QRazor; dynamic for baselines), weights are prepared
+//! offline per scheme, and — uniquely matching QRazor — the **Query** is
+//! quantized too, so Q·Kᵀ runs as a low-precision GEMM, as do the
+//! attention-context GEMMs against the quantized KV cache.
+//!
+//! Calibration (`calibrate`) runs the FP reference over sample
+//! sequences, records per-site absolute maxima (→ static scales) and a
+//! bounded sample of each site's activations (→ scheme weight solvers
+//! like GPTQ/SmoothQuant/QLLM; and Fig. 2's histograms).
+
+use std::collections::BTreeMap;
+
+use super::{apply_rope, causal_attention, LanguageModel, ModelWeights};
+use crate::baselines::{PreparedLinear, Scheme};
+use crate::config::ModelConfig;
+use crate::quant::Calibrator;
+use crate::tensor::{add_assign, matmul_bt, rmsnorm, silu, Tensor};
+
+/// Cap on stored calibration rows per site (keeps memory bounded).
+const CALIB_SAMPLE_ROWS: usize = 512;
+
+/// Calibration artifacts: static per-tensor amax per site + activation
+/// samples per site.
+#[derive(Debug, Default)]
+pub struct CalibrationData {
+    pub calibrator: Calibrator,
+    pub samples: BTreeMap<String, Tensor<f32>>,
+}
+
+impl CalibrationData {
+    fn record(&mut self, site: &str, x: &Tensor<f32>) {
+        self.calibrator.observe(site, x.data());
+        let cols = *x.shape().last().unwrap();
+        let flat_rows = x.len() / cols;
+        let entry = self.samples.entry(site.to_string());
+        match entry {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                let keep = flat_rows.min(CALIB_SAMPLE_ROWS);
+                v.insert(Tensor::from_vec(
+                    &[keep, cols],
+                    x.data()[..keep * cols].to_vec(),
+                ));
+            }
+            std::collections::btree_map::Entry::Occupied(mut o) => {
+                let have = o.get().shape()[0];
+                if have < CALIB_SAMPLE_ROWS {
+                    let keep = flat_rows.min(CALIB_SAMPLE_ROWS - have);
+                    let mut data = o.get().data().to_vec();
+                    data.extend_from_slice(&x.data()[..keep * cols]);
+                    *o.get_mut() = Tensor::from_vec(&[have + keep, cols], data);
+                }
+            }
+        }
+    }
+
+    pub fn sample(&self, site: &str) -> Option<&Tensor<f32>> {
+        self.samples.get(site)
+    }
+}
+
+/// Run the FP model over calibration sequences, recording activations
+/// at every quantization site. The site naming is shared with
+/// [`QuantModel`]'s forward.
+pub fn calibrate(w: &ModelWeights, sequences: &[Vec<u32>]) -> CalibrationData {
+    let mut cal = CalibrationData::default();
+    let cfg = &w.config;
+    let (d, hd) = (cfg.dim, cfg.head_dim());
+    for tokens in sequences {
+        let t = tokens.len();
+        let mut x = Tensor::zeros(&[t, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(w.embed.row(tok as usize));
+        }
+        let mut normed = Tensor::zeros(&[t, d]);
+        for (li, layer) in w.layers.iter().enumerate() {
+            for i in 0..t {
+                rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
+            }
+            cal.record(&format!("l{li}.attn_in"), &normed);
+            let mut q = matmul_bt(&normed, &layer.wq);
+            let mut k = matmul_bt(&normed, &layer.wk);
+            let v = matmul_bt(&normed, &layer.wv);
+            apply_rope(&mut q, cfg.heads, hd, 0);
+            apply_rope(&mut k, cfg.kv_heads, hd, 0);
+            cal.record(&format!("l{li}.q"), &q);
+            cal.record(&format!("l{li}.k"), &k);
+            cal.record(&format!("l{li}.v"), &v);
+            let ctx = causal_attention(&q, &k, &v, cfg.heads, cfg.kv_heads, hd);
+            cal.record(&format!("l{li}.attn_out"), &ctx);
+            let attn_out = matmul_bt(&ctx, &layer.wo);
+            add_assign(&mut x, &attn_out);
+            for i in 0..t {
+                rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
+            }
+            cal.record(&format!("l{li}.ffn_in"), &normed);
+            let gate = matmul_bt(&normed, &layer.w_gate);
+            let up = matmul_bt(&normed, &layer.w_up);
+            let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
+            for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+                *o = silu(g) * u;
+            }
+            cal.record(&format!("l{li}.ffn_down_in"), &h);
+            let ffn_out = matmul_bt(&h, &layer.w_down);
+            add_assign(&mut x, &ffn_out);
+        }
+        for i in 0..t {
+            rmsnorm(x.row(i), &w.final_norm, 1e-5, normed.row_mut(i));
+        }
+        cal.record("lm_head_in", &normed);
+    }
+    cal
+}
+
+/// One quantized transformer block's prepared linears.
+struct QuantLayer {
+    attn_norm: Vec<f32>,
+    wq: PreparedLinear,
+    wk: PreparedLinear,
+    wv: PreparedLinear,
+    wo: PreparedLinear,
+    ffn_norm: Vec<f32>,
+    w_gate: PreparedLinear,
+    w_up: PreparedLinear,
+    w_down: PreparedLinear,
+}
+
+/// A model quantized under a [`Scheme`]: prepared weights + static
+/// scales, ready for evaluation or serving.
+pub struct QuantModel {
+    pub config: ModelConfig,
+    pub scheme: Box<dyn Scheme>,
+    embed: Tensor<f32>,
+    layers: Vec<QuantLayer>,
+    final_norm: Vec<f32>,
+    lm_head: PreparedLinear,
+    /// Calibrated per-site absolute maxima (static scales are derived
+    /// per use-site bit width by the scheme itself).
+    pub site_amax: BTreeMap<String, f32>,
+}
+
+impl QuantModel {
+    /// Quantize `w` under `scheme`, using `cal` for static scales and
+    /// weight-solver calibration.
+    pub fn build(w: &ModelWeights, scheme: Box<dyn Scheme>, cal: &CalibrationData) -> QuantModel {
+        let prep = |weight: &Tensor<f32>, site: &str| -> PreparedLinear {
+            scheme.prep_linear(weight, cal.sample(site))
+        };
+        let layers = w
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| QuantLayer {
+                attn_norm: l.attn_norm.clone(),
+                wq: prep(&l.wq, &format!("l{li}.attn_in")),
+                wk: prep(&l.wk, &format!("l{li}.attn_in")),
+                wv: prep(&l.wv, &format!("l{li}.attn_in")),
+                wo: prep(&l.wo, &format!("l{li}.attn_out")),
+                ffn_norm: l.ffn_norm.clone(),
+                w_gate: prep(&l.w_gate, &format!("l{li}.ffn_in")),
+                w_up: prep(&l.w_up, &format!("l{li}.ffn_in")),
+                w_down: prep(&l.w_down, &format!("l{li}.ffn_down_in")),
+            })
+            .collect();
+        let site_amax = cal
+            .calibrator
+            .sites()
+            .map(|s| (s.to_string(), cal.calibrator.amax(s).unwrap()))
+            .collect();
+        QuantModel {
+            config: w.config.clone(),
+            lm_head: prep(&w.lm_head, "lm_head_in"),
+            embed: w.embed.clone(),
+            layers,
+            final_norm: w.final_norm.clone(),
+            scheme,
+            site_amax,
+        }
+    }
+
+    /// Static activation scale (amax / qmax) for a site at the scheme's
+    /// activation base precision; `None` when the site wasn't calibrated.
+    fn act_scale(&self, site: &str, bits: u32) -> Option<f32> {
+        self.site_amax
+            .get(site)
+            .map(|&amax| crate::quant::absmax_scale_from_amax(amax, bits))
+    }
+
+    /// Quantized forward over a full sequence → logits `[t, vocab]`.
+    pub fn forward_full(&self, tokens: &[u32]) -> Tensor<f32> {
+        let cfg = &self.config;
+        let (d, hd) = (cfg.dim, cfg.head_dim());
+        let t = tokens.len();
+        // Activation base precision for static scales: QRazor uses 16,
+        // dynamic schemes ignore the hint entirely.
+        let abits = 16;
+        let kvbits = 8;
+        let mut x = Tensor::zeros(&[t, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let mut normed = Tensor::zeros(&[t, d]);
+        for (li, layer) in self.layers.iter().enumerate() {
+            for i in 0..t {
+                rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
+            }
+            let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
+            let mut q = layer.wq.forward(&normed, s_in, self.scheme.as_ref());
+            let mut k = layer.wk.forward(&normed, s_in, self.scheme.as_ref());
+            let v = layer.wv.forward(&normed, s_in, self.scheme.as_ref());
+            apply_rope(&mut q, cfg.heads, hd, 0);
+            apply_rope(&mut k, cfg.kv_heads, hd, 0);
+            // QRazor quantizes Q, K, V for low-precision attention GEMMs
+            // (Fig. 5); baselines apply their own kv() policy.
+            let qq = self
+                .scheme
+                .kv(&q, self.act_scale(&format!("l{li}.q"), kvbits));
+            let kq = self
+                .scheme
+                .kv(&k, self.act_scale(&format!("l{li}.k"), kvbits));
+            let vq = self
+                .scheme
+                .kv(&v, self.act_scale(&format!("l{li}.v"), kvbits));
+            let ctx = causal_attention(&qq, &kq, &vq, cfg.heads, cfg.kv_heads, hd);
+            let s_out = self.act_scale(&format!("l{li}.attn_out"), abits);
+            let attn_out = layer.wo.forward(&ctx, s_out, self.scheme.as_ref());
+            add_assign(&mut x, &attn_out);
+            for i in 0..t {
+                rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
+            }
+            let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
+            let gate = layer.w_gate.forward(&normed, s_ffn, self.scheme.as_ref());
+            let up = layer.w_up.forward(&normed, s_ffn, self.scheme.as_ref());
+            let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
+            for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+                *o = silu(g) * u;
+            }
+            let s_down = self.act_scale(&format!("l{li}.ffn_down_in"), abits);
+            let ffn_out = layer.w_down.forward(&h, s_down, self.scheme.as_ref());
+            add_assign(&mut x, &ffn_out);
+        }
+        for i in 0..t {
+            rmsnorm(x.row(i), &self.final_norm, 1e-5, normed.row_mut(i));
+        }
+        self.lm_head
+            .forward(&normed, self.act_scale("lm_head_in", abits), self.scheme.as_ref())
+    }
+}
+
+/// Per-sequence decode cache: FP32 or SDR-compressed (the paper's KV4).
+pub enum DecodeCache {
+    Fp(crate::model::kvcache::FpKvCache),
+    Sdr(crate::model::kvcache::SdrKvCache),
+}
+
+impl DecodeCache {
+    pub fn tokens(&self) -> usize {
+        match self {
+            DecodeCache::Fp(c) => c.tokens,
+            DecodeCache::Sdr(c) => c.tokens(0),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            DecodeCache::Fp(c) => c.bytes(),
+            DecodeCache::Sdr(c) => c.bytes(),
+        }
+    }
+}
+
+impl QuantModel {
+    pub fn kv_dim(&self) -> usize {
+        self.config.head_dim() * self.config.kv_heads
+    }
+
+    /// Create a decode cache appropriate for the scheme: SDR-compressed
+    /// (group `kv_group`) when the scheme quantizes KV, FP otherwise.
+    pub fn new_cache(&self, kv_group: usize) -> DecodeCache {
+        let layers = self.config.layers;
+        let kv_dim = self.kv_dim();
+        if self.scheme.quantizes_kv() && kv_dim % kv_group == 0 {
+            let spec = crate::sdr::SdrSpec::new(8, 4, kv_group);
+            let scales: Vec<(f32, f32)> = (0..layers)
+                .map(|li| {
+                    (
+                        self.act_scale(&format!("l{li}.k"), 8).unwrap_or(0.01),
+                        self.act_scale(&format!("l{li}.v"), 8).unwrap_or(0.01),
+                    )
+                })
+                .collect();
+            DecodeCache::Sdr(crate::model::kvcache::SdrKvCache::new(
+                layers, kv_dim, spec, scales,
+            ))
+        } else {
+            DecodeCache::Fp(crate::model::kvcache::FpKvCache::new(layers, kv_dim))
+        }
+    }
+
+    /// Incremental decode: run one token at absolute position `pos`,
+    /// appending K/V to `cache`, returning the next-token logits.
+    pub fn forward_token(&self, token: u32, pos: usize, cache: &mut DecodeCache) -> Vec<f32> {
+        let cfg = &self.config;
+        let (d, hd) = (cfg.dim, cfg.head_dim());
+        let abits = 16;
+        let kvbits = 8;
+        let group = cfg.heads / cfg.kv_heads;
+        let scale_dot = 1.0 / (hd as f32).sqrt();
+        let mut x = Tensor::from_vec(&[1, d], self.embed.row(token as usize).to_vec());
+        let mut normed = Tensor::zeros(&[1, d]);
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(x.row(0), &layer.attn_norm, 1e-5, normed.row_mut(0));
+            let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
+            let mut q = layer.wq.forward(&normed, s_in, self.scheme.as_ref());
+            let mut k = layer.wk.forward(&normed, s_in, self.scheme.as_ref());
+            let v = layer.wv.forward(&normed, s_in, self.scheme.as_ref());
+            apply_rope(&mut q, cfg.heads, hd, pos);
+            apply_rope(&mut k, cfg.kv_heads, hd, pos);
+            // append K/V: the SDR cache quantizes on write (the paper's
+            // online KV compression); FP caches store the scheme's view.
+            match cache {
+                DecodeCache::Sdr(c) => c.append(li, k.row(0), v.row(0)),
+                DecodeCache::Fp(c) => {
+                    let kq = self
+                        .scheme
+                        .kv(&k, self.act_scale(&format!("l{li}.k"), kvbits));
+                    let vq = self
+                        .scheme
+                        .kv(&v, self.act_scale(&format!("l{li}.v"), kvbits));
+                    c.append(li, kq.row(0), vq.row(0));
+                }
+            }
+            // quantized query (paper Fig. 5: INT4 Q·Kᵀ)
+            let qq = self
+                .scheme
+                .kv(&q, self.act_scale(&format!("l{li}.q"), kvbits));
+            let (k_all, v_all) = match cache {
+                DecodeCache::Sdr(c) => (c.k_matrix(li), c.v_matrix(li)),
+                DecodeCache::Fp(c) => (c.k_matrix(li), c.v_matrix(li)),
+            };
+            let t = k_all.shape()[0];
+            let mut ctx = Tensor::zeros(&[1, cfg.heads * hd]);
+            for h in 0..cfg.heads {
+                let kvh = h / group;
+                let qh = &qq.row(0)[h * hd..(h + 1) * hd];
+                // scores over all cached positions
+                let mut scores = Vec::with_capacity(t);
+                for ti in 0..t {
+                    let krow = &k_all.row(ti)[kvh * hd..(kvh + 1) * hd];
+                    let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                    scores.push(dot * scale_dot);
+                }
+                // softmax
+                let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                let mut sum = 0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max).exp();
+                    sum += *s;
+                }
+                let inv = 1.0 / sum;
+                let out = &mut ctx.row_mut(0)[h * hd..(h + 1) * hd];
+                for (ti, &p) in scores.iter().enumerate() {
+                    let vrow = &v_all.row(ti)[kvh * hd..(kvh + 1) * hd];
+                    let w = p * inv;
+                    for (o, &vv) in out.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+            let s_out = self.act_scale(&format!("l{li}.attn_out"), abits);
+            let attn_out = layer.wo.forward(&ctx, s_out, self.scheme.as_ref());
+            add_assign(&mut x, &attn_out);
+            rmsnorm(x.row(0), &layer.ffn_norm, 1e-5, normed.row_mut(0));
+            let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
+            let gate = layer.w_gate.forward(&normed, s_ffn, self.scheme.as_ref());
+            let up = layer.w_up.forward(&normed, s_ffn, self.scheme.as_ref());
+            let mut h = Tensor::zeros(&[1, cfg.ffn_hidden]);
+            for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+                *o = silu(g) * u;
+            }
+            let s_down = self.act_scale(&format!("l{li}.ffn_down_in"), abits);
+            let ffn_out = layer.w_down.forward(&h, s_down, self.scheme.as_ref());
+            add_assign(&mut x, &ffn_out);
+        }
+        rmsnorm(x.row(0), &self.final_norm, 1e-5, normed.row_mut(0));
+        self.lm_head
+            .forward(&normed, self.act_scale("lm_head_in", abits), self.scheme.as_ref())
+            .into_vec()
+    }
+}
+
+impl LanguageModel for QuantModel {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+    fn full_logits(&self, tokens: &[u32]) -> Tensor<f32> {
+        self.forward_full(tokens)
+    }
+    fn name(&self) -> String {
+        self.scheme.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{Fp16, QRazor};
+    use crate::model::forward_full as fp_forward;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelWeights, CalibrationData, Vec<Vec<u32>>) {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 3);
+        let mut rng = Rng::new(7);
+        let seqs: Vec<Vec<u32>> = (0..4)
+            .map(|_| (0..24).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        (w, cal, seqs)
+    }
+
+    #[test]
+    fn calibration_covers_all_sites() {
+        let (w, cal, _) = setup();
+        for li in 0..w.config.layers {
+            for site in ["attn_in", "q", "k", "v", "attn_out", "ffn_in", "ffn_down_in"] {
+                let s = format!("l{li}.{site}");
+                assert!(cal.calibrator.amax(&s).is_some(), "missing {s}");
+                assert!(cal.sample(&s).is_some(), "missing sample {s}");
+            }
+        }
+        assert!(cal.calibrator.amax("lm_head_in").is_some());
+    }
+
+    #[test]
+    fn fp16_scheme_matches_reference_exactly() {
+        let (w, cal, seqs) = setup();
+        let qm = QuantModel::build(&w, Box::new(Fp16), &cal);
+        let a = qm.forward_full(&seqs[0]);
+        let b = fp_forward(&w, &seqs[0]);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qrazor_w4a8_close_to_reference() {
+        let (w, cal, seqs) = setup();
+        let qm = QuantModel::build(&w, Box::new(QRazor::w4a8(16)), &cal);
+        let a = qm.forward_full(&seqs[0]);
+        let b = fp_forward(&w, &seqs[0]);
+        let rel = crate::baselines::rel_error(&b, &a);
+        assert!(rel < 0.5, "rel error {rel}");
+        assert!(a.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantization_noise_ordering() {
+        // W4A4 must be noisier than W4A8, which is noisier than FP.
+        let (w, cal, seqs) = setup();
+        let fp = fp_forward(&w, &seqs[0]);
+        let e = |scheme: Box<dyn crate::baselines::Scheme>| {
+            let qm = QuantModel::build(&w, scheme, &cal);
+            crate::baselines::rel_error(&fp, &qm.forward_full(&seqs[0]))
+        };
+        let e_a8 = e(Box::new(QRazor::w4a8(16)));
+        let e_a4 = e(Box::new(QRazor::w4a4(16)));
+        assert!(e_a8 < e_a4, "a8 {e_a8} vs a4 {e_a4}");
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_forward() {
+        // teacher-forcing through forward_token must reproduce the
+        // full-sequence logits (same math, incremental KV).
+        let (w, cal, seqs) = setup();
+        let qm = QuantModel::build(&w, Box::new(Fp16), &cal);
+        let tokens = &seqs[0][..8];
+        let full = qm.forward_full(tokens);
+        let mut cache = qm.new_cache(16);
+        assert!(matches!(cache, DecodeCache::Fp(_))); // Fp16 scheme: no KV quant
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let logits = qm.forward_token(tok, pos, &mut cache);
+            for (a, b) in logits.iter().zip(full.row(pos)) {
+                assert!((a - b).abs() < 1e-3, "pos {pos}: {a} vs {b}");
+            }
+        }
+        assert_eq!(cache.tokens(), 8);
+    }
+
+    #[test]
+    fn sdr_cache_decode_close_to_full_forward() {
+        let (w, cal, seqs) = setup();
+        let qm = QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal);
+        let tokens = &seqs[0][..8];
+        let mut cache = qm.new_cache(16);
+        assert!(matches!(cache, DecodeCache::Sdr(_)));
+        let full = qm.forward_full(tokens);
+        let mut worst = 0f64;
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let logits = qm.forward_token(tok, pos, &mut cache);
+            let row = full.row(pos);
+            let rel = {
+                let mut num = 0f64;
+                let mut den = 0f64;
+                for (a, b) in logits.iter().zip(row) {
+                    num += ((a - b) as f64).powi(2);
+                    den += (*b as f64).powi(2);
+                }
+                (num / den).sqrt()
+            };
+            worst = worst.max(rel);
+        }
+        // full forward quantizes per-matrix; decode quantizes per-row +
+        // packed KV — same lattice family, small numerical drift allowed
+        assert!(worst < 0.6, "rel drift {worst}");
+        // the cache really is ~4.25 bits/value
+        let eff = match &cache {
+            DecodeCache::Sdr(c) => c.effective_bits(),
+            _ => unreachable!(),
+        };
+        assert!((4.2..4.35).contains(&eff), "eff bits {eff}");
+    }
+
+    #[test]
+    fn static_scales_used_are_finite_and_positive() {
+        let (w, cal, _) = setup();
+        let qm = QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal);
+        for (site, &amax) in &qm.site_amax {
+            assert!(amax > 0.0, "site {site} amax {amax}");
+        }
+        assert!(qm.act_scale("l0.attn_in", 16).unwrap() > 0.0);
+        assert!(qm.act_scale("ghost", 16).is_none());
+    }
+}

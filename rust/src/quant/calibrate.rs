@@ -1,0 +1,156 @@
+//! Static-scale calibration (paper §5.1).
+//!
+//! Activations and KV caches are quantized **online but with static
+//! scales**: a calibration pass over N sequences (the paper uses 128
+//! WikiText-2 samples) records the absolute maximum observed at every
+//! quantization site; those maxima become fixed per-tensor scales baked
+//! into the serving configuration. This module is the bookkeeping for
+//! that pass.
+
+use std::collections::BTreeMap;
+
+use super::absmax::absmax_scale_from_amax;
+use crate::util::json::Json;
+
+/// Running calibration state: per-site absolute maxima.
+#[derive(Clone, Debug, Default)]
+pub struct Calibrator {
+    amax: BTreeMap<String, f32>,
+    observations: BTreeMap<String, u64>,
+}
+
+impl Calibrator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one batch of values for a named site (e.g. "layer3.qkv_in").
+    pub fn observe(&mut self, site: &str, values: &[f32]) {
+        let batch_max = values.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let e = self.amax.entry(site.to_string()).or_insert(0.0);
+        *e = e.max(batch_max);
+        *self.observations.entry(site.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn amax(&self, site: &str) -> Option<f32> {
+        self.amax.get(site).copied()
+    }
+
+    pub fn sites(&self) -> impl Iterator<Item = &str> {
+        self.amax.keys().map(|s| s.as_str())
+    }
+
+    /// Freeze into a static scale table for a given activation bit width.
+    pub fn freeze(&self, bits: u32) -> StaticScales {
+        StaticScales {
+            bits,
+            scales: self
+                .amax
+                .iter()
+                .map(|(k, &a)| (k.clone(), absmax_scale_from_amax(a, bits)))
+                .collect(),
+        }
+    }
+}
+
+/// Frozen per-site scales — the artifact the serving path loads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StaticScales {
+    pub bits: u32,
+    pub scales: BTreeMap<String, f32>,
+}
+
+impl StaticScales {
+    /// Dequantization scale for a site; panics if the model asks for a
+    /// site that was never calibrated (a config bug worth failing loudly
+    /// on, since silently-zero scales destroy accuracy).
+    pub fn scale(&self, site: &str) -> f32 {
+        *self
+            .scales
+            .get(site)
+            .unwrap_or_else(|| panic!("no calibrated scale for site '{site}'"))
+    }
+
+    pub fn get(&self, site: &str) -> Option<f32> {
+        self.scales.get(site).copied()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("bits", Json::from(self.bits));
+        let mut scales = Json::obj();
+        for (k, &v) in &self.scales {
+            scales.set(k, Json::Num(v as f64));
+        }
+        obj.set("scales", scales);
+        obj
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<StaticScales> {
+        let bits = j.req("bits")?.as_usize().unwrap_or(16) as u32;
+        let mut scales = BTreeMap::new();
+        if let Json::Obj(m) = j.req("scales")? {
+            for (k, v) in m {
+                scales.insert(
+                    k.clone(),
+                    v.as_f64().ok_or_else(|| anyhow::anyhow!("scale '{k}' not a number"))? as f32,
+                );
+            }
+        } else {
+            anyhow::bail!("'scales' is not an object");
+        }
+        Ok(StaticScales { bits, scales })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::absmax::qmax;
+
+    #[test]
+    fn observes_running_max() {
+        let mut c = Calibrator::new();
+        c.observe("x", &[0.5, -1.0]);
+        c.observe("x", &[0.25]);
+        c.observe("x", &[-3.0, 2.0]);
+        assert_eq!(c.amax("x"), Some(3.0));
+        assert_eq!(c.amax("y"), None);
+    }
+
+    #[test]
+    fn freeze_converts_amax_to_scale() {
+        let mut c = Calibrator::new();
+        c.observe("act", &[2.0, -4.0]);
+        let s = c.freeze(16);
+        assert!((s.scale("act") - 4.0 / qmax(16) as f32).abs() < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "no calibrated scale")]
+    fn missing_site_panics() {
+        let c = Calibrator::new();
+        let s = c.freeze(8);
+        s.scale("ghost");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Calibrator::new();
+        c.observe("a.in", &[1.5]);
+        c.observe("b.kv", &[0.125, -8.0]);
+        let s = c.freeze(8);
+        let j = s.to_json();
+        let back = StaticScales::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn multiple_sites_independent() {
+        let mut c = Calibrator::new();
+        c.observe("small", &[0.01]);
+        c.observe("big", &[100.0]);
+        let s = c.freeze(16);
+        assert!(s.scale("big") / s.scale("small") > 9_000.0);
+    }
+}

@@ -1,0 +1,48 @@
+//! Stage 1 of QRazor: **quantization** to the base precision scenario.
+//!
+//! FP values are converted to high-bit integers with absolute-max
+//! scaling (paper §3/§4.1): 8-bit for weights (per output channel),
+//! 16-bit for activations (per tensor, *static* — scales come from a
+//! calibration pass, never recomputed at inference), 8-bit for KV cache
+//! (per tensor, static). This stage alone is the paper's Table 1
+//! (W8A16 ≈ FP16 while W8A8 collapses); stage 2 (`crate::sdr`) then
+//! compresses these integers to 4 bits.
+
+mod absmax;
+mod calibrate;
+
+pub use absmax::*;
+pub use calibrate::*;
+
+/// How scales are shared across a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole tensor (activations, KV cache).
+    PerTensor,
+    /// One scale per row of a 2-D tensor — rows are output channels for
+    /// weight matrices stored `[out, in]` (the paper's per-channel).
+    PerChannel,
+}
+
+/// Base precision presets from the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BasePrecision {
+    /// Weight bits (incl. sign). Paper: 8.
+    pub weight_bits: u32,
+    /// Activation bits (incl. sign). Paper: 16 (8 for the W8A8 ablation).
+    pub act_bits: u32,
+    /// KV-cache bits (incl. sign). Paper: 8 (16 = effectively uncompressed).
+    pub kv_bits: u32,
+}
+
+impl BasePrecision {
+    /// W8A16 — the paper's primary base for W4A4 (KV kept FP16/A-width).
+    pub const W8A16: BasePrecision =
+        BasePrecision { weight_bits: 8, act_bits: 16, kv_bits: 16 };
+    /// W8A16KV8 — the base for W4A4KV4.
+    pub const W8A16KV8: BasePrecision =
+        BasePrecision { weight_bits: 8, act_bits: 16, kv_bits: 8 };
+    /// W8A8 — Table 1's collapsing ablation.
+    pub const W8A8: BasePrecision =
+        BasePrecision { weight_bits: 8, act_bits: 8, kv_bits: 8 };
+}

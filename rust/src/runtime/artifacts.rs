@@ -1,0 +1,162 @@
+//! Artifact manifest: `artifacts/meta.json` written by
+//! `python/compile/aot.py` describes the model config, the canonical
+//! parameter order, the static shapes of each lowered executable, and
+//! the artifact file names. The runtime refuses to run on mismatched
+//! shapes rather than letting PJRT fail opaquely.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: Vec<(String, String)>,
+    pub sdr_kernel: SdrKernelSpec,
+}
+
+/// Shape/config of the standalone SDR kernel artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SdrKernelSpec {
+    pub rows: usize,
+    pub cols: usize,
+    pub base_bits: u32,
+    pub target_bits: u32,
+    pub group: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read {}/meta.json: {e} — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let model = ModelConfig::from_json(j.req("model")?)?;
+        let usize_at = |obj: &Json, k: &str| -> anyhow::Result<usize> {
+            obj.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("meta.json field '{k}' not a number"))
+        };
+        let train = j.req("train")?;
+        let eval = j.req("eval")?;
+        let sk = j.req("sdr_kernel")?;
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> anyhow::Result<(String, Vec<usize>)> {
+                let name = p.req("name")?.as_str().unwrap_or_default().to_string();
+                let shape = p
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect();
+                Ok((name, shape))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let artifacts = match j.req("artifacts")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+                .collect(),
+            _ => anyhow::bail!("artifacts not an object"),
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            train_batch: usize_at(train, "batch")?,
+            train_seq: usize_at(train, "seq")?,
+            eval_batch: usize_at(eval, "batch")?,
+            eval_seq: usize_at(eval, "seq")?,
+            params,
+            artifacts,
+            sdr_kernel: SdrKernelSpec {
+                rows: usize_at(sk, "rows")?,
+                cols: usize_at(sk, "cols")?,
+                base_bits: usize_at(sk, "base_bits")? as u32,
+                target_bits: usize_at(sk, "target_bits")? as u32,
+                group: usize_at(sk, "group")?,
+            },
+        })
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn artifact_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let file = self
+            .artifacts
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Verify the parameter order matches the Rust model's canonical
+    /// order — a mismatch here would silently scramble weights.
+    pub fn check_param_order(&self) -> anyhow::Result<()> {
+        let expect = crate::model::ModelWeights::param_specs(&self.model);
+        anyhow::ensure!(
+            expect.len() == self.params.len(),
+            "param count mismatch: rust {} vs manifest {}",
+            expect.len(),
+            self.params.len()
+        );
+        for ((en, es), (mn, ms)) in expect.iter().zip(&self.params) {
+            anyhow::ensure!(
+                en == mn && es == ms,
+                "param order mismatch at '{en}' {es:?} vs '{mn}' {ms:?}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$QRAZOR_ARTIFACTS` or
+/// `./artifacts/nano` (the CI-scale preset `make artifacts` builds).
+pub fn default_dir() -> PathBuf {
+    std::env::var("QRAZOR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts/nano"))
+}
+
+/// Artifacts directory for a specific preset.
+pub fn preset_dir(preset: &str) -> PathBuf {
+    std::env::var("QRAZOR_ARTIFACTS_ROOT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        .join(preset)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_dir().join("meta.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads_and_param_order_matches() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&default_dir()).unwrap();
+        m.check_param_order().unwrap();
+        assert!(m.artifact_path("train_step").unwrap().exists());
+        assert!(m.artifact_path("lm_logits_fp").unwrap().exists());
+        assert!(m.artifact_path("sdr_fakequant").unwrap().exists());
+        assert!(m.artifact_path("nonexistent").is_err());
+        assert_eq!(m.sdr_kernel.group, 16);
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute
+//! many times. The only place in the crate that touches the `xla` FFI.
+
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+/// A PJRT runtime (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable ready to run.
+pub struct Exec {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (the interchange format —
+    /// see python/compile/aot.py for why not serialized protos).
+    pub fn load_hlo(&self, path: &Path) -> anyhow::Result<Exec> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Exec {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+impl Exec {
+    /// Execute with the given input literals; the lowered modules all
+    /// return one tuple (aot.py lowers with `return_tuple=True`), which
+    /// is decomposed into a vector of output literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Convert a Rust tensor to an f32 literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor<f32>) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Convert a 1-D f32 vector to a literal with an explicit shape.
+pub fn vec_to_literal(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Convert token ids to an i32 literal `[batch, seq]`.
+pub fn tokens_to_literal(tokens: &[u32], batch: usize, seq: usize) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(tokens.len() == batch * seq, "token count {} != {batch}x{seq}", tokens.len());
+    let ints: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    Ok(xla::Literal::vec1(&ints).reshape(&[batch as i64, seq as i64])?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Convert an f32 literal back to a tensor with the given shape.
+pub fn literal_to_tensor(l: &xla::Literal, shape: &[usize]) -> anyhow::Result<Tensor<f32>> {
+    let data = l.to_vec::<f32>()?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "literal has {} elements, shape {:?} wants {}",
+        data.len(),
+        shape,
+        shape.iter().product::<usize>()
+    );
+    Ok(Tensor::from_vec(shape, data))
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn literal_to_scalar(l: &xla::Literal) -> anyhow::Result<f32> {
+    let v = l.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{default_dir, Manifest};
+
+    fn runtime_or_skip() -> Option<(Runtime, Manifest)> {
+        if !default_dir().join("meta.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        let rt = Runtime::cpu().expect("pjrt cpu client");
+        let m = Manifest::load(&default_dir()).unwrap();
+        Some((rt, m))
+    }
+
+    #[test]
+    fn sdr_kernel_artifact_matches_rust_bit_level_coder() {
+        // The flagship cross-language test: the Pallas SDR kernel (via
+        // PJRT) and the Rust bit-level coder must agree EXACTLY.
+        let Some((rt, m)) = runtime_or_skip() else { return };
+        let exec = rt.load_hlo(&m.artifact_path("sdr_fakequant").unwrap()).unwrap();
+        let spec = m.sdr_kernel;
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut x = Tensor::zeros(&[spec.rows, spec.cols]);
+        for v in x.data_mut().iter_mut() {
+            *v = rng.heavy_tailed(1.0, 0.02, 25.0);
+        }
+        let scale = crate::quant::absmax_scale(x.data(), spec.base_bits);
+        let out = exec
+            .run(&[
+                tensor_to_literal(&x).unwrap(),
+                vec_to_literal(&[scale], &[1, 1]).unwrap(),
+            ])
+            .unwrap();
+        let got = literal_to_tensor(&out[0], &[spec.rows, spec.cols]).unwrap();
+        let want = crate::sdr::razor::qrazor_fake_quant_static(
+            &x,
+            crate::sdr::SdrSpec::new(spec.base_bits, spec.target_bits, spec.group),
+            scale,
+        );
+        assert_eq!(got.data(), want.data(), "pallas kernel != rust coder");
+    }
+
+    #[test]
+    fn fp_logits_artifact_matches_rust_forward() {
+        // L2 (JAX) and L3 (Rust) share architecture + weights: logits
+        // must agree to f32 tolerance.
+        let Some((rt, m)) = runtime_or_skip() else { return };
+        m.check_param_order().unwrap();
+        let exec = rt.load_hlo(&m.artifact_path("lm_logits_fp").unwrap()).unwrap();
+        let w = crate::model::ModelWeights::init_random(&m.model, 7);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let tokens: Vec<u32> = (0..m.eval_seq)
+            .map(|_| rng.below(m.model.vocab as u64) as u32)
+            .collect();
+        let mut inputs =
+            vec![tokens_to_literal(&tokens, m.eval_batch, m.eval_seq).unwrap()];
+        for (_, t) in w.to_named() {
+            inputs.push(tensor_to_literal(&t).unwrap());
+        }
+        let out = exec.run(&inputs).unwrap();
+        let got =
+            literal_to_tensor(&out[0], &[m.eval_seq, m.model.vocab]).unwrap();
+        let want = crate::model::forward_full(&w, &tokens);
+        let mut max_err = 0f32;
+        for (a, b) in got.data().iter().zip(want.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-2, "jax/rust logits diverge: max err {max_err}");
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the L2 JAX artifacts (`artifacts/*.hlo.txt`,
+//! compiled once by `make artifacts`) and executes them from Rust.
+//! Python never runs on this path.
+//!
+//! * [`artifacts`] — manifest parsing + shape/order validation.
+//! * [`client`] — the PJRT client/executable wrapper and literal
+//!   conversions.
+//! * [`trainer`] — the training driver: loops the `train_step`
+//!   executable, shuttling flat parameter/moment arrays, and writes a
+//!   Rust-native checkpoint at the end.
+
+pub mod artifacts;
+pub mod client;
+pub mod trainer;
+
+pub use artifacts::{default_dir, Manifest};
+pub use client::{Exec, Runtime};

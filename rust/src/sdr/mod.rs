@@ -1,0 +1,30 @@
+//! Stage 2 of QRazor: **Significant Data Razoring** (paper §4.2–4.3).
+//!
+//! The base-precision integers from `crate::quant` are compressed per
+//! group of `g` elements: the group's *razoring point* — the bit position
+//! of the leading one of the bitwise OR of all magnitudes — anchors a
+//! salient window of `target_bits − 1` magnitude bits; everything above
+//! is provably zero and everything below is rounded away (round to
+//! nearest, flooring when the salient bits are all ones so the carry can
+//! never overflow into the sign — Algorithm 1's exception). A 4-bit
+//! per-group *flag* records how many LSBs were truncated, which is all
+//! that's needed to (a) reconstruct values by a left shift, or (b) skip
+//! reconstruction entirely and feed a narrow multiplier plus one barrel
+//! shift per group pair — the decompression-free GEMM in [`gemm`].
+//!
+//! Module layout:
+//! * [`signmag`] — sign-magnitude view of two's-complement integers and
+//!   leading-one arithmetic.
+//! * [`razor`] — the SDR coder itself ([`razor::SdrSpec`], [`razor::SdrVector`],
+//!   [`razor::SdrMatrix`]).
+//! * [`packed`] — nibble-packed storage + flag store with exact memory
+//!   accounting (the effective-bits claims of Tables 2/4).
+//! * [`gemm`] — decompression-free integer GEMM (Fig. 3(b)) and the
+//!   decompress-then-multiply reference (Fig. 3(a)) it is bit-equal to.
+
+pub mod gemm;
+pub mod packed;
+pub mod razor;
+pub mod signmag;
+
+pub use razor::{SdrMatrix, SdrSpec, SdrVector};

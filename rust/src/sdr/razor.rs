@@ -1,0 +1,663 @@
+//! The SDR coder (paper §4.2, Algorithm 1).
+//!
+//! Compression of one group of base-precision integers:
+//!
+//! ```text
+//! magnitudes   m_i  (base_bits−1 wide)
+//! group OR     M = m_0 | m_1 | … | m_{g−1}
+//! razor point  r = leading-one index of M
+//! flag         f = max(r − (s−1), 0)         s = target_bits−1 salient bits
+//! code         c_i = rtn(m_i >> f)           floor when c_i would be all-ones
+//! ```
+//!
+//! Reconstruction is `ĉ_i = c_i << f` with the original sign. The flag is
+//! shared by the whole group; `target_bits` is all an element costs, so
+//! effective storage is `target_bits + flag_bits/g` bits per value — the
+//! paper's Eff. Bits column (g16 → 4.25, g32 → 4.125, g128 → 4.03).
+
+use super::signmag::{group_or, leading_one};
+use crate::quant::{Granularity, QuantTensor};
+
+/// Static description of an SDR configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SdrSpec {
+    /// Base precision (bits incl. sign) of the input integers: 8 or 16.
+    pub base_bits: u32,
+    /// Compressed precision (bits incl. sign): 4 (W4/A4/KV4) or 8 (A8).
+    pub target_bits: u32,
+    /// Elements per compression group (paper evaluates 8..128).
+    pub group: usize,
+}
+
+impl SdrSpec {
+    pub fn new(base_bits: u32, target_bits: u32, group: usize) -> SdrSpec {
+        assert!(base_bits >= target_bits, "base {base_bits} < target {target_bits}");
+        assert!((2..=16).contains(&target_bits));
+        assert!(base_bits <= 16);
+        assert!(group >= 1);
+        SdrSpec { base_bits, target_bits, group }
+    }
+
+    /// Salient magnitude bits retained per element.
+    #[inline]
+    pub fn salient_bits(&self) -> u32 {
+        self.target_bits - 1
+    }
+
+    /// Largest representable salient magnitude (all-ones code).
+    #[inline]
+    pub fn salient_max(&self) -> u32 {
+        (1 << self.salient_bits()) - 1
+    }
+
+    /// Largest possible flag value: base magnitude width minus salient width.
+    #[inline]
+    pub fn max_flag(&self) -> u32 {
+        (self.base_bits - 1).saturating_sub(self.salient_bits())
+    }
+
+    /// Bits used to store one flag. The paper stores 4 flag bits per
+    /// group uniformly (Table 4's effective-bits arithmetic).
+    #[inline]
+    pub fn flag_bits(&self) -> u32 {
+        4
+    }
+
+    /// Storage cost per element including amortized flags.
+    pub fn effective_bits(&self) -> f64 {
+        self.target_bits as f64 + self.flag_bits() as f64 / self.group as f64
+    }
+}
+
+/// Compress the magnitudes of one group in place.
+///
+/// `values` are base-precision quantized integers (two's complement).
+/// Returns the group flag and writes sign-preserved compressed codes
+/// (`code` = salient magnitude, `neg` from input) through `out`.
+#[inline]
+pub fn compress_group(spec: &SdrSpec, values: &[i32], out: &mut [SdrCode]) -> u8 {
+    debug_assert_eq!(values.len(), out.len());
+    let m_or = group_or(values);
+    let flag = match leading_one(m_or) {
+        None => 0u32,
+        Some(r) => r.saturating_sub(spec.salient_bits() - 1).min(spec.max_flag()),
+    };
+    let all_ones = spec.salient_max();
+    for (o, &v) in out.iter_mut().zip(values) {
+        let mag = v.unsigned_abs();
+        let mut code = mag >> flag;
+        debug_assert!(code <= all_ones, "code {code} overflows salient width");
+        // Round-to-nearest on the truncated LSBs — *unless* the code is
+        // already all-ones, where a carry would overflow into the razor
+        // window (Algorithm 1's floor exception).
+        if code != all_ones && flag > 0 && (mag >> (flag - 1)) & 1 == 1 {
+            code += 1;
+        }
+        *o = SdrCode { neg: v < 0, code: code as u8 };
+    }
+    flag as u8
+}
+
+/// One compressed element: sign + salient magnitude code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct SdrCode {
+    pub neg: bool,
+    pub code: u8,
+}
+
+impl SdrCode {
+    /// Reconstructed base-precision integer given the group flag.
+    #[inline]
+    pub fn reconstruct(self, flag: u8) -> i32 {
+        let mag = (self.code as i32) << flag;
+        if self.neg {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Signed salient value in [−salient_max, +salient_max].
+    #[inline]
+    pub fn signed(self) -> i32 {
+        if self.neg {
+            -(self.code as i32)
+        } else {
+            self.code as i32
+        }
+    }
+}
+
+/// An SDR-compressed vector (one row / one tensor flattened): codes plus
+/// per-group flags and the stage-1 scale needed for dequantization.
+#[derive(Clone, Debug)]
+pub struct SdrVector {
+    pub spec: SdrSpec,
+    pub codes: Vec<SdrCode>,
+    pub flags: Vec<u8>,
+    /// Stage-1 dequant multiplier (per-tensor or per-channel slice owner's).
+    pub scale: f32,
+}
+
+impl SdrVector {
+    /// Compress a slice of base-precision integers. The final group may
+    /// be shorter than `spec.group` when the length is not divisible.
+    pub fn compress(spec: SdrSpec, values: &[i32], scale: f32) -> SdrVector {
+        let mut codes = vec![SdrCode::default(); values.len()];
+        let mut flags = Vec::with_capacity(values.len().div_ceil(spec.group));
+        for (chunk, out) in values.chunks(spec.group).zip(codes.chunks_mut(spec.group)) {
+            flags.push(compress_group(&spec, chunk, out));
+        }
+        SdrVector { spec, codes, flags, scale }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Flag of the group containing element `i`.
+    #[inline]
+    pub fn flag_for(&self, i: usize) -> u8 {
+        self.flags[i / self.spec.group]
+    }
+
+    /// Reconstruct base-precision integers (`decompress` in the paper).
+    pub fn reconstruct(&self) -> Vec<i32> {
+        self.codes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c.reconstruct(self.flag_for(i)))
+            .collect()
+    }
+
+    /// Dequantize straight to f32 (reconstruct × stage-1 scale).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.reconstruct().iter().map(|&v| v as f32 * self.scale).collect()
+    }
+}
+
+/// A 2-D SDR-compressed matrix with row-major groups along the inner
+/// (column / reduction) dimension — the layout both activations
+/// `[tokens, channels]` and weights `[out_channels, in_channels]` use, so
+/// GEMM group pairs align along k.
+#[derive(Clone, Debug)]
+pub struct SdrMatrix {
+    pub spec: SdrSpec,
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<SdrCode>,
+    /// `rows × groups_per_row` flags.
+    pub flags: Vec<u8>,
+    /// Per-row scale (len `rows`, per-channel weights) or single
+    /// (len 1, per-tensor activations).
+    pub scales: Vec<f32>,
+}
+
+impl SdrMatrix {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.spec.group)
+    }
+
+    /// Compress a stage-1 quantized tensor (2-D).
+    pub fn compress(spec: SdrSpec, q: &QuantTensor) -> SdrMatrix {
+        assert_eq!(q.shape.len(), 2, "SdrMatrix::compress needs 2-D");
+        assert_eq!(
+            q.bits, spec.base_bits,
+            "stage-1 bits {} != spec.base_bits {}",
+            q.bits, spec.base_bits
+        );
+        let (rows, cols) = (q.shape[0], q.shape[1]);
+        let gpr = cols.div_ceil(spec.group);
+        let mut codes = vec![SdrCode::default(); rows * cols];
+        let mut flags = vec![0u8; rows * gpr];
+        for r in 0..rows {
+            let row = &q.values[r * cols..(r + 1) * cols];
+            let orow = &mut codes[r * cols..(r + 1) * cols];
+            for (gi, (chunk, out)) in row
+                .chunks(spec.group)
+                .zip(orow.chunks_mut(spec.group))
+                .enumerate()
+            {
+                flags[r * gpr + gi] = compress_group(&spec, chunk, out);
+            }
+        }
+        SdrMatrix { spec, rows, cols, codes, flags, scales: q.scales.clone() }
+    }
+
+    #[inline]
+    pub fn scale_for_row(&self, r: usize) -> f32 {
+        if self.scales.len() == 1 {
+            self.scales[0]
+        } else {
+            self.scales[r]
+        }
+    }
+
+    #[inline]
+    pub fn row_codes(&self, r: usize) -> &[SdrCode] {
+        &self.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_flags(&self, r: usize) -> &[u8] {
+        let gpr = self.groups_per_row();
+        &self.flags[r * gpr..(r + 1) * gpr]
+    }
+
+    /// Reconstruct to the base-precision integer lattice.
+    pub fn reconstruct(&self) -> QuantTensor {
+        let gpr = self.groups_per_row();
+        let mut values = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for (i, c) in self.row_codes(r).iter().enumerate() {
+                values.push(c.reconstruct(self.flags[r * gpr + i / self.spec.group]));
+            }
+        }
+        QuantTensor {
+            shape: vec![self.rows, self.cols],
+            values,
+            scales: self.scales.clone(),
+            bits: self.spec.base_bits,
+            granularity: if self.scales.len() == 1 {
+                Granularity::PerTensor
+            } else {
+                Granularity::PerChannel
+            },
+        }
+    }
+
+    /// Dequantize to f32 (for the fake-quant accuracy experiments).
+    pub fn dequantize(&self) -> crate::tensor::Tensor<f32> {
+        self.reconstruct().dequantize()
+    }
+
+    /// Fraction of elements whose compressed code is zero — Fig. 2(c).
+    pub fn zeroed_fraction(&self) -> f64 {
+        if self.codes.is_empty() {
+            return 0.0;
+        }
+        self.codes.iter().filter(|c| c.code == 0).count() as f64 / self.codes.len() as f64
+    }
+}
+
+/// End-to-end fake-quant: stage-1 absmax quantization at `spec.base_bits`
+/// then SDR compression and dequantization back to f32. This is *the*
+/// QRazor transform every accuracy table applies.
+pub fn qrazor_fake_quant(
+    x: &crate::tensor::Tensor<f32>,
+    spec: SdrSpec,
+    granularity: Granularity,
+) -> crate::tensor::Tensor<f32> {
+    let q = QuantTensor::quantize(x, spec.base_bits, granularity);
+    if x.ndim() == 2 {
+        SdrMatrix::compress(spec, &q).dequantize()
+    } else {
+        let flat = QuantTensor { shape: vec![1, x.len()], ..q };
+        let out = SdrMatrix::compress(spec, &flat).dequantize();
+        crate::tensor::Tensor::from_vec(x.shape(), out.into_vec())
+    }
+}
+
+/// Fake-quant with an externally calibrated static per-tensor scale
+/// (the online activation path). Uses the fused no-allocation kernel
+/// when the group fits the stack buffer.
+pub fn qrazor_fake_quant_static(
+    x: &crate::tensor::Tensor<f32>,
+    spec: SdrSpec,
+    scale: f32,
+) -> crate::tensor::Tensor<f32> {
+    if spec.group <= FUSED_MAX_GROUP {
+        let mut out = crate::tensor::Tensor::zeros(x.shape());
+        qrazor_fake_quant_slice(x.data(), spec, scale, out.data_mut());
+        return out;
+    }
+    let q = QuantTensor::quantize_static(x, spec.base_bits, &[scale]);
+    let flat = QuantTensor { shape: vec![1, x.len()], ..q };
+    let out = SdrMatrix::compress(spec, &flat).dequantize();
+    crate::tensor::Tensor::from_vec(x.shape(), out.into_vec())
+}
+
+/// Largest group the fused kernel's stack buffer covers (the paper
+/// evaluates g ≤ 128).
+pub const FUSED_MAX_GROUP: usize = 128;
+
+/// Fused stage-1 + stage-2 + dequantize on a slice, no heap allocation
+/// — the serving hot path (§Perf). Bit-identical to the staged
+/// pipeline (property-tested below).
+pub fn qrazor_fake_quant_slice(xs: &[f32], spec: SdrSpec, scale: f32, out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len());
+    assert!(spec.group <= FUSED_MAX_GROUP, "group {} exceeds fused buffer", spec.group);
+    let qm = crate::quant::qmax(spec.base_bits);
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    let sal = spec.salient_bits();
+    let all_ones = spec.salient_max();
+    let max_flag = spec.max_flag();
+    let mut buf = [0i32; FUSED_MAX_GROUP];
+    for (chunk, ochunk) in xs.chunks(spec.group).zip(out.chunks_mut(spec.group)) {
+        // stage 1 + group OR in one pass
+        let mut m_or = 0u32;
+        for (b, &x) in buf.iter_mut().zip(chunk) {
+            let v = crate::quant::round_half_even(x * inv).clamp(-qm, qm);
+            *b = v;
+            m_or |= v.unsigned_abs();
+        }
+        let flag = match crate::sdr::signmag::leading_one(m_or) {
+            None => 0u32,
+            Some(r) => r.saturating_sub(sal - 1).min(max_flag),
+        };
+        // stage 2 + dequantize
+        for (o, &v) in ochunk.iter_mut().zip(&buf) {
+            let mag = v.unsigned_abs();
+            let mut code = mag >> flag;
+            if code != all_ones && flag > 0 && (mag >> (flag - 1)) & 1 == 1 {
+                code += 1;
+            }
+            let rec = (code << flag) as f32 * scale;
+            *o = if v < 0 { -rec } else { rec };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qmax;
+    use crate::tensor::Tensor;
+    use crate::util::quickcheck::{check, Config, Gen, IntRange, PairGen, VecGen};
+    use crate::util::rng::Rng;
+
+    fn spec16_4(g: usize) -> SdrSpec {
+        SdrSpec::new(16, 4, g)
+    }
+
+    fn spec8_4(g: usize) -> SdrSpec {
+        SdrSpec::new(8, 4, g)
+    }
+
+    #[test]
+    fn effective_bits_match_paper() {
+        assert!((spec16_4(8).effective_bits() - 4.5).abs() < 1e-12);
+        assert!((spec16_4(16).effective_bits() - 4.25).abs() < 1e-12);
+        assert!((spec16_4(32).effective_bits() - 4.125).abs() < 1e-12);
+        assert!((spec16_4(64).effective_bits() - 4.0625).abs() < 1e-12);
+        assert!((spec16_4(128).effective_bits() - 4.03125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_value_group_examples() {
+        let spec = spec16_4(4);
+        // 0b1011_0110 = 182: leading one at bit 7, salient bits = top 3
+        // (101), flag = 5, truncated MSB of LSBs (bit 4) = 1 -> round up.
+        let mut out = [SdrCode::default(); 1];
+        let flag = compress_group(&spec, &[182], &mut out);
+        assert_eq!(flag, 5);
+        assert_eq!(out[0].code, 0b101 + 1);
+        assert_eq!(out[0].reconstruct(flag), 0b110 << 5); // 192
+    }
+
+    #[test]
+    fn all_ones_floors_instead_of_overflowing() {
+        let spec = spec16_4(1);
+        // 0b1111_1xxx: salient = 111 (all ones) -> must floor, not carry.
+        let mut out = [SdrCode::default(); 1];
+        let flag = compress_group(&spec, &[0b11111100], &mut out);
+        assert_eq!(flag, 5);
+        assert_eq!(out[0].code, 0b111, "all-ones must floor");
+        assert_eq!(out[0].reconstruct(flag), 0b111 << 5);
+    }
+
+    #[test]
+    fn zero_group() {
+        let spec = spec16_4(4);
+        let mut out = [SdrCode::default(); 4];
+        let flag = compress_group(&spec, &[0, 0, 0, 0], &mut out);
+        assert_eq!(flag, 0);
+        assert!(out.iter().all(|c| c.code == 0));
+    }
+
+    #[test]
+    fn small_values_have_zero_flag_and_are_exact() {
+        // All magnitudes fit in the salient width -> lossless.
+        let spec = spec16_4(4);
+        let vals = [3, -7, 0, 5];
+        let mut out = [SdrCode::default(); 4];
+        let flag = compress_group(&spec, &vals, &mut out);
+        assert_eq!(flag, 0);
+        for (c, &v) in out.iter().zip(&vals) {
+            assert_eq!(c.reconstruct(flag), v);
+        }
+    }
+
+    #[test]
+    fn outlier_dominates_group_flag() {
+        // One outlier forces a large flag; small values get razored to 0.
+        let spec = spec16_4(4);
+        let vals = [32000, 3, -2, 1];
+        let mut out = [SdrCode::default(); 4];
+        let flag = compress_group(&spec, &vals, &mut out);
+        assert_eq!(flag, 12); // leading one of 32000 is bit 14; 14-2=12
+        assert_eq!(out[1].code, 0);
+        assert_eq!(out[2].code, 0);
+        // outlier survives at 3-bit precision (all-ones code floors, so
+        // the bound is 2^flag − 1 rather than the round-to-nearest half)
+        let err = (out[0].reconstruct(flag) - 32000).abs();
+        assert!(err <= (1 << flag) - 1, "err={err}");
+    }
+
+    #[test]
+    fn flag_capped_at_max_flag_for_8bit_base() {
+        let spec = spec8_4(2);
+        let mut out = [SdrCode::default(); 2];
+        let flag = compress_group(&spec, &[127, -127], &mut out);
+        assert_eq!(flag as u32, spec.max_flag()); // 7-3 = 4
+        assert_eq!(out[0].code, 0b111 + 1 - 1); // 127>>4 = 7 (all ones -> floor)
+    }
+
+    #[test]
+    fn sdr_vector_multi_group_roundtrip_properties() {
+        let spec = spec16_4(16);
+        let mut rng = Rng::new(42);
+        let vals: Vec<i32> = (0..256)
+            .map(|_| rng.range_i64(-32767, 32767) as i32)
+            .collect();
+        let v = SdrVector::compress(spec, &vals, 1.0);
+        assert_eq!(v.flags.len(), 16);
+        let rec = v.reconstruct();
+        for (i, (&orig, &back)) in vals.iter().zip(&rec).enumerate() {
+            let f = v.flag_for(i);
+            let bound = if f == 0 { 0 } else { 1i32 << f }; // ≤ 2^f (floor case ≤ 2^f−1, rtn ≤ 2^(f−1))
+            assert!(
+                (orig - back).abs() <= bound,
+                "i={i} orig={orig} back={back} flag={f}"
+            );
+            // sign never flips
+            assert!(orig.signum() * back.signum() >= 0);
+        }
+    }
+
+    #[test]
+    fn prop_reconstruction_error_bound_and_sign() {
+        // For every element: |x − x̂| ≤ 2^flag − 1 when floored (all-ones),
+        // else ≤ 2^(flag−1); and the sign is preserved (or value → 0).
+        let gen = PairGen(
+            VecGen { elem: IntRange { lo: -32767, hi: 32767 }, min_len: 1, max_len: 64 },
+            IntRange { lo: 1, hi: 64 },
+        );
+        check("sdr-bound", Config { cases: 400, ..Default::default() }, &gen, |(xs, g)| {
+            let spec = spec16_4(*g as usize);
+            let vals: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
+            let v = SdrVector::compress(spec, &vals, 1.0);
+            let rec = v.reconstruct();
+            vals.iter().zip(&rec).enumerate().all(|(i, (&o, &b))| {
+                let f = v.flag_for(i) as u32;
+                let max_err = if f == 0 { 0 } else { 1i64 << f };
+                ((o as i64 - b as i64).abs() <= max_err) && (o.signum() * b.signum() >= 0)
+            })
+        });
+    }
+
+    #[test]
+    fn prop_codes_fit_target_bits() {
+        let gen = VecGen { elem: IntRange { lo: -32767, hi: 32767 }, min_len: 1, max_len: 40 };
+        for target in [4u32, 6, 8] {
+            check("sdr-code-width", Config { cases: 128, ..Default::default() }, &gen, |xs| {
+                let spec = SdrSpec::new(16, target, 8);
+                let vals: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
+                let v = SdrVector::compress(spec, &vals, 1.0);
+                v.codes.iter().all(|c| (c.code as u32) <= spec.salient_max())
+                    && v.flags.iter().all(|&f| (f as u32) <= spec.max_flag())
+            });
+        }
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        // Compressing an already-reconstructed vector is lossless.
+        let gen = VecGen { elem: IntRange { lo: -32767, hi: 32767 }, min_len: 1, max_len: 64 };
+        check("sdr-idempotent", Config { cases: 200, ..Default::default() }, &gen, |xs| {
+            let spec = spec16_4(16);
+            let vals: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
+            let once = SdrVector::compress(spec, &vals, 1.0).reconstruct();
+            let twice = SdrVector::compress(spec, &once, 1.0).reconstruct();
+            once == twice
+        });
+    }
+
+    #[test]
+    fn matrix_compress_groups_along_columns() {
+        let spec = spec16_4(2);
+        let q = QuantTensor {
+            shape: vec![2, 4],
+            values: vec![100, 2, 3000, 1, /* row1 */ 7, -7, 0, 20000],
+            scales: vec![1.0],
+            bits: 16,
+            granularity: Granularity::PerTensor,
+        };
+        let m = SdrMatrix::compress(spec, &q);
+        assert_eq!(m.groups_per_row(), 2);
+        assert_eq!(m.flags.len(), 4);
+        // row0 group0 covers {100,2}: leading one bit6 -> flag 4
+        assert_eq!(m.row_flags(0)[0], 4);
+        // row1 group0 covers {7,-7}: flag 0 (fits salient width)
+        assert_eq!(m.row_flags(1)[0], 0);
+        let rec = m.reconstruct();
+        assert_eq!(rec.values[4], 7);
+        assert_eq!(rec.values[5], -7);
+    }
+
+    #[test]
+    fn fake_quant_is_integer_lattice_of_integer_path() {
+        // The float fake-quant output must equal reconstruct()*scale exactly.
+        let mut rng = Rng::new(9);
+        let mut x = Tensor::zeros(&[8, 64]);
+        for v in x.data_mut().iter_mut() {
+            *v = rng.heavy_tailed(1.0, 0.02, 25.0);
+        }
+        let spec = spec16_4(16);
+        let fq = qrazor_fake_quant(&x, spec, Granularity::PerTensor);
+        let q = QuantTensor::quantize(&x, 16, Granularity::PerTensor);
+        let m = SdrMatrix::compress(spec, &q);
+        let rec = m.reconstruct();
+        for (a, (&v, s)) in fq
+            .data()
+            .iter()
+            .zip(rec.values.iter().zip(std::iter::repeat(q.scales[0])))
+        {
+            assert_eq!(*a, v as f32 * s);
+        }
+    }
+
+    #[test]
+    fn larger_groups_cannot_reduce_error() {
+        // Aggregate squared error is monotone (statistically) in group
+        // size: check on heavy-tailed data with a safety margin.
+        let mut rng = Rng::new(17);
+        let mut x = Tensor::zeros(&[16, 128]);
+        for v in x.data_mut().iter_mut() {
+            *v = rng.heavy_tailed(1.0, 0.01, 30.0);
+        }
+        let mut errs = Vec::new();
+        for g in [8usize, 32, 128] {
+            let fq = qrazor_fake_quant(&x, spec16_4(g), Granularity::PerTensor);
+            errs.push(x.mse(&fq));
+        }
+        assert!(errs[0] <= errs[1] * 1.05, "g8={} g32={}", errs[0], errs[1]);
+        assert!(errs[1] <= errs[2] * 1.05, "g32={} g128={}", errs[1], errs[2]);
+    }
+
+    #[test]
+    fn w4a8_spec_has_more_salient_bits() {
+        let s = SdrSpec::new(16, 8, 16);
+        assert_eq!(s.salient_bits(), 7);
+        assert_eq!(s.salient_max(), 127);
+        // More salient bits -> lower error on the same data.
+        let mut rng = Rng::new(23);
+        let mut x = Tensor::zeros(&[4, 64]);
+        for v in x.data_mut().iter_mut() {
+            *v = rng.heavy_tailed(1.0, 0.02, 20.0);
+        }
+        let e4 = x.mse(&qrazor_fake_quant(&x, spec16_4(16), Granularity::PerTensor));
+        let e8 = x.mse(&qrazor_fake_quant(&x, s, Granularity::PerTensor));
+        assert!(e8 < e4, "e8={e8} e4={e4}");
+    }
+
+    #[test]
+    fn static_fake_quant_uses_given_scale() {
+        let x = Tensor::from_vec(&[1, 2], vec![0.5, -0.25]);
+        let spec = spec16_4(2);
+        let s = 1.0 / qmax(16) as f32; // amax would be 0.5; force 1.0
+        let fq = qrazor_fake_quant_static(&x, spec, s);
+        // values quantize to 16384, -8192; group flag = 14-2=12
+        // 16384>>12=4 exact; 8192>>12=2 exact
+        assert_eq!(fq.data()[0], (4 << 12) as f32 * s);
+        assert_eq!(fq.data()[1], -((2 << 12) as f32 * s));
+    }
+
+    #[test]
+    fn zeroed_fraction_counts_razored_elements() {
+        let spec = spec16_4(4);
+        let q = QuantTensor {
+            shape: vec![1, 4],
+            values: vec![32000, 1, 1, 1], // small ones get razored to 0
+            scales: vec![1.0],
+            bits: 16,
+            granularity: Granularity::PerTensor,
+        };
+        let m = SdrMatrix::compress(spec, &q);
+        assert!((m.zeroed_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_fused_kernel_equals_staged_pipeline() {
+        // The §Perf fast path must be bit-identical to the reference
+        // staged pipeline for every shape/group/scale.
+        let gen = PairGen(
+            VecGen { elem: crate::util::quickcheck::ActivationLike::default(), min_len: 1, max_len: 200 },
+            IntRange { lo: 1, hi: 128 },
+        );
+        check("fused≡staged", Config { cases: 200, ..Default::default() }, &gen, |(xs, g)| {
+            let spec = SdrSpec::new(16, 4, *g as usize);
+            let t = Tensor::from_vec(&[xs.len()], xs.clone());
+            let scale = crate::quant::absmax_scale(t.data(), 16).max(1e-6);
+            // staged reference
+            let q = QuantTensor::quantize_static(&t, 16, &[scale]);
+            let flat = QuantTensor { shape: vec![1, xs.len()], ..q };
+            let staged = SdrMatrix::compress(spec, &flat).dequantize();
+            // fused
+            let mut fused = vec![0f32; xs.len()];
+            qrazor_fake_quant_slice(t.data(), spec, scale, &mut fused);
+            staged.data() == fused.as_slice()
+        });
+    }
+
+    #[test]
+    fn gen_smoke() {
+        let mut rng = Rng::new(1);
+        let g = IntRange { lo: 0, hi: 3 };
+        let _ = g.generate(&mut rng);
+    }
+}

@@ -1,0 +1,134 @@
+//! Sign-magnitude arithmetic helpers (paper Algorithm 1's format step).
+//!
+//! The quantization stage produces symmetric two's-complement integers;
+//! SDR operates on *sign-and-magnitude*: a sign bit plus an unsigned
+//! magnitude. The conversion is trivial in software but spelled out here
+//! because the hardware datapath (`crate::hw::datapath`) mirrors these
+//! exact bit manipulations and the tests cross-check both.
+
+/// Sign-magnitude decomposition of a quantized value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SignMag {
+    /// true = negative.
+    pub neg: bool,
+    pub mag: u32,
+}
+
+impl SignMag {
+    #[inline]
+    pub fn from_i32(v: i32) -> SignMag {
+        SignMag { neg: v < 0, mag: v.unsigned_abs() }
+    }
+
+    #[inline]
+    pub fn to_i32(self) -> i32 {
+        if self.neg {
+            -(self.mag as i32)
+        } else {
+            self.mag as i32
+        }
+    }
+
+    /// Encode into a `bits`-wide field: sign in the MSB, magnitude below.
+    /// This is the wire format of the packed stores.
+    #[inline]
+    pub fn encode(self, bits: u32) -> u32 {
+        debug_assert!(self.mag < (1 << (bits - 1)), "mag {} overflows {bits} bits", self.mag);
+        ((self.neg as u32) << (bits - 1)) | self.mag
+    }
+
+    #[inline]
+    pub fn decode(field: u32, bits: u32) -> SignMag {
+        let sign_bit = 1u32 << (bits - 1);
+        SignMag { neg: field & sign_bit != 0, mag: field & (sign_bit - 1) }
+    }
+}
+
+/// Bit position (0-indexed from LSB) of the leading one; `None` for 0.
+#[inline]
+pub fn leading_one(v: u32) -> Option<u32> {
+    if v == 0 {
+        None
+    } else {
+        Some(31 - v.leading_zeros())
+    }
+}
+
+/// Bitwise OR of all magnitudes in a slice of quantized values — the
+/// paper's one-pass group statistic (Appendix A.2): the leading one of
+/// the OR equals the max of the leading ones, obtained without comparing
+/// magnitudes.
+#[inline]
+pub fn group_or(values: &[i32]) -> u32 {
+    let mut acc = 0u32;
+    for &v in values {
+        acc |= v.unsigned_abs();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, Config, IntRange, VecGen};
+
+    #[test]
+    fn roundtrip_i32() {
+        for v in [-32767i32, -1, 0, 1, 5, 127, 32767] {
+            assert_eq!(SignMag::from_i32(v).to_i32(), v);
+        }
+    }
+
+    #[test]
+    fn encode_decode_field() {
+        let sm = SignMag { neg: true, mag: 5 };
+        let f = sm.encode(4);
+        assert_eq!(f, 0b1101);
+        assert_eq!(SignMag::decode(f, 4), sm);
+        let sm2 = SignMag { neg: false, mag: 7 };
+        assert_eq!(SignMag::decode(sm2.encode(4), 4), sm2);
+    }
+
+    #[test]
+    fn leading_one_positions() {
+        assert_eq!(leading_one(0), None);
+        assert_eq!(leading_one(1), Some(0));
+        assert_eq!(leading_one(2), Some(1));
+        assert_eq!(leading_one(3), Some(1));
+        assert_eq!(leading_one(0x8000), Some(15));
+        assert_eq!(leading_one(0x7FFF), Some(14));
+    }
+
+    #[test]
+    fn group_or_handles_negatives() {
+        assert_eq!(group_or(&[-5, 2]), 7);
+        assert_eq!(group_or(&[0, 0]), 0);
+        assert_eq!(group_or(&[-32767]), 32767);
+    }
+
+    #[test]
+    fn prop_leading_one_of_or_is_max_of_leading_ones() {
+        // The paper's core hardware claim (Appendix A.2): OR-then-LZD is
+        // equivalent to max-of-LZDs. Property-check it.
+        let gen = VecGen { elem: IntRange { lo: -32767, hi: 32767 }, min_len: 1, max_len: 128 };
+        check("or-lzd-equiv", Config::default(), &gen, |xs| {
+            let xs: Vec<i32> = xs.iter().map(|&x| x as i32).collect();
+            let via_or = leading_one(group_or(&xs));
+            let via_max = xs
+                .iter()
+                .filter_map(|&v| leading_one(v.unsigned_abs()))
+                .max();
+            via_or == via_max
+        });
+    }
+
+    #[test]
+    fn prop_signmag_roundtrip() {
+        check(
+            "signmag-roundtrip",
+            Config::default(),
+            &IntRange { lo: -(1 << 20), hi: 1 << 20 },
+            |&v| SignMag::from_i32(v as i32).to_i32() == v as i32,
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Minimal dense tensor library.
+//!
+//! The reproduction needs a tensor substrate for three distinct uses:
+//! float reference math (model inference, baselines), integer-domain
+//! QRazor data (i32 lattices), and views/slices for per-channel and
+//! per-group traversals. This module provides a row-major `Tensor<T>`
+//! with shape/stride bookkeeping and the handful of ops the system
+//! needs — not a general autograd framework (training happens in L2/JAX).
+
+mod ops;
+
+pub use ops::*;
+
+/// Dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-initialized tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Build from existing data; length must match the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[T] {
+        assert_eq!(self.ndim(), 2, "row() on non-matrix");
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        assert_eq!(self.ndim(), 2, "row_mut() on non-matrix");
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (d, (&i, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(i < s, "index {i} out of bounds for dim {d} (size {s})");
+            off = off * s + i;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Transpose a 2-D tensor (materialized).
+    pub fn transpose2(&self) -> Self {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+}
+
+impl Tensor<f32> {
+    /// Map elementwise.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Largest |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean squared error vs another tensor of the same shape.
+    pub fn mse(&self, other: &Self) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Write raw little-endian f32s with a tiny header (shape) — the
+    /// checkpoint format shared by train (PJRT) and serve paths.
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> std::io::Result<()> {
+        w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
+        for &s in &self.shape {
+            w.write_all(&(s as u32).to_le_bytes())?;
+        }
+        for &x in &self.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl std::io::Read) -> std::io::Result<Self> {
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let ndim = u32::from_le_bytes(b4) as usize;
+        if ndim > 8 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("implausible ndim {ndim}"),
+            ));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            r.read_exact(&mut b4)?;
+            shape.push(u32::from_le_bytes(b4) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        for v in data.iter_mut() {
+            r.read_exact(&mut b4)?;
+            *v = f32::from_le_bytes(b4);
+        }
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: TensorF = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(t.at(&[0, 0]), 0);
+        assert_eq!(t.at(&[0, 2]), 2);
+        assert_eq!(t.at(&[1, 0]), 3);
+        assert_eq!(t.row(1), &[3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_panics() {
+        let t: TensorI = Tensor::zeros(&[2, 2]);
+        t.at(&[2, 0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at(&[0, 1]), 4);
+        assert_eq!(tt.transpose2(), t);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1.0f32, 2.0, 3.0, 4.0]);
+        let t2 = t.clone().reshape(&[2, 2]);
+        assert_eq!(t2.at(&[1, 0]), 3.0);
+    }
+
+    #[test]
+    fn abs_max_and_mse() {
+        let a = Tensor::from_vec(&[3], vec![1.0f32, -5.0, 2.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0f32, -5.0, 4.0]);
+        assert_eq!(a.abs_max(), 5.0);
+        assert!((a.mse(&b) - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn io_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.5f32, -2.5, 3.25, 0.0]);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Tensor::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn io_rejects_garbage() {
+        let garbage = vec![0xFFu8; 16];
+        assert!(Tensor::<f32>::read_from(&mut &garbage[..]).is_err());
+    }
+}

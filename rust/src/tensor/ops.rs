@@ -1,0 +1,231 @@
+//! Float reference operations over [`Tensor`]: GEMM, softmax, norms and
+//! elementwise math. These are the *reference* numerics — the QRazor
+//! integer path (`crate::sdr::gemm`) is validated against them, and the
+//! Rust model inference uses them on dequantized lattices.
+
+use super::Tensor;
+use crate::util::threadpool::parallel_for;
+
+/// C = A(m×k) · B(k×n), blocked and parallelized over rows of A.
+pub fn matmul(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    // Exclusive row slices handed out by index — safe, no aliasing.
+    struct SendPtr(*mut f32);
+    unsafe impl Sync for SendPtr {}
+    impl SendPtr {
+        fn get(&self) -> *mut f32 {
+            self.0
+        }
+    }
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let (adata, bdata) = (a.data(), b.data());
+    parallel_for(m, |i| {
+        let arow = &adata[i * k..(i + 1) * k];
+        let crow = unsafe { std::slice::from_raw_parts_mut(cptr.get().add(i * n), n) };
+        // ikj loop order: stream B rows, accumulate into C row (cache-friendly).
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bdata[p * n..(p + 1) * n];
+            for (cj, &bv) in crow.iter_mut().zip(brow) {
+                *cj += av * bv;
+            }
+        }
+    });
+    c
+}
+
+/// C = A(m×k) · Bᵀ where B is given as (n×k) — the natural layout for
+/// attention scores (Q·Kᵀ) and for weight matrices stored row-major per
+/// output channel.
+pub fn matmul_bt(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_bt inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    struct SendPtr(*mut f32);
+    unsafe impl Sync for SendPtr {}
+    impl SendPtr {
+        fn get(&self) -> *mut f32 {
+            self.0
+        }
+    }
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let (adata, bdata) = (a.data(), b.data());
+    parallel_for(m, |i| {
+        let arow = &adata[i * k..(i + 1) * k];
+        let crow = unsafe { std::slice::from_raw_parts_mut(cptr.get().add(i * n), n) };
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let brow = &bdata[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *cj = acc;
+        }
+    });
+    c
+}
+
+/// In-place row-wise softmax over the last dim of a 2-D tensor.
+pub fn softmax_rows(x: &mut Tensor<f32>) {
+    assert_eq!(x.ndim(), 2);
+    let cols = x.shape()[1];
+    for row in x.data_mut().chunks_mut(cols) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise log-softmax (numerically stable), returning a new tensor.
+pub fn log_softmax_rows(x: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(x.ndim(), 2);
+    let cols = x.shape()[1];
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_mut(cols) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let lse = row.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+    out
+}
+
+/// RMSNorm over the last dim: x * w / rms(x).
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), out.len());
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / ((ms as f32 + eps).sqrt());
+    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * inv * wi;
+    }
+}
+
+/// SiLU activation x·σ(x).
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// a += b (elementwise).
+pub fn add_assign(a: &mut Tensor<f32>, b: &Tensor<f32>) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += y;
+    }
+}
+
+/// Argmax over a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], v: Vec<f32>) -> Tensor<f32> {
+        Tensor::from_vec(shape, v)
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = t(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(1);
+        let mut a = Tensor::zeros(&[7, 13]);
+        let mut b = Tensor::zeros(&[13, 5]);
+        rng.fill_normal(a.data_mut(), 0.0, 1.0);
+        rng.fill_normal(b.data_mut(), 0.0, 1.0);
+        let c1 = matmul(&a, &b);
+        let c2 = matmul_bt(&a, &b.transpose2());
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = t(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut x);
+        for i in 0..2 {
+            let s: f32 = x.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(x.row(i).iter().all(|&v| v > 0.0));
+        }
+        // monotone: bigger logit -> bigger prob
+        assert!(x.at(&[0, 2]) > x.at(&[0, 1]));
+    }
+
+    #[test]
+    fn softmax_stable_for_huge_logits() {
+        let mut x = t(&[1, 3], vec![1000.0, 1001.0, 999.0]);
+        softmax_rows(&mut x);
+        assert!(x.data().iter().all(|v| v.is_finite()));
+        let s: f32 = x.data().iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_consistency() {
+        let x = t(&[1, 4], vec![0.5, -0.3, 2.0, 1.0]);
+        let ls = log_softmax_rows(&x);
+        let total: f32 = ls.data().iter().map(|&v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let w = [1.0f32, 1.0];
+        let mut out = [0f32; 2];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-9);
+        assert!(silu(10.0) > 9.99);
+        assert!(silu(-10.0) > -0.01);
+    }
+
+    #[test]
+    fn argmax_first_on_tie_breaks_low() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,271 @@
+//! Tiny declarative CLI argument parser (no `clap` in the vendored set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed getters with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A declarative command-line parser.
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+    subcommands: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    pub subcommand: Option<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli {
+            program,
+            about,
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Register a valued `--key <value>` option.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Register a positional argument (documentation only).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Register a subcommand (first positional becomes `args.subcommand`).
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.program, self.about, self.program);
+        if !self.subcommands.is_empty() {
+            s.push_str("<COMMAND> ");
+        }
+        s.push_str("[OPTIONS]");
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push('\n');
+        if !self.subcommands.is_empty() {
+            s.push_str("\nCOMMANDS:\n");
+            for (name, help) in &self.subcommands {
+                s.push_str(&format!("  {name:<18} {help}\n"));
+            }
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (name, help) in &self.positionals {
+                s.push_str(&format!("  <{name}>  {help}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<22} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse the given argv (excluding program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("option --{name} needs a value"))?,
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{name} does not take a value");
+                    }
+                    args.flags.push(name);
+                }
+            } else if args.subcommand.is_none() && !self.subcommands.is_empty() {
+                if !self.subcommands.iter().any(|(n, _)| *n == tok) {
+                    anyhow::bail!("unknown command '{tok}'\n\n{}", self.help_text());
+                }
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`.
+    pub fn parse(&self) -> anyhow::Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_str(&self, name: &str) -> anyhow::Result<String> {
+        Ok(self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?
+            .to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("qrazor", "test cli")
+            .subcommand("serve", "run the server")
+            .subcommand("eval", "run evaluation")
+            .opt("steps", Some("100"), "number of steps")
+            .opt("model", None, "model preset")
+            .flag("verbose", "chatty output")
+            .positional("input", "input file")
+    }
+
+    fn parse(toks: &[&str]) -> anyhow::Result<Args> {
+        cli().parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["serve"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert!(a.get("model").is_none());
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["eval", "--steps", "7", "--model=tiny"]).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 7);
+        assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["serve", "--verbose", "file.txt"]).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["serve", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_rejected() {
+        assert!(parse(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["serve", "--steps"]).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = cli().help_text();
+        for needle in ["serve", "eval", "--steps", "--verbose", "<input>"] {
+            assert!(h.contains(needle), "help missing {needle}:\n{h}");
+        }
+    }
+}

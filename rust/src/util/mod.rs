@@ -1,0 +1,11 @@
+//! Zero-dependency substrates: RNG, JSON, CLI parsing, thread pool,
+//! property testing and statistics. Everything above this layer (quant,
+//! SDR, model, coordinator) builds on these instead of external crates —
+//! the vendored dependency set contains only the `xla` closure.
+
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,280 @@
+//! Property-based testing micro-framework.
+//!
+//! `proptest` is not in the vendored dependency set, so invariants on the
+//! SDR coder, packers, GEMM paths, batcher and KV pool are checked with
+//! this small engine: seeded generators, configurable case counts, and
+//! greedy input shrinking on failure. Used only from `#[cfg(test)]` code
+//! and the `rust/tests/` integration suite.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE, max_shrink_iters: 400 }
+    }
+}
+
+/// A generator of random values with an associated shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" versions of `v`, best-first. Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `gen` for `cfg.cases` random inputs, shrinking on
+/// failure. Panics with the minimal counterexample found.
+pub fn check<G: Gen, P: Fn(&G::Value) -> bool>(name: &str, cfg: Config, gen: &G, prop: P) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_loop(gen, &prop, v, cfg.max_shrink_iters);
+            panic!(
+                "property '{name}' failed (case {case}/{}) — minimal counterexample:\n{minimal:#?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen, P: Fn(&G::Value) -> bool>(
+    gen: &G,
+    prop: &P,
+    mut failing: G::Value,
+    max_iters: usize,
+) -> G::Value {
+    let mut iters = 0;
+    'outer: while iters < max_iters {
+        for cand in gen.shrink(&failing) {
+            iters += 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if iters >= max_iters {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// Uniform i64 in an inclusive range; shrinks toward 0 (or the range edge
+/// closest to 0).
+pub struct IntRange {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Gen for IntRange {
+    type Value = i64;
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        rng.range_i64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let target = 0i64.clamp(self.lo, self.hi);
+        let mut out = Vec::new();
+        if *v != target {
+            out.push(target);
+            let mid = target + (v - target) / 2;
+            if mid != *v {
+                out.push(mid);
+            }
+            if (v - target).abs() > 1 {
+                out.push(v - (v - target).signum());
+            }
+        }
+        out
+    }
+}
+
+/// Vector of values from an element generator, with random length in
+/// [min_len, max_len]. Shrinks by halving length, dropping elements and
+/// shrinking individual elements.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // halve
+            let half: Vec<_> = v[..(v.len() / 2).max(self.min_len)].to_vec();
+            if half.len() < v.len() {
+                out.push(half);
+            }
+            // drop one element (front, middle, back)
+            for &cut in &[0usize, v.len() / 2, v.len() - 1] {
+                let mut c = v.clone();
+                c.remove(cut);
+                if c.len() >= self.min_len {
+                    out.push(c);
+                }
+            }
+        }
+        // shrink a single element
+        for idx in [0usize, v.len().saturating_sub(1)] {
+            if idx < v.len() {
+                for s in self.elem.shrink(&v[idx]) {
+                    let mut c = v.clone();
+                    c[idx] = s;
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator combining two generators; shrinks each side.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Choose uniformly from a fixed list of values (no shrinking).
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        rng.choose(&self.0).clone()
+    }
+}
+
+/// f32 generator mixing normal bulk with rare large outliers — mirrors
+/// LLM activation statistics so SDR property tests hit both regimes.
+pub struct ActivationLike {
+    pub std: f32,
+    pub outlier_p: f64,
+    pub outlier_scale: f32,
+}
+
+impl Default for ActivationLike {
+    fn default() -> Self {
+        ActivationLike { std: 1.0, outlier_p: 0.01, outlier_scale: 30.0 }
+    }
+}
+
+impl Gen for ActivationLike {
+    type Value = f32;
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        rng.heavy_tailed(self.std, self.outlier_p, self.outlier_scale)
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *v != 0.0 {
+            out.push(0.0);
+            out.push(v / 2.0);
+            out.push(v.trunc());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs-nonneg", Config::default(), &IntRange { lo: -100, hi: 100 }, |v| {
+            v.abs() >= 0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics() {
+        check("all-small", Config::default(), &IntRange { lo: -100, hi: 100 }, |v| *v < 50);
+    }
+
+    #[test]
+    fn shrinking_reaches_boundary() {
+        // Capture the panic message and assert it names a minimal-ish case.
+        let res = std::panic::catch_unwind(|| {
+            check(
+                "lt-50",
+                Config { cases: 500, ..Default::default() },
+                &IntRange { lo: 0, hi: 1000 },
+                |v| *v < 50,
+            );
+        });
+        let msg = match res {
+            Err(e) => *e.downcast::<String>().expect("panic payload is String"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Greedy shrinker must land on exactly the boundary value 50.
+        assert!(msg.contains("50"), "msg={msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen { elem: IntRange { lo: 0, hi: 9 }, min_len: 2, max_len: 8 };
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = g.generate(&mut rng);
+            assert!((2..=8).contains(&v.len()));
+            assert!(v.iter().all(|x| (0..=9).contains(x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrinks_are_never_below_min_len() {
+        let g = VecGen { elem: IntRange { lo: 0, hi: 9 }, min_len: 2, max_len: 8 };
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            for s in g.shrink(&v) {
+                assert!(s.len() >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn activation_like_hits_outliers() {
+        let g = ActivationLike::default();
+        let mut rng = Rng::new(3);
+        let vals: Vec<f32> = (0..20_000).map(|_| g.generate(&mut rng)).collect();
+        assert!(vals.iter().any(|v| v.abs() > 10.0));
+        assert!(vals.iter().filter(|v| v.abs() > 10.0).count() < 2_000);
+    }
+}

@@ -1,0 +1,284 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crate has no external RNG dependency; everything that needs
+//! randomness (weight init, corpus synthesis, property tests, workload
+//! generators) goes through [`Rng`], a xoshiro256** implementation with
+//! splittable seeding. Determinism matters: every experiment in
+//! EXPERIMENTS.md is reproducible from a seed recorded in its config.
+
+/// xoshiro256** 1.0 — public-domain algorithm by Blackman & Vigna.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// SplitMix64, used to expand a single u64 seed into xoshiro state.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child generator (for parallel streams).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Next raw 64 bits.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> double in [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo) as u64 + 1) as i64
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; speed is irrelevant at init time).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-300 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std as f32.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Heavy-tailed sample: Student-t-like mixture used to synthesize
+    /// activation-shaped data (mostly Gaussian, occasional outliers),
+    /// matching the distributions QRazor's razoring point analysis
+    /// (paper Fig. 2) is sensitive to.
+    pub fn heavy_tailed(&mut self, std: f32, outlier_p: f64, outlier_scale: f32) -> f32 {
+        let base = self.normal_f32(0.0, std);
+        if self.chance(outlier_p) {
+            base * outlier_scale
+        } else {
+            base
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (rejection-free
+    /// inverse-CDF over precomputed weights is overkill; we use the
+    /// standard rejection sampler for static n via approximation).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF on the harmonic approximation; exact enough for
+        // corpus synthesis and cheap (no tables).
+        debug_assert!(n >= 1);
+        let n_f = n as f64;
+        if (s - 1.0).abs() < 1e-9 {
+            let h = (n_f + 1.0).ln();
+            let u = self.uniform() * h;
+            let k = u.exp() - 1.0;
+            (k.floor() as usize).min(n - 1)
+        } else {
+            let p = 1.0 - s;
+            let h = ((n_f + 1.0).powf(p) - 1.0) / p;
+            let u = self.uniform() * h;
+            let k = (u * p + 1.0).powf(1.0 / p) - 1.0;
+            (k.floor() as usize).min(n - 1)
+        }
+    }
+
+    /// Fill a slice with iid normals.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element by reference.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let mut r = Rng::new(5);
+        let mut counts = vec![0usize; 16];
+        for _ in 0..200_000 {
+            counts[r.zipf(16, 1.1)] += 1;
+        }
+        // Rank 0 should dominate rank 8 heavily.
+        assert!(counts[0] > counts[8] * 4, "counts={counts:?}");
+        assert!(counts[0] > counts[1]);
+    }
+
+    #[test]
+    fn range_inclusive_endpoints_reachable() {
+        let mut r = Rng::new(9);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..1_000 {
+            let v = r.range_i64(-3, 3);
+            assert!((-3..=3).contains(&v));
+            lo_seen |= v == -3;
+            hi_seen |= v == 3;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn heavy_tailed_produces_outliers() {
+        let mut r = Rng::new(17);
+        let xs: Vec<f32> = (0..100_000)
+            .map(|_| r.heavy_tailed(1.0, 0.001, 50.0))
+            .collect();
+        let max = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert!(max > 20.0, "max={max}"); // outliers exist
+        let big = xs.iter().filter(|x| x.abs() > 10.0).count();
+        assert!(big < 1_000, "big={big}"); // ...but are rare
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Rng::new(21);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Small statistics helpers: online moments, histograms, latency
+//! percentiles, and a wall-clock timer used by benches and the
+//! coordinator's metrics endpoint.
+
+use std::time::Instant;
+
+/// Online mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Moments { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Fixed-bin histogram over a closed range; out-of-range values clamp to
+/// the edge bins. Used for Fig. 2 (leading-one positions) and latency.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], total: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (t.max(0.0) as usize).min(n - 1);
+        self.bins[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Fraction of mass in bin `i`.
+    pub fn frac(&self, i: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.bins[i] as f64 / self.total as f64
+        }
+    }
+
+    /// Render as an ASCII bar chart (one row per bin) — benches print
+    /// these for the paper's figures.
+    pub fn ascii(&self, label_fn: impl Fn(usize) -> String, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut s = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / max as usize).max(usize::from(c > 0)));
+            s.push_str(&format!(
+                "{:>12} | {:<w$} {:.2}%\n",
+                label_fn(i),
+                bar,
+                100.0 * self.frac(i),
+                w = width
+            ));
+        }
+        s
+    }
+}
+
+/// Reservoir of values with exact percentile computation (fine at the
+/// scales we measure: ≤ millions of samples).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// p in [0,100]. Linear interpolation between closest ranks.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = p / 100.0 * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+        }
+    }
+}
+
+/// Measure wall-clock of a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations then `iters` timed,
+/// returning per-iteration seconds. The micro-bench primitive used by
+/// all `benches/*` (criterion is not in the vendored set).
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult::from_samples(samples)
+}
+
+/// Aggregated micro-benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn from_samples(samples: Vec<f64>) -> Self {
+        let mut m = Moments::new();
+        let mut p = Percentiles::default();
+        for &s in &samples {
+            m.push(s);
+            p.push(s);
+        }
+        BenchResult {
+            iters: samples.len(),
+            mean_s: m.mean(),
+            std_s: m.std(),
+            min_s: m.min,
+            p50_s: p.pct(50.0),
+            p99_s: p.pct(99.0),
+        }
+    }
+
+    /// Human summary like "12.3 µs ±0.4 (min 11.9)".
+    pub fn human(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s < 1e-6 {
+                format!("{:.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2} ms", s * 1e3)
+            } else {
+                format!("{:.3} s", s)
+            }
+        }
+        format!("{} ±{} (min {}, p99 {})", fmt(self.mean_s), fmt(self.std_s), fmt(self.min_s), fmt(self.p99_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_closed_form() {
+        let mut m = Moments::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            m.push(x);
+        }
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        assert!((m.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(m.min, 2.0);
+        assert_eq!(m.max, 9.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.99, -5.0, 15.0] {
+            h.push(x);
+        }
+        assert_eq!(h.bins[0], 2); // 0.5 and clamped -5.0
+        assert_eq!(h.bins[1], 2);
+        assert_eq!(h.bins[9], 2); // 9.99 and clamped 15.0
+        assert_eq!(h.total, 6);
+    }
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut p = Percentiles::default();
+        for i in 1..=100 {
+            p.push(i as f64);
+        }
+        assert!((p.pct(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.pct(100.0) - 100.0).abs() < 1e-9);
+        assert!((p.pct(50.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_loop_runs_expected_iters() {
+        let mut count = 0usize;
+        let r = bench_loop(2, 10, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn ascii_histogram_renders_rows() {
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        h.push(0.1);
+        h.push(1.2);
+        h.push(1.3);
+        let s = h.ascii(|i| format!("bin{i}"), 20);
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains("bin1"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Work-stealing-free, dead-simple scoped thread pool.
+//!
+//! The vendored dependency set has neither `rayon` nor `tokio`, so the
+//! hot paths (GEMM row blocks, per-sequence evaluation, batch prefill)
+//! parallelize through this pool: fixed worker count, a shared injector
+//! queue, and a `scope`-style `parallel_for` that borrows from the stack
+//! safely via `std::thread::scope`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads to use for data-parallel loops.
+/// Defaults to the available parallelism, capped at 16; override with
+/// the `QRAZOR_THREADS` environment variable (benchmarks pin this).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("QRAZOR_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    })
+}
+
+std::thread_local! {
+    /// Set while a thread is executing inside a `parallel_for` worker —
+    /// nested calls (e.g. a matmul inside a parallel eval loop) run
+    /// serially instead of oversubscribing with scoped-thread spawns.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices across the pool
+/// in contiguous chunks (cache-friendly for row-major tensor work).
+///
+/// `f` must be `Sync` because multiple workers call it concurrently.
+/// Falls back to a serial loop when `n` is small, the pool has 1 thread,
+/// or the call is nested inside another `parallel_for`.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let workers = num_threads();
+    if workers <= 1 || n < 2 || IN_POOL.with(|c| c.get()) {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    // Chunked dynamic scheduling: grab CHUNK indices at a time. A small
+    // chunk keeps the tail balanced; contiguity keeps prefetchers happy.
+    let chunk = (n / (workers * 8)).max(1);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
+                }
+                IN_POOL.with(|c| c.set(false));
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        // SAFETY-free trick: give each index exclusive access to its slot
+        // through a raw pointer wrapper. Each i is visited exactly once.
+        struct SendPtr<T>(*mut Option<T>);
+        unsafe impl<T> Sync for SendPtr<T> {}
+        impl<T> SendPtr<T> {
+            fn get(&self) -> *mut Option<T> {
+                self.0
+            }
+        }
+        let ptr = SendPtr(out.as_mut_ptr());
+        parallel_for(n, |i| {
+            let v = f(i);
+            unsafe {
+                *ptr.get().add(i) = Some(v);
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+/// Split `0..n` into `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_each_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(1_000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<u64> = (0..100_000).collect();
+        let total = AtomicU64::new(0);
+        parallel_for(data.len(), |i| {
+            total.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 64, 100] {
+            for parts in [1usize, 2, 3, 8] {
+                let rs = split_ranges(n, parts);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for r in &rs {
+                    assert_eq!(r.start, prev_end);
+                    covered += r.len();
+                    prev_end = r.end;
+                }
+                assert_eq!(covered, n, "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_for(0, |_| panic!("must not run"));
+        let ran = std::sync::atomic::AtomicBool::new(false);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            ran.store(true, Ordering::Relaxed);
+        });
+        assert!(ran.load(Ordering::Relaxed));
+    }
+}

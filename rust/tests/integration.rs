@@ -1,0 +1,159 @@
+//! Cross-module integration tests: the full pipeline (PJRT train →
+//! quantize → evaluate → serve), the quantized-logits artifact, and
+//! invariants that only show up when the pieces compose.
+//!
+//! All tests skip gracefully when `artifacts/` is missing so `cargo
+//! test` stays green pre-`make artifacts`; CI runs `make test`, which
+//! builds artifacts first.
+
+use qrazor::baselines::{Fp16, QRazor};
+use qrazor::config::ServeConfig;
+use qrazor::coordinator::request::Sampling;
+use qrazor::coordinator::Engine;
+use qrazor::eval::harness::{build_experiment, EvalScale};
+use qrazor::eval::perplexity::perplexity;
+use qrazor::model::quantized::QuantModel;
+use qrazor::runtime::{default_dir, Manifest, Runtime};
+
+fn have_artifacts() -> bool {
+    default_dir().join("meta.json").exists()
+}
+
+/// The whole system, quick scale: train via PJRT (or reuse checkpoint),
+/// quantize, check the quantization-noise ordering on held-out ppl,
+/// then serve a batch of requests from the same quantized model.
+#[test]
+fn full_pipeline_train_quantize_eval_serve() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let scale = EvalScale::quick();
+    let exp = build_experiment("nano", scale, 42).expect("experiment");
+
+    // quantization-noise ordering on held-out data
+    let fp = exp.eval_fp();
+    let a8 = exp.eval_scheme(Box::new(QRazor::w4a8(16)));
+    let a4kv4_g128 = exp.eval_scheme(Box::new(QRazor::w4a4kv4(128)));
+    assert!(fp.ppl_wiki > 1.0 && fp.ppl_wiki < 200.0, "fp ppl {}", fp.ppl_wiki);
+    assert!(
+        fp.ppl_wiki <= a8.ppl_wiki * 1.02,
+        "fp {} must not lose to w4a8 {}",
+        fp.ppl_wiki,
+        a8.ppl_wiki
+    );
+    assert!(
+        a8.ppl_wiki < a4kv4_g128.ppl_wiki,
+        "w4a8 {} must beat w4a4kv4-g128 {}",
+        a8.ppl_wiki,
+        a4kv4_g128.ppl_wiki
+    );
+
+    // serve with the quantized model; all requests complete
+    let qm = QuantModel::build(&exp.weights, Box::new(QRazor::w4a4kv4(16)), &exp.cal);
+    let mut engine = Engine::new(
+        qm,
+        ServeConfig { max_batch: 4, max_new_tokens: 8, ..Default::default() },
+    );
+    for i in 0..6u32 {
+        engine.submit(vec![1 + i % 40, 7, 9], 6, Sampling::Greedy);
+    }
+    let out = engine.run_to_completion();
+    assert_eq!(out.len(), 6);
+    assert!(out.iter().all(|r| r.tokens.len() == 6));
+    assert!(engine.metrics.tokens_per_s() > 0.0);
+}
+
+/// The quantized-logits artifact (L1 Pallas kernels lowered inside the
+/// L2 graph) loads, runs, and its outputs stay close to the FP artifact
+/// — the serving-graph version of the accuracy experiments.
+#[test]
+fn w4a4_artifact_runs_and_tracks_fp() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load(&default_dir()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let fp = rt.load_hlo(&m.artifact_path("lm_logits_fp").unwrap()).unwrap();
+    let q = rt.load_hlo(&m.artifact_path("lm_logits_w4a4").unwrap()).unwrap();
+
+    let w = qrazor::model::ModelWeights::init_random(&m.model, 3);
+    let mut rng = qrazor::util::rng::Rng::new(4);
+    let tokens: Vec<u32> = (0..m.eval_seq)
+        .map(|_| rng.below(m.model.vocab as u64) as u32)
+        .collect();
+    let mut inputs = vec![
+        qrazor::runtime::client::tokens_to_literal(&tokens, m.eval_batch, m.eval_seq).unwrap(),
+    ];
+    for (_, t) in w.to_named() {
+        inputs.push(qrazor::runtime::client::tensor_to_literal(&t).unwrap());
+    }
+    let fp_out = fp.run(&inputs).unwrap();
+    let q_out = q.run(&inputs).unwrap();
+    let shape = [m.eval_seq, m.model.vocab];
+    let fp_t = qrazor::runtime::client::literal_to_tensor(&fp_out[0], &shape).unwrap();
+    let q_t = qrazor::runtime::client::literal_to_tensor(&q_out[0], &shape).unwrap();
+    assert!(q_t.data().iter().all(|v| v.is_finite()));
+    let rel = qrazor::baselines::rel_error(&fp_t, &q_t);
+    assert!(rel > 0.0, "quantized artifact must differ from fp");
+    assert!(rel < 1.0, "quantized artifact diverged: rel {rel}");
+}
+
+/// Batched serving equals sequential serving token-for-token under
+/// greedy decoding even with SDR KV caches — continuous batching must
+/// not perturb any sequence.
+#[test]
+fn batching_invariance_with_sdr_kv() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let scale = EvalScale::quick();
+    let exp = build_experiment("nano", scale, 42).expect("experiment");
+    let prompts: Vec<Vec<u32>> = vec![vec![3, 5, 8], vec![11, 2], vec![7, 7, 7, 7]];
+
+    let engine = |batch: usize| {
+        let qm = QuantModel::build(&exp.weights, Box::new(QRazor::w4a4kv4(16)), &exp.cal);
+        Engine::new(
+            qm,
+            ServeConfig { max_batch: batch, max_new_tokens: 6, ..Default::default() },
+        )
+    };
+    let mut batched = engine(4);
+    for p in &prompts {
+        batched.submit(p.clone(), 6, Sampling::Greedy);
+    }
+    let mut got = batched.run_to_completion();
+    got.sort_by_key(|r| r.id);
+    let mut solo_outs = Vec::new();
+    for p in &prompts {
+        let mut solo = engine(1);
+        solo.submit(p.clone(), 6, Sampling::Greedy);
+        solo_outs.push(solo.run_to_completion().remove(0));
+    }
+    for (a, b) in got.iter().zip(&solo_outs) {
+        assert_eq!(a.tokens, b.tokens);
+    }
+}
+
+/// FP16-scheme QuantModel and the raw FP forward produce identical
+/// perplexity — the "scheme plumbing adds zero noise" guarantee every
+/// table row relies on.
+#[test]
+fn fp16_scheme_is_transparent_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let scale = EvalScale::quick();
+    let exp = build_experiment("nano", scale, 42).expect("experiment");
+    let fp_direct = qrazor::model::FpModel { weights: exp.weights.clone() };
+    let fp_scheme = QuantModel::build(&exp.weights, Box::new(Fp16), &exp.cal);
+    let p1 = perplexity(&fp_direct, &exp.wiki_seqs);
+    let p2 = perplexity(&fp_scheme, &exp.wiki_seqs);
+    assert!(
+        (p1 - p2).abs() / p1 < 1e-4,
+        "scheme plumbing changed ppl: {p1} vs {p2}"
+    );
+}
