@@ -4,7 +4,8 @@
 
 use qrazor::hw::datapath::{encode_group, MacUnit};
 use qrazor::quant::{Granularity, QuantTensor};
-use qrazor::sdr::gemm::{gemm_decompress, gemm_razored_int};
+use qrazor::sdr::gemm::{gemm_decompress, gemm_razored_int, gemm_razored_packed};
+use qrazor::sdr::packed::PackedSdrMatrix;
 use qrazor::sdr::razor::{compress_group, SdrCode};
 use qrazor::sdr::{SdrMatrix, SdrSpec};
 use qrazor::tensor::Tensor;
@@ -27,24 +28,39 @@ fn make_pair(m: usize, n: usize, k: usize, g: usize, seed: u64) -> (SdrMatrix, S
 
 fn main() {
     println!("\n=== Fig. 3 — decompression-free vs decompressed GEMM ===");
-    // exact equivalence across a size sweep
+    // exact equivalence across a size sweep — packed, unpacked, reference
     for (m, n, k, g) in [(4, 8, 64, 16), (16, 16, 256, 32), (32, 64, 512, 16)] {
         let (a, w) = make_pair(m, n, k, g, (m * n) as u64);
-        assert_eq!(
-            gemm_razored_int(&a, &w).data(),
-            gemm_decompress(&a, &w).data(),
-            "{m}x{n}x{k} g{g}"
-        );
-        println!("  {m:>3}×{n:<3} k={k:<4} g{g:<3}: bit-exact ✓");
+        let (pa, pw) = (PackedSdrMatrix::from_matrix(&a), PackedSdrMatrix::from_matrix(&w));
+        let reference = gemm_decompress(&a, &w);
+        assert_eq!(gemm_razored_int(&a, &w).data(), reference.data(), "{m}x{n}x{k} g{g}");
+        let packed = gemm_razored_packed(&pa, &pw);
+        assert_eq!(packed.data(), reference.data(), "{m}x{n}x{k} g{g} packed");
+        println!("  {m:>3}×{n:<3} k={k:<4} g{g:<3}: packed ≡ unpacked ≡ decompressed ✓");
     }
 
-    // measured speed of the two software paths
+    // measured speed of the three software paths + operand bytes moved
     let (a, w) = make_pair(32, 64, 512, 16, 9);
+    let (pa, pw) = (PackedSdrMatrix::from_matrix(&a), PackedSdrMatrix::from_matrix(&w));
     let razored = bench_loop(3, 20, || std::hint::black_box(gemm_razored_int(&a, &w)));
+    let packed = bench_loop(3, 20, || std::hint::black_box(gemm_razored_packed(&pa, &pw)));
     let decomp = bench_loop(3, 20, || std::hint::black_box(gemm_decompress(&a, &w)));
     println!("\nmeasured (32×64, k=512, g16):");
-    println!("  razored     : {}", razored.human());
-    println!("  decompress  : {}", decomp.human());
+    println!("  razored (unpacked): {}", razored.human());
+    println!("  razored (packed)  : {}", packed.human());
+    println!("  decompress        : {}", decomp.human());
+    let packed_bytes = pa.payload_bytes() + pw.payload_bytes();
+    let unpacked_bytes = pa.unpacked_payload_bytes() + pw.unpacked_payload_bytes();
+    let ratio = packed_bytes as f64 / unpacked_bytes as f64;
+    println!(
+        "operand bytes: packed {} vs unpacked {} ({:.1}% — {:.3} vs {:.3} bits/value)",
+        packed_bytes,
+        unpacked_bytes,
+        100.0 * ratio,
+        pa.measured_effective_bits(),
+        8.0 * unpacked_bytes as f64 / ((pa.rows * pa.cols + pw.rows * pw.cols) as f64),
+    );
+    assert!(ratio <= 0.55, "packed operands must move ≤55% of unpacked bytes: {ratio}");
 
     // Fig. 4: encoder datapath == software coder on random groups
     let spec = SdrSpec::new(16, 4, 16);

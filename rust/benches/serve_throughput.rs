@@ -62,6 +62,64 @@ fn main() {
         }
     }
 
+    // --- packed-native vs staged compute: operand bytes moved + tok/s ---
+    // The tentpole claim: with packed weights and packed KV attention the
+    // serving path streams ≈½ the operand bytes (4.25 vs 8.5 eff. bits)
+    // at no throughput cost.
+    println!("\n=== packed-native vs staged compute (W4A4KV4 g16, batch 4) ===");
+    // `streamed` comes from the kernels' own traffic counter, so a
+    // silent fallback to the staged branch (use_packed threading bug,
+    // missing PackedWeight, unsupported head geometry) shows up as
+    // zero packed bytes rather than a falsely green ratio.
+    let measure = |use_packed: bool| {
+        let mut qm = build(Box::new(QRazor::w4a4kv4(16)));
+        qm.use_packed = use_packed;
+        let (wp, wu) = qm.weight_operand_bytes();
+        let mut engine = Engine::new(
+            qm,
+            ServeConfig { max_batch: 4, max_new_tokens: 16, ..Default::default() },
+        );
+        let before = qrazor::sdr::gemm::packed_operand_bytes();
+        let (tps, _) = run(&mut engine, 16, 16, 7);
+        let streamed = qrazor::sdr::gemm::packed_operand_bytes() - before;
+        let kv_packed = engine.metrics.kv_bytes_peak;
+        let kv_unpacked = engine.metrics.kv_bytes_unpacked_peak;
+        (tps, wp, wu, kv_packed, kv_unpacked, streamed)
+    };
+    let (tps_packed, wp, wu, kvp, kvu, streamed_packed) = measure(true);
+    let (tps_staged, _, _, _, _, streamed_staged) = measure(false);
+    let weight_ratio = wp as f64 / wu as f64;
+    let kv_ratio = kvp as f64 / kvu as f64;
+    let wr_pct = 100.0 * weight_ratio;
+    let kv_pct = 100.0 * kv_ratio;
+    println!("  weights : packed {wp} B vs unpacked {wu} B per forward ({wr_pct:.1}%)");
+    println!("  kv peak : packed {kvp} B vs unpacked-equiv {kvu} B ({kv_pct:.1}%)");
+    println!(
+        "  streamed: packed kernels consumed {streamed_packed} B \
+         (staged run: {streamed_staged} B)"
+    );
+    println!("  tok/s   : packed {tps_packed:.1} vs staged {tps_staged:.1}");
+    assert!(
+        streamed_packed > 0 && streamed_staged == 0,
+        "packed run must exercise the packed kernels and the staged run must not \
+         ({streamed_packed} vs {streamed_staged} bytes)"
+    );
+    assert!(
+        weight_ratio <= 0.55,
+        "packed weights must move ≤55% of unpacked operand bytes, got {weight_ratio:.3}"
+    );
+    assert!(
+        kv_ratio <= 0.55,
+        "packed KV must hold ≤55% of unpacked-equivalent bytes, got {kv_ratio:.3}"
+    );
+    // Throughput parity: "no regression", with a bounded noise margin —
+    // the nano model's decode quantum is microseconds, so exact >= 1.0
+    // would flake on scheduler jitter.
+    assert!(
+        tps_packed >= tps_staged * 0.8,
+        "packed path regressed tokens/s: {tps_packed:.1} vs {tps_staged:.1}"
+    );
+
     println!("\n=== batching-policy ablation (mixed prompt lengths) ===");
     for policy in [Policy::Fcfs, Policy::ShortestPrefillFirst] {
         let qm = build(Box::new(QRazor::w4a4kv4(16)));

@@ -29,12 +29,37 @@ pub mod quarot;
 pub mod rtn;
 pub mod smoothquant;
 
-use crate::quant::Granularity;
-use crate::sdr::razor::{qrazor_fake_quant, qrazor_fake_quant_static, SdrSpec};
+use crate::quant::{Granularity, QuantTensor};
+use crate::sdr::gemm::gemm_razored_packed_f32;
+use crate::sdr::packed::PackedSdrMatrix;
+use crate::sdr::razor::{qrazor_fake_quant, qrazor_fake_quant_static, SdrMatrix, SdrSpec};
 use crate::tensor::Tensor;
 
 /// Per-layer online activation transform: `f(x, static_scale) → x̂`.
 pub type ActFn = Box<dyn Fn(&Tensor<f32>, Option<f32>) -> Tensor<f32> + Send + Sync>;
+
+/// A weight kept in its nibble-packed SDR form plus the activation spec
+/// that pairs with it — the checkpoint-to-logits "native operand" of the
+/// QRazor compute path. The forward razors the activation, packs it, and
+/// runs the decompression-free packed GEMM; the f32 weight matrix is
+/// never touched.
+pub struct PackedWeight {
+    pub weight: PackedSdrMatrix,
+    pub act_spec: SdrSpec,
+}
+
+impl PackedWeight {
+    /// `y = razored(x) · Ŵᵀ` entirely over packed operands.
+    pub fn forward(&self, x: &Tensor<f32>, static_scale: Option<f32>) -> Tensor<f32> {
+        assert_eq!(x.ndim(), 2, "packed linear needs a 2-D activation");
+        let q = match static_scale {
+            Some(s) => QuantTensor::quantize_static(x, self.act_spec.base_bits, &[s]),
+            None => QuantTensor::quantize(x, self.act_spec.base_bits, Granularity::PerTensor),
+        };
+        let a = PackedSdrMatrix::from_matrix(&SdrMatrix::compress(self.act_spec, &q));
+        gemm_razored_packed_f32(&a, &self.weight)
+    }
+}
 
 /// A linear layer prepared by a scheme: the fake-quantized effective
 /// weight, plus (for stateful schemes like SmoothQuant's smoothing
@@ -47,22 +72,58 @@ pub struct PreparedLinear {
     /// Layer-specific activation transform; `None` → use the scheme's
     /// shared [`Scheme::act`].
     pub act_override: Option<ActFn>,
+    /// Nibble-packed weight + activation spec when the scheme's formats
+    /// are 4-bit SDR (QRazor W4A4): the forward then runs the
+    /// decompression-free packed GEMM instead of fake-quant + f32 matmul.
+    pub packed: Option<PackedWeight>,
 }
 
 impl PreparedLinear {
     /// Full quantized linear: transform the activation, multiply by the
-    /// prepared weight. `y = q_a(x) · Ŵᵀ`.
+    /// prepared weight. `y = q_a(x) · Ŵᵀ`. Equivalent to
+    /// [`PreparedLinear::forward_with_packed`] with the packed path on.
     pub fn forward(
         &self,
         x: &Tensor<f32>,
         static_scale: Option<f32>,
         scheme: &dyn Scheme,
     ) -> Tensor<f32> {
+        self.forward_with_packed(x, static_scale, scheme, true)
+    }
+
+    /// Forward with the packed compute path explicitly enabled/disabled
+    /// (disabled = the staged fake-quant + f32 reference path; the
+    /// serving bench uses the toggle to measure packed vs unpacked).
+    pub fn forward_with_packed(
+        &self,
+        x: &Tensor<f32>,
+        static_scale: Option<f32>,
+        scheme: &dyn Scheme,
+        use_packed: bool,
+    ) -> Tensor<f32> {
+        if use_packed {
+            if let Some(p) = &self.packed {
+                return p.forward(x, static_scale);
+            }
+        }
         let xq = match &self.act_override {
             Some(f) => f(x, static_scale),
             None => scheme.act(x, static_scale),
         };
         crate::tensor::matmul_bt(&xq, &self.weight)
+    }
+
+    /// Bytes of weight operand the forward streams per GEMM:
+    /// `(packed, unpacked_equivalent)`. For schemes without a packed
+    /// form both numbers are the f32 weight bytes.
+    pub fn weight_operand_bytes(&self) -> (usize, usize) {
+        match &self.packed {
+            Some(p) => (p.weight.payload_bytes(), p.weight.unpacked_payload_bytes()),
+            None => {
+                let b = self.weight.len() * std::mem::size_of::<f32>();
+                (b, b)
+            }
+        }
     }
 }
 
@@ -79,9 +140,18 @@ pub trait Scheme: Send + Sync {
 
     /// Prepare a full linear layer. Stateless schemes get this for free
     /// from [`Scheme::prep_weight`]; stateful ones override it to bind
-    /// their per-layer activation transform.
+    /// their per-layer activation transform (and QRazor to attach the
+    /// packed weight the decompression-free GEMM consumes).
     fn prep_linear(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> PreparedLinear {
-        PreparedLinear { weight: self.prep_weight(w, calib), act_override: None }
+        PreparedLinear { weight: self.prep_weight(w, calib), act_override: None, packed: None }
+    }
+
+    /// The SDR spec a query row should be razored with before the
+    /// decompression-free attention against a packed [`crate::model::kvcache::SdrKvCache`].
+    /// `None` (the default) keeps the scheme's own KV policy on the
+    /// reconstruct-then-multiply path.
+    fn sdr_query_spec(&self) -> Option<SdrSpec> {
+        None
     }
 
     /// Online activation transform before a linear. `static_scale` is
@@ -191,6 +261,27 @@ impl Scheme for QRazor {
         qrazor_fake_quant(w, self.w, Granularity::PerChannel)
     }
 
+    /// QRazor's linear keeps the weight nibble-packed: when both weight
+    /// and activation land on 4-bit SDR (the paper's flagship W4A4
+    /// scenarios), the forward never reconstructs either operand. Other
+    /// scenarios (W4A8's byte-coded A8, the partial-compression
+    /// ablations) stay on the staged reference path.
+    fn prep_linear(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> PreparedLinear {
+        let packed = if self.w.target_bits == 4
+            && self.w.target_bits < self.w.base_bits
+            && self.a.target_bits == 4
+        {
+            let q = QuantTensor::quantize(w, self.w.base_bits, Granularity::PerChannel);
+            Some(PackedWeight {
+                weight: PackedSdrMatrix::from_matrix(&SdrMatrix::compress(self.w, &q)),
+                act_spec: self.a,
+            })
+        } else {
+            None
+        };
+        PreparedLinear { weight: self.prep_weight(w, calib), act_override: None, packed }
+    }
+
     fn act(&self, x: &Tensor<f32>, static_scale: Option<f32>) -> Tensor<f32> {
         quant_or_razor(x, self.a, static_scale)
     }
@@ -204,6 +295,12 @@ impl Scheme for QRazor {
 
     fn quantizes_kv(&self) -> bool {
         self.kv_spec.is_some()
+    }
+
+    fn sdr_query_spec(&self) -> Option<SdrSpec> {
+        // Queries entering the packed KV attention are razored like the
+        // cached K rows (Fig. 5: INT4 Q·Kᵀ).
+        self.kv_spec
     }
 }
 
@@ -299,6 +396,59 @@ mod tests {
         let s = QRazor::w4a4(16);
         assert_eq!(s.kv(&x, None), x);
         assert!(QRazor::w4a4kv4(16).kv(&x, None) != x);
+    }
+
+    #[test]
+    fn qrazor_w4a4_linear_is_packed_and_tracks_staged_reference() {
+        let x = activation_matrix(4, 64, 1);
+        let w = weight_matrix(8, 64, 2);
+        let s = QRazor::w4a4(16);
+        let pl = s.prep_linear(&w, None);
+        assert!(pl.packed.is_some(), "W4A4 must carry a packed weight");
+        let packed = pl.forward(&x, None, &s);
+        let staged = pl.forward_with_packed(&x, None, &s, false);
+        // Same integer lattice on both paths; only the f32 summation
+        // order differs (exact i64 accumulate + one scale vs f32 dots).
+        let rel = rel_error(&staged, &packed);
+        assert!(rel < 1e-4, "packed diverged from staged: rel {rel}");
+        // packed weight operand is ~half the unpacked stream
+        let (pb, ub) = pl.weight_operand_bytes();
+        let ratio = pb as f64 / ub as f64;
+        assert!((0.45..=0.55).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn qrazor_w4a4_linear_packed_with_static_scale() {
+        let x = activation_matrix(3, 32, 11);
+        let w = weight_matrix(4, 32, 12);
+        let s = QRazor::w4a4kv4(16);
+        let pl = s.prep_linear(&w, None);
+        let scale = crate::quant::absmax_scale(x.data(), 16);
+        let packed = pl.forward(&x, Some(scale), &s);
+        let staged = pl.forward_with_packed(&x, Some(scale), &s, false);
+        let rel = rel_error(&staged, &packed);
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn non_w4a4_scenarios_stay_on_staged_path() {
+        let w = weight_matrix(4, 32, 3);
+        // A8: byte-coded activations can't nibble-pack
+        assert!(QRazor::w4a8(16).prep_linear(&w, None).packed.is_none());
+        // W8 ablation: stage-2 is a no-op for weights
+        assert!(QRazor::ablation(8, 4, 16).prep_linear(&w, None).packed.is_none());
+        // FP16 baseline obviously has no packed form
+        let pl = Fp16.prep_linear(&w, None);
+        assert!(pl.packed.is_none());
+        let (pb, ub) = pl.weight_operand_bytes();
+        assert_eq!(pb, ub);
+    }
+
+    #[test]
+    fn sdr_query_spec_only_for_kv_quantizing_qrazor() {
+        assert!(QRazor::w4a4kv4(16).sdr_query_spec().is_some());
+        assert!(QRazor::w4a4(16).sdr_query_spec().is_none());
+        assert!(Fp16.sdr_query_spec().is_none());
     }
 
     #[test]

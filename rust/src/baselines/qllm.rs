@@ -135,7 +135,7 @@ impl Scheme for QllmScheme {
             };
             rtn_per_row(&expanded, a_bits)
         };
-        PreparedLinear { weight, act_override: Some(Box::new(act)) }
+        PreparedLinear { weight, act_override: Some(Box::new(act)), packed: None }
     }
 
     /// Shared path (no splits known): plain per-token RTN.

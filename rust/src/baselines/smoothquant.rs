@@ -111,7 +111,7 @@ impl Scheme for SmoothQuantScheme {
             }
             rtn_per_row(&out, a_bits)
         };
-        PreparedLinear { weight, act_override: Some(Box::new(act)) }
+        PreparedLinear { weight, act_override: Some(Box::new(act)), packed: None }
     }
 
     /// Shared (uncalibrated) activation path: plain per-token RTN.

@@ -68,6 +68,14 @@ impl KvPool {
         self.caches.values().map(|c| c.bytes()).sum()
     }
 
+    /// Bytes an unpacked (byte-per-code) working copy of every live
+    /// cache would occupy — the operand traffic the staged attention
+    /// path implies. `bytes() / unpacked_bytes()` ≈ 0.5 for SDR pools
+    /// (4.25 vs 8.5 effective bits), 1.0 for FP pools.
+    pub fn unpacked_bytes(&self) -> usize {
+        self.caches.values().map(|c| c.unpacked_bytes()).sum()
+    }
+
     /// Number of live sequences.
     pub fn live(&self) -> usize {
         self.caches.len()
@@ -140,6 +148,9 @@ mod tests {
         }
         pool.put_back(RequestId(1), cache);
         assert!(pool.bytes() > before);
+        // the packed pool moves ~half the bytes of its unpacked twin
+        let ratio = pool.bytes() as f64 / pool.unpacked_bytes() as f64;
+        assert!((0.45..=0.55).contains(&ratio), "packed/unpacked ratio {ratio}");
         // ~4.25 bits/value across K+V per layer per token
         let cfg = &m.config;
         let per_token_bits = 2.0 * (cfg.layers * m.kv_dim()) as f64 * 4.25;

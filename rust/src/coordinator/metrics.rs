@@ -18,6 +18,10 @@ pub struct Metrics {
     pub ttft: Percentiles,
     pub latency: Percentiles,
     pub kv_bytes_peak: usize,
+    /// Peak of what an unpacked (byte-per-code) KV working set would
+    /// have occupied at the same instant — the packed-vs-unpacked
+    /// traffic claim the serving bench reports.
+    pub kv_bytes_unpacked_peak: usize,
 }
 
 impl Default for Metrics {
@@ -32,6 +36,7 @@ impl Default for Metrics {
             ttft: Percentiles::default(),
             latency: Percentiles::default(),
             kv_bytes_peak: 0,
+            kv_bytes_unpacked_peak: 0,
         }
     }
 }
@@ -57,6 +62,13 @@ impl Metrics {
 
     pub fn observe_kv_bytes(&mut self, bytes: usize) {
         self.kv_bytes_peak = self.kv_bytes_peak.max(bytes);
+    }
+
+    /// Record both the real (packed) KV footprint and its unpacked
+    /// equivalent for the same instant.
+    pub fn observe_kv_traffic(&mut self, packed: usize, unpacked: usize) {
+        self.observe_kv_bytes(packed);
+        self.kv_bytes_unpacked_peak = self.kv_bytes_unpacked_peak.max(unpacked);
     }
 
     pub fn render(&self) -> String {
@@ -88,6 +100,7 @@ impl Metrics {
             ("ttft_p50_ms", Json::from(self.ttft.pct(50.0) * 1e3)),
             ("latency_p50_ms", Json::from(self.latency.pct(50.0) * 1e3)),
             ("kv_bytes_peak", Json::from(self.kv_bytes_peak)),
+            ("kv_bytes_unpacked_peak", Json::from(self.kv_bytes_unpacked_peak)),
         ])
     }
 }
@@ -107,6 +120,9 @@ mod tests {
         m.observe_kv_bytes(2048);
         m.observe_kv_bytes(1024);
         assert_eq!(m.kv_bytes_peak, 2048);
+        m.observe_kv_traffic(1500, 4096);
+        assert_eq!(m.kv_bytes_peak, 2048, "packed peak keeps its max");
+        assert_eq!(m.kv_bytes_unpacked_peak, 4096);
         let s = m.render();
         assert!(s.contains("2/3 done"), "{s}");
         assert!(s.contains("kv peak 2 KiB"), "{s}");

@@ -177,7 +177,8 @@ impl Engine {
             generated += 1;
         }
         self.metrics.generated_tokens += generated as u64;
-        self.metrics.observe_kv_bytes(self.pool.bytes());
+        self.metrics
+            .observe_kv_traffic(self.pool.bytes(), self.pool.unpacked_bytes());
 
         // 3. retire finished sequences
         let finished: Vec<RequestId> = self

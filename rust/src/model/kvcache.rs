@@ -5,8 +5,10 @@
 //! (4-bit codes + 4-bit flags). Memory accounting is exact; the
 //! coordinator's pool (`crate::coordinator::kv`) builds on these.
 
-use crate::sdr::packed::{pack_flags, pack_nibbles, unpack_flags, unpack_nibbles};
-use crate::sdr::razor::{compress_group, SdrCode, SdrSpec};
+use crate::sdr::packed::{
+    nibble_at, pack_flags, pack_nibbles, unpack_flags, unpack_nibbles, NIBBLE_SIGNED,
+};
+use crate::sdr::razor::{compress_group, SdrCode, SdrMatrix, SdrSpec};
 use crate::tensor::Tensor;
 
 /// Plain FP32 KV cache for one sequence: per-layer `[tokens, kv_dim]`.
@@ -91,21 +93,29 @@ impl SdrKvCache {
         self.k_planes[layer].rows
     }
 
-    fn compress_row(&self, row: &[f32], scale: f32, plane: &mut SdrPlane) {
+    /// The row razor-coder shared by writes ([`SdrKvCache::append`])
+    /// and the query side of [`SdrKvCache::attention_packed`]: stage-1
+    /// round/clamp at the static scale, stage-2 SDR per group.
+    fn razor_row(&self, row: &[f32], scale: f32) -> (Vec<SdrCode>, Vec<u8>) {
         let q = crate::quant::qmax(self.spec.base_bits);
         let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
         let ints: Vec<i32> = row
             .iter()
             .map(|&x| crate::quant::round_half_even(x * inv).clamp(-q, q))
             .collect();
-        let mut codes = vec![SdrCode::default(); self.kv_dim];
-        let mut flags = Vec::with_capacity(self.kv_dim / self.spec.group);
+        let mut codes = vec![SdrCode::default(); row.len()];
+        let mut flags = Vec::with_capacity(row.len().div_ceil(self.spec.group));
         for (chunk, out) in ints
             .chunks(self.spec.group)
             .zip(codes.chunks_mut(self.spec.group))
         {
             flags.push(compress_group(&self.spec, chunk, out));
         }
+        (codes, flags)
+    }
+
+    fn compress_row(&self, row: &[f32], scale: f32, plane: &mut SdrPlane) {
+        let (codes, flags) = self.razor_row(row, scale);
         plane.nibbles.extend(pack_nibbles(&codes));
         plane.flag_nibbles.extend(pack_flags(&flags));
         plane.rows += 1;
@@ -124,16 +134,26 @@ impl SdrKvCache {
         self.v_planes[layer] = vp;
     }
 
+    /// Nibbles each appended row occupies in the code store. Rows are
+    /// packed independently, so an odd `kv_dim` pads to a byte boundary
+    /// — all reads must use this stride, **not** `kv_dim` (reading the
+    /// plane as one contiguous nibble stream misaligns every row after
+    /// the first whenever the per-row count is odd).
+    #[inline]
+    fn code_row_nibbles(&self) -> usize {
+        2 * self.kv_dim.div_ceil(2)
+    }
+
+    /// Nibbles each appended row occupies in the flag store (same
+    /// byte-boundary padding story: `groups_per_row` is odd whenever
+    /// `kv_dim / group` is, e.g. `kv_dim == group`).
+    #[inline]
+    fn flag_row_nibbles(&self) -> usize {
+        2 * (self.kv_dim / self.spec.group).div_ceil(2)
+    }
+
     fn reconstruct_plane(&self, plane: &SdrPlane, scale: f32) -> Tensor<f32> {
-        let gpr = self.kv_dim / self.spec.group;
-        let codes = unpack_nibbles(&plane.nibbles, plane.rows * self.kv_dim);
-        let flags = unpack_flags(&plane.flag_nibbles, plane.rows * gpr);
-        let mut data = Vec::with_capacity(plane.rows * self.kv_dim);
-        for (i, c) in codes.iter().enumerate() {
-            let g = i / self.spec.group;
-            data.push(c.reconstruct(flags[g]) as f32 * scale);
-        }
-        Tensor::from_vec(&[plane.rows, self.kv_dim], data)
+        self.plane_matrix(plane, scale).dequantize()
     }
 
     /// Dequantized K matrix `[tokens, kv_dim]` for attention.
@@ -143,6 +163,165 @@ impl SdrKvCache {
 
     pub fn v_matrix(&self, layer: usize) -> Tensor<f32> {
         self.reconstruct_plane(&self.v_planes[layer], self.scales[layer].1)
+    }
+
+    /// Can [`SdrKvCache::attention_packed`] serve this head geometry?
+    /// Group boundaries must not straddle head slices.
+    pub fn supports_packed_attention(&self, head_dim: usize) -> bool {
+        head_dim % self.spec.group == 0
+    }
+
+    /// One token's attention, computed **directly from the packed
+    /// planes** — the paper's Fig. 3(b) claim applied to the KV cache:
+    /// no K/V matrix is ever reconstructed to f32.
+    ///
+    /// `q_row` is the RoPE'd query `[heads · head_dim]`; it is stage-1
+    /// quantized with the calibrated static `q_scale` and stage-2
+    /// razored with the cache's spec, then Q·Kᵀ runs as the narrow
+    /// integer MAC + one barrel shift per group pair. Softmax happens on
+    /// the (exactly computed) integer scores; the context accumulates
+    /// `p · V` straight from value nibbles. Returns `[heads · head_dim]`.
+    ///
+    /// GQA is handled by mapping query head `h` to kv head
+    /// `h / (heads / kv_heads)`.
+    pub fn attention_packed(
+        &self,
+        layer: usize,
+        q_row: &[f32],
+        q_scale: f32,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Vec<f32> {
+        let g = self.spec.group;
+        assert!(self.supports_packed_attention(head_dim), "head_dim {head_dim} % group {g} != 0");
+        assert_eq!(kv_heads * head_dim, self.kv_dim, "kv geometry mismatch");
+        assert_eq!(q_row.len(), heads * head_dim, "query length mismatch");
+        assert_eq!(heads % kv_heads, 0, "heads must divide into kv heads");
+        let (k_scale, v_scale) = self.scales[layer];
+        let kp = &self.k_planes[layer];
+        let vp = &self.v_planes[layer];
+        let t_rows = kp.rows;
+        let mut ctx = vec![0f32; heads * head_dim];
+        if t_rows == 0 {
+            return ctx;
+        }
+        let q_per_kv = heads / kv_heads;
+        let scale_dot = 1.0 / (head_dim as f32).sqrt();
+        crate::sdr::gemm::note_packed_traffic(
+            kp.nibbles.len() + kp.flag_nibbles.len() + vp.nibbles.len() + vp.flag_nibbles.len(),
+        );
+        // Stage-1 + stage-2 on the query row (the same coder the planes
+        // were written with).
+        let (q_codes, q_flags) = self.razor_row(q_row, q_scale);
+        let q_signed: Vec<i16> = q_codes.iter().map(|c| c.signed() as i16).collect();
+
+        let gph = head_dim / g; // groups per head slice
+        let code_stride = self.code_row_nibbles(); // nibbles per cached row
+        let flag_stride = self.flag_row_nibbles();
+        let mut scores = vec![0f32; t_rows];
+        for h in 0..heads {
+            let kvh = h / q_per_kv;
+            let q_off = h * head_dim;
+            let qg_off = q_off / g;
+            // ---- scores: decompression-free Q·Kᵀ over the head slice
+            for (ti, s) in scores.iter_mut().enumerate() {
+                let k_base = ti * code_stride + kvh * head_dim;
+                let kg_base = ti * flag_stride + kvh * gph;
+                let mut acc: i64 = 0;
+                for p in 0..gph {
+                    let mut part: i32 = 0;
+                    for t in 0..g {
+                        let kc = NIBBLE_SIGNED[nibble_at(&kp.nibbles, k_base + p * g + t) as usize];
+                        part += q_signed[q_off + p * g + t] as i32 * kc as i32;
+                    }
+                    let fq = q_flags[qg_off + p];
+                    let fk = nibble_at(&kp.flag_nibbles, kg_base + p);
+                    acc += (part as i64) << (fq + fk);
+                }
+                *s = acc as f32 * q_scale * k_scale * scale_dot;
+            }
+            // ---- softmax over cached positions
+            let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+            let mut sum = 0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                sum += *s;
+            }
+            let inv_sum = 1.0 / sum;
+            // ---- context: p · V straight from value nibbles
+            let out = &mut ctx[h * head_dim..(h + 1) * head_dim];
+            for (ti, &p_raw) in scores.iter().enumerate() {
+                let wgt = p_raw * inv_sum;
+                let v_base = ti * code_stride + kvh * head_dim;
+                let vg_base = ti * flag_stride + kvh * gph;
+                for p in 0..gph {
+                    let fv = nibble_at(&vp.flag_nibbles, vg_base + p);
+                    for t in 0..g {
+                        let vc =
+                            NIBBLE_SIGNED[nibble_at(&vp.nibbles, v_base + p * g + t) as usize];
+                        // Same rounding order as reconstruct()·scale so
+                        // the packed path is bit-identical to the staged
+                        // one, not merely close.
+                        let val = ((vc as i32) << fv) as f32 * v_scale;
+                        out[p * g + t] += wgt * val;
+                    }
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Export one plane as an unpacked [`SdrMatrix`] (testing and the
+    /// staged reference path; the serving path never calls this).
+    fn plane_matrix(&self, plane: &SdrPlane, scale: f32) -> SdrMatrix {
+        let gpr = self.kv_dim / self.spec.group;
+        let code_stride = self.code_row_nibbles() / 2;
+        let flag_stride = self.flag_row_nibbles() / 2;
+        let mut codes = Vec::with_capacity(plane.rows * self.kv_dim);
+        let mut flags = Vec::with_capacity(plane.rows * gpr);
+        for r in 0..plane.rows {
+            codes.extend(unpack_nibbles(&plane.nibbles[r * code_stride..], self.kv_dim));
+            flags.extend(unpack_flags(&plane.flag_nibbles[r * flag_stride..], gpr));
+        }
+        SdrMatrix {
+            spec: self.spec,
+            rows: plane.rows,
+            cols: self.kv_dim,
+            codes,
+            flags,
+            scales: vec![scale],
+        }
+    }
+
+    /// The K plane of `layer` as an unpacked SDR matrix.
+    pub fn k_sdr_matrix(&self, layer: usize) -> SdrMatrix {
+        self.plane_matrix(&self.k_planes[layer], self.scales[layer].0)
+    }
+
+    /// The V plane of `layer` as an unpacked SDR matrix.
+    pub fn v_sdr_matrix(&self, layer: usize) -> SdrMatrix {
+        self.plane_matrix(&self.v_planes[layer], self.scales[layer].1)
+    }
+
+    /// Values stored across all planes (for effective-bits accounting).
+    pub fn stored_values(&self) -> usize {
+        self.k_planes
+            .iter()
+            .chain(&self.v_planes)
+            .map(|p| p.rows * self.kv_dim)
+            .sum()
+    }
+
+    /// Bytes the unpacked working form would occupy for the same data:
+    /// one byte per code plus one byte per group flag.
+    pub fn unpacked_bytes(&self) -> usize {
+        let gpr = self.kv_dim / self.spec.group;
+        self.k_planes
+            .iter()
+            .chain(&self.v_planes)
+            .map(|p| p.rows * self.kv_dim + p.rows * gpr)
+            .sum()
     }
 
     /// Exact payload bytes (codes + flags) across all layers.
@@ -156,12 +335,7 @@ impl SdrKvCache {
 
     /// Measured effective bits per stored value.
     pub fn effective_bits(&self) -> f64 {
-        let values: usize = self
-            .k_planes
-            .iter()
-            .chain(&self.v_planes)
-            .map(|p| p.rows * self.kv_dim)
-            .sum();
+        let values = self.stored_values();
         if values == 0 {
             0.0
         } else {
@@ -237,5 +411,216 @@ mod tests {
     #[should_panic(expected = "divisible")]
     fn rejects_misaligned_group() {
         SdrKvCache::new(1, 60, SdrSpec::new(8, 4, 16), vec![(1.0, 1.0)]);
+    }
+
+    #[test]
+    fn odd_groups_per_row_rows_stay_aligned() {
+        // kv_dim == group ⇒ one flag per row, padded to a byte per row
+        // in the packed store. Reading the plane as a contiguous nibble
+        // stream misaligned every row after the first (seed bug): row 1's
+        // flag was read from row 0's padding nibble.
+        let mut rng = Rng::new(3);
+        let mut sdr = SdrKvCache::new(1, 16, SdrSpec::new(8, 4, 16), vec![(0.02, 0.02)]);
+        let mut fp = FpKvCache::new(1, 16);
+        for _ in 0..5 {
+            let k: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            let v: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            sdr.append(0, &k, &v);
+            fp.append(0, &k, &v);
+        }
+        let km = sdr.k_matrix(0);
+        for r in 0..5 {
+            let mut num = 0f64;
+            let mut den = 0f64;
+            for (a, b) in km.row(r).iter().zip(fp.k_matrix(0).row(r)) {
+                num += ((a - b) as f64).powi(2);
+                den += (*b as f64).powi(2);
+            }
+            let rel = (num / den).sqrt();
+            assert!(rel < 0.4, "row {r} misaligned: rel {rel}");
+        }
+        // and the exported SDR matrix sees the same per-row flags
+        let m = sdr.k_sdr_matrix(0);
+        assert_eq!(m.flags.len(), 5);
+        assert_eq!(m.dequantize().data(), km.data());
+    }
+
+    /// Reference single-token attention built on the *unpacked* staged
+    /// pipeline: integer Q·Kᵀ through `gemm_razored_int` on the exported
+    /// SDR matrices, then softmax and `p·V` over the reconstructed value
+    /// matrix, accumulated in the same order as the packed kernel.
+    fn staged_attention(
+        cache: &SdrKvCache,
+        layer: usize,
+        q_row: &[f32],
+        q_scale: f32,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Vec<f32> {
+        use crate::sdr::gemm::gemm_razored_int;
+        let spec = cache.spec;
+        let g = spec.group;
+        let (k_scale, _) = cache.scales[layer];
+        let k_all = cache.k_sdr_matrix(layer);
+        let v_all = cache.v_matrix(layer); // reconstructed (Fig. 3(a) path)
+        let t = k_all.rows;
+        let q_per_kv = heads / kv_heads;
+        let scale_dot = 1.0 / (head_dim as f32).sqrt();
+        // quantize + razor the query exactly like the cache does
+        let qm = crate::quant::qmax(spec.base_bits);
+        let inv = if q_scale > 0.0 { 1.0 / q_scale } else { 0.0 };
+        let ints: Vec<i32> = q_row
+            .iter()
+            .map(|&x| crate::quant::round_half_even(x * inv).clamp(-qm, qm))
+            .collect();
+        let mut ctx = vec![0f32; heads * head_dim];
+        for h in 0..heads {
+            let kvh = h / q_per_kv;
+            // head-slice SDR matrices: q [1, hd], k [t, hd] (groups align
+            // because head_dim % g == 0)
+            let q_slice: Vec<i32> = ints[h * head_dim..(h + 1) * head_dim].to_vec();
+            let mut q_codes = vec![crate::sdr::razor::SdrCode::default(); head_dim];
+            let mut q_flags = Vec::new();
+            for (chunk, out) in q_slice.chunks(g).zip(q_codes.chunks_mut(g)) {
+                q_flags.push(compress_group(&spec, chunk, out));
+            }
+            let qm_mat = SdrMatrix {
+                spec,
+                rows: 1,
+                cols: head_dim,
+                codes: q_codes,
+                flags: q_flags,
+                scales: vec![q_scale],
+            };
+            let gph = head_dim / g;
+            let mut k_codes = Vec::with_capacity(t * head_dim);
+            let mut k_flags = Vec::with_capacity(t * gph);
+            for ti in 0..t {
+                let row = k_all.row_codes(ti);
+                k_codes.extend_from_slice(&row[kvh * head_dim..(kvh + 1) * head_dim]);
+                let rf = k_all.row_flags(ti);
+                k_flags.extend_from_slice(&rf[kvh * gph..(kvh + 1) * gph]);
+            }
+            let km_mat = SdrMatrix {
+                spec,
+                rows: t,
+                cols: head_dim,
+                codes: k_codes,
+                flags: k_flags,
+                scales: vec![k_scale],
+            };
+            let ints_qk = gemm_razored_int(&qm_mat, &km_mat);
+            let mut scores: Vec<f32> = ints_qk
+                .data()
+                .iter()
+                .map(|&v| v as f32 * q_scale * k_scale * scale_dot)
+                .collect();
+            let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+            let mut sum = 0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                sum += *s;
+            }
+            let inv_sum = 1.0 / sum;
+            let out = &mut ctx[h * head_dim..(h + 1) * head_dim];
+            for (ti, &p) in scores.iter().enumerate() {
+                let wgt = p * inv_sum;
+                let vrow = &v_all.row(ti)[kvh * head_dim..(kvh + 1) * head_dim];
+                for (o, &vv) in out.iter_mut().zip(vrow) {
+                    *o += wgt * vv;
+                }
+            }
+        }
+        ctx
+    }
+
+    #[test]
+    fn packed_attention_bit_identical_to_staged_pipeline() {
+        // The tentpole claim for the KV path: walking nibbles directly
+        // gives the *same bits* as unpack → razored GEMM → reconstruct.
+        // Integer scores are exact in both, the float score/softmax/value
+        // arithmetic runs in the same order — so equality is exact, not
+        // approximate.
+        let mut rng = Rng::new(11);
+        for (heads, kv_heads, head_dim, g, tokens) in [
+            (2usize, 2usize, 32usize, 16usize, 7usize),
+            (4, 2, 32, 8, 5),   // GQA
+            (1, 1, 64, 16, 12),
+            (2, 1, 16, 16, 3),  // single group per head
+        ] {
+            let kv_dim = kv_heads * head_dim;
+            let spec = SdrSpec::new(8, 4, g);
+            let mut cache = SdrKvCache::new(1, kv_dim, spec, vec![(0.02, 0.03)]);
+            for _ in 0..tokens {
+                let k: Vec<f32> = (0..kv_dim).map(|_| rng.heavy_tailed(0.5, 0.05, 8.0)).collect();
+                let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                cache.append(0, &k, &v);
+            }
+            let q: Vec<f32> = (0..heads * head_dim).map(|_| rng.normal_f32(0.0, 0.7)).collect();
+            let q_scale = 0.015f32;
+            let packed = cache.attention_packed(0, &q, q_scale, heads, kv_heads, head_dim);
+            let staged = staged_attention(&cache, 0, &q, q_scale, heads, kv_heads, head_dim);
+            assert_eq!(packed, staged, "h{heads} kv{kv_heads} hd{head_dim} g{g} t{tokens}");
+        }
+    }
+
+    #[test]
+    fn packed_attention_prop_random_shapes() {
+        use crate::util::quickcheck::{check, Config, IntRange, PairGen};
+        let gen = PairGen(IntRange { lo: 1, hi: 10 }, IntRange { lo: 1, hi: 3 });
+        let cfg = Config { cases: 25, ..Default::default() };
+        check("packed-attn≡staged", cfg, &gen, |&(tokens, hsel)| {
+            let (heads, kv_heads, head_dim, g) = match hsel {
+                1 => (2usize, 2usize, 16usize, 8usize),
+                2 => (4, 2, 32, 16),
+                _ => (3, 3, 32, 8),
+            };
+            let kv_dim = kv_heads * head_dim;
+            let mut rng = Rng::new((tokens * 100 + hsel) as u64);
+            let mut cache =
+                SdrKvCache::new(1, kv_dim, SdrSpec::new(8, 4, g), vec![(0.01, 0.02)]);
+            for _ in 0..tokens {
+                let k: Vec<f32> = (0..kv_dim).map(|_| rng.heavy_tailed(0.4, 0.05, 10.0)).collect();
+                let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.4)).collect();
+                cache.append(0, &k, &v);
+            }
+            let q: Vec<f32> = (0..heads * head_dim).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+            let packed = cache.attention_packed(0, &q, 0.02, heads, kv_heads, head_dim);
+            let staged = staged_attention(&cache, 0, &q, 0.02, heads, kv_heads, head_dim);
+            packed == staged
+        });
+    }
+
+    #[test]
+    fn packed_attention_empty_cache_is_zero() {
+        let cache = SdrKvCache::new(1, 32, spec(), vec![(0.01, 0.01)]);
+        let q = vec![1.0f32; 64];
+        let ctx = cache.attention_packed(0, &q, 0.01, 2, 1, 32);
+        assert_eq!(ctx, vec![0.0; 64]);
+    }
+
+    #[test]
+    fn packed_attention_support_gate() {
+        let cache = SdrKvCache::new(1, 64, SdrSpec::new(8, 4, 16), vec![(0.01, 0.01)]);
+        assert!(cache.supports_packed_attention(32));
+        assert!(!cache.supports_packed_attention(24));
+    }
+
+    #[test]
+    fn unpacked_bytes_is_twice_packed() {
+        let (sdr, _) = filled_cache(2, 64, 9);
+        assert_eq!(sdr.unpacked_bytes(), 2 * sdr.bytes());
+        assert_eq!(sdr.stored_values(), 2 * 2 * 9 * 64);
+    }
+
+    #[test]
+    fn exported_sdr_matrices_match_reconstruction() {
+        let (sdr, _) = filled_cache(1, 32, 4);
+        let km = sdr.k_sdr_matrix(0);
+        assert_eq!(km.rows, 4);
+        assert_eq!(km.cols, 32);
+        let recon = km.dequantize();
+        assert_eq!(recon.data(), sdr.k_matrix(0).data());
     }
 }

@@ -140,6 +140,11 @@ pub struct QuantModel {
     /// Calibrated per-site absolute maxima (static scales are derived
     /// per use-site bit width by the scheme itself).
     pub site_amax: BTreeMap<String, f32>,
+    /// Run the decompression-free packed compute paths (packed-weight
+    /// GEMM, packed KV attention) where the scheme provides them. On by
+    /// default; the serving bench flips it off to measure the staged
+    /// fake-quant reference.
+    pub use_packed: bool,
 }
 
 impl QuantModel {
@@ -178,7 +183,29 @@ impl QuantModel {
             final_norm: w.final_norm.clone(),
             scheme,
             site_amax,
+            use_packed: true,
         }
+    }
+
+    /// Weight operand bytes one full forward streams through its GEMMs:
+    /// `(packed, unpacked_equivalent)` summed over every prepared linear
+    /// (block projections + lm head). For schemes without packed weights
+    /// the two are equal.
+    pub fn weight_operand_bytes(&self) -> (usize, usize) {
+        let mut packed = 0usize;
+        let mut unpacked = 0usize;
+        let mut add = |pl: &PreparedLinear| {
+            let (p, u) = pl.weight_operand_bytes();
+            packed += p;
+            unpacked += u;
+        };
+        for l in &self.layers {
+            for pl in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+                add(pl);
+            }
+        }
+        add(&self.lm_head);
+        (packed, unpacked)
     }
 
     /// Static activation scale (amax / qmax) for a site at the scheme's
@@ -208,9 +235,21 @@ impl QuantModel {
                 rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
             }
             let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
-            let mut q = layer.wq.forward(&normed, s_in, self.scheme.as_ref());
-            let mut k = layer.wk.forward(&normed, s_in, self.scheme.as_ref());
-            let v = layer.wv.forward(&normed, s_in, self.scheme.as_ref());
+            let mut q = layer.wq.forward_with_packed(
+                &normed, s_in,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
+            let mut k = layer.wk.forward_with_packed(
+                &normed, s_in,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
+            let v = layer.wv.forward_with_packed(
+                &normed, s_in,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             apply_rope(&mut q, cfg.heads, hd, 0);
             apply_rope(&mut k, cfg.kv_heads, hd, 0);
             // QRazor quantizes Q, K, V for low-precision attention GEMMs
@@ -226,27 +265,47 @@ impl QuantModel {
                 .kv(&v, self.act_scale(&format!("l{li}.v"), kvbits));
             let ctx = causal_attention(&qq, &kq, &vq, cfg.heads, cfg.kv_heads, hd);
             let s_out = self.act_scale(&format!("l{li}.attn_out"), abits);
-            let attn_out = layer.wo.forward(&ctx, s_out, self.scheme.as_ref());
+            let attn_out = layer.wo.forward_with_packed(
+                &ctx, s_out,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             add_assign(&mut x, &attn_out);
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
             }
             let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
-            let gate = layer.w_gate.forward(&normed, s_ffn, self.scheme.as_ref());
-            let up = layer.w_up.forward(&normed, s_ffn, self.scheme.as_ref());
+            let gate = layer.w_gate.forward_with_packed(
+                &normed, s_ffn,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
+            let up = layer.w_up.forward_with_packed(
+                &normed, s_ffn,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
             for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *o = silu(g) * u;
             }
             let s_down = self.act_scale(&format!("l{li}.ffn_down_in"), abits);
-            let ffn_out = layer.w_down.forward(&h, s_down, self.scheme.as_ref());
+            let ffn_out = layer.w_down.forward_with_packed(
+                &h, s_down,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             add_assign(&mut x, &ffn_out);
         }
         for i in 0..t {
             rmsnorm(x.row(i), &self.final_norm, 1e-5, normed.row_mut(i));
         }
         self.lm_head
-            .forward(&normed, self.act_scale("lm_head_in", abits), self.scheme.as_ref())
+            .forward_with_packed(
+                &normed, self.act_scale("lm_head_in", abits),
+                self.scheme.as_ref(),
+                self.use_packed,
+            )
     }
 }
 
@@ -268,6 +327,16 @@ impl DecodeCache {
         match self {
             DecodeCache::Fp(c) => c.bytes(),
             DecodeCache::Sdr(c) => c.bytes(),
+        }
+    }
+
+    /// Bytes an unpacked (byte-per-code) working copy of this cache
+    /// would occupy — the traffic the staged attention path touches.
+    /// Equals [`DecodeCache::bytes`] for FP caches.
+    pub fn unpacked_bytes(&self) -> usize {
+        match self {
+            DecodeCache::Fp(c) => c.bytes(),
+            DecodeCache::Sdr(c) => c.unpacked_bytes(),
         }
     }
 }
@@ -314,9 +383,21 @@ impl QuantModel {
         for (li, layer) in self.layers.iter().enumerate() {
             rmsnorm(x.row(0), &layer.attn_norm, 1e-5, normed.row_mut(0));
             let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
-            let mut q = layer.wq.forward(&normed, s_in, self.scheme.as_ref());
-            let mut k = layer.wk.forward(&normed, s_in, self.scheme.as_ref());
-            let v = layer.wv.forward(&normed, s_in, self.scheme.as_ref());
+            let mut q = layer.wq.forward_with_packed(
+                &normed, s_in,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
+            let mut k = layer.wk.forward_with_packed(
+                &normed, s_in,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
+            let v = layer.wv.forward_with_packed(
+                &normed, s_in,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             apply_rope(&mut q, cfg.heads, hd, pos);
             apply_rope(&mut k, cfg.kv_heads, hd, pos);
             // append K/V: the SDR cache quantizes on write (the paper's
@@ -333,61 +414,98 @@ impl QuantModel {
                     c.append(li, kq.row(0), vq.row(0));
                 }
             }
-            // quantized query (paper Fig. 5: INT4 Q·Kᵀ)
-            let qq = self
-                .scheme
-                .kv(&q, self.act_scale(&format!("l{li}.q"), kvbits));
-            let (k_all, v_all) = match cache {
-                DecodeCache::Sdr(c) => (c.k_matrix(li), c.v_matrix(li)),
-                DecodeCache::Fp(c) => (c.k_matrix(li), c.v_matrix(li)),
+            let s_q = self.act_scale(&format!("l{li}.q"), kvbits);
+            // Decompression-free attention when the cache is packed SDR,
+            // the scheme razors queries, and group boundaries respect the
+            // head geometry — scores and context come straight from the
+            // nibble planes, no K/V matrix is reconstructed.
+            let packed_attn = match (&*cache, self.scheme.sdr_query_spec(), s_q) {
+                (DecodeCache::Sdr(c), Some(_), Some(qs))
+                    if self.use_packed && c.supports_packed_attention(hd) =>
+                {
+                    Some(c.attention_packed(li, q.row(0), qs, cfg.heads, cfg.kv_heads, hd))
+                }
+                _ => None,
             };
-            let t = k_all.shape()[0];
-            let mut ctx = Tensor::zeros(&[1, cfg.heads * hd]);
-            for h in 0..cfg.heads {
-                let kvh = h / group;
-                let qh = &qq.row(0)[h * hd..(h + 1) * hd];
-                // scores over all cached positions
-                let mut scores = Vec::with_capacity(t);
-                for ti in 0..t {
-                    let krow = &k_all.row(ti)[kvh * hd..(kvh + 1) * hd];
-                    let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
-                    scores.push(dot * scale_dot);
-                }
-                // softmax
-                let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-                let mut sum = 0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - max).exp();
-                    sum += *s;
-                }
-                let inv = 1.0 / sum;
-                let out = &mut ctx.row_mut(0)[h * hd..(h + 1) * hd];
-                for (ti, &p) in scores.iter().enumerate() {
-                    let vrow = &v_all.row(ti)[kvh * hd..(kvh + 1) * hd];
-                    let w = p * inv;
-                    for (o, &vv) in out.iter_mut().zip(vrow) {
-                        *o += w * vv;
+            let ctx = if let Some(ctx_row) = packed_attn {
+                Tensor::from_vec(&[1, cfg.heads * hd], ctx_row)
+            } else {
+                // staged reference path: quantized query (paper Fig. 5:
+                // INT4 Q·Kᵀ) against reconstructed K/V matrices
+                let qq = self.scheme.kv(&q, s_q);
+                let (k_all, v_all) = match cache {
+                    DecodeCache::Sdr(c) => (c.k_matrix(li), c.v_matrix(li)),
+                    DecodeCache::Fp(c) => (c.k_matrix(li), c.v_matrix(li)),
+                };
+                let t = k_all.shape()[0];
+                let mut ctx = Tensor::zeros(&[1, cfg.heads * hd]);
+                for h in 0..cfg.heads {
+                    let kvh = h / group;
+                    let qh = &qq.row(0)[h * hd..(h + 1) * hd];
+                    // scores over all cached positions
+                    let mut scores = Vec::with_capacity(t);
+                    for ti in 0..t {
+                        let krow = &k_all.row(ti)[kvh * hd..(kvh + 1) * hd];
+                        let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                        scores.push(dot * scale_dot);
+                    }
+                    // softmax
+                    let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                    let mut sum = 0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max).exp();
+                        sum += *s;
+                    }
+                    let inv = 1.0 / sum;
+                    let out = &mut ctx.row_mut(0)[h * hd..(h + 1) * hd];
+                    for (ti, &p) in scores.iter().enumerate() {
+                        let vrow = &v_all.row(ti)[kvh * hd..(kvh + 1) * hd];
+                        let w = p * inv;
+                        for (o, &vv) in out.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
                     }
                 }
-            }
+                ctx
+            };
             let s_out = self.act_scale(&format!("l{li}.attn_out"), abits);
-            let attn_out = layer.wo.forward(&ctx, s_out, self.scheme.as_ref());
+            let attn_out = layer.wo.forward_with_packed(
+                &ctx, s_out,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             add_assign(&mut x, &attn_out);
             rmsnorm(x.row(0), &layer.ffn_norm, 1e-5, normed.row_mut(0));
             let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
-            let gate = layer.w_gate.forward(&normed, s_ffn, self.scheme.as_ref());
-            let up = layer.w_up.forward(&normed, s_ffn, self.scheme.as_ref());
+            let gate = layer.w_gate.forward_with_packed(
+                &normed, s_ffn,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
+            let up = layer.w_up.forward_with_packed(
+                &normed, s_ffn,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             let mut h = Tensor::zeros(&[1, cfg.ffn_hidden]);
             for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *o = silu(g) * u;
             }
             let s_down = self.act_scale(&format!("l{li}.ffn_down_in"), abits);
-            let ffn_out = layer.w_down.forward(&h, s_down, self.scheme.as_ref());
+            let ffn_out = layer.w_down.forward_with_packed(
+                &h, s_down,
+                self.scheme.as_ref(),
+                self.use_packed,
+            );
             add_assign(&mut x, &ffn_out);
         }
         rmsnorm(x.row(0), &self.final_norm, 1e-5, normed.row_mut(0));
         self.lm_head
-            .forward(&normed, self.act_scale("lm_head_in", abits), self.scheme.as_ref())
+            .forward_with_packed(
+                &normed, self.act_scale("lm_head_in", abits),
+                self.scheme.as_ref(),
+                self.use_packed,
+            )
             .into_vec()
     }
 }
@@ -522,6 +640,65 @@ mod tests {
             _ => unreachable!(),
         };
         assert!((4.2..4.35).contains(&eff), "eff bits {eff}");
+    }
+
+    #[test]
+    fn packed_compute_tracks_staged_compute() {
+        // Flipping use_packed swaps fake-quant f32 GEMMs for the
+        // integer packed kernel over the same lattice: logits must agree
+        // to accumulation-order noise, nothing more.
+        let (w, cal, seqs) = setup();
+        let mut qm = QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal);
+        let a = qm.forward_full(&seqs[0]);
+        qm.use_packed = false;
+        let b = qm.forward_full(&seqs[0]);
+        let rel = crate::baselines::rel_error(&b, &a);
+        assert!(rel < 1e-3, "packed vs staged forward diverged: {rel}");
+    }
+
+    #[test]
+    fn packed_decode_tracks_staged_decode() {
+        let (w, cal, seqs) = setup();
+        let tokens = &seqs[0][..6];
+        let run = |use_packed: bool| -> Vec<Vec<f32>> {
+            let mut qm = QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal);
+            qm.use_packed = use_packed;
+            let mut cache = qm.new_cache(16);
+            assert!(matches!(cache, DecodeCache::Sdr(_)));
+            tokens
+                .iter()
+                .enumerate()
+                .map(|(pos, &tok)| qm.forward_token(tok, pos, &mut cache))
+                .collect()
+        };
+        let packed = run(true);
+        let staged = run(false);
+        for (pos, (a, b)) in packed.iter().zip(&staged).enumerate() {
+            let mut num = 0f64;
+            let mut den = 0f64;
+            for (x, y) in a.iter().zip(b) {
+                num += ((x - y) as f64).powi(2);
+                den += (*y as f64).powi(2);
+            }
+            let rel = (num / den).sqrt();
+            assert!(rel < 2e-2, "pos {pos}: packed vs staged decode rel {rel}");
+        }
+    }
+
+    #[test]
+    fn qrazor_weight_operands_are_half_the_unpacked_stream() {
+        let (w, cal, _) = setup();
+        let qm = QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal);
+        let (packed, unpacked) = qm.weight_operand_bytes();
+        let ratio = packed as f64 / unpacked as f64;
+        assert!(
+            (0.45..=0.55).contains(&ratio),
+            "packed weight stream {packed} vs unpacked {unpacked}: ratio {ratio}"
+        );
+        // FP16 scheme: no packed form, ratio exactly 1
+        let fp = QuantModel::build(&w, Box::new(Fp16), &cal);
+        let (p2, u2) = fp.weight_operand_bytes();
+        assert_eq!(p2, u2);
     }
 
     #[test]

@@ -143,9 +143,17 @@ impl QuantTensor {
         }
     }
 
-    /// Elements per row.
+    /// Elements per row: a 1-D tensor is a single row of its full
+    /// length; N-D tensors flatten every trailing dimension. Degenerate
+    /// shapes ([], [0], [2, 0]) report their true element counts rather
+    /// than being rounded up to 1 like the old `product().max(..)`
+    /// expression did.
     pub fn cols(&self) -> usize {
-        self.shape[1..].iter().product::<usize>().max(if self.shape.len() == 1 { self.shape[0] } else { 1 })
+        match self.shape.len() {
+            0 => 0,
+            1 => self.shape[0],
+            _ => self.shape[1..].iter().product(),
+        }
     }
 }
 
@@ -262,6 +270,31 @@ mod tests {
         assert_eq!(round_half_even(2.5), 2);
         assert_eq!(round_half_even(-0.5), 0);
         assert_eq!(round_half_even(-1.5), -2);
+    }
+
+    #[test]
+    fn rows_cols_for_all_arities() {
+        let q = |shape: Vec<usize>| QuantTensor {
+            values: vec![0; shape.iter().product()],
+            shape,
+            scales: vec![1.0],
+            bits: 8,
+            granularity: Granularity::PerTensor,
+        };
+        // 1-D: one row of n elements
+        assert_eq!(q(vec![5]).rows(), 1);
+        assert_eq!(q(vec![5]).cols(), 5);
+        // 2-D
+        assert_eq!(q(vec![3, 4]).rows(), 3);
+        assert_eq!(q(vec![3, 4]).cols(), 4);
+        // N-D: trailing dims flatten
+        assert_eq!(q(vec![2, 3, 4]).rows(), 2);
+        assert_eq!(q(vec![2, 3, 4]).cols(), 12);
+        // degenerate shapes report their true (zero) extents
+        assert_eq!(q(vec![]).cols(), 0);
+        assert_eq!(q(vec![0]).cols(), 0);
+        assert_eq!(q(vec![2, 0]).cols(), 0);
+        assert_eq!(q(vec![2, 0]).rows(), 2);
     }
 
     #[test]

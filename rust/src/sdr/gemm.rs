@@ -15,9 +15,40 @@
 //! (`prop_decompression_free_equals_decompressed`), which is the claim
 //! that makes the paper's hardware unit sound.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::packed::{nibble_at, PackedSdrMatrix, NIBBLE_SIGNED};
 use super::razor::SdrMatrix;
 use crate::tensor::Tensor;
 use crate::util::threadpool::parallel_for;
+
+/// Process-wide count of packed operand bytes consumed by the
+/// decompression-free kernels ([`gemm_razored_packed`] and the KV
+/// cache's packed attention). Benches snapshot it around a run to prove
+/// the packed path actually executed — static storage accounting alone
+/// cannot catch a silent fallback to the staged path.
+pub static PACKED_OPERAND_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Record packed operand traffic (called by the packed kernels).
+#[inline]
+pub fn note_packed_traffic(bytes: usize) {
+    PACKED_OPERAND_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Snapshot of [`PACKED_OPERAND_BYTES`].
+pub fn packed_operand_bytes() -> u64 {
+    PACKED_OPERAND_BYTES.load(Ordering::Relaxed)
+}
+
+/// Wrapper making a raw `*mut T` shareable across the scoped threadpool.
+/// Safe uses partition the output so no element is written twice.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
 
 /// Decompression-free GEMM: returns the float result
 /// `C[i,j] = scale_a · scale_w[j] · Σ_p ((Σ_{t∈p} sa·sw) << (fa_p + fw_p))`.
@@ -46,13 +77,6 @@ pub fn gemm_razored_int(a: &SdrMatrix, w: &SdrMatrix) -> Tensor<i64> {
     let a_signed: Vec<i16> = a.codes.iter().map(|c| c.signed() as i16).collect();
     let w_signed: Vec<i16> = w.codes.iter().map(|c| c.signed() as i16).collect();
 
-    struct SendPtr(*mut i64);
-    unsafe impl Sync for SendPtr {}
-    impl SendPtr {
-        fn get(&self) -> *mut i64 {
-            self.0
-        }
-    }
     let cptr = SendPtr(c.data_mut().as_mut_ptr());
 
     parallel_for(m, |i| {
@@ -101,17 +125,128 @@ pub fn gemm_decompress(a: &SdrMatrix, w: &SdrMatrix) -> Tensor<i64> {
 }
 
 /// Turn integer accumulators into floats with the stage-1 scales.
+///
+/// The activation scale is looked up **per output row**: activations are
+/// usually per-tensor (one scale) but per-channel activation quantization
+/// is legal, and the old `scale_for_row(0)` shortcut silently mis-scaled
+/// every row but the first in that case.
 pub fn apply_scales(acc: &Tensor<i64>, a: &SdrMatrix, w: &SdrMatrix) -> Tensor<f32> {
+    apply_scales_raw(acc, &a.scales, &w.scales)
+}
+
+/// Scale application shared by the unpacked and packed GEMM paths:
+/// `out[i,j] = acc[i,j] · sa(i) · sw(j)` with each scale slice either
+/// per-row (`len == rows`) or broadcast (`len == 1`).
+pub fn apply_scales_raw(acc: &Tensor<i64>, a_scales: &[f32], w_scales: &[f32]) -> Tensor<f32> {
     let (m, n) = (acc.shape()[0], acc.shape()[1]);
-    let sa = a.scale_for_row(0); // activations are per-tensor
+    let pick = |s: &[f32], r: usize| if s.len() == 1 { s[0] } else { s[r] };
     let mut out = Tensor::zeros(&[m, n]);
     for i in 0..m {
+        let sa = pick(a_scales, i);
         for j in 0..n {
             out.data_mut()[i * n + j] =
-                acc.data()[i * n + j] as f32 * sa * w.scale_for_row(j);
+                acc.data()[i * n + j] as f32 * sa * pick(w_scales, j);
         }
     }
     out
+}
+
+/// Largest group the packed kernel's stack tile covers (the paper
+/// evaluates g ≤ 128; matches [`super::razor::FUSED_MAX_GROUP`]).
+pub const PACKED_TILE_GROUP: usize = 128;
+
+/// Rows of `A` per parallel work item in the packed kernel. Each block's
+/// activation rows are decoded once and then reused against every
+/// weight tile, so the per-MAC nibble-decode cost is `1/PACKED_ROW_BLOCK`;
+/// the block is also the cache unit — one packed weight row (`k/2`
+/// bytes) is streamed once per block instead of once per output row.
+pub const PACKED_ROW_BLOCK: usize = 8;
+
+/// Decompression-free GEMM over **nibble-packed** operands — the packed
+/// twin of [`gemm_razored`], bit-identical to it (and hence to
+/// [`gemm_decompress`], the property the paper's §4.3 hardware unit
+/// rests on).
+///
+/// The kernel never materializes an unpacked matrix: it walks the
+/// nibble stores group-by-group, expanding one group at a time into a
+/// stack tile (`[i16; PACKED_TILE_GROUP]` — the register file of the
+/// paper's MAC array), does the narrow MACs, and applies **one** barrel
+/// shift per group pair. Work is parallel over activation row blocks
+/// via [`crate::util::threadpool`]; each decoded weight tile is reused
+/// across the whole row block, so the packed weight stream is read once
+/// per block rather than once per output row.
+pub fn gemm_razored_packed(a: &PackedSdrMatrix, w: &PackedSdrMatrix) -> Tensor<i64> {
+    assert_eq!(a.cols, w.cols, "reduction dims differ: {} vs {}", a.cols, w.cols);
+    assert_eq!(a.spec.group, w.spec.group, "group sizes must align");
+    assert!(
+        a.spec.group <= PACKED_TILE_GROUP,
+        "group {} exceeds the packed stack tile",
+        a.spec.group
+    );
+    let (m, n, k) = (a.rows, w.rows, a.cols);
+    let g = a.spec.group;
+    let gpr = k.div_ceil(g);
+    let mut c: Tensor<i64> = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    note_packed_traffic(a.payload_bytes() + w.payload_bytes());
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let iblocks = m.div_ceil(PACKED_ROW_BLOCK);
+
+    parallel_for(iblocks, |ib| {
+        let i0 = ib * PACKED_ROW_BLOCK;
+        let rows = PACKED_ROW_BLOCK.min(m - i0);
+        // Decode this block's activation rows once (amortized over every
+        // weight row); flags stay packed and are read per group below.
+        let mut arows = vec![0i16; rows * k];
+        for r in 0..rows {
+            let base = (i0 + r) * k;
+            for (t, o) in arows[r * k..(r + 1) * k].iter_mut().enumerate() {
+                *o = NIBBLE_SIGNED[nibble_at(&a.nibbles, base + t) as usize];
+            }
+        }
+        let cblock =
+            unsafe { std::slice::from_raw_parts_mut(cptr.get().add(i0 * n), rows * n) };
+        let mut wtile = [0i16; PACKED_TILE_GROUP];
+        for j in 0..n {
+            let wbase = j * k;
+            let wfbase = j * gpr;
+            let mut accs = [0i64; PACKED_ROW_BLOCK];
+            for p in 0..gpr {
+                let lo = p * g;
+                let glen = g.min(k - lo);
+                // One weight group expanded into the stack tile, reused
+                // across the whole activation row block.
+                for (t, o) in wtile[..glen].iter_mut().enumerate() {
+                    *o = NIBBLE_SIGNED[nibble_at(&w.nibbles, wbase + lo + t) as usize];
+                }
+                let fw = nibble_at(&w.flag_bytes, wfbase + p);
+                for (r, acc) in accs[..rows].iter_mut().enumerate() {
+                    let arow = &arows[r * k + lo..r * k + lo + glen];
+                    // Group-local narrow MAC (≤ 7·7·g fits i32).
+                    let mut part: i32 = 0;
+                    for (&x, &y) in arow.iter().zip(&wtile[..glen]) {
+                        part += (x as i32) * (y as i32);
+                    }
+                    let fa = nibble_at(&a.flag_bytes, (i0 + r) * gpr + p);
+                    // The one barrel shift per group pair.
+                    *acc += (part as i64) << (fa + fw);
+                }
+            }
+            for r in 0..rows {
+                cblock[r * n + j] = accs[r];
+            }
+        }
+    });
+    c
+}
+
+/// Float output of the packed GEMM: integer kernel + stage-1 scales
+/// (per-row activation scales handled, per-channel weight scales).
+pub fn gemm_razored_packed_f32(a: &PackedSdrMatrix, w: &PackedSdrMatrix) -> Tensor<f32> {
+    let acc = gemm_razored_packed(a, w);
+    apply_scales_raw(&acc, &a.scales, &w.scales)
 }
 
 /// Operation counts of one razored GEMM — feeds `crate::hw::opcount`
@@ -241,6 +376,108 @@ mod tests {
         let c = gemm_razored(&a, &w);
         let ratio = c.data()[1] / c.data()[0];
         assert!((ratio - 10.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn apply_scales_uses_per_row_activation_scales() {
+        // Two activation rows identical up to 10×, quantized PER-CHANNEL:
+        // their codes coincide and only the stage-1 scales differ, so the
+        // GEMM outputs must differ by exactly that factor. The old
+        // `scale_for_row(0)` shortcut collapsed the ratio to 1.
+        let x = Tensor::from_vec(&[2, 4], vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0]);
+        let wt = Tensor::from_vec(&[1, 4], vec![0.3, -0.1, 0.2, 0.5]);
+        let qa = QuantTensor::quantize(&x, 16, Granularity::PerChannel);
+        let qw = QuantTensor::quantize(&wt, 8, Granularity::PerChannel);
+        let a = SdrMatrix::compress(SdrSpec::new(16, 4, 4), &qa);
+        let w = SdrMatrix::compress(SdrSpec::new(8, 4, 4), &qw);
+        assert_eq!(a.scales.len(), 2);
+        assert!((a.scales[1] / a.scales[0] - 10.0).abs() < 1e-4);
+        let c = gemm_razored(&a, &w);
+        let ratio = c.data()[1] / c.data()[0];
+        assert!((ratio - 10.0).abs() < 1e-3, "activation row scale dropped: ratio {ratio}");
+        // and the packed path agrees bit-for-bit
+        let cp = gemm_razored_packed_f32(
+            &crate::sdr::packed::PackedSdrMatrix::from_matrix(&a),
+            &crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+        );
+        assert_eq!(c.data(), cp.data());
+    }
+
+    #[test]
+    fn packed_equals_unpacked_small() {
+        let (a, w) = make_pair(3, 5, 32, 8, 4, 17);
+        let (pa, pw) = (
+            crate::sdr::packed::PackedSdrMatrix::from_matrix(&a),
+            crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+        );
+        assert_eq!(gemm_razored_packed(&pa, &pw).data(), gemm_razored_int(&a, &w).data());
+    }
+
+    #[test]
+    fn packed_handles_ragged_and_blocked_shapes() {
+        // Shapes straddling every blocking boundary: row blocks (8),
+        // ragged tail groups, odd nibble counts.
+        for (m, n, k, g) in [
+            (1usize, 1usize, 1usize, 4usize),
+            (2, 3, 37, 8),      // odd cols, ragged tail
+            (9, 33, 50, 16),    // one past both block sizes
+            (8, 32, 64, 16),    // exactly on block boundaries
+            (17, 5, 127, 128),  // single ragged group per row, max tile
+        ] {
+            let (a, w) = make_pair(m, n, k, g, 4, (m * 31 + n * 7 + k) as u64);
+            let (pa, pw) = (
+                crate::sdr::packed::PackedSdrMatrix::from_matrix(&a),
+                crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+            );
+            let packed = gemm_razored_packed(&pa, &pw);
+            let unpacked = gemm_razored_int(&a, &w);
+            let reference = gemm_decompress(&a, &w);
+            assert_eq!(packed.data(), unpacked.data(), "{m}x{n}x{k} g{g}");
+            assert_eq!(packed.data(), reference.data(), "{m}x{n}x{k} g{g}");
+        }
+    }
+
+    #[test]
+    fn prop_packed_equals_unpacked_equals_decompressed() {
+        // The tentpole invariant: the nibble-walking kernel, the unpacked
+        // kernel and the decompress-then-multiply reference agree bit for
+        // bit on every shape/group, including all-negative inputs.
+        let gen = PairGen(IntRange { lo: 1, hi: 20 }, IntRange { lo: 1, hi: 70 });
+        let cfg = Config { cases: 40, ..Default::default() };
+        check("packed≡unpacked≡decompressed", cfg, &gen, |&(mn, k)| {
+            let (m, n, k) = (mn as usize, ((mn as usize * 5) % 37) + 1, k as usize);
+            for g in [4usize, 16, 128] {
+                let (a, w) = make_pair(m, n, k, g, 4, (m * 1009 + n * 13 + k) as u64);
+                let (pa, pw) = (
+                    crate::sdr::packed::PackedSdrMatrix::from_matrix(&a),
+                    crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+                );
+                let packed = gemm_razored_packed(&pa, &pw);
+                if packed.data() != gemm_razored_int(&a, &w).data()
+                    || packed.data() != gemm_decompress(&a, &w).data()
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn packed_all_negative_matrix() {
+        let x = Tensor::from_vec(&[2, 8], vec![-1.0f32; 16]);
+        let wt = Tensor::from_vec(&[2, 8], vec![-0.5f32; 16]);
+        let qa = QuantTensor::quantize(&x, 16, Granularity::PerTensor);
+        let qw = QuantTensor::quantize(&wt, 8, Granularity::PerChannel);
+        let a = SdrMatrix::compress(SdrSpec::new(16, 4, 4), &qa);
+        let w = SdrMatrix::compress(SdrSpec::new(8, 4, 4), &qw);
+        let (pa, pw) = (
+            crate::sdr::packed::PackedSdrMatrix::from_matrix(&a),
+            crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+        );
+        assert_eq!(gemm_razored_packed(&pa, &pw).data(), gemm_decompress(&a, &w).data());
+        // (−)·(−) must come out positive through the packed sign path
+        assert!(gemm_razored_packed(&pa, &pw).data().iter().all(|&v| v > 0));
     }
 
     #[test]

@@ -11,11 +11,32 @@
 use super::razor::{SdrCode, SdrMatrix, SdrSpec};
 use super::signmag::SignMag;
 
+/// Signed value of a packed `sign | 3-bit magnitude` nibble, indexed by
+/// the raw 4-bit field — the lookup the packed GEMM/attention kernels
+/// use to consume nibbles without materializing [`SdrCode`] structs.
+/// Index 8 is "negative zero", which decodes to 0 like the hardware.
+pub const NIBBLE_SIGNED: [i16; 16] =
+    [0, 1, 2, 3, 4, 5, 6, 7, 0, -1, -2, -3, -4, -5, -6, -7];
+
+/// Nibble `i` of a packed byte stream (low nibble first).
+#[inline(always)]
+pub fn nibble_at(bytes: &[u8], i: usize) -> u8 {
+    if i % 2 == 0 {
+        bytes[i / 2] & 0x0F
+    } else {
+        bytes[i / 2] >> 4
+    }
+}
+
 /// Pack a slice of codes into nibbles (low nibble first).
+///
+/// Hard-asserts the 3-bit range even in release builds: an oversized
+/// code would otherwise alias into its neighbor's nibble and corrupt
+/// the store silently.
 pub fn pack_nibbles(codes: &[SdrCode]) -> Vec<u8> {
     let mut out = vec![0u8; codes.len().div_ceil(2)];
     for (i, c) in codes.iter().enumerate() {
-        debug_assert!(c.code < 8, "code {} exceeds 3 bits", c.code);
+        assert!(c.code < 8, "code {} exceeds 3 bits", c.code);
         let nib = (SignMag { neg: c.neg, mag: c.code as u32 }).encode(4) as u8;
         if i % 2 == 0 {
             out[i / 2] |= nib;
@@ -28,25 +49,21 @@ pub fn pack_nibbles(codes: &[SdrCode]) -> Vec<u8> {
 
 /// Unpack `n` codes from nibble storage.
 pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<SdrCode> {
-    assert!(bytes.len() >= n.div_ceil(2));
+    assert!(bytes.len() >= n.div_ceil(2), "code store holds < {n} codes");
     (0..n)
         .map(|i| {
-            let nib = if i % 2 == 0 {
-                bytes[i / 2] & 0x0F
-            } else {
-                bytes[i / 2] >> 4
-            };
-            let sm = SignMag::decode(nib as u32, 4);
+            let sm = SignMag::decode(nibble_at(bytes, i) as u32, 4);
             SdrCode { neg: sm.neg, code: sm.mag as u8 }
         })
         .collect()
 }
 
-/// Pack 4-bit flags two per byte.
+/// Pack 4-bit flags two per byte. Hard-asserts the 4-bit range even in
+/// release builds — see [`pack_nibbles`].
 pub fn pack_flags(flags: &[u8]) -> Vec<u8> {
     let mut out = vec![0u8; flags.len().div_ceil(2)];
     for (i, &f) in flags.iter().enumerate() {
-        debug_assert!(f < 16, "flag {f} exceeds 4 bits");
+        assert!(f < 16, "flag {f} exceeds 4 bits");
         if i % 2 == 0 {
             out[i / 2] |= f;
         } else {
@@ -56,10 +73,10 @@ pub fn pack_flags(flags: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Unpack `n` flags from nibble storage.
 pub fn unpack_flags(bytes: &[u8], n: usize) -> Vec<u8> {
-    (0..n)
-        .map(|i| if i % 2 == 0 { bytes[i / 2] & 0x0F } else { bytes[i / 2] >> 4 })
-        .collect()
+    assert!(bytes.len() >= n.div_ceil(2), "flag store holds < {n} flags");
+    (0..n).map(|i| nibble_at(bytes, i)).collect()
 }
 
 /// At-rest packed SDR matrix. Only valid for `target_bits == 4`
@@ -99,9 +116,23 @@ impl PackedSdrMatrix {
         }
     }
 
+    /// Groups along each row (flags per row).
+    #[inline]
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.spec.group)
+    }
+
     /// Total payload bytes (codes + flags), excluding scales.
     pub fn payload_bytes(&self) -> usize {
         self.nibbles.len() + self.flag_bytes.len()
+    }
+
+    /// Payload bytes the *unpacked* working form ([`SdrMatrix`]) moves
+    /// for the same data: one byte per code plus one byte per flag. The
+    /// packed-vs-unpacked traffic ratio in the Fig. 3 / serving benches
+    /// is `payload_bytes() / unpacked_payload_bytes()` ≈ 4.25/8.5 bits.
+    pub fn unpacked_payload_bytes(&self) -> usize {
+        self.rows * self.cols + self.rows * self.groups_per_row()
     }
 
     /// Measured effective bits per value.
@@ -187,5 +218,92 @@ mod tests {
         let mut m = random_matrix(2, 16, 8, 1);
         m.spec = SdrSpec::new(16, 8, 8);
         PackedSdrMatrix::from_matrix(&m);
+    }
+
+    #[test]
+    fn nibble_signed_lut_matches_signmag_decode() {
+        for nib in 0u32..16 {
+            let sm = SignMag::decode(nib, 4);
+            let signed = if sm.neg { -(sm.mag as i16) } else { sm.mag as i16 };
+            assert_eq!(NIBBLE_SIGNED[nib as usize], signed, "nibble {nib}");
+        }
+    }
+
+    #[test]
+    fn nibble_at_matches_unpack() {
+        let m = random_matrix(3, 37, 8, 21); // odd row length
+        let p = PackedSdrMatrix::from_matrix(&m);
+        let codes = unpack_nibbles(&p.nibbles, 3 * 37);
+        for (i, c) in codes.iter().enumerate() {
+            assert_eq!(
+                NIBBLE_SIGNED[nibble_at(&p.nibbles, i) as usize] as i32,
+                c.signed(),
+                "index {i}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 3 bits")]
+    fn oversized_code_is_rejected_not_aliased() {
+        // Before the hard assert, code 9 would smear bits into the
+        // neighboring nibble in release builds.
+        pack_nibbles(&[SdrCode { neg: false, code: 9 }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 4 bits")]
+    fn oversized_flag_is_rejected_not_aliased() {
+        pack_flags(&[17u8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "flag store holds")]
+    fn unpack_flags_checks_bounds() {
+        unpack_flags(&[0x21u8], 5); // one byte holds at most 2 flags
+    }
+
+    #[test]
+    fn ragged_roundtrip_odd_cols_and_tail_group() {
+        // cols=37 with g=8: ragged tail group of 5, odd total nibble
+        // count per row — exercises both padding paths.
+        for (rows, cols, g) in [(1usize, 1usize, 4usize), (3, 37, 8), (5, 50, 16), (2, 7, 16)] {
+            let m = random_matrix(rows, cols, g, (rows * 100 + cols) as u64);
+            let p = PackedSdrMatrix::from_matrix(&m);
+            let back = p.to_matrix();
+            assert_eq!(back.codes, m.codes, "{rows}x{cols} g{g}");
+            assert_eq!(back.flags, m.flags, "{rows}x{cols} g{g}");
+            assert_eq!(
+                back.reconstruct().values,
+                m.reconstruct().values,
+                "{rows}x{cols} g{g}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_negative_group_roundtrips() {
+        let q = QuantTensor {
+            shape: vec![2, 8],
+            values: vec![-300, -5, -1, -32767, -2, -9, -100, -4000,
+                         -1, -1, -1, -1, -1, -1, -1, -1],
+            scales: vec![1.0],
+            bits: 16,
+            granularity: Granularity::PerTensor,
+        };
+        let m = SdrMatrix::compress(SdrSpec::new(16, 4, 4), &q);
+        assert!(m.codes.iter().all(|c| c.neg || c.code == 0));
+        let p = PackedSdrMatrix::from_matrix(&m);
+        let back = p.to_matrix();
+        assert_eq!(back.codes, m.codes);
+        assert!(back.reconstruct().values.iter().all(|&v| v <= 0));
+    }
+
+    #[test]
+    fn unpacked_payload_is_about_twice_packed() {
+        let m = random_matrix(8, 128, 16, 3);
+        let p = PackedSdrMatrix::from_matrix(&m);
+        let ratio = p.payload_bytes() as f64 / p.unpacked_payload_bytes() as f64;
+        assert!((0.49..=0.51).contains(&ratio), "ratio {ratio}");
     }
 }

@@ -86,7 +86,12 @@ pub fn compress_group(spec: &SdrSpec, values: &[i32], out: &mut [SdrCode]) -> u8
     for (o, &v) in out.iter_mut().zip(values) {
         let mag = v.unsigned_abs();
         let mut code = mag >> flag;
-        debug_assert!(code <= all_ones, "code {code} overflows salient width");
+        // An input beyond the base precision (flag already capped at
+        // max_flag) would overflow the salient width; saturate to the
+        // all-ones code — same policy as stage-1's clamp — so no build
+        // can ever hand the packer an aliasing >salient-width value.
+        // In-range inputs are untouched.
+        code = code.min(all_ones);
         // Round-to-nearest on the truncated LSBs — *unless* the code is
         // already all-ones, where a carry would overflow into the razor
         // window (Algorithm 1's floor exception).
@@ -659,5 +664,24 @@ mod tests {
         let mut rng = Rng::new(1);
         let g = IntRange { lo: 0, hi: 3 };
         let _ = g.generate(&mut rng);
+    }
+
+    #[test]
+    fn out_of_base_range_input_saturates_instead_of_aliasing() {
+        // 2^20 is far beyond the 16-bit base precision the spec
+        // declares. flag caps at max_flag (12), so the raw shifted code
+        // would be 256 — way past the 3-bit salient width. The coder
+        // must saturate to the all-ones code so the nibble packer (hard
+        // range assert) still accepts the group.
+        let spec = spec16_4(2);
+        let mut out = [SdrCode::default(); 2];
+        let flag = compress_group(&spec, &[1 << 20, -3], &mut out);
+        assert_eq!(flag as u32, spec.max_flag());
+        assert_eq!(out[0].code, spec.salient_max() as u8);
+        assert!(!out[0].neg && out[1].neg);
+        // and the packed store accepts it without aliasing
+        let packed = crate::sdr::packed::pack_nibbles(&out);
+        let back = crate::sdr::packed::unpack_nibbles(&packed, 2);
+        assert_eq!(back.to_vec(), out.to_vec());
     }
 }

@@ -1,0 +1,234 @@
+//! Vendored stub of the `xla` (xla-rs) API surface used by
+//! `crate::runtime`. The build environment has no network access and no
+//! libxla, so the PJRT entry points compile but return a descriptive
+//! error at runtime; every caller in the workspace already skips
+//! gracefully when artifacts/PJRT are unavailable. [`Literal`] is a real
+//! host-side implementation (shape + typed buffer) so the pure
+//! conversion helpers keep working and stay unit-testable.
+//!
+//! Swapping this stub for the real xla-rs bindings requires only editing
+//! the root `Cargo.toml` path dependency — no source changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs's: convertible into `anyhow::Error` via `?`.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (vendored stub): {}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError {
+        msg: format!(
+            "{what} requires the real PJRT runtime; this build uses the \
+             offline xla stub (see rust/vendor/xla)"
+        ),
+    }
+}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types a [`Literal`] can hold. Public only because the
+/// [`NativeType`] conversion trait names it; not part of the stub's API.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: a typed buffer plus dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish conversion trait for the element types literals support.
+pub trait NativeType: Sized {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType + Copy>(data: &[T]) -> Literal {
+        Literal { storage: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { storage: Storage::F32(vec![v]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (what executables return with `return_tuple=True`).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { storage: Storage::Tuple(parts), dims: vec![n] }
+    }
+
+    fn len(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions of equal element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() || matches!(self.storage, Storage::Tuple(_)) {
+            return Err(XlaError {
+                msg: format!("cannot reshape {} elements to {dims:?}", self.len()),
+            });
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .ok_or_else(|| XlaError { msg: "literal element type mismatch".into() })
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(v) => Ok(v),
+            _ => Err(XlaError { msg: "literal is not a tuple".into() }),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module text (the stub only retains the source path).
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        // Reading the artifact is host-side work the stub *could* do, but
+        // nothing downstream can compile it, so fail fast and uniformly.
+        Err(unavailable(&format!(
+            "parsing HLO text {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// A computation handle built from a proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub, kept for typing).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (unreachable in the stub, kept for typing).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_rejects_bad_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::vec1(&[2i32])]);
+        assert!(t.reshape(&[2]).is_err(), "tuples don't reshape");
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.0]);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+    }
+}
