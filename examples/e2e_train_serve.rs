@@ -10,14 +10,22 @@
 //! 2. **Quantize** (L3): calibrate static scales on 32 samples, apply
 //!    QRazor W4A4KV4 g16.
 //! 3. **Validate**: FP vs quantized perplexity + zero-shot accuracy.
-//! 4. **Serve** (L3 coordinator): batched requests against the
-//!    quantized model with the SDR-compressed KV pool, reporting
-//!    latency/throughput and the measured KV memory footprint.
+//! 4. **Serve** (L3 cluster): batched requests against the quantized
+//!    model through the sharded serving cluster — N worker shards,
+//!    each with its own SDR-compressed packed KV pool, sharing one
+//!    `Arc`-held copy of the nibble-packed weights behind a
+//!    least-reserved placement policy. Reports per-shard and
+//!    aggregate latency/throughput plus the measured KV memory
+//!    footprint (the paper's ~3.7×-vs-FP16 capacity claim, per
+//!    shard). `E2E_SHARDS=1` falls back to the single-engine
+//!    coordinator path.
 //!
-//! Env: `E2E_MODEL=tiny E2E_STEPS=300` to scale up (defaults nano/150
-//! so the example completes in ~a minute on a laptop-class CPU).
+//! Env: `E2E_MODEL=tiny E2E_STEPS=300 E2E_SHARDS=4` to scale up
+//! (defaults nano/150/2 so the example completes in ~a minute on a
+//! laptop-class CPU).
 
 use qrazor::baselines::QRazor;
+use qrazor::cluster::{ClusterConfig, ClusterServer};
 use qrazor::config::ServeConfig;
 use qrazor::coordinator::request::Sampling;
 use qrazor::coordinator::Engine;
@@ -60,33 +68,68 @@ fn main() -> anyhow::Result<()> {
     ];
     println!("{}", render_table("e2e validation", &rows));
 
-    println!("== e2e: serve (W4A4KV4 g16, SDR-compressed KV pool) ==");
+    let shards: usize = std::env::var("E2E_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let serve_cfg = ServeConfig { max_batch: 8, max_new_tokens: 24, ..Default::default() };
     let qm = QuantModel::build(&exp.weights, Box::new(QRazor::w4a4kv4(16)), &exp.cal);
-    let mut engine = Engine::new(
-        qm,
-        ServeConfig { max_batch: 8, max_new_tokens: 24, ..Default::default() },
-    );
     let mut rng = Rng::new(3);
     let n_requests = 24;
-    for _ in 0..n_requests {
-        let len = 4 + rng.index(20);
-        let prompt: Vec<u32> = (0..len)
-            .map(|_| rng.below(exp.config.vocab as u64) as u32)
-            .collect();
-        engine.submit(prompt, 16, Sampling::Greedy);
+    let prompts: Vec<Vec<u32>> = (0..n_requests)
+        .map(|_| {
+            let len = 4 + rng.index(20);
+            (0..len).map(|_| rng.below(exp.config.vocab as u64) as u32).collect()
+        })
+        .collect();
+    if shards > 1 {
+        println!("== e2e: serve ({shards}-shard cluster, W4A4KV4 g16, packed KV pools) ==");
+        let cluster = ClusterServer::spawn(
+            qm,
+            ClusterConfig { shards, serve: serve_cfg, ..Default::default() },
+        );
+        let t1 = std::time::Instant::now();
+        for prompt in prompts {
+            cluster.submit(prompt, 16, Sampling::Greedy)?;
+        }
+        let report = cluster.shutdown();
+        let dt = t1.elapsed().as_secs_f64();
+        println!("  served {} requests in {:.2}s", report.total_completed(), dt);
+        for line in report.render().lines() {
+            println!("  {line}");
+        }
+        // KV memory claim, per shard: peak packed bytes vs the ~3.7×
+        // larger FP16 pool the same token count would need
+        for s in &report.shards {
+            println!(
+                "  shard {} kv peak {} bytes — 4.25 bits/value vs 16 for FP16 (~3.76x)",
+                s.index, s.metrics.kv_bytes_peak
+            );
+        }
+        anyhow::ensure!(
+            report.total_completed() as usize == n_requests,
+            "all requests must complete"
+        );
+    } else {
+        println!("== e2e: serve (single engine, W4A4KV4 g16, SDR-compressed KV pool) ==");
+        let mut engine = Engine::new(qm, serve_cfg);
+        for prompt in prompts {
+            engine.submit(prompt, 16, Sampling::Greedy);
+        }
+        let t1 = std::time::Instant::now();
+        let done = engine.run_to_completion();
+        let dt = t1.elapsed().as_secs_f64();
+        println!("  served {} requests in {:.2}s", done.len(), dt);
+        println!("  {}", engine.metrics.render());
+        // KV memory claim: effective bits in the pool's high-water mark
+        let gen_tokens: u64 = engine.metrics.generated_tokens;
+        println!(
+            "  kv peak {} bytes for {} generated (+prompt) tokens — \
+             ~4.25 bits/value vs 16 for FP16",
+            engine.metrics.kv_bytes_peak, gen_tokens
+        );
+        anyhow::ensure!(done.len() == n_requests, "all requests must complete");
     }
-    let t1 = std::time::Instant::now();
-    let done = engine.run_to_completion();
-    let dt = t1.elapsed().as_secs_f64();
-    println!("  served {} requests in {:.2}s", done.len(), dt);
-    println!("  {}", engine.metrics.render());
-    // KV memory claim: effective bits in the pool's high-water mark
-    let gen_tokens: u64 = engine.metrics.generated_tokens;
-    println!(
-        "  kv peak {} bytes for {} generated (+prompt) tokens — ~4.25 bits/value vs 16 for FP16",
-        engine.metrics.kv_bytes_peak, gen_tokens
-    );
-    anyhow::ensure!(done.len() == n_requests, "all requests must complete");
     println!("\ne2e OK");
     Ok(())
 }

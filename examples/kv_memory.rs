@@ -22,7 +22,11 @@ fn main() {
     let cal = calibrate(&w, &seqs);
 
     let tokens = 256;
-    println!("KV cache bytes after {tokens} tokens ({} layers, kv_dim {}):", cfg.layers, cfg.head_dim() * cfg.kv_heads);
+    println!(
+        "KV cache bytes after {tokens} tokens ({} layers, kv_dim {}):",
+        cfg.layers,
+        cfg.head_dim() * cfg.kv_heads
+    );
     let mut results = Vec::new();
     for (name, scheme) in [
         ("FP32 cache", Box::new(Fp16) as Box<dyn qrazor::baselines::Scheme>),
@@ -35,11 +39,19 @@ fn main() {
             qm.forward_token((pos % cfg.vocab) as u32, pos, &mut cache);
         }
         let bytes = cache.bytes();
-        println!("  {:<16} {:>10} bytes ({:>5.2} bits/value)", name, bytes, bits_per_value(&cfg, tokens, bytes));
+        println!(
+            "  {:<16} {:>10} bytes ({:>5.2} bits/value)",
+            name,
+            bytes,
+            bits_per_value(&cfg, tokens, bytes)
+        );
         results.push((name, bytes));
     }
     let ratio = results[0].1 as f64 / results[1].1 as f64;
-    println!("\ncompression vs FP32: {ratio:.2}x (≈{:.2}x vs FP16) — paper's effective 4.25 bits", ratio / 2.0);
+    println!(
+        "\ncompression vs FP32: {ratio:.2}x (≈{:.2}x vs FP16) — paper's effective 4.25 bits",
+        ratio / 2.0
+    );
     assert!(ratio > 7.0);
 }
 

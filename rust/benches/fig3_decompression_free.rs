@@ -21,8 +21,14 @@ fn make_pair(m: usize, n: usize, k: usize, g: usize, seed: u64) -> (SdrMatrix, S
     let mut wt = Tensor::zeros(&[n, k]);
     rng.fill_normal(wt.data_mut(), 0.0, 0.05);
     (
-        SdrMatrix::compress(SdrSpec::new(16, 4, g), &QuantTensor::quantize(&x, 16, Granularity::PerTensor)),
-        SdrMatrix::compress(SdrSpec::new(8, 4, g), &QuantTensor::quantize(&wt, 8, Granularity::PerChannel)),
+        SdrMatrix::compress(
+            SdrSpec::new(16, 4, g),
+            &QuantTensor::quantize(&x, 16, Granularity::PerTensor),
+        ),
+        SdrMatrix::compress(
+            SdrSpec::new(8, 4, g),
+            &QuantTensor::quantize(&wt, 8, Granularity::PerChannel),
+        ),
     )
 }
 

@@ -7,6 +7,7 @@
 //! plus the batching-policy ablation (FCFS vs shortest-prefill-first).
 
 use qrazor::baselines::{Fp16, QRazor};
+use qrazor::cluster::{ClusterConfig, ClusterServer};
 use qrazor::config::{ModelConfig, ServeConfig};
 use qrazor::coordinator::batcher::Policy;
 use qrazor::coordinator::request::Sampling;
@@ -131,7 +132,8 @@ fn main() {
         // one long prompt then many short ones — the HoL-blocking shape
         let vocab = engine.model.config.vocab as u64;
         let mut rng = Rng::new(11);
-        let mut mk = |len: usize| -> Vec<u32> { (0..len).map(|_| rng.below(vocab) as u32).collect() };
+        let mut mk =
+            |len: usize| -> Vec<u32> { (0..len).map(|_| rng.below(vocab) as u32).collect() };
         engine.submit(mk(96), 12, Sampling::Greedy);
         for _ in 0..8 {
             engine.submit(mk(6), 12, Sampling::Greedy);
@@ -147,12 +149,100 @@ fn main() {
         );
     }
 
+    // --- sharded cluster scale-out: aggregate tok/s across --shards N ---
+    // Each shard is a full engine with its own packed KV pool; all
+    // shards read one Arc-shared copy of the nibble-packed weights.
+    // `--shards N` pins a single axis point; default sweeps 1/2/4.
+    let shard_axis: Vec<usize> = {
+        let args: Vec<String> = std::env::args().collect();
+        match args.iter().position(|a| a == "--shards") {
+            Some(i) => vec![args
+                .get(i + 1)
+                .and_then(|v| v.parse().ok())
+                .expect("--shards N")],
+            None => vec![1, 2, 4],
+        }
+    };
+    println!("\n=== sharded cluster scale-out (W4A4KV4 g16, 32 requests × 16 new tokens) ===");
+    println!(
+        "{:<8} {:>14} {:>12} {:>10}  per-shard kv peak bytes",
+        "shards", "agg tok/s", "generated", "time s"
+    );
+    let cluster_requests = 32usize;
+    // Equal-memory comparison: one fixed KV token budget split across
+    // however many shards the axis point runs — the same bytes, spent
+    // behind 1 step loop or N.
+    let total_kv_tokens = ServeConfig::default().kv_pool_tokens;
+    let mut axis_tps: Vec<(usize, f64)> = Vec::new();
+    for &shards in &shard_axis {
+        let qm = build(Box::new(QRazor::w4a4kv4(16)));
+        let vocab = qm.config.vocab as u64;
+        let cluster = ClusterServer::spawn(
+            qm,
+            ClusterConfig {
+                shards,
+                serve: ServeConfig { max_batch: 4, max_new_tokens: 16, ..Default::default() },
+                ..Default::default()
+            }
+            .split_pool(total_kv_tokens),
+        );
+        let mut rng = Rng::new(7);
+        let t0 = std::time::Instant::now();
+        for _ in 0..cluster_requests {
+            let len = 4 + rng.index(16);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+            cluster.submit(prompt, 16, Sampling::Greedy).unwrap();
+        }
+        let report = cluster.shutdown();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(report.total_completed() as usize, cluster_requests);
+        let tps = report.total_generated() as f64 / dt;
+        let peaks: Vec<String> = report
+            .shards
+            .iter()
+            .map(|s| format!("s{}={}", s.index, s.metrics.kv_bytes_peak))
+            .collect();
+        println!(
+            "{:<8} {:>14.1} {:>12} {:>10.2}  {}",
+            shards,
+            tps,
+            report.total_generated(),
+            dt,
+            peaks.join(" ")
+        );
+        // every shard's pool must be byte-exactly drained
+        for s in &report.shards {
+            assert_eq!(s.final_occupancy.bytes, 0, "shard {} pool not drained", s.index);
+        }
+        axis_tps.push((shards, tps));
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if let (Some(&(_, t_one)), Some(&(_, t_four))) = (
+        axis_tps.iter().find(|(s, _)| *s == 1),
+        axis_tps.iter().find(|(s, _)| *s == 4),
+    ) {
+        println!("shard scaling: 1 -> {t_one:.1} tok/s, 4 -> {t_four:.1} tok/s ({cores} cores)");
+        if cores >= 4 {
+            assert!(
+                t_four > t_one,
+                "4 shards must beat 1 shard on {cores} cores: {t_four:.1} vs {t_one:.1} tok/s"
+            );
+        } else {
+            assert!(
+                t_four > t_one * 0.7,
+                "sharded throughput collapsed on {cores} cores: {t_four:.1} vs {t_one:.1}"
+            );
+        }
+    }
+
     // batch scaling sanity: batched decode must beat batch=1 throughput
     let qm1 = build(Box::new(QRazor::w4a4kv4(16)));
-    let mut e1 = Engine::new(qm1, ServeConfig { max_batch: 1, max_new_tokens: 16, ..Default::default() });
+    let mut e1 =
+        Engine::new(qm1, ServeConfig { max_batch: 1, max_new_tokens: 16, ..Default::default() });
     let (t1, _) = run(&mut e1, 8, 16, 13);
     let qm8 = build(Box::new(QRazor::w4a4kv4(16)));
-    let mut e8 = Engine::new(qm8, ServeConfig { max_batch: 8, max_new_tokens: 16, ..Default::default() });
+    let mut e8 =
+        Engine::new(qm8, ServeConfig { max_batch: 8, max_new_tokens: 16, ..Default::default() });
     let (t8, _) = run(&mut e8, 8, 16, 13);
     println!("\nbatch scaling: 1 -> {t1:.1} tok/s, 8 -> {t8:.1} tok/s");
     // On multi-core hosts batching must win (parallel decode); on a

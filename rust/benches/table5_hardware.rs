@@ -36,8 +36,14 @@ fn main() {
     let p_save = saving_pct(designs[1].power_mw(), designs[3].power_mw());
     let a_save8 = saving_pct(designs[2].area_um2(), designs[3].area_um2());
     let p_save8 = saving_pct(designs[2].power_mw(), designs[3].power_mw());
-    println!("\nproposed vs INT16x8 : area -{a_save:.1}% (paper -61.2%), power -{p_save:.1}% (paper -56%)");
-    println!("proposed vs INT8x8  : area -{a_save8:.1}% (paper -34%),  power -{p_save8:.1}% (paper -33.7%)");
+    println!(
+        "\nproposed vs INT16x8 : area -{a_save:.1}% (paper -61.2%), \
+         power -{p_save:.1}% (paper -56%)"
+    );
+    println!(
+        "proposed vs INT8x8  : area -{a_save8:.1}% (paper -34%),  \
+         power -{p_save8:.1}% (paper -33.7%)"
+    );
     assert!((50.0..72.0).contains(&a_save));
     assert!((45.0..68.0).contains(&p_save));
     assert!((22.0..46.0).contains(&a_save8));

@@ -19,7 +19,10 @@ fn main() -> anyhow::Result<()> {
         let base = perplexity(&fp, &exp.lambada_seqs);
         println!("\n=== Table 7 — Lambada ppl vs group size ({preset}) ===");
         println!("baseline (FP): {base:.3}");
-        println!("{:<10} {:>8} {:>8} {:>8} {:>8} {:>8}", "config", "g8", "g16", "g32", "g64", "g128");
+        println!(
+            "{:<10} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            "config", "g8", "g16", "g32", "g64", "g128"
+        );
         let groups = [8usize, 16, 32, 64, 128];
         let mut grid: Vec<(String, Vec<f64>)> = Vec::new();
         for (name, mk) in [

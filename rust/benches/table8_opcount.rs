@@ -27,7 +27,10 @@ fn main() {
     assert_eq!(rows[2].count, 512);
     assert_eq!(rows[3].count, 256);
 
-    println!("\nextension: fast-WHT (N log N) Hadamard = {} FLOPs — still ≫ SDR", hadamard_fwht(128, 64));
+    println!(
+        "\nextension: fast-WHT (N log N) Hadamard = {} FLOPs — still ≫ SDR",
+        hadamard_fwht(128, 64)
+    );
 
     println!("\nsweep over group size (SDR ops, M=128 N=64):");
     for g in [8u64, 16, 32, 64, 128] {

@@ -1,0 +1,253 @@
+//! Cluster-wide metrics: per-shard throughput/latency/occupancy merged
+//! into one view, rendered in the same shape as
+//! [`crate::coordinator::metrics::Metrics::render`] plus a rebalance
+//! signal when shard occupancy skews past a threshold.
+
+use crate::coordinator::kv::PoolOccupancy;
+use crate::util::json::Json;
+
+use super::shard::ShardReport;
+
+/// One shard's contribution to the cluster view. Built either live
+/// (from the router's committed-token accounting plus the latest
+/// occupancy each worker published) or final (from a
+/// [`ShardReport`] after draining).
+#[derive(Clone, Debug, Default)]
+pub struct ShardSnapshot {
+    pub index: usize,
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub generated_tokens: u64,
+    /// Reserved-or-committed fraction of pool capacity in [0, 1].
+    pub fill: f64,
+    /// Latest byte-exact pool occupancy the shard published.
+    pub occupancy: PoolOccupancy,
+    /// Peak packed KV bytes (final snapshots only; 0 when live).
+    pub kv_bytes_peak: usize,
+    pub ttft_p50_ms: f64,
+    pub latency_p50_ms: f64,
+}
+
+/// Raised when the busiest shard's fill exceeds the emptiest's by more
+/// than the configured threshold — the cue for a placement rebalance
+/// (drain-and-requeue from `from` toward `to`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RebalanceSignal {
+    /// Overloaded shard (max fill).
+    pub from: usize,
+    /// Underloaded shard (min fill).
+    pub to: usize,
+    /// The observed fill gap in [0, 1].
+    pub skew: f64,
+}
+
+/// Merged cluster view over all shards.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    pub shards: Vec<ShardSnapshot>,
+    /// Wall-clock seconds the cluster has been serving.
+    pub elapsed_s: f64,
+}
+
+impl ClusterMetrics {
+    /// Final view from drained shard reports.
+    pub fn from_reports(reports: &[ShardReport], elapsed_s: f64) -> ClusterMetrics {
+        let shards = reports
+            .iter()
+            .map(|r| ShardSnapshot {
+                index: r.index,
+                requests_submitted: r.metrics.requests_submitted,
+                requests_completed: r.metrics.requests_completed,
+                generated_tokens: r.metrics.generated_tokens,
+                fill: r.final_occupancy.fill(),
+                occupancy: r.final_occupancy,
+                kv_bytes_peak: r.metrics.kv_bytes_peak,
+                ttft_p50_ms: r.metrics.ttft.pct(50.0) * 1e3,
+                latency_p50_ms: r.metrics.latency.pct(50.0) * 1e3,
+            })
+            .collect();
+        ClusterMetrics { shards, elapsed_s }
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests_completed).sum()
+    }
+
+    pub fn total_submitted(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests_submitted).sum()
+    }
+
+    pub fn total_generated(&self) -> u64 {
+        self.shards.iter().map(|s| s.generated_tokens).sum()
+    }
+
+    /// Aggregate generated tokens per wall-clock second.
+    pub fn aggregate_tokens_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.total_generated() as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Packed KV bytes held across all shards right now.
+    pub fn total_kv_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.occupancy.bytes).sum()
+    }
+
+    /// Fill gap between the fullest and emptiest shard, in [0, 1].
+    pub fn occupancy_skew(&self) -> f64 {
+        let fills = self.shards.iter().map(|s| s.fill);
+        let max = fills.clone().fold(0.0f64, f64::max);
+        let min = fills.fold(f64::INFINITY, f64::min);
+        if min.is_finite() {
+            max - min
+        } else {
+            0.0
+        }
+    }
+
+    /// The rebalance cue: `Some` when the fill skew exceeds
+    /// `threshold`, naming the shard pair a rebalancer would move work
+    /// between. Cheap enough to evaluate on every snapshot.
+    pub fn rebalance(&self, threshold: f64) -> Option<RebalanceSignal> {
+        if self.shards.len() < 2 {
+            return None;
+        }
+        let skew = self.occupancy_skew();
+        if skew <= threshold {
+            return None;
+        }
+        let from = self
+            .shards
+            .iter()
+            .max_by(|a, b| a.fill.partial_cmp(&b.fill).unwrap())
+            .unwrap()
+            .index;
+        let to = self
+            .shards
+            .iter()
+            .min_by(|a, b| a.fill.partial_cmp(&b.fill).unwrap())
+            .unwrap()
+            .index;
+        Some(RebalanceSignal { from, to, skew })
+    }
+
+    /// Per-shard lines plus one aggregate line, mirroring the
+    /// single-engine `Metrics::render` shape.
+    pub fn render(&self, rebalance_threshold: f64) -> String {
+        let mut s = String::new();
+        for sh in &self.shards {
+            s.push_str(&format!(
+                "shard {}: {}/{} done | {} generated | fill {:.2} | kv {} B (peak {} B) | \
+                 ttft p50 {:.1}ms | latency p50 {:.1}ms\n",
+                sh.index,
+                sh.requests_completed,
+                sh.requests_submitted,
+                sh.generated_tokens,
+                sh.fill,
+                sh.occupancy.bytes,
+                sh.kv_bytes_peak,
+                sh.ttft_p50_ms,
+                sh.latency_p50_ms,
+            ));
+        }
+        let rb = match self.rebalance(rebalance_threshold) {
+            Some(r) => format!("rebalance shard {} -> {} (skew {:.2})", r.from, r.to, r.skew),
+            None => "balanced".to_string(),
+        };
+        s.push_str(&format!(
+            "cluster: {} shards | {}/{} done | {} generated | {:.1} tok/s aggregate | \
+             skew {:.2} | {}",
+            self.shards.len(),
+            self.total_completed(),
+            self.total_submitted(),
+            self.total_generated(),
+            self.aggregate_tokens_per_s(),
+            self.occupancy_skew(),
+            rb,
+        ));
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::from_pairs(vec![
+                    ("index", Json::from(s.index)),
+                    ("requests_submitted", Json::from(s.requests_submitted as usize)),
+                    ("requests_completed", Json::from(s.requests_completed as usize)),
+                    ("generated_tokens", Json::from(s.generated_tokens as usize)),
+                    ("fill", Json::from(s.fill)),
+                    ("kv_bytes", Json::from(s.occupancy.bytes)),
+                    ("kv_bytes_peak", Json::from(s.kv_bytes_peak)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("shards", Json::Arr(shards)),
+            ("elapsed_s", Json::from(self.elapsed_s)),
+            ("total_generated", Json::from(self.total_generated() as usize)),
+            ("aggregate_tokens_per_s", Json::from(self.aggregate_tokens_per_s())),
+            ("occupancy_skew", Json::from(self.occupancy_skew())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(index: usize, fill: f64, generated: u64) -> ShardSnapshot {
+        ShardSnapshot { index, fill, generated_tokens: generated, ..Default::default() }
+    }
+
+    #[test]
+    fn aggregates_sum_over_shards() {
+        let m = ClusterMetrics {
+            shards: vec![snap(0, 0.5, 100), snap(1, 0.4, 60)],
+            elapsed_s: 2.0,
+        };
+        assert_eq!(m.total_generated(), 160);
+        assert!((m.aggregate_tokens_per_s() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rebalance_fires_only_past_threshold() {
+        let mut m = ClusterMetrics {
+            shards: vec![snap(0, 0.9, 0), snap(1, 0.2, 0), snap(2, 0.5, 0)],
+            elapsed_s: 1.0,
+        };
+        assert!((m.occupancy_skew() - 0.7).abs() < 1e-9);
+        let r = m.rebalance(0.25).expect("skew 0.7 > 0.25");
+        assert_eq!(r.from, 0);
+        assert_eq!(r.to, 1);
+        assert!((r.skew - 0.7).abs() < 1e-9);
+        // tighten the shards: signal clears
+        m.shards[0].fill = 0.4;
+        m.shards[1].fill = 0.35;
+        assert_eq!(m.rebalance(0.25), None);
+    }
+
+    #[test]
+    fn single_shard_never_signals_rebalance() {
+        let m = ClusterMetrics { shards: vec![snap(0, 1.0, 0)], elapsed_s: 1.0 };
+        assert_eq!(m.rebalance(0.0), None);
+    }
+
+    #[test]
+    fn render_names_every_shard_and_the_aggregate() {
+        let m = ClusterMetrics {
+            shards: vec![snap(0, 0.8, 40), snap(1, 0.1, 10)],
+            elapsed_s: 1.0,
+        };
+        let s = m.render(0.25);
+        assert!(s.contains("shard 0:"), "{s}");
+        assert!(s.contains("shard 1:"), "{s}");
+        assert!(s.contains("cluster: 2 shards"), "{s}");
+        assert!(s.contains("rebalance shard 0 -> 1"), "{s}");
+        assert!(crate::util::json::Json::parse(&m.to_json().to_string()).is_ok());
+    }
+}

@@ -1,0 +1,56 @@
+//! Sharded serving cluster — the scale-out layer above the
+//! [`crate::coordinator`].
+//!
+//! The paper's deployment story is a memory-budget story: SDR's
+//! 4.25-effective-bit KV cache means one budget holds ~3.7× the
+//! tokens of FP16. A single [`crate::coordinator::Engine`] can only
+//! spend that budget behind one step loop; this subsystem spends it
+//! across N workers:
+//!
+//! * [`shard`] — a [`shard::ShardEngine`] wraps one `Engine` (its own
+//!   packed KV pool, batcher, and metrics) on a dedicated worker
+//!   thread, stepped by the coordinator's shared
+//!   [`crate::coordinator::scheduler::drive`] loop under a
+//!   [`crate::util::threadpool::with_thread_cap`] scope so shards
+//!   share the machine's cores.
+//! * [`placement`] — assigns each admitted request to a shard:
+//!   least-reserved-tokens by default, round-robin and hash-affinity
+//!   alternates.
+//! * [`server`] — [`server::ClusterServer`], the front-end with the
+//!   same submit/poll/block surface as [`crate::coordinator::Server`];
+//!   the CLI (`qrazor serve --shards N`), the serving example, and the
+//!   `serve_throughput` bench switch over with a flag.
+//! * [`metrics`] — [`metrics::ClusterMetrics`] merges per-shard
+//!   throughput/latency/pool-occupancy and raises a
+//!   [`metrics::RebalanceSignal`] when shard fill skews past a
+//!   threshold.
+//!
+//! The memory shape is the point: the model weights stay
+//! nibble-packed and are shared read-only through one
+//! `Arc<QuantModel>`, so N shards cost N KV pools but a single copy
+//! of W4. Correctness is pinned by a property test: for the same seed
+//! and arrival order, a ≥2-shard cluster's token streams are
+//! identical to the single-engine baseline (greedy decoding is
+//! batching- and placement-invariant), and shutdown drains
+//! deterministically — every queued and in-flight request completes
+//! before the cluster report is assembled.
+
+pub mod metrics;
+pub mod placement;
+pub mod server;
+pub mod shard;
+
+pub use metrics::{ClusterMetrics, RebalanceSignal, ShardSnapshot};
+pub use placement::{Placement, PlacementPolicy, ShardLoad};
+pub use server::{ClusterConfig, ClusterReport, ClusterServer};
+pub use shard::{ShardEngine, ShardReport};
+
+/// The cluster moves models and responses across worker threads;
+/// losing either bound is a compile error here rather than a
+/// confusing one at a spawn site.
+#[allow(dead_code)]
+fn _assert_send_sync() {
+    fn is_send_sync<T: Send + Sync>() {}
+    is_send_sync::<crate::model::quantized::QuantModel>();
+    is_send_sync::<crate::coordinator::request::Response>();
+}

@@ -1,0 +1,147 @@
+//! Shard placement: which worker gets an admitted request.
+//!
+//! The default policy routes to the shard with the fewest *committed*
+//! tokens (reserved by live sequences + needed by its queue) — the
+//! same token unit the per-shard pool admits in, so placement and
+//! shard-local backpressure compose: a shard whose pool is saturated
+//! also has the highest committed count and stops receiving work.
+//! Round-robin and hash-affinity alternates cover the classic
+//! trade-offs (perfect spread vs. sticky assignment for repeated
+//! prompts, e.g. shared-prefix agents hitting a warm shard).
+
+use crate::coordinator::request::Request;
+
+/// Placement policy for new requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Shard with the fewest committed tokens (ties → lowest index).
+    LeastReserved,
+    /// Strict rotation, ignoring load.
+    RoundRobin,
+    /// FNV-1a hash of the prompt tokens — identical prompts land on
+    /// the same shard.
+    HashAffinity,
+}
+
+impl PlacementPolicy {
+    /// Parse the CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "least-reserved" => Some(PlacementPolicy::LeastReserved),
+            "round-robin" => Some(PlacementPolicy::RoundRobin),
+            "hash" | "hash-affinity" => Some(PlacementPolicy::HashAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// What placement sees about one shard at decision time.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardLoad {
+    /// Tokens reserved by live sequences plus queued need.
+    pub committed_tokens: usize,
+    /// The shard pool's token capacity.
+    pub capacity_tokens: usize,
+}
+
+/// Stateful placement (round-robin keeps a cursor).
+pub struct Placement {
+    pub policy: PlacementPolicy,
+    next_rr: usize,
+}
+
+impl Placement {
+    pub fn new(policy: PlacementPolicy) -> Placement {
+        Placement { policy, next_rr: 0 }
+    }
+
+    /// Pick a shard index for `req` given per-shard loads. Never
+    /// fails: even a fully committed shard accepts the request into
+    /// its queue, where shard-local backpressure holds it until the
+    /// pool frees (the cluster-level admission story).
+    pub fn choose(&mut self, req: &Request, loads: &[ShardLoad]) -> usize {
+        assert!(!loads.is_empty(), "placement over zero shards");
+        match self.policy {
+            PlacementPolicy::LeastReserved => loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, l)| (l.committed_tokens, *i))
+                .map(|(i, _)| i)
+                .unwrap(),
+            PlacementPolicy::RoundRobin => {
+                let i = self.next_rr % loads.len();
+                self.next_rr = self.next_rr.wrapping_add(1);
+                i
+            }
+            PlacementPolicy::HashAffinity => {
+                (fnv1a_tokens(&req.prompt) % loads.len() as u64) as usize
+            }
+        }
+    }
+}
+
+/// FNV-1a over the prompt's token stream.
+fn fnv1a_tokens(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestId;
+
+    fn req(id: u64, prompt: Vec<u32>) -> Request {
+        Request::new(RequestId(id), prompt, 8)
+    }
+
+    fn loads(committed: &[usize]) -> Vec<ShardLoad> {
+        committed
+            .iter()
+            .map(|&c| ShardLoad { committed_tokens: c, capacity_tokens: 1000 })
+            .collect()
+    }
+
+    #[test]
+    fn least_reserved_picks_emptiest_then_lowest_index() {
+        let mut p = Placement::new(PlacementPolicy::LeastReserved);
+        assert_eq!(p.choose(&req(0, vec![1]), &loads(&[50, 10, 30])), 1);
+        assert_eq!(p.choose(&req(1, vec![1]), &loads(&[20, 20, 30])), 0, "tie → lowest index");
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut p = Placement::new(PlacementPolicy::RoundRobin);
+        let l = loads(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|i| p.choose(&req(i, vec![1]), &l)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn hash_affinity_is_sticky_per_prompt() {
+        let mut p = Placement::new(PlacementPolicy::HashAffinity);
+        let l = loads(&[0, 0, 0, 0]);
+        let a1 = p.choose(&req(0, vec![5, 6, 7]), &l);
+        let a2 = p.choose(&req(1, vec![5, 6, 7]), &l);
+        assert_eq!(a1, a2, "same prompt, same shard");
+        // different prompts spread over shards (not all on one)
+        let spread: std::collections::BTreeSet<usize> =
+            (0..64).map(|i| p.choose(&req(i, vec![i as u32, 2 * i as u32]), &l)).collect();
+        assert!(spread.len() > 1, "hash must use more than one shard");
+    }
+
+    #[test]
+    fn policy_parse_spellings() {
+        assert_eq!(PlacementPolicy::parse("least-reserved"), Some(PlacementPolicy::LeastReserved));
+        assert_eq!(PlacementPolicy::parse("round-robin"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(PlacementPolicy::parse("hash"), Some(PlacementPolicy::HashAffinity));
+        assert_eq!(PlacementPolicy::parse("hash-affinity"), Some(PlacementPolicy::HashAffinity));
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+}

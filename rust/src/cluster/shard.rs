@@ -1,0 +1,172 @@
+//! One serving shard: an [`Engine`] with its own packed KV pool,
+//! stepped by the shared [`drive`] loop on a dedicated worker thread.
+//!
+//! The model arrives as an `Arc<QuantModel>` — every shard reads the
+//! same nibble-packed weights, so N shards cost N KV pools (and N step
+//! loops) but a single copy of W4. Each worker runs under a
+//! [`with_thread_cap`] scope of `num_threads() / shards`, so the
+//! shards' data-parallel decode loops share the machine instead of
+//! each spawning a full-width pool.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::config::ServeConfig;
+use crate::coordinator::kv::PoolOccupancy;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::scheduler::{drive, Engine, LoopMsg, StepLoop};
+use crate::model::quantized::QuantModel;
+use crate::util::threadpool::with_thread_cap;
+
+/// What a shard hands back when it drains and exits.
+pub struct ShardReport {
+    pub index: usize,
+    pub metrics: Metrics,
+    /// Occupancy at exit — zero bytes when draining was complete.
+    pub final_occupancy: PoolOccupancy,
+}
+
+/// Handle to one running shard worker.
+pub struct ShardEngine {
+    pub index: usize,
+    tx: mpsc::Sender<LoopMsg>,
+    handle: Option<JoinHandle<ShardReport>>,
+}
+
+impl ShardEngine {
+    /// Spawn a worker thread owning `Engine::new(model, config)`.
+    /// `on_step` runs on the worker after every scheduling step with
+    /// the shard index, a fresh byte-exact pool occupancy, and that
+    /// step's completed responses — the cluster router uses it to
+    /// publish load and forward completions.
+    pub fn spawn(
+        index: usize,
+        model: Arc<QuantModel>,
+        config: ServeConfig,
+        thread_cap: usize,
+        mut on_step: impl FnMut(usize, PoolOccupancy, Vec<Response>) + Send + 'static,
+    ) -> ShardEngine {
+        let (tx, rx) = mpsc::channel::<LoopMsg>();
+        let handle = std::thread::Builder::new()
+            .name(format!("qrazor-shard-{index}"))
+            .spawn(move || {
+                with_thread_cap(thread_cap, move || {
+                    let mut engine = drive(Engine::new(model, config), rx, |e, done| {
+                        on_step(index, StepLoop::occupancy(e), done)
+                    });
+                    ShardReport {
+                        index,
+                        metrics: std::mem::take(&mut engine.metrics),
+                        final_occupancy: engine.pool_occupancy(),
+                    }
+                })
+            })
+            .expect("spawn shard worker");
+        ShardEngine { index, tx, handle: Some(handle) }
+    }
+
+    /// Route a fully-specified request to this shard. Returns false if
+    /// the worker is gone.
+    pub fn submit(&self, req: Request) -> bool {
+        self.tx.send(LoopMsg::Submit(req)).is_ok()
+    }
+
+    /// Ask the worker to finish in-flight work and exit. Non-blocking;
+    /// pair with [`ShardEngine::join`].
+    pub fn begin_shutdown(&self) {
+        let _ = self.tx.send(LoopMsg::Shutdown);
+    }
+
+    /// Wait for the worker to drain and return its report.
+    pub fn join(mut self) -> ShardReport {
+        self.begin_shutdown();
+        let index = self.index;
+        self.handle
+            .take()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| ShardReport {
+                    index,
+                    metrics: Metrics::default(),
+                    final_occupancy: PoolOccupancy::default(),
+                })
+            })
+            .expect("shard joined twice")
+    }
+}
+
+impl Drop for ShardEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(LoopMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestId, Sampling};
+    use crate::util::rng::Rng;
+    use std::sync::Mutex;
+
+    fn model() -> Arc<QuantModel> {
+        let cfg = crate::config::ModelConfig::preset("nano").unwrap();
+        let w = crate::model::ModelWeights::init_random(&cfg, 11);
+        let mut rng = Rng::new(12);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = crate::model::quantized::calibrate(&w, &seqs);
+        Arc::new(QuantModel::build(
+            &w,
+            Box::new(crate::baselines::QRazor::w4a4kv4(16)),
+            &cal,
+        ))
+    }
+
+    #[test]
+    fn shard_runs_requests_and_reports_on_join() {
+        let done: Arc<Mutex<Vec<Response>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&done);
+        let shard = ShardEngine::spawn(
+            3,
+            model(),
+            ServeConfig { max_new_tokens: 4, ..Default::default() },
+            2,
+            move |idx, occ, rs| {
+                assert_eq!(idx, 3);
+                assert!(occ.bytes <= occ.unpacked_bytes);
+                sink.lock().unwrap().extend(rs);
+            },
+        );
+        let mut req = Request::new(RequestId(7), vec![1, 2, 3], 4);
+        req.sampling = Sampling::Greedy;
+        assert!(shard.submit(req));
+        let report = shard.join();
+        assert_eq!(report.index, 3);
+        assert_eq!(report.metrics.requests_completed, 1);
+        assert_eq!(report.final_occupancy.bytes, 0, "pool drained on shutdown");
+        let got = done.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, RequestId(7));
+        assert_eq!(got[0].tokens.len(), 4);
+    }
+
+    #[test]
+    fn two_shards_share_one_model_arc() {
+        let m = model();
+        let a = ShardEngine::spawn(0, Arc::clone(&m), ServeConfig::default(), 1, |_, _, _| {});
+        let b = ShardEngine::spawn(1, Arc::clone(&m), ServeConfig::default(), 1, |_, _, _| {});
+        assert!(a.submit(Request::new(RequestId(0), vec![4, 5], 3)));
+        assert!(b.submit(Request::new(RequestId(1), vec![6, 7], 3)));
+        let ra = a.join();
+        let rb = b.join();
+        assert_eq!(ra.metrics.requests_completed, 1);
+        assert_eq!(rb.metrics.requests_completed, 1);
+        // both shards read the same weights; only the Arc refcount grew
+        assert_eq!(Arc::strong_count(&m), 1, "shards dropped their model handles");
+    }
+}

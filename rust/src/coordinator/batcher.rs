@@ -6,6 +6,12 @@
 //! (backpressure). Policy is FCFS by default, with an optional
 //! shortest-prefill-first mode that reduces head-of-line blocking —
 //! the ablation the serving bench measures.
+//!
+//! Fairness: a request that gets rejected at the admission gate or
+//! overtaken by a later arrival is *deferred*, and deferred requests
+//! are pinned to the front of the queue (in arrival order) on every
+//! subsequent pass — shortest-prefill-first can therefore delay a
+//! large prompt at most once per younger competitor, never starve it.
 
 use std::collections::VecDeque;
 
@@ -35,8 +41,23 @@ impl Batcher {
         self.queue.push_back(r);
     }
 
+    /// Requeue a request at the *front* of the queue. Used when an
+    /// already-admitted request has to be handed back (e.g. a cluster
+    /// shard draining its queue on rebalance): it must not line up
+    /// behind work that arrived after it.
+    pub fn push_front(&mut self, r: Request) {
+        self.queue.push_front(r);
+    }
+
     pub fn waiting(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Total pool tokens (prompt + generation budget) the queued
+    /// requests will need — queue-depth introspection for operators
+    /// and the planned rebalance actuation (see ROADMAP).
+    pub fn queued_need_tokens(&self) -> usize {
+        self.queue.iter().map(|r| r.need_tokens()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -57,25 +78,42 @@ impl Batcher {
         let mut budget = self.max_step_tokens;
         let mut slots = self.max_batch.saturating_sub(active);
         if self.policy == Policy::ShortestPrefillFirst {
-            // stable sort keeps FCFS order among equals
+            // Stable sort keeps FCFS order among equals. Requests the
+            // pool has already rejected stay pinned at the front (in
+            // arrival order): without the pin, every re-sort would put
+            // a rejected large prompt behind newly arrived short ones
+            // and it could starve indefinitely.
             self.queue
                 .make_contiguous()
-                .sort_by_key(|r| r.prompt.len());
+                .sort_by_key(|r| if r.deferrals > 0 { (false, 0) } else { (true, r.prompt.len()) });
         }
         // scan without starving: take from the front while budgets allow
         while slots > 0 {
             let Some(front) = self.queue.front() else { break };
-            let need = front.prompt.len() + front.max_new_tokens;
+            let need = front.need_tokens();
             if front.prompt.len() > budget {
                 break; // out of prefill budget this step
             }
             if !can_fit(need) {
-                break; // KV backpressure: wait for releases
+                // KV backpressure: the front request waits for releases.
+                // Mark the rejection so it keeps its place at the head
+                // of the line on every later admit pass.
+                self.queue.front_mut().unwrap().deferrals += 1;
+                break;
             }
             let r = self.queue.pop_front().unwrap();
             budget -= r.prompt.len();
             slots -= 1;
             admitted.push(r);
+        }
+        // Aging: any queued request overtaken by a later arrival this
+        // pass is marked deferred, which pins it to the front above.
+        if let Some(last) = admitted.iter().map(|r| r.arrived).max() {
+            for r in self.queue.iter_mut() {
+                if r.arrived < last {
+                    r.deferrals += 1;
+                }
+            }
         }
         admitted
     }
@@ -134,6 +172,85 @@ mod tests {
         b.push(req(1, 5, 5));
         let admitted = b.admit(0, |_| true);
         assert_eq!(admitted[0].id, RequestId(1), "short prompt first");
+    }
+
+    #[test]
+    fn rejected_request_keeps_front_across_policy_resorts() {
+        // Regression: under ShortestPrefillFirst a pool-rejected large
+        // prompt used to be re-sorted behind every smaller later
+        // arrival, starving it indefinitely. A rejection now pins it to
+        // the front until it fits.
+        let mut b = Batcher::new(Policy::ShortestPrefillFirst, 4, 1000);
+        b.push(req(0, 80, 10)); // the large prompt: needs 90 tokens
+        // round 1: pool full — the large request is rejected
+        let admitted = b.admit(0, |_| false);
+        assert!(admitted.is_empty());
+        assert_eq!(b.waiting(), 1);
+        // smaller work keeps arriving behind it
+        b.push(req(1, 5, 10));
+        b.push(req(2, 8, 10));
+        // round 2: capacity freed — the deferred large prompt must be
+        // first out even though the policy prefers short prompts
+        let admitted = b.admit(0, |_| true);
+        assert_eq!(admitted[0].id, RequestId(0), "deferred large prompt admitted first");
+        assert_eq!(admitted.len(), 3);
+    }
+
+    #[test]
+    fn mixed_size_trace_never_starves_the_large_prompt() {
+        // Adversarial arrival trace: a steady stream of small requests
+        // under a pool that can only ever fit them. The large prompt
+        // must still be admitted within a bounded number of rounds of
+        // capacity first becoming available.
+        let mut b = Batcher::new(Policy::ShortestPrefillFirst, 1, 1000);
+        b.push(req(0, 60, 4)); // needs 64 pool tokens
+        let mut pool_free = 30usize; // large prompt cannot fit yet
+        let mut admitted_large_at = None;
+        for round in 1..=20u64 {
+            // two fresh small arrivals per round
+            b.push(req(round * 2, 4, 4));
+            b.push(req(round * 2 + 1, 4, 4));
+            if round == 5 {
+                pool_free = 100; // capacity opens up
+            }
+            let admitted = b.admit(0, |need| need <= pool_free);
+            for r in &admitted {
+                pool_free -= r.need_tokens();
+                if r.id == RequestId(0) {
+                    admitted_large_at = Some(round);
+                }
+            }
+            // small requests finish instantly, freeing their tokens
+            for r in &admitted {
+                if r.id != RequestId(0) {
+                    pool_free += r.need_tokens();
+                }
+            }
+        }
+        assert_eq!(
+            admitted_large_at,
+            Some(5),
+            "large prompt must be admitted the moment capacity allows"
+        );
+    }
+
+    #[test]
+    fn push_front_beats_older_queue_entries() {
+        let mut b = Batcher::new(Policy::Fcfs, 4, 1000);
+        b.push(req(0, 4, 4));
+        b.push_front(req(9, 4, 4));
+        let admitted = b.admit(0, |_| true);
+        assert_eq!(admitted[0].id, RequestId(9));
+        assert_eq!(admitted[1].id, RequestId(0));
+    }
+
+    #[test]
+    fn queued_need_tokens_sums_prompt_plus_budget() {
+        let mut b = Batcher::new(Policy::Fcfs, 4, 1000);
+        assert_eq!(b.queued_need_tokens(), 0);
+        b.push(req(0, 10, 5));
+        b.push(req(1, 3, 2));
+        assert_eq!(b.queued_need_tokens(), 20);
     }
 
     #[test]

@@ -12,6 +12,34 @@ use std::collections::BTreeMap;
 use crate::coordinator::request::RequestId;
 use crate::model::quantized::{DecodeCache, QuantModel};
 
+/// Byte-exact snapshot of one pool's occupancy — the per-shard unit
+/// the cluster layer aggregates and the rebalance signal compares.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolOccupancy {
+    /// Token capacity of this pool.
+    pub capacity_tokens: usize,
+    /// Tokens reserved by live sequences (prompt + generation budget).
+    pub reserved_tokens: usize,
+    /// Live sequences holding a cache.
+    pub live_sequences: usize,
+    /// Exact bytes held by the packed caches right now.
+    pub bytes: usize,
+    /// Bytes an unpacked (byte-per-code) working copy would occupy.
+    pub unpacked_bytes: usize,
+}
+
+impl PoolOccupancy {
+    /// Reserved fraction of capacity in [0, 1] — the load measure
+    /// placement and the rebalance signal compare across shards.
+    pub fn fill(&self) -> f64 {
+        if self.capacity_tokens == 0 {
+            0.0
+        } else {
+            self.reserved_tokens as f64 / self.capacity_tokens as f64
+        }
+    }
+}
+
 /// Pool of per-sequence decode caches.
 pub struct KvPool {
     /// Token capacity across all sequences.
@@ -79,6 +107,18 @@ impl KvPool {
     /// Number of live sequences.
     pub fn live(&self) -> usize {
         self.caches.len()
+    }
+
+    /// Byte-exact occupancy snapshot (tokens, sequences, packed and
+    /// unpacked-equivalent bytes) — what a cluster shard reports.
+    pub fn occupancy(&self) -> PoolOccupancy {
+        PoolOccupancy {
+            capacity_tokens: self.capacity_tokens,
+            reserved_tokens: self.reserved_tokens(),
+            live_sequences: self.live(),
+            bytes: self.bytes(),
+            unpacked_bytes: self.unpacked_bytes(),
+        }
     }
 
     /// Take a cache out temporarily (for parallel decode), to be put
@@ -167,5 +207,84 @@ mod tests {
         let mut pool = KvPool::new(10, 16);
         pool.release(RequestId(99));
         assert_eq!(pool.live(), 0);
+    }
+
+    #[test]
+    fn occupancy_invariants_across_admit_grow_release_cycles() {
+        let m = model();
+        let mut pool = KvPool::new(200, 16);
+        let mut expected_reserved = 0usize;
+        for cycle in 0..3u64 {
+            let a = RequestId(cycle * 2);
+            let b = RequestId(cycle * 2 + 1);
+            assert!(pool.admit(a, 30, &m));
+            assert!(pool.admit(b, 20, &m));
+            expected_reserved += 50;
+            let occ = pool.occupancy();
+            assert_eq!(occ.reserved_tokens, expected_reserved);
+            assert_eq!(occ.capacity_tokens, 200);
+            assert_eq!(occ.live_sequences, pool.live());
+            assert!(occ.fill() > 0.0 && occ.fill() <= 1.0);
+
+            // grow: append tokens to one cache; bytes must rise
+            // monotonically and stay at half the unpacked equivalent
+            let before = pool.occupancy();
+            let mut cache = pool.take(a);
+            for pos in 0..4 {
+                m.forward_token(1, pos, &mut cache);
+            }
+            pool.put_back(a, cache);
+            let after = pool.occupancy();
+            assert!(after.bytes > before.bytes, "cycle {cycle}: bytes must grow");
+            assert!(after.bytes <= after.unpacked_bytes);
+            let ratio = after.bytes as f64 / after.unpacked_bytes as f64;
+            assert!((0.45..=0.55).contains(&ratio), "cycle {cycle}: packed ratio {ratio}");
+            // growth must not change token reservations
+            assert_eq!(after.reserved_tokens, before.reserved_tokens);
+
+            // release one; its bytes and reservation leave the pool
+            pool.release(a);
+            expected_reserved -= 30;
+            let rel = pool.occupancy();
+            assert_eq!(rel.reserved_tokens, expected_reserved);
+            assert!(rel.bytes < after.bytes);
+        }
+        // drain fully: every byte accounted for
+        for id in 0..6u64 {
+            pool.release(RequestId(id));
+        }
+        let empty = pool.occupancy();
+        assert_eq!(empty.reserved_tokens, 0);
+        assert_eq!(empty.bytes, 0);
+        assert_eq!(empty.unpacked_bytes, 0);
+        assert_eq!(empty.fill(), 0.0);
+    }
+
+    #[test]
+    fn sdr_pool_holds_about_3_7x_the_tokens_of_fp16_at_equal_bytes() {
+        // The serving example's capacity claim, measured: per-token
+        // bytes of the packed SDR cache vs an FP16 cache of the same
+        // geometry. 16 bits / 4.25 effective bits ≈ 3.76×.
+        let m = model();
+        let mut pool = KvPool::new(100, 16);
+        pool.admit(RequestId(1), 40, &m);
+        let mut cache = pool.take(RequestId(1));
+        let t = 12usize;
+        for pos in 0..t {
+            m.forward_token(1, pos, &mut cache);
+        }
+        pool.put_back(RequestId(1), cache);
+        let sdr_per_token = pool.bytes() as f64 / t as f64;
+        let cfg = &m.config;
+        let kv_dim = m.kv_dim();
+        // K + V, 2 bytes per value, every layer
+        let fp16_per_token = (2 * 2 * cfg.layers * kv_dim) as f64;
+        let ratio = fp16_per_token / sdr_per_token;
+        assert!(
+            (3.5..=3.9).contains(&ratio),
+            "capacity ratio vs FP16: {ratio} (sdr {sdr_per_token} B/token)"
+        );
+        // and the exact effective-bits arithmetic: 16 / 4.25
+        assert!((ratio - 16.0 / 4.25).abs() < 0.05, "ratio {ratio} vs 16/4.25");
     }
 }

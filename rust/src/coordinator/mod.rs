@@ -4,17 +4,30 @@
 //! * [`request`] — request/response types and ids.
 //! * [`batcher`] — admission queue + continuous-batching policy
 //!   (prefill/decode separation, token budgets, FCFS or
-//!   shortest-prefill-first).
+//!   shortest-prefill-first with starvation-proof deferral aging).
 //! * [`kv`] — the KV-cache pool: per-sequence SDR-compressed caches
-//!   with global token-capacity accounting and backpressure — the
-//!   deployment surface of the paper's KV4 claim (a 4-bit pool holds
-//!   ~3.7× the tokens of an FP16 one at equal memory).
+//!   with token-capacity accounting, backpressure, and byte-exact
+//!   [`kv::PoolOccupancy`] reporting — the deployment surface of the
+//!   paper's KV4 claim (a 4-bit pool holds ~3.7× the tokens of an
+//!   FP16 one at equal memory).
 //! * [`scheduler`] — the step loop: admit → prefill → decode-batch →
-//!   retire, sequences decoded in parallel.
-//! * [`server`] — a threaded front-end: submit requests from any
-//!   thread, poll or block for completions.
+//!   retire, sequences decoded in parallel. The loop is factored as
+//!   the [`scheduler::StepLoop`] trait plus the [`scheduler::drive`]
+//!   worker function, shared verbatim by the single-engine server and
+//!   every cluster shard.
+//! * [`server`] — a threaded front-end over one engine: submit
+//!   requests from any thread, poll or block for completions.
 //! * [`metrics`] — throughput/latency accounting rendered by the CLI
 //!   and the serving example.
+//!
+//! One coordinator owns one [`Engine`], one packed KV pool, and one
+//! step loop — which caps serving throughput at a single decode
+//! quantum per step no matter how many cores the host has. The
+//! [`crate::cluster`] subsystem scales past that: N shard engines
+//! (each exactly this coordinator stack, each with its own packed KV
+//! pool) behind a placement policy and a cluster-wide metrics
+//! aggregator, sharing one `Arc`-held copy of the nibble-packed
+//! weights.
 
 pub mod batcher;
 pub mod kv;
@@ -24,5 +37,5 @@ pub mod scheduler;
 pub mod server;
 
 pub use request::{Request, RequestId, Response};
-pub use scheduler::Engine;
+pub use scheduler::{drive, Engine, LoopMsg, StepLoop};
 pub use server::Server;

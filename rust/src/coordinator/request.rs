@@ -25,6 +25,13 @@ pub struct Request {
     /// Generation stops early on this token (e.g. end-of-text).
     pub stop_token: Option<u32>,
     pub arrived: Instant,
+    /// Times the batcher deferred this request: rejected at the
+    /// admission gate (KV backpressure) or overtaken by a later
+    /// arrival under a reordering policy. A non-zero count pins the
+    /// request to the front of the queue across policy re-sorts so a
+    /// large prompt cannot be starved indefinitely by smaller later
+    /// arrivals.
+    pub deferrals: u32,
 }
 
 impl Request {
@@ -36,7 +43,14 @@ impl Request {
             sampling: Sampling::Greedy,
             stop_token: None,
             arrived: Instant::now(),
+            deferrals: 0,
         }
+    }
+
+    /// Total KV-pool tokens this request needs end to end
+    /// (prompt + generation budget) — the unit admission reasons in.
+    pub fn need_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
     }
 }
 

@@ -7,13 +7,22 @@
 //! cache; the model is `Sync`). Finished sequences release their pool
 //! reservation immediately, letting the batcher admit waiting work —
 //! the vLLM-style property that keeps the batch full.
+//!
+//! The step loop itself is abstracted as [`StepLoop`] + [`drive`]: the
+//! single-engine [`super::server::Server`] and every
+//! [`crate::cluster`] shard worker run the *same* control loop
+//! (blocking when idle, draining submissions first, finishing in-flight
+//! work on shutdown), so cluster shards inherit the exact semantics the
+//! threaded server's tests pin down.
 
 use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{Batcher, Policy};
-use crate::coordinator::kv::KvPool;
+use crate::coordinator::kv::{KvPool, PoolOccupancy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{FinishReason, Request, RequestId, Response, Sampling};
 use crate::model::quantized::{DecodeCache, QuantModel};
@@ -34,9 +43,12 @@ struct Active {
 }
 
 /// Single-threaded serving engine (wrap with [`super::server::Server`]
-/// for a threaded front-end).
+/// for a threaded front-end, or run many as [`crate::cluster`] shards).
+///
+/// The model is held behind an `Arc` so N shard engines share one copy
+/// of the nibble-packed weights — N shards cost N KV pools but one W4.
 pub struct Engine {
-    pub model: QuantModel,
+    pub model: Arc<QuantModel>,
     pub config: ServeConfig,
     pub metrics: Metrics,
     batcher: Batcher,
@@ -47,7 +59,8 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(model: QuantModel, config: ServeConfig) -> Engine {
+    pub fn new(model: impl Into<Arc<QuantModel>>, config: ServeConfig) -> Engine {
+        let model = model.into();
         Engine {
             batcher: Batcher::new(Policy::Fcfs, config.max_batch, config.max_step_tokens),
             pool: KvPool::new(config.kv_pool_tokens, config.kv_group),
@@ -81,6 +94,28 @@ impl Engine {
         self.next_id = self.next_id.max(req.id.0 + 1);
         self.metrics.requests_submitted += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
+        // A request that could never be admitted — empty prompt, a
+        // prompt longer than the per-step prefill budget, or a total
+        // need beyond the whole pool — must not enter the queue: it
+        // would pin the front forever and wedge the step loop (and
+        // any drain loop above it). Complete it immediately as an
+        // error instead.
+        if req.prompt.is_empty()
+            || req.prompt.len() > self.config.max_step_tokens
+            || req.need_tokens() > self.pool.capacity_tokens
+        {
+            self.metrics.requests_completed += 1;
+            let total = req.arrived.elapsed().as_secs_f64();
+            self.done.push(Response {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::Error,
+                ttft_s: 0.0,
+                total_s: total,
+            });
+            return;
+        }
         self.batcher.push(req);
     }
 
@@ -116,7 +151,7 @@ impl Engine {
             })
         };
         for req in admitted {
-            let ok = pool.admit(req.id, req.prompt.len() + req.max_new_tokens, model);
+            let ok = pool.admit(req.id, req.need_tokens(), model);
             debug_assert!(ok, "batcher admitted beyond pool capacity");
             let mut cache = pool.take(req.id);
             // prefill: run all prompt tokens except the last; the last
@@ -227,12 +262,127 @@ impl Engine {
             self.step();
             out.extend(self.take_completed());
         }
+        // Requests rejected at submit time complete without a step —
+        // the engine can be idle with responses still undrained.
+        out.extend(self.take_completed());
         out
     }
 
     pub fn kv_bytes(&self) -> usize {
         self.pool.bytes()
     }
+
+    /// Byte-exact occupancy of this engine's KV pool — the per-shard
+    /// signal the cluster metrics aggregate (exposed on the worker
+    /// contract as [`StepLoop::occupancy`]).
+    pub fn pool_occupancy(&self) -> PoolOccupancy {
+        self.pool.occupancy()
+    }
+}
+
+/// What a serving worker thread needs from the thing it steps — the
+/// reusable slice of [`Engine`] that [`drive`] runs. Implemented by
+/// `Engine`; cluster shards and the single-engine server both drive
+/// through this trait so their loop semantics cannot diverge.
+pub trait StepLoop: Send {
+    /// Queue a fully-specified request (the caller owns id uniqueness).
+    fn submit_request(&mut self, req: Request);
+    /// One scheduling quantum; returns tokens generated.
+    fn step(&mut self) -> usize;
+    /// Nothing queued and nothing mid-generation?
+    fn is_idle(&self) -> bool;
+    /// Drain completed responses.
+    fn take_completed(&mut self) -> Vec<Response>;
+    /// Byte-exact KV-pool occupancy snapshot.
+    fn occupancy(&self) -> PoolOccupancy;
+}
+
+impl StepLoop for Engine {
+    fn submit_request(&mut self, req: Request) {
+        Engine::submit_request(self, req)
+    }
+    fn step(&mut self) -> usize {
+        Engine::step(self)
+    }
+    fn is_idle(&self) -> bool {
+        Engine::is_idle(self)
+    }
+    fn take_completed(&mut self) -> Vec<Response> {
+        Engine::take_completed(self)
+    }
+    fn occupancy(&self) -> PoolOccupancy {
+        Engine::pool_occupancy(self)
+    }
+}
+
+/// Control messages for a [`drive`]n worker.
+pub enum LoopMsg {
+    Submit(Request),
+    Shutdown,
+}
+
+/// Drive a [`StepLoop`] off a control channel until shutdown: block
+/// when idle (no spinning), drain queued submissions before stepping,
+/// and on [`LoopMsg::Shutdown`] finish every in-flight request before
+/// returning — the deterministic-draining guarantee the cluster
+/// equivalence test relies on. `on_step` observes the loop with each
+/// batch of completions: after every step, and immediately for
+/// requests that complete at submit time (rejected as unservable)
+/// without ever being stepped. It forwards responses and, for cluster
+/// shards, publishes occupancy. Returns the loop value so the caller
+/// can collect final metrics.
+pub fn drive<L: StepLoop>(
+    mut l: L,
+    rx: mpsc::Receiver<LoopMsg>,
+    mut on_step: impl FnMut(&mut L, Vec<Response>),
+) -> L {
+    loop {
+        // Deliver anything already completed before possibly blocking
+        // — submit-time rejections finish without a step.
+        let done = l.take_completed();
+        if !done.is_empty() {
+            on_step(&mut l, done);
+        }
+        let msg = if l.is_idle() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // all senders gone, nothing in flight
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        };
+        match msg {
+            Some(LoopMsg::Submit(req)) => {
+                l.submit_request(req);
+                continue; // keep draining submissions first
+            }
+            Some(LoopMsg::Shutdown) => {
+                while !l.is_idle() {
+                    l.step();
+                    let done = l.take_completed();
+                    on_step(&mut l, done);
+                }
+                // submit-time rejections can leave completions behind
+                // even when the loop never became busy
+                let done = l.take_completed();
+                if !done.is_empty() {
+                    on_step(&mut l, done);
+                }
+                break;
+            }
+            None => {}
+        }
+        if !l.is_idle() {
+            l.step();
+            let done = l.take_completed();
+            on_step(&mut l, done);
+        }
+    }
+    l
 }
 
 fn sample(logits: &[f32], sampling: &Sampling, pos_salt: u64) -> u32 {
@@ -365,13 +515,68 @@ mod tests {
         // tiny pool: only one request fits at a time (3+4=7 tokens)
         let mut e = Engine::new(
             qm,
-            ServeConfig { max_batch: 4, max_new_tokens: 8, kv_pool_tokens: 8, ..Default::default() },
+            ServeConfig {
+                max_batch: 4,
+                max_new_tokens: 8,
+                kv_pool_tokens: 8,
+                ..Default::default()
+            },
         );
         for _ in 0..3 {
             e.submit(vec![1, 2, 3], 4, Sampling::Greedy);
         }
         let out = e.run_to_completion();
         assert_eq!(out.len(), 3, "all complete despite backpressure");
+    }
+
+    #[test]
+    fn unservable_requests_error_out_instead_of_wedging_the_loop() {
+        // A prompt longer than the per-step prefill budget (or a need
+        // beyond the whole pool) could never be admitted; it used to
+        // sit in the queue forever, spinning run_to_completion and
+        // every drain loop above it. It must now complete immediately
+        // with FinishReason::Error while servable traffic flows on.
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 5);
+        let mut rng = Rng::new(6);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let qm = crate::model::quantized::QuantModel::build(&w, Box::new(Fp16), &cal);
+        let mut e = Engine::new(
+            qm,
+            ServeConfig { max_step_tokens: 8, max_new_tokens: 8, ..Default::default() },
+        );
+        e.set_policy(Policy::ShortestPrefillFirst);
+        let oversized = e.submit(vec![1; 12], 4, Sampling::Greedy); // prompt > budget
+        let ok1 = e.submit(vec![1, 2, 3], 4, Sampling::Greedy);
+        let over_pool = {
+            let mut r = Request::new(RequestId(50), vec![2, 3], 4);
+            r.max_new_tokens = 1_000_000; // need > pool capacity
+            e.submit_request(r);
+            RequestId(50)
+        };
+        let ok2 = e.submit(vec![4, 5], 4, Sampling::Greedy);
+        let mut out = e.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 4, "every request answered, none wedged");
+        let by_id = |id: RequestId| out.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(oversized).finish, FinishReason::Error);
+        assert!(by_id(oversized).tokens.is_empty());
+        assert_eq!(by_id(over_pool).finish, FinishReason::Error);
+        assert_eq!(by_id(ok1).tokens.len(), 4);
+        assert_eq!(by_id(ok2).tokens.len(), 4);
+        assert!(e.is_idle());
+
+        // error-only workload: the engine never becomes busy, yet the
+        // response must still drain out of run_to_completion
+        let mut only_err = engine(Box::new(Fp16));
+        only_err.submit(vec![1; 600], 4, Sampling::Greedy); // > default step budget
+        let out = only_err.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Error);
+        assert!(only_err.is_idle());
     }
 
     #[test]

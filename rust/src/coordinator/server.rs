@@ -3,96 +3,69 @@
 //! completions on a response channel. (The vendored dependency set has
 //! no tokio, so this is plain `std::thread` + `mpsc` — adequate for a
 //! CPU-bound engine where the model step dominates.)
+//!
+//! The worker runs the shared [`drive`] loop — the same loop every
+//! [`crate::cluster`] shard runs — so single-engine and sharded
+//! serving cannot drift apart in shutdown/draining semantics. For the
+//! multi-worker front-end with the same submit/poll/block API, see
+//! [`crate::cluster::ClusterServer`].
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use crate::config::ServeConfig;
-use crate::coordinator::request::{RequestId, Response, Sampling};
-use crate::coordinator::scheduler::Engine;
+use crate::coordinator::request::{Request, RequestId, Response, Sampling};
+use crate::coordinator::scheduler::{drive, Engine, LoopMsg};
 use crate::model::quantized::QuantModel;
-
-enum Msg {
-    Submit {
-        prompt: Vec<u32>,
-        max_new: usize,
-        sampling: Sampling,
-        reply: mpsc::Sender<RequestId>,
-    },
-    Shutdown,
-}
 
 /// Handle to a running server.
 pub struct Server {
-    tx: mpsc::Sender<Msg>,
+    tx: mpsc::Sender<LoopMsg>,
     completions: mpsc::Receiver<Response>,
+    next_id: AtomicU64,
+    max_new_tokens: usize,
     worker: Option<JoinHandle<String>>,
 }
 
 impl Server {
     /// Spawn the engine on a worker thread.
     pub fn spawn(model: QuantModel, config: ServeConfig) -> Server {
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let (tx, rx) = mpsc::channel::<LoopMsg>();
         let (done_tx, done_rx) = mpsc::channel::<Response>();
+        let max_new_tokens = config.max_new_tokens;
         let worker = std::thread::spawn(move || {
-            let mut engine = Engine::new(model, config);
-            loop {
-                // drain control messages (non-blocking when busy,
-                // blocking when idle so we don't spin)
-                let msg = if engine.is_idle() {
-                    match rx.recv() {
-                        Ok(m) => Some(m),
-                        Err(_) => break,
-                    }
-                } else {
-                    match rx.try_recv() {
-                        Ok(m) => Some(m),
-                        Err(mpsc::TryRecvError::Empty) => None,
-                        Err(mpsc::TryRecvError::Disconnected) => break,
-                    }
-                };
-                match msg {
-                    Some(Msg::Submit { prompt, max_new, sampling, reply }) => {
-                        let id = engine.submit(prompt, max_new, sampling);
-                        let _ = reply.send(id);
-                        continue; // keep draining submissions first
-                    }
-                    Some(Msg::Shutdown) => {
-                        // finish in-flight work before exiting
-                        while !engine.is_idle() {
-                            engine.step();
-                            for r in engine.take_completed() {
-                                let _ = done_tx.send(r);
-                            }
-                        }
-                        break;
-                    }
-                    None => {}
+            let engine = drive(Engine::new(model, config), rx, |_, done| {
+                for r in done {
+                    let _ = done_tx.send(r);
                 }
-                if !engine.is_idle() {
-                    engine.step();
-                    for r in engine.take_completed() {
-                        let _ = done_tx.send(r);
-                    }
-                }
-            }
+            });
             engine.metrics.render()
         });
-        Server { tx, completions: done_rx, worker: Some(worker) }
+        Server {
+            tx,
+            completions: done_rx,
+            next_id: AtomicU64::new(0),
+            max_new_tokens,
+            worker: Some(worker),
+        }
     }
 
-    /// Submit a request; blocks briefly for the assigned id.
+    /// Submit a request; the id is assigned client-side so this never
+    /// blocks on the worker.
     pub fn submit(
         &self,
         prompt: Vec<u32>,
         max_new: usize,
         sampling: Sampling,
     ) -> anyhow::Result<RequestId> {
-        let (reply, get) = mpsc::channel();
+        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let mut req = Request::new(id, prompt, max_new.min(self.max_new_tokens));
+        req.sampling = sampling;
         self.tx
-            .send(Msg::Submit { prompt, max_new, sampling, reply })
+            .send(LoopMsg::Submit(req))
             .map_err(|_| anyhow::anyhow!("server worker gone"))?;
-        get.recv().map_err(|_| anyhow::anyhow!("server worker gone"))
+        Ok(id)
     }
 
     /// Block for the next completion.
@@ -105,7 +78,7 @@ impl Server {
     /// Shut down, finishing in-flight requests; returns the metrics
     /// summary line.
     pub fn shutdown(mut self) -> String {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.tx.send(LoopMsg::Shutdown);
         self.worker
             .take()
             .map(|w| w.join().unwrap_or_else(|_| "worker panicked".into()))
@@ -115,7 +88,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.tx.send(LoopMsg::Shutdown);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -144,7 +117,8 @@ mod tests {
 
     #[test]
     fn threaded_server_round_trip() {
-        let server = Server::spawn(model(), ServeConfig { max_new_tokens: 4, ..Default::default() });
+        let server =
+            Server::spawn(model(), ServeConfig { max_new_tokens: 4, ..Default::default() });
         let id1 = server.submit(vec![1, 2, 3], 3, Sampling::Greedy).unwrap();
         let id2 = server.submit(vec![4, 5], 3, Sampling::Greedy).unwrap();
         assert_ne!(id1, id2);
@@ -155,6 +129,22 @@ mod tests {
         assert_eq!(got[1].tokens.len(), 3);
         let summary = server.shutdown();
         assert!(summary.contains("2/2 done"), "{summary}");
+    }
+
+    #[test]
+    fn submit_time_rejection_still_returns_a_completion() {
+        // An unservable request (prompt beyond the per-step prefill
+        // budget) completes as an error without a scheduling step; the
+        // drive loop must still deliver it rather than stranding it.
+        let server =
+            Server::spawn(model(), ServeConfig { max_step_tokens: 8, ..Default::default() });
+        let id = server.submit(vec![1; 20], 4, Sampling::Greedy).unwrap();
+        let r = server.next_completion().unwrap();
+        assert_eq!(r.id, id);
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.finish, crate::coordinator::request::FinishReason::Error);
+        let summary = server.shutdown();
+        assert!(summary.contains("1/1 done"), "{summary}");
     }
 
     #[test]

@@ -163,7 +163,8 @@ pub fn build_experiment(preset: &str, scale: EvalScale, seed: u64) -> anyhow::Re
         .collect();
     let cal = calibrate(&weights, &calib_seqs);
 
-    let tasks = build_suite(&eval_text, &tokenizer, scale.task_items, world_seed(seed), seed ^ 0x7A53);
+    let tasks =
+        build_suite(&eval_text, &tokenizer, scale.task_items, world_seed(seed), seed ^ 0x7A53);
     Ok(Experiment {
         config: cfg,
         weights,

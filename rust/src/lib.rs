@@ -22,12 +22,16 @@
 //!   (`artifacts/*.hlo.txt`), used for training and cross-validation.
 //! * [`coordinator`] — the serving layer: router, continuous batcher,
 //!   prefill/decode scheduler, SDR KV-cache pool, metrics.
+//! * [`cluster`] — the scale-out layer above the coordinator: sharded
+//!   multi-worker serving with per-shard packed KV pools, placement
+//!   policies, and cluster-wide metrics aggregation.
 //! * [`util`] / [`tensor`] — zero-dependency substrates.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
 
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

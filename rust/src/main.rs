@@ -4,10 +4,12 @@
 //! qrazor train --model nano --steps 300         # PJRT training loop
 //! qrazor eval  --model nano --scheme w4a4kv4:16 # tables' metric set
 //! qrazor serve --model nano --requests 16       # serving demo
+//! qrazor serve --shards 4 --requests 64         # sharded cluster demo
 //! qrazor hw-report                              # Table 5 + Table 8
 //! ```
 
 use qrazor::baselines::{Fp16, QRazor, Scheme};
+use qrazor::cluster::{ClusterConfig, ClusterServer, PlacementPolicy};
 use qrazor::config::ServeConfig;
 use qrazor::coordinator::request::Sampling;
 use qrazor::coordinator::Engine;
@@ -30,6 +32,12 @@ fn cli() -> Cli {
         .opt("scheme", Some("w4a4kv4:16"), "scheme: fp16 | w4a4:G | w4a4kv4:G | w4a8:G | w4a8kv4:G")
         .opt("requests", Some("16"), "serve: number of synthetic requests")
         .opt("max-new", Some("32"), "serve: tokens to generate per request")
+        .opt("shards", Some("1"), "serve: worker shards (>1 runs the cluster layer)")
+        .opt(
+            "placement",
+            Some("least-reserved"),
+            "serve: shard placement (least-reserved|round-robin|hash)",
+        )
         .flag("quick", "use the quick evaluation scale")
 }
 
@@ -84,25 +92,51 @@ fn main() -> anyhow::Result<()> {
             let exp = build_experiment(&preset, scale, seed)?;
             let scheme = parse_scheme(&args.get_str("scheme")?)?;
             let qm = QuantModel::build(&exp.weights, scheme, &exp.cal);
-            let mut engine = Engine::new(qm, ServeConfig::default());
             let n = args.get_usize("requests")?;
             let max_new = args.get_usize("max-new")?;
+            let shards = args.get_usize("shards")?;
             let mut rng = Rng::new(seed);
+            let mut prompts = Vec::with_capacity(n);
             for _ in 0..n {
                 let len = 4 + rng.index(24);
                 let prompt: Vec<u32> = (0..len)
                     .map(|_| rng.below(exp.config.vocab as u64) as u32)
                     .collect();
-                engine.submit(prompt, max_new, Sampling::Greedy);
+                prompts.push(prompt);
             }
-            let t0 = std::time::Instant::now();
-            let done = engine.run_to_completion();
-            println!(
-                "served {} requests in {:.2}s\n{}",
-                done.len(),
-                t0.elapsed().as_secs_f64(),
-                engine.metrics.render()
-            );
+            if shards > 1 {
+                let placement_name = args.get_str("placement")?;
+                let placement = PlacementPolicy::parse(&placement_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown placement '{placement_name}'"))?;
+                let cluster = ClusterServer::spawn(
+                    qm,
+                    ClusterConfig { shards, placement, ..Default::default() },
+                );
+                let t0 = std::time::Instant::now();
+                for prompt in prompts {
+                    cluster.submit(prompt, max_new, Sampling::Greedy)?;
+                }
+                let report = cluster.shutdown();
+                println!(
+                    "served {} requests in {:.2}s\n{}",
+                    report.total_completed(),
+                    t0.elapsed().as_secs_f64(),
+                    report.render()
+                );
+            } else {
+                let mut engine = Engine::new(qm, ServeConfig::default());
+                for prompt in prompts {
+                    engine.submit(prompt, max_new, Sampling::Greedy);
+                }
+                let t0 = std::time::Instant::now();
+                let done = engine.run_to_completion();
+                println!(
+                    "served {} requests in {:.2}s\n{}",
+                    done.len(),
+                    t0.elapsed().as_secs_f64(),
+                    engine.metrics.render()
+                );
+            }
         }
         Some("hw-report") => {
             println!("Table 5 — MAC unit area/power (unit-gate model vs paper):");

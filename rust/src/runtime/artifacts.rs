@@ -36,7 +36,10 @@ pub struct SdrKernelSpec {
 impl Manifest {
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("meta.json"))
-            .map_err(|e| anyhow::anyhow!("cannot read {}/meta.json: {e} — run `make artifacts`", dir.display()))?;
+            .map_err(|e| {
+                let d = dir.display();
+                anyhow::anyhow!("cannot read {d}/meta.json: {e} — run `make artifacts`")
+            })?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
         let model = ModelConfig::from_json(j.req("model")?)?;
         let usize_at = |obj: &Json, k: &str| -> anyhow::Result<usize> {

@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::packed::{nibble_at, PackedSdrMatrix, NIBBLE_SIGNED};
+use super::packed::{decode_nibbles_into, nibble_at, PackedSdrMatrix};
 use super::razor::SdrMatrix;
 use crate::tensor::Tensor;
 use crate::util::threadpool::parallel_for;
@@ -171,7 +171,10 @@ pub const PACKED_ROW_BLOCK: usize = 8;
 /// nibble stores group-by-group, expanding one group at a time into a
 /// stack tile (`[i16; PACKED_TILE_GROUP]` — the register file of the
 /// paper's MAC array), does the narrow MACs, and applies **one** barrel
-/// shift per group pair. Work is parallel over activation row blocks
+/// shift per group pair. Nibble decode is byte-wide: each packed byte
+/// hits the 256-entry [`super::packed::NIBBLE_PAIR_SIGNED`] table once
+/// and yields both codes, halving the decode work of the old
+/// per-nibble shift/mask loop. Work is parallel over activation row blocks
 /// via [`crate::util::threadpool`]; each decoded weight tile is reused
 /// across the whole row block, so the packed weight stream is read once
 /// per block rather than once per output row.
@@ -198,13 +201,12 @@ pub fn gemm_razored_packed(a: &PackedSdrMatrix, w: &PackedSdrMatrix) -> Tensor<i
         let i0 = ib * PACKED_ROW_BLOCK;
         let rows = PACKED_ROW_BLOCK.min(m - i0);
         // Decode this block's activation rows once (amortized over every
-        // weight row); flags stay packed and are read per group below.
+        // weight row), two codes per byte via the 256-entry pair LUT;
+        // flags stay packed and are read per group below.
         let mut arows = vec![0i16; rows * k];
         for r in 0..rows {
             let base = (i0 + r) * k;
-            for (t, o) in arows[r * k..(r + 1) * k].iter_mut().enumerate() {
-                *o = NIBBLE_SIGNED[nibble_at(&a.nibbles, base + t) as usize];
-            }
+            decode_nibbles_into(&a.nibbles, base, k, &mut arows[r * k..(r + 1) * k]);
         }
         let cblock =
             unsafe { std::slice::from_raw_parts_mut(cptr.get().add(i0 * n), rows * n) };
@@ -217,10 +219,9 @@ pub fn gemm_razored_packed(a: &PackedSdrMatrix, w: &PackedSdrMatrix) -> Tensor<i
                 let lo = p * g;
                 let glen = g.min(k - lo);
                 // One weight group expanded into the stack tile, reused
-                // across the whole activation row block.
-                for (t, o) in wtile[..glen].iter_mut().enumerate() {
-                    *o = NIBBLE_SIGNED[nibble_at(&w.nibbles, wbase + lo + t) as usize];
-                }
+                // across the whole activation row block — byte-wide
+                // decode, two codes per LUT hit.
+                decode_nibbles_into(&w.nibbles, wbase + lo, glen, &mut wtile[..glen]);
                 let fw = nibble_at(&w.flag_bytes, wfbase + p);
                 for (r, acc) in accs[..rows].iter_mut().enumerate() {
                     let arow = &arows[r * k + lo..r * k + lo + glen];
@@ -326,7 +327,8 @@ mod tests {
     fn prop_decompression_free_equals_decompressed() {
         // The paper's §4.3 equivalence as a property over sizes/groups.
         let gen = PairGen(IntRange { lo: 1, hi: 6 }, IntRange { lo: 1, hi: 48 });
-        check("razored≡decompressed", Config { cases: 60, ..Default::default() }, &gen, |&(mn, k)| {
+        let cfg = Config { cases: 60, ..Default::default() };
+        check("razored≡decompressed", cfg, &gen, |&(mn, k)| {
             let (m, n, k) = (mn as usize, (mn as usize % 3) + 1, k as usize);
             for g in [4usize, 16, 32] {
                 let (a, w) = make_pair(m, n, k, g, 4, (m * 1000 + k) as u64);

@@ -18,6 +18,50 @@ use super::signmag::SignMag;
 pub const NIBBLE_SIGNED: [i16; 16] =
     [0, 1, 2, 3, 4, 5, 6, 7, 0, -1, -2, -3, -4, -5, -6, -7];
 
+/// Both codes of a packed byte decoded at once (`[low, high]`),
+/// indexed by the raw byte — the 256-entry LUT the packed GEMM uses
+/// to decode two codes per table load instead of a shift+mask round
+/// per nibble. Bit-identical to [`NIBBLE_SIGNED`] by construction
+/// (and by test).
+pub const NIBBLE_PAIR_SIGNED: [[i16; 2]; 256] = {
+    let mut t = [[0i16; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [NIBBLE_SIGNED[b & 0x0F], NIBBLE_SIGNED[b >> 4]];
+        b += 1;
+    }
+    t
+};
+
+/// Decode `n` consecutive codes starting at nibble index `start` into
+/// `out[..n]`, walking whole bytes through [`NIBBLE_PAIR_SIGNED`].
+/// Handles unaligned starts (odd nibble index) and odd lengths at the
+/// edges; everything between decodes two codes per byte.
+#[inline]
+pub fn decode_nibbles_into(bytes: &[u8], start: usize, n: usize, out: &mut [i16]) {
+    debug_assert!(out.len() >= n);
+    if n == 0 {
+        return;
+    }
+    let mut i = 0usize; // codes written
+    let mut pos = start; // absolute nibble index
+    if pos % 2 == 1 {
+        out[0] = NIBBLE_PAIR_SIGNED[bytes[pos / 2] as usize][1];
+        i = 1;
+        pos += 1;
+    }
+    while i + 1 < n {
+        let pair = NIBBLE_PAIR_SIGNED[bytes[pos / 2] as usize];
+        out[i] = pair[0];
+        out[i + 1] = pair[1];
+        i += 2;
+        pos += 2;
+    }
+    if i < n {
+        out[i] = NIBBLE_PAIR_SIGNED[bytes[pos / 2] as usize][0];
+    }
+}
+
 /// Nibble `i` of a packed byte stream (low nibble first).
 #[inline(always)]
 pub fn nibble_at(bytes: &[u8], i: usize) -> u8 {
@@ -226,6 +270,37 @@ mod tests {
             let sm = SignMag::decode(nib, 4);
             let signed = if sm.neg { -(sm.mag as i16) } else { sm.mag as i16 };
             assert_eq!(NIBBLE_SIGNED[nib as usize], signed, "nibble {nib}");
+        }
+    }
+
+    #[test]
+    fn nibble_pair_lut_matches_single_nibble_lut() {
+        for b in 0u16..256 {
+            let pair = NIBBLE_PAIR_SIGNED[b as usize];
+            assert_eq!(pair[0], NIBBLE_SIGNED[(b & 0x0F) as usize], "byte {b} low");
+            assert_eq!(pair[1], NIBBLE_SIGNED[(b >> 4) as usize], "byte {b} high");
+        }
+    }
+
+    #[test]
+    fn decode_nibbles_into_handles_every_alignment() {
+        let m = random_matrix(4, 41, 8, 33); // odd row length
+        let p = PackedSdrMatrix::from_matrix(&m);
+        let total = 4 * 41;
+        let reference: Vec<i16> = (0..total)
+            .map(|i| NIBBLE_SIGNED[nibble_at(&p.nibbles, i) as usize])
+            .collect();
+        // every (start, len) window, aligned and unaligned
+        for start in 0..8usize {
+            for len in [0usize, 1, 2, 3, 7, 8, 40, total - start] {
+                let mut out = vec![99i16; len];
+                decode_nibbles_into(&p.nibbles, start, len, &mut out);
+                assert_eq!(
+                    out,
+                    &reference[start..start + len],
+                    "start {start} len {len}"
+                );
+            }
         }
     }
 

@@ -474,7 +474,8 @@ mod tests {
         let rec = v.reconstruct();
         for (i, (&orig, &back)) in vals.iter().zip(&rec).enumerate() {
             let f = v.flag_for(i);
-            let bound = if f == 0 { 0 } else { 1i32 << f }; // ≤ 2^f (floor case ≤ 2^f−1, rtn ≤ 2^(f−1))
+            // ≤ 2^f (floor case ≤ 2^f−1, rtn ≤ 2^(f−1))
+            let bound = if f == 0 { 0 } else { 1i32 << f };
             assert!(
                 (orig - back).abs() <= bound,
                 "i={i} orig={orig} back={back} flag={f}"
@@ -641,7 +642,11 @@ mod tests {
         // The §Perf fast path must be bit-identical to the reference
         // staged pipeline for every shape/group/scale.
         let gen = PairGen(
-            VecGen { elem: crate::util::quickcheck::ActivationLike::default(), min_len: 1, max_len: 200 },
+            VecGen {
+                elem: crate::util::quickcheck::ActivationLike::default(),
+                min_len: 1,
+                max_len: 200,
+            },
             IntRange { lo: 1, hi: 128 },
         );
         check("fused≡staged", Config { cases: 200, ..Default::default() }, &gen, |(xs, g)| {

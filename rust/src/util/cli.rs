@@ -135,7 +135,9 @@ impl Cli {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.help_text()))?;
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown option --{name}\n\n{}", self.help_text())
+                    })?;
                 if spec.takes_value {
                     let v = match inline_val {
                         Some(v) => v,

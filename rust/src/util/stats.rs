@@ -200,7 +200,13 @@ impl BenchResult {
                 format!("{:.3} s", s)
             }
         }
-        format!("{} ±{} (min {}, p99 {})", fmt(self.mean_s), fmt(self.std_s), fmt(self.min_s), fmt(self.p99_s))
+        format!(
+            "{} ±{} (min {}, p99 {})",
+            fmt(self.mean_s),
+            fmt(self.std_s),
+            fmt(self.min_s),
+            fmt(self.p99_s)
+        )
     }
 }
 

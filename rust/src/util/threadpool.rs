@@ -32,6 +32,28 @@ std::thread_local! {
     /// nested calls (e.g. a matmul inside a parallel eval loop) run
     /// serially instead of oversubscribing with scoped-thread spawns.
     static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+
+    /// Per-thread cap on `parallel_for` fan-out, set by
+    /// [`with_thread_cap`]. Cluster shard workers each run their step
+    /// loop under `num_threads() / shards` so N concurrent shards
+    /// share the machine instead of each spawning a full-width pool.
+    static THREAD_CAP: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+/// Run `f` with this thread's data-parallel fan-out capped at `cap`
+/// workers (minimum 1). The previous cap is restored afterwards; caps
+/// nest, taking the tighter bound.
+pub fn with_thread_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_CAP.with(|c| c.replace(cap.max(1).min(c.get())));
+    let out = f();
+    THREAD_CAP.with(|c| c.set(prev));
+    out
+}
+
+/// The fan-out `parallel_for` will actually use on this thread:
+/// [`num_threads`] clamped by any [`with_thread_cap`] scope.
+pub fn effective_threads() -> usize {
+    THREAD_CAP.with(|c| c.get()).min(num_threads())
 }
 
 /// Run `f(i)` for every `i in 0..n`, distributing indices across the pool
@@ -41,7 +63,7 @@ std::thread_local! {
 /// Falls back to a serial loop when `n` is small, the pool has 1 thread,
 /// or the call is nested inside another `parallel_for`.
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
-    let workers = num_threads();
+    let workers = effective_threads();
     if workers <= 1 || n < 2 || IN_POOL.with(|c| c.get()) {
         for i in 0..n {
             f(i);
@@ -161,6 +183,31 @@ mod tests {
                 assert_eq!(covered, n, "n={n} parts={parts}");
             }
         }
+    }
+
+    #[test]
+    fn thread_cap_scopes_nest_and_restore() {
+        assert_eq!(effective_threads(), num_threads());
+        with_thread_cap(2, || {
+            assert_eq!(effective_threads(), 2.min(num_threads()));
+            // nesting takes the tighter bound, never widens
+            with_thread_cap(8, || {
+                assert_eq!(effective_threads(), 2.min(num_threads()));
+            });
+            with_thread_cap(1, || {
+                assert_eq!(effective_threads(), 1);
+                // capped loops still visit every index exactly once
+                let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+                parallel_for(100, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            });
+            assert_eq!(effective_threads(), 2.min(num_threads()));
+        });
+        assert_eq!(effective_threads(), num_threads());
+        // cap of 0 clamps to 1 rather than deadlocking
+        with_thread_cap(0, || assert_eq!(effective_threads(), 1));
     }
 
     #[test]
