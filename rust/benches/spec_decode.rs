@@ -1,0 +1,290 @@
+//! Speculative decoding: acceptance rate vs single-stream tok/s.
+//!
+//! Two sections:
+//!
+//! 1. **Real models** — the nano QuantModel pair (draft = packed
+//!    W4A4KV4, verify = W4A8KV4 basis, same weights + calibration).
+//!    Sweeps the lookahead `k`, asserting the committed stream is
+//!    token-identical to plain decode and reporting measured
+//!    acceptance and tok/s. A draft==target point pins acceptance at
+//!    exactly 1.0 (the chunk ≡ sequential identity).
+//!
+//! 2. **Synthetic datapath sweep** — the speculative harness driven by
+//!    [`SpecLm`] cost models whose per-forward work is calibrated to
+//!    the repo's own Table 5 MAC designs: the proposed SDR 4×4 draft
+//!    datapath costs ~0.44× the INT16×8 basis MAC (power ratio,
+//!    `hw::cost::table5_designs`), and a batched verify chunk streams
+//!    the weight operand once, so each extra verify row only pays the
+//!    MAC marginal. Sweeping the draft agreement rate maps acceptance
+//!    to throughput; at high acceptance the sweep must show ≥1.3×
+//!    single-stream tok/s over non-speculative decode — the paper-
+//!    hardware shape of the W4A4-vs-W4A8 gap turned into serving
+//!    speed. (The scalar CPU kernels in this repo execute A4 and A8
+//!    MACs at the same speed, so the real-model section reports its
+//!    measured ratio without asserting it.)
+//!
+//! `--smoke` runs a reduced sweep (CI).
+
+use std::sync::Arc;
+
+use qrazor::baselines::QRazor;
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::request::Sampling;
+use qrazor::coordinator::Engine;
+use qrazor::hw::cost::table5_designs;
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::spec::{SpecDecoder, SpecLm, SpecStats};
+use qrazor::util::rng::Rng;
+
+// ---------------------------------------------------------------- real
+
+fn build_pair() -> (Arc<QuantModel>, Arc<QuantModel>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, 3);
+    let mut rng = Rng::new(4);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..32).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let target = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a8kv4(16)), &cal));
+    let draft = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal));
+    (target, draft)
+}
+
+/// One greedy request through an engine; returns (stream, tok/s,
+/// acceptance, rollbacks).
+fn single_stream(mut engine: Engine, max_new: usize) -> (Vec<u32>, f64, f64, u64) {
+    let prompt: Vec<u32> = vec![5, 9, 2, 7, 1, 4, 8, 3];
+    engine.submit(prompt, max_new, Sampling::Greedy);
+    let t0 = std::time::Instant::now();
+    let done = engine.run_to_completion();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(done.len(), 1);
+    let s = &engine.metrics.spec;
+    (done[0].tokens.clone(), max_new as f64 / dt, s.acceptance(), s.rejected)
+}
+
+// ----------------------------------------------------------- synthetic
+
+/// Deterministic "true" next token at a position.
+fn true_next(seed: u64, pos: usize) -> u32 {
+    let mut x = seed ^ (pos as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 27;
+    (x % SYNTH_VOCAB as u64) as u32
+}
+
+const SYNTH_VOCAB: u32 = 64;
+
+/// Real arithmetic work standing in for one unit of datapath cost.
+fn burn(units: usize) -> f32 {
+    let mut acc = 0.1f32;
+    for i in 0..units * 64 {
+        acc = acc.mul_add(0.999_99, (i as f32) * 1e-9);
+    }
+    std::hint::black_box(acc)
+}
+
+/// A cost-model language model: deterministic greedy choices, tunable
+/// per-forward work, and (for the draft role) a tunable agreement rate
+/// with the target's choices.
+struct SynthLm {
+    tokens: usize,
+    seed: u64,
+    /// Work units per single-token forward.
+    token_work: usize,
+    /// Fixed units per chunk (weight stream + dispatch) + marginal
+    /// units per chunk row (MACs only).
+    chunk_fixed: usize,
+    chunk_row: usize,
+    /// Percentage of positions where this model's argmax equals the
+    /// true next token (the target runs at 100).
+    agree_pct: u64,
+    /// Deterministic cost-model units burned so far — what the CI
+    /// speedup gate asserts on (wall clock is reported, not gated).
+    units: u64,
+}
+
+impl SynthLm {
+    fn new(seed: u64, token_work: usize, chunk_fixed: usize, chunk_row: usize, agree: u64) -> Self {
+        SynthLm { tokens: 0, seed, token_work, chunk_fixed, chunk_row, agree_pct: agree, units: 0 }
+    }
+
+    fn choice(&self, pos: usize) -> u32 {
+        let t = true_next(self.seed, pos);
+        let h = true_next(self.seed ^ 0xA5A5_A5A5, pos) as u64 * 97 % 100;
+        if h < self.agree_pct {
+            t
+        } else {
+            (t + 1) % SYNTH_VOCAB
+        }
+    }
+
+    fn one_hot(&self, tok: u32) -> Vec<f32> {
+        let mut v = vec![0f32; SYNTH_VOCAB as usize];
+        v[tok as usize] = 1.0;
+        v
+    }
+}
+
+impl SpecLm for SynthLm {
+    fn cached_tokens(&self) -> usize {
+        self.tokens
+    }
+    fn forward_token(&mut self, _token: u32, pos: usize) -> Vec<f32> {
+        assert_eq!(pos, self.tokens, "synthetic cache out of sync");
+        self.units += self.token_work as u64;
+        let _ = burn(self.token_work);
+        self.tokens += 1;
+        self.one_hot(self.choice(pos))
+    }
+    fn forward_chunk(&mut self, tokens: &[u32], start_pos: usize) -> Vec<Vec<f32>> {
+        assert_eq!(start_pos, self.tokens, "synthetic cache out of sync");
+        let work = self.chunk_fixed + tokens.len() * self.chunk_row;
+        self.units += work as u64;
+        let _ = burn(work);
+        self.tokens += tokens.len();
+        (0..tokens.len()).map(|i| self.one_hot(self.choice(start_pos + i))).collect()
+    }
+    fn truncate(&mut self, tokens: usize) {
+        self.tokens = self.tokens.min(tokens);
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (real_new, synth_new) = if smoke { (12usize, 400usize) } else { (48, 2000) };
+
+    // ---- section 1: real models -------------------------------------
+    println!("=== speculative decode, real models (nano, draft W4A4KV4 -> verify W4A8KV4) ===");
+    println!(
+        "{:<26} {:>4} {:>10} {:>10} {:>10}",
+        "config", "k", "tok/s", "accept", "rollbacks"
+    );
+    let (target, draft) = build_pair();
+    let (want, base_tps, _, _) = single_stream(
+        Engine::new(
+            Arc::clone(&target),
+            ServeConfig { max_batch: 1, max_new_tokens: real_new, ..Default::default() },
+        ),
+        real_new,
+    );
+    println!("{:<26} {:>4} {:>10.1} {:>10} {:>10}", "plain (no draft)", "-", base_tps, "-", "-");
+    for k in [0usize, 2, 4] {
+        let engine = Engine::with_draft(
+            Arc::clone(&target),
+            Some(Arc::clone(&draft)),
+            ServeConfig { max_batch: 1, max_new_tokens: real_new, spec_k: k, ..Default::default() },
+        );
+        let (got, tps, accept, rollbacks) = single_stream(engine, real_new);
+        assert_eq!(got, want, "k={k}: speculative stream diverged from plain decode");
+        println!(
+            "{:<26} {:>4} {:>10.1} {:>9.0}% {:>10}",
+            "spec (W4A4 draft)", k, tps, accept * 100.0, rollbacks
+        );
+    }
+    // draft == target: acceptance is exactly 1.0 by the chunk identity
+    let engine = Engine::with_draft(
+        Arc::clone(&target),
+        Some(Arc::clone(&target)),
+        ServeConfig { max_batch: 1, max_new_tokens: real_new, spec_k: 4, ..Default::default() },
+    );
+    let (got, tps, accept, rollbacks) = single_stream(engine, real_new);
+    assert_eq!(got, want, "self-draft stream diverged");
+    assert!(
+        (accept - 1.0).abs() < 1e-12,
+        "draft==target must accept every proposal, got {accept}"
+    );
+    println!(
+        "{:<26} {:>4} {:>10.1} {:>9.0}% {:>10}",
+        "spec (self-draft)", 4, tps, accept * 100.0, rollbacks
+    );
+
+    // ---- section 2: synthetic Table-5 datapath sweep ----------------
+    // Datapath cost ratio from the repo's own unit-gate MAC models:
+    // the proposed SDR 4x4 draft unit vs the INT16x8 basis MAC
+    // (power), the W4A4-vs-basis gap of the paper's Table 5. A verify
+    // chunk streams the basis weights once (1.0x a token forward) and
+    // each extra row pays only the MAC marginal (0.1x) — the
+    // memory-bound decode shape batched verification amortizes. Each
+    // model's chunk costs scale with its own datapath ratio.
+    let designs = table5_designs();
+    let draft_ratio = designs[3].power_mw() / designs[1].power_mw(); // ~0.44
+    const TARGET_WORK: usize = 300;
+    let scaled = |r: f64| -> (usize, usize, usize) {
+        let token = (TARGET_WORK as f64 * r).round() as usize;
+        (token, token, token / 10) // (token, chunk_fixed, chunk_row)
+    };
+    let (t_tok, t_fixed, t_row) = scaled(1.0);
+    let (d_tok, d_fixed, d_row) = scaled(draft_ratio);
+    println!(
+        "\n=== synthetic datapath sweep (Table 5 cost model: draft {draft_ratio:.2}x the \
+         basis MAC, verify chunk 1.0x + 0.1x/row) ===",
+    );
+    println!(
+        "{:>4} {:>8} {:>12} {:>12} {:>10} {:>10} {:>9}",
+        "k", "agree%", "base tok/s", "spec tok/s", "wall x", "units x", "accept"
+    );
+    // baseline: target-only decode at the same cost model
+    let base_tps = {
+        let mut t = SynthLm::new(7, t_tok, t_fixed, t_row, 100);
+        let mut tok = 0u32;
+        let t0 = std::time::Instant::now();
+        for pos in 0..synth_new {
+            let logits = t.forward_token(tok, pos);
+            tok = qrazor::tensor::argmax(&logits) as u32;
+        }
+        synth_new as f64 / t0.elapsed().as_secs_f64()
+    };
+    let want: Vec<u32> = {
+        // the deterministic target stream every sweep point must emit
+        let t = SynthLm::new(7, 0, 0, 0, 100);
+        (0..synth_new).map(|pos| t.choice(pos)).collect()
+    };
+    // Returns the *deterministic* unit-cost speedup (baseline datapath
+    // units per token over speculative units per token) — the gated
+    // number; wall clock is printed alongside but never asserted, so
+    // a noisy CI runner cannot flake the job.
+    let run_point = |k: usize, agree: u64| -> f64 {
+        let mut target = SynthLm::new(7, t_tok, t_fixed, t_row, 100);
+        let mut draft = SynthLm::new(7, d_tok, d_fixed, d_row, agree);
+        let mut stats = SpecStats::default();
+        let t0 = std::time::Instant::now();
+        let got =
+            SpecDecoder::new(k).generate(&[0], &mut draft, &mut target, synth_new, &mut stats);
+        let tps = synth_new as f64 / t0.elapsed().as_secs_f64();
+        assert_eq!(got, want, "k={k} agree {agree}%: stream diverged from target-only decode");
+        let base_units = (synth_new * t_tok) as f64;
+        let unit_speedup = base_units / (target.units + draft.units) as f64;
+        println!(
+            "{:>4} {:>8} {:>12.1} {:>12.1} {:>9.2}x {:>9.2}x {:>8.0}%",
+            k,
+            agree,
+            base_tps,
+            tps,
+            tps / base_tps,
+            unit_speedup,
+            stats.acceptance() * 100.0
+        );
+        unit_speedup
+    };
+    // acceptance axis at a fixed lookahead
+    for agree in [50u64, 80, 95, 100] {
+        run_point(4, agree);
+    }
+    // lookahead axis at full acceptance; the deeper points are the
+    // high-acceptance headline (expected ~1.45x at k=6 under this
+    // cost model: 7 tokens for ~0.44·6 + 1.7 ≈ 4.3 token-equivalents)
+    let mut best = 0.0f64;
+    for k in [2usize, 4, 6] {
+        best = best.max(run_point(k, 100));
+    }
+    assert!(
+        best >= 1.3,
+        "high-acceptance speculative decode must reach >=1.3x under the Table-5 cost \
+         model, got {best:.2}x"
+    );
+    println!("spec_decode OK");
+}

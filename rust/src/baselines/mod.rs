@@ -30,8 +30,8 @@ pub mod rtn;
 pub mod smoothquant;
 
 use crate::quant::{Granularity, QuantTensor};
-use crate::sdr::gemm::gemm_razored_packed_f32;
-use crate::sdr::packed::PackedSdrMatrix;
+use crate::sdr::gemm::{gemm_razored_packed_a8_f32, gemm_razored_packed_f32};
+use crate::sdr::packed::{ByteSdrMatrix, PackedSdrMatrix};
 use crate::sdr::razor::{qrazor_fake_quant, qrazor_fake_quant_static, SdrMatrix, SdrSpec};
 use crate::tensor::Tensor;
 
@@ -40,9 +40,11 @@ pub type ActFn = Box<dyn Fn(&Tensor<f32>, Option<f32>) -> Tensor<f32> + Send + S
 
 /// A weight kept in its nibble-packed SDR form plus the activation spec
 /// that pairs with it — the checkpoint-to-logits "native operand" of the
-/// QRazor compute path. The forward razors the activation, packs it, and
-/// runs the decompression-free packed GEMM; the f32 weight matrix is
-/// never touched.
+/// QRazor compute path. The forward razors the activation, packs it
+/// (nibbles for A4, sign-magnitude bytes for A8), and runs the matching
+/// decompression-free packed GEMM; the f32 weight matrix is never
+/// touched. The A4/A8 pairing off one weight store is exactly the
+/// draft/verify fidelity split `crate::spec` decodes with.
 pub struct PackedWeight {
     pub weight: PackedSdrMatrix,
     pub act_spec: SdrSpec,
@@ -56,8 +58,12 @@ impl PackedWeight {
             Some(s) => QuantTensor::quantize_static(x, self.act_spec.base_bits, &[s]),
             None => QuantTensor::quantize(x, self.act_spec.base_bits, Granularity::PerTensor),
         };
-        let a = PackedSdrMatrix::from_matrix(&SdrMatrix::compress(self.act_spec, &q));
-        gemm_razored_packed_f32(&a, &self.weight)
+        let m = SdrMatrix::compress(self.act_spec, &q);
+        match self.act_spec.target_bits {
+            4 => gemm_razored_packed_f32(&PackedSdrMatrix::from_matrix(&m), &self.weight),
+            8 => gemm_razored_packed_a8_f32(&ByteSdrMatrix::from_matrix(&m), &self.weight),
+            other => unreachable!("packed weights pair with 4- or 8-bit activations, got {other}"),
+        }
     }
 }
 
@@ -261,15 +267,17 @@ impl Scheme for QRazor {
         qrazor_fake_quant(w, self.w, Granularity::PerChannel)
     }
 
-    /// QRazor's linear keeps the weight nibble-packed: when both weight
-    /// and activation land on 4-bit SDR (the paper's flagship W4A4
-    /// scenarios), the forward never reconstructs either operand. Other
-    /// scenarios (W4A8's byte-coded A8, the partial-compression
-    /// ablations) stay on the staged reference path.
+    /// QRazor's linear keeps the weight nibble-packed: whenever the
+    /// weight razors to 4-bit SDR and the activation razors to 4- or
+    /// 8-bit SDR (the paper's W4A4 *and* W4A8 scenarios), the forward
+    /// never reconstructs either operand — A4 runs the nibble GEMM, A8
+    /// the byte-coded one. Only the partial-compression ablations whose
+    /// stage 2 is a no-op stay on the staged reference path.
     fn prep_linear(&self, w: &Tensor<f32>, calib: Option<&Tensor<f32>>) -> PreparedLinear {
         let packed = if self.w.target_bits == 4
             && self.w.target_bits < self.w.base_bits
-            && self.a.target_bits == 4
+            && (self.a.target_bits == 4 || self.a.target_bits == 8)
+            && self.a.target_bits < self.a.base_bits
         {
             let q = QuantTensor::quantize(w, self.w.base_bits, Granularity::PerChannel);
             Some(PackedWeight {
@@ -431,12 +439,40 @@ mod tests {
     }
 
     #[test]
-    fn non_w4a4_scenarios_stay_on_staged_path() {
+    fn qrazor_w4a8_linear_is_packed_and_tracks_staged_reference() {
+        // The packed-A8 satellite: W4A8 linears now carry the packed
+        // weight and run the byte-coded GEMM — same integer lattice as
+        // the staged fake-quant path, only f32 summation order differs.
+        let x = activation_matrix(4, 64, 31);
+        let w = weight_matrix(8, 64, 32);
+        let s = QRazor::w4a8(16);
+        let pl = s.prep_linear(&w, None);
+        assert!(pl.packed.is_some(), "W4A8 must carry a packed weight");
+        assert_eq!(pl.packed.as_ref().unwrap().act_spec.target_bits, 8);
+        let packed = pl.forward(&x, None, &s);
+        let staged = pl.forward_with_packed(&x, None, &s, false);
+        let rel = rel_error(&staged, &packed);
+        assert!(rel < 1e-4, "packed A8 diverged from staged: rel {rel}");
+        // with a calibrated static scale too
+        let scale = crate::quant::absmax_scale(x.data(), 16);
+        let packed_s = pl.forward(&x, Some(scale), &s);
+        let staged_s = pl.forward_with_packed(&x, Some(scale), &s, false);
+        let rel_s = rel_error(&staged_s, &packed_s);
+        assert!(rel_s < 1e-4, "static-scale packed A8 diverged: rel {rel_s}");
+        // weight operand stream still halves (the weight store is the
+        // same nibble store W4A4 uses)
+        let (pb, ub) = pl.weight_operand_bytes();
+        let ratio = pb as f64 / ub as f64;
+        assert!((0.45..=0.55).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn non_razored_scenarios_stay_on_staged_path() {
         let w = weight_matrix(4, 32, 3);
-        // A8: byte-coded activations can't nibble-pack
-        assert!(QRazor::w4a8(16).prep_linear(&w, None).packed.is_none());
         // W8 ablation: stage-2 is a no-op for weights
         assert!(QRazor::ablation(8, 4, 16).prep_linear(&w, None).packed.is_none());
+        // A16 ablation: stage-2 is a no-op for activations
+        assert!(QRazor::ablation(4, 16, 16).prep_linear(&w, None).packed.is_none());
         // FP16 baseline obviously has no packed form
         let pl = Fp16.prep_linear(&w, None);
         assert!(pl.packed.is_none());

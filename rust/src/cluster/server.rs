@@ -127,6 +127,20 @@ impl ClusterServer {
     /// model. Each worker's data-parallel decode is capped at
     /// `num_threads() / shards` so shards share the machine.
     pub fn spawn(model: impl Into<Arc<QuantModel>>, cfg: ClusterConfig) -> ClusterServer {
+        ClusterServer::spawn_with_draft(model, None, cfg)
+    }
+
+    /// Spawn with an optional speculative draft model: every shard
+    /// engine gets the same `Arc`-shared drafter and runs
+    /// draft→verify→accept rounds when `cfg.serve.spec_k > 0` — the
+    /// cluster surface of `crate::spec`. Token streams stay identical
+    /// to the non-speculative cluster (greedy identity), so the
+    /// equivalence property keeps holding.
+    pub fn spawn_with_draft(
+        model: impl Into<Arc<QuantModel>>,
+        draft: Option<Arc<QuantModel>>,
+        cfg: ClusterConfig,
+    ) -> ClusterServer {
         assert!(cfg.shards >= 1, "cluster needs at least one shard");
         let model: Arc<QuantModel> = model.into();
         let state = Arc::new(Mutex::new(RouterInner {
@@ -152,6 +166,7 @@ impl ClusterServer {
                 ShardEngine::spawn(
                     i,
                     Arc::clone(&model),
+                    draft.clone(),
                     cfg.serve.clone(),
                     thread_cap,
                     move |idx, occ, done| {
@@ -200,6 +215,18 @@ impl ClusterServer {
     /// Queue a fully-specified request (stop token, custom sampling…).
     /// The caller owns id uniqueness when using this entry point.
     pub fn submit_request(&self, req: Request) -> anyhow::Result<RequestId> {
+        self.submit_inner(req, None)
+    }
+
+    /// Route a fully-specified request to an explicit shard, bypassing
+    /// the placement policy — sticky-session callers and the rebalance
+    /// tests, which need to build skew deterministically.
+    pub fn submit_request_to(&self, req: Request, shard: usize) -> anyhow::Result<RequestId> {
+        anyhow::ensure!(shard < self.workers.len(), "shard {shard} out of range");
+        self.submit_inner(req, Some(shard))
+    }
+
+    fn submit_inner(&self, req: Request, pinned: Option<usize>) -> anyhow::Result<RequestId> {
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
         // Cluster-level admission: a request no shard could ever admit
         // (whole-pool overflow or a prompt beyond the per-step prefill
@@ -222,15 +249,20 @@ impl ClusterServer {
         let need = req.need_tokens();
         let shard = {
             let mut s = self.state.lock().unwrap();
-            let loads: Vec<ShardLoad> = s
-                .shards
-                .iter()
-                .map(|sh| ShardLoad {
-                    committed_tokens: sh.committed_tokens,
-                    capacity_tokens: sh.capacity_tokens,
-                })
-                .collect();
-            let shard = s.placement.choose(&req, &loads);
+            let shard = match pinned {
+                Some(shard) => shard,
+                None => {
+                    let loads: Vec<ShardLoad> = s
+                        .shards
+                        .iter()
+                        .map(|sh| ShardLoad {
+                            committed_tokens: sh.committed_tokens,
+                            capacity_tokens: sh.capacity_tokens,
+                        })
+                        .collect();
+                    s.placement.choose(&req, &loads)
+                }
+            };
             s.shards[shard].committed_tokens += need;
             s.shards[shard].submitted += 1;
             s.inflight.insert(id, (shard, need));
@@ -293,6 +325,127 @@ impl ClusterServer {
             })
             .collect();
         ClusterMetrics { shards, elapsed_s: self.started.elapsed().as_secs_f64() }
+    }
+
+    /// Actuate the rebalance signal: when the live committed-fill skew
+    /// exceeds the configured threshold, drain the overloaded shard's
+    /// *queued* (not yet admitted) requests and requeue them — in
+    /// order, via the batcher's front insert — on the least-loaded
+    /// shard, moving their committed-token accounting with them.
+    /// Returns the number of requests moved (0 when balanced, when the
+    /// overloaded shard had nothing queued, or when a worker is gone).
+    /// Safe to call from any thread at any time: greedy token streams
+    /// are placement-invariant, so a rebalance never changes outputs —
+    /// only where queued work waits.
+    pub fn try_rebalance(&self) -> usize {
+        let Some(signal) = self.snapshot().rebalance(self.cfg.rebalance_threshold) else {
+            return 0;
+        };
+        // Drain without holding the router lock: the worker's reply
+        // path (on_step) takes that lock, so waiting while holding it
+        // would deadlock.
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if !self.workers[signal.from].drain_queued(reply_tx) {
+            return 0;
+        }
+        let Ok(drained) = reply_rx.recv() else { return 0 };
+        if drained.is_empty() {
+            return 0;
+        }
+        // Move only enough queued need to close ~half the fill gap:
+        // handing over the whole queue would mirror the skew onto the
+        // target shard and oscillate on the next actuation instead of
+        // converging. Always move at least one request.
+        let capacity = self.cfg.serve.kv_pool_tokens.max(1);
+        let budget = ((signal.skew * capacity as f64) / 2.0).ceil() as usize;
+        let mut to_move: Vec<Request> = Vec::new();
+        let mut keep: Vec<Request> = Vec::new();
+        let mut moved_need = 0usize;
+        for r in drained {
+            if to_move.is_empty() || moved_need < budget {
+                moved_need += r.need_tokens();
+                to_move.push(r);
+            } else {
+                keep.push(r);
+            }
+        }
+        {
+            // While the drained requests sit in our hands no completion
+            // can arrive for them, so the accounting move is race-free.
+            let mut s = self.state.lock().unwrap();
+            for r in &to_move {
+                let need = r.need_tokens();
+                if let Some(entry) = s.inflight.get_mut(&r.id) {
+                    entry.0 = signal.to;
+                }
+                let from = &mut s.shards[signal.from];
+                from.committed_tokens = from.committed_tokens.saturating_sub(need);
+                from.submitted = from.submitted.saturating_sub(1);
+                let to = &mut s.shards[signal.to];
+                to.committed_tokens += need;
+                to.submitted += 1;
+            }
+        }
+        // Push in reverse so the first-drained request lands at the
+        // very front of the target queue: order is preserved.
+        let mut moved = 0usize;
+        let mut failed: Vec<Request> = Vec::new();
+        for r in to_move.into_iter().rev() {
+            match self.workers[signal.to].submit_front(r) {
+                Ok(()) => moved += 1,
+                Err(r) => failed.push(r),
+            }
+        }
+        if !failed.is_empty() {
+            // The target worker is gone (a panic — shutdown cannot
+            // race, it consumes self). Undo the accounting move for
+            // the stragglers and hand them back to the shard they came
+            // from so no request is silently dropped.
+            {
+                let mut s = self.state.lock().unwrap();
+                for r in &failed {
+                    let need = r.need_tokens();
+                    if let Some(entry) = s.inflight.get_mut(&r.id) {
+                        entry.0 = signal.from;
+                    }
+                    let to = &mut s.shards[signal.to];
+                    to.committed_tokens = to.committed_tokens.saturating_sub(need);
+                    to.submitted = to.submitted.saturating_sub(1);
+                    let from = &mut s.shards[signal.from];
+                    from.committed_tokens += need;
+                    from.submitted += 1;
+                }
+            }
+            // `failed` is back-first, so straight iteration restores
+            // front-first order on the source queue.
+            for r in failed {
+                if let Err(r) = self.workers[signal.from].submit_front(r) {
+                    // Both workers gone: the cluster is already dead
+                    // (completions channel disconnected); drop the
+                    // phantom accounting so in_flight() stays honest.
+                    let mut s = self.state.lock().unwrap();
+                    if let Some((_, need)) = s.inflight.remove(&r.id) {
+                        let from = &mut s.shards[signal.from];
+                        from.committed_tokens = from.committed_tokens.saturating_sub(need);
+                        from.submitted = from.submitted.saturating_sub(1);
+                    }
+                }
+            }
+        }
+        // Hand the unmoved remainder straight back to its shard, ahead
+        // of any arrivals that landed mid-drain (its accounting never
+        // moved). `keep` is front-first, so push in reverse.
+        for r in keep.into_iter().rev() {
+            if let Err(r) = self.workers[signal.from].submit_front(r) {
+                let mut s = self.state.lock().unwrap();
+                if let Some((_, need)) = s.inflight.remove(&r.id) {
+                    let from = &mut s.shards[signal.from];
+                    from.committed_tokens = from.committed_tokens.saturating_sub(need);
+                    from.submitted = from.submitted.saturating_sub(1);
+                }
+            }
+        }
+        moved
     }
 
     /// Shut down: every shard drains its queue and in-flight work,
@@ -462,6 +615,118 @@ mod tests {
         };
         let got = cluster_streams(&model, &work, cfg);
         assert_eq!(got, want, "backpressured cluster must still match the baseline");
+    }
+
+    #[test]
+    fn rebalance_drains_overloaded_shard_and_converges() {
+        // Skew-then-converge: pin a queue's worth of work to shard 0,
+        // watch the rebalance signal fire, actuate it, and verify the
+        // queued requests moved to shard 1 — with token streams still
+        // identical to the single-engine baseline (greedy decoding is
+        // placement-invariant, rebalanced or not).
+        let model = model(29);
+        let serve = ServeConfig {
+            max_batch: 1,
+            max_new_tokens: 8,
+            kv_pool_tokens: 64,
+            ..Default::default()
+        };
+        let work: Vec<Vec<u32>> = (0..10).map(|i| vec![1 + i as u32, 2, 3, 4]).collect();
+        let want: BTreeMap<u64, Vec<u32>> = {
+            let mut engine = Engine::new(Arc::clone(&model), serve.clone());
+            for p in &work {
+                engine.submit(p.clone(), 8, Sampling::Greedy);
+            }
+            engine.run_to_completion().into_iter().map(|r| (r.id.0, r.tokens)).collect()
+        };
+        let cluster = ClusterServer::spawn(
+            Arc::clone(&model),
+            ClusterConfig { shards: 2, rebalance_threshold: 0.25, serve, ..Default::default() },
+        );
+        for (i, p) in work.iter().enumerate() {
+            let mut req = Request::new(RequestId(i as u64), p.clone(), 8);
+            req.sampling = Sampling::Greedy;
+            cluster.submit_request_to(req, 0).unwrap();
+        }
+        let before = cluster.snapshot();
+        let skew_before = before.occupancy_skew();
+        assert!(
+            before.rebalance(0.25).is_some(),
+            "pinned load must trip the signal (skew {skew_before:.2})"
+        );
+        let moved = cluster.try_rebalance();
+        assert!(moved > 0, "queued requests must move off the overloaded shard");
+        let after = cluster.snapshot();
+        assert!(
+            after.occupancy_skew() <= skew_before,
+            "skew must not grow: {skew_before:.2} -> {:.2}",
+            after.occupancy_skew()
+        );
+        assert!(
+            after.shards[0].fill < before.shards[0].fill,
+            "the drained shard must shed committed load"
+        );
+        let report = cluster.shutdown();
+        assert_eq!(report.total_completed(), 10, "every request still completes");
+        assert!(
+            report.shards[1].metrics.requests_completed > 0,
+            "the target shard must pick up moved work"
+        );
+        let got: BTreeMap<u64, Vec<u32>> =
+            report.unclaimed.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+        assert_eq!(got, want, "rebalanced streams must match the baseline");
+    }
+
+    #[test]
+    fn balanced_cluster_rebalance_is_a_noop() {
+        let model = model(30);
+        let cluster = ClusterServer::spawn(
+            Arc::clone(&model),
+            ClusterConfig { shards: 2, ..Default::default() },
+        );
+        assert_eq!(cluster.try_rebalance(), 0, "nothing to move on an idle cluster");
+        let report = cluster.shutdown();
+        assert_eq!(report.total_completed(), 0);
+    }
+
+    #[test]
+    fn speculative_cluster_matches_baseline_streams() {
+        // The --spec axis end to end: every shard drafts on the packed
+        // W4A4 model and verifies on the W4A8 basis; cluster streams
+        // stay identical to a plain single-engine baseline.
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 31);
+        let mut rng = Rng::new(32);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let target = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a8kv4(16)), &cal));
+        let draft = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal));
+        let work = workload(15, 8, cfg.vocab as u64);
+        let want = baseline(&target, &work);
+        let cluster = ClusterServer::spawn_with_draft(
+            Arc::clone(&target),
+            Some(Arc::clone(&draft)),
+            ClusterConfig {
+                shards: 2,
+                serve: ServeConfig { max_batch: 4, spec_k: 3, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        for (prompt, max_new) in &work {
+            cluster.submit(prompt.clone(), *max_new, Sampling::Greedy).unwrap();
+        }
+        let report = cluster.shutdown();
+        assert_eq!(report.total_completed() as usize, work.len());
+        let spec_rounds: u64 = report.shards.iter().map(|s| s.metrics.spec.steps).sum();
+        assert!(spec_rounds > 0, "shards must actually speculate");
+        let got: BTreeMap<u64, Vec<u32>> =
+            report.unclaimed.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+        assert_eq!(got, want, "speculative cluster must match the plain baseline");
+        for s in &report.shards {
+            assert_eq!(s.final_occupancy.bytes, 0, "shard {} verify pool not drained", s.index);
+        }
     }
 
     #[test]

@@ -36,14 +36,17 @@ pub struct ShardEngine {
 }
 
 impl ShardEngine {
-    /// Spawn a worker thread owning `Engine::new(model, config)`.
-    /// `on_step` runs on the worker after every scheduling step with
-    /// the shard index, a fresh byte-exact pool occupancy, and that
-    /// step's completed responses — the cluster router uses it to
-    /// publish load and forward completions.
+    /// Spawn a worker thread owning `Engine::with_draft(model, draft,
+    /// config)` — `draft` is the optional speculative drafter, shared
+    /// `Arc`-style like the target weights. `on_step` runs on the
+    /// worker after every scheduling step with the shard index, a
+    /// fresh byte-exact pool occupancy, and that step's completed
+    /// responses — the cluster router uses it to publish load and
+    /// forward completions.
     pub fn spawn(
         index: usize,
         model: Arc<QuantModel>,
+        draft: Option<Arc<QuantModel>>,
         config: ServeConfig,
         thread_cap: usize,
         mut on_step: impl FnMut(usize, PoolOccupancy, Vec<Response>) + Send + 'static,
@@ -53,9 +56,10 @@ impl ShardEngine {
             .name(format!("qrazor-shard-{index}"))
             .spawn(move || {
                 with_thread_cap(thread_cap, move || {
-                    let mut engine = drive(Engine::new(model, config), rx, |e, done| {
-                        on_step(index, StepLoop::occupancy(e), done)
-                    });
+                    let mut engine =
+                        drive(Engine::with_draft(model, draft, config), rx, |e, done| {
+                            on_step(index, StepLoop::occupancy(e), done)
+                        });
                     ShardReport {
                         index,
                         metrics: std::mem::take(&mut engine.metrics),
@@ -71,6 +75,23 @@ impl ShardEngine {
     /// the worker is gone.
     pub fn submit(&self, req: Request) -> bool {
         self.tx.send(LoopMsg::Submit(req)).is_ok()
+    }
+
+    /// Requeue a drained request at the *front* of this shard's queue
+    /// (the rebalance hand-back). A gone worker hands the request back
+    /// so the caller can reroute it instead of losing it.
+    pub fn submit_front(&self, req: Request) -> Result<(), Request> {
+        self.tx.send(LoopMsg::SubmitFront(req)).map_err(|e| match e.0 {
+            LoopMsg::SubmitFront(r) => r,
+            _ => unreachable!("send returns the message it was given"),
+        })
+    }
+
+    /// Ask the worker to hand over every queued (not yet admitted)
+    /// request through `reply` — the rebalance drain. Returns false if
+    /// the worker is gone (no reply will arrive).
+    pub fn drain_queued(&self, reply: mpsc::Sender<Vec<Request>>) -> bool {
+        self.tx.send(LoopMsg::Drain(reply)).is_ok()
     }
 
     /// Ask the worker to finish in-flight work and exit. Non-blocking;
@@ -134,6 +155,7 @@ mod tests {
         let shard = ShardEngine::spawn(
             3,
             model(),
+            None,
             ServeConfig { max_new_tokens: 4, ..Default::default() },
             2,
             move |idx, occ, rs| {
@@ -158,8 +180,10 @@ mod tests {
     #[test]
     fn two_shards_share_one_model_arc() {
         let m = model();
-        let a = ShardEngine::spawn(0, Arc::clone(&m), ServeConfig::default(), 1, |_, _, _| {});
-        let b = ShardEngine::spawn(1, Arc::clone(&m), ServeConfig::default(), 1, |_, _, _| {});
+        let a =
+            ShardEngine::spawn(0, Arc::clone(&m), None, ServeConfig::default(), 1, |_, _, _| {});
+        let b =
+            ShardEngine::spawn(1, Arc::clone(&m), None, ServeConfig::default(), 1, |_, _, _| {});
         assert!(a.submit(Request::new(RequestId(0), vec![4, 5], 3)));
         assert!(b.submit(Request::new(RequestId(1), vec![6, 7], 3)));
         let ra = a.join();

@@ -149,6 +149,9 @@ pub struct ServeConfig {
     pub kv_pool_tokens: usize,
     /// SDR group size for the compressed KV pool.
     pub kv_group: usize,
+    /// Speculative lookahead: draft tokens per round when the engine
+    /// carries a draft model (0 = plain one-token-per-step decode).
+    pub spec_k: usize,
 }
 
 impl Default for ServeConfig {
@@ -159,6 +162,7 @@ impl Default for ServeConfig {
             max_step_tokens: 512,
             kv_pool_tokens: 16_384,
             kv_group: 16,
+            spec_k: 0,
         }
     }
 }

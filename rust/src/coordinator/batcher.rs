@@ -53,6 +53,13 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Take every queued (not yet admitted) request, front first — the
+    /// rebalance drain: a cluster router moves these to another
+    /// shard's queue via its [`Batcher::push_front`].
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
     /// Total pool tokens (prompt + generation budget) the queued
     /// requests will need — queue-depth introspection for operators
     /// and the planned rebalance actuation (see ROADMAP).
@@ -242,6 +249,21 @@ mod tests {
         let admitted = b.admit(0, |_| true);
         assert_eq!(admitted[0].id, RequestId(9));
         assert_eq!(admitted[1].id, RequestId(0));
+    }
+
+    #[test]
+    fn drain_all_empties_front_first() {
+        let mut b = Batcher::new(Policy::Fcfs, 4, 1000);
+        b.push(req(0, 4, 4));
+        b.push(req(1, 4, 4));
+        b.push_front(req(2, 4, 4));
+        let drained = b.drain_all();
+        assert_eq!(
+            drained.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![RequestId(2), RequestId(0), RequestId(1)]
+        );
+        assert!(b.is_empty());
+        assert_eq!(b.queued_need_tokens(), 0);
     }
 
     #[test]

@@ -203,6 +203,38 @@ mod tests {
     }
 
     #[test]
+    fn pool_accounting_survives_speculate_reject_truncate() {
+        // The speculative rollback contract at the pool level: rows
+        // appended for rejected lookahead tokens release their packed
+        // bytes exactly, cycle after cycle.
+        let m = model();
+        let mut pool = KvPool::new(100, 16);
+        assert!(pool.admit(RequestId(1), 30, &m));
+        let mut cache = pool.take(RequestId(1));
+        for pos in 0..4 {
+            m.forward_token(1, pos, &mut cache);
+        }
+        let committed = cache.bytes();
+        for cycle in 0..3 {
+            // speculate 3 rows, reject them all
+            for pos in 4..7 {
+                m.forward_token(2, pos, &mut cache);
+            }
+            assert!(cache.bytes() > committed, "cycle {cycle}: speculation must add bytes");
+            cache.truncate(4);
+            assert_eq!(cache.bytes(), committed, "cycle {cycle}: rollback must be byte-exact");
+            assert_eq!(cache.tokens(), 4);
+        }
+        pool.put_back(RequestId(1), cache);
+        assert_eq!(pool.bytes(), committed);
+        let occ = pool.occupancy();
+        assert_eq!(occ.bytes, committed);
+        assert_eq!(occ.reserved_tokens, 30, "truncation never touches reservations");
+        pool.release(RequestId(1));
+        assert_eq!(pool.bytes(), 0);
+    }
+
+    #[test]
     fn release_unknown_is_noop() {
         let mut pool = KvPool::new(10, 16);
         pool.release(RequestId(99));

@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use crate::spec::SpecStats;
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
 
@@ -22,6 +23,10 @@ pub struct Metrics {
     /// have occupied at the same instant — the packed-vs-unpacked
     /// traffic claim the serving bench reports.
     pub kv_bytes_unpacked_peak: usize,
+    /// Speculative decoding accounting (draft rounds, acceptance,
+    /// rollbacks) merged over every request; all-zero when the engine
+    /// runs without a draft model.
+    pub spec: SpecStats,
 }
 
 impl Default for Metrics {
@@ -37,6 +42,7 @@ impl Default for Metrics {
             latency: Percentiles::default(),
             kv_bytes_peak: 0,
             kv_bytes_unpacked_peak: 0,
+            spec: SpecStats::default(),
         }
     }
 }
@@ -71,8 +77,13 @@ impl Metrics {
         self.kv_bytes_unpacked_peak = self.kv_bytes_unpacked_peak.max(unpacked);
     }
 
+    /// Merge one request's speculative round into the totals.
+    pub fn observe_spec(&mut self, stats: &SpecStats) {
+        self.spec.merge(stats);
+    }
+
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests: {}/{} done | tokens: {} prompt + {} generated | \
              {:.1} tok/s | steps: {} | ttft p50 {:.1}ms p99 {:.1}ms | \
              latency p50 {:.1}ms | kv peak {} KiB",
@@ -86,7 +97,16 @@ impl Metrics {
             self.ttft.pct(99.0) * 1e3,
             self.latency.pct(50.0) * 1e3,
             self.kv_bytes_peak / 1024,
-        )
+        );
+        if self.spec.steps > 0 {
+            s.push_str(&format!(
+                " | spec: {} rounds, {:.0}% accepted, {} rolled back",
+                self.spec.steps,
+                self.spec.acceptance() * 100.0,
+                self.spec.rejected,
+            ));
+        }
+        s
     }
 
     pub fn to_json(&self) -> Json {
@@ -101,6 +121,11 @@ impl Metrics {
             ("latency_p50_ms", Json::from(self.latency.pct(50.0) * 1e3)),
             ("kv_bytes_peak", Json::from(self.kv_bytes_peak)),
             ("kv_bytes_unpacked_peak", Json::from(self.kv_bytes_unpacked_peak)),
+            ("spec_rounds", Json::from(self.spec.steps as usize)),
+            ("spec_drafted", Json::from(self.spec.drafted as usize)),
+            ("spec_accepted", Json::from(self.spec.accepted as usize)),
+            ("spec_rejected", Json::from(self.spec.rejected as usize)),
+            ("spec_acceptance", Json::from(self.spec.acceptance())),
         ])
     }
 }
@@ -126,7 +151,11 @@ mod tests {
         let s = m.render();
         assert!(s.contains("2/3 done"), "{s}");
         assert!(s.contains("kv peak 2 KiB"), "{s}");
+        assert!(!s.contains("spec:"), "no spec line without spec rounds: {s}");
         assert!(m.tokens_per_s() > 0.0);
+        m.observe_spec(&SpecStats { steps: 2, drafted: 8, accepted: 6, rejected: 2 });
+        let s = m.render();
+        assert!(s.contains("spec: 2 rounds, 75% accepted, 2 rolled back"), "{s}");
     }
 
     #[test]

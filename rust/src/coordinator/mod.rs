@@ -10,11 +10,16 @@
 //!   [`kv::PoolOccupancy`] reporting — the deployment surface of the
 //!   paper's KV4 claim (a 4-bit pool holds ~3.7× the tokens of an
 //!   FP16 one at equal memory).
-//! * [`scheduler`] — the step loop: admit → prefill → decode-batch →
-//!   retire, sequences decoded in parallel. The loop is factored as
-//!   the [`scheduler::StepLoop`] trait plus the [`scheduler::drive`]
+//! * [`scheduler`] — the step loop: admit → chunked prefill →
+//!   decode-batch → retire, sequences decoded in parallel. With a
+//!   draft model attached (`ServeConfig::spec_k`), greedy sequences
+//!   decode in speculative draft→verify→accept rounds
+//!   ([`crate::spec`]) committing up to `spec_k + 1` tokens per step,
+//!   token-identical to plain decode. The loop is factored as the
+//!   [`scheduler::StepLoop`] trait plus the [`scheduler::drive`]
 //!   worker function, shared verbatim by the single-engine server and
-//!   every cluster shard.
+//!   every cluster shard (including the rebalance drain/requeue
+//!   messages).
 //! * [`server`] — a threaded front-end over one engine: submit
 //!   requests from any thread, poll or block for completions.
 //! * [`metrics`] — throughput/latency accounting rendered by the CLI

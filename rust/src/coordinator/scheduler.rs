@@ -26,6 +26,7 @@ use crate::coordinator::kv::{KvPool, PoolOccupancy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{FinishReason, Request, RequestId, Response, Sampling};
 use crate::model::quantized::{DecodeCache, QuantModel};
+use crate::spec::{QuantLm, SpecDecoder, SpecStats};
 use crate::tensor::argmax;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
@@ -51,6 +52,15 @@ pub struct Engine {
     pub model: Arc<QuantModel>,
     pub config: ServeConfig,
     pub metrics: Metrics,
+    /// Low-fidelity drafter for speculative decoding: the same weights
+    /// razored to the packed W4A4 form. With `config.spec_k > 0`,
+    /// greedy requests decode in draft→verify→accept rounds
+    /// ([`crate::spec`]) — up to `spec_k + 1` tokens per step — and the
+    /// committed stream stays token-identical to plain decode.
+    draft: Option<Arc<QuantModel>>,
+    /// Decode caches for the draft model, admitted/released in
+    /// lockstep with the verify pool (same token accounting).
+    draft_pool: KvPool,
     batcher: Batcher,
     pool: KvPool,
     active: BTreeMap<RequestId, Active>,
@@ -60,10 +70,23 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model: impl Into<Arc<QuantModel>>, config: ServeConfig) -> Engine {
+        Engine::with_draft(model, None, config)
+    }
+
+    /// Engine with a speculative draft model attached. The draft is
+    /// only exercised when `config.spec_k > 0` and a request decodes
+    /// greedily; sampling requests fall back to plain decode.
+    pub fn with_draft(
+        model: impl Into<Arc<QuantModel>>,
+        draft: Option<Arc<QuantModel>>,
+        config: ServeConfig,
+    ) -> Engine {
         let model = model.into();
         Engine {
             batcher: Batcher::new(Policy::Fcfs, config.max_batch, config.max_step_tokens),
             pool: KvPool::new(config.kv_pool_tokens, config.kv_group),
+            draft_pool: KvPool::new(config.kv_pool_tokens, config.kv_group),
+            draft,
             active: BTreeMap::new(),
             next_id: 0,
             done: Vec::new(),
@@ -71,6 +94,11 @@ impl Engine {
             model,
             config,
         }
+    }
+
+    /// Speculative rounds enabled?
+    fn speculative(&self) -> bool {
+        self.draft.is_some() && self.config.spec_k > 0
     }
 
     pub fn set_policy(&mut self, policy: Policy) {
@@ -132,6 +160,7 @@ impl Engine {
     /// One scheduling quantum. Returns the number of tokens generated.
     pub fn step(&mut self) -> usize {
         self.metrics.scheduler_steps += 1;
+        let spec_on = self.speculative();
         // 1. admit + prefill
         let pool = &mut self.pool;
         let model = &self.model;
@@ -154,14 +183,28 @@ impl Engine {
             let ok = pool.admit(req.id, req.need_tokens(), model);
             debug_assert!(ok, "batcher admitted beyond pool capacity");
             let mut cache = pool.take(req.id);
-            // prefill: run all prompt tokens except the last; the last
-            // becomes the first decode input.
+            // prefill: one packed chunk over all prompt tokens except
+            // the last (which becomes the first decode input) — the
+            // multi-query attention path, bit-identical to the old
+            // token loop.
             let prompt = &req.prompt;
             assert!(!prompt.is_empty(), "empty prompt");
-            for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
-                model.forward_token(tok, pos, &mut cache);
+            if prompt.len() > 1 {
+                model.forward_chunk(&prompt[..prompt.len() - 1], 0, &mut cache);
             }
             pool.put_back(req.id, cache);
+            // speculative requests also prefill a draft cache, admitted
+            // in lockstep with the verify reservation
+            if spec_on && matches!(req.sampling, Sampling::Greedy) {
+                let dm = self.draft.as_ref().unwrap();
+                let dok = self.draft_pool.admit(req.id, req.need_tokens(), dm);
+                debug_assert!(dok, "draft pool diverged from verify pool");
+                let mut dcache = self.draft_pool.take(req.id);
+                if prompt.len() > 1 {
+                    dm.forward_chunk(&prompt[..prompt.len() - 1], 0, &mut dcache);
+                }
+                self.draft_pool.put_back(req.id, dcache);
+            }
             let next_token = *prompt.last().unwrap();
             let pos = prompt.len() - 1;
             self.active.insert(
@@ -170,50 +213,120 @@ impl Engine {
             );
         }
 
-        // 2. decode one token per active sequence, in parallel
+        // 2. decode: one quantum per active sequence, in parallel — a
+        // single token, or a speculative draft→verify→accept round
+        // (committing up to spec_k + 1 tokens) when a draft model is
+        // attached and the request decodes greedily.
         let ids: Vec<RequestId> = self.active.keys().copied().collect();
         if ids.is_empty() {
             return 0;
         }
-        let mut work: Vec<(RequestId, u32, usize, DecodeCache)> = ids
+        enum Job {
+            Plain { tok: u32, pos: usize, cache: DecodeCache },
+            Spec { seq: Vec<u32>, k: usize, verify: DecodeCache, draft: DecodeCache },
+        }
+        enum Done {
+            Plain { logits: Vec<f32>, cache: DecodeCache },
+            Spec { toks: Vec<u32>, verify: DecodeCache, draft: DecodeCache, stats: SpecStats },
+        }
+        let jobs: Vec<Job> = ids
             .iter()
             .map(|&id| {
                 let a = &self.active[&id];
-                (id, a.next_token, a.pos, self.pool.take(id))
+                if spec_on && matches!(a.req.sampling, Sampling::Greedy) {
+                    // seq = prompt ++ generated; its last element is
+                    // the next token to feed
+                    let mut seq = a.req.prompt.clone();
+                    seq.extend_from_slice(&a.generated);
+                    // Clamp lookahead to the remaining budget: a round
+                    // commits at most k + 1 tokens, so drafting past
+                    // `remaining - 1` would only burn forwards on
+                    // tokens the commit loop discards — and transiently
+                    // hold cache rows beyond the pool reservation.
+                    let remaining =
+                        a.req.max_new_tokens.saturating_sub(a.generated.len());
+                    let k = self.config.spec_k.min(remaining.saturating_sub(1));
+                    Job::Spec {
+                        seq,
+                        k,
+                        verify: self.pool.take(id),
+                        draft: self.draft_pool.take(id),
+                    }
+                } else {
+                    Job::Plain { tok: a.next_token, pos: a.pos, cache: self.pool.take(id) }
+                }
             })
             .collect();
         let model = &self.model;
-        let results: Vec<(Vec<f32>, DecodeCache)> = {
-            let inputs: Vec<(u32, usize, DecodeCache)> = work
-                .drain(..)
-                .map(|(_, t, p, c)| (t, p, c))
-                .collect();
+        let draft_model = self.draft.clone();
+        let results: Vec<Done> = {
             // move caches into a mutex-free parallel map via indices
-            let cells: Vec<std::sync::Mutex<Option<(u32, usize, DecodeCache)>>> =
-                inputs.into_iter().map(|x| std::sync::Mutex::new(Some(x))).collect();
+            let cells: Vec<std::sync::Mutex<Option<Job>>> =
+                jobs.into_iter().map(|x| std::sync::Mutex::new(Some(x))).collect();
             parallel_map(cells.len(), |i| {
-                let (tok, pos, mut cache) = cells[i].lock().unwrap().take().unwrap();
-                let logits = model.forward_token(tok, pos, &mut cache);
-                (logits, cache)
+                match cells[i].lock().unwrap().take().unwrap() {
+                    Job::Plain { tok, pos, mut cache } => {
+                        let logits = model.forward_token(tok, pos, &mut cache);
+                        Done::Plain { logits, cache }
+                    }
+                    Job::Spec { seq, k, verify, draft } => {
+                        let dm = draft_model.as_ref().expect("spec job without draft model");
+                        let mut t = QuantLm::from_parts(Arc::clone(model), verify);
+                        let mut d = QuantLm::from_parts(Arc::clone(dm), draft);
+                        let mut stats = SpecStats::default();
+                        let toks = SpecDecoder::new(k).step(&seq, &mut d, &mut t, &mut stats);
+                        Done::Spec { toks, verify: t.into_cache(), draft: d.into_cache(), stats }
+                    }
+                }
             })
         };
 
         let mut generated = 0usize;
-        for (id, (logits, cache)) in ids.iter().zip(results) {
-            self.pool.put_back(*id, cache);
+        for (id, done) in ids.iter().zip(results) {
+            let committed: Vec<u32> = match done {
+                Done::Plain { logits, cache } => {
+                    self.pool.put_back(*id, cache);
+                    let a = &self.active[id];
+                    vec![sample(&logits, &a.req.sampling, a.pos as u64)]
+                }
+                Done::Spec { toks, verify, draft, stats } => {
+                    self.pool.put_back(*id, verify);
+                    self.draft_pool.put_back(*id, draft);
+                    self.metrics.observe_spec(&stats);
+                    toks
+                }
+            };
             let a = self.active.get_mut(id).unwrap();
-            let tok = sample(&logits, &a.req.sampling, a.pos as u64);
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
-            a.generated.push(tok);
-            a.next_token = tok;
-            a.pos += 1;
-            generated += 1;
+            // Commit tokens up to the request's budget and stop token —
+            // a speculative round can overshoot both; the cut stream is
+            // exactly what one-token-per-step decode would have emitted
+            // (the retire pass below then ends the sequence, releasing
+            // any over-appended cache rows with it).
+            for tok in committed {
+                if a.generated.len() >= a.req.max_new_tokens {
+                    break;
+                }
+                a.generated.push(tok);
+                generated += 1;
+                if a.req.stop_token == Some(tok) {
+                    break;
+                }
+            }
+            // A zero-budget request commits nothing and retires below
+            // with an empty stream; there is no next token to advance.
+            if let Some(&last) = a.generated.last() {
+                a.next_token = last;
+                a.pos = a.req.prompt.len() + a.generated.len() - 1;
+            }
         }
         self.metrics.generated_tokens += generated as u64;
-        self.metrics
-            .observe_kv_traffic(self.pool.bytes(), self.pool.unpacked_bytes());
+        self.metrics.observe_kv_traffic(
+            self.pool.bytes() + self.draft_pool.bytes(),
+            self.pool.unpacked_bytes() + self.draft_pool.unpacked_bytes(),
+        );
 
         // 3. retire finished sequences
         let finished: Vec<RequestId> = self
@@ -228,6 +341,7 @@ impl Engine {
         for id in finished {
             let a = self.active.remove(&id).unwrap();
             self.pool.release(id);
+            self.draft_pool.release(id); // no-op without a draft cache
             let now = Instant::now();
             let ttft = a
                 .first_token_at
@@ -268,15 +382,39 @@ impl Engine {
         out
     }
 
+    /// Bytes held by every live decode cache — the verify pool plus
+    /// the speculative draft pool (0 without a draft model).
     pub fn kv_bytes(&self) -> usize {
-        self.pool.bytes()
+        self.pool.bytes() + self.draft_pool.bytes()
     }
 
-    /// Byte-exact occupancy of this engine's KV pool — the per-shard
-    /// signal the cluster metrics aggregate (exposed on the worker
-    /// contract as [`StepLoop::occupancy`]).
+    /// Byte-exact occupancy of this engine's *verify* KV pool — the
+    /// per-shard signal the cluster metrics aggregate (exposed on the
+    /// worker contract as [`StepLoop::occupancy`]); the draft pool
+    /// mirrors its reservations and is reported via
+    /// [`Engine::kv_bytes`].
     pub fn pool_occupancy(&self) -> PoolOccupancy {
         self.pool.occupancy()
+    }
+
+    /// Take every queued (not yet admitted) request, front first — the
+    /// cluster rebalance drain. The submit-time counters move with the
+    /// requests: whichever shard requeues them counts them instead.
+    pub fn drain_queued(&mut self) -> Vec<Request> {
+        let drained = self.batcher.drain_all();
+        self.metrics.requests_submitted -= drained.len() as u64;
+        self.metrics.prompt_tokens -=
+            drained.iter().map(|r| r.prompt.len() as u64).sum::<u64>();
+        drained
+    }
+
+    /// Requeue a drained request ahead of existing queued work (it must
+    /// not line up behind arrivals younger than it).
+    pub fn requeue_front(&mut self, req: Request) {
+        self.next_id = self.next_id.max(req.id.0 + 1);
+        self.metrics.requests_submitted += 1;
+        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        self.batcher.push_front(req);
     }
 }
 
@@ -295,6 +433,16 @@ pub trait StepLoop: Send {
     fn take_completed(&mut self) -> Vec<Response>;
     /// Byte-exact KV-pool occupancy snapshot.
     fn occupancy(&self) -> PoolOccupancy;
+    /// Take every queued (not yet admitted) request, front first — the
+    /// rebalance drain. Loops without a visible queue return nothing.
+    fn drain_queued(&mut self) -> Vec<Request> {
+        Vec::new()
+    }
+    /// Requeue a drained request ahead of existing queued work.
+    /// Defaults to a plain submit for loops without a front insert.
+    fn requeue_front(&mut self, req: Request) {
+        self.submit_request(req);
+    }
 }
 
 impl StepLoop for Engine {
@@ -313,11 +461,23 @@ impl StepLoop for Engine {
     fn occupancy(&self) -> PoolOccupancy {
         Engine::pool_occupancy(self)
     }
+    fn drain_queued(&mut self) -> Vec<Request> {
+        Engine::drain_queued(self)
+    }
+    fn requeue_front(&mut self, req: Request) {
+        Engine::requeue_front(self, req)
+    }
 }
 
 /// Control messages for a [`drive`]n worker.
 pub enum LoopMsg {
     Submit(Request),
+    /// Requeue ahead of existing queued work (a rebalance hand-back
+    /// must not line up behind younger arrivals).
+    SubmitFront(Request),
+    /// Hand every queued (not yet admitted) request to the sender —
+    /// the rebalance drain.
+    Drain(mpsc::Sender<Vec<Request>>),
     Shutdown,
 }
 
@@ -359,6 +519,14 @@ pub fn drive<L: StepLoop>(
             Some(LoopMsg::Submit(req)) => {
                 l.submit_request(req);
                 continue; // keep draining submissions first
+            }
+            Some(LoopMsg::SubmitFront(req)) => {
+                l.requeue_front(req);
+                continue;
+            }
+            Some(LoopMsg::Drain(reply)) => {
+                let _ = reply.send(l.drain_queued());
+                continue;
             }
             Some(LoopMsg::Shutdown) => {
                 while !l.is_idle() {
@@ -577,6 +745,139 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].finish, FinishReason::Error);
         assert!(only_err.is_idle());
+    }
+
+    fn spec_pair(seed: u64) -> (Arc<QuantModel>, Arc<QuantModel>) {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, seed);
+        let mut rng = Rng::new(seed + 1);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let target = Arc::new(crate::model::quantized::QuantModel::build(
+            &w,
+            Box::new(QRazor::w4a8kv4(16)),
+            &cal,
+        ));
+        let draft = Arc::new(crate::model::quantized::QuantModel::build(
+            &w,
+            Box::new(QRazor::w4a4kv4(16)),
+            &cal,
+        ));
+        (target, draft)
+    }
+
+    fn mixed_workload(e: &mut Engine, vocab: u64) {
+        let mut rng = Rng::new(33);
+        for i in 0..6u64 {
+            let len = 2 + rng.index(6);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+            let mut req = Request::new(RequestId(i), prompt, 3 + rng.index(6));
+            if i == 2 {
+                req.stop_token = Some(7);
+            }
+            e.submit_request(req);
+        }
+    }
+
+    #[test]
+    fn engine_speculative_matches_plain_engine_streams() {
+        // The serving-level acceptance property: a speculative engine
+        // (draft on packed W4A4, verify on the W4A8 basis, both from
+        // the same weights + calibration) emits token streams and
+        // finish reasons identical to the plain engine — across
+        // lookahead depths, stop tokens, and max_new truncation, under
+        // continuous batching.
+        let (target, draft) = spec_pair(9);
+        let vocab = target.config.vocab as u64;
+        let mut plain =
+            Engine::new(Arc::clone(&target), ServeConfig { max_batch: 3, ..Default::default() });
+        mixed_workload(&mut plain, vocab);
+        let mut want = plain.run_to_completion();
+        want.sort_by_key(|r| r.id);
+        for k in [1usize, 3, 5] {
+            let mut spec = Engine::with_draft(
+                Arc::clone(&target),
+                Some(Arc::clone(&draft)),
+                ServeConfig { max_batch: 3, spec_k: k, ..Default::default() },
+            );
+            mixed_workload(&mut spec, vocab);
+            let mut got = spec.run_to_completion();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), want.len(), "k={k}");
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.tokens, b.tokens, "k={k} stream diverged for {:?}", a.id);
+                assert_eq!(a.finish, b.finish, "k={k} finish reason for {:?}", a.id);
+            }
+            let s = &spec.metrics.spec;
+            assert!(s.steps > 0, "k={k}: speculative rounds must run");
+            assert_eq!(s.drafted, s.accepted + s.rejected, "k={k}");
+            assert!(
+                spec.metrics.scheduler_steps <= plain.metrics.scheduler_steps,
+                "k={k}: speculation must not add scheduler steps"
+            );
+            assert_eq!(spec.kv_bytes(), 0, "k={k}: verify + draft pools must drain");
+            assert!(spec.is_idle());
+        }
+    }
+
+    #[test]
+    fn speculative_engine_sampling_requests_fall_back_to_plain_decode() {
+        // Temperature requests on a speculative engine take the plain
+        // one-token path (per-position seeding preserved); greedy
+        // requests in the same batch still speculate. Streams match
+        // the non-speculative engine exactly.
+        let (target, draft) = spec_pair(13);
+        let submit = |e: &mut Engine| {
+            e.submit(vec![2, 3, 4], 5, Sampling::Temperature { temp: 0.8, seed: 5 });
+            e.submit(vec![5, 6], 5, Sampling::Greedy);
+        };
+        let mut plain =
+            Engine::new(Arc::clone(&target), ServeConfig { max_batch: 2, ..Default::default() });
+        submit(&mut plain);
+        let mut want = plain.run_to_completion();
+        want.sort_by_key(|r| r.id);
+        let mut spec = Engine::with_draft(
+            Arc::clone(&target),
+            Some(Arc::clone(&draft)),
+            ServeConfig { max_batch: 2, spec_k: 2, ..Default::default() },
+        );
+        submit(&mut spec);
+        let mut got = spec.run_to_completion();
+        got.sort_by_key(|r| r.id);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "request {:?}", a.id);
+        }
+        assert!(spec.metrics.spec.steps > 0, "the greedy request must speculate");
+        assert_eq!(spec.kv_bytes(), 0);
+    }
+
+    #[test]
+    fn zero_budget_request_completes_empty_without_panicking() {
+        // max_new_tokens == 0 commits nothing: the request must retire
+        // with an empty stream (Length), not unwrap a missing last
+        // token — on the plain path and the speculative path alike.
+        let mut e = engine(Box::new(Fp16));
+        let id = e.submit(vec![1, 2, 3], 0, Sampling::Greedy);
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, id);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert!(e.is_idle());
+        assert_eq!(e.kv_bytes(), 0);
+        let (target, draft) = spec_pair(17);
+        let mut spec = Engine::with_draft(
+            Arc::clone(&target),
+            Some(draft),
+            ServeConfig { spec_k: 3, ..Default::default() },
+        );
+        spec.submit(vec![4, 5], 0, Sampling::Greedy);
+        let out = spec.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(spec.kv_bytes(), 0, "pools drain even for empty streams");
     }
 
     #[test]

@@ -22,9 +22,14 @@
 //!   (`artifacts/*.hlo.txt`), used for training and cross-validation.
 //! * [`coordinator`] — the serving layer: router, continuous batcher,
 //!   prefill/decode scheduler, SDR KV-cache pool, metrics.
+//! * [`spec`] — self-speculative decoding: the packed W4A4 path drafts
+//!   `k` lookahead tokens, one batched W4A8 basis pass verifies all
+//!   `k + 1` positions, rejected rows roll back byte-exactly — greedy
+//!   output is token-identical to target-only decode.
 //! * [`cluster`] — the scale-out layer above the coordinator: sharded
 //!   multi-worker serving with per-shard packed KV pools, placement
-//!   policies, and cluster-wide metrics aggregation.
+//!   policies, rebalance actuation, and cluster-wide metrics
+//!   aggregation.
 //! * [`util`] / [`tensor`] — zero-dependency substrates.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index
@@ -41,5 +46,6 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod sdr;
+pub mod spec;
 pub mod tensor;
 pub mod util;

@@ -38,6 +38,12 @@ fn cli() -> Cli {
             Some("least-reserved"),
             "serve: shard placement (least-reserved|round-robin|hash)",
         )
+        .opt("spec", Some("0"), "serve: speculative lookahead k (0 = off)")
+        .opt(
+            "draft-scheme",
+            Some("w4a4kv4:16"),
+            "serve: draft scheme for speculative decoding (razored form of the target)",
+        )
         .flag("quick", "use the quick evaluation scale")
 }
 
@@ -95,6 +101,21 @@ fn main() -> anyhow::Result<()> {
             let n = args.get_usize("requests")?;
             let max_new = args.get_usize("max-new")?;
             let shards = args.get_usize("shards")?;
+            let spec_k = args.get_usize("spec")?;
+            // Speculative serving: the draft is the razored (packed
+            // W4A4) form of the same weights and calibration — no
+            // second checkpoint involved.
+            let draft = if spec_k > 0 {
+                let draft_scheme = parse_scheme(&args.get_str("draft-scheme")?)?;
+                Some(std::sync::Arc::new(QuantModel::build(
+                    &exp.weights,
+                    draft_scheme,
+                    &exp.cal,
+                )))
+            } else {
+                None
+            };
+            let serve_cfg = ServeConfig { spec_k, ..Default::default() };
             let mut rng = Rng::new(seed);
             let mut prompts = Vec::with_capacity(n);
             for _ in 0..n {
@@ -108,9 +129,10 @@ fn main() -> anyhow::Result<()> {
                 let placement_name = args.get_str("placement")?;
                 let placement = PlacementPolicy::parse(&placement_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown placement '{placement_name}'"))?;
-                let cluster = ClusterServer::spawn(
+                let cluster = ClusterServer::spawn_with_draft(
                     qm,
-                    ClusterConfig { shards, placement, ..Default::default() },
+                    draft,
+                    ClusterConfig { shards, placement, serve: serve_cfg, ..Default::default() },
                 );
                 let t0 = std::time::Instant::now();
                 for prompt in prompts {
@@ -124,7 +146,7 @@ fn main() -> anyhow::Result<()> {
                     report.render()
                 );
             } else {
-                let mut engine = Engine::new(qm, ServeConfig::default());
+                let mut engine = Engine::with_draft(qm, draft, serve_cfg);
                 for prompt in prompts {
                     engine.submit(prompt, max_new, Sampling::Greedy);
                 }

@@ -6,7 +6,7 @@
 //! coordinator's pool (`crate::coordinator::kv`) builds on these.
 
 use crate::sdr::packed::{
-    nibble_at, pack_flags, pack_nibbles, unpack_flags, unpack_nibbles, NIBBLE_SIGNED,
+    decode_nibbles_into, nibble_at, pack_flags, pack_nibbles, unpack_flags, unpack_nibbles,
 };
 use crate::sdr::razor::{compress_group, SdrCode, SdrMatrix, SdrSpec};
 use crate::tensor::Tensor;
@@ -44,6 +44,19 @@ impl FpKvCache {
 
     pub fn bytes(&self) -> usize {
         self.k.iter().chain(&self.v).map(|v| v.len() * 4).sum()
+    }
+
+    /// Drop every cached row past the first `tokens` — the speculative
+    /// rollback: rejected lookahead rows leave the cache as if they
+    /// were never appended.
+    pub fn truncate(&mut self, tokens: usize) {
+        let keep = tokens * self.kv_dim;
+        for plane in self.k.iter_mut().chain(self.v.iter_mut()) {
+            if plane.len() > keep {
+                plane.truncate(keep);
+            }
+        }
+        self.tokens = self.tokens.min(tokens);
     }
 }
 
@@ -121,6 +134,23 @@ impl SdrKvCache {
         plane.rows += 1;
     }
 
+    /// Drop every cached row past the first `tokens` across all layers
+    /// and both planes — the speculative rollback. Rows are packed to a
+    /// byte boundary in both stores (see [`SdrKvCache::code_row_nibbles`]),
+    /// so truncation is byte-exact: after it, [`SdrKvCache::bytes`] is
+    /// identical to a cache that only ever saw the surviving rows.
+    pub fn truncate(&mut self, tokens: usize) {
+        let code_bytes = self.code_row_nibbles() / 2;
+        let flag_bytes = self.flag_row_nibbles() / 2;
+        for plane in self.k_planes.iter_mut().chain(self.v_planes.iter_mut()) {
+            if plane.rows > tokens {
+                plane.nibbles.truncate(tokens * code_bytes);
+                plane.flag_nibbles.truncate(tokens * flag_bytes);
+                plane.rows = tokens;
+            }
+        }
+    }
+
     /// Append one token's K and V rows for a layer.
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         assert_eq!(k_row.len(), self.kv_dim);
@@ -193,78 +223,152 @@ impl SdrKvCache {
         kv_heads: usize,
         head_dim: usize,
     ) -> Vec<f32> {
+        let t_rows = self.k_planes[layer].rows;
+        if t_rows == 0 {
+            assert_eq!(q_row.len(), heads * head_dim, "query length mismatch");
+            return vec![0f32; heads * head_dim];
+        }
+        // One query at the newest position sees every cached row.
+        self.attention_packed_multi(layer, q_row, 1, q_scale, heads, kv_heads, head_dim, t_rows - 1)
+    }
+
+    /// Multi-token decompression-free attention: `n_q` RoPE'd query
+    /// rows (a verify chunk or a prefill block, flattened
+    /// `[n_q · heads · head_dim]`) against the packed K/V planes,
+    /// causally masked — chunk row `i` sits at absolute position
+    /// `start_pos + i` and attends to cached rows `0..=start_pos + i`.
+    /// Every chunk row's K/V must already be appended
+    /// (`tokens(layer) >= start_pos + n_q`).
+    ///
+    /// Bit-identical to calling the single-token kernel once per row at
+    /// that row's horizon: the Q·Kᵀ scores are exact integers either
+    /// way, and the float softmax/context arithmetic runs in the same
+    /// per-row order — batching only amortizes nibble decodes (each K/V
+    /// group is expanded once per cached row instead of once per query
+    /// row), it never reorders a sum. This is the kernel that makes a
+    /// speculative verify pass (`crate::spec`) score exactly what
+    /// sequential decode would have scored, and what lets prefill run
+    /// as one packed chunk.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_packed_multi(
+        &self,
+        layer: usize,
+        q_rows: &[f32],
+        n_q: usize,
+        q_scale: f32,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        start_pos: usize,
+    ) -> Vec<f32> {
         let g = self.spec.group;
         assert!(self.supports_packed_attention(head_dim), "head_dim {head_dim} % group {g} != 0");
         assert_eq!(kv_heads * head_dim, self.kv_dim, "kv geometry mismatch");
-        assert_eq!(q_row.len(), heads * head_dim, "query length mismatch");
+        assert_eq!(q_rows.len(), n_q * heads * head_dim, "query length mismatch");
         assert_eq!(heads % kv_heads, 0, "heads must divide into kv heads");
         let (k_scale, v_scale) = self.scales[layer];
         let kp = &self.k_planes[layer];
         let vp = &self.v_planes[layer];
-        let t_rows = kp.rows;
-        let mut ctx = vec![0f32; heads * head_dim];
-        if t_rows == 0 {
+        let q_dim = heads * head_dim;
+        let mut ctx = vec![0f32; n_q * q_dim];
+        if n_q == 0 {
             return ctx;
         }
+        // horizon of the last chunk row = number of visible cached rows
+        let max_t = start_pos + n_q;
+        assert!(kp.rows >= max_t, "chunk rows not yet appended: {} < {max_t}", kp.rows);
         let q_per_kv = heads / kv_heads;
         let scale_dot = 1.0 / (head_dim as f32).sqrt();
         crate::sdr::gemm::note_packed_traffic(
             kp.nibbles.len() + kp.flag_nibbles.len() + vp.nibbles.len() + vp.flag_nibbles.len(),
         );
-        // Stage-1 + stage-2 on the query row (the same coder the planes
-        // were written with).
-        let (q_codes, q_flags) = self.razor_row(q_row, q_scale);
-        let q_signed: Vec<i16> = q_codes.iter().map(|c| c.signed() as i16).collect();
+        // Stage-1 + stage-2 on every query row (the same coder the
+        // planes were written with; rows razor independently).
+        let qgpr = q_dim / g; // groups per query row
+        let mut q_signed = vec![0i16; n_q * q_dim];
+        let mut q_flags = vec![0u8; n_q * qgpr];
+        for i in 0..n_q {
+            let (codes, flags) = self.razor_row(&q_rows[i * q_dim..(i + 1) * q_dim], q_scale);
+            for (o, c) in q_signed[i * q_dim..(i + 1) * q_dim].iter_mut().zip(&codes) {
+                *o = c.signed() as i16;
+            }
+            q_flags[i * qgpr..(i + 1) * qgpr].copy_from_slice(&flags);
+        }
 
         let gph = head_dim / g; // groups per head slice
         let code_stride = self.code_row_nibbles(); // nibbles per cached row
         let flag_stride = self.flag_row_nibbles();
-        let mut scores = vec![0f32; t_rows];
+        // scores[i * max_t + ti] is live for ti <= start_pos + i; the
+        // rest is never written or read for that row.
+        let mut scores = vec![0f32; n_q * max_t];
+        let mut inv_sums = vec![0f32; n_q];
+        let mut ktile = vec![0i16; head_dim];
+        let mut vtile = vec![0i16; head_dim];
         for h in 0..heads {
             let kvh = h / q_per_kv;
             let q_off = h * head_dim;
             let qg_off = q_off / g;
-            // ---- scores: decompression-free Q·Kᵀ over the head slice
-            for (ti, s) in scores.iter_mut().enumerate() {
-                let k_base = ti * code_stride + kvh * head_dim;
+            // ---- scores: decompression-free Q·Kᵀ over the head slice,
+            // each cached K slice decoded once and reused across every
+            // chunk row whose horizon includes it
+            for ti in 0..max_t {
+                decode_nibbles_into(
+                    &kp.nibbles,
+                    ti * code_stride + kvh * head_dim,
+                    head_dim,
+                    &mut ktile,
+                );
                 let kg_base = ti * flag_stride + kvh * gph;
-                let mut acc: i64 = 0;
-                for p in 0..gph {
-                    let mut part: i32 = 0;
-                    for t in 0..g {
-                        let kc = NIBBLE_SIGNED[nibble_at(&kp.nibbles, k_base + p * g + t) as usize];
-                        part += q_signed[q_off + p * g + t] as i32 * kc as i32;
+                let i_lo = ti.saturating_sub(start_pos);
+                for i in i_lo..n_q {
+                    let qrow = &q_signed[i * q_dim + q_off..i * q_dim + q_off + head_dim];
+                    let mut acc: i64 = 0;
+                    for p in 0..gph {
+                        let mut part: i32 = 0;
+                        for t in 0..g {
+                            part += qrow[p * g + t] as i32 * ktile[p * g + t] as i32;
+                        }
+                        let fq = q_flags[i * qgpr + qg_off + p];
+                        let fk = nibble_at(&kp.flag_nibbles, kg_base + p);
+                        acc += (part as i64) << (fq + fk);
                     }
-                    let fq = q_flags[qg_off + p];
-                    let fk = nibble_at(&kp.flag_nibbles, kg_base + p);
-                    acc += (part as i64) << (fq + fk);
+                    scores[i * max_t + ti] = acc as f32 * q_scale * k_scale * scale_dot;
                 }
-                *s = acc as f32 * q_scale * k_scale * scale_dot;
             }
-            // ---- softmax over cached positions
-            let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-            let mut sum = 0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - max).exp();
-                sum += *s;
+            // ---- softmax per chunk row over that row's horizon
+            for i in 0..n_q {
+                let row = &mut scores[i * max_t..i * max_t + start_pos + i + 1];
+                let max = row.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                let mut sum = 0f32;
+                for s in row.iter_mut() {
+                    *s = (*s - max).exp();
+                    sum += *s;
+                }
+                inv_sums[i] = 1.0 / sum;
             }
-            let inv_sum = 1.0 / sum;
-            // ---- context: p · V straight from value nibbles
-            let out = &mut ctx[h * head_dim..(h + 1) * head_dim];
-            for (ti, &p_raw) in scores.iter().enumerate() {
-                let wgt = p_raw * inv_sum;
-                let v_base = ti * code_stride + kvh * head_dim;
+            // ---- context: p · V straight from value nibbles, each V
+            // slice decoded once; per output element the additions run
+            // in ascending ti order, exactly like the one-row kernel
+            for ti in 0..max_t {
+                decode_nibbles_into(
+                    &vp.nibbles,
+                    ti * code_stride + kvh * head_dim,
+                    head_dim,
+                    &mut vtile,
+                );
                 let vg_base = ti * flag_stride + kvh * gph;
+                let i_lo = ti.saturating_sub(start_pos);
                 for p in 0..gph {
                     let fv = nibble_at(&vp.flag_nibbles, vg_base + p);
                     for t in 0..g {
-                        let vc =
-                            NIBBLE_SIGNED[nibble_at(&vp.nibbles, v_base + p * g + t) as usize];
                         // Same rounding order as reconstruct()·scale so
                         // the packed path is bit-identical to the staged
                         // one, not merely close.
-                        let val = ((vc as i32) << fv) as f32 * v_scale;
-                        out[p * g + t] += wgt * val;
+                        let val = ((vtile[p * g + t] as i32) << fv) as f32 * v_scale;
+                        for i in i_lo..n_q {
+                            let wgt = scores[i * max_t + ti] * inv_sums[i];
+                            ctx[i * q_dim + q_off + p * g + t] += wgt * val;
+                        }
                     }
                 }
             }
@@ -605,6 +709,126 @@ mod tests {
         let cache = SdrKvCache::new(1, 64, SdrSpec::new(8, 4, 16), vec![(0.01, 0.01)]);
         assert!(cache.supports_packed_attention(32));
         assert!(!cache.supports_packed_attention(24));
+    }
+
+    #[test]
+    fn truncate_rolls_back_byte_exactly() {
+        // speculate → reject → truncate: after dropping the rejected
+        // rows, bytes and contents equal a cache that never saw them —
+        // including when rows pad to byte boundaries (odd group counts).
+        for (kv_dim, g) in [(64usize, 16usize), (16, 16), (48, 8)] {
+            let mut rng = Rng::new(71);
+            let spec = SdrSpec::new(8, 4, g);
+            let mut full = SdrKvCache::new(2, kv_dim, spec, vec![(0.02, 0.03); 2]);
+            let mut pruned = SdrKvCache::new(2, kv_dim, spec, vec![(0.02, 0.03); 2]);
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..9)
+                .map(|_| {
+                    (
+                        (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+                        (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+                    )
+                })
+                .collect();
+            for (k, v) in &rows {
+                for l in 0..2 {
+                    full.append(l, k, v);
+                }
+            }
+            for (k, v) in &rows[..5] {
+                for l in 0..2 {
+                    pruned.append(l, k, v);
+                }
+            }
+            full.truncate(5);
+            assert_eq!(full.tokens(0), 5);
+            assert_eq!(full.bytes(), pruned.bytes(), "kv_dim {kv_dim} g{g}");
+            assert_eq!(full.unpacked_bytes(), pruned.unpacked_bytes());
+            for l in 0..2 {
+                assert_eq!(full.k_matrix(l).data(), pruned.k_matrix(l).data());
+                assert_eq!(full.v_matrix(l).data(), pruned.v_matrix(l).data());
+            }
+            // appends after a truncation land exactly where fresh
+            // appends would
+            for (k, v) in &rows[5..7] {
+                for l in 0..2 {
+                    full.append(l, k, v);
+                    pruned.append(l, k, v);
+                }
+            }
+            assert_eq!(full.bytes(), pruned.bytes());
+            assert_eq!(full.k_matrix(1).data(), pruned.k_matrix(1).data());
+            // truncating to the current size or beyond is a no-op
+            let before = full.bytes();
+            full.truncate(7);
+            full.truncate(100);
+            assert_eq!(full.bytes(), before);
+        }
+    }
+
+    #[test]
+    fn fp_cache_truncate_matches_fresh() {
+        let mut rng = Rng::new(5);
+        let mut full = FpKvCache::new(1, 8);
+        let mut fresh = FpKvCache::new(1, 8);
+        let rows: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        for r in &rows {
+            full.append(0, r, r);
+        }
+        for r in &rows[..4] {
+            fresh.append(0, r, r);
+        }
+        full.truncate(4);
+        assert_eq!(full.tokens, 4);
+        assert_eq!(full.bytes(), fresh.bytes());
+        assert_eq!(full.k_matrix(0).data(), fresh.k_matrix(0).data());
+    }
+
+    #[test]
+    fn packed_attention_multi_matches_per_row_kernel() {
+        // The batched kernel must be bit-identical to running the
+        // single-token kernel at every chunk row's own causal horizon
+        // (which is what sequential decode does).
+        let mut rng = Rng::new(19);
+        for (heads, kv_heads, head_dim, g, start_pos, n_q) in [
+            (2usize, 2usize, 32usize, 16usize, 4usize, 3usize),
+            (4, 2, 32, 8, 0, 5), // GQA, chunk from the very start
+            (1, 1, 64, 16, 7, 1), // degenerate single-row chunk
+            (2, 1, 16, 16, 2, 4), // single group per head
+        ] {
+            let kv_dim = kv_heads * head_dim;
+            let spec = SdrSpec::new(8, 4, g);
+            let mut cache = SdrKvCache::new(1, kv_dim, spec, vec![(0.02, 0.03)]);
+            for _ in 0..start_pos + n_q {
+                let k: Vec<f32> =
+                    (0..kv_dim).map(|_| rng.heavy_tailed(0.5, 0.05, 8.0)).collect();
+                let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                cache.append(0, &k, &v);
+            }
+            let q_dim = heads * head_dim;
+            let q: Vec<f32> = (0..n_q * q_dim).map(|_| rng.normal_f32(0.0, 0.7)).collect();
+            let q_scale = 0.015f32;
+            let multi = cache
+                .attention_packed_multi(0, &q, n_q, q_scale, heads, kv_heads, head_dim, start_pos);
+            for i in 0..n_q {
+                // replay row i against a cache truncated to its horizon
+                let mut horizon_cache = cache.clone();
+                horizon_cache.truncate(start_pos + i + 1);
+                let solo = horizon_cache.attention_packed(
+                    0,
+                    &q[i * q_dim..(i + 1) * q_dim],
+                    q_scale,
+                    heads,
+                    kv_heads,
+                    head_dim,
+                );
+                assert_eq!(
+                    &multi[i * q_dim..(i + 1) * q_dim],
+                    solo.as_slice(),
+                    "row {i} (h{heads} kv{kv_heads} hd{head_dim} g{g} p{start_pos})"
+                );
+            }
+        }
     }
 
     #[test]

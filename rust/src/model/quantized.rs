@@ -339,6 +339,17 @@ impl DecodeCache {
             DecodeCache::Sdr(c) => c.unpacked_bytes(),
         }
     }
+
+    /// Drop every cached row past the first `tokens` — the speculative
+    /// rollback. Byte accounting stays exact: afterwards the cache is
+    /// indistinguishable from one that only ever saw the surviving
+    /// rows (rows pack to byte boundaries in the SDR stores).
+    pub fn truncate(&mut self, tokens: usize) {
+        match self {
+            DecodeCache::Fp(c) => c.truncate(tokens),
+            DecodeCache::Sdr(c) => c.truncate(tokens),
+        }
+    }
 }
 
 impl QuantModel {
@@ -371,17 +382,57 @@ impl QuantModel {
 
     /// Incremental decode: run one token at absolute position `pos`,
     /// appending K/V to `cache`, returning the next-token logits.
+    ///
+    /// Exactly the one-row case of [`QuantModel::forward_chunk`] — a
+    /// single forward implementation serves both, so the speculative
+    /// verify identity (chunk ≡ sequential) holds by construction
+    /// rather than by keeping two loop bodies in sync.
     pub fn forward_token(&self, token: u32, pos: usize, cache: &mut DecodeCache) -> Vec<f32> {
+        self.forward_chunk(&[token], pos, cache).into_vec()
+    }
+
+    /// Incremental multi-token decode: run `tokens` at absolute
+    /// positions `start_pos..start_pos + tokens.len()`, appending every
+    /// row's K/V to `cache`, returning logits `[tokens.len(), vocab]`
+    /// (row `i` is the next-token distribution after `tokens[..=i]`).
+    ///
+    /// This is the batched twin of [`QuantModel::forward_token`]: the
+    /// chunk's linears run as one GEMM per projection and attention
+    /// runs once per layer against the packed planes
+    /// ([`crate::model::kvcache::SdrKvCache::attention_packed_multi`]),
+    /// causally masked so chunk row `i` sees cached rows
+    /// `0..=start_pos + i`. With calibrated static scales and group
+    /// boundaries dividing the projection widths (every preset/group
+    /// pairing the serving stack uses), the result — logits *and* the
+    /// appended cache rows — is bit-identical to feeding the tokens one
+    /// at a time: razoring, packed GEMM rows, RoPE, and the packed
+    /// attention are all row-independent. That identity is what lets a
+    /// speculative verify pass (`crate::spec`) score exactly what
+    /// sequential decode would have, and what lets prefill run as one
+    /// chunk instead of a token loop.
+    pub fn forward_chunk(
+        &self,
+        tokens: &[u32],
+        start_pos: usize,
+        cache: &mut DecodeCache,
+    ) -> Tensor<f32> {
         let cfg = &self.config;
         let (d, hd) = (cfg.dim, cfg.head_dim());
+        let t = tokens.len();
+        assert!(t > 0, "empty chunk");
         let abits = 16;
         let kvbits = 8;
         let group = cfg.heads / cfg.kv_heads;
         let scale_dot = 1.0 / (hd as f32).sqrt();
-        let mut x = Tensor::from_vec(&[1, d], self.embed.row(token as usize).to_vec());
-        let mut normed = Tensor::zeros(&[1, d]);
+        let mut x = Tensor::zeros(&[t, d]);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let mut normed = Tensor::zeros(&[t, d]);
         for (li, layer) in self.layers.iter().enumerate() {
-            rmsnorm(x.row(0), &layer.attn_norm, 1e-5, normed.row_mut(0));
+            for i in 0..t {
+                rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
+            }
             let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
             let mut q = layer.wq.forward_with_packed(
                 &normed, s_in,
@@ -398,12 +449,17 @@ impl QuantModel {
                 self.scheme.as_ref(),
                 self.use_packed,
             );
-            apply_rope(&mut q, cfg.heads, hd, pos);
-            apply_rope(&mut k, cfg.kv_heads, hd, pos);
-            // append K/V: the SDR cache quantizes on write (the paper's
-            // online KV compression); FP caches store the scheme's view.
+            apply_rope(&mut q, cfg.heads, hd, start_pos);
+            apply_rope(&mut k, cfg.kv_heads, hd, start_pos);
+            // Append every chunk row before attention: row i's horizon
+            // includes its own K/V and all earlier chunk rows, exactly
+            // as if the rows had arrived one token at a time.
             match cache {
-                DecodeCache::Sdr(c) => c.append(li, k.row(0), v.row(0)),
+                DecodeCache::Sdr(c) => {
+                    for i in 0..t {
+                        c.append(li, k.row(i), v.row(i));
+                    }
+                }
                 DecodeCache::Fp(c) => {
                     let kq = self
                         .scheme
@@ -411,58 +467,69 @@ impl QuantModel {
                     let vq = self
                         .scheme
                         .kv(&v, self.act_scale(&format!("l{li}.v"), kvbits));
-                    c.append(li, kq.row(0), vq.row(0));
+                    for i in 0..t {
+                        c.append(li, kq.row(i), vq.row(i));
+                    }
                 }
             }
             let s_q = self.act_scale(&format!("l{li}.q"), kvbits);
-            // Decompression-free attention when the cache is packed SDR,
-            // the scheme razors queries, and group boundaries respect the
-            // head geometry — scores and context come straight from the
-            // nibble planes, no K/V matrix is reconstructed.
+            // Decompression-free multi-query attention when the cache
+            // is packed SDR (same gate as the single-token path).
             let packed_attn = match (&*cache, self.scheme.sdr_query_spec(), s_q) {
                 (DecodeCache::Sdr(c), Some(_), Some(qs))
                     if self.use_packed && c.supports_packed_attention(hd) =>
                 {
-                    Some(c.attention_packed(li, q.row(0), qs, cfg.heads, cfg.kv_heads, hd))
+                    Some(c.attention_packed_multi(
+                        li,
+                        q.data(),
+                        t,
+                        qs,
+                        cfg.heads,
+                        cfg.kv_heads,
+                        hd,
+                        start_pos,
+                    ))
                 }
                 _ => None,
             };
-            let ctx = if let Some(ctx_row) = packed_attn {
-                Tensor::from_vec(&[1, cfg.heads * hd], ctx_row)
+            let ctx = if let Some(rows) = packed_attn {
+                Tensor::from_vec(&[t, cfg.heads * hd], rows)
             } else {
-                // staged reference path: quantized query (paper Fig. 5:
-                // INT4 Q·Kᵀ) against reconstructed K/V matrices
+                // staged reference path: quantized queries against
+                // reconstructed K/V, each chunk row bounded to its own
+                // causal horizon in the same arithmetic order as the
+                // single-token path
                 let qq = self.scheme.kv(&q, s_q);
                 let (k_all, v_all) = match cache {
                     DecodeCache::Sdr(c) => (c.k_matrix(li), c.v_matrix(li)),
                     DecodeCache::Fp(c) => (c.k_matrix(li), c.v_matrix(li)),
                 };
-                let t = k_all.shape()[0];
-                let mut ctx = Tensor::zeros(&[1, cfg.heads * hd]);
-                for h in 0..cfg.heads {
-                    let kvh = h / group;
-                    let qh = &qq.row(0)[h * hd..(h + 1) * hd];
-                    // scores over all cached positions
-                    let mut scores = Vec::with_capacity(t);
-                    for ti in 0..t {
-                        let krow = &k_all.row(ti)[kvh * hd..(kvh + 1) * hd];
-                        let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
-                        scores.push(dot * scale_dot);
-                    }
-                    // softmax
-                    let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-                    let mut sum = 0f32;
-                    for s in scores.iter_mut() {
-                        *s = (*s - max).exp();
-                        sum += *s;
-                    }
-                    let inv = 1.0 / sum;
-                    let out = &mut ctx.row_mut(0)[h * hd..(h + 1) * hd];
-                    for (ti, &p) in scores.iter().enumerate() {
-                        let vrow = &v_all.row(ti)[kvh * hd..(kvh + 1) * hd];
-                        let w = p * inv;
-                        for (o, &vv) in out.iter_mut().zip(vrow) {
-                            *o += w * vv;
+                let mut ctx = Tensor::zeros(&[t, cfg.heads * hd]);
+                for i in 0..t {
+                    let horizon = start_pos + i + 1;
+                    for h in 0..cfg.heads {
+                        let kvh = h / group;
+                        let qh = &qq.row(i)[h * hd..(h + 1) * hd];
+                        let mut scores = Vec::with_capacity(horizon);
+                        for ti in 0..horizon {
+                            let krow = &k_all.row(ti)[kvh * hd..(kvh + 1) * hd];
+                            let dot: f32 = qh.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                            scores.push(dot * scale_dot);
+                        }
+                        let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                        let mut sum = 0f32;
+                        for s in scores.iter_mut() {
+                            *s = (*s - max).exp();
+                            sum += *s;
+                        }
+                        let inv = 1.0 / sum;
+                        let out = &mut ctx.row_mut(i)[h * hd..(h + 1) * hd];
+                        for (ti, &p) in scores.iter().enumerate() {
+                            let vrow = &v_all.row(ti)[kvh * hd..(kvh + 1) * hd];
+                            let w = p * inv;
+                            for (o, &vv) in out.iter_mut().zip(vrow) {
+                                *o += w * vv;
+                            }
                         }
                     }
                 }
@@ -475,7 +542,9 @@ impl QuantModel {
                 self.use_packed,
             );
             add_assign(&mut x, &attn_out);
-            rmsnorm(x.row(0), &layer.ffn_norm, 1e-5, normed.row_mut(0));
+            for i in 0..t {
+                rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
+            }
             let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
             let gate = layer.w_gate.forward_with_packed(
                 &normed, s_ffn,
@@ -487,7 +556,7 @@ impl QuantModel {
                 self.scheme.as_ref(),
                 self.use_packed,
             );
-            let mut h = Tensor::zeros(&[1, cfg.ffn_hidden]);
+            let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
             for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *o = silu(g) * u;
             }
@@ -499,14 +568,15 @@ impl QuantModel {
             );
             add_assign(&mut x, &ffn_out);
         }
-        rmsnorm(x.row(0), &self.final_norm, 1e-5, normed.row_mut(0));
+        for i in 0..t {
+            rmsnorm(x.row(i), &self.final_norm, 1e-5, normed.row_mut(i));
+        }
         self.lm_head
             .forward_with_packed(
                 &normed, self.act_scale("lm_head_in", abits),
                 self.scheme.as_ref(),
                 self.use_packed,
             )
-            .into_vec()
     }
 }
 
@@ -640,6 +710,84 @@ mod tests {
             _ => unreachable!(),
         };
         assert!((4.2..4.35).contains(&eff), "eff bits {eff}");
+    }
+
+    #[test]
+    fn forward_chunk_matches_sequential_decode_bit_exactly() {
+        // The spec-decoding identity: one chunk pass — batched linears,
+        // multi-query packed attention, all K/V appended up front —
+        // must produce the same logits *and* the same cache bytes as
+        // feeding the tokens one at a time. Exact equality, not a
+        // tolerance: every per-row transform is row-independent.
+        let (w, cal, seqs) = setup();
+        let schemes: Vec<Box<dyn crate::baselines::Scheme>> = vec![
+            Box::new(Fp16),
+            Box::new(QRazor::w4a4kv4(16)),
+            Box::new(QRazor::w4a8kv4(16)),
+        ];
+        for scheme in schemes {
+            let name = scheme.name();
+            let qm = QuantModel::build(&w, scheme, &cal);
+            let tokens = &seqs[0][..7];
+            let mut seq_cache = qm.new_cache(16);
+            let sequential: Vec<Vec<f32>> = tokens
+                .iter()
+                .enumerate()
+                .map(|(pos, &tok)| qm.forward_token(tok, pos, &mut seq_cache))
+                .collect();
+            // one chunk from position 0
+            let mut chunk_cache = qm.new_cache(16);
+            let chunk = qm.forward_chunk(tokens, 0, &mut chunk_cache);
+            for (pos, row) in sequential.iter().enumerate() {
+                assert_eq!(chunk.row(pos), row.as_slice(), "{name}: pos {pos}");
+            }
+            assert_eq!(chunk_cache.bytes(), seq_cache.bytes(), "{name}: cache bytes");
+            assert_eq!(chunk_cache.tokens(), seq_cache.tokens(), "{name}: cache rows");
+            // split chunks (prefill + verify shape: start_pos > 0)
+            let mut split_cache = qm.new_cache(16);
+            let first = qm.forward_chunk(&tokens[..4], 0, &mut split_cache);
+            let second = qm.forward_chunk(&tokens[4..], 4, &mut split_cache);
+            for pos in 0..4 {
+                assert_eq!(first.row(pos), sequential[pos].as_slice(), "{name}: split pos {pos}");
+            }
+            for pos in 4..7 {
+                assert_eq!(
+                    second.row(pos - 4),
+                    sequential[pos].as_slice(),
+                    "{name}: split pos {pos}"
+                );
+            }
+            assert_eq!(split_cache.bytes(), seq_cache.bytes(), "{name}: split cache bytes");
+            // and decode continues identically off either cache
+            let next = tokens[6];
+            let a = qm.forward_token(next, 7, &mut seq_cache);
+            let b = qm.forward_token(next, 7, &mut chunk_cache);
+            assert_eq!(a, b, "{name}: post-chunk decode diverged");
+        }
+    }
+
+    #[test]
+    fn decode_cache_truncate_restores_exact_state() {
+        // speculate → reject → truncate at the DecodeCache level: the
+        // rolled-back cache is byte-identical to one that never saw the
+        // rejected tokens, and decode continues bit-identically.
+        let (w, cal, seqs) = setup();
+        let qm = QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal);
+        let tokens = &seqs[0][..6];
+        let mut clean = qm.new_cache(16);
+        for (pos, &tok) in tokens[..4].iter().enumerate() {
+            qm.forward_token(tok, pos, &mut clean);
+        }
+        let mut spec = qm.new_cache(16);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            qm.forward_token(tok, pos, &mut spec);
+        }
+        spec.truncate(4); // reject the last two speculated rows
+        assert_eq!(spec.bytes(), clean.bytes());
+        assert_eq!(spec.tokens(), 4);
+        let a = qm.forward_token(tokens[4], 4, &mut clean);
+        let b = qm.forward_token(tokens[4], 4, &mut spec);
+        assert_eq!(a, b, "decode after rollback diverged");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::packed::{decode_nibbles_into, nibble_at, PackedSdrMatrix};
+use super::packed::{decode_nibbles_into, nibble_at, ByteSdrMatrix, PackedSdrMatrix};
 use super::razor::SdrMatrix;
 use crate::tensor::Tensor;
 use crate::util::threadpool::parallel_for;
@@ -247,6 +247,84 @@ pub fn gemm_razored_packed(a: &PackedSdrMatrix, w: &PackedSdrMatrix) -> Tensor<i
 /// (per-row activation scales handled, per-channel weight scales).
 pub fn gemm_razored_packed_f32(a: &PackedSdrMatrix, w: &PackedSdrMatrix) -> Tensor<f32> {
     let acc = gemm_razored_packed(a, w);
+    apply_scales_raw(&acc, &a.scales, &w.scales)
+}
+
+/// Decompression-free W4A8 GEMM: **byte-coded** A8 activations
+/// ([`ByteSdrMatrix`], 7 salient bits + sign per code) against the
+/// nibble-packed W4 weight store — the operand pairing of QRazor's
+/// W4A8 scenarios and of a speculative verify pass, which scores draft
+/// tokens at the higher-precision basis without ever reconstructing an
+/// operand. Same loop structure as [`gemm_razored_packed`]: activation
+/// rows decode once per row block through [`super::packed::BYTE_SIGNED`],
+/// weight groups expand into the stack tile once per block, one barrel
+/// shift per group pair. Bit-identical to [`gemm_razored_int`] over the
+/// unpacked twins (property-tested), which keeps the staged and packed
+/// W4A8 paths on one integer lattice.
+pub fn gemm_razored_packed_a8(a: &ByteSdrMatrix, w: &PackedSdrMatrix) -> Tensor<i64> {
+    assert_eq!(a.cols, w.cols, "reduction dims differ: {} vs {}", a.cols, w.cols);
+    assert_eq!(a.spec.group, w.spec.group, "group sizes must align");
+    assert!(
+        a.spec.group <= PACKED_TILE_GROUP,
+        "group {} exceeds the packed stack tile",
+        a.spec.group
+    );
+    let (m, n, k) = (a.rows, w.rows, a.cols);
+    let g = a.spec.group;
+    let gpr = k.div_ceil(g);
+    let mut c: Tensor<i64> = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    note_packed_traffic(a.payload_bytes() + w.payload_bytes());
+    let cptr = SendPtr(c.data_mut().as_mut_ptr());
+    let iblocks = m.div_ceil(PACKED_ROW_BLOCK);
+
+    parallel_for(iblocks, |ib| {
+        let i0 = ib * PACKED_ROW_BLOCK;
+        let rows = PACKED_ROW_BLOCK.min(m - i0);
+        // Decode this block's activation rows once: one LUT hit per
+        // code byte (the A8 operand moves twice the bytes of A4 — the
+        // cost the W4A4 scenario halves).
+        let mut arows = vec![0i16; rows * k];
+        for (o, &b) in arows.iter_mut().zip(&a.codes[i0 * k..(i0 + rows) * k]) {
+            *o = crate::sdr::packed::BYTE_SIGNED[b as usize];
+        }
+        let cblock =
+            unsafe { std::slice::from_raw_parts_mut(cptr.get().add(i0 * n), rows * n) };
+        let mut wtile = [0i16; PACKED_TILE_GROUP];
+        for j in 0..n {
+            let wbase = j * k;
+            let wfbase = j * gpr;
+            let mut accs = [0i64; PACKED_ROW_BLOCK];
+            for p in 0..gpr {
+                let lo = p * g;
+                let glen = g.min(k - lo);
+                decode_nibbles_into(&w.nibbles, wbase + lo, glen, &mut wtile[..glen]);
+                let fw = nibble_at(&w.flag_bytes, wfbase + p);
+                for (r, acc) in accs[..rows].iter_mut().enumerate() {
+                    let arow = &arows[r * k + lo..r * k + lo + glen];
+                    // Group-local narrow MAC: ≤ 127·7·g fits i32 easily.
+                    let mut part: i32 = 0;
+                    for (&x, &y) in arow.iter().zip(&wtile[..glen]) {
+                        part += (x as i32) * (y as i32);
+                    }
+                    let fa = nibble_at(&a.flag_bytes, (i0 + r) * gpr + p);
+                    *acc += (part as i64) << (fa + fw);
+                }
+            }
+            for r in 0..rows {
+                cblock[r * n + j] = accs[r];
+            }
+        }
+    });
+    c
+}
+
+/// Float output of the W4A8 packed GEMM: integer kernel + stage-1
+/// scales, sharing [`apply_scales_raw`] with every other path.
+pub fn gemm_razored_packed_a8_f32(a: &ByteSdrMatrix, w: &PackedSdrMatrix) -> Tensor<f32> {
+    let acc = gemm_razored_packed_a8(a, w);
     apply_scales_raw(&acc, &a.scales, &w.scales)
 }
 
@@ -480,6 +558,57 @@ mod tests {
         assert_eq!(gemm_razored_packed(&pa, &pw).data(), gemm_decompress(&a, &w).data());
         // (−)·(−) must come out positive through the packed sign path
         assert!(gemm_razored_packed(&pa, &pw).data().iter().all(|&v| v > 0));
+    }
+
+    #[test]
+    fn a8_packed_equals_unpacked_small() {
+        let (a, w) = make_pair(3, 5, 32, 8, 8, 21);
+        let (ba, pw) = (
+            crate::sdr::packed::ByteSdrMatrix::from_matrix(&a),
+            crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+        );
+        assert_eq!(gemm_razored_packed_a8(&ba, &pw).data(), gemm_razored_int(&a, &w).data());
+    }
+
+    #[test]
+    fn prop_a8_packed_equals_staged_reference() {
+        // The W4A8 operand satellite: byte-coded activations against
+        // nibble-packed weights must match the unpacked razored GEMM
+        // and the decompress-then-multiply reference bit for bit on
+        // every shape/group — the same lattice the staged fake-quant
+        // path computes on.
+        let gen = PairGen(IntRange { lo: 1, hi: 20 }, IntRange { lo: 1, hi: 70 });
+        let cfg = Config { cases: 40, ..Default::default() };
+        check("a8-packed≡staged", cfg, &gen, |&(mn, k)| {
+            let (m, n, k) = (mn as usize, ((mn as usize * 5) % 37) + 1, k as usize);
+            for g in [4usize, 16, 128] {
+                let (a, w) = make_pair(m, n, k, g, 8, (m * 733 + n * 17 + k) as u64);
+                let (ba, pw) = (
+                    crate::sdr::packed::ByteSdrMatrix::from_matrix(&a),
+                    crate::sdr::packed::PackedSdrMatrix::from_matrix(&w),
+                );
+                let packed = gemm_razored_packed_a8(&ba, &pw);
+                if packed.data() != gemm_razored_int(&a, &w).data()
+                    || packed.data() != gemm_decompress(&a, &w).data()
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn a8_operand_moves_twice_the_a4_bytes() {
+        // The cost asymmetry the speculative draft exploits: the A8
+        // basis operand streams ~2x the code bytes of the razored A4
+        // form of the same activation.
+        let (a4, _) = make_pair(8, 1, 128, 16, 4, 5);
+        let (a8, _) = make_pair(8, 1, 128, 16, 8, 5);
+        let p4 = crate::sdr::packed::PackedSdrMatrix::from_matrix(&a4);
+        let b8 = crate::sdr::packed::ByteSdrMatrix::from_matrix(&a8);
+        let ratio = b8.payload_bytes() as f64 / p4.payload_bytes() as f64;
+        assert!((1.8..=2.1).contains(&ratio), "A8/A4 operand ratio {ratio}");
     }
 
     #[test]

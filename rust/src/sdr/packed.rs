@@ -62,6 +62,21 @@ pub fn decode_nibbles_into(bytes: &[u8], start: usize, n: usize, out: &mut [i16]
     }
 }
 
+/// Signed value of a byte-coded `sign | 7-bit magnitude` code, indexed
+/// by the raw byte — the A8 analog of [`NIBBLE_SIGNED`], consumed by
+/// the W4A8 packed GEMM. Index 128 is "negative zero", which decodes
+/// to 0 like the hardware.
+pub const BYTE_SIGNED: [i16; 256] = {
+    let mut t = [0i16; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mag = (b & 0x7F) as i16;
+        t[b] = if b & 0x80 != 0 { -mag } else { mag };
+        b += 1;
+    }
+    t
+};
+
 /// Nibble `i` of a packed byte stream (low nibble first).
 #[inline(always)]
 pub fn nibble_at(bytes: &[u8], i: usize) -> u8 {
@@ -185,6 +200,77 @@ impl PackedSdrMatrix {
     }
 }
 
+/// At-rest **byte-coded** SDR matrix for the 8-bit-target formats — the
+/// A8 operand of W4A8. One `sign | 7-bit magnitude` byte per code plus
+/// nibble-packed group flags: the same flag store as
+/// [`PackedSdrMatrix`], twice the code bytes (8.5 vs 4.25 effective
+/// bits), consumed directly by
+/// [`crate::sdr::gemm::gemm_razored_packed_a8`] so W4A8 skips the
+/// staged fake-quant path just like W4A4 does.
+#[derive(Clone, Debug)]
+pub struct ByteSdrMatrix {
+    pub spec: SdrSpec,
+    pub rows: usize,
+    pub cols: usize,
+    /// Sign-magnitude code bytes, row-major, one per element.
+    pub codes: Vec<u8>,
+    pub flag_bytes: Vec<u8>,
+    pub scales: Vec<f32>,
+}
+
+impl ByteSdrMatrix {
+    pub fn from_matrix(m: &SdrMatrix) -> ByteSdrMatrix {
+        assert_eq!(m.spec.target_bits, 8, "byte coding is an 8-bit format");
+        let codes = m
+            .codes
+            .iter()
+            .map(|c| {
+                assert!(c.code < 128, "code {} exceeds 7 bits", c.code);
+                ((c.neg as u8) << 7) | c.code
+            })
+            .collect();
+        ByteSdrMatrix {
+            spec: m.spec,
+            rows: m.rows,
+            cols: m.cols,
+            codes,
+            flag_bytes: pack_flags(&m.flags),
+            scales: m.scales.clone(),
+        }
+    }
+
+    pub fn to_matrix(&self) -> SdrMatrix {
+        SdrMatrix {
+            spec: self.spec,
+            rows: self.rows,
+            cols: self.cols,
+            codes: self
+                .codes
+                .iter()
+                .map(|&b| SdrCode { neg: b & 0x80 != 0, code: b & 0x7F })
+                .collect(),
+            flags: unpack_flags(&self.flag_bytes, self.rows * self.cols.div_ceil(self.spec.group)),
+            scales: self.scales.clone(),
+        }
+    }
+
+    /// Groups along each row (flags per row).
+    #[inline]
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.spec.group)
+    }
+
+    /// Total payload bytes (codes + flags), excluding scales.
+    pub fn payload_bytes(&self) -> usize {
+        self.codes.len() + self.flag_bytes.len()
+    }
+
+    /// Measured effective bits per value (≈ 8.5 at g16).
+    pub fn measured_effective_bits(&self) -> f64 {
+        self.payload_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +348,59 @@ mod tests {
         let mut m = random_matrix(2, 16, 8, 1);
         m.spec = SdrSpec::new(16, 8, 8);
         PackedSdrMatrix::from_matrix(&m);
+    }
+
+    fn random_a8_matrix(rows: usize, cols: usize, g: usize, seed: u64) -> SdrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor::zeros(&[rows, cols]);
+        for v in x.data_mut().iter_mut() {
+            *v = rng.heavy_tailed(1.0, 0.02, 30.0);
+        }
+        let q = QuantTensor::quantize(&x, 16, Granularity::PerTensor);
+        SdrMatrix::compress(SdrSpec::new(16, 8, g), &q)
+    }
+
+    #[test]
+    fn byte_signed_lut_decodes_sign_magnitude() {
+        for b in 0u16..256 {
+            let mag = (b & 0x7F) as i16;
+            let want = if b & 0x80 != 0 { -mag } else { mag };
+            assert_eq!(BYTE_SIGNED[b as usize], want, "byte {b}");
+        }
+        assert_eq!(BYTE_SIGNED[128], 0, "negative zero decodes to 0");
+    }
+
+    #[test]
+    fn byte_matrix_roundtrip_lossless() {
+        for (rows, cols, g) in [(4usize, 64usize, 16usize), (3, 37, 8), (1, 1, 4)] {
+            let m = random_a8_matrix(rows, cols, g, (rows * 100 + cols) as u64);
+            let b = ByteSdrMatrix::from_matrix(&m);
+            let back = b.to_matrix();
+            assert_eq!(back.codes, m.codes, "{rows}x{cols} g{g}");
+            assert_eq!(back.flags, m.flags, "{rows}x{cols} g{g}");
+            assert_eq!(back.reconstruct().values, m.reconstruct().values);
+            // every code byte decodes through the LUT to the code's sign
+            for (byte, c) in b.codes.iter().zip(&m.codes) {
+                assert_eq!(BYTE_SIGNED[*byte as usize] as i32, c.signed());
+            }
+        }
+    }
+
+    #[test]
+    fn byte_matrix_effective_bits_about_8_5() {
+        let m = random_a8_matrix(8, 256, 16, 11);
+        let b = ByteSdrMatrix::from_matrix(&m);
+        let eff = b.measured_effective_bits();
+        assert!((8.2..8.6).contains(&eff), "effective bits {eff}");
+        // exactly twice the nibble store's code bytes, same flag bytes
+        assert_eq!(b.codes.len(), 8 * 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "8-bit format")]
+    fn byte_matrix_rejects_4bit_target() {
+        let m = random_matrix(2, 16, 8, 1);
+        ByteSdrMatrix::from_matrix(&m);
     }
 
     #[test]

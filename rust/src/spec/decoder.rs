@@ -1,0 +1,407 @@
+//! The speculative draft→verify→accept loop and its model contract.
+//!
+//! See the module doc of [`crate::spec`] for the algorithm and its
+//! invariants; this file holds the mechanics: [`SpecLm`] (what the loop
+//! needs from a model + decode state), [`QuantLm`] (the real
+//! [`QuantModel`] implementation the engine uses), [`SpecDecoder`]
+//! (the loop itself) and [`SpecStats`] (per-request acceptance
+//! accounting).
+
+use std::sync::Arc;
+
+use crate::model::quantized::{DecodeCache, QuantModel};
+use crate::tensor::argmax;
+
+/// What the speculative loop needs from a language model plus its
+/// incremental decode state. Implementations own their KV cache; the
+/// loop only ever observes row counts, feeds tokens, and rolls back.
+pub trait SpecLm {
+    /// Rows currently held by the decode cache (tokens fed so far).
+    fn cached_tokens(&self) -> usize;
+    /// Feed one token at absolute position `pos`, appending its KV
+    /// row; returns next-token logits.
+    fn forward_token(&mut self, token: u32, pos: usize) -> Vec<f32>;
+    /// Feed `tokens` at positions `start_pos..`, appending every row;
+    /// returns one logits row per fed token. Must equal feeding the
+    /// tokens one at a time (the verify-pass identity).
+    fn forward_chunk(&mut self, tokens: &[u32], start_pos: usize) -> Vec<Vec<f32>>;
+    /// Drop cached rows past the first `tokens` (speculative rollback).
+    fn truncate(&mut self, tokens: usize);
+}
+
+/// A [`QuantModel`] plus its [`DecodeCache`]: the engine-side
+/// [`SpecLm`]. The draft side wraps the packed W4A4 model, the target
+/// side the W4A8 basis model — both built from the same weights and
+/// calibration.
+pub struct QuantLm {
+    pub model: Arc<QuantModel>,
+    cache: DecodeCache,
+}
+
+impl QuantLm {
+    /// Fresh decode state for `model` (SDR-compressed cache when the
+    /// scheme quantizes KV).
+    pub fn new(model: Arc<QuantModel>, kv_group: usize) -> QuantLm {
+        let cache = model.new_cache(kv_group);
+        QuantLm { model, cache }
+    }
+
+    /// Rewrap a cache the caller parked elsewhere (the engine's pools).
+    pub fn from_parts(model: Arc<QuantModel>, cache: DecodeCache) -> QuantLm {
+        QuantLm { model, cache }
+    }
+
+    /// Hand the cache back to its pool.
+    pub fn into_cache(self) -> DecodeCache {
+        self.cache
+    }
+
+    /// Inspect the decode state (tests and byte accounting).
+    pub fn cache(&self) -> &DecodeCache {
+        &self.cache
+    }
+}
+
+impl SpecLm for QuantLm {
+    fn cached_tokens(&self) -> usize {
+        self.cache.tokens()
+    }
+
+    fn forward_token(&mut self, token: u32, pos: usize) -> Vec<f32> {
+        self.model.forward_token(token, pos, &mut self.cache)
+    }
+
+    fn forward_chunk(&mut self, tokens: &[u32], start_pos: usize) -> Vec<Vec<f32>> {
+        let logits = self.model.forward_chunk(tokens, start_pos, &mut self.cache);
+        (0..tokens.len()).map(|i| logits.row(i).to_vec()).collect()
+    }
+
+    fn truncate(&mut self, tokens: usize) {
+        self.cache.truncate(tokens)
+    }
+}
+
+/// Per-request speculative accounting, merged into the serving metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft→verify→accept rounds taken.
+    pub steps: u64,
+    /// Draft tokens proposed.
+    pub drafted: u64,
+    /// Draft tokens the basis verify pass accepted.
+    pub accepted: u64,
+    /// Draft tokens rejected and rolled back (`drafted - accepted`).
+    pub rejected: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens accepted (0 when nothing drafted).
+    pub fn acceptance(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.steps += other.steps;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.rejected += other.rejected;
+    }
+}
+
+/// The speculative loop: `k` cheap draft tokens per round, one batched
+/// basis-precision verify pass, longest greedy-matching prefix kept.
+/// `k = 0` degenerates to plain target-only decode (one verify row,
+/// zero drafts).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecDecoder {
+    /// Lookahead length per round.
+    pub k: usize,
+}
+
+impl SpecDecoder {
+    pub fn new(k: usize) -> SpecDecoder {
+        SpecDecoder { k }
+    }
+
+    /// One draft→verify→accept round. `seq` is every committed token
+    /// (prompt + generated), its last element the next token to feed;
+    /// the target cache must hold exactly `seq.len() - 1` rows, the
+    /// draft cache at most that many (it is caught up here). Returns
+    /// the newly committed tokens — between 1 and `k + 1` of them —
+    /// and leaves both caches truncated to the committed prefix.
+    pub fn step(
+        &self,
+        seq: &[u32],
+        draft: &mut impl SpecLm,
+        target: &mut impl SpecLm,
+        stats: &mut SpecStats,
+    ) -> Vec<u32> {
+        assert!(!seq.is_empty(), "speculative step needs at least one token");
+        let p = seq.len() - 1;
+        debug_assert_eq!(target.cached_tokens(), p, "verify cache out of sync");
+        let next = *seq.last().unwrap();
+        stats.steps += 1;
+
+        // ---- draft phase: k greedy proposals on the razored path
+        let mut chunk = Vec::with_capacity(self.k + 1);
+        chunk.push(next);
+        if self.k > 0 {
+            // Catch the draft cache up (it lags one row after a fully
+            // accepted round, arbitrarily after a sampling fallback).
+            let d = draft.cached_tokens();
+            debug_assert!(d <= p, "draft cache ahead of the committed prefix");
+            if d < p {
+                let _ = draft.forward_chunk(&seq[d..p], d);
+            }
+            let mut tok = next;
+            for i in 0..self.k {
+                let logits = draft.forward_token(tok, p + i);
+                tok = argmax(&logits) as u32;
+                chunk.push(tok);
+            }
+            stats.drafted += self.k as u64;
+        }
+
+        // ---- verify: one batched chunk at the basis precision
+        let rows = target.forward_chunk(&chunk, p);
+        debug_assert_eq!(rows.len(), chunk.len());
+        let choices: Vec<u32> = rows.iter().map(|r| argmax(r) as u32).collect();
+
+        // ---- accept the longest greedy-matching prefix + the bonus
+        // or correction token the verify pass already paid for
+        let mut a = 0usize;
+        while a < self.k && chunk[a + 1] == choices[a] {
+            a += 1;
+        }
+        let mut out: Vec<u32> = chunk[1..=a].to_vec();
+        out.push(choices[a]);
+        stats.accepted += a as u64;
+        stats.rejected += (self.k - a) as u64;
+
+        // ---- rollback: rejected rows leave both caches byte-exactly
+        let committed = p + a + 1;
+        target.truncate(committed);
+        if self.k > 0 {
+            let keep = draft.cached_tokens().min(committed);
+            draft.truncate(keep);
+        }
+        out
+    }
+
+    /// Greedy-decode `max_new` tokens speculatively, committing rounds
+    /// until the budget is reached (the tail round is trimmed). `seq`
+    /// is the full prompt; returns the generated tokens. Used by the
+    /// property tests and the bench; the serving engine drives
+    /// [`SpecDecoder::step`] itself so rounds interleave with
+    /// continuous batching.
+    pub fn generate(
+        &self,
+        prompt: &[u32],
+        draft: &mut impl SpecLm,
+        target: &mut impl SpecLm,
+        max_new: usize,
+        stats: &mut SpecStats,
+    ) -> Vec<u32> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        // prefill the verify cache (all but the last prompt token)
+        if prompt.len() > 1 {
+            let _ = target.forward_chunk(&prompt[..prompt.len() - 1], 0);
+        }
+        let mut seq = prompt.to_vec();
+        let mut out = Vec::with_capacity(max_new);
+        while out.len() < max_new {
+            let new = self.step(&seq, draft, target, stats);
+            for tok in new {
+                if out.len() == max_new {
+                    // trim the over-committed tail: the caches keep the
+                    // extra rows, but the stream stops at the budget
+                    break;
+                }
+                out.push(tok);
+                seq.push(tok);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::QRazor;
+    use crate::config::ModelConfig;
+    use crate::model::quantized::{calibrate, QuantModel};
+    use crate::model::ModelWeights;
+    use crate::util::rng::Rng;
+
+    fn models(seed: u64) -> (Arc<QuantModel>, Arc<QuantModel>) {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, seed);
+        let mut rng = Rng::new(seed + 1);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let target = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a8kv4(16)), &cal));
+        let draft = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal));
+        (target, draft)
+    }
+
+    /// Target-only greedy decode through the plain token loop — the
+    /// stream every speculative configuration must reproduce.
+    fn greedy_baseline(model: &Arc<QuantModel>, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let mut cache = model.new_cache(16);
+        for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+            model.forward_token(tok, pos, &mut cache);
+        }
+        let mut out = Vec::new();
+        let mut tok = *prompt.last().unwrap();
+        let mut pos = prompt.len() - 1;
+        while out.len() < max_new {
+            let logits = model.forward_token(tok, pos, &mut cache);
+            tok = argmax(&logits) as u32;
+            pos += 1;
+            out.push(tok);
+        }
+        out
+    }
+
+    /// A deliberately wrong drafter: forwards the target model but
+    /// argmin-flips the logits, so its greedy proposal disagrees with
+    /// the target's choice at (essentially) every position — the
+    /// all-rejected edge case.
+    struct AntiLm(QuantLm);
+
+    impl SpecLm for AntiLm {
+        fn cached_tokens(&self) -> usize {
+            self.0.cached_tokens()
+        }
+        fn forward_token(&mut self, token: u32, pos: usize) -> Vec<f32> {
+            self.0.forward_token(token, pos).iter().map(|&v| -v).collect()
+        }
+        fn forward_chunk(&mut self, tokens: &[u32], start_pos: usize) -> Vec<Vec<f32>> {
+            self.0
+                .forward_chunk(tokens, start_pos)
+                .into_iter()
+                .map(|r| r.iter().map(|&v| -v).collect())
+                .collect()
+        }
+        fn truncate(&mut self, tokens: usize) {
+            self.0.truncate(tokens)
+        }
+    }
+
+    #[test]
+    fn speculative_greedy_equals_target_only_greedy() {
+        // The acceptance-criterion identity on a fixed case, for every
+        // lookahead depth including k = 0.
+        let (target, draft) = models(41);
+        let prompt = vec![3u32, 7, 1, 9, 4];
+        let want = greedy_baseline(&target, &prompt, 12);
+        for k in 0..=4usize {
+            let mut t = QuantLm::new(Arc::clone(&target), 16);
+            let mut d = QuantLm::new(Arc::clone(&draft), 16);
+            let mut stats = SpecStats::default();
+            let got = SpecDecoder::new(k).generate(&prompt, &mut d, &mut t, 12, &mut stats);
+            assert_eq!(got, want, "k={k} diverged from target-only greedy");
+            assert_eq!(stats.drafted, stats.accepted + stats.rejected, "k={k}");
+            if k == 0 {
+                assert_eq!(stats.drafted, 0);
+                assert_eq!(stats.steps, 12, "k=0 is one token per round");
+            } else {
+                assert!(stats.steps <= 12, "k={k}: speculation must not add rounds");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_speculative_greedy_equals_target_only_greedy() {
+        // Random models, prompts, and k: the speculative stream is
+        // always token-identical to target-only greedy decode.
+        use crate::util::quickcheck::{check, Config, IntRange};
+        let (target, draft) = models(43);
+        let vocab = target.config.vocab as u64;
+        let cfg = Config { cases: 8, ..Default::default() };
+        check("spec≡greedy", cfg, &IntRange { lo: 1, hi: 1_000_000 }, |&seed| {
+            let mut rng = Rng::new(seed as u64);
+            let len = 2 + rng.index(8);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+            let k = rng.index(5); // 0..=4
+            let max_new = 3 + rng.index(10);
+            let want = greedy_baseline(&target, &prompt, max_new);
+            let mut t = QuantLm::new(Arc::clone(&target), 16);
+            let mut d = QuantLm::new(Arc::clone(&draft), 16);
+            let mut stats = SpecStats::default();
+            let got =
+                SpecDecoder::new(k).generate(&prompt, &mut d, &mut t, max_new, &mut stats);
+            got == want && stats.drafted == stats.accepted + stats.rejected
+        });
+    }
+
+    #[test]
+    fn all_rejected_drafts_still_produce_the_target_stream() {
+        // Adversarial draft: every proposal disagrees, every round
+        // rolls all k drafts back — output must still be the exact
+        // target stream, one committed token per round.
+        let (target, _) = models(47);
+        let prompt = vec![5u32, 2, 8];
+        let want = greedy_baseline(&target, &prompt, 8);
+        let mut t = QuantLm::new(Arc::clone(&target), 16);
+        let mut d = AntiLm(QuantLm::new(Arc::clone(&target), 16));
+        let mut stats = SpecStats::default();
+        let got = SpecDecoder::new(3).generate(&prompt, &mut d, &mut t, 8, &mut stats);
+        assert_eq!(got, want);
+        assert_eq!(stats.accepted, 0, "anti-draft must never be accepted");
+        assert_eq!(stats.rejected, stats.drafted);
+        assert_eq!(stats.steps, 8, "one committed token per all-rejected round");
+        assert!((stats.acceptance() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn self_drafting_accepts_everything() {
+        // Draft == target: the verify pass agrees with every proposal
+        // (the chunk ≡ sequential identity), so each round commits
+        // k + 1 tokens and acceptance is exactly 1.
+        let (target, _) = models(53);
+        let prompt = vec![1u32, 6, 2, 9];
+        let want = greedy_baseline(&target, &prompt, 12);
+        let mut t = QuantLm::new(Arc::clone(&target), 16);
+        let mut d = QuantLm::new(Arc::clone(&target), 16);
+        let mut stats = SpecStats::default();
+        let got = SpecDecoder::new(3).generate(&prompt, &mut d, &mut t, 12, &mut stats);
+        assert_eq!(got, want);
+        assert_eq!(stats.rejected, 0);
+        assert!((stats.acceptance() - 1.0).abs() < 1e-12);
+        assert_eq!(stats.steps, 3, "12 tokens in rounds of k+1 = 4");
+    }
+
+    #[test]
+    fn verify_cache_stays_byte_exact_across_rounds() {
+        // After every round the verify cache must hold exactly the
+        // committed rows — compare against a fresh cache fed the same
+        // prefix (speculate→reject→truncate leaves no residue).
+        let (target, draft) = models(59);
+        let prompt = vec![4u32, 4, 7];
+        let mut t = QuantLm::new(Arc::clone(&target), 16);
+        let mut d = QuantLm::new(Arc::clone(&draft), 16);
+        let mut stats = SpecStats::default();
+        let _ = t.forward_chunk(&prompt[..2], 0);
+        let mut seq = prompt.clone();
+        let dec = SpecDecoder::new(2);
+        for _ in 0..4 {
+            let new = dec.step(&seq, &mut d, &mut t, &mut stats);
+            seq.extend(new);
+            assert_eq!(t.cached_tokens(), seq.len() - 1, "verify rows != committed prefix");
+            // a cache that only ever saw the committed prefix agrees
+            // byte for byte
+            let mut fresh = QuantLm::new(Arc::clone(&target), 16);
+            let _ = fresh.forward_chunk(&seq[..seq.len() - 1], 0);
+            assert_eq!(fresh.cache().bytes(), t.cache().bytes(), "byte accounting drifted");
+        }
+        assert!(stats.steps == 4);
+    }
+}

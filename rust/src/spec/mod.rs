@@ -1,0 +1,59 @@
+//! Self-speculative decoding: **draft on the razored 4-bit form,
+//! verify on the 8-bit basis** — the serving subsystem that turns
+//! QRazor's two-stage design into lookahead throughput.
+//!
+//! QRazor derives every tensor at two fidelities from the *same* data:
+//! the stage-1 absmax basis (W8/A16/KV8 integers, served as W4A8) and
+//! the stage-2 SDR razored form (packed W4A4KV4). That is exactly the
+//! draft/target pair speculative decoding needs — no second model, no
+//! training: the cheap packed path proposes `k` lookahead tokens, one
+//! batched pass at the basis precision scores all `k + 1` positions,
+//! and the longest greedy-matching prefix is kept.
+//!
+//! # Algorithm (one [`SpecDecoder::step`])
+//!
+//! With `seq` the committed tokens (prompt + generated; the last one is
+//! the next to feed) and `P = seq.len() - 1` rows in the verify cache:
+//!
+//! 1. **Draft** — feed `seq.last()` then each proposal through the
+//!    draft model's [`SpecLm::forward_token`], producing `d₁ … d_k`
+//!    by greedy argmax. (First, the draft cache is caught up to `P`
+//!    rows if it lags — see rollback below.)
+//! 2. **Verify** — one [`SpecLm::forward_chunk`] of
+//!    `[seq.last(), d₁ … d_k]` on the target model: `k + 1` logit rows
+//!    in a single batched pass (batched linears + multi-query packed
+//!    attention), bit-identical to feeding the tokens one at a time.
+//!    Row `i`'s argmax `g_i` is what target-only greedy decode would
+//!    have emitted after `seq ++ d₁..dᵢ`.
+//! 3. **Accept** — keep the longest prefix with `d_{i+1} == g_i`
+//!    (`a` tokens), then commit `g_a` as well: the correction when
+//!    `a < k`, the bonus token when every draft was accepted. Each
+//!    step therefore commits between 1 and `k + 1` tokens.
+//! 4. **Rollback** — both caches are truncated to the committed
+//!    prefix (`P + a + 1` rows); rejected rows leave the packed pools
+//!    byte-exactly ([`crate::model::quantized::DecodeCache::truncate`]).
+//!    After a fully-accepted step the draft cache legitimately lags
+//!    one row (it never fed `d_k`); the next step's catch-up feeds it.
+//!
+//! # Invariants
+//!
+//! * **Greedy identity**: the committed stream is token-for-token
+//!   identical to target-only greedy decode, for every `k` (including
+//!   `k = 0`, which *is* target-only decode) and every draft — even an
+//!   adversarial one. Property-tested in [`decoder`].
+//! * **Cache exactness**: after every step the verify cache holds
+//!   exactly the committed rows; byte accounting survives any number
+//!   of speculate→reject→truncate cycles.
+//! * Acceptance, rejection, and step counts are reported per request
+//!   through [`SpecStats`] and surface in the serving metrics.
+//!
+//! [`decoder::SpecLm`] abstracts the two models so the engine's
+//! [`decoder::QuantLm`] (an `Arc<QuantModel>` + its `DecodeCache`) and
+//! the bench's synthetic cost models drive the same loop. The serving
+//! integration lives in [`crate::coordinator::scheduler`] (`spec_k` in
+//! `ServeConfig`, draft pool, per-step stats) and fans out across
+//! [`crate::cluster`] shards unchanged.
+
+pub mod decoder;
+
+pub use decoder::{QuantLm, SpecDecoder, SpecLm, SpecStats};
