@@ -27,11 +27,37 @@
 use qrazor::baselines::QRazor;
 use qrazor::cluster::{ClusterConfig, ClusterServer};
 use qrazor::config::ServeConfig;
-use qrazor::coordinator::request::Sampling;
-use qrazor::coordinator::Engine;
+use qrazor::coordinator::{collect_sessions, Sampling, ServeApi, Server};
 use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
 use qrazor::model::quantized::QuantModel;
 use qrazor::util::rng::Rng;
+
+/// Serve one batch of prompts through any [`ServeApi`] front-end —
+/// the example's serving phase is written once and runs against the
+/// single-engine server or the sharded cluster unchanged. Returns
+/// (completed, elapsed seconds, generated tokens, streamed TTFT p50 ms).
+fn serve_batch(
+    api: &impl ServeApi,
+    prompts: Vec<Vec<u32>>,
+    max_new: usize,
+) -> anyhow::Result<(usize, f64, u64, f64)> {
+    let n = prompts.len();
+    let t0 = std::time::Instant::now();
+    let mut submitted = Vec::with_capacity(n);
+    for prompt in prompts {
+        submitted.push((api.submit(prompt, max_new, Sampling::Greedy)?, std::time::Instant::now()));
+    }
+    let sessions = collect_sessions(api, n)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let mut ttft = qrazor::util::stats::Percentiles::default();
+    for (id, at) in &submitted {
+        if let Some(t) = sessions.get(id).and_then(|l| l.ttft_s(*at)) {
+            ttft.push(t);
+        }
+    }
+    let generated = api.stats().generated_tokens;
+    Ok((sessions.len(), dt, generated, ttft.pct(50.0) * 1e3))
+}
 
 fn main() -> anyhow::Result<()> {
     let preset = std::env::var("E2E_MODEL").unwrap_or_else(|_| "nano".into());
@@ -82,19 +108,18 @@ fn main() -> anyhow::Result<()> {
             (0..len).map(|_| rng.below(exp.config.vocab as u64) as u32).collect()
         })
         .collect();
+    // Both front-ends expose the same ServeApi: the serving phase
+    // below is shared, only spawn + final report differ.
     if shards > 1 {
         println!("== e2e: serve ({shards}-shard cluster, W4A4KV4 g16, packed KV pools) ==");
         let cluster = ClusterServer::spawn(
             qm,
             ClusterConfig { shards, serve: serve_cfg, ..Default::default() },
         );
-        let t1 = std::time::Instant::now();
-        for prompt in prompts {
-            cluster.submit(prompt, 16, Sampling::Greedy)?;
-        }
+        let (done, dt, generated, ttft_ms) = serve_batch(&cluster, prompts, 16)?;
         let report = cluster.shutdown();
-        let dt = t1.elapsed().as_secs_f64();
-        println!("  served {} requests in {:.2}s", report.total_completed(), dt);
+        println!("  served {done} requests ({generated} tokens) in {dt:.2}s");
+        println!("  streamed ttft p50 {ttft_ms:.1}ms (from TokenEvent timestamps)");
         for line in report.render().lines() {
             println!("  {line}");
         }
@@ -106,29 +131,23 @@ fn main() -> anyhow::Result<()> {
                 s.index, s.metrics.kv_bytes_peak
             );
         }
-        anyhow::ensure!(
-            report.total_completed() as usize == n_requests,
-            "all requests must complete"
-        );
+        anyhow::ensure!(done == n_requests, "all requests must complete");
     } else {
         println!("== e2e: serve (single engine, W4A4KV4 g16, SDR-compressed KV pool) ==");
-        let mut engine = Engine::new(qm, serve_cfg);
-        for prompt in prompts {
-            engine.submit(prompt, 16, Sampling::Greedy);
-        }
-        let t1 = std::time::Instant::now();
-        let done = engine.run_to_completion();
-        let dt = t1.elapsed().as_secs_f64();
-        println!("  served {} requests in {:.2}s", done.len(), dt);
-        println!("  {}", engine.metrics.render());
-        // KV memory claim: effective bits in the pool's high-water mark
-        let gen_tokens: u64 = engine.metrics.generated_tokens;
+        let server = Server::spawn(qm, serve_cfg);
+        let (done, dt, generated, ttft_ms) = serve_batch(&server, prompts, 16)?;
+        let stats = server.stats();
+        println!("  served {done} requests ({generated} tokens) in {dt:.2}s");
+        println!("  streamed ttft p50 {ttft_ms:.1}ms (from TokenEvent timestamps)");
+        println!("  {}", server.shutdown());
+        // KV memory claim: peak packed bytes for the tokens served —
+        // ~4.25 bits/value vs 16 for FP16 — and a byte-exact drain
         println!(
             "  kv peak {} bytes for {} generated (+prompt) tokens — \
-             ~4.25 bits/value vs 16 for FP16",
-            engine.metrics.kv_bytes_peak, gen_tokens
+             ~4.25 bits/value vs 16 for FP16 (~3.76x); {} bytes after drain",
+            stats.kv_bytes_peak, generated, stats.occupancy.bytes
         );
-        anyhow::ensure!(done.len() == n_requests, "all requests must complete");
+        anyhow::ensure!(done == n_requests, "all requests must complete");
     }
     println!("\ne2e OK");
     Ok(())

@@ -11,7 +11,9 @@
 
 use qrazor::quant::{Granularity, QuantTensor};
 use qrazor::sdr::gemm::gemm_razored_int;
-use qrazor::sdr::packed::{pack_nibbles, unpack_nibbles, PackedSdrMatrix};
+use qrazor::sdr::packed::{
+    decode_nibbles_into, decode_nibbles_scalar, pack_nibbles, unpack_nibbles, PackedSdrMatrix,
+};
 use qrazor::sdr::{SdrMatrix, SdrSpec};
 use qrazor::tensor::{matmul_bt, Tensor};
 use qrazor::util::rng::Rng;
@@ -64,6 +66,29 @@ fn main() {
         "nibble_unpack     {:>12.1} Mvalues/s   ({})",
         (rows * cols) as f64 / r.mean_s / 1e6,
         r.human()
+    );
+
+    // 3b. GEMM-path nibble decode: the u64 swizzle (16 codes per load
+    // through the 256-entry pair LUT) vs the per-byte walk it replaced
+    // — the packed kernels' inner decode, reported as a delta.
+    let n_codes = rows * cols;
+    let mut decoded = vec![0i16; n_codes];
+    let r_swz = bench_loop(5, 60, || {
+        decode_nibbles_into(&packed.nibbles, 0, n_codes, &mut decoded);
+        std::hint::black_box(decoded[n_codes - 1])
+    });
+    let swz = n_codes as f64 / r_swz.mean_s / 1e6;
+    println!("nibble_decode_u64 {:>12.1} Mvalues/s   ({})", swz, r_swz.human());
+    let r_byte = bench_loop(5, 60, || {
+        decode_nibbles_scalar(&packed.nibbles, 0, n_codes, &mut decoded);
+        std::hint::black_box(decoded[n_codes - 1])
+    });
+    let byte = n_codes as f64 / r_byte.mean_s / 1e6;
+    println!(
+        "nibble_decode_byt {:>12.1} Mvalues/s   ({})  — u64 swizzle delta {:.2}x",
+        byte,
+        r_byte.human(),
+        swz / byte
     );
 
     // 4. quantized decode step (tiny model)

@@ -4,17 +4,27 @@
 //! decompression-free arithmetic keeps per-token cost flat.
 //!
 //! Measures tokens/s and TTFT across batch sizes for FP-KV vs SDR-KV,
-//! plus the batching-policy ablation (FCFS vs shortest-prefill-first).
+//! the batching-policy ablation (FCFS vs shortest-prefill-first), the
+//! sharded scale-out sweep, and a streaming-latency axis: per-request
+//! TTFT and inter-token p50/p95 measured from `TokenEvent` timestamps
+//! across shard counts and priority mixes, through the same `ServeApi`
+//! the CLI and example use. `--smoke` runs the reduced CI sweep.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
 
 use qrazor::baselines::{Fp16, QRazor};
 use qrazor::cluster::{ClusterConfig, ClusterServer};
 use qrazor::config::{ModelConfig, ServeConfig};
 use qrazor::coordinator::batcher::Policy;
 use qrazor::coordinator::request::Sampling;
-use qrazor::coordinator::Engine;
+use qrazor::coordinator::{
+    collect_sessions, Engine, Priority, RequestId, ServeApi, Server, SubmitOptions,
+};
 use qrazor::model::quantized::{calibrate, QuantModel};
 use qrazor::model::ModelWeights;
 use qrazor::util::rng::Rng;
+use qrazor::util::stats::Percentiles;
 
 fn build(scheme: Box<dyn qrazor::baselines::Scheme>) -> QuantModel {
     let cfg = ModelConfig::preset("nano").unwrap();
@@ -45,7 +55,45 @@ fn run(engine: &mut Engine, n_requests: usize, max_new: usize, seed: u64) -> (f6
     )
 }
 
+/// Per-request latency percentiles from a streamed workload: TTFT is
+/// submit→first `Token` event, inter-token gaps are per committed
+/// token between consecutive `Token` events. Generic over [`ServeApi`]
+/// — the same driver measures one engine or N shards.
+fn streaming_latency(
+    api: &impl ServeApi,
+    n_requests: usize,
+    max_new: usize,
+    vocab: u64,
+    mix: &[Priority],
+    seed: u64,
+) -> (Percentiles, Percentiles) {
+    let mut rng = Rng::new(seed);
+    let mut submit_at: BTreeMap<RequestId, Instant> = BTreeMap::new();
+    for i in 0..n_requests {
+        let len = 4 + rng.index(12);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+        let opts = SubmitOptions::new().priority(mix[i % mix.len()]);
+        let id = api.submit_with(prompt, max_new, opts).expect("submit");
+        submit_at.insert(id, Instant::now());
+    }
+    let sessions = collect_sessions(api, n_requests).expect("stream");
+    let mut ttft = Percentiles::default();
+    let mut gaps = Percentiles::default();
+    for (id, at) in &submit_at {
+        let log = &sessions[id];
+        let resp = log.response.as_ref().expect("finished");
+        assert_eq!(resp.tokens.len(), max_new, "every stream runs to its budget");
+        assert_eq!(log.tokens(), resp.tokens, "streamed ≡ batch");
+        ttft.push(log.ttft_s(*at).expect("first token streamed"));
+        for g in log.inter_token_gaps_s() {
+            gaps.push(g);
+        }
+    }
+    (ttft, gaps)
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!("\n=== serving throughput (nano model, 16 requests × 16 new tokens) ===");
     println!("{:<22} {:>8} {:>12} {:>14}", "config", "batch", "tok/s", "kv peak bytes");
     for batch in [1usize, 4, 8] {
@@ -160,6 +208,7 @@ fn main() {
                 .get(i + 1)
                 .and_then(|v| v.parse().ok())
                 .expect("--shards N")],
+            None if smoke => vec![1, 2],
             None => vec![1, 2, 4],
         }
     };
@@ -168,7 +217,7 @@ fn main() {
         "{:<8} {:>14} {:>12} {:>10}  per-shard kv peak bytes",
         "shards", "agg tok/s", "generated", "time s"
     );
-    let cluster_requests = 32usize;
+    let cluster_requests = if smoke { 12usize } else { 32 };
     // Equal-memory comparison: one fixed KV token budget split across
     // however many shards the axis point runs — the same bytes, spent
     // behind 1 step loop or N.
@@ -231,6 +280,62 @@ fn main() {
             assert!(
                 t_four > t_one * 0.7,
                 "sharded throughput collapsed on {cores} cores: {t_four:.1} vs {t_one:.1}"
+            );
+        }
+    }
+
+    // --- streaming latency axis: TTFT + inter-token percentiles -------
+    // Measured from TokenEvent timestamps through the shared ServeApi,
+    // across shard counts and priority mixes — the externally
+    // observable latency surface the redesign exists for. One engine
+    // and N shards run the exact same driver.
+    let stream_requests = if smoke { 8usize } else { 16 };
+    let stream_new = 12usize;
+    println!(
+        "\n=== streaming latency axis ({stream_requests} requests × {stream_new} tokens, \
+         TokenEvent timestamps) ==="
+    );
+    println!(
+        "{:<8} {:<22} {:>12} {:>12} {:>14} {:>14}",
+        "shards", "priority mix", "ttft p50 ms", "ttft p95 ms", "inter-tok p50", "inter-tok p95"
+    );
+    let mixes: &[(&str, &[Priority])] = &[
+        ("standard only", &[Priority::Standard]),
+        (
+            "interactive/std/batch",
+            &[Priority::Interactive, Priority::Standard, Priority::Batch],
+        ),
+    ];
+    for &shards in &shard_axis {
+        for (mix_name, mix) in mixes {
+            let qm = build(Box::new(QRazor::w4a4kv4(16)));
+            let vocab = qm.config.vocab as u64;
+            let serve =
+                ServeConfig { max_batch: 4, max_new_tokens: stream_new, ..Default::default() };
+            let (ttft, gaps) = if shards > 1 {
+                let cluster = ClusterServer::spawn(
+                    qm,
+                    ClusterConfig { shards, serve, ..Default::default() }
+                        .split_pool(total_kv_tokens),
+                );
+                let r = streaming_latency(&cluster, stream_requests, stream_new, vocab, mix, 21);
+                cluster.shutdown();
+                r
+            } else {
+                let server = Server::spawn(qm, serve);
+                let r = streaming_latency(&server, stream_requests, stream_new, vocab, mix, 21);
+                server.shutdown();
+                r
+            };
+            assert!(ttft.len() == stream_requests, "every request streamed a first token");
+            println!(
+                "{:<8} {:<22} {:>12.2} {:>12.2} {:>14.3} {:>14.3}",
+                shards,
+                mix_name,
+                ttft.pct(50.0) * 1e3,
+                ttft.pct(95.0) * 1e3,
+                gaps.pct(50.0) * 1e3,
+                gaps.pct(95.0) * 1e3,
             );
         }
     }

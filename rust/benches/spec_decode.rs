@@ -29,8 +29,7 @@ use std::sync::Arc;
 
 use qrazor::baselines::QRazor;
 use qrazor::config::{ModelConfig, ServeConfig};
-use qrazor::coordinator::request::Sampling;
-use qrazor::coordinator::Engine;
+use qrazor::coordinator::{collect_sessions, Sampling, ServeApi, Server};
 use qrazor::hw::cost::table5_designs;
 use qrazor::model::quantized::{calibrate, QuantModel};
 use qrazor::model::ModelWeights;
@@ -52,17 +51,23 @@ fn build_pair() -> (Arc<QuantModel>, Arc<QuantModel>) {
     (target, draft)
 }
 
-/// One greedy request through an engine; returns (stream, tok/s,
-/// acceptance, rollbacks).
-fn single_stream(mut engine: Engine, max_new: usize) -> (Vec<u32>, f64, f64, u64) {
+/// One greedy session through any [`ServeApi`] front-end, streamed;
+/// returns (stream, tok/s, acceptance, rollbacks). The speculative
+/// accounting comes from the live stats snapshot, and the streamed
+/// `Token` payloads are asserted identical to the final response —
+/// with speculation on, accepted prefixes arrive as multi-token
+/// batches.
+fn single_stream(api: &impl ServeApi, max_new: usize) -> (Vec<u32>, f64, f64, u64) {
     let prompt: Vec<u32> = vec![5, 9, 2, 7, 1, 4, 8, 3];
-    engine.submit(prompt, max_new, Sampling::Greedy);
     let t0 = std::time::Instant::now();
-    let done = engine.run_to_completion();
+    api.submit(prompt, max_new, Sampling::Greedy).expect("submit");
+    let sessions = collect_sessions(api, 1).expect("stream");
     let dt = t0.elapsed().as_secs_f64();
-    assert_eq!(done.len(), 1);
-    let s = &engine.metrics.spec;
-    (done[0].tokens.clone(), max_new as f64 / dt, s.acceptance(), s.rejected)
+    let log = sessions.values().next().expect("one session");
+    let resp = log.response.clone().expect("finished");
+    assert_eq!(log.tokens(), resp.tokens, "streamed ≡ batch");
+    let s = api.stats().spec;
+    (resp.tokens, max_new as f64 / dt, s.acceptance(), s.rejected)
 }
 
 // ----------------------------------------------------------- synthetic
@@ -164,21 +169,21 @@ fn main() {
         "config", "k", "tok/s", "accept", "rollbacks"
     );
     let (target, draft) = build_pair();
-    let (want, base_tps, _, _) = single_stream(
-        Engine::new(
-            Arc::clone(&target),
-            ServeConfig { max_batch: 1, max_new_tokens: real_new, ..Default::default() },
-        ),
-        real_new,
+    let plain = Server::spawn(
+        Arc::clone(&target),
+        ServeConfig { max_batch: 1, max_new_tokens: real_new, ..Default::default() },
     );
+    let (want, base_tps, _, _) = single_stream(&plain, real_new);
+    plain.shutdown();
     println!("{:<26} {:>4} {:>10.1} {:>10} {:>10}", "plain (no draft)", "-", base_tps, "-", "-");
     for k in [0usize, 2, 4] {
-        let engine = Engine::with_draft(
+        let server = Server::spawn_with_draft(
             Arc::clone(&target),
             Some(Arc::clone(&draft)),
             ServeConfig { max_batch: 1, max_new_tokens: real_new, spec_k: k, ..Default::default() },
         );
-        let (got, tps, accept, rollbacks) = single_stream(engine, real_new);
+        let (got, tps, accept, rollbacks) = single_stream(&server, real_new);
+        server.shutdown();
         assert_eq!(got, want, "k={k}: speculative stream diverged from plain decode");
         println!(
             "{:<26} {:>4} {:>10.1} {:>9.0}% {:>10}",
@@ -186,12 +191,13 @@ fn main() {
         );
     }
     // draft == target: acceptance is exactly 1.0 by the chunk identity
-    let engine = Engine::with_draft(
+    let server = Server::spawn_with_draft(
         Arc::clone(&target),
         Some(Arc::clone(&target)),
         ServeConfig { max_batch: 1, max_new_tokens: real_new, spec_k: 4, ..Default::default() },
     );
-    let (got, tps, accept, rollbacks) = single_stream(engine, real_new);
+    let (got, tps, accept, rollbacks) = single_stream(&server, real_new);
+    server.shutdown();
     assert_eq!(got, want, "self-draft stream diverged");
     assert!(
         (accept - 1.0).abs() < 1e-12,

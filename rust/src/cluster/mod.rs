@@ -1,5 +1,6 @@
 //! Sharded serving cluster — the scale-out layer above the
-//! [`crate::coordinator`].
+//! [`crate::coordinator`], behind the *same* streaming
+//! [`crate::coordinator::api::ServeApi`] surface.
 //!
 //! The paper's deployment story is a memory-budget story: SDR's
 //! 4.25-effective-bit KV cache means one budget holds ~3.7× the
@@ -12,24 +13,33 @@
 //!   thread, stepped by the coordinator's shared
 //!   [`crate::coordinator::scheduler::drive`] loop under a
 //!   [`crate::util::threadpool::with_thread_cap`] scope so shards
-//!   share the machine's cores.
+//!   share the machine's cores. After every step the worker publishes
+//!   a [`shard::StepPulse`]: byte-exact occupancy, speculative
+//!   accounting, the step's token events, and completions.
 //! * [`placement`] — assigns each admitted request to a shard:
 //!   least-reserved-tokens by default, round-robin and hash-affinity
 //!   alternates.
-//! * [`server`] — [`server::ClusterServer`], the front-end with the
-//!   same submit/poll/block surface as [`crate::coordinator::Server`];
-//!   the CLI (`qrazor serve --shards N`), the serving example, and the
-//!   `serve_throughput` bench switch over with a flag.
+//! * [`server`] — [`server::ClusterServer`], the front-end
+//!   implementing `ServeApi`: sessions submit with priorities and
+//!   deadlines, stream `TokenEvent`s from whichever shard runs them,
+//!   and cancel mid-flight (queued → purged from the shard's batcher,
+//!   running → KV and draft-pool reservations released byte-exactly).
+//!   The CLI (`qrazor serve --shards N`), the serving example, and
+//!   the `serve_throughput` bench run against the trait and switch
+//!   over with a flag.
 //! * [`metrics`] — [`metrics::ClusterMetrics`] merges per-shard
 //!   throughput/latency/pool-occupancy and raises a
 //!   [`metrics::RebalanceSignal`] when shard fill skews past a
-//!   threshold.
+//!   threshold; `try_rebalance` actuates it, and its requeue path is
+//!   cancellation-aware (a drained-then-cancelled request is never
+//!   requeued as live work).
 //!
 //! The memory shape is the point: the model weights stay
 //! nibble-packed and are shared read-only through one
 //! `Arc<QuantModel>`, so N shards cost N KV pools but a single copy
 //! of W4. Correctness is pinned by a property test: for the same seed
-//! and arrival order, a ≥2-shard cluster's token streams are
+//! and arrival order, a ≥2-shard cluster's token streams — both the
+//! streamed `TokenEvent` payloads and the final responses — are
 //! identical to the single-engine baseline (greedy decoding is
 //! batching- and placement-invariant), and shutdown drains
 //! deterministically — every queued and in-flight request completes
@@ -43,7 +53,7 @@ pub mod shard;
 pub use metrics::{ClusterMetrics, RebalanceSignal, ShardSnapshot};
 pub use placement::{Placement, PlacementPolicy, ShardLoad};
 pub use server::{ClusterConfig, ClusterReport, ClusterServer};
-pub use shard::{ShardEngine, ShardReport};
+pub use shard::{ShardEngine, ShardReport, StepPulse};
 
 /// The cluster moves models and responses across worker threads;
 /// losing either bound is a compile error here rather than a
@@ -53,4 +63,5 @@ fn _assert_send_sync() {
     fn is_send_sync<T: Send + Sync>() {}
     is_send_sync::<crate::model::quantized::QuantModel>();
     is_send_sync::<crate::coordinator::request::Response>();
+    is_send_sync::<crate::coordinator::request::TokenEvent>();
 }

@@ -1,35 +1,46 @@
-//! The cluster front-end: same submit/poll/block surface as
+//! The cluster front-end: the same streaming
+//! [`crate::coordinator::api::ServeApi`] surface as
 //! [`crate::coordinator::Server`], fanned out over N shard workers.
 //!
 //! Submission path: the caller's thread assigns a cluster-wide id,
 //! asks the [`Placement`] policy for a shard (reading each shard's
 //! committed-token load), bumps that shard's committed count, and
 //! routes the request over the shard's channel — no coordinator
-//! thread, no extra hop. Completion path: each worker's step callback
-//! decrements its shard's committed count, publishes a byte-exact
-//! pool occupancy, and forwards the response into one shared
-//! completions channel the caller polls or blocks on.
+//! thread, no extra hop. Streaming path: each worker's step pulse
+//! carries the step's token events and completions; the router
+//! updates its accounting, then forwards events into one shared event
+//! channel and responses into one shared completions channel the
+//! caller polls or blocks on. Cancellation: the router marks the id,
+//! then sends a `Cancel` down the owning shard's channel under the
+//! router lock — the same lock [`ClusterServer::try_rebalance`] holds
+//! while it requeues drained requests, so a drained-then-cancelled
+//! request is never silently requeued as live work (it is handed back
+//! with a Cancel chasing it and resolves as `Cancelled`).
 //!
 //! Shutdown is deterministic: every shard finishes its in-flight and
-//! queued work (the [`drive`] loop's draining guarantee) before the
-//! cluster report is assembled, so for greedy sampling the set of
-//! token streams a cluster produces is identical to a single engine
-//! fed the same requests — the equivalence property pinned below.
+//! queued work (the [`crate::coordinator::scheduler::drive`] loop's
+//! draining guarantee) before the cluster report is assembled, so for
+//! greedy sampling the set of token streams a cluster produces is
+//! identical to a single engine fed the same requests — the
+//! equivalence property pinned below, now including the streamed
+//! `TokenEvent` payloads.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::ServeConfig;
+use crate::coordinator::api::{ServeApi, ServeStats};
 use crate::coordinator::kv::PoolOccupancy;
-use crate::coordinator::request::{Request, RequestId, Response, Sampling};
+use crate::coordinator::request::{Request, RequestId, Response, SubmitOptions, TokenEvent};
 use crate::model::quantized::QuantModel;
+use crate::spec::SpecStats;
 use crate::util::threadpool::num_threads;
 
 use super::metrics::{ClusterMetrics, ShardSnapshot};
 use super::placement::{Placement, PlacementPolicy, ShardLoad};
-use super::shard::{ShardEngine, ShardReport};
+use super::shard::{ShardEngine, ShardReport, StepPulse};
 
 /// Cluster topology + policy knobs.
 #[derive(Clone, Debug)]
@@ -73,6 +84,9 @@ struct ShardState {
     committed_tokens: usize,
     capacity_tokens: usize,
     occupancy: PoolOccupancy,
+    /// High-water mark of the occupancies this shard has published.
+    kv_bytes_peak: usize,
+    spec: SpecStats,
     submitted: u64,
     completed: u64,
     generated_tokens: u64,
@@ -82,6 +96,11 @@ struct RouterInner {
     shards: Vec<ShardState>,
     /// Live requests: id → (shard, committed need).
     inflight: BTreeMap<RequestId, (usize, usize)>,
+    /// Ids with a cancellation requested but not yet resolved — the
+    /// guard [`ClusterServer::try_rebalance`] consults so a request
+    /// cancelled while drained out of a queue is never requeued as
+    /// live work. Cleared when the terminal response arrives.
+    cancelled: BTreeSet<RequestId>,
     placement: Placement,
 }
 
@@ -91,6 +110,7 @@ pub struct ClusterServer {
     workers: Vec<ShardEngine>,
     state: Arc<Mutex<RouterInner>>,
     completions: mpsc::Receiver<Response>,
+    events: mpsc::Receiver<TokenEvent>,
     next_id: AtomicU64,
     started: Instant,
 }
@@ -134,8 +154,8 @@ impl ClusterServer {
     /// engine gets the same `Arc`-shared drafter and runs
     /// draft→verify→accept rounds when `cfg.serve.spec_k > 0` — the
     /// cluster surface of `crate::spec`. Token streams stay identical
-    /// to the non-speculative cluster (greedy identity), so the
-    /// equivalence property keeps holding.
+    /// to the non-speculative cluster (greedy identity); each accepted
+    /// prefix flushes as one `Token` event.
     pub fn spawn_with_draft(
         model: impl Into<Arc<QuantModel>>,
         draft: Option<Arc<QuantModel>>,
@@ -149,30 +169,42 @@ impl ClusterServer {
                     committed_tokens: 0,
                     capacity_tokens: cfg.serve.kv_pool_tokens,
                     occupancy: PoolOccupancy::default(),
+                    kv_bytes_peak: 0,
+                    spec: SpecStats::default(),
                     submitted: 0,
                     completed: 0,
                     generated_tokens: 0,
                 })
                 .collect(),
             inflight: BTreeMap::new(),
+            cancelled: BTreeSet::new(),
             placement: Placement::new(cfg.placement),
         }));
         let (done_tx, done_rx) = mpsc::channel::<Response>();
+        let (event_tx, event_rx) = mpsc::channel::<TokenEvent>();
         let thread_cap = (num_threads() / cfg.shards).max(1);
         let workers = (0..cfg.shards)
             .map(|i| {
                 let st = Arc::clone(&state);
                 let tx = done_tx.clone();
+                let etx = event_tx.clone();
                 ShardEngine::spawn(
                     i,
                     Arc::clone(&model),
                     draft.clone(),
                     cfg.serve.clone(),
                     thread_cap,
-                    move |idx, occ, done| {
+                    move |idx, pulse: StepPulse| {
                         let mut s = st.lock().unwrap();
-                        s.shards[idx].occupancy = occ;
-                        for r in done {
+                        s.shards[idx].occupancy = pulse.occupancy;
+                        s.shards[idx].kv_bytes_peak =
+                            s.shards[idx].kv_bytes_peak.max(pulse.occupancy.bytes);
+                        s.shards[idx].spec = pulse.spec;
+                        // Accounting before forwarding: a client that
+                        // just saw a Finished event reads live state
+                        // that already excludes its request.
+                        for r in pulse.done {
+                            s.cancelled.remove(&r.id);
                             if let Some((shard, need)) = s.inflight.remove(&r.id) {
                                 debug_assert_eq!(shard, idx, "completion from the wrong shard");
                                 let sh = &mut s.shards[idx];
@@ -182,38 +214,33 @@ impl ClusterServer {
                             }
                             let _ = tx.send(r);
                         }
+                        for ev in pulse.events {
+                            let _ = etx.send(ev);
+                        }
                     },
                 )
             })
             .collect();
         // workers hold the only remaining senders: once every shard
-        // exits, the completions channel disconnects and drains.
+        // exits, the completions and event channels disconnect and
+        // drain — the liveness signal poll_completion/poll_event
+        // report instead of spinning forever.
         drop(done_tx);
+        drop(event_tx);
         ClusterServer {
             cfg,
             workers,
             state,
             completions: done_rx,
+            events: event_rx,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
 
-    /// Queue a request; returns its cluster-wide id.
-    pub fn submit(
-        &self,
-        prompt: Vec<u32>,
-        max_new: usize,
-        sampling: Sampling,
-    ) -> anyhow::Result<RequestId> {
-        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        let mut req = Request::new(id, prompt, max_new.min(self.cfg.serve.max_new_tokens));
-        req.sampling = sampling;
-        self.submit_request(req)
-    }
-
-    /// Queue a fully-specified request (stop token, custom sampling…).
-    /// The caller owns id uniqueness when using this entry point.
+    /// Queue a fully-specified request (stop token, custom sampling,
+    /// priority, deadline…). The caller owns id uniqueness when using
+    /// this entry point.
     pub fn submit_request(&self, req: Request) -> anyhow::Result<RequestId> {
         self.submit_inner(req, None)
     }
@@ -274,17 +301,39 @@ impl ClusterServer {
             // forever.
             let mut s = self.state.lock().unwrap();
             s.inflight.remove(&id);
-            let sh = &mut s.shards[shard];
-            sh.committed_tokens = sh.committed_tokens.saturating_sub(need);
-            sh.submitted = sh.submitted.saturating_sub(1);
+            Self::forget(&mut s.shards[shard], need);
             anyhow::bail!("shard {shard} worker gone");
         }
         Ok(id)
     }
 
-    /// Non-blocking: the next completion if one is ready.
-    pub fn poll_completion(&self) -> Option<Response> {
-        self.completions.try_recv().ok()
+    /// Drop one request's submission accounting from a shard's
+    /// router-side state.
+    fn forget(sh: &mut ShardState, need: usize) {
+        sh.committed_tokens = sh.committed_tokens.saturating_sub(need);
+        sh.submitted = sh.submitted.saturating_sub(1);
+    }
+
+    /// Add one request's submission accounting to a shard's
+    /// router-side state.
+    fn adopt(sh: &mut ShardState, need: usize) {
+        sh.committed_tokens += need;
+        sh.submitted += 1;
+    }
+
+    /// Non-blocking completion poll: `Ok(Some)` when a completion is
+    /// ready, `Ok(None)` when nothing is ready *yet*, `Err` when every
+    /// shard worker is gone and no completion can ever arrive. (The
+    /// old `try_recv().ok()` collapsed the last two, so a caller
+    /// polling a dead cluster would spin forever.)
+    pub fn poll_completion(&self) -> anyhow::Result<Option<Response>> {
+        match self.completions.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow::anyhow!("all shard workers gone"))
+            }
+        }
     }
 
     /// Block for the next completion.
@@ -336,7 +385,9 @@ impl ClusterServer {
     /// overloaded shard had nothing queued, or when a worker is gone).
     /// Safe to call from any thread at any time: greedy token streams
     /// are placement-invariant, so a rebalance never changes outputs —
-    /// only where queued work waits.
+    /// only where queued work waits. A request cancelled while drained
+    /// is *not* requeued as live work: it is handed back to its shard
+    /// with a `Cancel` chasing it and resolves as `Cancelled`.
     pub fn try_rebalance(&self) -> usize {
         let Some(signal) = self.snapshot().rebalance(self.cfg.rebalance_threshold) else {
             return 0;
@@ -369,65 +420,56 @@ impl ClusterServer {
                 keep.push(r);
             }
         }
-        {
-            // While the drained requests sit in our hands no completion
-            // can arrive for them, so the accounting move is race-free.
-            let mut s = self.state.lock().unwrap();
-            for r in &to_move {
-                let need = r.need_tokens();
-                if let Some(entry) = s.inflight.get_mut(&r.id) {
-                    entry.0 = signal.to;
-                }
-                let from = &mut s.shards[signal.from];
-                from.committed_tokens = from.committed_tokens.saturating_sub(need);
-                from.submitted = from.submitted.saturating_sub(1);
-                let to = &mut s.shards[signal.to];
-                to.committed_tokens += need;
-                to.submitted += 1;
-            }
-        }
+        // Requeue under the router lock. Channel sends never block, so
+        // holding the lock here cannot deadlock — and it serializes
+        // with cancel(), which marks the id and sends its Cancel under
+        // the same lock: a drained-then-cancelled request is either in
+        // `cancelled` (handed back + re-Cancelled below, never
+        // migrated as live work) or its Cancel lands on the same shard
+        // channel *after* our SubmitFront and purges it there.
+        let mut moved = 0usize;
+        let mut s = self.state.lock().unwrap();
         // Push in reverse so the first-drained request lands at the
         // very front of the target queue: order is preserved.
-        let mut moved = 0usize;
-        let mut failed: Vec<Request> = Vec::new();
         for r in to_move.into_iter().rev() {
+            let id = r.id;
+            let need = r.need_tokens();
+            if s.cancelled.contains(&id) {
+                // Cancelled while in our hands: hand it back to its
+                // own shard (accounting unmoved) with a fresh Cancel
+                // right behind it, so it resolves as Cancelled.
+                if self.workers[signal.from].submit_front(r).is_ok() {
+                    let _ = self.workers[signal.from].cancel(id);
+                } else if let Some((_, need)) = s.inflight.remove(&id) {
+                    Self::forget(&mut s.shards[signal.from], need);
+                }
+                continue;
+            }
+            if let Some(entry) = s.inflight.get_mut(&id) {
+                entry.0 = signal.to;
+            }
+            Self::forget(&mut s.shards[signal.from], need);
+            Self::adopt(&mut s.shards[signal.to], need);
             match self.workers[signal.to].submit_front(r) {
                 Ok(()) => moved += 1,
-                Err(r) => failed.push(r),
-            }
-        }
-        if !failed.is_empty() {
-            // The target worker is gone (a panic — shutdown cannot
-            // race, it consumes self). Undo the accounting move for
-            // the stragglers and hand them back to the shard they came
-            // from so no request is silently dropped.
-            {
-                let mut s = self.state.lock().unwrap();
-                for r in &failed {
-                    let need = r.need_tokens();
-                    if let Some(entry) = s.inflight.get_mut(&r.id) {
+                Err(r) => {
+                    // The target worker is gone (a panic — shutdown
+                    // cannot race, it consumes self). Undo the move
+                    // and hand the request back to the shard it came
+                    // from so no request is silently dropped.
+                    if let Some(entry) = s.inflight.get_mut(&id) {
                         entry.0 = signal.from;
                     }
-                    let to = &mut s.shards[signal.to];
-                    to.committed_tokens = to.committed_tokens.saturating_sub(need);
-                    to.submitted = to.submitted.saturating_sub(1);
-                    let from = &mut s.shards[signal.from];
-                    from.committed_tokens += need;
-                    from.submitted += 1;
-                }
-            }
-            // `failed` is back-first, so straight iteration restores
-            // front-first order on the source queue.
-            for r in failed {
-                if let Err(r) = self.workers[signal.from].submit_front(r) {
-                    // Both workers gone: the cluster is already dead
-                    // (completions channel disconnected); drop the
-                    // phantom accounting so in_flight() stays honest.
-                    let mut s = self.state.lock().unwrap();
-                    if let Some((_, need)) = s.inflight.remove(&r.id) {
-                        let from = &mut s.shards[signal.from];
-                        from.committed_tokens = from.committed_tokens.saturating_sub(need);
-                        from.submitted = from.submitted.saturating_sub(1);
+                    Self::forget(&mut s.shards[signal.to], need);
+                    Self::adopt(&mut s.shards[signal.from], need);
+                    if self.workers[signal.from].submit_front(r).is_err() {
+                        // Both workers gone: the cluster is already
+                        // dead (completions channel disconnected);
+                        // drop the phantom accounting so in_flight()
+                        // stays honest.
+                        if let Some((_, need)) = s.inflight.remove(&id) {
+                            Self::forget(&mut s.shards[signal.from], need);
+                        }
                     }
                 }
             }
@@ -436,12 +478,18 @@ impl ClusterServer {
         // of any arrivals that landed mid-drain (its accounting never
         // moved). `keep` is front-first, so push in reverse.
         for r in keep.into_iter().rev() {
-            if let Err(r) = self.workers[signal.from].submit_front(r) {
-                let mut s = self.state.lock().unwrap();
-                if let Some((_, need)) = s.inflight.remove(&r.id) {
-                    let from = &mut s.shards[signal.from];
-                    from.committed_tokens = from.committed_tokens.saturating_sub(need);
-                    from.submitted = from.submitted.saturating_sub(1);
+            let id = r.id;
+            let was_cancelled = s.cancelled.contains(&id);
+            match self.workers[signal.from].submit_front(r) {
+                Ok(()) => {
+                    if was_cancelled {
+                        let _ = self.workers[signal.from].cancel(id);
+                    }
+                }
+                Err(r) => {
+                    if let Some((_, need)) = s.inflight.remove(&r.id) {
+                        Self::forget(&mut s.shards[signal.from], need);
+                    }
                 }
             }
         }
@@ -472,11 +520,76 @@ impl ClusterServer {
     }
 }
 
+impl ServeApi for ClusterServer {
+    /// Queue a session; returns its cluster-wide id.
+    fn submit_with(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<RequestId> {
+        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let req = opts.build(id, prompt, max_new.min(self.cfg.serve.max_new_tokens));
+        self.submit_inner(req, None)
+    }
+
+    fn cancel(&self, id: RequestId) -> anyhow::Result<()> {
+        // Mark first, send second, all under the router lock: this
+        // serializes with try_rebalance's drain-and-requeue (see
+        // there), so a request mid-rebalance is either completed as
+        // cancelled by the rebalancer or receives the Cancel after
+        // its SubmitFront on the same shard channel.
+        let mut s = self.state.lock().unwrap();
+        let Some(&(shard, _)) = s.inflight.get(&id) else {
+            return Ok(()); // already finished — cancellation is idempotent
+        };
+        s.cancelled.insert(id);
+        anyhow::ensure!(self.workers[shard].cancel(id), "shard {shard} worker gone");
+        Ok(())
+    }
+
+    fn next_event(&self) -> anyhow::Result<TokenEvent> {
+        self.events
+            .recv()
+            .map_err(|_| anyhow::anyhow!("all shard workers gone"))
+    }
+
+    fn poll_event(&self) -> anyhow::Result<Option<TokenEvent>> {
+        match self.events.try_recv() {
+            Ok(ev) => Ok(Some(ev)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow::anyhow!("all shard workers gone"))
+            }
+        }
+    }
+
+    fn stats(&self) -> ServeStats {
+        let s = self.state.lock().unwrap();
+        let mut st = ServeStats { shards: s.shards.len(), ..Default::default() };
+        for sh in &s.shards {
+            st.requests_submitted += sh.submitted;
+            st.requests_completed += sh.completed;
+            st.generated_tokens += sh.generated_tokens;
+            st.occupancy.capacity_tokens += sh.capacity_tokens;
+            st.occupancy.reserved_tokens += sh.occupancy.reserved_tokens;
+            st.occupancy.live_sequences += sh.occupancy.live_sequences;
+            st.occupancy.bytes += sh.occupancy.bytes;
+            st.occupancy.unpacked_bytes += sh.occupancy.unpacked_bytes;
+            st.kv_bytes_peak += sh.kv_bytes_peak;
+            st.spec.merge(&sh.spec);
+        }
+        st
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::QRazor;
     use crate::config::ModelConfig;
+    use crate::coordinator::api::collect_sessions;
+    use crate::coordinator::request::{FinishReason, Sampling};
     use crate::coordinator::Engine;
     use crate::model::quantized::{calibrate, QuantModel};
     use crate::model::ModelWeights;
@@ -520,6 +633,9 @@ mod tests {
             .collect()
     }
 
+    /// Streams a workload through the cluster's `ServeApi` surface:
+    /// asserts every session's concatenated `Token` events equal its
+    /// response tokens (streaming ≡ batch), then returns the streams.
     fn cluster_streams(
         model: &Arc<QuantModel>,
         work: &[(Vec<u32>, usize)],
@@ -529,14 +645,27 @@ mod tests {
         for (prompt, max_new) in work {
             cluster.submit(prompt.clone(), *max_new, Sampling::Greedy).unwrap();
         }
+        let sessions = collect_sessions(&cluster, work.len()).unwrap();
         let report = cluster.shutdown();
         assert_eq!(report.total_completed() as usize, work.len(), "cluster must drain fully");
-        report.unclaimed.into_iter().map(|r| (r.id.0, r.tokens)).collect()
+        sessions
+            .into_iter()
+            .map(|(id, log)| {
+                let resp = log.response.expect("session finished");
+                assert_eq!(
+                    log.tokens(),
+                    resp.tokens,
+                    "request {id:?}: streamed Token payloads must equal the response"
+                );
+                (id.0, resp.tokens)
+            })
+            .collect()
     }
 
     /// The tentpole acceptance property: for the same seed and arrival
     /// order, a ≥2-shard cluster produces token streams identical to
-    /// the single-engine baseline, across placements and workloads.
+    /// the single-engine baseline, across placements and workloads —
+    /// streamed event payloads included.
     #[test]
     fn cluster_matches_single_engine_baseline() {
         let model = model(21);
@@ -678,6 +807,128 @@ mod tests {
     }
 
     #[test]
+    fn rebalance_cancellation_guard_never_requeues_a_cancelled_request() {
+        // The drained-then-cancelled race, pinned deterministically:
+        // a cancellation that lands while the rebalancer holds the
+        // drained queue in its hands (its Cancel message found nothing
+        // on the shard) must not be requeued as live work — neither a
+        // migrated request nor one in the kept remainder. We simulate
+        // the race by marking the ids cancelled directly, exactly the
+        // state cancel() leaves when the worker's purge missed.
+        let model = model(41);
+        let serve = ServeConfig {
+            max_batch: 1,
+            max_new_tokens: 64,
+            kv_pool_tokens: 256,
+            ..Default::default()
+        };
+        let work: Vec<Vec<u32>> = (0..10).map(|i| vec![1 + i as u32, 2, 3, 4]).collect();
+        // The head request decodes 64 tokens, holding its shard's one
+        // batch slot long enough that the rest are reliably still
+        // queued when the rebalancer drains them.
+        let budget_of = |i: usize| if i == 0 { 64 } else { 8 };
+        let want: BTreeMap<u64, Vec<u32>> = {
+            let mut engine = Engine::new(Arc::clone(&model), serve.clone());
+            for (i, p) in work.iter().enumerate() {
+                engine.submit(p.clone(), budget_of(i), Sampling::Greedy);
+            }
+            engine.run_to_completion().into_iter().map(|r| (r.id.0, r.tokens)).collect()
+        };
+        let cluster = ClusterServer::spawn(
+            Arc::clone(&model),
+            ClusterConfig { shards: 2, rebalance_threshold: 0.25, serve, ..Default::default() },
+        );
+        for (i, p) in work.iter().enumerate() {
+            let mut req = Request::new(RequestId(i as u64), p.clone(), budget_of(i));
+            req.sampling = Sampling::Greedy;
+            cluster.submit_request_to(req, 0).unwrap();
+        }
+        // ids 1 (near the queue front: lands in the migrated set) and
+        // 9 (queue back: lands in the kept remainder) are cancelled
+        // "mid-drain"
+        {
+            let mut s = cluster.state.lock().unwrap();
+            s.cancelled.insert(RequestId(1));
+            s.cancelled.insert(RequestId(9));
+        }
+        let moved = cluster.try_rebalance();
+        assert!(moved > 0, "live queued requests must still move");
+        let sessions = collect_sessions(&cluster, work.len()).unwrap();
+        let report = cluster.shutdown();
+        assert!(
+            report.shards[1].metrics.requests_completed > 0,
+            "the target shard must pick up the moved live work"
+        );
+        for (id, log) in &sessions {
+            let resp = log.response.as_ref().expect("finished");
+            if id.0 == 1 || id.0 == 9 {
+                assert_eq!(
+                    resp.finish,
+                    FinishReason::Cancelled,
+                    "request {id:?} must resolve as cancelled, not run"
+                );
+                assert!(resp.tokens.is_empty(), "a queued cancel generates nothing");
+            } else {
+                assert_eq!(
+                    Some(&resp.tokens),
+                    want.get(&id.0),
+                    "surviving stream {id:?} must match the baseline"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn poll_completion_distinguishes_idle_from_dead_cluster() {
+        let model = model(35);
+        let cluster = ClusterServer::spawn(
+            Arc::clone(&model),
+            ClusterConfig { shards: 2, ..Default::default() },
+        );
+        // idle cluster: nothing ready yet, but workers are alive
+        assert!(matches!(cluster.poll_completion(), Ok(None)));
+        assert!(matches!(cluster.poll_event(), Ok(None)));
+        let id = cluster.submit(vec![1, 2, 3], 3, Sampling::Greedy).unwrap();
+        let r = cluster.next_completion().unwrap();
+        assert_eq!(r.id, id);
+        // Kill every worker without consuming the server. The old
+        // `try_recv().ok()` collapsed "no completion ready" and "all
+        // shard workers gone" into None, letting callers spin forever
+        // on a dead cluster; now the disconnect surfaces as an error.
+        for w in &cluster.workers {
+            w.begin_shutdown();
+        }
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            match cluster.poll_completion() {
+                Err(_) => break, // dead cluster correctly distinguished
+                Ok(Some(_)) => {}
+                Ok(None) => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "poll_completion never reported the dead cluster"
+                    );
+                    std::thread::yield_now();
+                }
+            }
+        }
+        // the event stream reports the same terminal state
+        let dead = loop {
+            match cluster.poll_event() {
+                Err(_) => break true,
+                Ok(Some(_)) => {}
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        break false;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        };
+        assert!(dead, "poll_event never reported the dead cluster");
+    }
+
+    #[test]
     fn balanced_cluster_rebalance_is_a_noop() {
         let model = model(30);
         let cluster = ClusterServer::spawn(
@@ -693,7 +944,8 @@ mod tests {
     fn speculative_cluster_matches_baseline_streams() {
         // The --spec axis end to end: every shard drafts on the packed
         // W4A4 model and verifies on the W4A8 basis; cluster streams
-        // stay identical to a plain single-engine baseline.
+        // stay identical to a plain single-engine baseline, and the
+        // live stats surface the speculative accounting.
         let cfg = ModelConfig::preset("nano").unwrap();
         let w = ModelWeights::init_random(&cfg, 31);
         let mut rng = Rng::new(32);
@@ -717,12 +969,21 @@ mod tests {
         for (prompt, max_new) in &work {
             cluster.submit(prompt.clone(), *max_new, Sampling::Greedy).unwrap();
         }
+        let sessions = collect_sessions(&cluster, work.len()).unwrap();
+        let live = cluster.stats();
+        assert!(live.spec.steps > 0, "live stats must surface speculative rounds");
         let report = cluster.shutdown();
         assert_eq!(report.total_completed() as usize, work.len());
         let spec_rounds: u64 = report.shards.iter().map(|s| s.metrics.spec.steps).sum();
         assert!(spec_rounds > 0, "shards must actually speculate");
-        let got: BTreeMap<u64, Vec<u32>> =
-            report.unclaimed.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+        let got: BTreeMap<u64, Vec<u32>> = sessions
+            .into_iter()
+            .map(|(id, log)| {
+                let resp = log.response.expect("finished");
+                assert_eq!(log.tokens(), resp.tokens, "streamed ≡ batch under speculation");
+                (id.0, resp.tokens)
+            })
+            .collect();
         assert_eq!(got, want, "speculative cluster must match the plain baseline");
         for s in &report.shards {
             assert_eq!(s.final_occupancy.bytes, 0, "shard {} verify pool not drained", s.index);

@@ -7,6 +7,12 @@
 //! [`with_thread_cap`] scope of `num_threads() / shards`, so the
 //! shards' data-parallel decode loops share the machine instead of
 //! each spawning a full-width pool.
+//!
+//! After every scheduling step the worker publishes a [`StepPulse`]:
+//! byte-exact pool occupancy, speculative accounting, the step's
+//! token events, and its completed responses — everything the cluster
+//! router needs to stream sessions and keep live stats without ever
+//! touching the engine from another thread.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -15,10 +21,24 @@ use std::thread::JoinHandle;
 use crate::config::ServeConfig;
 use crate::coordinator::kv::PoolOccupancy;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Request, RequestId, Response, TokenEvent};
 use crate::coordinator::scheduler::{drive, Engine, LoopMsg, StepLoop};
 use crate::model::quantized::QuantModel;
+use crate::spec::SpecStats;
 use crate::util::threadpool::with_thread_cap;
+
+/// What a shard publishes after every scheduling step (and for
+/// submit-time completions that never see a step).
+pub struct StepPulse {
+    /// Byte-exact verify-pool occupancy as of this step.
+    pub occupancy: PoolOccupancy,
+    /// Cumulative speculative-decoding accounting.
+    pub spec: SpecStats,
+    /// Token events emitted by this step, in order.
+    pub events: Vec<TokenEvent>,
+    /// Responses completed by this step.
+    pub done: Vec<Response>,
+}
 
 /// What a shard hands back when it drains and exits.
 pub struct ShardReport {
@@ -39,17 +59,16 @@ impl ShardEngine {
     /// Spawn a worker thread owning `Engine::with_draft(model, draft,
     /// config)` — `draft` is the optional speculative drafter, shared
     /// `Arc`-style like the target weights. `on_step` runs on the
-    /// worker after every scheduling step with the shard index, a
-    /// fresh byte-exact pool occupancy, and that step's completed
-    /// responses — the cluster router uses it to publish load and
-    /// forward completions.
+    /// worker after every scheduling step with the shard index and
+    /// that step's [`StepPulse`] — the cluster router uses it to
+    /// publish load, forward token events, and forward completions.
     pub fn spawn(
         index: usize,
         model: Arc<QuantModel>,
         draft: Option<Arc<QuantModel>>,
         config: ServeConfig,
         thread_cap: usize,
-        mut on_step: impl FnMut(usize, PoolOccupancy, Vec<Response>) + Send + 'static,
+        mut on_step: impl FnMut(usize, StepPulse) + Send + 'static,
     ) -> ShardEngine {
         let (tx, rx) = mpsc::channel::<LoopMsg>();
         let handle = std::thread::Builder::new()
@@ -58,7 +77,15 @@ impl ShardEngine {
                 with_thread_cap(thread_cap, move || {
                     let mut engine =
                         drive(Engine::with_draft(model, draft, config), rx, |e, done| {
-                            on_step(index, StepLoop::occupancy(e), done)
+                            on_step(
+                                index,
+                                StepPulse {
+                                    occupancy: StepLoop::occupancy(e),
+                                    spec: e.metrics.spec,
+                                    events: e.take_events(),
+                                    done,
+                                },
+                            )
                         });
                     ShardReport {
                         index,
@@ -85,6 +112,14 @@ impl ShardEngine {
             LoopMsg::SubmitFront(r) => r,
             _ => unreachable!("send returns the message it was given"),
         })
+    }
+
+    /// Ask the worker to cancel a request (queued → purged, running →
+    /// pool reservations released mid-flight; resolves as a Cancelled
+    /// response through the normal completion path). Returns false if
+    /// the worker is gone.
+    pub fn cancel(&self, id: RequestId) -> bool {
+        self.tx.send(LoopMsg::Cancel(id)).is_ok()
     }
 
     /// Ask the worker to hand over every queued (not yet admitted)
@@ -151,17 +186,20 @@ mod tests {
     #[test]
     fn shard_runs_requests_and_reports_on_join() {
         let done: Arc<Mutex<Vec<Response>>> = Arc::new(Mutex::new(Vec::new()));
+        let events: Arc<Mutex<Vec<TokenEvent>>> = Arc::new(Mutex::new(Vec::new()));
         let sink = Arc::clone(&done);
+        let esink = Arc::clone(&events);
         let shard = ShardEngine::spawn(
             3,
             model(),
             None,
             ServeConfig { max_new_tokens: 4, ..Default::default() },
             2,
-            move |idx, occ, rs| {
+            move |idx, pulse| {
                 assert_eq!(idx, 3);
-                assert!(occ.bytes <= occ.unpacked_bytes);
-                sink.lock().unwrap().extend(rs);
+                assert!(pulse.occupancy.bytes <= pulse.occupancy.unpacked_bytes);
+                esink.lock().unwrap().extend(pulse.events);
+                sink.lock().unwrap().extend(pulse.done);
             },
         );
         let mut req = Request::new(RequestId(7), vec![1, 2, 3], 4);
@@ -175,15 +213,26 @@ mod tests {
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].id, RequestId(7));
         assert_eq!(got[0].tokens.len(), 4);
+        // the pulse stream carried the session events too
+        let evs = events.lock().unwrap();
+        let streamed: Vec<u32> = evs
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { tokens, .. } => Some(tokens.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect();
+        assert_eq!(streamed, got[0].tokens, "pulse events ≡ response stream");
     }
 
     #[test]
     fn two_shards_share_one_model_arc() {
         let m = model();
         let a =
-            ShardEngine::spawn(0, Arc::clone(&m), None, ServeConfig::default(), 1, |_, _, _| {});
+            ShardEngine::spawn(0, Arc::clone(&m), None, ServeConfig::default(), 1, |_, _| {});
         let b =
-            ShardEngine::spawn(1, Arc::clone(&m), None, ServeConfig::default(), 1, |_, _, _| {});
+            ShardEngine::spawn(1, Arc::clone(&m), None, ServeConfig::default(), 1, |_, _| {});
         assert!(a.submit(Request::new(RequestId(0), vec![4, 5], 3)));
         assert!(b.submit(Request::new(RequestId(1), vec![6, 7], 3)));
         let ra = a.join();

@@ -1,0 +1,222 @@
+//! The unified streaming serving surface — one API for the
+//! single-engine [`super::Server`] and the sharded
+//! [`crate::cluster::ClusterServer`].
+//!
+//! A submission opens a *session*: [`ServeApi::submit_with`] takes a
+//! prompt plus [`SubmitOptions`] (sampling, stop token, priority
+//! class, admission deadline) and returns a [`RequestId`]. From then
+//! on the session is observable as a stream of [`TokenEvent`]s —
+//! `Started` at admission, `Token` per committed batch (one token per
+//! plain decode step, a whole accepted prefix per speculative round),
+//! `Finished` with the final [`Response`] — emitted by the step loop
+//! *as generation happens*, so time-to-first-token and inter-token
+//! latency are externally measurable instead of post-hoc fields.
+//! Concatenating a session's `Token` payloads is byte-identical to its
+//! `Response::tokens` (property-tested at engine and cluster level).
+//!
+//! [`ServeApi::cancel`] ends a session early: a queued request is
+//! purged from the batcher, a running one releases its KV (and
+//! draft-pool) reservation byte-exactly mid-flight; either way the
+//! session finishes with `FinishReason::Cancelled` through the normal
+//! event stream. [`ServeApi::stats`] is a live snapshot (counts, pool
+//! occupancy, speculative accounting) aggregated across however many
+//! engines sit behind the implementation.
+//!
+//! Every front-end implements this trait, so callers — the CLI, the
+//! serving benches, the e2e example, the equivalence test suites —
+//! are written once and run against one engine or N shards unchanged.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::kv::PoolOccupancy;
+use crate::coordinator::request::{RequestId, Response, Sampling, SubmitOptions, TokenEvent};
+use crate::spec::SpecStats;
+
+/// Live metrics snapshot of a serving front-end — the cross-engine
+/// aggregate a dashboard polls. Cluster implementations sum across
+/// shards; occupancy is byte-exact as of each engine's last step.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Engines behind this surface (1 for the single-engine server).
+    pub shards: usize,
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub generated_tokens: u64,
+    /// Aggregate pool occupancy (capacities and bytes summed).
+    pub occupancy: PoolOccupancy,
+    /// High-water mark of packed KV bytes (summed per-engine peaks) —
+    /// the paper's memory claim as observed by this serving run.
+    pub kv_bytes_peak: usize,
+    /// Speculative-decoding accounting (all-zero without a draft).
+    pub spec: SpecStats,
+}
+
+impl ServeStats {
+    /// Requests submitted but not yet finished.
+    pub fn in_flight(&self) -> u64 {
+        self.requests_submitted.saturating_sub(self.requests_completed)
+    }
+}
+
+/// The streaming serving API: sessions, token events, cancellation,
+/// priorities. See the module doc for the contract; see
+/// [`collect_sessions`] for the standard way to drain a workload.
+pub trait ServeApi {
+    /// Open a session: queue `prompt` with full options; returns the
+    /// session's id. `max_new` is clamped to the serve config.
+    fn submit_with(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<RequestId>;
+
+    /// Request cancellation. Asynchronous: the session resolves
+    /// through the event stream with `FinishReason::Cancelled` (ids
+    /// already finished are a no-op). Errs only when the serving
+    /// worker that owns the session is gone.
+    fn cancel(&self, id: RequestId) -> anyhow::Result<()>;
+
+    /// Block for the next event from any session.
+    fn next_event(&self) -> anyhow::Result<TokenEvent>;
+
+    /// Non-blocking event poll: `Ok(Some)` when an event is ready,
+    /// `Ok(None)` when nothing is ready *yet*, `Err` when every
+    /// serving worker is gone and no event can ever arrive — callers
+    /// must not spin on a dead server.
+    fn poll_event(&self) -> anyhow::Result<Option<TokenEvent>>;
+
+    /// Live metrics snapshot.
+    fn stats(&self) -> ServeStats;
+
+    /// Convenience submit with default options (greedy unless a
+    /// sampling policy is given; standard priority; no deadline).
+    fn submit(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        sampling: Sampling,
+    ) -> anyhow::Result<RequestId> {
+        self.submit_with(prompt, max_new, SubmitOptions::new().sampling(sampling))
+    }
+}
+
+/// One session's record, assembled from its drained events.
+#[derive(Clone, Debug, Default)]
+pub struct SessionLog {
+    /// When the request was admitted (prefill done, decode starting).
+    pub started_at: Option<Instant>,
+    /// Every `Token` event: (timestamp, committed batch).
+    pub batches: Vec<(Instant, Vec<u32>)>,
+    /// The final response once `Finished` arrived.
+    pub response: Option<Response>,
+}
+
+impl SessionLog {
+    /// The streamed tokens in order — byte-identical to
+    /// `response.tokens` for a finished session.
+    pub fn tokens(&self) -> Vec<u32> {
+        self.batches.iter().flat_map(|(_, b)| b.iter().copied()).collect()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.response.is_some()
+    }
+
+    /// Seconds from `submitted_at` to the first streamed token —
+    /// the client-observed TTFT (`None` before any token arrives).
+    /// The one definition every driver (CLI, example, benches) shares.
+    pub fn ttft_s(&self, submitted_at: Instant) -> Option<f64> {
+        self.batches
+            .first()
+            .map(|(at, _)| at.saturating_duration_since(submitted_at).as_secs_f64())
+    }
+
+    /// Per-*token* inter-arrival gaps in seconds: each gap between
+    /// consecutive `Token` events divided by the later batch's size,
+    /// so a speculative round that flushes k + 1 tokens at once is not
+    /// misread as one (k + 1)×-slower token.
+    pub fn inter_token_gaps_s(&self) -> Vec<f64> {
+        self.batches
+            .windows(2)
+            .map(|w| {
+                let gap = w[1].0.saturating_duration_since(w[0].0).as_secs_f64();
+                gap / w[1].1.len().max(1) as f64
+            })
+            .collect()
+    }
+}
+
+/// Drain events until `n` sessions have finished, returning each
+/// session's log. The standard workload driver for callers that
+/// submitted `n` requests and want every stream plus its response —
+/// errs if the serving workers die first.
+pub fn collect_sessions(
+    api: &impl ServeApi,
+    n: usize,
+) -> anyhow::Result<BTreeMap<RequestId, SessionLog>> {
+    let mut out: BTreeMap<RequestId, SessionLog> = BTreeMap::new();
+    let mut finished = 0usize;
+    while finished < n {
+        match api.next_event()? {
+            TokenEvent::Started { id, at } => {
+                out.entry(id).or_default().started_at = Some(at);
+            }
+            TokenEvent::Token { id, tokens, at } => {
+                out.entry(id).or_default().batches.push((at, tokens));
+            }
+            TokenEvent::Finished { id, response } => {
+                out.entry(id).or_default().response = Some(response);
+                finished += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_log_concatenates_batches_in_order() {
+        let now = Instant::now();
+        let log = SessionLog {
+            started_at: Some(now),
+            batches: vec![(now, vec![1, 2]), (now, vec![3]), (now, vec![4, 5])],
+            response: None,
+        };
+        assert_eq!(log.tokens(), vec![1, 2, 3, 4, 5]);
+        assert!(!log.finished());
+    }
+
+    #[test]
+    fn session_latency_helpers_normalize_per_token() {
+        use std::time::Duration;
+        let t0 = Instant::now();
+        let log = SessionLog {
+            started_at: Some(t0),
+            batches: vec![
+                (t0 + Duration::from_millis(10), vec![1]),
+                // a speculative flush: 4 tokens, 20 ms after the first
+                (t0 + Duration::from_millis(30), vec![2, 3, 4, 5]),
+            ],
+            response: None,
+        };
+        let ttft = log.ttft_s(t0).unwrap();
+        assert!((ttft - 0.010).abs() < 2e-3, "ttft {ttft}");
+        let gaps = log.inter_token_gaps_s();
+        assert_eq!(gaps.len(), 1);
+        // 20 ms spread over the 4 tokens of the later batch → 5 ms/token
+        assert!((gaps[0] - 0.005).abs() < 2e-3, "gap {}", gaps[0]);
+        assert!(SessionLog::default().ttft_s(t0).is_none());
+        assert!(SessionLog::default().inter_token_gaps_s().is_empty());
+    }
+
+    #[test]
+    fn stats_in_flight_never_underflows() {
+        let s = ServeStats { requests_submitted: 2, requests_completed: 5, ..Default::default() };
+        assert_eq!(s.in_flight(), 0);
+    }
+}

@@ -7,15 +7,21 @@
 //! shortest-prefill-first mode that reduces head-of-line blocking —
 //! the ablation the serving bench measures.
 //!
+//! Ordering: requests admit front-first after a stable sort by
+//! priority class ([`crate::coordinator::request::Priority`]) and,
+//! under shortest-prefill-first, prompt length within a class.
+//!
 //! Fairness: a request that gets rejected at the admission gate or
-//! overtaken by a later arrival is *deferred*, and deferred requests
-//! are pinned to the front of the queue (in arrival order) on every
-//! subsequent pass — shortest-prefill-first can therefore delay a
-//! large prompt at most once per younger competitor, never starve it.
+//! overtaken by a later arrival (younger, shorter, or higher-priority)
+//! is *deferred*, and deferred requests are pinned to the front of the
+//! queue (in queue order, ahead of every priority class) on every
+//! subsequent pass — reordering can therefore delay a request at most
+//! once per competitor, never starve it.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Request, RequestId};
 
 /// Admission policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +66,30 @@ impl Batcher {
         self.queue.drain(..).collect()
     }
 
+    /// Remove a queued request by id — the cancellation purge. Returns
+    /// the request so the caller can answer it (`None` when it is not
+    /// queued here: already admitted, finished, or on another shard).
+    pub fn purge(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
+    }
+
+    /// Take every queued request whose admission deadline has passed —
+    /// the scheduler completes them as expired instead of letting them
+    /// hold queue slots they can no longer use in time.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].expired(now) {
+                out.push(self.queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     /// Total pool tokens (prompt + generation budget) the queued
     /// requests will need — queue-depth introspection for operators
     /// and the planned rebalance actuation (see ROADMAP).
@@ -84,16 +114,22 @@ impl Batcher {
         let mut admitted = Vec::new();
         let mut budget = self.max_step_tokens;
         let mut slots = self.max_batch.saturating_sub(active);
-        if self.policy == Policy::ShortestPrefillFirst {
-            // Stable sort keeps FCFS order among equals. Requests the
-            // pool has already rejected stay pinned at the front (in
-            // arrival order): without the pin, every re-sort would put
-            // a rejected large prompt behind newly arrived short ones
-            // and it could starve indefinitely.
-            self.queue
-                .make_contiguous()
-                .sort_by_key(|r| if r.deferrals > 0 { (false, 0) } else { (true, r.prompt.len()) });
-        }
+        // Stable sort keeps FCFS order among equals. Deferred requests
+        // (pool-rejected or previously overtaken) stay pinned at the
+        // front in queue order, ahead of every priority class: without
+        // the pin, every re-sort would put a rejected large prompt (or
+        // a Batch-tier request) behind newly arrived competitors and it
+        // could starve indefinitely. Among the unpinned, priority class
+        // orders admission; shortest-prefill-first additionally orders
+        // by prompt length within a class.
+        let spf = self.policy == Policy::ShortestPrefillFirst;
+        self.queue.make_contiguous().sort_by_key(|r| {
+            if r.deferrals > 0 {
+                (false, 0, 0)
+            } else {
+                (true, r.priority.rank(), if spf { r.prompt.len() } else { 0 })
+            }
+        });
         // scan without starving: take from the front while budgets allow
         while slots > 0 {
             let Some(front) = self.queue.front() else { break };
@@ -129,7 +165,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::RequestId;
+    use crate::coordinator::request::Priority;
 
     fn req(id: u64, prompt_len: usize, max_new: usize) -> Request {
         Request::new(RequestId(id), vec![0; prompt_len], max_new)
@@ -283,5 +319,86 @@ mod tests {
         let admitted = b.admit(0, |_| true);
         assert_eq!(admitted[0].id, RequestId(0));
         assert_eq!(admitted[1].id, RequestId(1));
+    }
+
+    fn req_pri(id: u64, prompt_len: usize, p: Priority) -> Request {
+        let mut r = req(id, prompt_len, 4);
+        r.priority = p;
+        r
+    }
+
+    #[test]
+    fn priority_orders_admission_within_a_pass() {
+        let mut b = Batcher::new(Policy::Fcfs, 3, 1000);
+        b.push(req_pri(0, 4, Priority::Batch));
+        b.push(req_pri(1, 4, Priority::Standard));
+        b.push(req_pri(2, 4, Priority::Interactive));
+        let admitted = b.admit(0, |_| true);
+        let ids: Vec<RequestId> = admitted.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![RequestId(2), RequestId(1), RequestId(0)]);
+    }
+
+    #[test]
+    fn priority_overtaken_request_pins_and_cannot_starve() {
+        // A Batch request overtaken by an Interactive arrival is
+        // deferred once, then pinned ahead of every later Interactive
+        // arrival — bounded priority inversion, no starvation.
+        let mut b = Batcher::new(Policy::Fcfs, 1, 1000);
+        b.push(req_pri(0, 4, Priority::Batch));
+        b.push(req_pri(1, 4, Priority::Interactive));
+        let admitted = b.admit(0, |_| true);
+        assert_eq!(admitted[0].id, RequestId(1), "interactive first");
+        // fresh interactive traffic keeps arriving
+        b.push(req_pri(2, 4, Priority::Interactive));
+        let admitted = b.admit(0, |_| true);
+        assert_eq!(
+            admitted[0].id,
+            RequestId(0),
+            "the deferred batch request is pinned ahead of later interactive work"
+        );
+    }
+
+    #[test]
+    fn priority_composes_with_shortest_prefill_first() {
+        let mut b = Batcher::new(Policy::ShortestPrefillFirst, 4, 1000);
+        b.push(req_pri(0, 5, Priority::Standard));
+        b.push(req_pri(1, 50, Priority::Interactive));
+        b.push(req_pri(2, 8, Priority::Interactive));
+        let admitted = b.admit(0, |_| true);
+        let ids: Vec<RequestId> = admitted.iter().map(|r| r.id).collect();
+        // interactive class first (short prompt first within it), then
+        // the standard request
+        assert_eq!(ids, vec![RequestId(2), RequestId(1), RequestId(0)]);
+    }
+
+    #[test]
+    fn cancellation_purge_removes_only_the_named_request() {
+        let mut b = Batcher::new(Policy::Fcfs, 4, 1000);
+        b.push(req(0, 4, 4));
+        b.push(req(1, 6, 4));
+        b.push(req(2, 8, 4));
+        let purged = b.purge(RequestId(1)).expect("queued");
+        assert_eq!(purged.id, RequestId(1));
+        assert!(b.purge(RequestId(1)).is_none(), "already gone");
+        assert!(b.purge(RequestId(9)).is_none(), "never queued");
+        let left: Vec<RequestId> = b.admit(0, |_| true).iter().map(|r| r.id).collect();
+        assert_eq!(left, vec![RequestId(0), RequestId(2)]);
+    }
+
+    #[test]
+    fn deadline_take_expired_splits_the_queue() {
+        let mut b = Batcher::new(Policy::Fcfs, 4, 1000);
+        let mut dead = req(0, 4, 4);
+        dead.deadline = Some(std::time::Duration::ZERO);
+        b.push(dead);
+        b.push(req(1, 4, 4));
+        let mut dead2 = req(2, 4, 4);
+        dead2.deadline = Some(std::time::Duration::ZERO);
+        b.push(dead2);
+        let expired = b.take_expired(Instant::now());
+        let ids: Vec<RequestId> = expired.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![RequestId(0), RequestId(2)]);
+        assert_eq!(b.waiting(), 1);
+        assert!(b.take_expired(Instant::now()).is_empty(), "idempotent");
     }
 }

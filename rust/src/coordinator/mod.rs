@@ -1,27 +1,43 @@
 //! L3 serving coordinator — the QServe/vLLM-shaped layer that turns the
-//! quantized model into a service.
+//! quantized model into a service, exposed through one streaming
+//! surface.
 //!
-//! * [`request`] — request/response types and ids.
+//! * [`api`] — the serving contract: [`api::ServeApi`] (sessions,
+//!   token events, cancellation, priorities, live stats) implemented
+//!   by both the single-engine [`Server`] and the sharded
+//!   [`crate::cluster::ClusterServer`], so every caller — CLI, benches,
+//!   examples, equivalence tests — is written once and runs against
+//!   one engine or N shards unchanged.
+//! * [`request`] — request/response types and ids, plus the session
+//!   vocabulary: [`request::SubmitOptions`] (sampling, stop token,
+//!   priority class, admission deadline), [`request::Priority`] SLO
+//!   tiers, and the per-request [`request::TokenEvent`] stream
+//!   (`Started`/`Token`/`Finished`).
 //! * [`batcher`] — admission queue + continuous-batching policy
 //!   (prefill/decode separation, token budgets, FCFS or
-//!   shortest-prefill-first with starvation-proof deferral aging).
+//!   shortest-prefill-first, priority-class ordering with
+//!   starvation-proof deferral aging, cancellation purge, deadline
+//!   sweep).
 //! * [`kv`] — the KV-cache pool: per-sequence SDR-compressed caches
 //!   with token-capacity accounting, backpressure, and byte-exact
 //!   [`kv::PoolOccupancy`] reporting — the deployment surface of the
 //!   paper's KV4 claim (a 4-bit pool holds ~3.7× the tokens of an
-//!   FP16 one at equal memory).
-//! * [`scheduler`] — the step loop: admit → chunked prefill →
-//!   decode-batch → retire, sequences decoded in parallel. With a
-//!   draft model attached (`ServeConfig::spec_k`), greedy sequences
-//!   decode in speculative draft→verify→accept rounds
-//!   ([`crate::spec`]) committing up to `spec_k + 1` tokens per step,
-//!   token-identical to plain decode. The loop is factored as the
-//!   [`scheduler::StepLoop`] trait plus the [`scheduler::drive`]
-//!   worker function, shared verbatim by the single-engine server and
-//!   every cluster shard (including the rebalance drain/requeue
-//!   messages).
-//! * [`server`] — a threaded front-end over one engine: submit
-//!   requests from any thread, poll or block for completions.
+//!   FP16 one at equal memory). Cancellation releases a live
+//!   sequence's reservation byte-exactly mid-flight.
+//! * [`scheduler`] — the step loop: expire → admit → chunked prefill →
+//!   decode-batch → retire, sequences decoded in parallel, token
+//!   events emitted as they commit. With a draft model attached
+//!   (`ServeConfig::spec_k`), greedy sequences decode in speculative
+//!   draft→verify→accept rounds ([`crate::spec`]) committing up to
+//!   `spec_k + 1` tokens per step — each accepted prefix flushes as
+//!   one `Token` event — token-identical to plain decode. The loop is
+//!   factored as the [`scheduler::StepLoop`] trait plus the
+//!   [`scheduler::drive`] worker function, shared verbatim by the
+//!   single-engine server and every cluster shard (including the
+//!   cancel and rebalance drain/requeue messages).
+//! * [`server`] — a threaded front-end over one engine implementing
+//!   [`api::ServeApi`]: submit sessions from any thread, stream their
+//!   events, cancel mid-flight, poll or block for completions.
 //! * [`metrics`] — throughput/latency accounting rendered by the CLI
 //!   and the serving example.
 //!
@@ -32,8 +48,9 @@
 //! (each exactly this coordinator stack, each with its own packed KV
 //! pool) behind a placement policy and a cluster-wide metrics
 //! aggregator, sharing one `Arc`-held copy of the nibble-packed
-//! weights.
+//! weights — behind the *same* [`api::ServeApi`].
 
+pub mod api;
 pub mod batcher;
 pub mod kv;
 pub mod metrics;
@@ -41,6 +58,9 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use request::{Request, RequestId, Response};
+pub use api::{collect_sessions, ServeApi, ServeStats, SessionLog};
+pub use request::{
+    FinishReason, Priority, Request, RequestId, Response, Sampling, SubmitOptions, TokenEvent,
+};
 pub use scheduler::{drive, Engine, LoopMsg, StepLoop};
 pub use server::Server;

@@ -1,6 +1,11 @@
-//! Request/response types for the serving layer.
+//! Request/response types for the serving layer, plus the session
+//! vocabulary of the streaming [`crate::coordinator::api::ServeApi`]:
+//! [`SubmitOptions`] (sampling, stop token, priority class, deadline),
+//! [`Priority`] (SLO tiers feeding the batcher's ordering) and
+//! [`TokenEvent`] (the per-request `Started`/`Token`/`Finished` stream
+//! the step loop emits as generation happens).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Monotonic request identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -15,6 +20,105 @@ pub enum Sampling {
     Temperature { temp: f32, seed: u64 },
 }
 
+/// SLO tier of a request. Lower ranks are admitted first when the
+/// batcher has a choice; the deferral-aging fairness pin still wins
+/// over priority, so a lower tier can be overtaken at most once per
+/// competitor and never starves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns): admitted first.
+    Interactive,
+    /// The default tier.
+    #[default]
+    Standard,
+    /// Throughput traffic (offline summarization, evals): admitted
+    /// only when nothing more urgent is waiting.
+    Batch,
+}
+
+impl Priority {
+    /// Admission rank — lower admits first.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "standard" => Some(Priority::Standard),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a caller can attach to a submission beyond the prompt
+/// and the generation budget — the one options surface shared by the
+/// single-engine server and the cluster (builder-style).
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitOptions {
+    pub sampling: Sampling,
+    pub stop_token: Option<u32>,
+    pub priority: Priority,
+    /// Admission deadline relative to arrival: a request still queued
+    /// when it expires finishes as [`FinishReason::Expired`] instead
+    /// of occupying the queue. Running requests are never expired.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        SubmitOptions::new()
+    }
+}
+
+impl SubmitOptions {
+    pub fn new() -> SubmitOptions {
+        SubmitOptions {
+            sampling: Sampling::Greedy,
+            stop_token: None,
+            priority: Priority::Standard,
+            deadline: None,
+        }
+    }
+
+    pub fn sampling(mut self, s: Sampling) -> Self {
+        self.sampling = s;
+        self
+    }
+
+    pub fn stop_token(mut self, t: u32) -> Self {
+        self.stop_token = Some(t);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Materialize a [`Request`]. The caller owns id uniqueness and
+    /// has already clamped `max_new` to the serve config.
+    pub fn build(self, id: RequestId, prompt: Vec<u32>, max_new: usize) -> Request {
+        let mut req = Request::new(id, prompt, max_new);
+        req.sampling = self.sampling;
+        req.stop_token = self.stop_token;
+        req.priority = self.priority;
+        req.deadline = self.deadline;
+        req
+    }
+}
+
 /// An inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -24,13 +128,18 @@ pub struct Request {
     pub sampling: Sampling,
     /// Generation stops early on this token (e.g. end-of-text).
     pub stop_token: Option<u32>,
+    /// SLO tier; feeds the batcher's admission order.
+    pub priority: Priority,
+    /// Queued-admission deadline relative to `arrived` (see
+    /// [`SubmitOptions::deadline`]).
+    pub deadline: Option<Duration>,
     pub arrived: Instant,
     /// Times the batcher deferred this request: rejected at the
     /// admission gate (KV backpressure) or overtaken by a later
-    /// arrival under a reordering policy. A non-zero count pins the
-    /// request to the front of the queue across policy re-sorts so a
-    /// large prompt cannot be starved indefinitely by smaller later
-    /// arrivals.
+    /// arrival under a reordering policy or a higher priority. A
+    /// non-zero count pins the request to the front of the queue
+    /// across re-sorts so a large prompt (or a low tier) cannot be
+    /// starved indefinitely by later arrivals.
     pub deferrals: u32,
 }
 
@@ -42,6 +151,8 @@ impl Request {
             max_new_tokens,
             sampling: Sampling::Greedy,
             stop_token: None,
+            priority: Priority::Standard,
+            deadline: None,
             arrived: Instant::now(),
             deferrals: 0,
         }
@@ -52,6 +163,11 @@ impl Request {
     pub fn need_tokens(&self) -> usize {
         self.prompt.len() + self.max_new_tokens
     }
+
+    /// Has the queued-admission deadline passed?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now.saturating_duration_since(self.arrived) >= d)
+    }
 }
 
 /// Why a sequence finished.
@@ -60,6 +176,11 @@ pub enum FinishReason {
     Length,
     StopToken,
     Error,
+    /// Cancelled by the caller ([`crate::coordinator::api::ServeApi::cancel`]);
+    /// the response carries the partial stream generated so far.
+    Cancelled,
+    /// Still queued when its admission deadline passed.
+    Expired,
 }
 
 /// A completed request.
@@ -75,6 +196,35 @@ pub struct Response {
     pub total_s: f64,
 }
 
+/// One observable moment in a request's lifetime, emitted by the step
+/// loop as it happens — the unit of the streaming serving surface.
+/// Concatenating a request's [`TokenEvent::Token`] payloads yields
+/// exactly its final [`Response::tokens`] (property-tested), so TTFT
+/// and inter-token latency are measurable from event timestamps
+/// without changing what a batch caller sees.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// The request was admitted and prefilled; decoding starts.
+    Started { id: RequestId, at: Instant },
+    /// Newly committed tokens: one per plain decode step, a whole
+    /// accepted prefix per speculative round (flushed as one batch).
+    Token { id: RequestId, tokens: Vec<u32>, at: Instant },
+    /// Terminal: the full response (partial tokens on cancellation,
+    /// empty on submit-time rejection or deadline expiry).
+    Finished { id: RequestId, response: Response },
+}
+
+impl TokenEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> RequestId {
+        match self {
+            TokenEvent::Started { id, .. } => *id,
+            TokenEvent::Token { id, .. } => *id,
+            TokenEvent::Finished { id, .. } => *id,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,10 +235,53 @@ mod tests {
         assert_eq!(r.id, RequestId(3));
         assert!(matches!(r.sampling, Sampling::Greedy));
         assert!(r.stop_token.is_none());
+        assert_eq!(r.priority, Priority::Standard);
+        assert!(r.deadline.is_none());
+        assert!(!r.expired(Instant::now()));
     }
 
     #[test]
     fn request_ids_order() {
         assert!(RequestId(1) < RequestId(2));
+    }
+
+    #[test]
+    fn priority_ranks_order_tiers() {
+        assert!(Priority::Interactive.rank() < Priority::Standard.rank());
+        assert!(Priority::Standard.rank() < Priority::Batch.rank());
+        assert_eq!(Priority::parse("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("bogus"), None);
+    }
+
+    #[test]
+    fn options_build_a_fully_specified_request() {
+        let opts = SubmitOptions::new()
+            .sampling(Sampling::Temperature { temp: 0.7, seed: 9 })
+            .stop_token(5)
+            .priority(Priority::Interactive)
+            .deadline(Duration::from_millis(250));
+        let r = opts.build(RequestId(8), vec![1, 2], 12);
+        assert!(matches!(r.sampling, Sampling::Temperature { seed: 9, .. }));
+        assert_eq!(r.stop_token, Some(5));
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(r.max_new_tokens, 12);
+    }
+
+    #[test]
+    fn deadline_expiry_is_relative_to_arrival() {
+        let mut r = Request::new(RequestId(1), vec![1], 4);
+        r.deadline = Some(Duration::ZERO);
+        assert!(r.expired(Instant::now()));
+        r.deadline = Some(Duration::from_secs(3600));
+        assert!(!r.expired(Instant::now()));
+    }
+
+    #[test]
+    fn token_event_reports_its_request() {
+        let at = Instant::now();
+        assert_eq!(TokenEvent::Started { id: RequestId(4), at }.id(), RequestId(4));
+        let ev = TokenEvent::Token { id: RequestId(5), tokens: vec![1, 2], at };
+        assert_eq!(ev.id(), RequestId(5));
     }
 }

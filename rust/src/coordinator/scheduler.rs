@@ -24,7 +24,9 @@ use crate::config::ServeConfig;
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::kv::{KvPool, PoolOccupancy};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{FinishReason, Request, RequestId, Response, Sampling};
+use crate::coordinator::request::{
+    FinishReason, Request, RequestId, Response, Sampling, TokenEvent,
+};
 use crate::model::quantized::{DecodeCache, QuantModel};
 use crate::spec::{QuantLm, SpecDecoder, SpecStats};
 use crate::tensor::argmax;
@@ -66,6 +68,11 @@ pub struct Engine {
     active: BTreeMap<RequestId, Active>,
     next_id: u64,
     done: Vec<Response>,
+    /// Token events emitted since the last [`Engine::take_events`]
+    /// drain — `Started` at admission, `Token` per committed batch
+    /// (one token per plain step, a whole accepted prefix per
+    /// speculative round), `Finished` with the response.
+    events: Vec<TokenEvent>,
 }
 
 impl Engine {
@@ -90,6 +97,7 @@ impl Engine {
             active: BTreeMap::new(),
             next_id: 0,
             done: Vec::new(),
+            events: Vec::new(),
             metrics: Metrics::new(),
             model,
             config,
@@ -132,19 +140,57 @@ impl Engine {
             || req.prompt.len() > self.config.max_step_tokens
             || req.need_tokens() > self.pool.capacity_tokens
         {
-            self.metrics.requests_completed += 1;
-            let total = req.arrived.elapsed().as_secs_f64();
-            self.done.push(Response {
-                id: req.id,
-                prompt_len: req.prompt.len(),
-                tokens: Vec::new(),
-                finish: FinishReason::Error,
-                ttft_s: 0.0,
-                total_s: total,
-            });
+            self.complete_unstarted(req, FinishReason::Error);
             return;
         }
         self.batcher.push(req);
+    }
+
+    /// Complete a request that never decoded (submit-time rejection,
+    /// queued-cancel purge, deadline expiry): response + `Finished`
+    /// event, no pool state to release, no latency sample.
+    fn complete_unstarted(&mut self, req: Request, finish: FinishReason) {
+        self.metrics.requests_completed += 1;
+        let resp = Response {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            finish,
+            ttft_s: 0.0,
+            total_s: req.arrived.elapsed().as_secs_f64(),
+        };
+        self.events.push(TokenEvent::Finished { id: req.id, response: resp.clone() });
+        self.done.push(resp);
+    }
+
+    /// Cancel a request. A queued request is purged from the batcher;
+    /// a running one releases its KV (and draft-pool) reservation
+    /// byte-exactly mid-flight and finishes with its partial stream.
+    /// Returns true when the request was live here — other sequences'
+    /// streams are untouched either way (each owns its cache).
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(req) = self.batcher.purge(id) {
+            self.complete_unstarted(req, FinishReason::Cancelled);
+            return true;
+        }
+        let Some(a) = self.active.remove(&id) else {
+            return false;
+        };
+        self.pool.release(id);
+        self.draft_pool.release(id); // no-op without a draft cache
+        self.metrics.requests_completed += 1;
+        let ttft = a.first_token_at.map(|t| (t - a.req.arrived).as_secs_f64()).unwrap_or(0.0);
+        let resp = Response {
+            id,
+            prompt_len: a.req.prompt.len(),
+            tokens: a.generated,
+            finish: FinishReason::Cancelled,
+            ttft_s: ttft,
+            total_s: a.req.arrived.elapsed().as_secs_f64(),
+        };
+        self.events.push(TokenEvent::Finished { id, response: resp.clone() });
+        self.done.push(resp);
+        true
     }
 
     /// Anything left to do?
@@ -157,10 +203,21 @@ impl Engine {
         std::mem::take(&mut self.done)
     }
 
+    /// Drain token events emitted since the last call.
+    pub fn take_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.events)
+    }
+
     /// One scheduling quantum. Returns the number of tokens generated.
     pub fn step(&mut self) -> usize {
         self.metrics.scheduler_steps += 1;
         let spec_on = self.speculative();
+        // 0. deadline sweep: still-queued requests whose admission
+        // deadline has passed finish as expired instead of holding the
+        // queue (running requests are never expired).
+        for req in self.batcher.take_expired(Instant::now()) {
+            self.complete_unstarted(req, FinishReason::Expired);
+        }
         // 1. admit + prefill
         let pool = &mut self.pool;
         let model = &self.model;
@@ -207,6 +264,7 @@ impl Engine {
             }
             let next_token = *prompt.last().unwrap();
             let pos = prompt.len() - 1;
+            self.events.push(TokenEvent::Started { id: req.id, at: Instant::now() });
             self.active.insert(
                 req.id,
                 Active { next_token, pos, generated: Vec::new(), first_token_at: None, req },
@@ -305,15 +363,29 @@ impl Engine {
             // exactly what one-token-per-step decode would have emitted
             // (the retire pass below then ends the sequence, releasing
             // any over-appended cache rows with it).
+            let mut appended: Vec<u32> = Vec::new();
             for tok in committed {
                 if a.generated.len() >= a.req.max_new_tokens {
                     break;
                 }
                 a.generated.push(tok);
+                appended.push(tok);
                 generated += 1;
                 if a.req.stop_token == Some(tok) {
                     break;
                 }
+            }
+            // Stream the step's committed tokens the moment they exist:
+            // one per plain step, the whole accepted prefix per
+            // speculative round (flushed as a batch). Concatenating a
+            // request's Token payloads reproduces its Response.tokens
+            // exactly.
+            if !appended.is_empty() {
+                self.events.push(TokenEvent::Token {
+                    id: *id,
+                    tokens: appended,
+                    at: Instant::now(),
+                });
             }
             // A zero-budget request commits nothing and retires below
             // with an empty stream; there is no next token to advance.
@@ -357,14 +429,16 @@ impl Engine {
             self.metrics
                 .latency
                 .push((now - a.req.arrived).as_secs_f64());
-            self.done.push(Response {
+            let resp = Response {
                 id,
                 prompt_len: a.req.prompt.len(),
                 tokens: a.generated,
                 finish,
                 ttft_s: ttft,
                 total_s: (now - a.req.arrived).as_secs_f64(),
-            });
+            };
+            self.events.push(TokenEvent::Finished { id, response: resp.clone() });
+            self.done.push(resp);
         }
         generated
     }
@@ -431,6 +505,17 @@ pub trait StepLoop: Send {
     fn is_idle(&self) -> bool;
     /// Drain completed responses.
     fn take_completed(&mut self) -> Vec<Response>;
+    /// Drain token events emitted since the last call. Loops without
+    /// a streaming surface return nothing.
+    fn take_events(&mut self) -> Vec<TokenEvent> {
+        Vec::new()
+    }
+    /// Cancel a queued or running request; returns true when it was
+    /// live here. Loops without cancellation support return false.
+    fn cancel(&mut self, id: RequestId) -> bool {
+        let _ = id;
+        false
+    }
     /// Byte-exact KV-pool occupancy snapshot.
     fn occupancy(&self) -> PoolOccupancy;
     /// Take every queued (not yet admitted) request, front first — the
@@ -458,6 +543,12 @@ impl StepLoop for Engine {
     fn take_completed(&mut self) -> Vec<Response> {
         Engine::take_completed(self)
     }
+    fn take_events(&mut self) -> Vec<TokenEvent> {
+        Engine::take_events(self)
+    }
+    fn cancel(&mut self, id: RequestId) -> bool {
+        Engine::cancel(self, id)
+    }
     fn occupancy(&self) -> PoolOccupancy {
         Engine::pool_occupancy(self)
     }
@@ -475,6 +566,11 @@ pub enum LoopMsg {
     /// Requeue ahead of existing queued work (a rebalance hand-back
     /// must not line up behind younger arrivals).
     SubmitFront(Request),
+    /// Cancel a queued or running request: purge it from the batcher
+    /// or release its pool reservations mid-flight; the request
+    /// finishes with `FinishReason::Cancelled` through the normal
+    /// completion path. Unknown ids are a no-op.
+    Cancel(RequestId),
     /// Hand every queued (not yet admitted) request to the sender —
     /// the rebalance drain.
     Drain(mpsc::Sender<Vec<Request>>),
@@ -522,6 +618,12 @@ pub fn drive<L: StepLoop>(
             }
             Some(LoopMsg::SubmitFront(req)) => {
                 l.requeue_front(req);
+                continue;
+            }
+            Some(LoopMsg::Cancel(id)) => {
+                // The cancelled response (if any) drains at the top of
+                // the next iteration, before the loop can block.
+                let _ = l.cancel(id);
                 continue;
             }
             Some(LoopMsg::Drain(reply)) => {

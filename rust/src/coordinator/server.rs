@@ -1,28 +1,34 @@
 //! Threaded serving front-end: a worker thread owns the [`Engine`];
-//! clients submit from any thread over a channel and receive
-//! completions on a response channel. (The vendored dependency set has
-//! no tokio, so this is plain `std::thread` + `mpsc` — adequate for a
-//! CPU-bound engine where the model step dominates.)
+//! clients submit from any thread over a channel and receive token
+//! events and completions on response channels. (The vendored
+//! dependency set has no tokio, so this is plain `std::thread` +
+//! `mpsc` — adequate for a CPU-bound engine where the model step
+//! dominates.)
 //!
 //! The worker runs the shared [`drive`] loop — the same loop every
 //! [`crate::cluster`] shard runs — so single-engine and sharded
-//! serving cannot drift apart in shutdown/draining semantics. For the
-//! multi-worker front-end with the same submit/poll/block API, see
-//! [`crate::cluster::ClusterServer`].
+//! serving cannot drift apart in shutdown/draining/cancellation
+//! semantics. `Server` implements the streaming
+//! [`crate::coordinator::api::ServeApi`] (sessions, token events,
+//! cancel, live stats); for the multi-worker front-end with the same
+//! surface, see [`crate::cluster::ClusterServer`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::ServeConfig;
-use crate::coordinator::request::{Request, RequestId, Response, Sampling};
-use crate::coordinator::scheduler::{drive, Engine, LoopMsg};
+use crate::coordinator::api::{ServeApi, ServeStats};
+use crate::coordinator::request::{Request, RequestId, Response, SubmitOptions, TokenEvent};
+use crate::coordinator::scheduler::{drive, Engine, LoopMsg, StepLoop};
 use crate::model::quantized::QuantModel;
 
 /// Handle to a running server.
 pub struct Server {
     tx: mpsc::Sender<LoopMsg>,
     completions: mpsc::Receiver<Response>,
+    events: mpsc::Receiver<TokenEvent>,
+    stats: Arc<Mutex<ServeStats>>,
     next_id: AtomicU64,
     max_new_tokens: usize,
     worker: Option<JoinHandle<String>>,
@@ -30,12 +36,42 @@ pub struct Server {
 
 impl Server {
     /// Spawn the engine on a worker thread.
-    pub fn spawn(model: QuantModel, config: ServeConfig) -> Server {
+    pub fn spawn(model: impl Into<Arc<QuantModel>>, config: ServeConfig) -> Server {
+        Server::spawn_with_draft(model, None, config)
+    }
+
+    /// Spawn with an optional speculative draft model (the razored
+    /// W4A4 form of the same weights); greedy sessions then decode in
+    /// draft→verify→accept rounds when `config.spec_k > 0`, streaming
+    /// each accepted prefix as one `Token` event.
+    pub fn spawn_with_draft(
+        model: impl Into<Arc<QuantModel>>,
+        draft: Option<Arc<QuantModel>>,
+        config: ServeConfig,
+    ) -> Server {
+        let model: Arc<QuantModel> = model.into();
         let (tx, rx) = mpsc::channel::<LoopMsg>();
         let (done_tx, done_rx) = mpsc::channel::<Response>();
+        let (event_tx, event_rx) = mpsc::channel::<TokenEvent>();
+        let stats = Arc::new(Mutex::new(ServeStats { shards: 1, ..Default::default() }));
+        let shared = Arc::clone(&stats);
         let max_new_tokens = config.max_new_tokens;
         let worker = std::thread::spawn(move || {
-            let engine = drive(Engine::new(model, config), rx, |_, done| {
+            let engine = drive(Engine::with_draft(model, draft, config), rx, move |e, done| {
+                // Stats first: a client that just saw a Finished event
+                // reads a snapshot that already includes its request.
+                {
+                    let mut s = shared.lock().unwrap();
+                    s.requests_submitted = e.metrics.requests_submitted;
+                    s.requests_completed = e.metrics.requests_completed;
+                    s.generated_tokens = e.metrics.generated_tokens;
+                    s.occupancy = StepLoop::occupancy(e);
+                    s.kv_bytes_peak = e.metrics.kv_bytes_peak;
+                    s.spec = e.metrics.spec;
+                }
+                for ev in e.take_events() {
+                    let _ = event_tx.send(ev);
+                }
                 for r in done {
                     let _ = done_tx.send(r);
                 }
@@ -45,30 +81,17 @@ impl Server {
         Server {
             tx,
             completions: done_rx,
+            events: event_rx,
+            stats,
             next_id: AtomicU64::new(0),
             max_new_tokens,
             worker: Some(worker),
         }
     }
 
-    /// Submit a request; the id is assigned client-side so this never
-    /// blocks on the worker.
-    pub fn submit(
-        &self,
-        prompt: Vec<u32>,
-        max_new: usize,
-        sampling: Sampling,
-    ) -> anyhow::Result<RequestId> {
-        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        let mut req = Request::new(id, prompt, max_new.min(self.max_new_tokens));
-        req.sampling = sampling;
-        self.tx
-            .send(LoopMsg::Submit(req))
-            .map_err(|_| anyhow::anyhow!("server worker gone"))?;
-        Ok(id)
-    }
-
-    /// Block for the next completion.
+    /// Block for the next completion. Sessions also resolve through
+    /// the event stream ([`TokenEvent::Finished`]); this channel
+    /// serves batch callers that only want whole responses.
     pub fn next_completion(&self) -> anyhow::Result<Response> {
         self.completions
             .recv()
@@ -86,6 +109,50 @@ impl Server {
     }
 }
 
+impl ServeApi for Server {
+    /// Submit a session; the id is assigned client-side so this never
+    /// blocks on the worker.
+    fn submit_with(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<RequestId> {
+        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let req: Request = opts.build(id, prompt, max_new.min(self.max_new_tokens));
+        self.tx
+            .send(LoopMsg::Submit(req))
+            .map_err(|_| anyhow::anyhow!("server worker gone"))?;
+        Ok(id)
+    }
+
+    fn cancel(&self, id: RequestId) -> anyhow::Result<()> {
+        self.tx
+            .send(LoopMsg::Cancel(id))
+            .map_err(|_| anyhow::anyhow!("server worker gone"))
+    }
+
+    fn next_event(&self) -> anyhow::Result<TokenEvent> {
+        self.events
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker gone"))
+    }
+
+    fn poll_event(&self) -> anyhow::Result<Option<TokenEvent>> {
+        match self.events.try_recv() {
+            Ok(ev) => Ok(Some(ev)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow::anyhow!("server worker gone"))
+            }
+        }
+    }
+
+    fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
 impl Drop for Server {
     fn drop(&mut self) {
         let _ = self.tx.send(LoopMsg::Shutdown);
@@ -100,6 +167,8 @@ mod tests {
     use super::*;
     use crate::baselines::QRazor;
     use crate::config::ModelConfig;
+    use crate::coordinator::api::collect_sessions;
+    use crate::coordinator::request::{FinishReason, Sampling};
     use crate::model::quantized::calibrate;
     use crate::model::ModelWeights;
     use crate::util::rng::Rng;
@@ -127,8 +196,72 @@ mod tests {
         assert_eq!(got[0].id, id1);
         assert_eq!(got[0].tokens.len(), 3);
         assert_eq!(got[1].tokens.len(), 3);
+        let stats = server.stats();
+        assert_eq!(stats.requests_completed, 2);
+        assert_eq!(stats.in_flight(), 0);
+        assert_eq!(stats.occupancy.bytes, 0, "pool drained");
         let summary = server.shutdown();
         assert!(summary.contains("2/2 done"), "{summary}");
+    }
+
+    #[test]
+    fn streaming_events_reproduce_the_response_stream() {
+        // The session contract: Started → Token× → Finished, and the
+        // concatenated Token payloads are byte-identical to the
+        // response's tokens.
+        let server =
+            Server::spawn(model(), ServeConfig { max_new_tokens: 8, ..Default::default() });
+        let id = server.submit(vec![2, 3, 4], 6, Sampling::Greedy).unwrap();
+        let sessions = collect_sessions(&server, 1).unwrap();
+        let log = &sessions[&id];
+        assert!(log.started_at.is_some(), "Started must precede tokens");
+        assert_eq!(log.batches.len(), 6, "one Token event per plain decode step");
+        let resp = log.response.as_ref().unwrap();
+        assert_eq!(log.tokens(), resp.tokens);
+        assert_eq!(resp.finish, FinishReason::Length);
+        // timestamps are monotonic: TTFT and inter-token gaps are
+        // non-negative and externally measurable
+        let started = log.started_at.unwrap();
+        let mut prev = started;
+        for (at, _) in &log.batches {
+            assert!(*at >= prev, "event timestamps must be monotonic");
+            prev = *at;
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancellation_mid_stream_returns_partial_tokens() {
+        let server = Server::spawn(
+            model(),
+            ServeConfig { max_new_tokens: 512, kv_pool_tokens: 1024, ..Default::default() },
+        );
+        let id = server.submit(vec![1, 2, 3], 400, Sampling::Greedy).unwrap();
+        // wait until the stream demonstrably runs, then cancel
+        let first = loop {
+            match server.next_event().unwrap() {
+                TokenEvent::Token { tokens, .. } => break tokens,
+                TokenEvent::Started { .. } => continue,
+                TokenEvent::Finished { .. } => panic!("finished before cancel"),
+            }
+        };
+        assert!(!first.is_empty());
+        server.cancel(id).unwrap();
+        let mut streamed = first;
+        let resp = loop {
+            match server.next_event().unwrap() {
+                TokenEvent::Token { tokens, .. } => streamed.extend(tokens),
+                TokenEvent::Finished { response, .. } => break response,
+                TokenEvent::Started { .. } => {}
+            }
+        };
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert_eq!(resp.tokens, streamed, "partial stream matches the partial response");
+        assert!(resp.tokens.len() < 400, "cancel must land mid-flight");
+        let stats = server.stats();
+        assert_eq!(stats.occupancy.bytes, 0, "cancel releases the KV bytes");
+        assert_eq!(stats.occupancy.reserved_tokens, 0);
+        server.shutdown();
     }
 
     #[test]
@@ -142,7 +275,7 @@ mod tests {
         let r = server.next_completion().unwrap();
         assert_eq!(r.id, id);
         assert!(r.tokens.is_empty());
-        assert_eq!(r.finish, crate::coordinator::request::FinishReason::Error);
+        assert_eq!(r.finish, FinishReason::Error);
         let summary = server.shutdown();
         assert!(summary.contains("1/1 done"), "{summary}");
     }

@@ -11,8 +11,7 @@
 use qrazor::baselines::{Fp16, QRazor, Scheme};
 use qrazor::cluster::{ClusterConfig, ClusterServer, PlacementPolicy};
 use qrazor::config::ServeConfig;
-use qrazor::coordinator::request::Sampling;
-use qrazor::coordinator::Engine;
+use qrazor::coordinator::{collect_sessions, Priority, ServeApi, Server, SubmitOptions};
 use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
 use qrazor::hw::cost::{saving_pct, table5_designs, table5_paper_reference};
 use qrazor::hw::opcount::table8_rows;
@@ -40,6 +39,11 @@ fn cli() -> Cli {
         )
         .opt("spec", Some("0"), "serve: speculative lookahead k (0 = off)")
         .opt(
+            "priority",
+            Some("standard"),
+            "serve: priority class for the synthetic requests (interactive|standard|batch)",
+        )
+        .opt(
             "draft-scheme",
             Some("w4a4kv4:16"),
             "serve: draft scheme for speculative decoding (razored form of the target)",
@@ -62,6 +66,48 @@ fn parse_scheme(s: &str) -> anyhow::Result<Box<dyn Scheme>> {
         "w4a8kv4" => Box::new(QRazor::w4a8kv4(g)),
         other => anyhow::bail!("unknown scheme kind '{other}'"),
     })
+}
+
+/// Drive one synthetic workload through any serving front-end — the
+/// single-engine server and the sharded cluster expose the same
+/// [`ServeApi`], so the CLI is written once. Streams every session's
+/// token events and reports TTFT / inter-token latency measured from
+/// the event timestamps.
+fn run_serve(
+    api: &impl ServeApi,
+    prompts: Vec<Vec<u32>>,
+    max_new: usize,
+    priority: Priority,
+) -> anyhow::Result<(usize, f64)> {
+    use std::time::Instant;
+    let n = prompts.len();
+    let t0 = Instant::now();
+    let mut submitted = Vec::with_capacity(n);
+    for prompt in prompts {
+        let id = api.submit_with(prompt, max_new, SubmitOptions::new().priority(priority))?;
+        submitted.push((id, Instant::now()));
+    }
+    let sessions = collect_sessions(api, n)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut ttft = qrazor::util::stats::Percentiles::default();
+    let mut gaps = qrazor::util::stats::Percentiles::default();
+    for (id, at) in &submitted {
+        let Some(log) = sessions.get(id) else { continue };
+        if let Some(t) = log.ttft_s(*at) {
+            ttft.push(t);
+        }
+        for g in log.inter_token_gaps_s() {
+            gaps.push(g);
+        }
+    }
+    println!(
+        "  streaming: ttft p50 {:.1}ms p95 {:.1}ms | inter-token p50 {:.2}ms p95 {:.2}ms",
+        ttft.pct(50.0) * 1e3,
+        ttft.pct(95.0) * 1e3,
+        gaps.pct(50.0) * 1e3,
+        gaps.pct(95.0) * 1e3,
+    );
+    Ok((sessions.len(), elapsed))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -125,6 +171,11 @@ fn main() -> anyhow::Result<()> {
                     .collect();
                 prompts.push(prompt);
             }
+            let priority_name = args.get_str("priority")?;
+            let priority = Priority::parse(&priority_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown priority '{priority_name}'"))?;
+            // Both front-ends implement ServeApi, so the workload
+            // driver is shared; only spawn + final report differ.
             if shards > 1 {
                 let placement_name = args.get_str("placement")?;
                 let placement = PlacementPolicy::parse(&placement_name)
@@ -134,30 +185,13 @@ fn main() -> anyhow::Result<()> {
                     draft,
                     ClusterConfig { shards, placement, serve: serve_cfg, ..Default::default() },
                 );
-                let t0 = std::time::Instant::now();
-                for prompt in prompts {
-                    cluster.submit(prompt, max_new, Sampling::Greedy)?;
-                }
+                let (done, dt) = run_serve(&cluster, prompts, max_new, priority)?;
                 let report = cluster.shutdown();
-                println!(
-                    "served {} requests in {:.2}s\n{}",
-                    report.total_completed(),
-                    t0.elapsed().as_secs_f64(),
-                    report.render()
-                );
+                println!("served {done} requests in {dt:.2}s\n{}", report.render());
             } else {
-                let mut engine = Engine::with_draft(qm, draft, serve_cfg);
-                for prompt in prompts {
-                    engine.submit(prompt, max_new, Sampling::Greedy);
-                }
-                let t0 = std::time::Instant::now();
-                let done = engine.run_to_completion();
-                println!(
-                    "served {} requests in {:.2}s\n{}",
-                    done.len(),
-                    t0.elapsed().as_secs_f64(),
-                    engine.metrics.render()
-                );
+                let server = Server::spawn_with_draft(qm, draft, serve_cfg);
+                let (done, dt) = run_serve(&server, prompts, max_new, priority)?;
+                println!("served {done} requests in {dt:.2}s\n{}", server.shutdown());
             }
         }
         Some("hw-report") => {

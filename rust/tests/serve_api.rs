@@ -1,0 +1,452 @@
+//! Acceptance suite for the unified streaming serving API: streaming ≡
+//! batch equivalence (engine and cluster, greedy and sampled, with and
+//! without speculation), byte-exact cancellation accounting, priority
+//! ordering, and deadline expiry — all through the same [`ServeApi`]
+//! surface the CLI and benches use. Needs no artifacts; runs on the
+//! nano preset.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use qrazor::baselines::QRazor;
+use qrazor::cluster::{ClusterConfig, ClusterServer};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{
+    collect_sessions, Engine, FinishReason, Priority, RequestId, Sampling, ServeApi, Server,
+    SubmitOptions, TokenEvent,
+};
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::util::rng::Rng;
+
+fn model(seed: u64) -> Arc<QuantModel> {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal))
+}
+
+/// Target (W4A8 basis) + draft (packed W4A4) pair from one set of
+/// weights, for the speculative axes.
+fn spec_pair(seed: u64) -> (Arc<QuantModel>, Arc<QuantModel>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let target = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a8kv4(16)), &cal));
+    let draft = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal));
+    (target, draft)
+}
+
+/// Seeded mixed workload: greedy and temperature-sampled requests,
+/// occasional stop tokens, varied priorities — everything the
+/// streaming ≡ batch property must hold over. (No deadlines: expiry
+/// is timing-dependent by design and pinned by its own test.)
+fn workload(seed: u64, n: usize, vocab: u64) -> Vec<(Vec<u32>, usize, SubmitOptions)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let len = 2 + rng.index(10);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+            let max_new = 2 + rng.index(6);
+            let mut opts = SubmitOptions::new();
+            if i % 3 == 1 {
+                opts = opts.sampling(Sampling::Temperature {
+                    temp: 0.9,
+                    seed: seed * 100 + i as u64,
+                });
+            }
+            if i % 4 == 2 {
+                opts = opts.stop_token(rng.below(vocab) as u32);
+            }
+            opts = opts.priority(match i % 3 {
+                0 => Priority::Interactive,
+                1 => Priority::Standard,
+                _ => Priority::Batch,
+            });
+            (prompt, max_new, opts)
+        })
+        .collect()
+}
+
+/// Token streams + finish reasons via the pre-redesign non-streaming
+/// path: a bare `Engine` stepped by `run_to_completion`.
+fn engine_baseline(
+    model: &Arc<QuantModel>,
+    work: &[(Vec<u32>, usize, SubmitOptions)],
+) -> BTreeMap<u64, (Vec<u32>, FinishReason)> {
+    let mut engine =
+        Engine::new(Arc::clone(model), ServeConfig { max_batch: 4, ..Default::default() });
+    for (i, (prompt, max_new, opts)) in work.iter().enumerate() {
+        engine.submit_request(opts.build(RequestId(i as u64), prompt.clone(), *max_new));
+    }
+    engine
+        .run_to_completion()
+        .into_iter()
+        .map(|r| (r.id.0, (r.tokens, r.finish)))
+        .collect()
+}
+
+/// Submit a workload through a [`ServeApi`] front-end and collect the
+/// sessions, asserting the per-session streaming ≡ batch identity.
+fn api_streams(
+    api: &impl ServeApi,
+    work: &[(Vec<u32>, usize, SubmitOptions)],
+) -> BTreeMap<u64, (Vec<u32>, FinishReason)> {
+    for (prompt, max_new, opts) in work {
+        api.submit_with(prompt.clone(), *max_new, *opts).unwrap();
+    }
+    let sessions = collect_sessions(api, work.len()).unwrap();
+    sessions
+        .into_iter()
+        .map(|(id, log)| {
+            let resp = log.response.expect("session finished");
+            assert_eq!(
+                log.tokens(),
+                resp.tokens,
+                "request {id:?}: concatenated Token payloads must be byte-identical \
+                 to the response stream"
+            );
+            (id.0, (resp.tokens, resp.finish))
+        })
+        .collect()
+}
+
+/// The acceptance property: for mixed greedy/sampled workloads with
+/// stop tokens and priorities, the streamed sessions of the threaded
+/// server and of 1/2/3-shard clusters are identical — tokens and
+/// finish reasons — to the pre-redesign batch engine path.
+#[test]
+fn streaming_equals_batch_across_engine_and_cluster() {
+    let model = model(61);
+    let vocab = model.config.vocab as u64;
+    for seed in [1u64, 7, 23] {
+        let work = workload(seed, 8, vocab);
+        let want = engine_baseline(&model, &work);
+        let server =
+            Server::spawn(Arc::clone(&model), ServeConfig { max_batch: 4, ..Default::default() });
+        let got = api_streams(&server, &work);
+        server.shutdown();
+        assert_eq!(got, want, "seed {seed}: server streams diverged from the batch engine");
+        for shards in [1usize, 2, 3] {
+            let cluster = ClusterServer::spawn(
+                Arc::clone(&model),
+                ClusterConfig {
+                    shards,
+                    serve: ServeConfig { max_batch: 4, ..Default::default() },
+                    ..Default::default()
+                },
+            );
+            let got = api_streams(&cluster, &work);
+            cluster.shutdown();
+            assert_eq!(
+                got, want,
+                "seed {seed}: {shards}-shard streams diverged from the batch engine"
+            );
+        }
+    }
+}
+
+/// Streaming ≡ batch with speculative decoding on: the W4A4 draft at
+/// several lookaheads (server and cluster) reproduces the plain
+/// engine's streams, and with a self-draft (acceptance exactly 1.0)
+/// accepted prefixes demonstrably flush as multi-token batches.
+#[test]
+fn streaming_equals_batch_with_speculation() {
+    let (target, draft) = spec_pair(71);
+    let vocab = target.config.vocab as u64;
+    let work = workload(5, 8, vocab);
+    let want = engine_baseline(&target, &work);
+    for k in [2usize, 3] {
+        let server = Server::spawn_with_draft(
+            Arc::clone(&target),
+            Some(Arc::clone(&draft)),
+            ServeConfig { max_batch: 4, spec_k: k, ..Default::default() },
+        );
+        let got = api_streams(&server, &work);
+        assert!(server.stats().spec.steps > 0, "k={k}: rounds must run");
+        server.shutdown();
+        assert_eq!(got, want, "k={k}: speculative server streams diverged");
+        let cluster = ClusterServer::spawn_with_draft(
+            Arc::clone(&target),
+            Some(Arc::clone(&draft)),
+            ClusterConfig {
+                shards: 2,
+                serve: ServeConfig { max_batch: 4, spec_k: k, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let got = api_streams(&cluster, &work);
+        cluster.shutdown();
+        assert_eq!(got, want, "k={k}: speculative cluster streams diverged");
+    }
+    // Self-draft: every draft token verifies, so each round commits
+    // k + 1 tokens and must arrive as one multi-token Token event.
+    let server = Server::spawn_with_draft(
+        Arc::clone(&target),
+        Some(Arc::clone(&target)),
+        ServeConfig { max_batch: 1, spec_k: 3, ..Default::default() },
+    );
+    let id = server.submit(vec![4, 2, 9], 8, Sampling::Greedy).unwrap();
+    let sessions = collect_sessions(&server, 1).unwrap();
+    server.shutdown();
+    let log = &sessions[&id];
+    assert!(
+        log.batches.iter().any(|(_, b)| b.len() > 1),
+        "an accepted prefix must flush as one batched Token event: {:?}",
+        log.batches.iter().map(|(_, b)| b.len()).collect::<Vec<_>>()
+    );
+}
+
+/// Byte-exact cancellation accounting at the engine level, plain and
+/// speculative: a twin engine that never saw the cancelled request
+/// holds byte-identical KV (and draft-pool) state after the cancel,
+/// and the surviving stream is unchanged.
+#[test]
+fn cancellation_returns_pool_bytes_exactly_and_leaves_streams_alone() {
+    let (target, draft) = spec_pair(81);
+    for spec in [false, true] {
+        let mk = || {
+            let cfg = ServeConfig {
+                max_batch: 4,
+                spec_k: if spec { 3 } else { 0 },
+                ..Default::default()
+            };
+            if spec {
+                Engine::with_draft(Arc::clone(&target), Some(Arc::clone(&draft)), cfg)
+            } else {
+                Engine::new(Arc::clone(&target), cfg)
+            }
+        };
+        let mut with_victim = mk();
+        let mut twin = mk();
+        // identical long-running request on both
+        with_victim.submit(vec![3, 1, 2], 40, Sampling::Greedy);
+        twin.submit(vec![3, 1, 2], 40, Sampling::Greedy);
+        for _ in 0..3 {
+            with_victim.step();
+            twin.step();
+        }
+        // the victim arrives only on one engine, mid-flight
+        let victim = with_victim.submit(vec![7, 8, 9], 30, Sampling::Greedy);
+        for _ in 0..4 {
+            with_victim.step();
+            twin.step();
+        }
+        assert!(
+            with_victim.kv_bytes() > twin.kv_bytes(),
+            "spec={spec}: the victim must hold pool bytes while live"
+        );
+        assert!(with_victim.cancel(victim), "spec={spec}: victim is live");
+        assert_eq!(
+            with_victim.kv_bytes(),
+            twin.kv_bytes(),
+            "spec={spec}: cancel must return KV + draft-pool occupancy byte-exactly \
+             to the never-submitted baseline"
+        );
+        assert_eq!(
+            with_victim.pool_occupancy().reserved_tokens,
+            twin.pool_occupancy().reserved_tokens,
+            "spec={spec}: token reservations must match the baseline too"
+        );
+        // cancelling the same id again finds nothing
+        assert!(!with_victim.cancel(victim), "spec={spec}: cancel is idempotent");
+        // the cancelled response carries the partial stream
+        let cancelled = with_victim
+            .take_completed()
+            .into_iter()
+            .find(|r| r.id == victim)
+            .expect("cancelled response delivered");
+        assert_eq!(cancelled.finish, FinishReason::Cancelled);
+        assert!(!cancelled.tokens.is_empty(), "spec={spec}: victim streamed before cancel");
+        // survivor streams on, identical to the twin
+        let mut a = with_victim.run_to_completion();
+        let mut b = twin.run_to_completion();
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        assert_eq!(a.len(), 1);
+        assert_eq!(
+            a[0].tokens, b[0].tokens,
+            "spec={spec}: another request's cancellation must not perturb the stream"
+        );
+        assert_eq!(with_victim.kv_bytes(), 0, "spec={spec}: full drain");
+        assert_eq!(twin.kv_bytes(), 0);
+    }
+}
+
+/// Queued-request cancellation purges the batcher without a step.
+#[test]
+fn cancellation_of_a_queued_request_purges_the_queue() {
+    let model = model(83);
+    let mut e =
+        Engine::new(Arc::clone(&model), ServeConfig { max_batch: 1, ..Default::default() });
+    let runner = e.submit(vec![1, 2], 20, Sampling::Greedy);
+    let queued = e.submit(vec![3, 4], 20, Sampling::Greedy);
+    e.step(); // admits only the runner (one batch slot)
+    assert!(e.cancel(queued), "still queued → purged");
+    let done = e.take_completed();
+    let resp = done.iter().find(|r| r.id == queued).expect("answered");
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+    assert!(resp.tokens.is_empty(), "a queued cancel never generated");
+    let rest = e.run_to_completion();
+    assert_eq!(rest.len(), 1);
+    assert_eq!(rest[0].id, runner);
+    assert_eq!(rest[0].tokens.len(), 20);
+}
+
+/// Cluster-level cancellation: cancel a running session mid-stream via
+/// the `ServeApi`; its partial response matches its streamed prefix
+/// (a prefix of the uncancelled baseline stream), every other
+/// session's stream is unchanged, and the shard pools drain to zero
+/// bytes.
+#[test]
+fn cancellation_on_the_cluster_leaves_other_streams_unchanged() {
+    let model = model(87);
+    let vocab = model.config.vocab as u64;
+    let serve = ServeConfig { max_batch: 4, max_new_tokens: 512, ..Default::default() };
+    // workload: one long-running victim + five short survivors
+    let mut rng = Rng::new(3);
+    let mut prompts: Vec<Vec<u32>> = vec![vec![9, 1, 4, 4]];
+    for _ in 0..5 {
+        let len = 2 + rng.index(6);
+        prompts.push((0..len).map(|_| rng.below(vocab) as u32).collect());
+    }
+    // baseline: the same six requests, uncancelled, on a bare engine
+    let baseline: BTreeMap<u64, Vec<u32>> = {
+        let mut e = Engine::new(Arc::clone(&model), serve.clone());
+        for (i, p) in prompts.iter().enumerate() {
+            let max_new = if i == 0 { 300 } else { 6 };
+            e.submit(p.clone(), max_new, Sampling::Greedy);
+        }
+        e.run_to_completion().into_iter().map(|r| (r.id.0, r.tokens)).collect()
+    };
+    let cluster = ClusterServer::spawn(
+        Arc::clone(&model),
+        ClusterConfig { shards: 2, serve, ..Default::default() },
+    );
+    let mut ids = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let max_new = if i == 0 { 300 } else { 6 };
+        ids.push(cluster.submit(p.clone(), max_new, Sampling::Greedy).unwrap());
+    }
+    let victim = ids[0];
+    // collect events by hand so we can cancel the moment the victim
+    // demonstrably streams
+    let mut logs: BTreeMap<RequestId, Vec<u32>> = BTreeMap::new();
+    let mut finished: BTreeMap<RequestId, qrazor::coordinator::Response> = BTreeMap::new();
+    let mut cancelled = false;
+    while finished.len() < prompts.len() {
+        match cluster.next_event().unwrap() {
+            TokenEvent::Started { .. } => {}
+            TokenEvent::Token { id, tokens, .. } => {
+                logs.entry(id).or_default().extend(tokens);
+                if id == victim && !cancelled {
+                    cluster.cancel(victim).unwrap();
+                    cancelled = true;
+                }
+            }
+            TokenEvent::Finished { id, response } => {
+                finished.insert(id, response);
+            }
+        }
+    }
+    let vresp = &finished[&victim];
+    assert_eq!(vresp.finish, FinishReason::Cancelled);
+    assert!(!vresp.tokens.is_empty(), "cancel landed after streaming began");
+    assert!(vresp.tokens.len() < 300, "cancel landed mid-flight");
+    assert_eq!(&vresp.tokens, &logs[&victim], "partial response ≡ streamed prefix");
+    let full = &baseline[&victim.0];
+    assert_eq!(
+        &full[..vresp.tokens.len()],
+        &vresp.tokens[..],
+        "the partial stream is a prefix of the uncancelled stream"
+    );
+    for id in &ids[1..] {
+        assert_eq!(
+            finished[id].tokens,
+            baseline[&id.0],
+            "survivor {id:?} must stream exactly the baseline tokens"
+        );
+        assert_eq!(finished[id].finish, FinishReason::Length);
+    }
+    let report = cluster.shutdown();
+    for s in &report.shards {
+        assert_eq!(s.final_occupancy.bytes, 0, "shard {} must drain byte-exactly", s.index);
+        assert_eq!(s.final_occupancy.reserved_tokens, 0);
+    }
+}
+
+/// Priority classes reorder queued admission: an interactive arrival
+/// jumps the whole standard/batch queue, and the deferral-aging pin
+/// then guarantees the overtaken requests go next in queue order —
+/// bounded priority inversion, no starvation.
+#[test]
+fn priority_tiers_order_queued_admission() {
+    let model = model(91);
+    let mut e =
+        Engine::new(Arc::clone(&model), ServeConfig { max_batch: 1, ..Default::default() });
+    let submit = |e: &mut Engine, id: u64, p: Priority| {
+        let opts = SubmitOptions::new().priority(p);
+        e.submit_request(opts.build(RequestId(id), vec![1 + id as u32, 2], 4));
+    };
+    submit(&mut e, 0, Priority::Standard);
+    submit(&mut e, 1, Priority::Batch);
+    submit(&mut e, 2, Priority::Standard);
+    submit(&mut e, 3, Priority::Interactive);
+    let order: Vec<u64> = e.run_to_completion().into_iter().map(|r| r.id.0).collect();
+    // Interactive (3) admits first; the overtaken 0, 2, 1 are pinned
+    // by deferral aging in their post-sort queue order: standard
+    // before batch, arrival order within a class.
+    assert_eq!(order, vec![3, 0, 2, 1]);
+}
+
+/// A queued request whose admission deadline passes finishes as
+/// `Expired` without ever decoding; running requests are unaffected.
+/// Pinned at the engine level and through the cluster's `ServeApi`.
+#[test]
+fn deadline_expires_queued_requests_only() {
+    let model = model(93);
+    let mut e =
+        Engine::new(Arc::clone(&model), ServeConfig { max_batch: 1, ..Default::default() });
+    // the runner holds the only batch slot and carries a generous
+    // deadline — running work is never expired
+    let runner_opts = SubmitOptions::new().deadline(Duration::from_secs(3600));
+    e.submit_request(runner_opts.build(RequestId(0), vec![5, 6, 7], 6));
+    let doomed_opts = SubmitOptions::new().deadline(Duration::ZERO);
+    e.submit_request(doomed_opts.build(RequestId(1), vec![8, 9], 6));
+    let mut out = e.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].finish, FinishReason::Length);
+    assert_eq!(out[0].tokens.len(), 6);
+    assert_eq!(out[1].finish, FinishReason::Expired);
+    assert!(out[1].tokens.is_empty());
+    assert!(e.is_idle());
+    assert_eq!(e.kv_bytes(), 0);
+
+    // the same contract through the sharded front-end
+    let cluster = ClusterServer::spawn(
+        Arc::clone(&model),
+        ClusterConfig { shards: 2, ..Default::default() },
+    );
+    let ok = cluster.submit(vec![1, 2, 3], 4, Sampling::Greedy).unwrap();
+    let doomed = cluster
+        .submit_with(vec![4, 5], 4, SubmitOptions::new().deadline(Duration::ZERO))
+        .unwrap();
+    let sessions = collect_sessions(&cluster, 2).unwrap();
+    cluster.shutdown();
+    let okr = sessions[&ok].response.as_ref().unwrap();
+    assert_eq!(okr.finish, FinishReason::Length);
+    assert_eq!(okr.tokens.len(), 4);
+    let dr = sessions[&doomed].response.as_ref().unwrap();
+    assert_eq!(dr.finish, FinishReason::Expired);
+    assert!(dr.tokens.is_empty());
+}
