@@ -1,11 +1,19 @@
 //! Comparator quantization schemes from the paper's evaluation tables.
 //!
 //! Every scheme implements [`Scheme`]: an offline weight transform, an
-//! online activation transform, and a KV/query transform. The model
-//! (`crate::model`) is scheme-agnostic — it calls these hooks at every
-//! GEMM boundary, so QRazor and all baselines run through the *same*
-//! forward pass and their accuracy numbers are directly comparable,
-//! mirroring how the paper holds the model fixed across Table 2 rows.
+//! online activation transform, and a KV/query transform. Since the
+//! per-site policy redesign the model (`crate::model`) consumes a
+//! [`crate::policy::QuantPolicy`] rather than a bare scheme: a
+//! `Box<dyn Scheme>` converts into a *uniform* policy
+//! (`QuantPolicy::uniform` / `From`) whose hooks run unchanged at
+//! every layer and site, so QRazor and all baselines still run
+//! through the *same* forward pass and their accuracy numbers are
+//! directly comparable, mirroring how the paper holds the model fixed
+//! across Table 2 rows. Mixed-precision (per-layer, per-site) plans
+//! are expressed with razor-native policies in `crate::policy`; the
+//! trait here stays the extension point for quantizers whose
+//! transforms don't fit the basis/target/group vocabulary (Hadamard
+//! rotations, channel splitting, error-compensating solvers).
 //!
 //! Implemented baselines (→ paper rows they stand in for):
 //! * [`rtn`] — per-group round-to-nearest / dynamic max-scaled
@@ -87,24 +95,29 @@ pub struct PreparedLinear {
 impl PreparedLinear {
     /// Full quantized linear: transform the activation, multiply by the
     /// prepared weight. `y = q_a(x) · Ŵᵀ`. Equivalent to
-    /// [`PreparedLinear::forward_with_packed`] with the packed path on.
+    /// [`PreparedLinear::forward_with_packed`] with the packed path on
+    /// and the scheme's shared `act` hook as the fallback transform.
     pub fn forward(
         &self,
         x: &Tensor<f32>,
         static_scale: Option<f32>,
         scheme: &dyn Scheme,
     ) -> Tensor<f32> {
-        self.forward_with_packed(x, static_scale, scheme, true)
+        self.forward_with_packed(x, static_scale, &|x, s| scheme.act(x, s), true)
     }
 
     /// Forward with the packed compute path explicitly enabled/disabled
     /// (disabled = the staged fake-quant + f32 reference path; the
     /// serving bench uses the toggle to measure packed vs unpacked).
+    /// `act` is the fallback activation transform — the policy's (or
+    /// scheme's) per-site quantizer — used when neither a packed
+    /// operand nor a layer-bound [`PreparedLinear::act_override`]
+    /// applies.
     pub fn forward_with_packed(
         &self,
         x: &Tensor<f32>,
         static_scale: Option<f32>,
-        scheme: &dyn Scheme,
+        act: &dyn Fn(&Tensor<f32>, Option<f32>) -> Tensor<f32>,
         use_packed: bool,
     ) -> Tensor<f32> {
         if use_packed {
@@ -114,7 +127,7 @@ impl PreparedLinear {
         }
         let xq = match &self.act_override {
             Some(f) => f(x, static_scale),
-            None => scheme.act(x, static_scale),
+            None => act(x, static_scale),
         };
         crate::tensor::matmul_bt(&xq, &self.weight)
     }
@@ -315,8 +328,10 @@ impl Scheme for QRazor {
 /// Per-tensor transform shared by activations and KV: when `target ==
 /// base` stage 2 is skipped (plain stage-1 quant — the Table 1 base
 /// precision scenarios); otherwise full QRazor. Static scales are
-/// honored in both paths.
-fn quant_or_razor(x: &Tensor<f32>, spec: SdrSpec, static_scale: Option<f32>) -> Tensor<f32> {
+/// honored in both paths. Shared with the razor-native policy backend
+/// (`crate::policy`), which is what pins the uniform-policy ≡
+/// old-scheme bit-identity property.
+pub fn quant_or_razor(x: &Tensor<f32>, spec: SdrSpec, static_scale: Option<f32>) -> Tensor<f32> {
     if spec.target_bits >= spec.base_bits {
         return match static_scale {
             Some(s) => crate::quant::QuantTensor::quantize_static(x, spec.base_bits, &[s])
@@ -414,7 +429,7 @@ mod tests {
         let pl = s.prep_linear(&w, None);
         assert!(pl.packed.is_some(), "W4A4 must carry a packed weight");
         let packed = pl.forward(&x, None, &s);
-        let staged = pl.forward_with_packed(&x, None, &s, false);
+        let staged = pl.forward_with_packed(&x, None, &|x, sc| s.act(x, sc), false);
         // Same integer lattice on both paths; only the f32 summation
         // order differs (exact i64 accumulate + one scale vs f32 dots).
         let rel = rel_error(&staged, &packed);
@@ -433,7 +448,7 @@ mod tests {
         let pl = s.prep_linear(&w, None);
         let scale = crate::quant::absmax_scale(x.data(), 16);
         let packed = pl.forward(&x, Some(scale), &s);
-        let staged = pl.forward_with_packed(&x, Some(scale), &s, false);
+        let staged = pl.forward_with_packed(&x, Some(scale), &|x, sc| s.act(x, sc), false);
         let rel = rel_error(&staged, &packed);
         assert!(rel < 1e-4, "rel {rel}");
     }
@@ -450,13 +465,13 @@ mod tests {
         assert!(pl.packed.is_some(), "W4A8 must carry a packed weight");
         assert_eq!(pl.packed.as_ref().unwrap().act_spec.target_bits, 8);
         let packed = pl.forward(&x, None, &s);
-        let staged = pl.forward_with_packed(&x, None, &s, false);
+        let staged = pl.forward_with_packed(&x, None, &|x, sc| s.act(x, sc), false);
         let rel = rel_error(&staged, &packed);
         assert!(rel < 1e-4, "packed A8 diverged from staged: rel {rel}");
         // with a calibrated static scale too
         let scale = crate::quant::absmax_scale(x.data(), 16);
         let packed_s = pl.forward(&x, Some(scale), &s);
-        let staged_s = pl.forward_with_packed(&x, Some(scale), &s, false);
+        let staged_s = pl.forward_with_packed(&x, Some(scale), &|x, sc| s.act(x, sc), false);
         let rel_s = rel_error(&staged_s, &packed_s);
         assert!(rel_s < 1e-4, "static-scale packed A8 diverged: rel {rel_s}");
         // weight operand stream still halves (the weight store is the

@@ -8,9 +8,10 @@
 //! routes the request over the shard's channel — no coordinator
 //! thread, no extra hop. Streaming path: each worker's step pulse
 //! carries the step's token events and completions; the router
-//! updates its accounting, then forwards events into one shared event
-//! channel and responses into one shared completions channel the
-//! caller polls or blocks on. Cancellation: the router marks the id,
+//! updates its accounting, then forwards events into one shared
+//! [`EventHub`] (per-session bounded rings — see
+//! `crate::coordinator::api`) and responses into one shared
+//! completions channel the caller polls or blocks on. Cancellation: the router marks the id,
 //! then sends a `Cancel` down the owning shard's channel under the
 //! router lock — the same lock [`ClusterServer::try_rebalance`] holds
 //! while it requeues drained requests, so a drained-then-cancelled
@@ -31,7 +32,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::ServeConfig;
-use crate::coordinator::api::{ServeApi, ServeStats};
+use crate::coordinator::api::{EventHub, ServeApi, ServeStats};
 use crate::coordinator::kv::PoolOccupancy;
 use crate::coordinator::request::{Request, RequestId, Response, SubmitOptions, TokenEvent};
 use crate::model::quantized::QuantModel;
@@ -110,7 +111,7 @@ pub struct ClusterServer {
     workers: Vec<ShardEngine>,
     state: Arc<Mutex<RouterInner>>,
     completions: mpsc::Receiver<Response>,
-    events: mpsc::Receiver<TokenEvent>,
+    events: Arc<EventHub>,
     next_id: AtomicU64,
     started: Instant,
 }
@@ -181,13 +182,16 @@ impl ClusterServer {
             placement: Placement::new(cfg.placement),
         }));
         let (done_tx, done_rx) = mpsc::channel::<Response>();
-        let (event_tx, event_rx) = mpsc::channel::<TokenEvent>();
+        // One hub for every shard's token events, with the per-session
+        // bounded ring (drop-oldest Token; Started/Finished always
+        // delivered; drops surfaced in ServeStats::events_dropped).
+        let events = EventHub::new(cfg.serve.event_ring, "all shard workers gone");
         let thread_cap = (num_threads() / cfg.shards).max(1);
         let workers = (0..cfg.shards)
             .map(|i| {
                 let st = Arc::clone(&state);
                 let tx = done_tx.clone();
-                let etx = event_tx.clone();
+                let etx = events.producer();
                 ShardEngine::spawn(
                     i,
                     Arc::clone(&model),
@@ -215,24 +219,23 @@ impl ClusterServer {
                             let _ = tx.send(r);
                         }
                         for ev in pulse.events {
-                            let _ = etx.send(ev);
+                            etx.send(ev);
                         }
                     },
                 )
             })
             .collect();
-        // workers hold the only remaining senders: once every shard
-        // exits, the completions and event channels disconnect and
-        // drain — the liveness signal poll_completion/poll_event
+        // workers hold the only remaining completion senders and event
+        // producers: once every shard exits, the channels disconnect
+        // and drain — the liveness signal poll_completion/poll_event
         // report instead of spinning forever.
         drop(done_tx);
-        drop(event_tx);
         ClusterServer {
             cfg,
             workers,
             state,
             completions: done_rx,
-            events: event_rx,
+            events,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
         }
@@ -549,24 +552,20 @@ impl ServeApi for ClusterServer {
     }
 
     fn next_event(&self) -> anyhow::Result<TokenEvent> {
-        self.events
-            .recv()
-            .map_err(|_| anyhow::anyhow!("all shard workers gone"))
+        self.events.next()
     }
 
     fn poll_event(&self) -> anyhow::Result<Option<TokenEvent>> {
-        match self.events.try_recv() {
-            Ok(ev) => Ok(Some(ev)),
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Err(anyhow::anyhow!("all shard workers gone"))
-            }
-        }
+        self.events.poll()
     }
 
     fn stats(&self) -> ServeStats {
         let s = self.state.lock().unwrap();
-        let mut st = ServeStats { shards: s.shards.len(), ..Default::default() };
+        let mut st = ServeStats {
+            shards: s.shards.len(),
+            events_dropped: self.events.dropped(),
+            ..Default::default()
+        };
         for sh in &s.shards {
             st.requests_submitted += sh.submitted;
             st.requests_completed += sh.completed;

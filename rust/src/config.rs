@@ -137,7 +137,7 @@ impl ModelConfig {
 }
 
 /// Serving/experiment configuration for the coordinator.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     /// Max concurrent sequences in a decode batch.
     pub max_batch: usize,
@@ -147,11 +147,26 @@ pub struct ServeConfig {
     pub max_step_tokens: usize,
     /// KV pool capacity in tokens.
     pub kv_pool_tokens: usize,
-    /// SDR group size for the compressed KV pool.
+    /// SDR group size for the compressed KV pool (the fallback group
+    /// for uniform scheme backends; razor-native policies carry their
+    /// own per-layer KV groups).
     pub kv_group: usize,
     /// Speculative lookahead: draft tokens per round when the engine
     /// carries a draft model (0 = plain one-token-per-step decode).
     pub spec_k: usize,
+    /// The serving (verify) quantization policy, in the policy DSL —
+    /// recorded so a serve run emits one reproducible manifest; the
+    /// CLI builds the target model from it.
+    pub policy: String,
+    /// The draft policy for speculative decoding — the razored
+    /// low-fidelity twin of `policy` (used when `spec_k > 0`).
+    pub draft_policy: String,
+    /// Per-session `Token`-event ring capacity for the streaming
+    /// surface: a client consuming slower than decode keeps at most
+    /// this many undelivered `Token` events per session (oldest are
+    /// dropped and counted in `ServeStats::events_dropped`;
+    /// `Started`/`Finished` are always delivered). 0 = unbounded.
+    pub event_ring: usize,
 }
 
 impl Default for ServeConfig {
@@ -163,7 +178,53 @@ impl Default for ServeConfig {
             kv_pool_tokens: 16_384,
             kv_group: 16,
             spec_k: 0,
+            policy: "w4a4kv4:16".into(),
+            draft_policy: "w4a4kv4:16".into(),
+            event_ring: 1024,
         }
+    }
+}
+
+impl ServeConfig {
+    /// One reproducible JSON manifest for a serve run (includes the
+    /// speculative lookahead and both policy names).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("max_batch", Json::from(self.max_batch)),
+            ("max_new_tokens", Json::from(self.max_new_tokens)),
+            ("max_step_tokens", Json::from(self.max_step_tokens)),
+            ("kv_pool_tokens", Json::from(self.kv_pool_tokens)),
+            ("kv_group", Json::from(self.kv_group)),
+            ("spec_k", Json::from(self.spec_k)),
+            ("policy", Json::from(self.policy.clone())),
+            ("draft_policy", Json::from(self.draft_policy.clone())),
+            ("event_ring", Json::from(self.event_ring)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ServeConfig> {
+        let get = |k: &str| -> anyhow::Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("field '{k}' not a number"))
+        };
+        let get_str = |k: &str| -> anyhow::Result<String> {
+            Ok(j.req(k)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("field '{k}' not a string"))?
+                .to_string())
+        };
+        Ok(ServeConfig {
+            max_batch: get("max_batch")?,
+            max_new_tokens: get("max_new_tokens")?,
+            max_step_tokens: get("max_step_tokens")?,
+            kv_pool_tokens: get("kv_pool_tokens")?,
+            kv_group: get("kv_group")?,
+            spec_k: get("spec_k")?,
+            policy: get_str("policy")?,
+            draft_policy: get_str("draft_policy")?,
+            event_ring: get("event_ring")?,
+        })
     }
 }
 
@@ -197,6 +258,23 @@ mod tests {
         let c = ModelConfig::preset("mistral-tiny").unwrap();
         let j = Json::parse(&c.to_json().to_string()).unwrap();
         assert_eq!(ModelConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn serve_config_json_roundtrip() {
+        let c = ServeConfig {
+            spec_k: 3,
+            policy: "w4a8kv4:16".into(),
+            draft_policy: "w4a4kv4:16;layers=0:w4a8".into(),
+            event_ring: 32,
+            ..Default::default()
+        };
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let back = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+        // missing fields are an error, not a silent default
+        let partial = Json::from_pairs(vec![("max_batch", Json::from(4usize))]);
+        assert!(ServeConfig::from_json(&partial).is_err());
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //! *as generation happens*, so time-to-first-token and inter-token
 //! latency are externally measurable instead of post-hoc fields.
 //! Concatenating a session's `Token` payloads is byte-identical to its
-//! `Response::tokens` (property-tested at engine and cluster level).
+//! `Response::tokens` (property-tested at engine and cluster level)
+//! **as long as the session's backpressure ring never overflows**: a
+//! consumer lagging more than `ServeConfig::event_ring` token batches
+//! keeps only the freshest tail of the live stream (see [`EventHub`]),
+//! and the final `Response` is always the complete source of truth.
 //!
 //! [`ServeApi::cancel`] ends a session early: a queued request is
 //! purged from the batcher, a running one releases its KV (and
@@ -26,7 +30,8 @@
 //! serving benches, the e2e example, the equivalence test suites —
 //! are written once and run against one engine or N shards unchanged.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::kv::PoolOccupancy;
@@ -48,6 +53,12 @@ pub struct ServeStats {
     /// High-water mark of packed KV bytes (summed per-engine peaks) —
     /// the paper's memory claim as observed by this serving run.
     pub kv_bytes_peak: usize,
+    /// `Token` events dropped by the per-session backpressure ring
+    /// (see [`EventHub`]): sessions consumed slower than decode lose
+    /// their oldest undelivered token batches — never their
+    /// `Started`/`Finished` markers, unless the whole *finished*
+    /// session is evicted past the cross-session backlog.
+    pub events_dropped: u64,
     /// Speculative-decoding accounting (all-zero without a draft).
     pub spec: SpecStats,
 }
@@ -99,6 +110,242 @@ pub trait ServeApi {
         sampling: Sampling,
     ) -> anyhow::Result<RequestId> {
         self.submit_with(prompt, max_new, SubmitOptions::new().sampling(sampling))
+    }
+}
+
+/// The event fan-in with **per-session backpressure** behind every
+/// serving front-end: step loops publish [`TokenEvent`]s through
+/// [`EventProducer`]s; clients drain them via
+/// [`ServeApi::next_event`]/[`ServeApi::poll_event`].
+///
+/// Before this ring existed, events buffered unboundedly in a channel
+/// whenever a client streamed slower than decode. Now each session
+/// keeps at most `cap` undelivered `Token` events: pushing one more
+/// drops that session's **oldest** queued `Token` event (drop-oldest
+/// semantics — the freshest tail always survives, so a slow consumer
+/// reconnects near the live edge). `Started` and `Finished` are never
+/// dropped: a session always resolves, and its final [`Response`]
+/// carries the complete token stream regardless of what the live
+/// stream lost. Dropped batches are counted and surfaced as
+/// [`ServeStats::events_dropped`]. `cap == 0` means unbounded.
+///
+/// Delivery order across sessions is FIFO by publish time, exactly
+/// like the channel it replaces; the hub reports "gone" only when
+/// every producer has dropped *and* the queue is drained, matching
+/// the disconnect semantics callers already rely on.
+///
+/// Memory is bounded on *both* axes: per session by the Token ring,
+/// and across sessions by a finished-session backlog — a consumer
+/// that never drains events (batch callers using only the completions
+/// channel) does not accumulate hub state forever. Once more than
+/// [`FINISHED_SESSION_BACKLOG`] *finished* sessions sit undrained,
+/// the oldest finished session's remaining events are evicted whole
+/// (its `Response` was already delivered through the completions
+/// path). Dropping is O(1): dropped events are tombstoned in place
+/// and skipped on pop, with an amortized compaction keeping the live
+/// queue at most ~2× the live event count.
+pub struct EventHub {
+    cap: usize,
+    gone_msg: &'static str,
+    inner: Mutex<HubInner>,
+    cv: Condvar,
+}
+
+/// Max *finished* sessions retained with undrained events before the
+/// oldest finished session's events are evicted whole (see
+/// [`EventHub`]). Live (unfinished) sessions are never evicted.
+pub const FINISHED_SESSION_BACKLOG: usize = 8192;
+
+/// Per-session ring accounting: sequence numbers of the session's
+/// queued events, split by class so drop-oldest-Token is O(1).
+#[derive(Default)]
+struct SessionQ {
+    /// Seqs of queued `Token` events, oldest first (ring-bounded).
+    tokens: VecDeque<u64>,
+    /// Seqs of queued `Started`/`Finished` markers (at most two).
+    markers: Vec<u64>,
+}
+
+#[derive(Default)]
+struct HubInner {
+    /// FIFO of seq-stamped events; tombstoned seqs (`dead`) are
+    /// skipped on pop and purged by the amortized compaction.
+    queue: VecDeque<(u64, TokenEvent)>,
+    dead: BTreeSet<u64>,
+    sessions: BTreeMap<RequestId, SessionQ>,
+    /// Sessions whose `Finished` is queued, oldest first (may hold
+    /// stale ids for sessions drained since; cleaned lazily).
+    finished_order: VecDeque<RequestId>,
+    next_seq: u64,
+    dropped: u64,
+    producers: usize,
+}
+
+impl HubInner {
+    /// Purge tombstones once they dominate the queue — amortized O(1)
+    /// per drop, keeping memory proportional to live events.
+    fn maybe_compact(&mut self) {
+        if self.dead.len() >= 64 && self.dead.len() * 2 >= self.queue.len() {
+            let dead = std::mem::take(&mut self.dead);
+            self.queue.retain(|(seq, _)| !dead.contains(seq));
+        }
+    }
+
+    /// Tombstone every remaining event of one session (backlog
+    /// eviction); only its Token events count as drops.
+    fn evict_session(&mut self, id: RequestId) {
+        if let Some(sq) = self.sessions.remove(&id) {
+            self.dropped += sq.tokens.len() as u64;
+            for seq in sq.tokens.into_iter().chain(sq.markers) {
+                self.dead.insert(seq);
+            }
+        }
+    }
+}
+
+impl EventHub {
+    /// `per_session_cap` bounds undelivered `Token` events per session
+    /// (0 = unbounded); `gone_msg` is the error reported once every
+    /// producer is gone and the queue has drained.
+    pub fn new(per_session_cap: usize, gone_msg: &'static str) -> Arc<EventHub> {
+        Arc::new(EventHub {
+            cap: per_session_cap,
+            gone_msg,
+            inner: Mutex::new(HubInner::default()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Register a producer handle. The hub counts live producers; when
+    /// the last one drops, blocked consumers wake and see "gone" once
+    /// the queue drains.
+    pub fn producer(self: &Arc<Self>) -> EventProducer {
+        self.inner.lock().unwrap().producers += 1;
+        EventProducer { hub: Arc::clone(self) }
+    }
+
+    fn push(&self, ev: TokenEvent) {
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let s = &mut *guard;
+            let seq = s.next_seq;
+            s.next_seq += 1;
+            match &ev {
+                TokenEvent::Token { id, .. } => {
+                    let sq = s.sessions.entry(*id).or_default();
+                    if self.cap > 0 && sq.tokens.len() >= self.cap {
+                        // Ring full for this session: tombstone its
+                        // oldest queued Token event (O(1)). Other
+                        // sessions' events are untouched.
+                        let victim = sq.tokens.pop_front().expect("ring non-empty");
+                        sq.tokens.push_back(seq);
+                        s.dead.insert(victim);
+                        s.dropped += 1;
+                    } else {
+                        sq.tokens.push_back(seq);
+                    }
+                }
+                TokenEvent::Started { id, .. } => {
+                    s.sessions.entry(*id).or_default().markers.push(seq);
+                }
+                TokenEvent::Finished { id, .. } => {
+                    s.sessions.entry(*id).or_default().markers.push(seq);
+                    s.finished_order.push_back(*id);
+                    // Cross-session bound: evict the oldest finished
+                    // sessions (stale ids for already-drained sessions
+                    // clean up for free here).
+                    while s.finished_order.len() > FINISHED_SESSION_BACKLOG {
+                        let victim = s.finished_order.pop_front().expect("non-empty");
+                        s.evict_session(victim);
+                    }
+                }
+            }
+            s.queue.push_back((seq, ev));
+            s.maybe_compact();
+        }
+        self.cv.notify_one();
+    }
+
+    fn pop(s: &mut HubInner) -> Option<TokenEvent> {
+        while let Some((seq, ev)) = s.queue.pop_front() {
+            if s.dead.remove(&seq) {
+                continue; // tombstoned by a ring drop or an eviction
+            }
+            match &ev {
+                TokenEvent::Token { id, .. } => {
+                    if let Some(sq) = s.sessions.get_mut(id) {
+                        // session token seqs are FIFO, so the popped
+                        // live event is always the session's front
+                        if sq.tokens.front() == Some(&seq) {
+                            sq.tokens.pop_front();
+                        }
+                    }
+                }
+                TokenEvent::Started { id, .. } => {
+                    if let Some(sq) = s.sessions.get_mut(id) {
+                        sq.markers.retain(|&m| m != seq);
+                    }
+                }
+                // Terminal: the session's ring accounting can go (its
+                // finished_order entry is cleaned lazily on overflow).
+                TokenEvent::Finished { id, .. } => {
+                    s.sessions.remove(id);
+                }
+            }
+            return Some(ev);
+        }
+        None
+    }
+
+    /// Block for the next event; errs once every producer is gone and
+    /// the queue has drained.
+    pub fn next(&self) -> anyhow::Result<TokenEvent> {
+        let mut s = self.inner.lock().unwrap();
+        loop {
+            if let Some(ev) = EventHub::pop(&mut s) {
+                return Ok(ev);
+            }
+            if s.producers == 0 {
+                anyhow::bail!("{}", self.gone_msg);
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking poll with the [`ServeApi::poll_event`] contract.
+    pub fn poll(&self) -> anyhow::Result<Option<TokenEvent>> {
+        let mut s = self.inner.lock().unwrap();
+        if let Some(ev) = EventHub::pop(&mut s) {
+            return Ok(Some(ev));
+        }
+        if s.producers == 0 {
+            anyhow::bail!("{}", self.gone_msg);
+        }
+        Ok(None)
+    }
+
+    /// Total `Token` events dropped by the per-session rings so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+}
+
+/// A publishing handle onto an [`EventHub`]; dropping the last one
+/// marks the hub "gone" for consumers (after the queue drains).
+pub struct EventProducer {
+    hub: Arc<EventHub>,
+}
+
+impl EventProducer {
+    pub fn send(&self, ev: TokenEvent) {
+        self.hub.push(ev);
+    }
+}
+
+impl Drop for EventProducer {
+    fn drop(&mut self) {
+        self.hub.inner.lock().unwrap().producers -= 1;
+        self.hub.cv.notify_all();
     }
 }
 
@@ -218,5 +465,116 @@ mod tests {
     fn stats_in_flight_never_underflows() {
         let s = ServeStats { requests_submitted: 2, requests_completed: 5, ..Default::default() };
         assert_eq!(s.in_flight(), 0);
+    }
+
+    fn tok(id: u64, t: u32) -> TokenEvent {
+        TokenEvent::Token { id: RequestId(id), tokens: vec![t], at: Instant::now() }
+    }
+
+    #[test]
+    fn event_ring_drops_oldest_token_per_session() {
+        let hub = EventHub::new(2, "gone");
+        let p = hub.producer();
+        p.send(TokenEvent::Started { id: RequestId(1), at: Instant::now() });
+        for t in 0..5 {
+            p.send(tok(1, t));
+        }
+        // session 2 is unaffected by session 1's overflow
+        p.send(tok(2, 99));
+        assert_eq!(hub.dropped(), 3);
+        // Started survives; only the freshest two Token events remain
+        assert!(matches!(hub.next().unwrap(), TokenEvent::Started { .. }));
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            if let TokenEvent::Token { id, tokens, .. } = hub.next().unwrap() {
+                seen.push((id.0, tokens[0]));
+            } else {
+                panic!("expected Token");
+            }
+        }
+        assert_eq!(seen, vec![(1, 3), (1, 4), (2, 99)]);
+        assert!(matches!(hub.poll(), Ok(None)));
+    }
+
+    #[test]
+    fn event_ring_zero_cap_is_unbounded() {
+        let hub = EventHub::new(0, "gone");
+        let p = hub.producer();
+        for t in 0..100 {
+            p.send(tok(1, t));
+        }
+        assert_eq!(hub.dropped(), 0);
+        for t in 0..100 {
+            match hub.next().unwrap() {
+                TokenEvent::Token { tokens, .. } => assert_eq!(tokens[0], t),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hub_reports_gone_only_after_draining() {
+        let hub = EventHub::new(4, "every worker gone");
+        let p = hub.producer();
+        p.send(tok(1, 0));
+        drop(p);
+        // queued events still drain after the last producer dies
+        assert!(matches!(hub.poll(), Ok(Some(_))));
+        let err = hub.poll().unwrap_err().to_string();
+        assert!(err.contains("every worker gone"));
+        assert!(hub.next().is_err());
+    }
+
+    #[test]
+    fn finished_session_backlog_evicts_oldest_whole_sessions() {
+        // Cross-session memory bound: a consumer that never drains
+        // its events does not accumulate hub state forever — past the
+        // backlog, the oldest *finished* session's events are evicted
+        // whole (its Response already went out via completions).
+        let hub = EventHub::new(4, "gone");
+        let p = hub.producer();
+        let n = FINISHED_SESSION_BACKLOG + 1;
+        for i in 0..n as u64 {
+            p.send(TokenEvent::Started { id: RequestId(i), at: Instant::now() });
+            p.send(tok(i, 1));
+            let response = Response {
+                id: RequestId(i),
+                prompt_len: 1,
+                tokens: vec![1],
+                finish: crate::coordinator::request::FinishReason::Length,
+                ttft_s: 0.0,
+                total_s: 0.0,
+            };
+            p.send(TokenEvent::Finished { id: RequestId(i), response });
+        }
+        assert_eq!(hub.dropped(), 1, "the evicted session's one Token counts as dropped");
+        let mut saw_evicted = false;
+        let mut finished = 0usize;
+        while let Ok(Some(ev)) = hub.poll() {
+            if ev.id() == RequestId(0) {
+                saw_evicted = true;
+            }
+            if matches!(ev, TokenEvent::Finished { .. }) {
+                finished += 1;
+            }
+        }
+        assert!(!saw_evicted, "evicted session's events must never surface");
+        assert_eq!(finished, n - 1, "every retained session still resolves");
+    }
+
+    #[test]
+    fn ring_refills_after_consumption() {
+        // consuming events frees ring slots: a session alternating
+        // push/pop never drops
+        let hub = EventHub::new(1, "gone");
+        let p = hub.producer();
+        for t in 0..10 {
+            p.send(tok(1, t));
+            match hub.next().unwrap() {
+                TokenEvent::Token { tokens, .. } => assert_eq!(tokens[0], t),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(hub.dropped(), 0);
     }
 }

@@ -7,7 +7,14 @@
 //!   by both the single-engine [`Server`] and the sharded
 //!   [`crate::cluster::ClusterServer`], so every caller — CLI, benches,
 //!   examples, equivalence tests — is written once and runs against
-//!   one engine or N shards unchanged.
+//!   one engine or N shards unchanged. Events flow through the
+//!   [`api::EventHub`]'s per-session bounded rings
+//!   (`ServeConfig::event_ring`): a client streaming slower than
+//!   decode loses its oldest undelivered `Token` batches (counted in
+//!   [`api::ServeStats::events_dropped`]), never `Started`/`Finished`
+//!   or its final `Response` — and a finished-session backlog bounds
+//!   hub memory across sessions for consumers that never drain events
+//!   at all.
 //! * [`request`] — request/response types and ids, plus the session
 //!   vocabulary: [`request::SubmitOptions`] (sampling, stop token,
 //!   priority class, admission deadline), [`request::Priority`] SLO
@@ -58,7 +65,7 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use api::{collect_sessions, ServeApi, ServeStats, SessionLog};
+pub use api::{collect_sessions, EventHub, EventProducer, ServeApi, ServeStats, SessionLog};
 pub use request::{
     FinishReason, Priority, Request, RequestId, Response, Sampling, SubmitOptions, TokenEvent,
 };

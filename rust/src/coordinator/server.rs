@@ -18,7 +18,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::ServeConfig;
-use crate::coordinator::api::{ServeApi, ServeStats};
+use crate::coordinator::api::{EventHub, ServeApi, ServeStats};
 use crate::coordinator::request::{Request, RequestId, Response, SubmitOptions, TokenEvent};
 use crate::coordinator::scheduler::{drive, Engine, LoopMsg, StepLoop};
 use crate::model::quantized::QuantModel;
@@ -27,7 +27,7 @@ use crate::model::quantized::QuantModel;
 pub struct Server {
     tx: mpsc::Sender<LoopMsg>,
     completions: mpsc::Receiver<Response>,
-    events: mpsc::Receiver<TokenEvent>,
+    events: Arc<EventHub>,
     stats: Arc<Mutex<ServeStats>>,
     next_id: AtomicU64,
     max_new_tokens: usize,
@@ -52,7 +52,11 @@ impl Server {
         let model: Arc<QuantModel> = model.into();
         let (tx, rx) = mpsc::channel::<LoopMsg>();
         let (done_tx, done_rx) = mpsc::channel::<Response>();
-        let (event_tx, event_rx) = mpsc::channel::<TokenEvent>();
+        // Per-session bounded event ring: a slow stream consumer keeps
+        // at most `event_ring` undelivered Token events (drop-oldest;
+        // Started/Finished always delivered).
+        let events = EventHub::new(config.event_ring, "server worker gone");
+        let event_tx = events.producer();
         let stats = Arc::new(Mutex::new(ServeStats { shards: 1, ..Default::default() }));
         let shared = Arc::clone(&stats);
         let max_new_tokens = config.max_new_tokens;
@@ -70,7 +74,7 @@ impl Server {
                     s.spec = e.metrics.spec;
                 }
                 for ev in e.take_events() {
-                    let _ = event_tx.send(ev);
+                    event_tx.send(ev);
                 }
                 for r in done {
                     let _ = done_tx.send(r);
@@ -81,7 +85,7 @@ impl Server {
         Server {
             tx,
             completions: done_rx,
-            events: event_rx,
+            events,
             stats,
             next_id: AtomicU64::new(0),
             max_new_tokens,
@@ -133,23 +137,17 @@ impl ServeApi for Server {
     }
 
     fn next_event(&self) -> anyhow::Result<TokenEvent> {
-        self.events
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server worker gone"))
+        self.events.next()
     }
 
     fn poll_event(&self) -> anyhow::Result<Option<TokenEvent>> {
-        match self.events.try_recv() {
-            Ok(ev) => Ok(Some(ev)),
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Err(anyhow::anyhow!("server worker gone"))
-            }
-        }
+        self.events.poll()
     }
 
     fn stats(&self) -> ServeStats {
-        self.stats.lock().unwrap().clone()
+        let mut s = self.stats.lock().unwrap().clone();
+        s.events_dropped = self.events.dropped();
+        s
     }
 }
 
@@ -278,6 +276,75 @@ mod tests {
         assert_eq!(r.finish, FinishReason::Error);
         let summary = server.shutdown();
         assert!(summary.contains("1/1 done"), "{summary}");
+    }
+
+    #[test]
+    fn slow_consumer_ring_drops_oldest_tokens_only() {
+        // The per-session backpressure satellite: a client that doesn't
+        // drain its event stream until the request has finished keeps
+        // at most `event_ring` Token events (the freshest tail), the
+        // Started/Finished markers always arrive, the final Response
+        // still carries the complete stream, and the drop count is
+        // surfaced in ServeStats.
+        let server = Server::spawn(
+            model(),
+            ServeConfig { max_new_tokens: 64, event_ring: 4, ..Default::default() },
+        );
+        let id = server.submit(vec![1, 2, 3], 48, Sampling::Greedy).unwrap();
+        // consume nothing until the run is over — the slow consumer
+        let resp = server.next_completion().unwrap();
+        assert_eq!(resp.tokens.len(), 48);
+        let mut started = 0usize;
+        let mut token_events = 0usize;
+        let mut streamed: Vec<u32> = Vec::new();
+        let finished = loop {
+            match server.poll_event().unwrap() {
+                Some(TokenEvent::Started { .. }) => started += 1,
+                Some(TokenEvent::Token { tokens, .. }) => {
+                    token_events += 1;
+                    streamed.extend(tokens);
+                }
+                Some(TokenEvent::Finished { response, .. }) => break response,
+                None => std::thread::yield_now(),
+            }
+        };
+        assert_eq!(started, 1, "Started is never dropped");
+        assert_eq!(finished.id, id);
+        assert_eq!(finished.tokens.len(), 48, "the response carries the full stream");
+        assert!(token_events <= 4, "ring must bound Token events, got {token_events}");
+        // drop-oldest: what survives is exactly the freshest tail
+        assert_eq!(
+            streamed.as_slice(),
+            &finished.tokens[finished.tokens.len() - streamed.len()..],
+            "survivors must be the newest token batches, in order"
+        );
+        let stats = server.stats();
+        assert!(stats.events_dropped > 0, "drops must be counted");
+        assert_eq!(
+            stats.events_dropped as usize + token_events,
+            48,
+            "dropped + delivered = generated"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn tiny_ring_sessions_always_resolve_with_the_full_response() {
+        // Even under a 1-deep ring the session must resolve through
+        // the event stream (Finished is never dropped) and the final
+        // Response must carry the complete token stream, whatever the
+        // live stream lost to backpressure.
+        let server = Server::spawn(
+            model(),
+            ServeConfig { max_new_tokens: 8, event_ring: 1, ..Default::default() },
+        );
+        let id = server.submit(vec![2, 3, 4], 6, Sampling::Greedy).unwrap();
+        let sessions = collect_sessions(&server, 1).unwrap();
+        let log = &sessions[&id];
+        let resp = log.response.as_ref().expect("Finished always delivered");
+        assert_eq!(resp.tokens.len(), 6);
+        assert!(log.tokens().len() <= 6);
+        server.shutdown();
     }
 
     #[test]

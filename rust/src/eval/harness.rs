@@ -13,8 +13,9 @@ use crate::data::corpus::{lambada_corpus, pack_sequences, split_corpus, wiki_cor
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::perplexity::perplexity;
 use crate::eval::tasks::{accuracy, build_suite, Task};
-use crate::model::quantized::{calibrate, CalibrationData, QuantModel};
+use crate::model::quantized::{calibrate, CalibrationData, DecodeCache, QuantModel};
 use crate::model::{checkpoint, FpModel, LanguageModel, ModelWeights};
+use crate::policy::QuantPolicy;
 
 /// Evaluation scale knobs; `quick()` keeps CI fast, `full()` is the
 /// EXPERIMENTS.md configuration.
@@ -187,6 +188,29 @@ pub struct SchemeResult {
     pub avg_acc: f64,
 }
 
+/// One policy's row in the accuracy/footprint sweep: the standard
+/// metric set plus the memory the policy actually buys — packed vs
+/// unpacked weight-operand bytes of one full forward, and the measured
+/// effective bits per stored KV value (32 for FP caches).
+#[derive(Clone, Debug)]
+pub struct PolicyReport {
+    pub result: SchemeResult,
+    pub weight_bytes_packed: usize,
+    pub weight_bytes_unpacked: usize,
+    pub kv_effective_bits: f64,
+}
+
+impl PolicyReport {
+    /// Packed share of the weight-operand stream (1.0 = no packing).
+    pub fn weight_ratio(&self) -> f64 {
+        if self.weight_bytes_unpacked == 0 {
+            1.0
+        } else {
+            self.weight_bytes_packed as f64 / self.weight_bytes_unpacked as f64
+        }
+    }
+}
+
 impl Experiment {
     /// Evaluate the FP reference (the tables' first row).
     pub fn eval_fp(&self) -> SchemeResult {
@@ -199,6 +223,32 @@ impl Experiment {
         let qm = QuantModel::build(&self.weights, scheme, &self.cal);
         let name = qm.name();
         self.eval_model(&qm, &name)
+    }
+
+    /// Quantize under `policy` and run the full metric set plus the
+    /// footprint probe (a short decode that measures the cache's
+    /// effective bits as served, not as advertised).
+    pub fn eval_policy(&self, policy: QuantPolicy) -> PolicyReport {
+        let qm = QuantModel::build(&self.weights, policy, &self.cal);
+        let name = qm.name();
+        let result = self.eval_model(&qm, &name);
+        let (weight_bytes_packed, weight_bytes_unpacked) = qm.weight_operand_bytes();
+        let mut cache = qm.new_cache(16);
+        let probe = &self.wiki_seqs[0];
+        for (pos, &tok) in probe.iter().take(8).enumerate() {
+            qm.forward_token(tok, pos, &mut cache);
+        }
+        let kv_effective_bits = match &cache {
+            DecodeCache::Sdr(c) => c.effective_bits(),
+            DecodeCache::Fp(_) => 32.0,
+        };
+        PolicyReport { result, weight_bytes_packed, weight_bytes_unpacked, kv_effective_bits }
+    }
+
+    /// Sweep a list of policies through the identical pipeline — the
+    /// Table-2-style per-policy accuracy/footprint report.
+    pub fn eval_policies(&self, policies: Vec<QuantPolicy>) -> Vec<PolicyReport> {
+        policies.into_iter().map(|p| self.eval_policy(p)).collect()
     }
 
     fn eval_model(&self, model: &dyn LanguageModel, name: &str) -> SchemeResult {
@@ -247,9 +297,52 @@ pub fn render_table(title: &str, rows: &[SchemeResult]) -> String {
     s
 }
 
+/// Render the per-policy accuracy/footprint sweep as a paper-style
+/// table (Table-2 metrics + the weight/KV footprint columns).
+pub fn render_policy_table(title: &str, rows: &[PolicyReport]) -> String {
+    let mut s = format!("\n=== {title} ===\n");
+    s.push_str(&format!(
+        "{:<40} {:>9} {:>9} {:>7} {:>8} {:>8}\n",
+        "Policy", "Wiki-PPL", "Lam-PPL", "Avg", "W-ratio", "KV-bits"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<40} {:>9.3} {:>9.3} {:>7.2} {:>8.2} {:>8.2}\n",
+            r.result.name,
+            r.result.ppl_wiki,
+            r.result.ppl_lambada,
+            r.result.avg_acc,
+            r.weight_ratio(),
+            r.kv_effective_bits,
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn render_policy_table_formats() {
+        let rows = vec![PolicyReport {
+            result: SchemeResult {
+                name: "w4a4kv4:16".into(),
+                ppl_wiki: 6.1,
+                ppl_lambada: 4.2,
+                task_acc: vec![],
+                avg_acc: 61.0,
+            },
+            weight_bytes_packed: 50,
+            weight_bytes_unpacked: 100,
+            kv_effective_bits: 4.25,
+        }];
+        let t = render_policy_table("policies", &rows);
+        assert!(t.contains("w4a4kv4:16"));
+        assert!(t.contains("0.50"));
+        assert!(t.contains("4.25"));
+        assert!(t.contains("KV-bits"));
+    }
 
     #[test]
     fn scales_resolve() {

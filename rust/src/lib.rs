@@ -16,6 +16,10 @@
 //!   MAC-unit area/power cost model (Table 5), op-count model (Table 8).
 //! * [`model`] — a LLaMA-architecture transformer with QRazor hooks at
 //!   every GEMM boundary and an SDR-compressed KV cache.
+//! * [`policy`] — per-site quantization policies: `(layer, Site)` →
+//!   `SitePlan` resolution, the policy DSL/JSON forms, and the
+//!   calibration-driven sensitivity builder; what `QuantModel::build`
+//!   consumes (schemes wrap into uniform policies).
 //! * [`data`] / [`eval`] — synthetic corpora, tokenizer, perplexity and
 //!   zero-shot task harness (the lm-eval substitute).
 //! * [`runtime`] — PJRT client wrapper loading the L2 JAX artifacts
@@ -43,6 +47,7 @@ pub mod data;
 pub mod eval;
 pub mod hw;
 pub mod model;
+pub mod policy;
 pub mod quant;
 pub mod runtime;
 pub mod sdr;

@@ -1,34 +1,54 @@
 //! QRazor CLI — the L3 launcher.
 //!
 //! ```text
-//! qrazor train --model nano --steps 300         # PJRT training loop
-//! qrazor eval  --model nano --scheme w4a4kv4:16 # tables' metric set
-//! qrazor serve --model nano --requests 16       # serving demo
-//! qrazor serve --shards 4 --requests 64         # sharded cluster demo
-//! qrazor hw-report                              # Table 5 + Table 8
+//! qrazor train    --model nano --steps 300          # PJRT training loop
+//! qrazor eval     --model nano --policy w4a4kv4:16  # tables' metric set
+//! qrazor eval     --policy "w4a4:16|w4a8:16"        # per-policy sweep
+//! qrazor quantize --policy "w4a4:16;layers=0:w4a8"  # policy manifest + footprint
+//! qrazor serve    --model nano --requests 16        # serving demo
+//! qrazor serve    --shards 4 --requests 64          # sharded cluster demo
+//! qrazor hw-report                                  # Table 5 + Table 8
 //! ```
+//!
+//! Every quantization string — `--policy`, `--draft-policy`, and the
+//! legacy `--scheme`/`--draft-scheme` aliases — goes through the one
+//! policy-DSL parser ([`QuantPolicy::parse`]), which rejects malformed
+//! group sizes and unknown kv suffixes with a clear error instead of
+//! silently defaulting.
 
-use qrazor::baselines::{Fp16, QRazor, Scheme};
 use qrazor::cluster::{ClusterConfig, ClusterServer, PlacementPolicy};
 use qrazor::config::ServeConfig;
 use qrazor::coordinator::{collect_sessions, Priority, ServeApi, Server, SubmitOptions};
-use qrazor::eval::harness::{build_experiment, render_table, EvalScale};
+use qrazor::eval::harness::{build_experiment, render_policy_table, render_table, EvalScale};
 use qrazor::hw::cost::{saving_pct, table5_designs, table5_paper_reference};
 use qrazor::hw::opcount::table8_rows;
 use qrazor::model::quantized::QuantModel;
-use qrazor::util::cli::Cli;
+use qrazor::policy::QuantPolicy;
+use qrazor::util::cli::{Args, Cli};
 use qrazor::util::rng::Rng;
 
 fn cli() -> Cli {
     Cli::new("qrazor", "QRazor 4-bit LLM quantization — reproduction CLI")
         .subcommand("train", "train the model through the PJRT train_step artifact")
-        .subcommand("eval", "evaluate a quantization scheme (ppl + zero-shot tasks)")
+        .subcommand("eval", "evaluate quantization policies (ppl + zero-shot tasks)")
+        .subcommand("quantize", "build a model under a policy; print its manifest + footprint")
         .subcommand("serve", "run the serving coordinator on synthetic requests")
         .subcommand("hw-report", "print the hardware cost model (Tables 5 & 8)")
         .opt("model", Some("nano"), "model preset (nano|tiny|small|mistral-tiny)")
         .opt("steps", Some("300"), "training steps")
         .opt("seed", Some("1"), "experiment seed")
-        .opt("scheme", Some("w4a4kv4:16"), "scheme: fp16 | w4a4:G | w4a4kv4:G | w4a8:G | w4a8kv4:G")
+        .opt(
+            "policy",
+            Some(""),
+            "quantization policy DSL, e.g. 'w4a4:16;layers=0,11:w4a8;kv=4:16'; \
+             eval accepts a '|'-separated sweep",
+        )
+        .opt(
+            "scheme",
+            Some("w4a4kv4:16"),
+            "legacy alias for --policy: fp16 | w4a4:G | w4a4kv4:G | w4a8:G | w4a8kv4:G",
+        )
+        .opt("sensitivity", Some("0"), "escalate the top-k most error-sensitive layers to A8")
         .opt("requests", Some("16"), "serve: number of synthetic requests")
         .opt("max-new", Some("32"), "serve: tokens to generate per request")
         .opt("shards", Some("1"), "serve: worker shards (>1 runs the cluster layer)")
@@ -44,28 +64,23 @@ fn cli() -> Cli {
             "serve: priority class for the synthetic requests (interactive|standard|batch)",
         )
         .opt(
-            "draft-scheme",
-            Some("w4a4kv4:16"),
-            "serve: draft scheme for speculative decoding (razored form of the target)",
+            "draft-policy",
+            Some(""),
+            "serve: draft policy for speculative decoding (razored form of the target)",
         )
+        .opt("draft-scheme", Some("w4a4kv4:16"), "legacy alias for --draft-policy")
         .flag("quick", "use the quick evaluation scale")
 }
 
-fn parse_scheme(s: &str) -> anyhow::Result<Box<dyn Scheme>> {
-    if s == "fp16" {
-        return Ok(Box::new(Fp16));
+/// The policy string in effect: `--policy` when given, else the legacy
+/// `--scheme` alias. Both parse through the single DSL parser.
+fn policy_arg(args: &Args, primary: &str, legacy: &str) -> anyhow::Result<String> {
+    let p = args.get_str(primary)?;
+    if p.is_empty() {
+        args.get_str(legacy)
+    } else {
+        Ok(p)
     }
-    let (kind, g) = s
-        .split_once(':')
-        .ok_or_else(|| anyhow::anyhow!("scheme format: kind:group, got '{s}'"))?;
-    let g: usize = g.parse()?;
-    Ok(match kind {
-        "w4a4" => Box::new(QRazor::w4a4(g)),
-        "w4a4kv4" => Box::new(QRazor::w4a4kv4(g)),
-        "w4a8" => Box::new(QRazor::w4a8(g)),
-        "w4a8kv4" => Box::new(QRazor::w4a8kv4(g)),
-        other => anyhow::bail!("unknown scheme kind '{other}'"),
-    })
 }
 
 /// Drive one synthetic workload through any serving front-end — the
@@ -136,32 +151,101 @@ fn main() -> anyhow::Result<()> {
         }
         Some("eval") => {
             let exp = build_experiment(&preset, scale, seed)?;
-            let scheme = parse_scheme(&args.get_str("scheme")?)?;
-            let rows = vec![exp.eval_fp(), exp.eval_scheme(scheme)];
-            println!("{}", render_table(&format!("eval ({preset})"), &rows));
+            let spec = policy_arg(&args, "policy", "scheme")?;
+            // '|'-separated sweep: every policy runs through the
+            // identical pipeline, reported with its footprint.
+            let mut policies = Vec::new();
+            for s in spec.split('|') {
+                let p = QuantPolicy::parse(s.trim())?;
+                p.check_layers(exp.config.layers)?;
+                policies.push(p);
+            }
+            let top_k = args.get_usize("sensitivity")?;
+            if top_k > 0 {
+                // Escalation only applies to A4-act razor policies;
+                // other swept rows (fp16, w4a8, baselines) keep their
+                // own row instead of aborting the whole sweep.
+                let mut escalated = Vec::new();
+                for p in &policies {
+                    match p.sensitivity_escalate(&exp.cal, exp.config.layers, top_k) {
+                        Ok(e) => escalated.push(e),
+                        Err(e) => eprintln!("skipping sensitivity row for '{p}': {e}"),
+                    }
+                }
+                policies.extend(escalated);
+            }
+            println!("{}", render_table(&format!("eval ({preset})"), &[exp.eval_fp()]));
+            let rows = exp.eval_policies(policies);
+            println!("{}", render_policy_table(&format!("policies ({preset})"), &rows));
+        }
+        Some("quantize") => {
+            let exp = build_experiment(&preset, scale, seed)?;
+            let policy = QuantPolicy::parse(&policy_arg(&args, "policy", "scheme")?)?;
+            policy.check_layers(exp.config.layers)?;
+            let top_k = args.get_usize("sensitivity")?;
+            let policy = if top_k > 0 {
+                policy.sensitivity_escalate(&exp.cal, exp.config.layers, top_k)?
+            } else {
+                policy
+            };
+            let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
+            let (packed, unpacked) = qm.weight_operand_bytes();
+            println!("policy: {}", qm.policy.name());
+            println!("manifest: {}", qm.policy.to_json());
+            println!(
+                "weight operand stream: {packed} B packed / {unpacked} B unpacked ({:.2}x)",
+                packed as f64 / unpacked.max(1) as f64
+            );
+            for li in 0..exp.config.layers {
+                let fmt = |p: Option<qrazor::policy::SitePlan>| match p {
+                    None => "fp".to_string(),
+                    Some(p) => format!(
+                        "b{}t{}g{}",
+                        p.basis_bits,
+                        p.target_bits.map_or("-".into(), |t| t.to_string()),
+                        p.group
+                    ),
+                };
+                println!(
+                    "  layer {li:>2}: w={} act={} kv={}",
+                    fmt(qm.policy.resolve(li, qrazor::policy::Site::Wq)),
+                    fmt(qm.policy.resolve(li, qrazor::policy::Site::Act)),
+                    fmt(qm.policy.resolve(li, qrazor::policy::Site::KvCache)),
+                );
+            }
         }
         Some("serve") => {
             let exp = build_experiment(&preset, scale, seed)?;
-            let scheme = parse_scheme(&args.get_str("scheme")?)?;
-            let qm = QuantModel::build(&exp.weights, scheme, &exp.cal);
+            let policy_str = policy_arg(&args, "policy", "scheme")?;
+            let policy = QuantPolicy::parse(&policy_str)?;
+            policy.check_layers(exp.config.layers)?;
+            let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
             let n = args.get_usize("requests")?;
             let max_new = args.get_usize("max-new")?;
             let shards = args.get_usize("shards")?;
             let spec_k = args.get_usize("spec")?;
-            // Speculative serving: the draft is the razored (packed
-            // W4A4) form of the same weights and calibration — no
+            // Speculative serving: the draft/verify pair is two named
+            // policies over the same weights and calibration — no
             // second checkpoint involved.
+            let draft_str = policy_arg(&args, "draft-policy", "draft-scheme")?;
             let draft = if spec_k > 0 {
-                let draft_scheme = parse_scheme(&args.get_str("draft-scheme")?)?;
+                let draft_policy = QuantPolicy::parse(&draft_str)?;
+                draft_policy.check_layers(exp.config.layers)?;
                 Some(std::sync::Arc::new(QuantModel::build(
                     &exp.weights,
-                    draft_scheme,
+                    draft_policy,
                     &exp.cal,
                 )))
             } else {
                 None
             };
-            let serve_cfg = ServeConfig { spec_k, ..Default::default() };
+            let serve_cfg = ServeConfig {
+                spec_k,
+                policy: policy_str,
+                draft_policy: draft_str,
+                ..Default::default()
+            };
+            println!("serve manifest: {}", serve_cfg.to_json());
             let mut rng = Rng::new(seed);
             let mut prompts = Vec::with_capacity(n);
             for _ in 0..n {

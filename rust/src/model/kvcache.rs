@@ -72,9 +72,16 @@ struct SdrPlane {
 /// append (the paper's *online* KV compression) with static per-site
 /// scales; reads reconstruct via shift — or hand out raw codes for the
 /// decompression-free attention path.
+///
+/// Since the per-site policy redesign every layer carries its **own**
+/// [`SdrSpec`] (a [`crate::policy::QuantPolicy`] may razor different
+/// layers with different group sizes); the uniform constructor
+/// [`SdrKvCache::new`] remains for the single-spec case. All specs
+/// must be the KV4 format (4-bit targets — the packed nibble planes).
 #[derive(Clone, Debug)]
 pub struct SdrKvCache {
-    pub spec: SdrSpec,
+    /// Per-layer SDR spec (length = layers).
+    specs: Vec<SdrSpec>,
     pub kv_dim: usize,
     /// Static stage-1 scales per layer: (k_scale, v_scale).
     pub scales: Vec<(f32, f32)>,
@@ -83,23 +90,43 @@ pub struct SdrKvCache {
 }
 
 impl SdrKvCache {
+    /// Uniform-spec cache: every layer razors with `spec`.
     /// `scales[l]` = calibrated (k, v) dequant scales for layer `l`.
     pub fn new(layers: usize, kv_dim: usize, spec: SdrSpec, scales: Vec<(f32, f32)>) -> SdrKvCache {
-        assert_eq!(scales.len(), layers);
-        assert_eq!(spec.target_bits, 4, "packed KV cache is the KV4 format");
-        assert_eq!(
-            kv_dim % spec.group,
-            0,
-            "kv_dim {kv_dim} must be divisible by group {}",
-            spec.group
-        );
+        SdrKvCache::new_per_layer(kv_dim, vec![spec; layers], scales)
+    }
+
+    /// Per-layer-spec cache — the policy-resolved form
+    /// (`QuantPolicy::kv_cache_specs`). One spec and one (k, v) scale
+    /// pair per layer.
+    pub fn new_per_layer(
+        kv_dim: usize,
+        specs: Vec<SdrSpec>,
+        scales: Vec<(f32, f32)>,
+    ) -> SdrKvCache {
+        assert_eq!(scales.len(), specs.len(), "one (k, v) scale pair per layer");
+        let layers = specs.len();
+        for spec in &specs {
+            assert_eq!(spec.target_bits, 4, "packed KV cache is the KV4 format");
+            assert_eq!(
+                kv_dim % spec.group,
+                0,
+                "kv_dim {kv_dim} must be divisible by group {}",
+                spec.group
+            );
+        }
         SdrKvCache {
-            spec,
+            specs,
             kv_dim,
             scales,
             k_planes: vec![SdrPlane::default(); layers],
             v_planes: vec![SdrPlane::default(); layers],
         }
+    }
+
+    /// The SDR spec layer `layer` razors with.
+    pub fn layer_spec(&self, layer: usize) -> SdrSpec {
+        self.specs[layer]
     }
 
     pub fn tokens(&self, layer: usize) -> usize {
@@ -109,26 +136,23 @@ impl SdrKvCache {
     /// The row razor-coder shared by writes ([`SdrKvCache::append`])
     /// and the query side of [`SdrKvCache::attention_packed`]: stage-1
     /// round/clamp at the static scale, stage-2 SDR per group.
-    fn razor_row(&self, row: &[f32], scale: f32) -> (Vec<SdrCode>, Vec<u8>) {
-        let q = crate::quant::qmax(self.spec.base_bits);
+    fn razor_row(spec: SdrSpec, row: &[f32], scale: f32) -> (Vec<SdrCode>, Vec<u8>) {
+        let q = crate::quant::qmax(spec.base_bits);
         let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
         let ints: Vec<i32> = row
             .iter()
             .map(|&x| crate::quant::round_half_even(x * inv).clamp(-q, q))
             .collect();
         let mut codes = vec![SdrCode::default(); row.len()];
-        let mut flags = Vec::with_capacity(row.len().div_ceil(self.spec.group));
-        for (chunk, out) in ints
-            .chunks(self.spec.group)
-            .zip(codes.chunks_mut(self.spec.group))
-        {
-            flags.push(compress_group(&self.spec, chunk, out));
+        let mut flags = Vec::with_capacity(row.len().div_ceil(spec.group));
+        for (chunk, out) in ints.chunks(spec.group).zip(codes.chunks_mut(spec.group)) {
+            flags.push(compress_group(&spec, chunk, out));
         }
         (codes, flags)
     }
 
-    fn compress_row(&self, row: &[f32], scale: f32, plane: &mut SdrPlane) {
-        let (codes, flags) = self.razor_row(row, scale);
+    fn compress_row(spec: SdrSpec, row: &[f32], scale: f32, plane: &mut SdrPlane) {
+        let (codes, flags) = SdrKvCache::razor_row(spec, row, scale);
         plane.nibbles.extend(pack_nibbles(&codes));
         plane.flag_nibbles.extend(pack_flags(&flags));
         plane.rows += 1;
@@ -140,13 +164,16 @@ impl SdrKvCache {
     /// so truncation is byte-exact: after it, [`SdrKvCache::bytes`] is
     /// identical to a cache that only ever saw the surviving rows.
     pub fn truncate(&mut self, tokens: usize) {
-        let code_bytes = self.code_row_nibbles() / 2;
-        let flag_bytes = self.flag_row_nibbles() / 2;
-        for plane in self.k_planes.iter_mut().chain(self.v_planes.iter_mut()) {
-            if plane.rows > tokens {
-                plane.nibbles.truncate(tokens * code_bytes);
-                plane.flag_nibbles.truncate(tokens * flag_bytes);
-                plane.rows = tokens;
+        for layer in 0..self.specs.len() {
+            let code_bytes = self.code_row_nibbles(layer) / 2;
+            let flag_bytes = self.flag_row_nibbles(layer) / 2;
+            for planes in [&mut self.k_planes, &mut self.v_planes] {
+                let plane = &mut planes[layer];
+                if plane.rows > tokens {
+                    plane.nibbles.truncate(tokens * code_bytes);
+                    plane.flag_nibbles.truncate(tokens * flag_bytes);
+                    plane.rows = tokens;
+                }
             }
         }
     }
@@ -155,50 +182,44 @@ impl SdrKvCache {
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         assert_eq!(k_row.len(), self.kv_dim);
         assert_eq!(v_row.len(), self.kv_dim);
+        let spec = self.specs[layer];
         let (ks, vs) = self.scales[layer];
-        let mut kp = std::mem::take(&mut self.k_planes[layer]);
-        self.compress_row(k_row, ks, &mut kp);
-        self.k_planes[layer] = kp;
-        let mut vp = std::mem::take(&mut self.v_planes[layer]);
-        self.compress_row(v_row, vs, &mut vp);
-        self.v_planes[layer] = vp;
+        SdrKvCache::compress_row(spec, k_row, ks, &mut self.k_planes[layer]);
+        SdrKvCache::compress_row(spec, v_row, vs, &mut self.v_planes[layer]);
     }
 
-    /// Nibbles each appended row occupies in the code store. Rows are
-    /// packed independently, so an odd `kv_dim` pads to a byte boundary
-    /// — all reads must use this stride, **not** `kv_dim` (reading the
-    /// plane as one contiguous nibble stream misaligns every row after
-    /// the first whenever the per-row count is odd).
+    /// Nibbles each appended row occupies in a layer's code store. Rows
+    /// are packed independently, so an odd `kv_dim` pads to a byte
+    /// boundary — all reads must use this stride, **not** `kv_dim`
+    /// (reading the plane as one contiguous nibble stream misaligns
+    /// every row after the first whenever the per-row count is odd).
     #[inline]
-    fn code_row_nibbles(&self) -> usize {
+    fn code_row_nibbles(&self, _layer: usize) -> usize {
         2 * self.kv_dim.div_ceil(2)
     }
 
-    /// Nibbles each appended row occupies in the flag store (same
+    /// Nibbles each appended row occupies in a layer's flag store (same
     /// byte-boundary padding story: `groups_per_row` is odd whenever
-    /// `kv_dim / group` is, e.g. `kv_dim == group`).
+    /// `kv_dim / group` is, e.g. `kv_dim == group`). Layer-dependent
+    /// because the group size is.
     #[inline]
-    fn flag_row_nibbles(&self) -> usize {
-        2 * (self.kv_dim / self.spec.group).div_ceil(2)
-    }
-
-    fn reconstruct_plane(&self, plane: &SdrPlane, scale: f32) -> Tensor<f32> {
-        self.plane_matrix(plane, scale).dequantize()
+    fn flag_row_nibbles(&self, layer: usize) -> usize {
+        2 * (self.kv_dim / self.specs[layer].group).div_ceil(2)
     }
 
     /// Dequantized K matrix `[tokens, kv_dim]` for attention.
     pub fn k_matrix(&self, layer: usize) -> Tensor<f32> {
-        self.reconstruct_plane(&self.k_planes[layer], self.scales[layer].0)
+        self.k_sdr_matrix(layer).dequantize()
     }
 
     pub fn v_matrix(&self, layer: usize) -> Tensor<f32> {
-        self.reconstruct_plane(&self.v_planes[layer], self.scales[layer].1)
+        self.v_sdr_matrix(layer).dequantize()
     }
 
-    /// Can [`SdrKvCache::attention_packed`] serve this head geometry?
-    /// Group boundaries must not straddle head slices.
-    pub fn supports_packed_attention(&self, head_dim: usize) -> bool {
-        head_dim % self.spec.group == 0
+    /// Can [`SdrKvCache::attention_packed`] serve this head geometry at
+    /// this layer? Group boundaries must not straddle head slices.
+    pub fn supports_packed_attention(&self, layer: usize, head_dim: usize) -> bool {
+        head_dim % self.specs[layer].group == 0
     }
 
     /// One token's attention, computed **directly from the packed
@@ -261,8 +282,12 @@ impl SdrKvCache {
         head_dim: usize,
         start_pos: usize,
     ) -> Vec<f32> {
-        let g = self.spec.group;
-        assert!(self.supports_packed_attention(head_dim), "head_dim {head_dim} % group {g} != 0");
+        let spec = self.specs[layer];
+        let g = spec.group;
+        assert!(
+            self.supports_packed_attention(layer, head_dim),
+            "head_dim {head_dim} % group {g} != 0"
+        );
         assert_eq!(kv_heads * head_dim, self.kv_dim, "kv geometry mismatch");
         assert_eq!(q_rows.len(), n_q * heads * head_dim, "query length mismatch");
         assert_eq!(heads % kv_heads, 0, "heads must divide into kv heads");
@@ -288,7 +313,8 @@ impl SdrKvCache {
         let mut q_signed = vec![0i16; n_q * q_dim];
         let mut q_flags = vec![0u8; n_q * qgpr];
         for i in 0..n_q {
-            let (codes, flags) = self.razor_row(&q_rows[i * q_dim..(i + 1) * q_dim], q_scale);
+            let (codes, flags) =
+                SdrKvCache::razor_row(spec, &q_rows[i * q_dim..(i + 1) * q_dim], q_scale);
             for (o, c) in q_signed[i * q_dim..(i + 1) * q_dim].iter_mut().zip(&codes) {
                 *o = c.signed() as i16;
             }
@@ -296,8 +322,8 @@ impl SdrKvCache {
         }
 
         let gph = head_dim / g; // groups per head slice
-        let code_stride = self.code_row_nibbles(); // nibbles per cached row
-        let flag_stride = self.flag_row_nibbles();
+        let code_stride = self.code_row_nibbles(layer); // nibbles per cached row
+        let flag_stride = self.flag_row_nibbles(layer);
         // scores[i * max_t + ti] is live for ti <= start_pos + i; the
         // rest is never written or read for that row.
         let mut scores = vec![0f32; n_q * max_t];
@@ -378,10 +404,11 @@ impl SdrKvCache {
 
     /// Export one plane as an unpacked [`SdrMatrix`] (testing and the
     /// staged reference path; the serving path never calls this).
-    fn plane_matrix(&self, plane: &SdrPlane, scale: f32) -> SdrMatrix {
-        let gpr = self.kv_dim / self.spec.group;
-        let code_stride = self.code_row_nibbles() / 2;
-        let flag_stride = self.flag_row_nibbles() / 2;
+    fn plane_matrix(&self, layer: usize, plane: &SdrPlane, scale: f32) -> SdrMatrix {
+        let spec = self.specs[layer];
+        let gpr = self.kv_dim / spec.group;
+        let code_stride = self.code_row_nibbles(layer) / 2;
+        let flag_stride = self.flag_row_nibbles(layer) / 2;
         let mut codes = Vec::with_capacity(plane.rows * self.kv_dim);
         let mut flags = Vec::with_capacity(plane.rows * gpr);
         for r in 0..plane.rows {
@@ -389,7 +416,7 @@ impl SdrKvCache {
             flags.extend(unpack_flags(&plane.flag_nibbles[r * flag_stride..], gpr));
         }
         SdrMatrix {
-            spec: self.spec,
+            spec,
             rows: plane.rows,
             cols: self.kv_dim,
             codes,
@@ -400,12 +427,12 @@ impl SdrKvCache {
 
     /// The K plane of `layer` as an unpacked SDR matrix.
     pub fn k_sdr_matrix(&self, layer: usize) -> SdrMatrix {
-        self.plane_matrix(&self.k_planes[layer], self.scales[layer].0)
+        self.plane_matrix(layer, &self.k_planes[layer], self.scales[layer].0)
     }
 
     /// The V plane of `layer` as an unpacked SDR matrix.
     pub fn v_sdr_matrix(&self, layer: usize) -> SdrMatrix {
-        self.plane_matrix(&self.v_planes[layer], self.scales[layer].1)
+        self.plane_matrix(layer, &self.v_planes[layer], self.scales[layer].1)
     }
 
     /// Values stored across all planes (for effective-bits accounting).
@@ -420,11 +447,15 @@ impl SdrKvCache {
     /// Bytes the unpacked working form would occupy for the same data:
     /// one byte per code plus one byte per group flag.
     pub fn unpacked_bytes(&self) -> usize {
-        let gpr = self.kv_dim / self.spec.group;
+        let per_layer = |layer: usize, p: &SdrPlane| {
+            let gpr = self.kv_dim / self.specs[layer].group;
+            p.rows * self.kv_dim + p.rows * gpr
+        };
         self.k_planes
             .iter()
-            .chain(&self.v_planes)
-            .map(|p| p.rows * self.kv_dim + p.rows * gpr)
+            .enumerate()
+            .map(|(l, p)| per_layer(l, p))
+            .chain(self.v_planes.iter().enumerate().map(|(l, p)| per_layer(l, p)))
             .sum()
     }
 
@@ -563,7 +594,7 @@ mod tests {
         head_dim: usize,
     ) -> Vec<f32> {
         use crate::sdr::gemm::gemm_razored_int;
-        let spec = cache.spec;
+        let spec = cache.layer_spec(layer);
         let g = spec.group;
         let (k_scale, _) = cache.scales[layer];
         let k_all = cache.k_sdr_matrix(layer);
@@ -707,8 +738,8 @@ mod tests {
     #[test]
     fn packed_attention_support_gate() {
         let cache = SdrKvCache::new(1, 64, SdrSpec::new(8, 4, 16), vec![(0.01, 0.01)]);
-        assert!(cache.supports_packed_attention(32));
-        assert!(!cache.supports_packed_attention(24));
+        assert!(cache.supports_packed_attention(0, 32));
+        assert!(!cache.supports_packed_attention(0, 24));
     }
 
     #[test]

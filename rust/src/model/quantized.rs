@@ -1,22 +1,34 @@
-//! Scheme-quantized transformer forward (paper Fig. 5).
+//! Policy-quantized transformer forward (paper Fig. 5).
 //!
 //! The quantization flow mirrors the paper's Appendix A.7 diagram: every
 //! linear's input activation is quantized (static per-tensor scales from
 //! calibration for QRazor; dynamic for baselines), weights are prepared
-//! offline per scheme, and — uniquely matching QRazor — the **Query** is
+//! offline, and — uniquely matching QRazor — the **Query** is
 //! quantized too, so Q·Kᵀ runs as a low-precision GEMM, as do the
 //! attention-context GEMMs against the quantized KV cache.
+//!
+//! Since the per-site policy redesign the model is built from a
+//! [`QuantPolicy`] resolving `(layer, Site)` → plan at every decision
+//! point: each linear is prepared at its own [`Site`] (so a mixed
+//! policy can escalate individual layers from W4A4 to W4A8, attaching
+//! the matching nibble- or byte-coded packed operand per linear), the
+//! KV cache takes per-layer specs, and the packed-attention query spec
+//! resolves per layer. A `Box<dyn Scheme>` still works everywhere via
+//! `Into<QuantPolicy>` — it becomes a uniform policy whose hooks run
+//! unchanged, bit-identical to the pre-redesign path.
 //!
 //! Calibration (`calibrate`) runs the FP reference over sample
 //! sequences, records per-site absolute maxima (→ static scales) and a
 //! bounded sample of each site's activations (→ scheme weight solvers
-//! like GPTQ/SmoothQuant/QLLM; and Fig. 2's histograms).
+//! like GPTQ/SmoothQuant/QLLM, the policy sensitivity builder, and
+//! Fig. 2's histograms).
 
 use std::collections::BTreeMap;
 
 use super::{apply_rope, causal_attention, LanguageModel, ModelWeights};
-use crate::baselines::{PreparedLinear, Scheme};
+use crate::baselines::PreparedLinear;
 use crate::config::ModelConfig;
+use crate::policy::{QuantPolicy, Site};
 use crate::quant::Calibrator;
 use crate::tensor::{add_assign, matmul_bt, rmsnorm, silu, Tensor};
 
@@ -128,31 +140,45 @@ struct QuantLayer {
     w_down: PreparedLinear,
 }
 
-/// A model quantized under a [`Scheme`]: prepared weights + static
+/// A model quantized under a [`QuantPolicy`]: prepared weights + static
 /// scales, ready for evaluation or serving.
 pub struct QuantModel {
     pub config: ModelConfig,
-    pub scheme: Box<dyn Scheme>,
+    pub policy: QuantPolicy,
     embed: Tensor<f32>,
     layers: Vec<QuantLayer>,
     final_norm: Vec<f32>,
     lm_head: PreparedLinear,
     /// Calibrated per-site absolute maxima (static scales are derived
-    /// per use-site bit width by the scheme itself).
+    /// per use-site bit width from the policy's basis plans).
     pub site_amax: BTreeMap<String, f32>,
     /// Run the decompression-free packed compute paths (packed-weight
-    /// GEMM, packed KV attention) where the scheme provides them. On by
+    /// GEMM, packed KV attention) where the policy provides them. On by
     /// default; the serving bench flips it off to measure the staged
     /// fake-quant reference.
     pub use_packed: bool,
 }
 
 impl QuantModel {
-    /// Quantize `w` under `scheme`, using `cal` for static scales and
-    /// weight-solver calibration.
-    pub fn build(w: &ModelWeights, scheme: Box<dyn Scheme>, cal: &CalibrationData) -> QuantModel {
-        let prep = |weight: &Tensor<f32>, site: &str| -> PreparedLinear {
-            scheme.prep_linear(weight, cal.sample(site))
+    /// Quantize `w` under `policy`, using `cal` for static scales and
+    /// weight-solver calibration. Accepts anything convertible into a
+    /// [`QuantPolicy`] — in particular a `Box<dyn Scheme>`, which
+    /// becomes a uniform policy (the pre-redesign behavior, preserved
+    /// bit-exactly).
+    pub fn build(
+        w: &ModelWeights,
+        policy: impl Into<QuantPolicy>,
+        cal: &CalibrationData,
+    ) -> QuantModel {
+        let policy: QuantPolicy = policy.into();
+        // A per-layer override naming a layer this model doesn't have
+        // would be a silent no-op; callers with a Result path (the
+        // CLI) validate first for a clean error.
+        if let Err(e) = policy.check_layers(w.config.layers) {
+            panic!("{e}");
+        }
+        let prep = |li: usize, site: Site, weight: &Tensor<f32>, cal_site: &str| {
+            policy.prep_linear(li, site, weight, cal.sample(cal_site))
         };
         let layers = w
             .layers
@@ -160,14 +186,14 @@ impl QuantModel {
             .enumerate()
             .map(|(li, l)| QuantLayer {
                 attn_norm: l.attn_norm.clone(),
-                wq: prep(&l.wq, &format!("l{li}.attn_in")),
-                wk: prep(&l.wk, &format!("l{li}.attn_in")),
-                wv: prep(&l.wv, &format!("l{li}.attn_in")),
-                wo: prep(&l.wo, &format!("l{li}.attn_out")),
+                wq: prep(li, Site::Wq, &l.wq, &format!("l{li}.attn_in")),
+                wk: prep(li, Site::Wk, &l.wk, &format!("l{li}.attn_in")),
+                wv: prep(li, Site::Wv, &l.wv, &format!("l{li}.attn_in")),
+                wo: prep(li, Site::Wo, &l.wo, &format!("l{li}.attn_out")),
                 ffn_norm: l.ffn_norm.clone(),
-                w_gate: prep(&l.w_gate, &format!("l{li}.ffn_in")),
-                w_up: prep(&l.w_up, &format!("l{li}.ffn_in")),
-                w_down: prep(&l.w_down, &format!("l{li}.ffn_down_in")),
+                w_gate: prep(li, Site::Gate, &l.w_gate, &format!("l{li}.ffn_in")),
+                w_up: prep(li, Site::Up, &l.w_up, &format!("l{li}.ffn_in")),
+                w_down: prep(li, Site::Down, &l.w_down, &format!("l{li}.ffn_down_in")),
             })
             .collect();
         let site_amax = cal
@@ -177,11 +203,11 @@ impl QuantModel {
             .collect();
         QuantModel {
             config: w.config.clone(),
-            lm_head: prep(&w.lm_head, "lm_head_in"),
+            lm_head: prep(w.config.layers, Site::LmHead, &w.lm_head, "lm_head_in"),
             embed: w.embed.clone(),
             layers,
             final_norm: w.final_norm.clone(),
-            scheme,
+            policy,
             site_amax,
             use_packed: true,
         }
@@ -208,12 +234,20 @@ impl QuantModel {
         (packed, unpacked)
     }
 
-    /// Static activation scale (amax / qmax) for a site at the scheme's
-    /// activation base precision; `None` when the site wasn't calibrated.
+    /// Static activation scale (amax / qmax) for a site at `bits`
+    /// basis precision; `None` when the site wasn't calibrated.
     fn act_scale(&self, site: &str, bits: u32) -> Option<f32> {
         self.site_amax
             .get(site)
             .map(|&amax| crate::quant::absmax_scale_from_amax(amax, bits))
+    }
+
+    /// The effective static scale for a layer's shared activation site:
+    /// derived at the policy's basis bits, suppressed when the plan
+    /// scales dynamically.
+    fn linear_scale(&self, li: usize, site: Site, cal_site: &str) -> Option<f32> {
+        let raw = self.act_scale(cal_site, self.policy.act_basis_bits(li, site));
+        self.policy.effective_scale(li, site, raw)
     }
 
     /// Quantized forward over a full sequence → logits `[t, vocab]`.
@@ -221,10 +255,6 @@ impl QuantModel {
         let cfg = &self.config;
         let (d, hd) = (cfg.dim, cfg.head_dim());
         let t = tokens.len();
-        // Activation base precision for static scales: QRazor uses 16,
-        // dynamic schemes ignore the hint entirely.
-        let abits = 16;
-        let kvbits = 8;
         let mut x = Tensor::zeros(&[t, d]);
         for (i, &tok) in tokens.iter().enumerate() {
             x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
@@ -234,78 +264,52 @@ impl QuantModel {
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
             }
-            let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
-            let mut q = layer.wq.forward_with_packed(
-                &normed, s_in,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
-            let mut k = layer.wk.forward_with_packed(
-                &normed, s_in,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
-            let v = layer.wv.forward_with_packed(
-                &normed, s_in,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let act = |x: &Tensor<f32>, s: Option<f32>| self.policy.act(li, Site::Act, x, s);
+            let s_in = self.linear_scale(li, Site::Act, &format!("l{li}.attn_in"));
+            let mut q = layer.wq.forward_with_packed(&normed, s_in, &act, self.use_packed);
+            let mut k = layer.wk.forward_with_packed(&normed, s_in, &act, self.use_packed);
+            let v = layer.wv.forward_with_packed(&normed, s_in, &act, self.use_packed);
             apply_rope(&mut q, cfg.heads, hd, 0);
             apply_rope(&mut k, cfg.kv_heads, hd, 0);
             // QRazor quantizes Q, K, V for low-precision attention GEMMs
-            // (Fig. 5); baselines apply their own kv() policy.
+            // (Fig. 5); the policy resolves each layer's Query/KvCache
+            // plans (baselines apply their scheme's kv() hook).
+            let kvbits = self.policy.kv_basis_bits(li);
             let qq = self
-                .scheme
-                .kv(&q, self.act_scale(&format!("l{li}.q"), kvbits));
+                .policy
+                .query_transform(li, &q, self.act_scale(&format!("l{li}.q"), kvbits));
             let kq = self
-                .scheme
-                .kv(&k, self.act_scale(&format!("l{li}.k"), kvbits));
+                .policy
+                .kv_transform(li, &k, self.act_scale(&format!("l{li}.k"), kvbits));
             let vq = self
-                .scheme
-                .kv(&v, self.act_scale(&format!("l{li}.v"), kvbits));
+                .policy
+                .kv_transform(li, &v, self.act_scale(&format!("l{li}.v"), kvbits));
             let ctx = causal_attention(&qq, &kq, &vq, cfg.heads, cfg.kv_heads, hd);
-            let s_out = self.act_scale(&format!("l{li}.attn_out"), abits);
-            let attn_out = layer.wo.forward_with_packed(
-                &ctx, s_out,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let s_out = self.linear_scale(li, Site::Act, &format!("l{li}.attn_out"));
+            let attn_out = layer.wo.forward_with_packed(&ctx, s_out, &act, self.use_packed);
             add_assign(&mut x, &attn_out);
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
             }
-            let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
-            let gate = layer.w_gate.forward_with_packed(
-                &normed, s_ffn,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
-            let up = layer.w_up.forward_with_packed(
-                &normed, s_ffn,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let s_ffn = self.linear_scale(li, Site::Act, &format!("l{li}.ffn_in"));
+            let gate = layer.w_gate.forward_with_packed(&normed, s_ffn, &act, self.use_packed);
+            let up = layer.w_up.forward_with_packed(&normed, s_ffn, &act, self.use_packed);
             let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
             for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *o = silu(g) * u;
             }
-            let s_down = self.act_scale(&format!("l{li}.ffn_down_in"), abits);
-            let ffn_out = layer.w_down.forward_with_packed(
-                &h, s_down,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let s_down = self.linear_scale(li, Site::Act, &format!("l{li}.ffn_down_in"));
+            let ffn_out = layer.w_down.forward_with_packed(&h, s_down, &act, self.use_packed);
             add_assign(&mut x, &ffn_out);
         }
         for i in 0..t {
             rmsnorm(x.row(i), &self.final_norm, 1e-5, normed.row_mut(i));
         }
-        self.lm_head
-            .forward_with_packed(
-                &normed, self.act_scale("lm_head_in", abits),
-                self.scheme.as_ref(),
-                self.use_packed,
-            )
+        let head_layer = self.config.layers;
+        let act_head =
+            |x: &Tensor<f32>, s: Option<f32>| self.policy.act(head_layer, Site::LmHead, x, s);
+        let s_head = self.linear_scale(head_layer, Site::LmHead, "lm_head_in");
+        self.lm_head.forward_with_packed(&normed, s_head, &act_head, self.use_packed)
     }
 }
 
@@ -357,26 +361,31 @@ impl QuantModel {
         self.config.head_dim() * self.config.kv_heads
     }
 
-    /// Create a decode cache appropriate for the scheme: SDR-compressed
-    /// (group `kv_group`) when the scheme quantizes KV, FP otherwise.
+    /// Create a decode cache appropriate for the policy: SDR-compressed
+    /// with the policy's per-layer KV specs when every layer packs to
+    /// KV4 planes (uniform scheme backends use `kv_group`, preserving
+    /// the pre-redesign behavior), FP otherwise — including mixed
+    /// FP/SDR policies, whose per-layer KV plans still apply through
+    /// [`QuantPolicy::kv_transform`] on the FP path.
     pub fn new_cache(&self, kv_group: usize) -> DecodeCache {
         let layers = self.config.layers;
         let kv_dim = self.kv_dim();
-        if self.scheme.quantizes_kv() && kv_dim % kv_group == 0 {
-            let spec = crate::sdr::SdrSpec::new(8, 4, kv_group);
-            let scales: Vec<(f32, f32)> = (0..layers)
-                .map(|li| {
-                    (
-                        self.act_scale(&format!("l{li}.k"), 8).unwrap_or(0.01),
-                        self.act_scale(&format!("l{li}.v"), 8).unwrap_or(0.01),
-                    )
-                })
-                .collect();
-            DecodeCache::Sdr(crate::model::kvcache::SdrKvCache::new(
-                layers, kv_dim, spec, scales,
-            ))
-        } else {
-            DecodeCache::Fp(crate::model::kvcache::FpKvCache::new(layers, kv_dim))
+        match self.policy.kv_cache_specs(layers, kv_dim, kv_group) {
+            Some(specs) => {
+                let scales: Vec<(f32, f32)> = (0..layers)
+                    .map(|li| {
+                        let bits = self.policy.kv_basis_bits(li);
+                        (
+                            self.act_scale(&format!("l{li}.k"), bits).unwrap_or(0.01),
+                            self.act_scale(&format!("l{li}.v"), bits).unwrap_or(0.01),
+                        )
+                    })
+                    .collect();
+                DecodeCache::Sdr(crate::model::kvcache::SdrKvCache::new_per_layer(
+                    kv_dim, specs, scales,
+                ))
+            }
+            None => DecodeCache::Fp(crate::model::kvcache::FpKvCache::new(layers, kv_dim)),
         }
     }
 
@@ -420,8 +429,6 @@ impl QuantModel {
         let (d, hd) = (cfg.dim, cfg.head_dim());
         let t = tokens.len();
         assert!(t > 0, "empty chunk");
-        let abits = 16;
-        let kvbits = 8;
         let group = cfg.heads / cfg.kv_heads;
         let scale_dot = 1.0 / (hd as f32).sqrt();
         let mut x = Tensor::zeros(&[t, d]);
@@ -433,22 +440,12 @@ impl QuantModel {
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
             }
-            let s_in = self.act_scale(&format!("l{li}.attn_in"), abits);
-            let mut q = layer.wq.forward_with_packed(
-                &normed, s_in,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
-            let mut k = layer.wk.forward_with_packed(
-                &normed, s_in,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
-            let v = layer.wv.forward_with_packed(
-                &normed, s_in,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let act = |x: &Tensor<f32>, s: Option<f32>| self.policy.act(li, Site::Act, x, s);
+            let kvbits = self.policy.kv_basis_bits(li);
+            let s_in = self.linear_scale(li, Site::Act, &format!("l{li}.attn_in"));
+            let mut q = layer.wq.forward_with_packed(&normed, s_in, &act, self.use_packed);
+            let mut k = layer.wk.forward_with_packed(&normed, s_in, &act, self.use_packed);
+            let v = layer.wv.forward_with_packed(&normed, s_in, &act, self.use_packed);
             apply_rope(&mut q, cfg.heads, hd, start_pos);
             apply_rope(&mut k, cfg.kv_heads, hd, start_pos);
             // Append every chunk row before attention: row i's horizon
@@ -462,22 +459,25 @@ impl QuantModel {
                 }
                 DecodeCache::Fp(c) => {
                     let kq = self
-                        .scheme
-                        .kv(&k, self.act_scale(&format!("l{li}.k"), kvbits));
+                        .policy
+                        .kv_transform(li, &k, self.act_scale(&format!("l{li}.k"), kvbits));
                     let vq = self
-                        .scheme
-                        .kv(&v, self.act_scale(&format!("l{li}.v"), kvbits));
+                        .policy
+                        .kv_transform(li, &v, self.act_scale(&format!("l{li}.v"), kvbits));
                     for i in 0..t {
                         c.append(li, kq.row(i), vq.row(i));
                     }
                 }
             }
-            let s_q = self.act_scale(&format!("l{li}.q"), kvbits);
+            let s_q = self
+                .policy
+                .query_effective_scale(li, self.act_scale(&format!("l{li}.q"), kvbits));
             // Decompression-free multi-query attention when the cache
-            // is packed SDR (same gate as the single-token path).
-            let packed_attn = match (&*cache, self.scheme.sdr_query_spec(), s_q) {
+            // is packed SDR and this layer's query razors (same gate as
+            // the single-token path, resolved per layer).
+            let packed_attn = match (&*cache, self.policy.sdr_query_spec(li), s_q) {
                 (DecodeCache::Sdr(c), Some(_), Some(qs))
-                    if self.use_packed && c.supports_packed_attention(hd) =>
+                    if self.use_packed && c.supports_packed_attention(li, hd) =>
                 {
                     Some(c.attention_packed_multi(
                         li,
@@ -499,7 +499,7 @@ impl QuantModel {
                 // reconstructed K/V, each chunk row bounded to its own
                 // causal horizon in the same arithmetic order as the
                 // single-token path
-                let qq = self.scheme.kv(&q, s_q);
+                let qq = self.policy.query_transform(li, &q, s_q);
                 let (k_all, v_all) = match cache {
                     DecodeCache::Sdr(c) => (c.k_matrix(li), c.v_matrix(li)),
                     DecodeCache::Fp(c) => (c.k_matrix(li), c.v_matrix(li)),
@@ -535,48 +535,31 @@ impl QuantModel {
                 }
                 ctx
             };
-            let s_out = self.act_scale(&format!("l{li}.attn_out"), abits);
-            let attn_out = layer.wo.forward_with_packed(
-                &ctx, s_out,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let s_out = self.linear_scale(li, Site::Act, &format!("l{li}.attn_out"));
+            let attn_out = layer.wo.forward_with_packed(&ctx, s_out, &act, self.use_packed);
             add_assign(&mut x, &attn_out);
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
             }
-            let s_ffn = self.act_scale(&format!("l{li}.ffn_in"), abits);
-            let gate = layer.w_gate.forward_with_packed(
-                &normed, s_ffn,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
-            let up = layer.w_up.forward_with_packed(
-                &normed, s_ffn,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let s_ffn = self.linear_scale(li, Site::Act, &format!("l{li}.ffn_in"));
+            let gate = layer.w_gate.forward_with_packed(&normed, s_ffn, &act, self.use_packed);
+            let up = layer.w_up.forward_with_packed(&normed, s_ffn, &act, self.use_packed);
             let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
             for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
                 *o = silu(g) * u;
             }
-            let s_down = self.act_scale(&format!("l{li}.ffn_down_in"), abits);
-            let ffn_out = layer.w_down.forward_with_packed(
-                &h, s_down,
-                self.scheme.as_ref(),
-                self.use_packed,
-            );
+            let s_down = self.linear_scale(li, Site::Act, &format!("l{li}.ffn_down_in"));
+            let ffn_out = layer.w_down.forward_with_packed(&h, s_down, &act, self.use_packed);
             add_assign(&mut x, &ffn_out);
         }
         for i in 0..t {
             rmsnorm(x.row(i), &self.final_norm, 1e-5, normed.row_mut(i));
         }
-        self.lm_head
-            .forward_with_packed(
-                &normed, self.act_scale("lm_head_in", abits),
-                self.scheme.as_ref(),
-                self.use_packed,
-            )
+        let head_layer = self.config.layers;
+        let act_head =
+            |x: &Tensor<f32>, s: Option<f32>| self.policy.act(head_layer, Site::LmHead, x, s);
+        let s_head = self.linear_scale(head_layer, Site::LmHead, "lm_head_in");
+        self.lm_head.forward_with_packed(&normed, s_head, &act_head, self.use_packed)
     }
 }
 
@@ -588,7 +571,7 @@ impl LanguageModel for QuantModel {
         self.forward_full(tokens)
     }
     fn name(&self) -> String {
-        self.scheme.name()
+        self.policy.name()
     }
 }
 

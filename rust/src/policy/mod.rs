@@ -1,0 +1,1345 @@
+//! Per-site quantization policies — the composable successor to the
+//! whole-model `Box<dyn Scheme>` configuration.
+//!
+//! QRazor's accuracy story is built on choosing the basis *per tensor
+//! class* (8-bit basis for weights, 16-bit for activations/KV, 4- or
+//! 8-bit SDR targets per operation — PAPER.md §4). A [`QuantPolicy`]
+//! makes that a first-class serving axis: it resolves
+//! `(layer_index, Site)` → [`SitePlan`] for **every** quantization
+//! decision point in the model, so mixed-precision scenarios
+//! (QLLM-style outlier-layer escalation, QServe-style progressive
+//! W4A8→KV4) are expressible without writing a new scheme.
+//!
+//! ## Vocabulary
+//!
+//! * [`Site`] — one quantization decision point: the seven block
+//!   linears ([`Site::Wq`] … [`Site::Down`]) plus the LM head, the
+//!   activation entering a linear ([`Site::Act`]), the attention query
+//!   ([`Site::Query`]) and the KV-cache rows ([`Site::KvCache`]).
+//! * [`SitePlan`] — what happens at a site: stage-1 **basis bits**
+//!   (8 for weights, 16 for activations, 8 for KV/Query), the stage-2
+//!   **SDR target bits** (4, 8, or `None` = razoring off, plain
+//!   stage-1 quantization), the razoring **group size**, and
+//!   static-vs-dynamic activation **scaling**.
+//! * [`LayerPlan`] — one layer's plans for all its sites, with
+//!   optional per-weight-site overrides.
+//! * [`QuantPolicy`] — the resolved surface [`crate::model::quantized::QuantModel::build`]
+//!   consumes. Two backends:
+//!   - **razor-native**: a base [`LayerPlan`] plus sparse per-layer
+//!     overrides (everything the DSL below can say);
+//!   - **uniform scheme**: any pre-redesign [`Scheme`] (the
+//!     baselines), applied identically at every layer and site.
+//!     `Box<dyn Scheme>` converts into this backend via `From`, so
+//!     every old `QuantModel::build(w, Box::new(...), cal)` call site
+//!     still works — and is property-tested bit-identical to the
+//!     razor-native resolution for the whole QRazor family.
+//!
+//! ## Resolution order
+//!
+//! `resolve(layer, site)` looks up, in order:
+//! 1. the per-layer override plan (if `layer` has one),
+//! 2. the base plan;
+//! and within the chosen [`LayerPlan`]:
+//! 1. `weight_overrides[site]` for weight sites,
+//! 2. the site's class plan (`weight` / `act` / `query` / `kv`).
+//! [`Site::LmHead`] always resolves against the base plan (the head is
+//! not a block layer). `None` means the site stays FP.
+//!
+//! ## DSL
+//!
+//! ```text
+//! policy    := "fp16" | base clause*
+//! base      := "w" W "a" A ["kv4"] ":" GROUP        (W ∈ {4,8}, A ∈ {4,8,16})
+//! clause    := ";layers=" IDX ("," IDX)* ":" base'  (per-layer escalation;
+//!                base' may omit ":" GROUP to inherit the base group)
+//!            | ";kv=" 4 ":" GROUP                   (KV4 cache plan)
+//!            | ";kv=off"                            (drop the KV plan)
+//!            | ";dynamic"                           (dynamic act scaling)
+//! ```
+//!
+//! `"w4a4kv4:16"` reproduces today's uniform preset exactly;
+//! `"w4a4:16;layers=0,11:w4a8;kv=4:16"` keeps W4A4 everywhere but
+//! escalates layers 0 and 11 to W4A8. Policies round-trip
+//! string↔policy↔JSON ([`QuantPolicy::to_json`] /
+//! [`QuantPolicy::from_json`]); malformed groups and unknown `kv`
+//! suffixes are rejected with a clear error instead of silently
+//! defaulting.
+//!
+//! [`QuantPolicy::sensitivity_escalate`] is the calibration-driven
+//! builder: it ranks layers by their activation razoring error over
+//! the recorded [`CalibrationData`] samples and escalates the top-k
+//! most error-sensitive layers from A4 to A8.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::baselines::{quant_or_razor, PackedWeight, PreparedLinear, Scheme};
+use crate::model::quantized::CalibrationData;
+use crate::quant::{fake_quant, Granularity, QuantTensor};
+use crate::sdr::packed::PackedSdrMatrix;
+use crate::sdr::razor::{qrazor_fake_quant, SdrMatrix, SdrSpec};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One quantization decision point in the transformer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Site {
+    /// Attention query projection weight.
+    Wq,
+    /// Attention key projection weight.
+    Wk,
+    /// Attention value projection weight.
+    Wv,
+    /// Attention output projection weight.
+    Wo,
+    /// SwiGLU gate projection weight.
+    Gate,
+    /// SwiGLU up projection weight.
+    Up,
+    /// SwiGLU down projection weight.
+    Down,
+    /// LM head weight (resolves against the base plan; not a block
+    /// layer).
+    LmHead,
+    /// The activation entering a linear (shared across the layer's
+    /// linears, like the paper's per-tensor static scales).
+    Act,
+    /// The RoPE'd attention query entering Q·Kᵀ.
+    Query,
+    /// K/V rows entering attention and the KV cache.
+    KvCache,
+}
+
+impl Site {
+    /// The weight sites, in model order.
+    pub const WEIGHTS: [Site; 8] = [
+        Site::Wq,
+        Site::Wk,
+        Site::Wv,
+        Site::Wo,
+        Site::Gate,
+        Site::Up,
+        Site::Down,
+        Site::LmHead,
+    ];
+
+    pub fn is_weight(self) -> bool {
+        Site::WEIGHTS.contains(&self)
+    }
+
+    /// Stable lowercase key (JSON `weight_overrides` maps).
+    pub fn key(self) -> &'static str {
+        match self {
+            Site::Wq => "wq",
+            Site::Wk => "wk",
+            Site::Wv => "wv",
+            Site::Wo => "wo",
+            Site::Gate => "gate",
+            Site::Up => "up",
+            Site::Down => "down",
+            Site::LmHead => "lm_head",
+            Site::Act => "act",
+            Site::Query => "query",
+            Site::KvCache => "kv",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Site> {
+        Some(match s {
+            "wq" => Site::Wq,
+            "wk" => Site::Wk,
+            "wv" => Site::Wv,
+            "wo" => Site::Wo,
+            "gate" => Site::Gate,
+            "up" => Site::Up,
+            "down" => Site::Down,
+            "lm_head" => Site::LmHead,
+            "act" => Site::Act,
+            "query" => Site::Query,
+            "kv" => Site::KvCache,
+            _ => return None,
+        })
+    }
+}
+
+/// Static-vs-dynamic stage-1 scaling for activation-class sites.
+/// Weights are always quantized offline per-channel; the field is
+/// carried but ignored for weight sites.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scaling {
+    /// Use the calibrated per-tensor static scale when one exists
+    /// (QRazor's recipe).
+    #[default]
+    Static,
+    /// Ignore calibrated scales; quantize per-tensor on the fly.
+    Dynamic,
+}
+
+/// What happens at one site: basis bits, SDR target bits, group size,
+/// scaling mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SitePlan {
+    /// Stage-1 basis precision in bits (8 for weights/KV, 16 for
+    /// activations in every paper scenario).
+    pub basis_bits: u32,
+    /// Stage-2 SDR target bits: `Some(4)` / `Some(8)` razor to that
+    /// width, `None` = razoring off (plain stage-1 quantization at the
+    /// basis precision).
+    pub target_bits: Option<u32>,
+    /// Elements per razoring group.
+    pub group: usize,
+    /// Static-vs-dynamic scaling (activation-class sites only).
+    pub scaling: Scaling,
+}
+
+impl SitePlan {
+    pub fn new(basis_bits: u32, target_bits: Option<u32>, group: usize) -> SitePlan {
+        SitePlan { basis_bits, target_bits, group, scaling: Scaling::Static }
+    }
+
+    /// Does stage 2 actually razor (target strictly below basis)?
+    pub fn razors(&self) -> bool {
+        self.target_bits.is_some_and(|t| t < self.basis_bits)
+    }
+
+    /// The SDR spec this plan quantizes with (`target == basis` when
+    /// razoring is off, which the razor kernels treat as stage-1 only).
+    pub fn spec(&self) -> SdrSpec {
+        SdrSpec::new(self.basis_bits, self.target_bits.unwrap_or(self.basis_bits), self.group)
+    }
+
+    /// Honor a calibrated static scale only under [`Scaling::Static`].
+    fn effective_scale(&self, s: Option<f32>) -> Option<f32> {
+        match self.scaling {
+            Scaling::Static => s,
+            Scaling::Dynamic => None,
+        }
+    }
+
+    fn validate(&self, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (2..=16).contains(&self.basis_bits),
+            "{what}: basis bits {} out of range 2..=16",
+            self.basis_bits
+        );
+        if let Some(t) = self.target_bits {
+            anyhow::ensure!(
+                (2..=16).contains(&t) && t <= self.basis_bits,
+                "{what}: target bits {t} must be in 2..=16 and <= basis {}",
+                self.basis_bits
+            );
+        }
+        validate_group(self.group, what)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("basis", Json::from(self.basis_bits)),
+            (
+                "target",
+                match self.target_bits {
+                    Some(t) => Json::from(t),
+                    None => Json::Null,
+                },
+            ),
+            ("group", Json::from(self.group)),
+            (
+                "scaling",
+                Json::from(match self.scaling {
+                    Scaling::Static => "static",
+                    Scaling::Dynamic => "dynamic",
+                }),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json, what: &str) -> anyhow::Result<SitePlan> {
+        let basis = j
+            .req("basis")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{what}: 'basis' not a number"))? as u32;
+        let target = match j.get("target") {
+            None | Some(Json::Null) => None,
+            Some(t) => {
+                Some(t.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("{what}: 'target' must be a number or null")
+                })? as u32)
+            }
+        };
+        let group = j
+            .req("group")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{what}: 'group' not a number"))?;
+        let scaling = match j.get("scaling").and_then(|s| s.as_str()) {
+            None | Some("static") => Scaling::Static,
+            Some("dynamic") => Scaling::Dynamic,
+            Some(other) => anyhow::bail!("{what}: unknown scaling '{other}'"),
+        };
+        let plan = SitePlan { basis_bits: basis, target_bits: target, group, scaling };
+        plan.validate(what)?;
+        Ok(plan)
+    }
+}
+
+/// One layer's plans for every site class. `None` = the site stays FP.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerPlan {
+    /// Plan for the layer's weight matrices (all seven block linears
+    /// unless overridden per site below).
+    pub weight: Option<SitePlan>,
+    /// Sparse per-weight-site overrides (e.g. keep `Down` at 8 bits
+    /// while the rest razor to 4). Keys must be weight sites.
+    pub weight_overrides: BTreeMap<Site, SitePlan>,
+    /// Plan for activations entering the layer's linears.
+    pub act: Option<SitePlan>,
+    /// Plan for the attention query entering Q·Kᵀ.
+    pub query: Option<SitePlan>,
+    /// Plan for K/V rows (attention operands + the packed KV cache).
+    pub kv: Option<SitePlan>,
+}
+
+impl LayerPlan {
+    /// Resolve a site within this layer (see the module doc for the
+    /// resolution order).
+    pub fn site(&self, site: Site) -> Option<SitePlan> {
+        match site {
+            s if s.is_weight() => self.weight_overrides.get(&s).copied().or(self.weight),
+            Site::Act => self.act,
+            Site::Query => self.query,
+            Site::KvCache => self.kv,
+            _ => unreachable!("weight sites handled above"),
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        if let Some(w) = &self.weight {
+            w.validate("weight plan")?;
+        }
+        for (site, p) in &self.weight_overrides {
+            anyhow::ensure!(
+                site.is_weight(),
+                "weight_overrides key '{}' is not a weight site",
+                site.key()
+            );
+            p.validate(&format!("weight override '{}'", site.key()))?;
+        }
+        if let Some(a) = &self.act {
+            a.validate("act plan")?;
+        }
+        if let Some(q) = &self.query {
+            q.validate("query plan")?;
+        }
+        if let Some(k) = &self.kv {
+            k.validate("kv plan")?;
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let opt = |p: &Option<SitePlan>| p.map(|p| p.to_json()).unwrap_or(Json::Null);
+        let mut j = Json::from_pairs(vec![
+            ("weight", opt(&self.weight)),
+            ("act", opt(&self.act)),
+            ("query", opt(&self.query)),
+            ("kv", opt(&self.kv)),
+        ]);
+        if !self.weight_overrides.is_empty() {
+            let mut m = Json::obj();
+            for (site, p) in &self.weight_overrides {
+                m.set(site.key(), p.to_json());
+            }
+            j.set("weight_overrides", m);
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<LayerPlan> {
+        let opt = |key: &str| -> anyhow::Result<Option<SitePlan>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(p) => Ok(Some(SitePlan::from_json(p, key)?)),
+            }
+        };
+        let mut weight_overrides = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("weight_overrides") {
+            for (k, v) in m {
+                let site = Site::parse(k)
+                    .ok_or_else(|| anyhow::anyhow!("unknown weight_overrides site '{k}'"))?;
+                weight_overrides.insert(site, SitePlan::from_json(v, k)?);
+            }
+        }
+        let plan = LayerPlan {
+            weight: opt("weight")?,
+            weight_overrides,
+            act: opt("act")?,
+            query: opt("query")?,
+            kv: opt("kv")?,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// The razor-native policy body: a base plan plus sparse per-layer
+/// overrides.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RazorPolicy {
+    pub base: LayerPlan,
+    pub overrides: BTreeMap<usize, LayerPlan>,
+}
+
+impl RazorPolicy {
+    /// The effective plan for a block layer.
+    pub fn layer(&self, layer: usize) -> &LayerPlan {
+        self.overrides.get(&layer).unwrap_or(&self.base)
+    }
+
+    /// Resolve `(layer, site)`. [`Site::LmHead`] ignores layer
+    /// overrides.
+    pub fn resolve(&self, layer: usize, site: Site) -> Option<SitePlan> {
+        if site == Site::LmHead {
+            return self.base.site(site);
+        }
+        self.layer(layer).site(site)
+    }
+
+    /// The activation plan governing the linear at `(layer, site)`:
+    /// the LM head always reads the base plan (it is not a block
+    /// layer); every other site reads its layer's resolution. The one
+    /// definition shared by weight prep, the act fallback, basis-bit
+    /// derivation, and static-scale suppression — so the packed
+    /// operand's `act_spec` can never desynchronize from the fallback
+    /// transform.
+    fn act_plan(&self, layer: usize, site: Site) -> Option<SitePlan> {
+        if site == Site::LmHead {
+            self.base.site(Site::Act)
+        } else {
+            self.resolve(layer, Site::Act)
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        self.base.validate()?;
+        for (li, p) in &self.overrides {
+            p.validate().map_err(|e| anyhow::anyhow!("layer {li}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+enum Backend {
+    /// A pre-redesign [`Scheme`] applied uniformly at every layer and
+    /// site (all the baselines).
+    Uniform(Arc<dyn Scheme>),
+    /// Razor-native per-site resolution.
+    Razor(RazorPolicy),
+}
+
+impl Clone for Backend {
+    fn clone(&self) -> Backend {
+        match self {
+            Backend::Uniform(s) => Backend::Uniform(Arc::clone(s)),
+            Backend::Razor(r) => Backend::Razor(r.clone()),
+        }
+    }
+}
+
+/// A complete quantization policy — what [`crate::model::quantized::QuantModel::build`]
+/// consumes. See the module doc.
+#[derive(Clone)]
+pub struct QuantPolicy {
+    backend: Backend,
+}
+
+// Hand-written because `Arc<dyn Scheme>` has no `Debug`.
+impl fmt::Debug for QuantPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "QuantPolicy({})", self.name())
+    }
+}
+
+impl fmt::Display for QuantPolicy {
+    /// Canonical DSL form for razor-native policies (round-trips
+    /// through [`QuantPolicy::parse`] for every DSL-expressible
+    /// policy); the scheme name for uniform scheme backends.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.backend {
+            Backend::Uniform(s) => write!(f, "{}", s.name()),
+            Backend::Razor(r) => write!(f, "{}", razor_dsl(r)),
+        }
+    }
+}
+
+impl From<Box<dyn Scheme>> for QuantPolicy {
+    fn from(scheme: Box<dyn Scheme>) -> QuantPolicy {
+        QuantPolicy::uniform(scheme)
+    }
+}
+
+/// Concrete boxed schemes convert too: `Box<QRazor>`, `Box<Fp16>`, …
+/// — unsized coercion does not happen through a generic parameter, so
+/// without this blanket impl every pre-redesign
+/// `QuantModel::build(&w, Box::new(Scheme), &cal)` call site would
+/// stop compiling. (No overlap with the `Box<dyn Scheme>` impl above:
+/// this one requires a sized `S`.)
+impl<S: Scheme + 'static> From<Box<S>> for QuantPolicy {
+    fn from(scheme: Box<S>) -> QuantPolicy {
+        let arc: Arc<dyn Scheme> = Arc::from(scheme);
+        QuantPolicy { backend: Backend::Uniform(arc) }
+    }
+}
+
+impl QuantPolicy {
+    /// Wrap a pre-redesign scheme as a uniform policy: the scheme's
+    /// hooks run unchanged at every layer and site.
+    pub fn uniform(scheme: Box<dyn Scheme>) -> QuantPolicy {
+        QuantPolicy { backend: Backend::Uniform(Arc::from(scheme)) }
+    }
+
+    /// Build from a razor-native body.
+    pub fn from_razor(r: RazorPolicy) -> anyhow::Result<QuantPolicy> {
+        r.validate()?;
+        Ok(QuantPolicy { backend: Backend::Razor(r) })
+    }
+
+    /// The FP16 identity policy.
+    pub fn fp16() -> QuantPolicy {
+        QuantPolicy { backend: Backend::Razor(RazorPolicy::default()) }
+    }
+
+    /// Uniform razor-native presets mirroring the old constructors.
+    pub fn w4a4(g: usize) -> QuantPolicy {
+        QuantPolicy::parse(&format!("w4a4:{g}")).expect("valid preset")
+    }
+
+    pub fn w4a4kv4(g: usize) -> QuantPolicy {
+        QuantPolicy::parse(&format!("w4a4kv4:{g}")).expect("valid preset")
+    }
+
+    pub fn w4a8(g: usize) -> QuantPolicy {
+        QuantPolicy::parse(&format!("w4a8:{g}")).expect("valid preset")
+    }
+
+    pub fn w4a8kv4(g: usize) -> QuantPolicy {
+        QuantPolicy::parse(&format!("w4a8kv4:{g}")).expect("valid preset")
+    }
+
+    /// Err when a per-layer override names a layer the model does not
+    /// have — otherwise the override would be a silent no-op, exactly
+    /// the kind of typo (`layers=12` on a 12-layer model) the DSL is
+    /// supposed to surface. Uniform scheme backends have no overrides
+    /// and always pass.
+    pub fn check_layers(&self, layers: usize) -> anyhow::Result<()> {
+        if let Some(r) = self.razor() {
+            for &li in r.overrides.keys() {
+                anyhow::ensure!(
+                    li < layers,
+                    "policy '{}' overrides layer {li}, but the model has {layers} \
+                     layers (valid indices 0..={})",
+                    self,
+                    layers.saturating_sub(1)
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The razor-native body, when this policy has one.
+    pub fn razor(&self) -> Option<&RazorPolicy> {
+        match &self.backend {
+            Backend::Razor(r) => Some(r),
+            Backend::Uniform(_) => None,
+        }
+    }
+
+    /// Human-readable policy name (canonical DSL for razor policies,
+    /// the scheme's own name for uniform scheme backends).
+    pub fn name(&self) -> String {
+        self.to_string()
+    }
+
+    /// Razor-native resolution of `(layer, site)`; `None` for uniform
+    /// scheme backends (their hooks are opaque) and for FP sites.
+    pub fn resolve(&self, layer: usize, site: Site) -> Option<SitePlan> {
+        match &self.backend {
+            Backend::Razor(r) => r.resolve(layer, site),
+            Backend::Uniform(_) => None,
+        }
+    }
+
+    // ---- model-facing behavior ------------------------------------------
+
+    /// Prepare one linear at `(layer, site)`. Razor backends attach the
+    /// packed nibble weight whenever the weight razors to 4 bits and
+    /// the activation razors to 4 or 8 (the paper's W4A4 / W4A8
+    /// scenarios — A4 pairs with the nibble GEMM, A8 with the
+    /// byte-coded one).
+    pub fn prep_linear(
+        &self,
+        layer: usize,
+        site: Site,
+        w: &Tensor<f32>,
+        calib: Option<&Tensor<f32>>,
+    ) -> PreparedLinear {
+        debug_assert!(site.is_weight(), "prep_linear at a non-weight site");
+        match &self.backend {
+            Backend::Uniform(s) => s.prep_linear(w, calib),
+            Backend::Razor(r) => {
+                let wp = r.resolve(layer, site);
+                let ap = r.act_plan(layer, site);
+                let weight = match wp {
+                    None => w.clone(),
+                    Some(p) if !p.razors() => fake_quant(w, p.basis_bits, Granularity::PerChannel),
+                    Some(p) => qrazor_fake_quant(w, p.spec(), Granularity::PerChannel),
+                };
+                let packed = match (wp, ap) {
+                    (Some(wp), Some(ap))
+                        if wp.target_bits == Some(4)
+                            && wp.razors()
+                            && matches!(ap.target_bits, Some(4) | Some(8))
+                            && ap.razors() =>
+                    {
+                        let q = QuantTensor::quantize(w, wp.basis_bits, Granularity::PerChannel);
+                        Some(PackedWeight {
+                            weight: PackedSdrMatrix::from_matrix(&SdrMatrix::compress(
+                                wp.spec(),
+                                &q,
+                            )),
+                            act_spec: ap.spec(),
+                        })
+                    }
+                    _ => None,
+                };
+                PreparedLinear { weight, act_override: None, packed }
+            }
+        }
+    }
+
+    /// The fallback activation transform for a linear at `(layer,
+    /// site)` — what [`PreparedLinear::forward_with_packed`] runs when
+    /// no packed operand (and no per-layer override) applies.
+    pub fn act(
+        &self,
+        layer: usize,
+        site: Site,
+        x: &Tensor<f32>,
+        static_scale: Option<f32>,
+    ) -> Tensor<f32> {
+        match &self.backend {
+            Backend::Uniform(s) => s.act(x, static_scale),
+            Backend::Razor(r) => match r.act_plan(layer, site) {
+                None => x.clone(),
+                Some(p) => quant_or_razor(x, p.spec(), p.effective_scale(static_scale)),
+            },
+        }
+    }
+
+    /// Stage-1 basis bits the static activation scale for `(layer,
+    /// site)` should be derived at (16 unless a plan says otherwise).
+    pub fn act_basis_bits(&self, layer: usize, site: Site) -> u32 {
+        let plan = match &self.backend {
+            Backend::Razor(r) => r.act_plan(layer, site),
+            Backend::Uniform(_) => None,
+        };
+        plan.map(|p| p.basis_bits).unwrap_or(16)
+    }
+
+    /// Suppress a calibrated static scale when the site's plan scales
+    /// dynamically (uniform scheme backends pass it through — their
+    /// hooks decide for themselves, exactly as before the redesign).
+    pub fn effective_scale(&self, layer: usize, site: Site, s: Option<f32>) -> Option<f32> {
+        match &self.backend {
+            Backend::Uniform(_) => s,
+            Backend::Razor(r) => match r.act_plan(layer, site) {
+                None => s,
+                Some(p) => p.effective_scale(s),
+            },
+        }
+    }
+
+    /// Like [`QuantPolicy::effective_scale`] but for the Query site:
+    /// the packed-attention `q_scale` must also honor dynamic scaling
+    /// (a dynamic query plan drops the calibrated scale and falls back
+    /// to the staged attention path).
+    pub fn query_effective_scale(&self, layer: usize, s: Option<f32>) -> Option<f32> {
+        match &self.backend {
+            Backend::Uniform(_) => s,
+            Backend::Razor(r) => match r.resolve(layer, Site::Query) {
+                None => s,
+                Some(p) => p.effective_scale(s),
+            },
+        }
+    }
+
+    /// Transform K/V rows entering attention (and an FP decode cache).
+    pub fn kv_transform(&self, layer: usize, x: &Tensor<f32>, s: Option<f32>) -> Tensor<f32> {
+        match &self.backend {
+            Backend::Uniform(sch) => sch.kv(x, s),
+            Backend::Razor(r) => match r.resolve(layer, Site::KvCache) {
+                None => x.clone(),
+                Some(p) => quant_or_razor(x, p.spec(), p.effective_scale(s)),
+            },
+        }
+    }
+
+    /// Transform the attention query entering Q·Kᵀ.
+    pub fn query_transform(&self, layer: usize, x: &Tensor<f32>, s: Option<f32>) -> Tensor<f32> {
+        match &self.backend {
+            Backend::Uniform(sch) => sch.kv(x, s),
+            Backend::Razor(r) => match r.resolve(layer, Site::Query) {
+                None => x.clone(),
+                Some(p) => quant_or_razor(x, p.spec(), p.effective_scale(s)),
+            },
+        }
+    }
+
+    /// Basis bits for the layer's KV/Query static scales (8 unless a
+    /// plan says otherwise).
+    pub fn kv_basis_bits(&self, layer: usize) -> u32 {
+        match &self.backend {
+            Backend::Uniform(_) => 8,
+            Backend::Razor(r) => r
+                .resolve(layer, Site::KvCache)
+                .or_else(|| r.resolve(layer, Site::Query))
+                .map(|p| p.basis_bits)
+                .unwrap_or(8),
+        }
+    }
+
+    /// Does any layer quantize its KV cache?
+    pub fn quantizes_kv(&self) -> bool {
+        match &self.backend {
+            Backend::Uniform(s) => s.quantizes_kv(),
+            Backend::Razor(r) => {
+                r.base.kv.is_some() || r.overrides.values().any(|p| p.kv.is_some())
+            }
+        }
+    }
+
+    /// Per-layer specs for a packed SDR decode cache, or `None` when
+    /// the policy should use an FP cache (no KV plan, a layer whose
+    /// plan cannot pack to 4-bit planes, a group that doesn't divide
+    /// `kv_dim`, or a **dynamically scaled** KV plan — the packed
+    /// cache compresses rows online at calibrated *static* scales, so
+    /// a dynamic plan must stay on the FP path where
+    /// [`QuantPolicy::kv_transform`] honors it; otherwise eval and
+    /// serve would quantize the same policy differently). Mixed
+    /// per-layer groups are supported; mixed FP/SDR layers fall back
+    /// to the FP cache, where `kv_transform` still applies each
+    /// layer's plan.
+    pub fn kv_cache_specs(
+        &self,
+        layers: usize,
+        kv_dim: usize,
+        fallback_group: usize,
+    ) -> Option<Vec<SdrSpec>> {
+        match &self.backend {
+            Backend::Uniform(s) => {
+                if s.quantizes_kv() && fallback_group >= 1 && kv_dim % fallback_group == 0 {
+                    Some(vec![SdrSpec::new(8, 4, fallback_group); layers])
+                } else {
+                    None
+                }
+            }
+            Backend::Razor(r) => {
+                let mut specs = Vec::with_capacity(layers);
+                for li in 0..layers {
+                    let p = r.resolve(li, Site::KvCache)?;
+                    if p.target_bits != Some(4)
+                        || !p.razors()
+                        || p.scaling == Scaling::Dynamic
+                        || kv_dim % p.group != 0
+                    {
+                        return None;
+                    }
+                    specs.push(p.spec());
+                }
+                if specs.is_empty() {
+                    return None;
+                }
+                Some(specs)
+            }
+        }
+    }
+
+    /// The SDR spec the layer's query should be razored with before
+    /// the decompression-free packed KV attention; `None` keeps the
+    /// layer on the reconstruct-then-multiply path.
+    pub fn sdr_query_spec(&self, layer: usize) -> Option<SdrSpec> {
+        match &self.backend {
+            Backend::Uniform(s) => s.sdr_query_spec(),
+            Backend::Razor(r) => match r.resolve(layer, Site::Query) {
+                Some(p) if p.target_bits == Some(4) && p.razors() => Some(p.spec()),
+                _ => None,
+            },
+        }
+    }
+
+    // ---- calibration-driven building ------------------------------------
+
+    /// Total activation razoring error of this policy over the
+    /// calibration samples: for each block layer and each recorded
+    /// activation site, the relative Frobenius error of razoring the
+    /// sample under the layer's act plan. The sensitivity builder
+    /// ranks layers by their share of this sum.
+    pub fn act_calibration_error(&self, cal: &CalibrationData, layers: usize) -> f64 {
+        (0..layers).map(|li| self.layer_act_error(cal, li)).sum()
+    }
+
+    fn layer_act_error(&self, cal: &CalibrationData, layer: usize) -> f64 {
+        let Some(r) = self.razor() else { return 0.0 };
+        let Some(plan) = r.resolve(layer, Site::Act) else { return 0.0 };
+        let mut err = 0.0;
+        for name in ["attn_in", "attn_out", "ffn_in", "ffn_down_in"] {
+            if let Some(x) = cal.sample(&format!("l{layer}.{name}")) {
+                let q = quant_or_razor(x, plan.spec(), None);
+                err += crate::baselines::rel_error(x, &q);
+            }
+        }
+        err
+    }
+
+    /// Calibration-driven mixed-precision builder: rank the block
+    /// layers by their activation razoring error over `cal`'s recorded
+    /// samples and escalate the `top_k` most error-sensitive layers
+    /// from a 4-bit to an 8-bit activation target (W stays razored;
+    /// the paper's W4A4 → W4A8 move, applied only where it pays).
+    /// Errs on uniform scheme backends and on policies whose base act
+    /// plan is not A4.
+    pub fn sensitivity_escalate(
+        &self,
+        cal: &CalibrationData,
+        layers: usize,
+        top_k: usize,
+    ) -> anyhow::Result<QuantPolicy> {
+        let r = self
+            .razor()
+            .ok_or_else(|| anyhow::anyhow!("sensitivity builder needs a razor-native policy"))?;
+        let base_act = r
+            .base
+            .act
+            .ok_or_else(|| anyhow::anyhow!("policy has no activation plan to escalate"))?;
+        anyhow::ensure!(
+            base_act.target_bits == Some(4),
+            "sensitivity escalation starts from an A4 policy, got target {:?}",
+            base_act.target_bits
+        );
+        let mut scored: Vec<(usize, f64)> =
+            (0..layers).map(|li| (li, self.layer_act_error(cal, li))).collect();
+        // Highest error first; ties break on the lower layer index so
+        // the escalation is deterministic.
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut out = r.clone();
+        for &(li, _) in scored.iter().take(top_k.min(layers)) {
+            let mut plan = out.layer(li).clone();
+            if let Some(a) = plan.act.as_mut() {
+                if a.target_bits == Some(4) {
+                    a.target_bits = Some(8);
+                }
+            }
+            out.overrides.insert(li, plan);
+        }
+        QuantPolicy::from_razor(out)
+    }
+
+    // ---- parsing / serialization ----------------------------------------
+
+    /// Parse the policy DSL (see the module doc for the grammar).
+    /// Rejects malformed group sizes and unknown `kv` suffixes with a
+    /// clear error instead of silently defaulting.
+    pub fn parse(s: &str) -> anyhow::Result<QuantPolicy> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty policy string");
+        let mut segments = s.split(';');
+        let base_str = segments.next().unwrap().trim();
+        if base_str == "fp16" {
+            let rest: Vec<&str> = segments.collect();
+            anyhow::ensure!(
+                rest.iter().all(|c| c.trim().is_empty()),
+                "fp16 takes no clauses, got '{}'",
+                rest.join(";")
+            );
+            return Ok(QuantPolicy::fp16());
+        }
+        let (base_preset, base_group) = parse_base(base_str)?;
+        let mut base = base_preset.layer_plan(base_group);
+        let mut layer_clauses: Vec<(Vec<usize>, Preset, usize)> = Vec::new();
+        let mut kv_clause: Option<Option<SitePlan>> = None;
+        let mut dynamic = false;
+        for clause in segments {
+            let clause = clause.trim();
+            anyhow::ensure!(!clause.is_empty(), "empty clause in policy '{s}'");
+            if clause == "dynamic" {
+                dynamic = true;
+            } else if let Some(rest) = clause.strip_prefix("kv=") {
+                anyhow::ensure!(kv_clause.is_none(), "duplicate kv clause");
+                if rest == "off" {
+                    kv_clause = Some(None);
+                } else {
+                    let (bits, group) = rest.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("kv clause format: kv=4:GROUP or kv=off, got 'kv={rest}'")
+                    })?;
+                    anyhow::ensure!(
+                        bits == "4",
+                        "unsupported kv target '{bits}' (the packed KV cache is KV4)"
+                    );
+                    let group = parse_group(group)?;
+                    kv_clause = Some(Some(SitePlan::new(8, Some(4), group)));
+                }
+            } else if let Some(rest) = clause.strip_prefix("layers=") {
+                let (list, preset_str) = rest.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("layer clause format: layers=I,J:PRESET[:GROUP]")
+                })?;
+                let mut idx = Vec::new();
+                for part in list.split(',') {
+                    let i: usize = part.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("bad layer index '{part}' in clause '{clause}'")
+                    })?;
+                    idx.push(i);
+                }
+                anyhow::ensure!(!idx.is_empty(), "empty layer list in clause '{clause}'");
+                let (preset, group) = match preset_str.split_once(':') {
+                    Some((p, g)) => (Preset::parse(p)?, parse_group(g)?),
+                    None => (Preset::parse(preset_str)?, base_group),
+                };
+                layer_clauses.push((idx, preset, group));
+            } else {
+                anyhow::bail!(
+                    "unknown policy clause '{clause}' (expected layers=…, kv=…, or dynamic)"
+                );
+            }
+        }
+        // Assemble: kv clause overrides the base preset's kv suffix;
+        // layer overrides inherit whatever kv plan the base ends up
+        // with unless their own preset carries a kv4 suffix.
+        if let Some(kv) = kv_clause {
+            base.kv = kv;
+            base.query = kv;
+        }
+        let mut overrides = BTreeMap::new();
+        for (idx, preset, group) in layer_clauses {
+            for li in idx {
+                let mut plan = preset.layer_plan(group);
+                if !preset.kv4 {
+                    plan.kv = base.kv;
+                    plan.query = base.query;
+                }
+                overrides.insert(li, plan);
+            }
+        }
+        let mut r = RazorPolicy { base, overrides };
+        if dynamic {
+            for plan in std::iter::once(&mut r.base).chain(r.overrides.values_mut()) {
+                for p in [&mut plan.act, &mut plan.query, &mut plan.kv] {
+                    if let Some(p) = p.as_mut() {
+                        p.scaling = Scaling::Dynamic;
+                    }
+                }
+            }
+        }
+        QuantPolicy::from_razor(r)
+    }
+
+    /// JSON manifest form (lossless for razor-native policies; uniform
+    /// scheme backends serialize as an opaque name and cannot be
+    /// reconstructed from JSON).
+    pub fn to_json(&self) -> Json {
+        match &self.backend {
+            Backend::Uniform(s) => Json::from_pairs(vec![
+                ("kind", Json::from("scheme")),
+                ("name", Json::from(s.name())),
+            ]),
+            Backend::Razor(r) => {
+                let mut j = Json::from_pairs(vec![
+                    ("kind", Json::from("razor")),
+                    ("name", Json::from(self.name())),
+                    ("base", r.base.to_json()),
+                ]);
+                if !r.overrides.is_empty() {
+                    let mut m = Json::obj();
+                    for (li, plan) in &r.overrides {
+                        m.set(&li.to_string(), plan.to_json());
+                    }
+                    j.set("overrides", m);
+                }
+                j
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<QuantPolicy> {
+        match j.req("kind")?.as_str() {
+            Some("razor") => {
+                let base = LayerPlan::from_json(j.req("base")?)?;
+                let mut overrides = BTreeMap::new();
+                if let Some(Json::Obj(m)) = j.get("overrides") {
+                    for (k, v) in m {
+                        let li: usize = k
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad override layer index '{k}'"))?;
+                        overrides.insert(li, LayerPlan::from_json(v)?);
+                    }
+                }
+                QuantPolicy::from_razor(RazorPolicy { base, overrides })
+            }
+            Some("scheme") => anyhow::bail!(
+                "scheme-backed policy '{}' is not reconstructible from JSON; \
+                 rebuild it programmatically or use a razor policy",
+                j.get("name").and_then(|n| n.as_str()).unwrap_or("?")
+            ),
+            Some(other) => anyhow::bail!("unknown policy kind '{other}'"),
+            None => anyhow::bail!("policy 'kind' must be a string"),
+        }
+    }
+}
+
+/// A parsed `w{W}a{A}[kv4]` token.
+#[derive(Clone, Copy, Debug)]
+struct Preset {
+    w_target: u32,
+    a_target: u32,
+    kv4: bool,
+}
+
+impl Preset {
+    fn parse(tok: &str) -> anyhow::Result<Preset> {
+        let tok = tok.trim();
+        let rest = tok
+            .strip_prefix('w')
+            .ok_or_else(|| anyhow::anyhow!("unknown policy preset '{tok}' (expected wXaY[kv4])"))?;
+        let a_pos = rest
+            .find('a')
+            .ok_or_else(|| anyhow::anyhow!("preset '{tok}' is missing the activation width"))?;
+        let w_target: u32 = rest[..a_pos]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad weight width in preset '{tok}'"))?;
+        let after_a = &rest[a_pos + 1..];
+        let (a_str, kv_str) = match after_a.find(|c: char| !c.is_ascii_digit()) {
+            Some(i) => after_a.split_at(i),
+            None => (after_a, ""),
+        };
+        let a_target: u32 = a_str
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad activation width in preset '{tok}'"))?;
+        let kv4 = match kv_str {
+            "" => false,
+            "kv4" => true,
+            other => anyhow::bail!(
+                "unknown kv suffix '{other}' in preset '{tok}' (only 'kv4' is supported)"
+            ),
+        };
+        anyhow::ensure!(
+            matches!(w_target, 4 | 8),
+            "unsupported weight width w{w_target} (the 8-bit basis razors to w4 or stays w8)"
+        );
+        anyhow::ensure!(
+            matches!(a_target, 4 | 8 | 16),
+            "unsupported activation width a{a_target} (expected a4, a8 or a16)"
+        );
+        Ok(Preset { w_target, a_target, kv4 })
+    }
+
+    /// Expand into a layer plan at `group` (W8 basis, A16 basis, KV8
+    /// basis — the paper's base precision scenario).
+    fn layer_plan(&self, group: usize) -> LayerPlan {
+        let weight = SitePlan::new(
+            8,
+            if self.w_target < 8 { Some(self.w_target) } else { None },
+            group,
+        );
+        let act = SitePlan::new(
+            16,
+            if self.a_target < 16 { Some(self.a_target) } else { None },
+            group,
+        );
+        let kv = self.kv4.then(|| SitePlan::new(8, Some(4), group));
+        LayerPlan {
+            weight: Some(weight),
+            weight_overrides: BTreeMap::new(),
+            act: Some(act),
+            query: kv,
+            kv,
+        }
+    }
+}
+
+fn parse_base(s: &str) -> anyhow::Result<(Preset, usize)> {
+    let (kind, g) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("policy format: PRESET:GROUP, got '{s}'"))?;
+    Ok((Preset::parse(kind)?, parse_group(g)?))
+}
+
+fn parse_group(g: &str) -> anyhow::Result<usize> {
+    let group: usize = g
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("malformed group size '{g}' (expected an integer)"))?;
+    validate_group(group, "group size")?;
+    Ok(group)
+}
+
+fn validate_group(group: usize, what: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        (1..=1024).contains(&group),
+        "{what}: razoring group {group} out of range 1..=1024"
+    );
+    Ok(())
+}
+
+/// Canonical DSL for a razor body (see [`QuantPolicy`]'s `Display`).
+fn razor_dsl(r: &RazorPolicy) -> String {
+    let (Some(w), Some(a)) = (r.base.weight, r.base.act) else {
+        return "fp16".to_string();
+    };
+    let group = w.group;
+    let wt = w.target_bits.unwrap_or(w.basis_bits);
+    let at = a.target_bits.unwrap_or(a.basis_bits);
+    // kv as the preset suffix when it matches the canonical KV4 shape
+    // at the base group, otherwise as an explicit clause.
+    let kv_suffix = matches!(
+        r.base.kv,
+        Some(p) if p.basis_bits == 8 && p.target_bits == Some(4) && p.group == group
+    );
+    let mut s = format!("w{wt}a{at}{}:{group}", if kv_suffix { "kv4" } else { "" });
+    if let (false, Some(p)) = (kv_suffix, r.base.kv) {
+        s.push_str(&format!(";kv={}:{}", p.target_bits.unwrap_or(p.basis_bits), p.group));
+    }
+    // group override layers by identical token, preserving layer order
+    let mut tokens: Vec<(String, Vec<usize>)> = Vec::new();
+    for (&li, plan) in &r.overrides {
+        if plan == &r.base {
+            continue;
+        }
+        let tok = override_token(plan, &r.base, group);
+        match tokens.iter_mut().find(|(t, _)| *t == tok) {
+            Some((_, idx)) => idx.push(li),
+            None => tokens.push((tok, vec![li])),
+        }
+    }
+    for (tok, idx) in tokens {
+        let list: Vec<String> = idx.iter().map(|i| i.to_string()).collect();
+        s.push_str(&format!(";layers={}:{tok}", list.join(",")));
+    }
+    if r.base.act.is_some_and(|p| p.scaling == Scaling::Dynamic) {
+        s.push_str(";dynamic");
+    }
+    s
+}
+
+fn override_token(plan: &LayerPlan, base: &LayerPlan, base_group: usize) -> String {
+    let wt = plan
+        .weight
+        .map(|p| p.target_bits.unwrap_or(p.basis_bits))
+        .unwrap_or(8);
+    let at = plan.act.map(|p| p.target_bits.unwrap_or(p.basis_bits)).unwrap_or(16);
+    let kv4 = plan.kv != base.kv
+        && matches!(
+            plan.kv,
+            Some(p) if p.basis_bits == 8 && p.target_bits == Some(4)
+        );
+    let group = plan.weight.map(|p| p.group).unwrap_or(base_group);
+    let mut tok = format!("w{wt}a{at}{}", if kv4 { "kv4" } else { "" });
+    if group != base_group {
+        tok.push_str(&format!(":{group}"));
+    }
+    tok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_reproduce_the_old_scheme_strings_exactly() {
+        for s in ["fp16", "w4a4:16", "w4a4kv4:16", "w4a8:16", "w4a8kv4:16", "w4a4kv4:32"] {
+            let p = QuantPolicy::parse(s).unwrap();
+            assert_eq!(p.to_string(), s, "canonical form must match the preset string");
+            // and the canonical form re-parses to the same structure
+            let again = QuantPolicy::parse(&p.to_string()).unwrap();
+            assert_eq!(p.razor(), again.razor());
+        }
+    }
+
+    #[test]
+    fn preset_plans_mirror_the_qrazor_constructors() {
+        let p = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let w = p.resolve(0, Site::Wq).unwrap();
+        assert_eq!((w.basis_bits, w.target_bits, w.group), (8, Some(4), 16));
+        let a = p.resolve(1, Site::Act).unwrap();
+        assert_eq!((a.basis_bits, a.target_bits, a.group), (16, Some(4), 16));
+        let kv = p.resolve(0, Site::KvCache).unwrap();
+        assert_eq!((kv.basis_bits, kv.target_bits, kv.group), (8, Some(4), 16));
+        assert_eq!(p.resolve(0, Site::Query), Some(kv));
+        assert!(p.quantizes_kv());
+        assert_eq!(p.sdr_query_spec(0), Some(SdrSpec::new(8, 4, 16)));
+        // w4a4 without the suffix: KV stays FP
+        let p = QuantPolicy::parse("w4a4:16").unwrap();
+        assert!(p.resolve(0, Site::KvCache).is_none());
+        assert!(!p.quantizes_kv());
+        assert!(p.sdr_query_spec(0).is_none());
+        // a16 ablation: razoring off for activations
+        let p = QuantPolicy::parse("w4a16:8").unwrap();
+        let a = p.resolve(0, Site::Act).unwrap();
+        assert_eq!(a.target_bits, None);
+        assert!(!a.razors());
+    }
+
+    #[test]
+    fn mixed_policy_escalates_named_layers_only() {
+        let p = QuantPolicy::parse("w4a4:16;layers=0,11:w4a8;kv=4:16").unwrap();
+        assert_eq!(p.resolve(0, Site::Act).unwrap().target_bits, Some(8));
+        assert_eq!(p.resolve(11, Site::Act).unwrap().target_bits, Some(8));
+        assert_eq!(p.resolve(5, Site::Act).unwrap().target_bits, Some(4));
+        // weights stay W4 everywhere; kv clause applies to all layers
+        for li in [0usize, 5, 11] {
+            assert_eq!(p.resolve(li, Site::Wo).unwrap().target_bits, Some(4));
+            let kv = p.resolve(li, Site::KvCache).unwrap();
+            assert_eq!((kv.target_bits, kv.group), (Some(4), 16));
+        }
+        // canonical form round-trips
+        let s = p.to_string();
+        let again = QuantPolicy::parse(&s).unwrap();
+        assert_eq!(p.razor(), again.razor(), "canonical '{s}' must re-parse identically");
+    }
+
+    #[test]
+    fn dsl_rejects_malformed_strings_with_clear_errors() {
+        for (s, needle) in [
+            ("", "empty"),
+            ("w4a4", "PRESET:GROUP"),
+            ("w4a4:", "malformed group"),
+            ("w4a4:abc", "malformed group"),
+            ("w4a4:0", "out of range"),
+            ("w4a4:4096", "out of range"),
+            ("w4a4kv8:16", "unknown kv suffix"),
+            ("w4a4kv16:16", "unknown kv suffix"),
+            ("w3a4:16", "unsupported weight width"),
+            ("w4a5:16", "unsupported activation width"),
+            ("bogus:16", "unknown policy preset"),
+            ("w4a4:16;kv=8:16", "unsupported kv target"),
+            ("w4a4:16;kv=4", "kv clause format"),
+            ("w4a4:16;layers=x:w4a8", "bad layer index"),
+            ("w4a4:16;layers=0:w4a8:nope", "malformed group"),
+            ("w4a4:16;frobnicate", "unknown policy clause"),
+            ("fp16;kv=4:16", "fp16 takes no clauses"),
+        ] {
+            let err = QuantPolicy::parse(s).unwrap_err().to_string();
+            assert!(
+                err.contains(needle),
+                "'{s}' should fail mentioning '{needle}', got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_round_trips_razor_policies() {
+        for s in [
+            "fp16",
+            "w4a4kv4:16",
+            "w4a8:32",
+            "w4a4:16;layers=0,3:w4a8;kv=4:16",
+            "w4a4kv4:16;dynamic",
+        ] {
+            let p = QuantPolicy::parse(s).unwrap();
+            let j = Json::parse(&p.to_json().to_string()).unwrap();
+            let back = QuantPolicy::from_json(&j).unwrap();
+            assert_eq!(p.razor(), back.razor(), "json round-trip for '{s}'");
+            assert_eq!(p.to_string(), back.to_string());
+        }
+    }
+
+    #[test]
+    fn json_rejects_scheme_backends_and_bad_kinds() {
+        let p = QuantPolicy::uniform(Box::new(crate::baselines::Fp16));
+        let j = p.to_json();
+        assert!(QuantPolicy::from_json(&j).unwrap_err().to_string().contains("scheme"));
+        let bad = Json::from_pairs(vec![("kind", Json::from("nope"))]);
+        assert!(QuantPolicy::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn weight_site_overrides_resolve_before_the_class_plan() {
+        let mut r = QuantPolicy::parse("w4a4kv4:16").unwrap().razor().unwrap().clone();
+        r.base
+            .weight_overrides
+            .insert(Site::Down, SitePlan::new(8, None, 16));
+        let p = QuantPolicy::from_razor(r).unwrap();
+        assert_eq!(p.resolve(0, Site::Down).unwrap().target_bits, None);
+        assert_eq!(p.resolve(0, Site::Gate).unwrap().target_bits, Some(4));
+        // survives the JSON round-trip too
+        let back = QuantPolicy::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.resolve(0, Site::Down).unwrap().target_bits, None);
+    }
+
+    #[test]
+    fn dynamic_clause_suppresses_static_scales() {
+        let p = QuantPolicy::parse("w4a4kv4:16;dynamic").unwrap();
+        assert_eq!(p.effective_scale(0, Site::Act, Some(0.5)), None);
+        assert_eq!(p.query_effective_scale(0, Some(0.5)), None);
+        assert_eq!(p.resolve(0, Site::Act).unwrap().scaling, Scaling::Dynamic);
+        // A dynamic KV plan cannot use the packed cache (it compresses
+        // at static scales): the decode path falls back to FP, where
+        // kv_transform honors the dynamic directive — eval and serve
+        // stay consistent.
+        assert!(p.kv_cache_specs(2, 64, 16).is_none());
+        let p = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        assert_eq!(p.effective_scale(0, Site::Act, Some(0.5)), Some(0.5));
+        assert!(p.kv_cache_specs(2, 64, 16).is_some());
+    }
+
+    #[test]
+    fn check_layers_rejects_out_of_range_overrides() {
+        let p = QuantPolicy::parse("w4a4:16;layers=0,11:w4a8").unwrap();
+        assert!(p.check_layers(12).is_ok());
+        let err = p.check_layers(11).unwrap_err().to_string();
+        assert!(err.contains("overrides layer 11"), "{err}");
+        assert!(err.contains("0..=10"), "{err}");
+        // uniform scheme backends have no overrides
+        let u = QuantPolicy::uniform(Box::new(crate::baselines::Fp16));
+        assert!(u.check_layers(1).is_ok());
+        // concrete boxed schemes convert through the blanket impl
+        let c: QuantPolicy = Box::new(crate::baselines::QRazor::w4a4(16)).into();
+        assert_eq!(c.name(), "QRazor-W4A4 g16");
+    }
+
+    #[test]
+    fn kv_cache_specs_cover_every_layer_or_none() {
+        let p = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let specs = p.kv_cache_specs(3, 64, 16).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs.iter().all(|s| *s == SdrSpec::new(8, 4, 16)));
+        // group not dividing kv_dim → FP fallback
+        assert!(p.kv_cache_specs(3, 60, 16).is_none());
+        // no kv plan → FP fallback
+        assert!(QuantPolicy::parse("w4a4:16").unwrap().kv_cache_specs(3, 64, 16).is_none());
+        // kv=off drops the suffix plan
+        let off = QuantPolicy::parse("w4a4kv4:16;kv=off").unwrap();
+        assert!(!off.quantizes_kv());
+        assert!(off.kv_cache_specs(2, 64, 16).is_none());
+    }
+
+    #[test]
+    fn lm_head_resolves_against_the_base_plan() {
+        let p = QuantPolicy::parse("w4a4:16;layers=0:w4a8").unwrap();
+        // layer 0 escalated, but the head still reads the base
+        assert_eq!(p.resolve(0, Site::LmHead).unwrap().target_bits, Some(4));
+        assert_eq!(p.act_basis_bits(0, Site::LmHead), 16);
+    }
+
+    #[test]
+    fn uniform_scheme_backend_delegates_to_the_hooks() {
+        let p: QuantPolicy = (Box::new(crate::baselines::QRazor::w4a4kv4(16))
+            as Box<dyn Scheme>)
+            .into();
+        assert_eq!(p.name(), "QRazor-W4A4KV4 g16");
+        assert!(p.quantizes_kv());
+        assert_eq!(p.sdr_query_spec(7), Some(SdrSpec::new(8, 4, 16)));
+        assert!(p.resolve(0, Site::Act).is_none(), "scheme hooks are opaque");
+        assert_eq!(p.act_basis_bits(0, Site::Act), 16);
+        assert_eq!(p.kv_basis_bits(0), 8);
+        let specs = p.kv_cache_specs(2, 64, 16).unwrap();
+        assert_eq!(specs, vec![SdrSpec::new(8, 4, 16); 2]);
+    }
+}

@@ -10,6 +10,14 @@
 //! batched pass at the basis precision scores all `k + 1` positions,
 //! and the longest greedy-matching prefix is kept.
 //!
+//! Since the per-site policy redesign the fidelity split is expressed
+//! as **two named [`crate::policy::QuantPolicy`]s** carried by
+//! [`crate::config::ServeConfig`] (`policy` = verify, `draft_policy`
+//! = draft, both in the policy DSL): the CLI builds the pair from the
+//! one serve manifest, and either side may itself be a mixed
+//! per-layer policy (e.g. a sensitivity-escalated W4A4/W4A8 verify
+//! over a uniform W4A4 draft).
+//!
 //! # Algorithm (one [`SpecDecoder::step`])
 //!
 //! With `seq` the committed tokens (prompt + generated; the last one is

@@ -1,0 +1,444 @@
+//! The acceptance suite for the per-site policy redesign: uniform
+//! policies must be **bit-identical** to the pre-redesign
+//! `Box<dyn Scheme>` path, for every baseline and every QRazor variant
+//! — packed GEMM and packed KV attention included — and mixed
+//! per-layer policies must run end-to-end through serving (single
+//! engine and ≥2-shard cluster, plain and speculative).
+//!
+//! Two independent implementations are compared:
+//! * `ref_forward_full` below re-implements the pre-redesign
+//!   scheme-hook forward verbatim (prep per site, static scales at
+//!   the old fixed 16/8 basis bits, `scheme.kv` on Q/K/V, packed
+//!   linears exactly where `prep_linear` attached them);
+//! * `QuantModel::build` runs the new policy-resolved forward —
+//!   through the **uniform scheme backend** when given a
+//!   `Box<dyn Scheme>` and through the **razor-native resolution**
+//!   when given a DSL policy.
+//! All three must agree to the bit.
+
+use std::sync::Arc;
+
+use qrazor::baselines::{
+    awq::AwqScheme, qllm::QllmScheme, qserve::QServeScheme, quarot::QuaRotScheme, rtn::RtnScheme,
+    smoothquant::SmoothQuantScheme, Fp16, PreparedLinear, QRazor, Scheme,
+};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{ServeApi, Server};
+use qrazor::cluster::{ClusterConfig, ClusterServer};
+use qrazor::model::quantized::{calibrate, CalibrationData, DecodeCache, QuantModel};
+use qrazor::model::{apply_rope, causal_attention, ModelWeights};
+use qrazor::policy::QuantPolicy;
+use qrazor::tensor::{add_assign, rmsnorm, silu, Tensor};
+use qrazor::util::rng::Rng;
+
+fn setup(seed: u64) -> (ModelWeights, CalibrationData, Vec<Vec<u32>>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed ^ 0x9E37);
+    let seqs: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..20).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    (w, cal, seqs)
+}
+
+/// The pre-redesign forward, reproduced hook-for-hook: this is what
+/// `QuantModel::forward_full` did when the model held one
+/// `Box<dyn Scheme>` (fixed 16-bit activation basis, 8-bit KV basis,
+/// `scheme.kv` on Q/K/V, packed linears wherever `prep_linear`
+/// attached them).
+fn ref_forward_full(
+    w: &ModelWeights,
+    scheme: &dyn Scheme,
+    cal: &CalibrationData,
+    tokens: &[u32],
+) -> Tensor<f32> {
+    let cfg = &w.config;
+    let (d, hd) = (cfg.dim, cfg.head_dim());
+    let t = tokens.len();
+    let scale = |site: &str, bits: u32| -> Option<f32> {
+        cal.calibrator
+            .amax(site)
+            .map(|amax| qrazor::quant::absmax_scale_from_amax(amax, bits))
+    };
+    let prep = |weight: &Tensor<f32>, site: &str| scheme.prep_linear(weight, cal.sample(site));
+    let fwd = |pl: &PreparedLinear, x: &Tensor<f32>, s: Option<f32>| pl.forward(x, s, scheme);
+    let mut x = Tensor::zeros(&[t, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(w.embed.row(tok as usize));
+    }
+    let mut normed = Tensor::zeros(&[t, d]);
+    for (li, layer) in w.layers.iter().enumerate() {
+        for i in 0..t {
+            rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
+        }
+        let s_in = scale(&format!("l{li}.attn_in"), 16);
+        let wq = prep(&layer.wq, &format!("l{li}.attn_in"));
+        let wk = prep(&layer.wk, &format!("l{li}.attn_in"));
+        let wv = prep(&layer.wv, &format!("l{li}.attn_in"));
+        let mut q = fwd(&wq, &normed, s_in);
+        let mut k = fwd(&wk, &normed, s_in);
+        let v = fwd(&wv, &normed, s_in);
+        apply_rope(&mut q, cfg.heads, hd, 0);
+        apply_rope(&mut k, cfg.kv_heads, hd, 0);
+        let qq = scheme.kv(&q, scale(&format!("l{li}.q"), 8));
+        let kq = scheme.kv(&k, scale(&format!("l{li}.k"), 8));
+        let vq = scheme.kv(&v, scale(&format!("l{li}.v"), 8));
+        let ctx = causal_attention(&qq, &kq, &vq, cfg.heads, cfg.kv_heads, hd);
+        let wo = prep(&layer.wo, &format!("l{li}.attn_out"));
+        let attn_out = fwd(&wo, &ctx, scale(&format!("l{li}.attn_out"), 16));
+        add_assign(&mut x, &attn_out);
+        for i in 0..t {
+            rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
+        }
+        let s_ffn = scale(&format!("l{li}.ffn_in"), 16);
+        let w_gate = prep(&layer.w_gate, &format!("l{li}.ffn_in"));
+        let w_up = prep(&layer.w_up, &format!("l{li}.ffn_in"));
+        let gate = fwd(&w_gate, &normed, s_ffn);
+        let up = fwd(&w_up, &normed, s_ffn);
+        let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
+        for ((o, &g), &u) in h.data_mut().iter_mut().zip(gate.data()).zip(up.data()) {
+            *o = silu(g) * u;
+        }
+        let w_down = prep(&layer.w_down, &format!("l{li}.ffn_down_in"));
+        let ffn_out = fwd(&w_down, &h, scale(&format!("l{li}.ffn_down_in"), 16));
+        add_assign(&mut x, &ffn_out);
+    }
+    for i in 0..t {
+        rmsnorm(x.row(i), &w.final_norm, 1e-5, normed.row_mut(i));
+    }
+    let head = prep(&w.lm_head, "lm_head_in");
+    fwd(&head, &normed, scale("lm_head_in", 16))
+}
+
+/// Every scheme the repo ships, as fresh boxed instances.
+fn all_schemes() -> Vec<(&'static str, Box<dyn Scheme>)> {
+    vec![
+        ("fp16", Box::new(Fp16)),
+        ("qrazor-w4a4", Box::new(QRazor::w4a4(16))),
+        ("qrazor-w4a4kv4", Box::new(QRazor::w4a4kv4(16))),
+        ("qrazor-w4a8", Box::new(QRazor::w4a8(16))),
+        ("qrazor-w4a8kv4", Box::new(QRazor::w4a8kv4(16))),
+        ("qrazor-abl-w8a8", Box::new(QRazor::ablation(8, 8, 8))),
+        ("qrazor-abl-w4a16", Box::new(QRazor::ablation(4, 16, 16))),
+        ("rtn-w4a4", Box::new(RtnScheme::w4a4(16))),
+        ("rtn-w4a4kv4", Box::new(RtnScheme::w4a4kv4(16))),
+        ("smoothquant-w4a4", Box::new(SmoothQuantScheme::w4a4(0.5))),
+        ("quarot-rtn", Box::new(QuaRotScheme::rtn_w4a4kv4())),
+        ("quarot-gptq", Box::new(QuaRotScheme::gptq_w4a4kv4())),
+        ("awq-w4a4", Box::new(AwqScheme::w4a4(16))),
+        ("qllm-w4a4", Box::new(QllmScheme::w4a4())),
+        ("qserve-w4a8kv4", Box::new(QServeScheme::w4a8kv4(16))),
+    ]
+}
+
+#[test]
+fn uniform_scheme_policies_match_the_pre_redesign_forward_bit_exactly() {
+    // Every baseline and QRazor variant: building through the policy
+    // layer (uniform scheme backend) must reproduce the pre-redesign
+    // scheme-hook forward to the bit, packed GEMMs included.
+    let (w, cal, seqs) = setup(11);
+    let tokens = &seqs[0][..12];
+    for (name, scheme) in all_schemes() {
+        let want = ref_forward_full(&w, scheme.as_ref(), &cal, tokens);
+        let qm = QuantModel::build(&w, scheme, &cal);
+        let got = qm.forward_full(tokens);
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "{name}: policy-built forward diverged from the scheme-hook reference"
+        );
+    }
+}
+
+/// The DSL strings whose razor-native resolution must be bit-identical
+/// to the equivalent scheme-backed uniform policy.
+fn qrazor_pairs() -> Vec<(&'static str, Box<dyn Scheme>)> {
+    vec![
+        ("fp16", Box::new(Fp16)),
+        ("w4a4:16", Box::new(QRazor::w4a4(16))),
+        ("w4a4kv4:16", Box::new(QRazor::w4a4kv4(16))),
+        ("w4a8:16", Box::new(QRazor::w4a8(16))),
+        ("w4a8kv4:16", Box::new(QRazor::w4a8kv4(16))),
+        ("w4a4kv4:32", Box::new(QRazor::w4a4kv4(32))),
+        ("w8a8:8", Box::new(QRazor::ablation(8, 8, 8))),
+        ("w4a16:16", Box::new(QRazor::ablation(4, 16, 16))),
+    ]
+}
+
+#[test]
+fn razor_native_policies_match_scheme_backed_uniform_bit_exactly() {
+    // The same preset through two genuinely different resolution
+    // paths: razor-native (parsed DSL) vs the scheme's own hooks
+    // (uniform backend). Full-forward logits must agree to the bit.
+    let (w, cal, seqs) = setup(23);
+    let tokens = &seqs[1][..12];
+    for (dsl, scheme) in qrazor_pairs() {
+        let via_scheme = QuantModel::build(&w, scheme, &cal);
+        let via_policy = QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal);
+        let a = via_scheme.forward_full(tokens);
+        let b = via_policy.forward_full(tokens);
+        assert_eq!(a.data(), b.data(), "{dsl}: razor-native ≠ scheme-backed");
+        assert_eq!(
+            via_scheme.weight_operand_bytes(),
+            via_policy.weight_operand_bytes(),
+            "{dsl}: packed operand accounting diverged"
+        );
+    }
+}
+
+#[test]
+fn razor_native_decode_matches_scheme_backed_incl_packed_kv_attention() {
+    // Incremental decode — packed KV caches, decompression-free
+    // attention, chunked prefill — through both backends: logits and
+    // cache bytes must be identical at every step.
+    let (w, cal, seqs) = setup(31);
+    let tokens = &seqs[2][..10];
+    for (dsl, scheme) in qrazor_pairs() {
+        let via_scheme = QuantModel::build(&w, scheme, &cal);
+        let via_policy = QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal);
+        let group = via_policy
+            .policy
+            .resolve(0, qrazor::policy::Site::KvCache)
+            .map(|p| p.group)
+            .unwrap_or(16);
+        let mut ca = via_scheme.new_cache(group);
+        let mut cb = via_policy.new_cache(group);
+        assert_eq!(
+            matches!(ca, DecodeCache::Sdr(_)),
+            matches!(cb, DecodeCache::Sdr(_)),
+            "{dsl}: cache kind diverged"
+        );
+        // prefill as one chunk, then token-by-token decode
+        let split = tokens.len() / 2;
+        let a0 = via_scheme.forward_chunk(&tokens[..split], 0, &mut ca);
+        let b0 = via_policy.forward_chunk(&tokens[..split], 0, &mut cb);
+        assert_eq!(a0.data(), b0.data(), "{dsl}: prefill chunk diverged");
+        for (i, &tok) in tokens[split..].iter().enumerate() {
+            let pos = split + i;
+            let a = via_scheme.forward_token(tok, pos, &mut ca);
+            let b = via_policy.forward_token(tok, pos, &mut cb);
+            assert_eq!(a, b, "{dsl}: decode diverged at pos {pos}");
+            assert_eq!(ca.bytes(), cb.bytes(), "{dsl}: cache bytes diverged at pos {pos}");
+        }
+    }
+}
+
+#[test]
+fn prop_equivalence_over_random_models() {
+    // Property form over random weights/prompts: razor-native ≡
+    // scheme-backed for the full QRazor family, exact to the bit.
+    for seed in [101u64, 202, 303, 404] {
+        let (w, cal, seqs) = setup(seed);
+        let tokens = &seqs[0][..8];
+        for (dsl, scheme) in [
+            ("w4a4kv4:16", Box::new(QRazor::w4a4kv4(16)) as Box<dyn Scheme>),
+            ("w4a8kv4:16", Box::new(QRazor::w4a8kv4(16)) as Box<dyn Scheme>),
+        ] {
+            let a = QuantModel::build(&w, scheme, &cal).forward_full(tokens);
+            let b = QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal)
+                .forward_full(tokens);
+            assert_eq!(a.data(), b.data(), "seed {seed}: {dsl}");
+        }
+    }
+}
+
+#[test]
+fn mixed_policy_escalation_strictly_reduces_calibration_error() {
+    // The sensitivity builder's contract on nano: escalating the
+    // top-k most error-sensitive layers from A4 to A8 strictly
+    // reduces the activation razoring error over the calibration
+    // samples (and only touches the chosen layers).
+    let (w, cal, _) = setup(47);
+    let layers = w.config.layers;
+    let uniform = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    let base_err = uniform.act_calibration_error(&cal, layers);
+    assert!(base_err > 0.0, "A4 razoring must have measurable error");
+    let mut prev = base_err;
+    for k in 1..=layers {
+        let esc = uniform.sensitivity_escalate(&cal, layers, k).unwrap();
+        let err = esc.act_calibration_error(&cal, layers);
+        assert!(
+            err < prev,
+            "top-{k} escalation must strictly reduce calib error ({err} vs {prev})"
+        );
+        prev = err;
+        // exactly k layers escalated to A8, the rest untouched
+        let escalated = (0..layers)
+            .filter(|&li| {
+                esc.resolve(li, qrazor::policy::Site::Act).unwrap().target_bits == Some(8)
+            })
+            .count();
+        assert_eq!(escalated, k);
+        // weights stay razored W4 everywhere
+        for li in 0..layers {
+            assert_eq!(
+                esc.resolve(li, qrazor::policy::Site::Wq).unwrap().target_bits,
+                Some(4),
+                "escalation must not touch weight plans"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_policy_forward_error_sits_between_uniform_a4_and_a8() {
+    // End-to-end sanity on the nano model: per-layer W4A8 escalation
+    // lands between uniform W4A4 (noisier) and uniform W4A8 (cleaner)
+    // against the FP reference.
+    let (w, cal, seqs) = setup(59);
+    let tokens = &seqs[0][..12];
+    let fp = qrazor::model::forward_full(&w, tokens);
+    let err = |dsl: &str| {
+        let qm = QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal);
+        qrazor::baselines::rel_error(&fp, &qm.forward_full(tokens))
+    };
+    let e_a4 = err("w4a4kv4:16");
+    let e_mixed = err("w4a4kv4:16;layers=0:w4a8");
+    let e_a8 = err("w4a8kv4:16");
+    assert!(e_a8 < e_a4, "a8 {e_a8} vs a4 {e_a4}");
+    assert!(e_mixed < e_a4, "escalating a layer must reduce forward error: {e_mixed} vs {e_a4}");
+}
+
+fn greedy_workload(api: &impl ServeApi, vocab: u64, n: usize) -> Vec<(u64, Vec<u32>)> {
+    let mut rng = Rng::new(77);
+    let mut ids = Vec::new();
+    for _ in 0..n {
+        let len = 3 + rng.index(6);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+        ids.push(api.submit(prompt, 6, qrazor::coordinator::Sampling::Greedy).unwrap());
+    }
+    let sessions = qrazor::coordinator::collect_sessions(api, n).unwrap();
+    ids.iter()
+        .map(|id| (id.0, sessions[id].response.as_ref().unwrap().tokens.clone()))
+        .collect()
+}
+
+#[test]
+fn mixed_policy_serves_end_to_end_single_engine_and_cluster() {
+    // A per-layer W4A4/W4A8 mixed policy (with KV4) runs through the
+    // full serving stack: single-engine Server, a 2-shard cluster,
+    // and the speculative draft/verify pair expressed as two named
+    // policies — all producing identical greedy streams.
+    let (w, cal, _) = setup(83);
+    let vocab = w.config.vocab as u64;
+    let dsl = "w4a4kv4:16;layers=0:w4a8";
+    let build = || Arc::new(QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal));
+    let serve_cfg = ServeConfig {
+        max_new_tokens: 8,
+        policy: dsl.into(),
+        draft_policy: "w4a4kv4:16".into(),
+        ..Default::default()
+    };
+
+    let server = Server::spawn(build(), serve_cfg.clone());
+    let want = greedy_workload(&server, vocab, 6);
+    server.shutdown();
+
+    let cluster = ClusterServer::spawn(
+        build(),
+        ClusterConfig { shards: 2, serve: serve_cfg.clone(), ..Default::default() },
+    );
+    let got = greedy_workload(&cluster, vocab, 6);
+    cluster.shutdown();
+    assert_eq!(want, got, "cluster streams must match the single engine");
+
+    // speculative: draft = uniform packed W4A4, verify = the mixed
+    // policy — the ServeConfig names the pair; streams stay identical
+    let draft = Arc::new(QuantModel::build(
+        &w,
+        QuantPolicy::parse(&serve_cfg.draft_policy).unwrap(),
+        &cal,
+    ));
+    let spec_cfg = ServeConfig { spec_k: 2, ..serve_cfg.clone() };
+    let spec_server = Server::spawn_with_draft(build(), Some(Arc::clone(&draft)), spec_cfg);
+    let spec_got = greedy_workload(&spec_server, vocab, 6);
+    let stats = spec_server.stats();
+    spec_server.shutdown();
+    assert_eq!(want, spec_got, "speculative streams must match plain decode");
+    assert!(stats.spec.steps > 0, "speculative rounds must actually run");
+
+    // and the same pair across a 2-shard cluster
+    let spec_cluster = ClusterServer::spawn_with_draft(
+        build(),
+        Some(draft),
+        ClusterConfig {
+            shards: 2,
+            serve: ServeConfig { spec_k: 2, ..serve_cfg },
+            ..Default::default()
+        },
+    );
+    let spec_cluster_got = greedy_workload(&spec_cluster, vocab, 6);
+    spec_cluster.shutdown();
+    assert_eq!(want, spec_cluster_got, "speculative cluster streams must match");
+}
+
+#[test]
+fn eval_policy_sweep_smoke_on_nano() {
+    // The `eval --policy` path at the harness level: sweep a uniform
+    // and a mixed policy through Experiment::eval_policies and render
+    // the Table-2-style accuracy/footprint report. (The CLI drives
+    // exactly this code; CI has no trained artifacts, so the smoke
+    // builds its experiment from random weights.)
+    use qrazor::data::corpus::{pack_sequences, split_corpus, wiki_corpus};
+    use qrazor::data::tokenizer::Tokenizer;
+    use qrazor::eval::build_suite;
+    use qrazor::eval::harness::{render_policy_table, EvalScale, Experiment};
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, 5);
+    let world = wiki_corpus(20_000, 9);
+    let (train_text, eval_text) = split_corpus(&world, 0.2);
+    let tokenizer = Tokenizer::train(&train_text[..train_text.len().min(10_000)], cfg.vocab);
+    let eval_tokens = tokenizer.encode(&eval_text);
+    let seqs: Vec<Vec<u32>> = pack_sequences(&eval_tokens, 32).into_iter().take(4).collect();
+    assert!(!seqs.is_empty());
+    let calib_tokens = tokenizer.encode(&train_text[..train_text.len().min(10_000)]);
+    let calib: Vec<Vec<u32>> = pack_sequences(&calib_tokens, 32).into_iter().take(4).collect();
+    let cal = calibrate(&w, &calib);
+    let tasks = build_suite(&eval_text, &tokenizer, 4, 9, 11);
+    let exp = Experiment {
+        config: cfg,
+        weights: w,
+        cal,
+        tokenizer,
+        wiki_seqs: seqs.clone(),
+        lambada_seqs: seqs,
+        tasks,
+        scale: EvalScale::quick(),
+    };
+    let rows = exp.eval_policies(vec![
+        QuantPolicy::parse("w4a4kv4:16").unwrap(),
+        QuantPolicy::parse("w4a4:16;layers=0:w4a8;kv=4:16").unwrap(),
+    ]);
+    assert_eq!(rows.len(), 2);
+    for r in &rows {
+        assert!(r.result.ppl_wiki.is_finite() && r.result.ppl_wiki > 0.0, "{}", r.result.name);
+        assert!((4.0..5.0).contains(&r.kv_effective_bits), "{}", r.kv_effective_bits);
+        assert!((0.45..=0.55).contains(&r.weight_ratio()), "{}", r.weight_ratio());
+    }
+    let table = render_policy_table("policy sweep (nano)", &rows);
+    assert!(table.contains("w4a4kv4:16"));
+    assert!(table.contains("layers=0"));
+    assert!(table.contains("KV-bits"));
+}
+
+#[test]
+fn mixed_policy_packs_per_layer_operands() {
+    // Layer 0 escalated to A8 must still carry a packed weight (the
+    // byte-coded GEMM pairs with it); the A4 layers carry the nibble
+    // pairing. Operand bytes stay at the packed ratio either way.
+    let (w, cal, seqs) = setup(91);
+    let qm = QuantModel::build(
+        &w,
+        QuantPolicy::parse("w4a4kv4:16;layers=0:w4a8").unwrap(),
+        &cal,
+    );
+    let (packed, unpacked) = qm.weight_operand_bytes();
+    let ratio = packed as f64 / unpacked as f64;
+    assert!((0.45..=0.55).contains(&ratio), "ratio {ratio}");
+    // decode works end to end on the packed path
+    let mut cache = qm.new_cache(16);
+    assert!(matches!(cache, DecodeCache::Sdr(_)));
+    let logits = qm.forward_chunk(&seqs[0][..6], 0, &mut cache);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
