@@ -92,8 +92,112 @@ fn streaming_latency(
     (ttft, gaps)
 }
 
+/// Shared-prefix workload axis: sessions share a prompt preamble of
+/// `prefix_len` tokens against a fixed page pool, versus a control
+/// where every session carries its own same-length preamble. Copy-on-
+/// write prefix pages are charged once, so the shared workload's
+/// admitted concurrency should rise superlinearly with the shared
+/// fraction while the control stays pinned at the unshared bound —
+/// the paged-KV capacity claim, measured end to end through the
+/// engine's own admission path.
+fn shared_prefix_axis(smoke: bool) {
+    let pool_tokens = 256usize; // 16 pages of 16 tokens
+    let page_tokens = 16usize;
+    let suffix_len = 12usize;
+    let max_new = 8usize;
+    let n_requests = if smoke { 16usize } else { 24 };
+    let prefix_axis: &[usize] = if smoke { &[0, 96] } else { &[0, 16, 48, 96] };
+    println!(
+        "\n=== shared-prefix axis ({n_requests} sessions, {pool_tokens}-token pool, \
+         {suffix_len}-token suffixes, {max_new} new) ==="
+    );
+    println!(
+        "{:<12} {:>9} {:>12} {:>12} {:>10} {:>12} {:>13}",
+        "prefix len", "shared %", "peak shared", "peak unique", "hit rate", "reused tok",
+        "oversubscribe"
+    );
+    // peak concurrent sessions for one workload shape; `shared` picks
+    // one preamble for all sessions vs one preamble each
+    let mut run_axis = |prefix_len: usize, shared: bool| -> (usize, u64, u64) {
+        let qm = build(Box::new(QRazor::w4a4kv4(16)));
+        let vocab = qm.config.vocab as u64;
+        let mut engine = Engine::new(
+            qm,
+            ServeConfig {
+                max_batch: n_requests,
+                max_new_tokens: max_new,
+                kv_pool_tokens: pool_tokens,
+                kv_page_tokens: page_tokens,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(17);
+        let preamble: Vec<u32> = (0..prefix_len).map(|_| rng.below(vocab) as u32).collect();
+        for _ in 0..n_requests {
+            let mut prompt = if shared {
+                preamble.clone()
+            } else {
+                (0..prefix_len).map(|_| rng.below(vocab) as u32).collect()
+            };
+            prompt.extend((0..suffix_len).map(|_| rng.below(vocab) as u32));
+            engine.submit(prompt, max_new, Sampling::Greedy);
+        }
+        let mut peak = 0usize;
+        while !engine.is_idle() {
+            engine.step();
+            peak = peak.max(engine.pool_occupancy().live_sequences);
+        }
+        assert_eq!(engine.take_completed().len(), n_requests);
+        assert_eq!(engine.kv_bytes(), 0, "pool drained");
+        (peak, engine.metrics.prefix_hits, engine.metrics.reused_tokens)
+    };
+    let capacity_pages = pool_tokens / page_tokens;
+    let mut half_shared: Option<(usize, usize)> = None;
+    for &prefix_len in prefix_axis {
+        let (peak_shared, hits, reused) = run_axis(prefix_len, true);
+        let (peak_unique, _, _) = run_axis(prefix_len, false);
+        let need = prefix_len + suffix_len + max_new - 1;
+        let pages_per = need.div_ceil(page_tokens);
+        let shared_frac = prefix_len as f64 / need as f64;
+        // virtual pages the peak concurrent sessions would cost unshared,
+        // over the physical pool: >1 is capacity the prefix index created
+        let oversub = (peak_shared * pages_per) as f64 / capacity_pages as f64;
+        println!(
+            "{:<12} {:>8.0}% {:>12} {:>12} {:>10.2} {:>12} {:>12.2}x",
+            prefix_len,
+            100.0 * shared_frac,
+            peak_shared,
+            peak_unique,
+            hits as f64 / n_requests as f64,
+            reused,
+            oversub,
+        );
+        if shared_frac >= 0.5 && half_shared.is_none() {
+            half_shared = Some((peak_shared, peak_unique));
+            // every session after the first prefills through the index
+            assert_eq!(hits, n_requests as u64 - 1, "all but the cold session hit");
+            assert!(
+                oversub > 1.5,
+                "≥50% shared prefix must oversubscribe the pool, got {oversub:.2}x"
+            );
+        }
+    }
+    let (peak_shared, peak_unique) = half_shared.expect("axis covers a ≥50% shared point");
+    assert!(
+        peak_shared >= 2 * peak_unique,
+        "shared-prefix capacity must be superlinear vs the unshared control: \
+         {peak_shared} vs {peak_unique} concurrent sessions"
+    );
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    if std::env::args().any(|a| a == "--shared-prefix") {
+        // CI entry: just the paged-KV capacity axis
+        shared_prefix_axis(smoke);
+        println!("serve_throughput OK");
+        return;
+    }
     println!("\n=== serving throughput (nano model, 16 requests × 16 new tokens) ===");
     println!("{:<22} {:>8} {:>12} {:>14}", "config", "batch", "tok/s", "kv peak bytes");
     for batch in [1usize, 4, 8] {
@@ -359,5 +463,7 @@ fn main() {
     } else {
         assert!(t8 > t1 * 0.8, "batched throughput regressed: {t8} vs {t1}");
     }
+
+    shared_prefix_axis(smoke);
     println!("serve_throughput OK");
 }

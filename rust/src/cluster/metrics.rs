@@ -95,6 +95,23 @@ impl ClusterMetrics {
         self.shards.iter().map(|s| s.occupancy.bytes).sum()
     }
 
+    /// Pages resident across all shards (live sequences + prefix
+    /// snapshots, shared pages counted once per shard).
+    pub fn total_resident_pages(&self) -> usize {
+        self.shards.iter().map(|s| s.occupancy.resident_pages).sum()
+    }
+
+    /// Pages referenced by more than one holder across all shards —
+    /// the copy-on-write sharing the prefix index is buying.
+    pub fn total_shared_pages(&self) -> usize {
+        self.shards.iter().map(|s| s.occupancy.shared_pages).sum()
+    }
+
+    /// Prefix-snapshot pages evicted (LRU) across all shards so far.
+    pub fn total_evicted_pages(&self) -> usize {
+        self.shards.iter().map(|s| s.occupancy.evicted_pages).sum()
+    }
+
     /// Fill gap between the fullest and emptiest shard, in [0, 1].
     pub fn occupancy_skew(&self) -> f64 {
         let fills = self.shards.iter().map(|s| s.fill);
@@ -140,7 +157,7 @@ impl ClusterMetrics {
         for sh in &self.shards {
             s.push_str(&format!(
                 "shard {}: {}/{} done | {} generated | fill {:.2} | kv {} B (peak {} B) | \
-                 ttft p50 {:.1}ms | latency p50 {:.1}ms\n",
+                 pages {} ({} shared, {} evicted) | ttft p50 {:.1}ms | latency p50 {:.1}ms\n",
                 sh.index,
                 sh.requests_completed,
                 sh.requests_submitted,
@@ -148,6 +165,9 @@ impl ClusterMetrics {
                 sh.fill,
                 sh.occupancy.bytes,
                 sh.kv_bytes_peak,
+                sh.occupancy.resident_pages,
+                sh.occupancy.shared_pages,
+                sh.occupancy.evicted_pages,
                 sh.ttft_p50_ms,
                 sh.latency_p50_ms,
             ));
@@ -183,6 +203,9 @@ impl ClusterMetrics {
                     ("fill", Json::from(s.fill)),
                     ("kv_bytes", Json::from(s.occupancy.bytes)),
                     ("kv_bytes_peak", Json::from(s.kv_bytes_peak)),
+                    ("resident_pages", Json::from(s.occupancy.resident_pages)),
+                    ("shared_pages", Json::from(s.occupancy.shared_pages)),
+                    ("evicted_pages", Json::from(s.occupancy.evicted_pages)),
                 ])
             })
             .collect();
@@ -192,6 +215,9 @@ impl ClusterMetrics {
             ("total_generated", Json::from(self.total_generated() as usize)),
             ("aggregate_tokens_per_s", Json::from(self.aggregate_tokens_per_s())),
             ("occupancy_skew", Json::from(self.occupancy_skew())),
+            ("resident_pages", Json::from(self.total_resident_pages())),
+            ("shared_pages", Json::from(self.total_shared_pages())),
+            ("evicted_pages", Json::from(self.total_evicted_pages())),
         ])
     }
 }
@@ -246,6 +272,7 @@ mod tests {
         let s = m.render(0.25);
         assert!(s.contains("shard 0:"), "{s}");
         assert!(s.contains("shard 1:"), "{s}");
+        assert!(s.contains("pages 0 (0 shared, 0 evicted)"), "{s}");
         assert!(s.contains("cluster: 2 shards"), "{s}");
         assert!(s.contains("rebalance shard 0 -> 1"), "{s}");
         assert!(crate::util::json::Json::parse(&m.to_json().to_string()).is_ok());

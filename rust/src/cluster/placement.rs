@@ -21,7 +21,17 @@ pub enum PlacementPolicy {
     /// FNV-1a hash of the prompt tokens — identical prompts land on
     /// the same shard.
     HashAffinity,
+    /// FNV-1a hash of the first [`PREFIX_WINDOW`] prompt tokens —
+    /// requests sharing a prompt prefix (system/tool preambles) land
+    /// on the shard whose paged KV pool already holds those pages, so
+    /// the per-shard prefix index actually hits.
+    PrefixAffinity,
 }
+
+/// Prompt tokens hashed by [`PlacementPolicy::PrefixAffinity`]. Long
+/// enough to spread distinct preambles, short enough that a shared
+/// preamble longer than the window still routes together.
+pub const PREFIX_WINDOW: usize = 32;
 
 impl PlacementPolicy {
     /// Parse the CLI spelling; `None` for unknown names.
@@ -30,6 +40,7 @@ impl PlacementPolicy {
             "least-reserved" => Some(PlacementPolicy::LeastReserved),
             "round-robin" => Some(PlacementPolicy::RoundRobin),
             "hash" | "hash-affinity" => Some(PlacementPolicy::HashAffinity),
+            "prefix" | "prefix-affinity" => Some(PlacementPolicy::PrefixAffinity),
             _ => None,
         }
     }
@@ -75,6 +86,10 @@ impl Placement {
             }
             PlacementPolicy::HashAffinity => {
                 (fnv1a_tokens(&req.prompt) % loads.len() as u64) as usize
+            }
+            PlacementPolicy::PrefixAffinity => {
+                let w = req.prompt.len().min(PREFIX_WINDOW);
+                (fnv1a_tokens(&req.prompt[..w]) % loads.len() as u64) as usize
             }
         }
     }
@@ -137,11 +152,37 @@ mod tests {
     }
 
     #[test]
+    fn prefix_affinity_routes_shared_prefixes_together() {
+        let mut p = Placement::new(PlacementPolicy::PrefixAffinity);
+        let l = loads(&[0, 0, 0, 0]);
+        // same 32-token preamble, different suffixes → same shard
+        let preamble: Vec<u32> = (0..PREFIX_WINDOW as u32).collect();
+        let mut a = preamble.clone();
+        a.extend([100, 101]);
+        let mut b = preamble.clone();
+        b.extend([200, 201, 202]);
+        assert_eq!(
+            p.choose(&req(0, a), &l),
+            p.choose(&req(1, b), &l),
+            "shared preamble, same shard"
+        );
+        // prompts shorter than the window hash whole and still spread
+        let spread: std::collections::BTreeSet<usize> =
+            (0..64).map(|i| p.choose(&req(i, vec![i as u32, 7]), &l)).collect();
+        assert!(spread.len() > 1, "distinct prefixes must use more than one shard");
+    }
+
+    #[test]
     fn policy_parse_spellings() {
         assert_eq!(PlacementPolicy::parse("least-reserved"), Some(PlacementPolicy::LeastReserved));
         assert_eq!(PlacementPolicy::parse("round-robin"), Some(PlacementPolicy::RoundRobin));
         assert_eq!(PlacementPolicy::parse("hash"), Some(PlacementPolicy::HashAffinity));
         assert_eq!(PlacementPolicy::parse("hash-affinity"), Some(PlacementPolicy::HashAffinity));
+        assert_eq!(PlacementPolicy::parse("prefix"), Some(PlacementPolicy::PrefixAffinity));
+        assert_eq!(
+            PlacementPolicy::parse("prefix-affinity"),
+            Some(PlacementPolicy::PrefixAffinity)
+        );
         assert_eq!(PlacementPolicy::parse("bogus"), None);
     }
 }

@@ -88,6 +88,9 @@ struct ShardState {
     /// High-water mark of the occupancies this shard has published.
     kv_bytes_peak: usize,
     spec: SpecStats,
+    prefix_hits: u64,
+    reused_tokens: u64,
+    preemptions: u64,
     submitted: u64,
     completed: u64,
     generated_tokens: u64,
@@ -172,6 +175,9 @@ impl ClusterServer {
                     occupancy: PoolOccupancy::default(),
                     kv_bytes_peak: 0,
                     spec: SpecStats::default(),
+                    prefix_hits: 0,
+                    reused_tokens: 0,
+                    preemptions: 0,
                     submitted: 0,
                     completed: 0,
                     generated_tokens: 0,
@@ -204,6 +210,9 @@ impl ClusterServer {
                         s.shards[idx].kv_bytes_peak =
                             s.shards[idx].kv_bytes_peak.max(pulse.occupancy.bytes);
                         s.shards[idx].spec = pulse.spec;
+                        s.shards[idx].prefix_hits = pulse.prefix_hits;
+                        s.shards[idx].reused_tokens = pulse.reused_tokens;
+                        s.shards[idx].preemptions = pulse.preemptions;
                         // Accounting before forwarding: a client that
                         // just saw a Finished event reads live state
                         // that already excludes its request.
@@ -575,8 +584,15 @@ impl ServeApi for ClusterServer {
             st.occupancy.live_sequences += sh.occupancy.live_sequences;
             st.occupancy.bytes += sh.occupancy.bytes;
             st.occupancy.unpacked_bytes += sh.occupancy.unpacked_bytes;
+            st.occupancy.capacity_pages += sh.occupancy.capacity_pages;
+            st.occupancy.resident_pages += sh.occupancy.resident_pages;
+            st.occupancy.shared_pages += sh.occupancy.shared_pages;
+            st.occupancy.evicted_pages += sh.occupancy.evicted_pages;
             st.kv_bytes_peak += sh.kv_bytes_peak;
             st.spec.merge(&sh.spec);
+            st.prefix_hits += sh.prefix_hits;
+            st.reused_tokens += sh.reused_tokens;
+            st.preemptions += sh.preemptions;
         }
         st
     }

@@ -30,10 +30,17 @@ use crate::util::threadpool::with_thread_cap;
 /// What a shard publishes after every scheduling step (and for
 /// submit-time completions that never see a step).
 pub struct StepPulse {
-    /// Byte-exact verify-pool occupancy as of this step.
+    /// Byte-exact verify-pool occupancy as of this step (including
+    /// page residency and prefix-sharing counts).
     pub occupancy: PoolOccupancy,
     /// Cumulative speculative-decoding accounting.
     pub spec: SpecStats,
+    /// Cumulative prefix-index hits at admission.
+    pub prefix_hits: u64,
+    /// Cumulative prompt tokens served from the prefix index.
+    pub reused_tokens: u64,
+    /// Cumulative low-priority preemptions.
+    pub preemptions: u64,
     /// Token events emitted by this step, in order.
     pub events: Vec<TokenEvent>,
     /// Responses completed by this step.
@@ -82,6 +89,9 @@ impl ShardEngine {
                                 StepPulse {
                                     occupancy: StepLoop::occupancy(e),
                                     spec: e.metrics.spec,
+                                    prefix_hits: e.metrics.prefix_hits,
+                                    reused_tokens: e.metrics.reused_tokens,
+                                    preemptions: e.metrics.preemptions,
                                     events: e.take_events(),
                                     done,
                                 },

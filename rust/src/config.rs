@@ -147,6 +147,9 @@ pub struct ServeConfig {
     pub max_step_tokens: usize,
     /// KV pool capacity in tokens.
     pub kv_pool_tokens: usize,
+    /// Token rows per KV page — the admission/sharing quantum of the
+    /// paged pool. 1 reproduces token-exact reservation accounting.
+    pub kv_page_tokens: usize,
     /// SDR group size for the compressed KV pool (the fallback group
     /// for uniform scheme backends; razor-native policies carry their
     /// own per-layer KV groups).
@@ -176,6 +179,7 @@ impl Default for ServeConfig {
             max_new_tokens: 64,
             max_step_tokens: 512,
             kv_pool_tokens: 16_384,
+            kv_page_tokens: crate::model::kvcache::DEFAULT_PAGE_TOKENS,
             kv_group: 16,
             spec_k: 0,
             policy: "w4a4kv4:16".into(),
@@ -194,6 +198,7 @@ impl ServeConfig {
             ("max_new_tokens", Json::from(self.max_new_tokens)),
             ("max_step_tokens", Json::from(self.max_step_tokens)),
             ("kv_pool_tokens", Json::from(self.kv_pool_tokens)),
+            ("kv_page_tokens", Json::from(self.kv_page_tokens)),
             ("kv_group", Json::from(self.kv_group)),
             ("spec_k", Json::from(self.spec_k)),
             ("policy", Json::from(self.policy.clone())),
@@ -219,6 +224,7 @@ impl ServeConfig {
             max_new_tokens: get("max_new_tokens")?,
             max_step_tokens: get("max_step_tokens")?,
             kv_pool_tokens: get("kv_pool_tokens")?,
+            kv_page_tokens: get("kv_page_tokens")?,
             kv_group: get("kv_group")?,
             spec_k: get("spec_k")?,
             policy: get_str("policy")?,

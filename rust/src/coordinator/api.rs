@@ -61,6 +61,13 @@ pub struct ServeStats {
     pub events_dropped: u64,
     /// Speculative-decoding accounting (all-zero without a draft).
     pub spec: SpecStats,
+    /// Admissions served from the prefix index (paged-KV fork instead
+    /// of a cold prefill), summed across engines.
+    pub prefix_hits: u64,
+    /// Prompt tokens the prefix index saved from re-prefilling.
+    pub reused_tokens: u64,
+    /// Running sequences preempted for higher-priority queued work.
+    pub preemptions: u64,
 }
 
 impl ServeStats {

@@ -59,6 +59,14 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Peek the head of the line — after an [`Batcher::admit`] pass
+    /// this is the request that blocked on capacity (if any), so the
+    /// scheduler can decide whether preempting lower-priority running
+    /// work would unblock it.
+    pub fn peek_front(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
     /// Take every queued (not yet admitted) request, front first — the
     /// rebalance drain: a cluster router moves these to another
     /// shard's queue via its [`Batcher::push_front`].
@@ -102,14 +110,15 @@ impl Batcher {
     }
 
     /// Pick requests to admit this step. `active` is the current decode
-    /// batch size; `can_fit` checks KV-pool capacity for a request
-    /// needing `prompt + max_new` tokens. Admitted requests are removed
-    /// from the queue; the prefill token budget caps the total admitted
-    /// prompt length per step.
+    /// batch size; `can_fit` checks KV-pool capacity for the candidate
+    /// request (it sees the whole request, so it can discount pages a
+    /// shared prompt prefix already holds). Admitted requests are
+    /// removed from the queue; the prefill token budget caps the total
+    /// admitted prompt length per step.
     pub fn admit(
         &mut self,
         active: usize,
-        mut can_fit: impl FnMut(usize) -> bool,
+        mut can_fit: impl FnMut(&Request) -> bool,
     ) -> Vec<Request> {
         let mut admitted = Vec::new();
         let mut budget = self.max_step_tokens;
@@ -133,11 +142,10 @@ impl Batcher {
         // scan without starving: take from the front while budgets allow
         while slots > 0 {
             let Some(front) = self.queue.front() else { break };
-            let need = front.need_tokens();
             if front.prompt.len() > budget {
                 break; // out of prefill budget this step
             }
-            if !can_fit(need) {
+            if !can_fit(front) {
                 // KV backpressure: the front request waits for releases.
                 // Mark the rejection so it keeps its place at the head
                 // of the line on every later admit pass.
@@ -199,9 +207,9 @@ mod tests {
         b.push(req(0, 10, 5));
         b.push(req(1, 10, 5));
         let mut calls = 0;
-        let admitted = b.admit(0, |need| {
+        let admitted = b.admit(0, |r| {
             calls += 1;
-            assert_eq!(need, 15);
+            assert_eq!(r.need_tokens(), 15);
             calls == 1 // only the first fits
         });
         assert_eq!(admitted.len(), 1);
@@ -256,7 +264,7 @@ mod tests {
             if round == 5 {
                 pool_free = 100; // capacity opens up
             }
-            let admitted = b.admit(0, |need| need <= pool_free);
+            let admitted = b.admit(0, |r| r.need_tokens() <= pool_free);
             for r in &admitted {
                 pool_free -= r.need_tokens();
                 if r.id == RequestId(0) {

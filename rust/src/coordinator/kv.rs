@@ -1,11 +1,32 @@
-//! KV-cache pool with global capacity accounting and backpressure.
+//! Paged KV pool: page-granular admission, cross-request prefix reuse,
+//! and residency accounting derived from the pages themselves.
 //!
-//! Each active sequence owns a [`DecodeCache`] (SDR-compressed when the
-//! scheme quantizes KV). The pool enforces a *token* budget — the unit
-//! the scheduler reasons in — and reports exact byte usage, which is
-//! how the serving example demonstrates the paper's KV4 memory claim:
-//! at a fixed byte budget the 4.25-effective-bit pool admits ~7.5× the
-//! tokens of an FP32 pool (≈3.76× vs FP16).
+//! Each active sequence owns a [`DecodeCache`] whose SDR variant is a
+//! **page table** of refcounted fixed-size pages
+//! (`crate::model::kvcache`). The pool is the serving-side owner of
+//! that page space:
+//!
+//! - **Admission** reserves *pages*, not tokens: a sequence needing
+//!   `t` tokens reserves `ceil(t / page_tokens)` pages, minus any full
+//!   prefix pages it reuses from another request — which is what makes
+//!   admitted capacity superlinear under shared-prefix traffic.
+//! - **Prefix index**: a compressed radix trie keyed on prompt token
+//!   prefixes. After a request's prefill, the pool snapshots its cache
+//!   (cheap — page handles only). A later request forks the snapshot
+//!   with the longest shared prefix, truncates to the divergence point
+//!   (copy-on-write: the partial boundary page is copied, full pages
+//!   stay shared), and prefills only its suffix.
+//! - **Release** drops a sequence's page handles; pages shared with a
+//!   snapshot or another sequence live on until their last reference.
+//! - **Eviction**: when resident pages exceed capacity, the
+//!   least-recently-used prefix snapshots are evicted until the pool
+//!   fits (sequences are never evicted here — the scheduler preempts).
+//!
+//! All byte/page occupancy figures are **derived from the page tables**
+//! by deduplicating page identities across sequences and snapshots —
+//! there are no parallel counters to drift, so admission, rebalance,
+//! and the capacity claim (4.25 effective bits ⇒ ~3.76× FP16 tokens at
+//! equal bytes) always agree with actual residency.
 
 use std::collections::BTreeMap;
 
@@ -18,14 +39,24 @@ use crate::model::quantized::{DecodeCache, QuantModel};
 pub struct PoolOccupancy {
     /// Token capacity of this pool.
     pub capacity_tokens: usize,
-    /// Tokens reserved by live sequences (prompt + generation budget).
+    /// Tokens reserved by live sequences (page-granular: reserved
+    /// pages × page size).
     pub reserved_tokens: usize,
     /// Live sequences holding a cache.
     pub live_sequences: usize,
-    /// Exact bytes held by the packed caches right now.
+    /// Exact bytes resident right now (deduplicated across shared
+    /// pages; includes prefix snapshots).
     pub bytes: usize,
     /// Bytes an unpacked (byte-per-code) working copy would occupy.
     pub unpacked_bytes: usize,
+    /// Page capacity of this pool.
+    pub capacity_pages: usize,
+    /// Distinct pages resident (sequences ∪ prefix snapshots).
+    pub resident_pages: usize,
+    /// Resident pages referenced by more than one holder.
+    pub shared_pages: usize,
+    /// Cumulative pages freed by LRU prefix eviction.
+    pub evicted_pages: usize,
 }
 
 impl PoolOccupancy {
@@ -40,68 +71,446 @@ impl PoolOccupancy {
     }
 }
 
-/// Pool of per-sequence decode caches.
+/// One stored prefix snapshot: a forked cache covering exactly the
+/// trie path's tokens, plus its LRU clock.
+struct Snapshot {
+    cache: DecodeCache,
+    last_used: u64,
+}
+
+/// Compressed radix-trie node. `edge` is the token run from the
+/// parent; a node's full key is the concatenation of edges on its
+/// root path. At most one child starts with any given token.
+#[derive(Default)]
+struct TrieNode {
+    edge: Vec<u32>,
+    children: Vec<TrieNode>,
+    snap: Option<Snapshot>,
+}
+
+fn common_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl TrieNode {
+    fn insert(&mut self, key: &[u32], cache: DecodeCache, clock: u64) {
+        if key.is_empty() {
+            self.snap = Some(Snapshot { cache, last_used: clock });
+            return;
+        }
+        for child in self.children.iter_mut() {
+            if child.edge[0] == key[0] {
+                let c = common_len(&child.edge, key);
+                if c < child.edge.len() {
+                    // split: child becomes the upper half, its old
+                    // contents move into a new lower node
+                    let tail = child.edge.split_off(c);
+                    let lower = TrieNode {
+                        edge: tail,
+                        children: std::mem::take(&mut child.children),
+                        snap: child.snap.take(),
+                    };
+                    child.children.push(lower);
+                }
+                child.insert(&key[c..], cache, clock);
+                return;
+            }
+        }
+        self.children.push(TrieNode {
+            edge: key.to_vec(),
+            children: Vec::new(),
+            snap: Some(Snapshot { cache, last_used: clock }),
+        });
+    }
+
+    /// Longest-common-prefix lookup: returns the matched length and a
+    /// fork of a subtree snapshot truncated to it, bumping that
+    /// snapshot's LRU clock. Any subtree snapshot serves — its first
+    /// `matched` rows are bit-identical by construction of the trie.
+    fn lookup(&mut self, key: &[u32], depth: usize, clock: u64) -> Option<(usize, DecodeCache)> {
+        if !key.is_empty() {
+            for child in self.children.iter_mut() {
+                if child.edge[0] == key[0] {
+                    let c = common_len(&child.edge, key);
+                    if c == child.edge.len() {
+                        return child.lookup(&key[c..], depth + c, clock);
+                    }
+                    // match ends inside this child's edge
+                    return child.fork_at(depth + c, clock);
+                }
+            }
+        }
+        if depth == 0 {
+            return None;
+        }
+        if let Some(snap) = self.snap.as_mut() {
+            snap.last_used = clock;
+            return Some((depth, snap.cache.fork()));
+        }
+        self.fork_at(depth, clock)
+    }
+
+    /// The match length a [`TrieNode::lookup`] for `key` would return,
+    /// without forking a cache or touching LRU clocks. Mirrors
+    /// `lookup` exactly so admission estimates never overstate reuse.
+    fn probe(&self, key: &[u32], depth: usize) -> usize {
+        if !key.is_empty() {
+            for child in &self.children {
+                if child.edge[0] == key[0] {
+                    let c = common_len(&child.edge, key);
+                    if c == child.edge.len() {
+                        return child.probe(&key[c..], depth + c);
+                    }
+                    return if child.freshest_clock().is_some() { depth + c } else { 0 };
+                }
+            }
+        }
+        if depth > 0 && self.freshest_clock().is_some() {
+            depth
+        } else {
+            0
+        }
+    }
+
+    /// Fork the most recently used snapshot in this subtree, truncated
+    /// to `matched` tokens.
+    fn fork_at(&mut self, matched: usize, clock: u64) -> Option<(usize, DecodeCache)> {
+        let best = self.freshest_clock()?;
+        let snap = self.find_clock_mut(best)?;
+        snap.last_used = clock;
+        let mut fork = snap.cache.fork();
+        fork.truncate(matched);
+        Some((matched, fork))
+    }
+
+    fn freshest_clock(&self) -> Option<u64> {
+        let mut best = self.snap.as_ref().map(|s| s.last_used);
+        for child in &self.children {
+            best = match (best, child.freshest_clock()) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        best
+    }
+
+    fn oldest_clock(&self) -> Option<u64> {
+        let mut best = self.snap.as_ref().map(|s| s.last_used);
+        for child in &self.children {
+            best = match (best, child.oldest_clock()) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        best
+    }
+
+    fn find_clock_mut(&mut self, clock: u64) -> Option<&mut Snapshot> {
+        if self.snap.as_ref().is_some_and(|s| s.last_used == clock) {
+            return self.snap.as_mut();
+        }
+        self.children.iter_mut().find_map(|c| c.find_clock_mut(clock))
+    }
+
+    /// Remove the snapshot stamped `clock`. Returns true when found.
+    fn remove_clock(&mut self, clock: u64) -> bool {
+        if self.snap.as_ref().is_some_and(|s| s.last_used == clock) {
+            self.snap = None;
+            return true;
+        }
+        self.children.iter_mut().any(|c| c.remove_clock(clock))
+    }
+
+    /// Drop snapshot-free leaves and merge pass-through nodes so the
+    /// trie stays compressed after evictions.
+    fn prune(&mut self) {
+        for child in self.children.iter_mut() {
+            child.prune();
+        }
+        self.children.retain(|c| c.snap.is_some() || !c.children.is_empty());
+        for child in self.children.iter_mut() {
+            while child.snap.is_none() && child.children.len() == 1 {
+                let only = child.children.pop().unwrap();
+                child.edge.extend_from_slice(&only.edge);
+                child.children = only.children;
+                child.snap = only.snap;
+            }
+        }
+    }
+
+    fn for_each_snapshot(&self, f: &mut dyn FnMut(&DecodeCache)) {
+        if let Some(s) = &self.snap {
+            f(&s.cache);
+        }
+        for child in &self.children {
+            child.for_each_snapshot(f);
+        }
+    }
+
+    fn count_snapshots(&self) -> usize {
+        usize::from(self.snap.is_some())
+            + self.children.iter().map(|c| c.count_snapshots()).sum::<usize>()
+    }
+}
+
+/// Aggregate residency derived from the page tables themselves.
+#[derive(Default)]
+struct Residency {
+    pages: usize,
+    shared_pages: usize,
+    bytes: usize,
+    unpacked_bytes: usize,
+}
+
+/// Pool of per-sequence decode caches plus the shared prefix index.
 pub struct KvPool {
     /// Token capacity across all sequences.
     pub capacity_tokens: usize,
     /// SDR group size for compressed caches.
     pub kv_group: usize,
+    /// Token rows per page — the admission and sharing quantum.
+    pub page_tokens: usize,
     caches: BTreeMap<RequestId, DecodeCache>,
+    /// Pages reserved per live sequence.
     reserved: BTreeMap<RequestId, usize>,
+    prefix: TrieNode,
+    clock: u64,
+    evicted_pages: usize,
 }
 
 impl KvPool {
     pub fn new(capacity_tokens: usize, kv_group: usize) -> KvPool {
+        KvPool::new_paged(capacity_tokens, kv_group, crate::model::kvcache::DEFAULT_PAGE_TOKENS)
+    }
+
+    /// Pool with an explicit page size. `page_tokens = 1` reproduces
+    /// the old token-exact reservation arithmetic.
+    pub fn new_paged(capacity_tokens: usize, kv_group: usize, page_tokens: usize) -> KvPool {
+        assert!(page_tokens >= 1, "pages hold at least one token row");
         KvPool {
             capacity_tokens,
             kv_group,
+            page_tokens,
             caches: BTreeMap::new(),
             reserved: BTreeMap::new(),
+            prefix: TrieNode::default(),
+            clock: 0,
+            evicted_pages: 0,
         }
     }
 
-    /// Tokens reserved by all live sequences.
-    pub fn reserved_tokens(&self) -> usize {
+    /// Pages needed to hold `tokens` rows.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Page capacity of the pool.
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Pages reserved by all live sequences.
+    pub fn reserved_pages(&self) -> usize {
         self.reserved.values().sum()
     }
 
-    /// Can a sequence needing `tokens` total (prompt + max_new) fit?
-    pub fn can_admit(&self, tokens: usize) -> bool {
-        self.reserved_tokens() + tokens <= self.capacity_tokens
+    /// Tokens reserved by all live sequences (page-granular).
+    pub fn reserved_tokens(&self) -> usize {
+        self.reserved_pages() * self.page_tokens
     }
 
-    /// Reserve space and create the cache. Returns false (no-op) if the
-    /// reservation doesn't fit — the batcher's backpressure signal.
-    pub fn admit(&mut self, id: RequestId, tokens: usize, model: &QuantModel) -> bool {
-        if !self.can_admit(tokens) || self.caches.contains_key(&id) {
-            return false;
+    /// Can a sequence needing `tokens` total (prompt + max_new) fit,
+    /// assuming no prefix reuse? Conservative: an admission that also
+    /// reuses shared prefix pages needs no more than this.
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.reserved_pages() + self.pages_for(tokens) <= self.capacity_pages()
+    }
+
+    /// Longest prefix-index match for `prefix_key`, in tokens — the
+    /// reuse [`KvPool::admit_with_prefix`] would report right now.
+    /// Read-only: no fork, no LRU clock bump.
+    pub fn probe_reuse(&self, prefix_key: &[u32]) -> usize {
+        if prefix_key.is_empty() {
+            return 0;
         }
-        self.caches.insert(id, model.new_cache(self.kv_group));
-        self.reserved.insert(id, tokens);
-        true
+        self.prefix.probe(prefix_key, 0)
+    }
+
+    /// Pages a new session needing `tokens` would reserve given the
+    /// current prefix index. Never understates: between this estimate
+    /// and the admission it guards the index only gains entries, so
+    /// the actual reservation can only shrink.
+    pub fn needed_pages(&self, prefix_key: &[u32], tokens: usize) -> usize {
+        let shared_full = self.probe_reuse(prefix_key) / self.page_tokens;
+        self.pages_for(tokens).saturating_sub(shared_full)
+    }
+
+    /// [`KvPool::can_admit`] with the prefix-reuse discount applied —
+    /// the admission check matching what `admit_with_prefix` reserves.
+    pub fn can_admit_with_prefix(&self, prefix_key: &[u32], tokens: usize) -> bool {
+        self.reserved_pages() + self.needed_pages(prefix_key, tokens) <= self.capacity_pages()
+    }
+
+    /// Reserve pages and create a cold cache (no prefix reuse). Returns
+    /// false (no-op) if the reservation doesn't fit — the batcher's
+    /// backpressure signal.
+    pub fn admit(&mut self, id: RequestId, tokens: usize, model: &QuantModel) -> bool {
+        self.admit_with_prefix(id, &[], tokens, model).is_some()
+    }
+
+    /// Reserve pages and create the cache, reusing the longest stored
+    /// prefix of `prefix_key` (the tokens the scheduler will prefill).
+    /// On a hit the cache comes back already holding `reuse` rows —
+    /// full pages shared, the boundary page copied — and the sequence
+    /// reserves `pages_for(tokens) - reuse/page_tokens` pages: fully
+    /// shared prefix pages are never paid for twice. Returns the reused
+    /// token count, or `None` when the reservation doesn't fit (or the
+    /// id is already live).
+    pub fn admit_with_prefix(
+        &mut self,
+        id: RequestId,
+        prefix_key: &[u32],
+        tokens: usize,
+        model: &QuantModel,
+    ) -> Option<usize> {
+        if self.caches.contains_key(&id) {
+            return None;
+        }
+        self.clock += 1;
+        let hit = if prefix_key.is_empty() {
+            None
+        } else {
+            self.prefix.lookup(prefix_key, 0, self.clock)
+        };
+        let (reuse, cache) = match hit {
+            Some((reuse, cache)) => (reuse, cache),
+            None => (0, model.new_cache_paged(self.kv_group, self.page_tokens)),
+        };
+        let shared_full = reuse / self.page_tokens;
+        let need = self.pages_for(tokens).saturating_sub(shared_full);
+        if self.reserved_pages() + need > self.capacity_pages() {
+            return None;
+        }
+        self.caches.insert(id, cache);
+        self.reserved.insert(id, need);
+        Some(reuse)
+    }
+
+    /// Store a prefix snapshot of `cache` keyed by `prefix_key` (the
+    /// prefilled tokens) — page handles only. Unpaged (FP) caches are
+    /// not indexed: they cannot share storage, so a snapshot would
+    /// deep-copy the cache for no capacity win.
+    pub fn note_prefix(&mut self, prefix_key: &[u32], cache: &DecodeCache) {
+        if prefix_key.is_empty() || !cache.is_paged() {
+            return;
+        }
+        self.clock += 1;
+        self.prefix.insert(prefix_key, cache.fork(), self.clock);
+    }
+
+    /// Evict least-recently-used prefix snapshots until resident pages
+    /// fit the pool's page capacity, always retaining the most
+    /// recently used snapshot. The survivor matters: when live
+    /// sessions share a hot prefix, evicting its snapshot frees
+    /// nothing (the sessions still hold the pages) but would blind
+    /// every later admission to the reuse — so a residency overshoot
+    /// trims cold snapshots, never the hot one. Returns pages freed;
+    /// the cumulative count lands in the occupancy.
+    pub fn evict_to_capacity(&mut self) -> usize {
+        let mut freed = 0;
+        let cap = self.capacity_pages();
+        let mut resident = self.residency().pages;
+        while resident > cap && self.prefix.count_snapshots() > 1 {
+            let Some(oldest) = self.prefix.oldest_clock() else { break };
+            self.prefix.remove_clock(oldest);
+            self.prefix.prune();
+            let now = self.residency().pages;
+            freed += resident - now;
+            resident = now;
+        }
+        self.evicted_pages += freed;
+        freed
+    }
+
+    /// Stored prefix snapshots (test/introspection hook).
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.count_snapshots()
+    }
+
+    /// Drop every stored prefix snapshot (test/introspection hook).
+    pub fn clear_prefix_index(&mut self) {
+        let freed = self.residency().pages;
+        self.prefix = TrieNode::default();
+        self.evicted_pages += freed - self.residency().pages;
     }
 
     pub fn get_mut(&mut self, id: RequestId) -> Option<&mut DecodeCache> {
         self.caches.get_mut(&id)
     }
 
-    /// Release a finished sequence's cache.
+    /// Release a finished sequence's cache: its page handles drop, and
+    /// any page shared with a snapshot or another sequence lives on.
     pub fn release(&mut self, id: RequestId) {
         self.caches.remove(&id);
         self.reserved.remove(&id);
     }
 
-    /// Exact bytes held by all caches right now.
-    pub fn bytes(&self) -> usize {
-        self.caches.values().map(|c| c.bytes()).sum()
+    /// Deduplicated residency over every page handle the pool can see —
+    /// the **single source of truth** for bytes and page counts.
+    ///
+    /// `bytes`/`unpacked_bytes` cover pages referenced by at least one
+    /// *live sequence* (shared pages counted once), so a drained pool
+    /// reports zero bytes — the KV4 memory claim the benches measure.
+    /// `pages`/`shared_pages` cover the full resident set including
+    /// prefix snapshots — the figure capacity enforcement compares.
+    fn residency(&self) -> Residency {
+        // page id → (bytes, unpacked, session refs, total refs)
+        let mut pages: BTreeMap<usize, (usize, usize, usize, usize)> = BTreeMap::new();
+        let mut r = Residency::default();
+        {
+            let mut note = |cache: &DecodeCache, session: usize| {
+                if cache.is_paged() {
+                    for (id, bytes, unpacked) in cache.page_footprints() {
+                        let e = pages.entry(id).or_insert((bytes, unpacked, 0, 0));
+                        e.2 += session;
+                        e.3 += 1;
+                    }
+                } else if session > 0 {
+                    r.bytes += cache.bytes();
+                    r.unpacked_bytes += cache.unpacked_bytes();
+                }
+            };
+            for cache in self.caches.values() {
+                note(cache, 1);
+            }
+            self.prefix.for_each_snapshot(&mut |cache| note(cache, 0));
+        }
+        r.pages = pages.len();
+        for (bytes, unpacked, session_refs, total_refs) in pages.values() {
+            if *session_refs > 0 {
+                r.bytes += bytes;
+                r.unpacked_bytes += unpacked;
+            }
+            if *total_refs > 1 {
+                r.shared_pages += 1;
+            }
+        }
+        r
     }
 
-    /// Bytes an unpacked (byte-per-code) working copy of every live
-    /// cache would occupy — the operand traffic the staged attention
+    /// Exact bytes held by live sequences right now (shared pages
+    /// counted once; snapshot-only pages excluded — see
+    /// [`PoolOccupancy::resident_pages`] for those).
+    pub fn bytes(&self) -> usize {
+        self.residency().bytes
+    }
+
+    /// Bytes an unpacked (byte-per-code) working copy of the resident
+    /// set would occupy — the operand traffic the staged attention
     /// path implies. `bytes() / unpacked_bytes()` ≈ 0.5 for SDR pools
     /// (4.25 vs 8.5 effective bits), 1.0 for FP pools.
     pub fn unpacked_bytes(&self) -> usize {
-        self.caches.values().map(|c| c.unpacked_bytes()).sum()
+        self.residency().unpacked_bytes
     }
 
     /// Number of live sequences.
@@ -109,15 +518,21 @@ impl KvPool {
         self.caches.len()
     }
 
-    /// Byte-exact occupancy snapshot (tokens, sequences, packed and
-    /// unpacked-equivalent bytes) — what a cluster shard reports.
+    /// Byte-exact occupancy snapshot (pages, sequences, packed and
+    /// unpacked-equivalent bytes) — what a cluster shard reports. Every
+    /// figure derives from the page tables at call time.
     pub fn occupancy(&self) -> PoolOccupancy {
+        let r = self.residency();
         PoolOccupancy {
             capacity_tokens: self.capacity_tokens,
             reserved_tokens: self.reserved_tokens(),
             live_sequences: self.live(),
-            bytes: self.bytes(),
-            unpacked_bytes: self.unpacked_bytes(),
+            bytes: r.bytes,
+            unpacked_bytes: r.unpacked_bytes,
+            capacity_pages: self.capacity_pages(),
+            resident_pages: r.pages,
+            shared_pages: r.shared_pages,
+            evicted_pages: self.evicted_pages,
         }
     }
 
@@ -154,8 +569,9 @@ mod tests {
 
     #[test]
     fn admit_reserve_release_cycle() {
+        // page_tokens = 1 reproduces token-exact reservations
         let m = model();
-        let mut pool = KvPool::new(100, 16);
+        let mut pool = KvPool::new_paged(100, 16, 1);
         assert!(pool.admit(RequestId(1), 60, &m));
         assert!(!pool.can_admit(60), "would exceed capacity");
         assert!(!pool.admit(RequestId(2), 60, &m));
@@ -168,9 +584,24 @@ mod tests {
     }
 
     #[test]
+    fn admission_is_page_granular() {
+        let m = model();
+        let mut pool = KvPool::new_paged(64, 16, 16); // 4 pages
+        assert_eq!(pool.capacity_pages(), 4);
+        // 20 tokens spans 2 pages — two such sequences fill the pool
+        assert!(pool.admit(RequestId(1), 20, &m));
+        assert!(pool.admit(RequestId(2), 20, &m));
+        assert_eq!(pool.reserved_pages(), 4);
+        assert!(!pool.admit(RequestId(3), 1, &m), "no page left");
+        pool.release(RequestId(1));
+        assert!(pool.admit(RequestId(3), 16, &m), "exactly one page");
+        assert_eq!(pool.occupancy().capacity_pages, 4);
+    }
+
+    #[test]
     fn double_admit_rejected() {
         let m = model();
-        let mut pool = KvPool::new(100, 16);
+        let mut pool = KvPool::new_paged(100, 16, 1);
         assert!(pool.admit(RequestId(1), 10, &m));
         assert!(!pool.admit(RequestId(1), 10, &m));
         assert_eq!(pool.reserved_tokens(), 10);
@@ -208,7 +639,7 @@ mod tests {
         // appended for rejected lookahead tokens release their packed
         // bytes exactly, cycle after cycle.
         let m = model();
-        let mut pool = KvPool::new(100, 16);
+        let mut pool = KvPool::new_paged(100, 16, 1);
         assert!(pool.admit(RequestId(1), 30, &m));
         let mut cache = pool.take(RequestId(1));
         for pos in 0..4 {
@@ -244,7 +675,7 @@ mod tests {
     #[test]
     fn occupancy_invariants_across_admit_grow_release_cycles() {
         let m = model();
-        let mut pool = KvPool::new(200, 16);
+        let mut pool = KvPool::new_paged(200, 16, 1);
         let mut expected_reserved = 0usize;
         for cycle in 0..3u64 {
             let a = RequestId(cycle * 2);
@@ -273,6 +704,10 @@ mod tests {
             assert!((0.45..=0.55).contains(&ratio), "cycle {cycle}: packed ratio {ratio}");
             // growth must not change token reservations
             assert_eq!(after.reserved_tokens, before.reserved_tokens);
+            // residency-derived page count matches the cache's table
+            let table_pages: usize =
+                pool.caches.values().map(|c| c.page_footprints().len()).sum();
+            assert_eq!(after.resident_pages, table_pages);
 
             // release one; its bytes and reservation leave the pool
             pool.release(a);
@@ -289,6 +724,8 @@ mod tests {
         assert_eq!(empty.reserved_tokens, 0);
         assert_eq!(empty.bytes, 0);
         assert_eq!(empty.unpacked_bytes, 0);
+        assert_eq!(empty.resident_pages, 0);
+        assert_eq!(empty.shared_pages, 0);
         assert_eq!(empty.fill(), 0.0);
     }
 
@@ -318,5 +755,206 @@ mod tests {
         );
         // and the exact effective-bits arithmetic: 16 / 4.25
         assert!((ratio - 16.0 / 4.25).abs() < 0.05, "ratio {ratio} vs 16/4.25");
+    }
+
+    fn prefill(m: &QuantModel, cache: &mut DecodeCache, tokens: &[u32], start: usize) {
+        for (i, &t) in tokens.iter().enumerate() {
+            m.forward_token(t, start + i, cache);
+        }
+    }
+
+    #[test]
+    fn prefix_hit_forks_shared_pages_and_discounts_reservation() {
+        let m = model();
+        let mut pool = KvPool::new_paged(64, 16, 4); // 16 pages of 4
+        let prompt: Vec<u32> = (0..12).map(|i| (i % 7) as u32 + 1).collect();
+        assert_eq!(pool.admit_with_prefix(RequestId(1), &prompt, 16, &m), Some(0));
+        assert_eq!(pool.reserved_pages(), 4);
+        let mut cache = pool.take(RequestId(1));
+        prefill(&m, &mut cache, &prompt, 0);
+        pool.note_prefix(&prompt, &cache);
+        pool.put_back(RequestId(1), cache);
+        // identical prompt: full reuse of 12 rows = 3 full pages shared
+        let r = pool.admit_with_prefix(RequestId(2), &prompt, 16, &m).unwrap();
+        assert_eq!(r, 12);
+        assert_eq!(pool.reserved.get(&RequestId(2)), Some(&1), "only the tail page reserved");
+        // the forked cache really holds the rows, bit-exact
+        let forked = pool.caches.get(&RequestId(2)).unwrap();
+        assert_eq!(forked.tokens(), 12);
+        let occ = pool.occupancy();
+        assert!(occ.shared_pages >= 3, "full prefix pages shared: {}", occ.shared_pages);
+        // shared pages are counted once: two 12-row caches, one set of
+        // page bytes (modulo the copied boundary page)
+        let solo = pool.caches.get(&RequestId(1)).unwrap().bytes();
+        assert!(occ.bytes < 2 * solo, "dedup: {} vs 2×{solo}", occ.bytes);
+        // diverging prompt: reuse stops at the divergence point
+        let mut other = prompt.clone();
+        other[8] = 99;
+        other.push(3);
+        let r = pool.admit_with_prefix(RequestId(3), &other, 16, &m).unwrap();
+        assert_eq!(r, 8);
+        assert_eq!(pool.caches.get(&RequestId(3)).unwrap().tokens(), 8);
+    }
+
+    #[test]
+    fn probe_predicts_the_admission_discount_exactly() {
+        let m = model();
+        let mut pool = KvPool::new_paged(64, 16, 4); // 16 pages of 4
+        let prompt: Vec<u32> = (0..12).map(|i| (i % 7) as u32 + 1).collect();
+        // empty index: probe is zero and needed_pages is conservative
+        assert_eq!(pool.probe_reuse(&prompt), 0);
+        assert_eq!(pool.needed_pages(&prompt, 16), 4);
+        assert!(pool.admit(RequestId(1), 16, &m));
+        let mut cache = pool.take(RequestId(1));
+        prefill(&m, &mut cache, &prompt, 0);
+        pool.note_prefix(&prompt, &cache);
+        pool.put_back(RequestId(1), cache);
+        // the read-only probe matches what admission will report, for a
+        // full hit, a mid-edge divergence, and a miss
+        let mut diverged = prompt[..6].to_vec();
+        diverged.extend([90, 91]);
+        for key in [prompt.clone(), diverged, vec![77, 78]] {
+            let probed = pool.probe_reuse(&key);
+            let est = pool.needed_pages(&key, 16);
+            let clock_before = pool.clock;
+            let id = RequestId(100 + key[0] as u64);
+            let reuse = pool.admit_with_prefix(id, &key, 16, &m).unwrap();
+            assert_eq!(probed, reuse, "probe ≡ admission reuse for {key:?}");
+            assert_eq!(pool.reserved.get(&id), Some(&est), "estimate ≡ reservation");
+            assert!(clock_before < pool.clock, "admission bumps the clock, probing not");
+            pool.release(id);
+        }
+        // the discounted check admits what the conservative one rejects
+        assert!(pool.admit(RequestId(2), 44, &m), "11 of 16 pages");
+        assert!(!pool.can_admit(16), "conservative check: 4 more pages do not fit");
+        assert!(pool.can_admit_with_prefix(&prompt, 16), "3 shared pages discounted");
+    }
+
+    #[test]
+    fn forked_cache_matches_cold_cache_bit_exactly() {
+        let m = model();
+        let mut pool = KvPool::new_paged(256, 16, 4);
+        let prompt: Vec<u32> = (0..10).map(|i| (i % 5) as u32 + 2).collect();
+        assert!(pool.admit(RequestId(1), 20, &m));
+        let mut cache = pool.take(RequestId(1));
+        prefill(&m, &mut cache, &prompt, 0);
+        pool.note_prefix(&prompt, &cache);
+        pool.put_back(RequestId(1), cache);
+        // new request shares 6 tokens then diverges
+        let mut other = prompt[..6].to_vec();
+        other.extend([41, 42, 43]);
+        let reuse = pool.admit_with_prefix(RequestId(2), &other, 20, &m).unwrap();
+        assert_eq!(reuse, 6);
+        let mut warm = pool.take(RequestId(2));
+        prefill(&m, &mut warm, &other[6..], 6);
+        // cold reference: same tokens from scratch
+        let mut cold = m.new_cache_paged(16, 4);
+        prefill(&m, &mut cold, &other, 0);
+        assert_eq!(warm.bytes(), cold.bytes());
+        assert_eq!(warm.tokens(), cold.tokens());
+        if let (DecodeCache::Sdr(w), DecodeCache::Sdr(c)) = (&warm, &cold) {
+            for l in 0..m.config.layers {
+                assert_eq!(w.k_matrix(l).data(), c.k_matrix(l).data(), "layer {l} K");
+                assert_eq!(w.v_matrix(l).data(), c.v_matrix(l).data(), "layer {l} V");
+            }
+        } else {
+            panic!("expected SDR caches");
+        }
+        pool.put_back(RequestId(2), warm);
+    }
+
+    #[test]
+    fn lru_eviction_frees_only_unreferenced_prefix_pages() {
+        let m = model();
+        let mut pool = KvPool::new_paged(16, 16, 2); // 8 pages of 2
+        // live session pinning 4 pages
+        let live: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7];
+        assert!(pool.admit(RequestId(1), 8, &m));
+        let mut cache = pool.take(RequestId(1));
+        prefill(&m, &mut cache, &live, 0);
+        pool.note_prefix(&live, &cache);
+        pool.put_back(RequestId(1), cache);
+        // snapshot fully shared with the live session: eviction frees 0
+        assert_eq!(pool.evict_to_capacity(), 0);
+        // finished session → snapshot-only pages; stuff more snapshots
+        // in than the pool can hold
+        for (i, tweak) in [11u32, 12, 13].iter().enumerate() {
+            let id = RequestId(10 + i as u64);
+            let mut p = live.clone();
+            p[0] = *tweak;
+            assert!(pool.admit_with_prefix(id, &p, 8, &m).is_some());
+            let mut c = pool.take(id);
+            prefill(&m, &mut c, &p, 0);
+            pool.note_prefix(&p, &c);
+            pool.put_back(id, c);
+            pool.release(id);
+        }
+        let over = pool.occupancy();
+        assert!(over.resident_pages > pool.capacity_pages(), "{over:?}");
+        assert!(pool.prefix_entries() >= 4);
+        let freed = pool.evict_to_capacity();
+        assert!(freed > 0);
+        let after = pool.occupancy();
+        assert!(after.resident_pages <= pool.capacity_pages());
+        assert_eq!(after.evicted_pages, freed);
+        // the live session's cache is untouched by eviction
+        assert_eq!(pool.caches.get(&RequestId(1)).unwrap().tokens(), 7);
+    }
+
+    #[test]
+    fn snapshot_survives_session_release_and_rollback() {
+        // speculative reject/truncate on a fork never frees a shared
+        // page: the snapshot (and a second fork) still read the rows
+        let m = model();
+        let mut pool = KvPool::new_paged(256, 16, 4);
+        let prompt: Vec<u32> = (0..9).map(|i| i as u32 + 1).collect();
+        assert!(pool.admit(RequestId(1), 20, &m));
+        let mut cache = pool.take(RequestId(1));
+        prefill(&m, &mut cache, &prompt, 0);
+        pool.note_prefix(&prompt, &cache);
+        pool.put_back(RequestId(1), cache);
+        // fork a second session, then roll it back hard
+        let reuse = pool.admit_with_prefix(RequestId(2), &prompt, 20, &m).unwrap();
+        assert_eq!(reuse, 9);
+        pool.get_mut(RequestId(2)).unwrap().truncate(2);
+        // donor session + snapshot still intact
+        assert_eq!(pool.caches.get(&RequestId(1)).unwrap().tokens(), 9);
+        pool.release(RequestId(1));
+        // snapshot alone keeps the prefix pages resident
+        let r = pool.admit_with_prefix(RequestId(3), &prompt, 20, &m).unwrap();
+        assert_eq!(r, 9, "prefix survives the donor's release");
+        pool.release(RequestId(2));
+        pool.release(RequestId(3));
+        // live-session bytes drain to zero; the snapshot alone keeps
+        // its pages resident until the index lets go of them
+        assert_eq!(pool.bytes(), 0);
+        assert!(pool.occupancy().resident_pages > 0);
+        // refcounts drain to zero once the index is cleared
+        pool.clear_prefix_index();
+        let empty = pool.occupancy();
+        assert_eq!(empty.resident_pages, 0);
+        assert_eq!(empty.bytes, 0);
+        assert!(empty.evicted_pages > 0);
+    }
+
+    #[test]
+    fn unshared_pool_bytes_match_contiguous_baseline() {
+        // satellite: derived accounting equals the sum of per-cache
+        // bytes when nothing is shared — i.e. exactly the old
+        // parallel-counter value, with no drift possible
+        let m = model();
+        let mut pool = KvPool::new_paged(256, 16, 4);
+        let mut expect = 0usize;
+        for id in 0..3u64 {
+            let prompt: Vec<u32> =
+                (0..5 + id as usize).map(|i| (id as u32 + 1) * 50 + i as u32).collect();
+            assert!(pool.admit(RequestId(id), 16, &m));
+            let mut c = pool.take(RequestId(id));
+            prefill(&m, &mut c, &prompt, 0);
+            expect += c.bytes();
+            pool.put_back(RequestId(id), c);
+        }
+        assert_eq!(pool.bytes(), expect);
+        assert_eq!(pool.occupancy().shared_pages, 0);
     }
 }

@@ -27,6 +27,15 @@ pub struct Metrics {
     /// rollbacks) merged over every request; all-zero when the engine
     /// runs without a draft model.
     pub spec: SpecStats,
+    /// Admissions that reused a stored prompt prefix (paged KV
+    /// copy-on-write fork instead of a cold prefill).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from the prefix index instead of being
+    /// prefilled — the work the radix cache saved.
+    pub reused_tokens: u64,
+    /// Running sequences preempted to make room for strictly
+    /// higher-priority queued work.
+    pub preemptions: u64,
 }
 
 impl Default for Metrics {
@@ -43,6 +52,9 @@ impl Default for Metrics {
             kv_bytes_peak: 0,
             kv_bytes_unpacked_peak: 0,
             spec: SpecStats::default(),
+            prefix_hits: 0,
+            reused_tokens: 0,
+            preemptions: 0,
         }
     }
 }
@@ -106,6 +118,15 @@ impl Metrics {
                 self.spec.rejected,
             ));
         }
+        if self.prefix_hits > 0 {
+            s.push_str(&format!(
+                " | prefix: {} hits, {} tokens reused",
+                self.prefix_hits, self.reused_tokens,
+            ));
+        }
+        if self.preemptions > 0 {
+            s.push_str(&format!(" | preemptions: {}", self.preemptions));
+        }
         s
     }
 
@@ -126,6 +147,9 @@ impl Metrics {
             ("spec_accepted", Json::from(self.spec.accepted as usize)),
             ("spec_rejected", Json::from(self.spec.rejected as usize)),
             ("spec_acceptance", Json::from(self.spec.acceptance())),
+            ("prefix_hits", Json::from(self.prefix_hits as usize)),
+            ("reused_tokens", Json::from(self.reused_tokens as usize)),
+            ("preemptions", Json::from(self.preemptions as usize)),
         ])
     }
 }
@@ -156,6 +180,13 @@ mod tests {
         m.observe_spec(&SpecStats { steps: 2, drafted: 8, accepted: 6, rejected: 2 });
         let s = m.render();
         assert!(s.contains("spec: 2 rounds, 75% accepted, 2 rolled back"), "{s}");
+        assert!(!s.contains("prefix:"), "no prefix line without hits: {s}");
+        m.prefix_hits = 4;
+        m.reused_tokens = 120;
+        m.preemptions = 1;
+        let s = m.render();
+        assert!(s.contains("prefix: 4 hits, 120 tokens reused"), "{s}");
+        assert!(s.contains("preemptions: 1"), "{s}");
     }
 
     #[test]

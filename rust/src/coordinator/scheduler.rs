@@ -33,6 +33,17 @@ use crate::tensor::argmax;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
 
+/// Stream state a preempted sequence leaves behind: the tokens it
+/// already emitted (they were streamed; they must not be re-emitted or
+/// lost), its original prompt length, and its first-token timestamp.
+/// Merged back into the final response when the recomputed
+/// continuation retires, cancels, or expires.
+struct PreemptState {
+    prompt_len: usize,
+    tokens: Vec<u32>,
+    first_token_at: Option<Instant>,
+}
+
 /// A sequence mid-generation.
 struct Active {
     req: Request,
@@ -66,6 +77,10 @@ pub struct Engine {
     batcher: Batcher,
     pool: KvPool,
     active: BTreeMap<RequestId, Active>,
+    /// Streamed-token carry-over for sequences preempted mid-flight
+    /// (see [`PreemptState`]); keyed by request id until the
+    /// continuation finally completes.
+    preempted: BTreeMap<RequestId, PreemptState>,
     next_id: u64,
     done: Vec<Response>,
     /// Token events emitted since the last [`Engine::take_events`]
@@ -91,10 +106,15 @@ impl Engine {
         let model = model.into();
         Engine {
             batcher: Batcher::new(Policy::Fcfs, config.max_batch, config.max_step_tokens),
-            pool: KvPool::new(config.kv_pool_tokens, config.kv_group),
-            draft_pool: KvPool::new(config.kv_pool_tokens, config.kv_group),
+            pool: KvPool::new_paged(config.kv_pool_tokens, config.kv_group, config.kv_page_tokens),
+            draft_pool: KvPool::new_paged(
+                config.kv_pool_tokens,
+                config.kv_group,
+                config.kv_page_tokens,
+            ),
             draft,
             active: BTreeMap::new(),
+            preempted: BTreeMap::new(),
             next_id: 0,
             done: Vec::new(),
             events: Vec::new(),
@@ -151,12 +171,18 @@ impl Engine {
     /// event, no pool state to release, no latency sample.
     fn complete_unstarted(&mut self, req: Request, finish: FinishReason) {
         self.metrics.requests_completed += 1;
+        // A preempted continuation that dies in the queue still owes
+        // the caller the tokens its first life streamed.
+        let (prompt_len, tokens, first) = match self.preempted.remove(&req.id) {
+            Some(s) => (s.prompt_len, s.tokens, s.first_token_at),
+            None => (req.prompt.len(), Vec::new(), None),
+        };
         let resp = Response {
             id: req.id,
-            prompt_len: req.prompt.len(),
-            tokens: Vec::new(),
+            prompt_len,
+            tokens,
             finish,
-            ttft_s: 0.0,
+            ttft_s: first.map(|t| (t - req.arrived).as_secs_f64()).unwrap_or(0.0),
             total_s: req.arrived.elapsed().as_secs_f64(),
         };
         self.events.push(TokenEvent::Finished { id: req.id, response: resp.clone() });
@@ -179,11 +205,16 @@ impl Engine {
         self.pool.release(id);
         self.draft_pool.release(id); // no-op without a draft cache
         self.metrics.requests_completed += 1;
-        let ttft = a.first_token_at.map(|t| (t - a.req.arrived).as_secs_f64()).unwrap_or(0.0);
+        let (prompt_len, mut tokens, first) = match self.preempted.remove(&id) {
+            Some(s) => (s.prompt_len, s.tokens, s.first_token_at.or(a.first_token_at)),
+            None => (a.req.prompt.len(), Vec::new(), a.first_token_at),
+        };
+        tokens.extend_from_slice(&a.generated);
+        let ttft = first.map(|t| (t - a.req.arrived).as_secs_f64()).unwrap_or(0.0);
         let resp = Response {
             id,
-            prompt_len: a.req.prompt.len(),
-            tokens: a.generated,
+            prompt_len,
+            tokens,
             finish: FinishReason::Cancelled,
             ttft_s: ttft,
             total_s: a.req.arrived.elapsed().as_secs_f64(),
@@ -224,12 +255,19 @@ impl Engine {
         let admitted = {
             let active = self.active.len();
             // tentative accounting: the pool only reserves after the
-            // batcher decides, so accumulate would-be reservations here
-            let mut tentative = pool.reserved_tokens();
-            let capacity = pool.capacity_tokens;
-            self.batcher.admit(active, |need| {
-                if tentative + need <= capacity {
-                    tentative += need;
+            // batcher decides, so accumulate would-be page reservations
+            // here. The estimate applies the prefix-index discount the
+            // real admission will get — pages a shared prompt prefix
+            // already holds are not charged — and never understates:
+            // between this check and the admission the index only
+            // gains entries, so the real reservation can only shrink.
+            let mut tentative = pool.reserved_pages();
+            let capacity = pool.capacity_pages();
+            self.batcher.admit(active, |r| {
+                let prefill = r.prompt.len().saturating_sub(1);
+                let pages = pool.needed_pages(&r.prompt[..prefill], r.need_tokens());
+                if tentative + pages <= capacity {
+                    tentative += pages;
                     true
                 } else {
                     false
@@ -237,39 +275,64 @@ impl Engine {
             })
         };
         for req in admitted {
-            let ok = pool.admit(req.id, req.need_tokens(), model);
-            debug_assert!(ok, "batcher admitted beyond pool capacity");
-            let mut cache = pool.take(req.id);
-            // prefill: one packed chunk over all prompt tokens except
-            // the last (which becomes the first decode input) — the
-            // multi-query attention path, bit-identical to the old
-            // token loop.
             let prompt = &req.prompt;
             assert!(!prompt.is_empty(), "empty prompt");
-            if prompt.len() > 1 {
-                model.forward_chunk(&prompt[..prompt.len() - 1], 0, &mut cache);
+            let prefill_len = prompt.len() - 1;
+            // page-granular admission with prefix reuse: the cache
+            // comes back already holding the longest indexed prefix of
+            // the prompt (full pages shared copy-on-write), and fully
+            // shared pages are not reserved again.
+            let reuse = pool
+                .admit_with_prefix(req.id, &prompt[..prefill_len], req.need_tokens(), model)
+                .expect("batcher admitted beyond pool capacity");
+            if reuse > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.reused_tokens += reuse as u64;
             }
+            let mut cache = pool.take(req.id);
+            // prefill: one packed chunk over the not-yet-cached prompt
+            // tokens except the last (which becomes the first decode
+            // input) — the multi-query attention path, bit-identical
+            // to the old token loop and to a cold full prefill.
+            if prefill_len > reuse {
+                model.forward_chunk(&prompt[reuse..prefill_len], reuse, &mut cache);
+            }
+            pool.note_prefix(&prompt[..prefill_len], &cache);
             pool.put_back(req.id, cache);
             // speculative requests also prefill a draft cache, admitted
-            // in lockstep with the verify reservation
+            // in lockstep with the verify reservation (its prefix index
+            // is separate: draft pages hold draft-basis rows)
             if spec_on && matches!(req.sampling, Sampling::Greedy) {
                 let dm = self.draft.as_ref().unwrap();
-                let dok = self.draft_pool.admit(req.id, req.need_tokens(), dm);
-                debug_assert!(dok, "draft pool diverged from verify pool");
+                let dreuse = self
+                    .draft_pool
+                    .admit_with_prefix(req.id, &prompt[..prefill_len], req.need_tokens(), dm)
+                    .expect("draft pool diverged from verify pool");
                 let mut dcache = self.draft_pool.take(req.id);
-                if prompt.len() > 1 {
-                    dm.forward_chunk(&prompt[..prompt.len() - 1], 0, &mut dcache);
+                if prefill_len > dreuse {
+                    dm.forward_chunk(&prompt[dreuse..prefill_len], dreuse, &mut dcache);
                 }
+                self.draft_pool.note_prefix(&prompt[..prefill_len], &dcache);
                 self.draft_pool.put_back(req.id, dcache);
             }
             let next_token = *prompt.last().unwrap();
             let pos = prompt.len() - 1;
-            self.events.push(TokenEvent::Started { id: req.id, at: Instant::now() });
+            // a preempted continuation already announced itself in its
+            // first life; re-admission is invisible to the stream
+            if !self.preempted.contains_key(&req.id) {
+                self.events.push(TokenEvent::Started { id: req.id, at: Instant::now() });
+            }
             self.active.insert(
                 req.id,
                 Active { next_token, pos, generated: Vec::new(), first_token_at: None, req },
             );
         }
+
+        // 1b. low-priority preemption: when the pool is too full for
+        // the request now at the head of the queue, evict the
+        // lowest-priority running sequence (strictly below the waiting
+        // request's class) and requeue its continuation.
+        self.maybe_preempt();
 
         // 2. decode: one quantum per active sequence, in parallel — a
         // single token, or a speculative draft→verify→accept round
@@ -415,10 +478,14 @@ impl Engine {
             self.pool.release(id);
             self.draft_pool.release(id); // no-op without a draft cache
             let now = Instant::now();
-            let ttft = a
-                .first_token_at
-                .map(|t| (t - a.req.arrived).as_secs_f64())
-                .unwrap_or(0.0);
+            // merge the pre-preemption stream (if any) back in: the
+            // response is exactly what an uninterrupted run would emit
+            let (prompt_len, mut tokens, first) = match self.preempted.remove(&id) {
+                Some(s) => (s.prompt_len, s.tokens, s.first_token_at.or(a.first_token_at)),
+                None => (a.req.prompt.len(), Vec::new(), a.first_token_at),
+            };
+            tokens.extend_from_slice(&a.generated);
+            let ttft = first.map(|t| (t - a.req.arrived).as_secs_f64()).unwrap_or(0.0);
             let finish = if a.req.stop_token.is_some_and(|s| a.generated.last() == Some(&s)) {
                 FinishReason::StopToken
             } else {
@@ -431,8 +498,8 @@ impl Engine {
                 .push((now - a.req.arrived).as_secs_f64());
             let resp = Response {
                 id,
-                prompt_len: a.req.prompt.len(),
-                tokens: a.generated,
+                prompt_len,
+                tokens,
                 finish,
                 ttft_s: ttft,
                 total_s: (now - a.req.arrived).as_secs_f64(),
@@ -440,7 +507,72 @@ impl Engine {
             self.events.push(TokenEvent::Finished { id, response: resp.clone() });
             self.done.push(resp);
         }
+
+        // 4. bound residency: finished sequences may leave the prefix
+        // index holding more pages than the pool's capacity; drop the
+        // least-recently-used snapshots until it fits again.
+        self.pool.evict_to_capacity();
+        self.draft_pool.evict_to_capacity();
         generated
+    }
+
+    /// When the head of the admission queue cannot fit, preempt the
+    /// lowest-priority active sequence of a *strictly lower* class:
+    /// release its pages (freeing room for the waiting request on the
+    /// next admit pass) and requeue a continuation — prompt plus the
+    /// tokens already generated — at the front of the queue. The
+    /// continuation re-prefills through the prefix index, so the
+    /// recompute is cheap, and [`PreemptState`] merges the streams so
+    /// the final response is exactly the uninterrupted one. At most one
+    /// victim per step; same-class work is never preempted, so
+    /// single-priority workloads keep today's semantics bit for bit.
+    fn maybe_preempt(&mut self) {
+        let (rank, fits) = {
+            let Some(front) = self.batcher.peek_front() else { return };
+            let prefill = front.prompt.len().saturating_sub(1);
+            (
+                front.priority.rank(),
+                self.pool
+                    .can_admit_with_prefix(&front.prompt[..prefill], front.need_tokens()),
+            )
+        };
+        if fits {
+            return; // it gets in on the next admit pass
+        }
+        let max_prompt = self.config.max_step_tokens;
+        let victim = self
+            .active
+            .iter()
+            // the continuation must stay servable: its grown prompt
+            // still has to fit the per-step prefill budget
+            .filter(|(_, a)| {
+                a.req.priority.rank() > rank
+                    && a.req.prompt.len() + a.generated.len() <= max_prompt
+            })
+            .map(|(&id, a)| (a.req.priority.rank(), id))
+            .max()
+            .map(|(_, id)| id);
+        let Some(id) = victim else { return };
+        let a = self.active.remove(&id).unwrap();
+        self.pool.release(id);
+        self.draft_pool.release(id); // no-op without a draft cache
+        self.metrics.preemptions += 1;
+        let mut req = a.req;
+        let state = self.preempted.entry(id).or_insert_with(|| PreemptState {
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            first_token_at: None,
+        });
+        state.tokens.extend_from_slice(&a.generated);
+        if state.first_token_at.is_none() {
+            state.first_token_at = a.first_token_at;
+        }
+        req.max_new_tokens -= a.generated.len();
+        req.prompt.extend_from_slice(&a.generated);
+        req.deferrals = 0;
+        // straight to the front of the queue (not submit_request: the
+        // submit-time counters already saw this request once)
+        self.batcher.push_front(req);
     }
 
     /// Run until every queued request completes; returns all responses.
@@ -475,7 +607,17 @@ impl Engine {
     /// cluster rebalance drain. The submit-time counters move with the
     /// requests: whichever shard requeues them counts them instead.
     pub fn drain_queued(&mut self) -> Vec<Request> {
-        let drained = self.batcher.drain_all();
+        // Preempted continuations stay home: their pre-preemption
+        // stream (PreemptState) lives on this engine, so handing them
+        // to another shard would drop the tokens already emitted.
+        let (keep, drained): (Vec<Request>, Vec<Request>) = self
+            .batcher
+            .drain_all()
+            .into_iter()
+            .partition(|r| self.preempted.contains_key(&r.id));
+        for r in keep.into_iter().rev() {
+            self.batcher.push_front(r);
+        }
         self.metrics.requests_submitted -= drained.len() as u64;
         self.metrics.prompt_tokens -=
             drained.iter().map(|r| r.prompt.len() as u64).sum::<u64>();
@@ -980,6 +1122,73 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert!(out[0].tokens.is_empty());
         assert_eq!(spec.kv_bytes(), 0, "pools drain even for empty streams");
+    }
+
+    #[test]
+    fn prefix_reuse_serves_shared_prompts_bit_exactly() {
+        // Two prompts sharing a 9-token prefix: the second admission
+        // must fork the indexed prefix pages instead of re-prefilling,
+        // and its stream must equal a cold engine's bit for bit.
+        let prefix: Vec<u32> = (0..9u32).map(|i| 1 + i).collect();
+        let mut a = prefix.clone();
+        a.push(30);
+        let mut b = prefix.clone();
+        b.push(31);
+        let mut cold = engine(Box::new(QRazor::w4a4kv4(16)));
+        cold.submit(b.clone(), 5, Sampling::Greedy);
+        let want = cold.run_to_completion()[0].tokens.clone();
+        let mut warm = engine(Box::new(QRazor::w4a4kv4(16)));
+        warm.submit(a, 5, Sampling::Greedy);
+        let _ = warm.run_to_completion();
+        warm.submit(b, 5, Sampling::Greedy);
+        let got = warm.run_to_completion();
+        assert_eq!(got[0].tokens, want, "forked stream == cold stream");
+        assert!(warm.metrics.prefix_hits >= 1, "the shared prefix must hit");
+        assert_eq!(warm.metrics.reused_tokens, 9);
+        assert_eq!(warm.kv_bytes(), 0, "live sessions drain; only snapshots stay");
+    }
+
+    #[test]
+    fn preemption_frees_pages_for_higher_priority_and_merges_the_stream() {
+        use crate::coordinator::request::Priority;
+        // uninterrupted reference stream for the batch-tier request
+        let mut solo = engine(Box::new(Fp16));
+        let mut long = Request::new(RequestId(1), vec![1, 2, 3], 6);
+        long.priority = Priority::Batch;
+        solo.submit_request(long.clone());
+        let want = solo.run_to_completion()[0].tokens.clone();
+        // one-page pool: the batch request holds all of it
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 5);
+        let mut rng = Rng::new(6);
+        let seqs: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let qm = crate::model::quantized::QuantModel::build(&w, Box::new(Fp16), &cal);
+        let mut e = Engine::new(
+            qm,
+            ServeConfig {
+                max_batch: 4,
+                max_new_tokens: 8,
+                kv_pool_tokens: 16,
+                ..Default::default()
+            },
+        );
+        e.submit_request(long);
+        e.step(); // batch request admitted + one token decoded
+        let mut vip = Request::new(RequestId(2), vec![4, 5], 4);
+        vip.priority = Priority::Interactive;
+        e.submit_request(vip);
+        let mut out = e.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert!(e.metrics.preemptions >= 1, "the batch request must be preempted");
+        assert_eq!(out[1].tokens.len(), 4, "interactive request runs to budget");
+        assert_eq!(out[0].prompt_len, 3, "continuation keeps the original prompt length");
+        assert_eq!(out[0].tokens, want, "merged stream == uninterrupted stream");
+        assert!(e.is_idle());
+        assert_eq!(e.kv_bytes(), 0);
     }
 
     #[test]

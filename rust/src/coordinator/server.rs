@@ -72,6 +72,9 @@ impl Server {
                     s.occupancy = StepLoop::occupancy(e);
                     s.kv_bytes_peak = e.metrics.kv_bytes_peak;
                     s.spec = e.metrics.spec;
+                    s.prefix_hits = e.metrics.prefix_hits;
+                    s.reused_tokens = e.metrics.reused_tokens;
+                    s.preemptions = e.metrics.preemptions;
                 }
                 for ev in e.take_events() {
                     event_tx.send(ev);

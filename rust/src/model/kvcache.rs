@@ -1,15 +1,45 @@
 //! KV caches for incremental decoding: a plain FP32 cache (baseline)
-//! and the **SDR-compressed cache** — the paper's KV4 storage, where
-//! each appended K/V row is stage-1 quantized with the calibrated
+//! and the **paged SDR-compressed cache** — the paper's KV4 storage,
+//! where each appended K/V row is stage-1 quantized with the calibrated
 //! static scale and stage-2 razored per group, stored *packed*
-//! (4-bit codes + 4-bit flags). Memory accounting is exact; the
-//! coordinator's pool (`crate::coordinator::kv`) builds on these.
+//! (4-bit codes + 4-bit flags) in fixed-size **pages**.
+//!
+//! ## Pages, page tables, and copy-on-write
+//!
+//! [`SdrKvCache`] no longer owns one contiguous buffer per layer.
+//! Storage is split into [`Page`]s of [`SdrKvCache::page_tokens`]
+//! token rows each (every page holds the packed K and V planes of
+//! *all* layers for its token range), and the cache itself is a
+//! **page table**: a `Vec<Arc<Page>>` of refcounted page handles.
+//! Cloning a cache ([`SdrKvCache::fork`]) clones only the handles, so
+//! two sessions that share a prompt prefix share the underlying pages.
+//! Writes go through `Arc::make_mut`: appending into (or truncating)
+//! a page that is still shared copies that one page first — classic
+//! copy-on-write at page granularity. Full prefix pages stay shared
+//! forever; only the partially-filled boundary page is ever copied.
+//!
+//! Row payloads are byte-identical to the old contiguous layout (pages
+//! merely partition rows), so [`SdrKvCache::bytes`] for an unshared
+//! cache equals the contiguous baseline exactly, and
+//! [`SdrKvCache::truncate`] remains byte-exact for speculative
+//! rollback — a truncate never mutates a page another cache still
+//! references (it copies the boundary page and drops handles to the
+//! rest). The decompression-free attention kernels walk pages without
+//! ever reconstructing K/V to f32. The coordinator's pool
+//! (`crate::coordinator::kv`) deduplicates page handles across
+//! sessions for exact residency accounting and prefix reuse.
+
+use std::sync::Arc;
 
 use crate::sdr::packed::{
     decode_nibbles_into, nibble_at, pack_flags, pack_nibbles, unpack_flags, unpack_nibbles,
 };
 use crate::sdr::razor::{compress_group, SdrCode, SdrMatrix, SdrSpec};
 use crate::tensor::Tensor;
+
+/// Default tokens per page — the group quantum of the default KV spec,
+/// so group boundaries and page boundaries align.
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
 
 /// Plain FP32 KV cache for one sequence: per-layer `[tokens, kv_dim]`.
 #[derive(Clone, Debug)]
@@ -60,24 +90,54 @@ impl FpKvCache {
     }
 }
 
-/// One SDR-compressed plane (all K or all V rows of one layer).
+/// One layer's packed rows within one page (all K or all V rows the
+/// page holds for that layer).
 #[derive(Clone, Debug, Default)]
-struct SdrPlane {
+struct PageSeg {
     nibbles: Vec<u8>,
     flag_nibbles: Vec<u8>,
     rows: usize,
 }
 
-/// SDR-compressed KV cache for one sequence. Rows are compressed on
-/// append (the paper's *online* KV compression) with static per-site
-/// scales; reads reconstruct via shift — or hand out raw codes for the
-/// decompression-free attention path.
+/// One fixed-size page: the packed K and V planes of **every** layer
+/// for a contiguous range of `page_tokens` token positions. Per-layer
+/// row counts differ transiently because the model appends layer by
+/// layer during a forward chunk; they converge at chunk end.
+#[derive(Clone, Debug)]
+struct Page {
+    k: Vec<PageSeg>,
+    v: Vec<PageSeg>,
+}
+
+impl Page {
+    fn empty(layers: usize) -> Page {
+        Page { k: vec![PageSeg::default(); layers], v: vec![PageSeg::default(); layers] }
+    }
+
+    /// Exact payload bytes (codes + flags, both planes, all layers).
+    fn bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(&self.v)
+            .map(|s| s.nibbles.len() + s.flag_nibbles.len())
+            .sum()
+    }
+}
+
+/// SDR-compressed **paged** KV cache for one sequence. Rows are
+/// compressed on append (the paper's *online* KV compression) with
+/// static per-site scales; reads reconstruct via shift — or hand out
+/// raw codes for the decompression-free attention path. See the module
+/// docs for the page-table / copy-on-write story.
 ///
 /// Since the per-site policy redesign every layer carries its **own**
 /// [`SdrSpec`] (a [`crate::policy::QuantPolicy`] may razor different
 /// layers with different group sizes); the uniform constructor
 /// [`SdrKvCache::new`] remains for the single-spec case. All specs
 /// must be the KV4 format (4-bit targets — the packed nibble planes).
+///
+/// `Clone` is the COW fork: handles are copied, pages are shared, and
+/// the first write to a shared page copies that page only.
 #[derive(Clone, Debug)]
 pub struct SdrKvCache {
     /// Per-layer SDR spec (length = layers).
@@ -85,8 +145,11 @@ pub struct SdrKvCache {
     pub kv_dim: usize,
     /// Static stage-1 scales per layer: (k_scale, v_scale).
     pub scales: Vec<(f32, f32)>,
-    k_planes: Vec<SdrPlane>,
-    v_planes: Vec<SdrPlane>,
+    /// Token rows per page.
+    page_tokens: usize,
+    /// The page table: refcounted handles onto fixed-size pages. Page
+    /// `p` covers token positions `p*page_tokens ..` the next boundary.
+    table: Vec<Arc<Page>>,
 }
 
 impl SdrKvCache {
@@ -98,14 +161,27 @@ impl SdrKvCache {
 
     /// Per-layer-spec cache — the policy-resolved form
     /// (`QuantPolicy::kv_cache_specs`). One spec and one (k, v) scale
-    /// pair per layer.
+    /// pair per layer. Pages default to [`DEFAULT_PAGE_TOKENS`] rows.
     pub fn new_per_layer(
         kv_dim: usize,
         specs: Vec<SdrSpec>,
         scales: Vec<(f32, f32)>,
     ) -> SdrKvCache {
+        SdrKvCache::new_per_layer_paged(kv_dim, specs, scales, DEFAULT_PAGE_TOKENS)
+    }
+
+    /// Per-layer-spec cache with an explicit page size (token rows per
+    /// page). Storage layout within a row is independent of the page
+    /// size, so caches built with different `page_tokens` hold
+    /// byte-identical payloads and produce bit-identical attention.
+    pub fn new_per_layer_paged(
+        kv_dim: usize,
+        specs: Vec<SdrSpec>,
+        scales: Vec<(f32, f32)>,
+        page_tokens: usize,
+    ) -> SdrKvCache {
         assert_eq!(scales.len(), specs.len(), "one (k, v) scale pair per layer");
-        let layers = specs.len();
+        assert!(page_tokens >= 1, "pages hold at least one token row");
         for spec in &specs {
             assert_eq!(spec.target_bits, 4, "packed KV cache is the KV4 format");
             assert_eq!(
@@ -115,13 +191,7 @@ impl SdrKvCache {
                 spec.group
             );
         }
-        SdrKvCache {
-            specs,
-            kv_dim,
-            scales,
-            k_planes: vec![SdrPlane::default(); layers],
-            v_planes: vec![SdrPlane::default(); layers],
-        }
+        SdrKvCache { specs, kv_dim, scales, page_tokens, table: Vec::new() }
     }
 
     /// The SDR spec layer `layer` razors with.
@@ -129,8 +199,48 @@ impl SdrKvCache {
         self.specs[layer]
     }
 
+    /// Token rows per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Pages currently referenced by this cache's page table.
+    pub fn num_pages(&self) -> usize {
+        self.table.len()
+    }
+
     pub fn tokens(&self, layer: usize) -> usize {
-        self.k_planes[layer].rows
+        self.table.iter().map(|p| p.k[layer].rows).sum()
+    }
+
+    /// Fork this cache: clone the page table (cheap — handles only),
+    /// sharing every page with `self`. Writes on either side copy the
+    /// affected page first, so forks never disturb each other. A fork
+    /// truncated to `t` tokens is byte-identical to a fresh cache that
+    /// only ever saw those `t` rows.
+    pub fn fork(&self) -> SdrKvCache {
+        self.clone()
+    }
+
+    /// Stable identities + footprints of the referenced pages:
+    /// `(page_id, packed_bytes, unpacked_bytes)` per handle. Two caches
+    /// report the same `page_id` exactly when they share that page —
+    /// the pool deduplicates on it for exact residency accounting.
+    pub fn page_footprints(&self) -> Vec<(usize, usize, usize)> {
+        self.table
+            .iter()
+            .map(|p| (Arc::as_ptr(p) as usize, p.bytes(), self.page_unpacked_bytes(p)))
+            .collect()
+    }
+
+    fn page_unpacked_bytes(&self, page: &Page) -> usize {
+        let mut total = 0;
+        for (l, spec) in self.specs.iter().enumerate() {
+            let gpr = self.kv_dim / spec.group;
+            total += page.k[l].rows * (self.kv_dim + gpr);
+            total += page.v[l].rows * (self.kv_dim + gpr);
+        }
+        total
     }
 
     /// The row razor-coder shared by writes ([`SdrKvCache::append`])
@@ -151,11 +261,11 @@ impl SdrKvCache {
         (codes, flags)
     }
 
-    fn compress_row(spec: SdrSpec, row: &[f32], scale: f32, plane: &mut SdrPlane) {
+    fn compress_row(spec: SdrSpec, row: &[f32], scale: f32, seg: &mut PageSeg) {
         let (codes, flags) = SdrKvCache::razor_row(spec, row, scale);
-        plane.nibbles.extend(pack_nibbles(&codes));
-        plane.flag_nibbles.extend(pack_flags(&flags));
-        plane.rows += 1;
+        seg.nibbles.extend(pack_nibbles(&codes));
+        seg.flag_nibbles.extend(pack_flags(&flags));
+        seg.rows += 1;
     }
 
     /// Drop every cached row past the first `tokens` across all layers
@@ -163,35 +273,65 @@ impl SdrKvCache {
     /// byte boundary in both stores (see [`SdrKvCache::code_row_nibbles`]),
     /// so truncation is byte-exact: after it, [`SdrKvCache::bytes`] is
     /// identical to a cache that only ever saw the surviving rows.
+    ///
+    /// Pages past the cut are released (handles dropped — a page shared
+    /// with another cache lives on there untouched); the boundary page
+    /// is copied-on-write before trimming if shared, so a rollback can
+    /// **never** free or mutate a page another session references.
     pub fn truncate(&mut self, tokens: usize) {
-        for layer in 0..self.specs.len() {
-            let code_bytes = self.code_row_nibbles(layer) / 2;
-            let flag_bytes = self.flag_row_nibbles(layer) / 2;
-            for planes in [&mut self.k_planes, &mut self.v_planes] {
-                let plane = &mut planes[layer];
-                if plane.rows > tokens {
-                    plane.nibbles.truncate(tokens * code_bytes);
-                    plane.flag_nibbles.truncate(tokens * flag_bytes);
-                    plane.rows = tokens;
+        let needed = tokens.div_ceil(self.page_tokens);
+        if self.table.len() > needed {
+            self.table.truncate(needed);
+        }
+        let layers = self.specs.len();
+        for pi in 0..self.table.len() {
+            let keep = (tokens - pi * self.page_tokens).min(self.page_tokens);
+            let dirty = {
+                let pg = &self.table[pi];
+                (0..layers).any(|l| pg.k[l].rows > keep || pg.v[l].rows > keep)
+            };
+            if !dirty {
+                continue;
+            }
+            let code_strides: Vec<usize> =
+                (0..layers).map(|l| self.code_row_nibbles(l) / 2).collect();
+            let flag_strides: Vec<usize> =
+                (0..layers).map(|l| self.flag_row_nibbles(l) / 2).collect();
+            let pg = Arc::make_mut(&mut self.table[pi]);
+            for l in 0..layers {
+                for seg in [&mut pg.k[l], &mut pg.v[l]] {
+                    if seg.rows > keep {
+                        seg.nibbles.truncate(keep * code_strides[l]);
+                        seg.flag_nibbles.truncate(keep * flag_strides[l]);
+                        seg.rows = keep;
+                    }
                 }
             }
         }
     }
 
-    /// Append one token's K and V rows for a layer.
+    /// Append one token's K and V rows for a layer. The row lands in
+    /// the page covering this layer's next position; a shared page is
+    /// copied first (COW), and a fresh page is allocated at page
+    /// boundaries.
     pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         assert_eq!(k_row.len(), self.kv_dim);
         assert_eq!(v_row.len(), self.kv_dim);
         let spec = self.specs[layer];
         let (ks, vs) = self.scales[layer];
-        SdrKvCache::compress_row(spec, k_row, ks, &mut self.k_planes[layer]);
-        SdrKvCache::compress_row(spec, v_row, vs, &mut self.v_planes[layer]);
+        let pi = self.tokens(layer) / self.page_tokens;
+        if pi == self.table.len() {
+            self.table.push(Arc::new(Page::empty(self.specs.len())));
+        }
+        let pg = Arc::make_mut(&mut self.table[pi]);
+        SdrKvCache::compress_row(spec, k_row, ks, &mut pg.k[layer]);
+        SdrKvCache::compress_row(spec, v_row, vs, &mut pg.v[layer]);
     }
 
     /// Nibbles each appended row occupies in a layer's code store. Rows
     /// are packed independently, so an odd `kv_dim` pads to a byte
     /// boundary — all reads must use this stride, **not** `kv_dim`
-    /// (reading the plane as one contiguous nibble stream misaligns
+    /// (reading a plane as one contiguous nibble stream misaligns
     /// every row after the first whenever the per-row count is odd).
     #[inline]
     fn code_row_nibbles(&self, _layer: usize) -> usize {
@@ -223,7 +363,7 @@ impl SdrKvCache {
     }
 
     /// One token's attention, computed **directly from the packed
-    /// planes** — the paper's Fig. 3(b) claim applied to the KV cache:
+    /// pages** — the paper's Fig. 3(b) claim applied to the KV cache:
     /// no K/V matrix is ever reconstructed to f32.
     ///
     /// `q_row` is the RoPE'd query `[heads · head_dim]`; it is stage-1
@@ -244,7 +384,7 @@ impl SdrKvCache {
         kv_heads: usize,
         head_dim: usize,
     ) -> Vec<f32> {
-        let t_rows = self.k_planes[layer].rows;
+        let t_rows = self.tokens(layer);
         if t_rows == 0 {
             assert_eq!(q_row.len(), heads * head_dim, "query length mismatch");
             return vec![0f32; heads * head_dim];
@@ -255,18 +395,22 @@ impl SdrKvCache {
 
     /// Multi-token decompression-free attention: `n_q` RoPE'd query
     /// rows (a verify chunk or a prefill block, flattened
-    /// `[n_q · heads · head_dim]`) against the packed K/V planes,
+    /// `[n_q · heads · head_dim]`) against the packed K/V pages,
     /// causally masked — chunk row `i` sits at absolute position
     /// `start_pos + i` and attends to cached rows `0..=start_pos + i`.
     /// Every chunk row's K/V must already be appended
     /// (`tokens(layer) >= start_pos + n_q`).
     ///
-    /// Bit-identical to calling the single-token kernel once per row at
-    /// that row's horizon: the Q·Kᵀ scores are exact integers either
-    /// way, and the float softmax/context arithmetic runs in the same
-    /// per-row order — batching only amortizes nibble decodes (each K/V
-    /// group is expanded once per cached row instead of once per query
-    /// row), it never reorders a sum. This is the kernel that makes a
+    /// The kernel walks the page table: cached row `ti` lives at
+    /// within-page offset `ti % page_tokens` of page `ti / page_tokens`.
+    /// Page size never enters the arithmetic, so the result is
+    /// bit-identical across page sizes — and bit-identical to calling
+    /// the single-token kernel once per row at that row's horizon: the
+    /// Q·Kᵀ scores are exact integers either way, and the float
+    /// softmax/context arithmetic runs in the same per-row order —
+    /// batching only amortizes nibble decodes (each K/V group is
+    /// expanded once per cached row instead of once per query row), it
+    /// never reorders a sum. This is the kernel that makes a
     /// speculative verify pass (`crate::spec`) score exactly what
     /// sequential decode would have scored, and what lets prefill run
     /// as one packed chunk.
@@ -292,8 +436,7 @@ impl SdrKvCache {
         assert_eq!(q_rows.len(), n_q * heads * head_dim, "query length mismatch");
         assert_eq!(heads % kv_heads, 0, "heads must divide into kv heads");
         let (k_scale, v_scale) = self.scales[layer];
-        let kp = &self.k_planes[layer];
-        let vp = &self.v_planes[layer];
+        let pt = self.page_tokens;
         let q_dim = heads * head_dim;
         let mut ctx = vec![0f32; n_q * q_dim];
         if n_q == 0 {
@@ -301,14 +444,24 @@ impl SdrKvCache {
         }
         // horizon of the last chunk row = number of visible cached rows
         let max_t = start_pos + n_q;
-        assert!(kp.rows >= max_t, "chunk rows not yet appended: {} < {max_t}", kp.rows);
+        let rows = self.tokens(layer);
+        assert!(rows >= max_t, "chunk rows not yet appended: {rows} < {max_t}");
         let q_per_kv = heads / kv_heads;
         let scale_dot = 1.0 / (head_dim as f32).sqrt();
         crate::sdr::gemm::note_packed_traffic(
-            kp.nibbles.len() + kp.flag_nibbles.len() + vp.nibbles.len() + vp.flag_nibbles.len(),
+            self.table
+                .iter()
+                .map(|p| {
+                    let (ks, vs) = (&p.k[layer], &p.v[layer]);
+                    ks.nibbles.len()
+                        + ks.flag_nibbles.len()
+                        + vs.nibbles.len()
+                        + vs.flag_nibbles.len()
+                })
+                .sum(),
         );
         // Stage-1 + stage-2 on every query row (the same coder the
-        // planes were written with; rows razor independently).
+        // pages were written with; rows razor independently).
         let qgpr = q_dim / g; // groups per query row
         let mut q_signed = vec![0i16; n_q * q_dim];
         let mut q_flags = vec![0u8; n_q * qgpr];
@@ -335,16 +488,18 @@ impl SdrKvCache {
             let q_off = h * head_dim;
             let qg_off = q_off / g;
             // ---- scores: decompression-free Q·Kᵀ over the head slice,
-            // each cached K slice decoded once and reused across every
-            // chunk row whose horizon includes it
+            // each cached K slice decoded once from its page and reused
+            // across every chunk row whose horizon includes it
             for ti in 0..max_t {
+                let seg = &self.table[ti / pt].k[layer];
+                let off = ti % pt;
                 decode_nibbles_into(
-                    &kp.nibbles,
-                    ti * code_stride + kvh * head_dim,
+                    &seg.nibbles,
+                    off * code_stride + kvh * head_dim,
                     head_dim,
                     &mut ktile,
                 );
-                let kg_base = ti * flag_stride + kvh * gph;
+                let kg_base = off * flag_stride + kvh * gph;
                 let i_lo = ti.saturating_sub(start_pos);
                 for i in i_lo..n_q {
                     let qrow = &q_signed[i * q_dim + q_off..i * q_dim + q_off + head_dim];
@@ -355,7 +510,7 @@ impl SdrKvCache {
                             part += qrow[p * g + t] as i32 * ktile[p * g + t] as i32;
                         }
                         let fq = q_flags[i * qgpr + qg_off + p];
-                        let fk = nibble_at(&kp.flag_nibbles, kg_base + p);
+                        let fk = nibble_at(&seg.flag_nibbles, kg_base + p);
                         acc += (part as i64) << (fq + fk);
                     }
                     scores[i * max_t + ti] = acc as f32 * q_scale * k_scale * scale_dot;
@@ -373,19 +528,22 @@ impl SdrKvCache {
                 inv_sums[i] = 1.0 / sum;
             }
             // ---- context: p · V straight from value nibbles, each V
-            // slice decoded once; per output element the additions run
-            // in ascending ti order, exactly like the one-row kernel
+            // slice decoded once from its page; per output element the
+            // additions run in ascending ti order, exactly like the
+            // one-row kernel
             for ti in 0..max_t {
+                let seg = &self.table[ti / pt].v[layer];
+                let off = ti % pt;
                 decode_nibbles_into(
-                    &vp.nibbles,
-                    ti * code_stride + kvh * head_dim,
+                    &seg.nibbles,
+                    off * code_stride + kvh * head_dim,
                     head_dim,
                     &mut vtile,
                 );
-                let vg_base = ti * flag_stride + kvh * gph;
+                let vg_base = off * flag_stride + kvh * gph;
                 let i_lo = ti.saturating_sub(start_pos);
                 for p in 0..gph {
-                    let fv = nibble_at(&vp.flag_nibbles, vg_base + p);
+                    let fv = nibble_at(&seg.flag_nibbles, vg_base + p);
                     for t in 0..g {
                         // Same rounding order as reconstruct()·scale so
                         // the packed path is bit-identical to the staged
@@ -403,69 +561,52 @@ impl SdrKvCache {
     }
 
     /// Export one plane as an unpacked [`SdrMatrix`] (testing and the
-    /// staged reference path; the serving path never calls this).
-    fn plane_matrix(&self, layer: usize, plane: &SdrPlane, scale: f32) -> SdrMatrix {
+    /// staged reference path; the serving path never calls this),
+    /// stitching rows back together across pages.
+    fn plane_matrix(&self, layer: usize, value_plane: bool, scale: f32) -> SdrMatrix {
         let spec = self.specs[layer];
         let gpr = self.kv_dim / spec.group;
         let code_stride = self.code_row_nibbles(layer) / 2;
         let flag_stride = self.flag_row_nibbles(layer) / 2;
-        let mut codes = Vec::with_capacity(plane.rows * self.kv_dim);
-        let mut flags = Vec::with_capacity(plane.rows * gpr);
-        for r in 0..plane.rows {
-            codes.extend(unpack_nibbles(&plane.nibbles[r * code_stride..], self.kv_dim));
-            flags.extend(unpack_flags(&plane.flag_nibbles[r * flag_stride..], gpr));
+        let rows = self.tokens(layer);
+        let mut codes = Vec::with_capacity(rows * self.kv_dim);
+        let mut flags = Vec::with_capacity(rows * gpr);
+        for page in &self.table {
+            let seg = if value_plane { &page.v[layer] } else { &page.k[layer] };
+            for r in 0..seg.rows {
+                codes.extend(unpack_nibbles(&seg.nibbles[r * code_stride..], self.kv_dim));
+                flags.extend(unpack_flags(&seg.flag_nibbles[r * flag_stride..], gpr));
+            }
         }
-        SdrMatrix {
-            spec,
-            rows: plane.rows,
-            cols: self.kv_dim,
-            codes,
-            flags,
-            scales: vec![scale],
-        }
+        SdrMatrix { spec, rows, cols: self.kv_dim, codes, flags, scales: vec![scale] }
     }
 
     /// The K plane of `layer` as an unpacked SDR matrix.
     pub fn k_sdr_matrix(&self, layer: usize) -> SdrMatrix {
-        self.plane_matrix(layer, &self.k_planes[layer], self.scales[layer].0)
+        self.plane_matrix(layer, false, self.scales[layer].0)
     }
 
     /// The V plane of `layer` as an unpacked SDR matrix.
     pub fn v_sdr_matrix(&self, layer: usize) -> SdrMatrix {
-        self.plane_matrix(layer, &self.v_planes[layer], self.scales[layer].1)
+        self.plane_matrix(layer, true, self.scales[layer].1)
     }
 
-    /// Values stored across all planes (for effective-bits accounting).
+    /// Values stored across all pages (for effective-bits accounting).
     pub fn stored_values(&self) -> usize {
-        self.k_planes
-            .iter()
-            .chain(&self.v_planes)
-            .map(|p| p.rows * self.kv_dim)
-            .sum()
+        (0..self.specs.len()).map(|l| 2 * self.tokens(l) * self.kv_dim).sum()
     }
 
     /// Bytes the unpacked working form would occupy for the same data:
     /// one byte per code plus one byte per group flag.
     pub fn unpacked_bytes(&self) -> usize {
-        let per_layer = |layer: usize, p: &SdrPlane| {
-            let gpr = self.kv_dim / self.specs[layer].group;
-            p.rows * self.kv_dim + p.rows * gpr
-        };
-        self.k_planes
-            .iter()
-            .enumerate()
-            .map(|(l, p)| per_layer(l, p))
-            .chain(self.v_planes.iter().enumerate().map(|(l, p)| per_layer(l, p)))
-            .sum()
+        self.table.iter().map(|p| self.page_unpacked_bytes(p)).sum()
     }
 
-    /// Exact payload bytes (codes + flags) across all layers.
+    /// Exact payload bytes (codes + flags) across all pages. Pages
+    /// partition rows without padding between them, so this equals the
+    /// old contiguous layout byte for byte.
     pub fn bytes(&self) -> usize {
-        self.k_planes
-            .iter()
-            .chain(&self.v_planes)
-            .map(|p| p.nibbles.len() + p.flag_nibbles.len())
-            .sum()
+        self.table.iter().map(|p| p.bytes()).sum()
     }
 
     /// Measured effective bits per stored value.
@@ -877,5 +1018,134 @@ mod tests {
         assert_eq!(km.cols, 32);
         let recon = km.dequantize();
         assert_eq!(recon.data(), sdr.k_matrix(0).data());
+    }
+
+    // ---- paging / copy-on-write ----
+
+    fn filled_paged(page_tokens: usize, tokens: usize, seed: u64) -> SdrKvCache {
+        let mut rng = Rng::new(seed);
+        let mut c = SdrKvCache::new_per_layer_paged(
+            32,
+            vec![SdrSpec::new(8, 4, 16); 2],
+            vec![(0.02, 0.03); 2],
+            page_tokens,
+        );
+        for _ in 0..tokens {
+            for l in 0..2 {
+                let k: Vec<f32> = (0..32).map(|_| rng.heavy_tailed(0.4, 0.05, 8.0)).collect();
+                let v: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                c.append(l, &k, &v);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn page_size_never_changes_bytes_or_bits() {
+        // Paged ≡ contiguous: a one-huge-page cache IS the old
+        // contiguous layout, and every other page size must match it
+        // byte for byte and bit for bit.
+        let mut rng = Rng::new(23);
+        let q: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+        let contiguous = filled_paged(1024, 11, 9);
+        for pt in [1usize, 2, 3, 4, 16] {
+            let paged = filled_paged(pt, 11, 9);
+            assert_eq!(paged.num_pages(), 11usize.div_ceil(pt));
+            assert_eq!(paged.bytes(), contiguous.bytes(), "pt {pt}");
+            assert_eq!(paged.unpacked_bytes(), contiguous.unpacked_bytes());
+            for l in 0..2 {
+                assert_eq!(paged.k_matrix(l).data(), contiguous.k_matrix(l).data());
+                assert_eq!(paged.v_matrix(l).data(), contiguous.v_matrix(l).data());
+            }
+            let a = paged.attention_packed_multi(0, &q, 2, 0.015, 2, 1, 32, 9);
+            let b = contiguous.attention_packed_multi(0, &q, 2, 0.015, 2, 1, 32, 9);
+            assert_eq!(a, b, "pt {pt}");
+        }
+    }
+
+    #[test]
+    fn fork_shares_full_pages_and_copies_the_boundary() {
+        let mut rng = Rng::new(31);
+        let mut base = filled_paged(4, 10, 13); // pages: 4+4+2
+        let fork = base.fork();
+        let before: Vec<_> = fork.page_footprints();
+        assert_eq!(base.page_footprints(), before, "fork is handle-identical");
+        // base keeps decoding: the partially-filled page 2 is copied on
+        // the first append, full pages 0 and 1 stay shared
+        for l in 0..2 {
+            let k: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+            base.append(l, &k, &k);
+        }
+        let after = base.page_footprints();
+        assert_eq!(after[0].0, before[0].0, "full page 0 still shared");
+        assert_eq!(after[1].0, before[1].0, "full page 1 still shared");
+        assert_ne!(after[2].0, before[2].0, "boundary page was copied");
+        // the fork is bitwise what it was
+        assert_eq!(fork.tokens(0), 10);
+        assert_eq!(fork.page_footprints(), before);
+    }
+
+    #[test]
+    fn truncate_on_fork_never_disturbs_the_original() {
+        let base = filled_paged(4, 10, 17);
+        let bytes = base.bytes();
+        let k_before = base.k_matrix(1);
+        let mut fork = base.fork();
+        fork.truncate(5);
+        // fork == fresh cache of 5 rows, byte-exact
+        let fresh = filled_paged(4, 5, 17);
+        assert_eq!(fork.bytes(), fresh.bytes());
+        assert_eq!(fork.k_matrix(1).data(), fresh.k_matrix(1).data());
+        assert_eq!(fork.v_matrix(0).data(), fresh.v_matrix(0).data());
+        // page 0 (full, below the cut) is still the shared original
+        assert_eq!(fork.page_footprints()[0].0, base.page_footprints()[0].0);
+        // the original saw nothing
+        assert_eq!(base.bytes(), bytes);
+        assert_eq!(base.k_matrix(1).data(), k_before.data());
+        assert_eq!(base.tokens(0), 10);
+    }
+
+    #[test]
+    fn forked_suffix_appends_match_cold_cache() {
+        // fork + truncate to a prefix, then append a suffix: the result
+        // is bit-identical to a cold cache fed prefix ++ suffix.
+        let mut rng = Rng::new(41);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..12)
+            .map(|_| {
+                (
+                    (0..32).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+                    (0..32).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+                )
+            })
+            .collect();
+        let feed = |c: &mut SdrKvCache, rows: &[(Vec<f32>, Vec<f32>)]| {
+            for (k, v) in rows {
+                for l in 0..2 {
+                    c.append(l, k, v);
+                }
+            }
+        };
+        let mk = || {
+            SdrKvCache::new_per_layer_paged(
+                32,
+                vec![SdrSpec::new(8, 4, 16); 2],
+                vec![(0.02, 0.03); 2],
+                4,
+            )
+        };
+        let mut donor = mk();
+        feed(&mut donor, &rows[..9]);
+        let mut forked = donor.fork();
+        forked.truncate(6);
+        feed(&mut forked, &rows[6..12]);
+        let mut cold = mk();
+        feed(&mut cold, &rows[..12]);
+        assert_eq!(forked.bytes(), cold.bytes());
+        for l in 0..2 {
+            assert_eq!(forked.k_matrix(l).data(), cold.k_matrix(l).data());
+            assert_eq!(forked.v_matrix(l).data(), cold.v_matrix(l).data());
+        }
+        // donor untouched by any of it
+        assert_eq!(donor.tokens(0), 9);
     }
 }

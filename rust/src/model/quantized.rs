@@ -314,6 +314,12 @@ impl QuantModel {
 }
 
 /// Per-sequence decode cache: FP32 or SDR-compressed (the paper's KV4).
+///
+/// `Clone` on the SDR variant is a **copy-on-write fork**: only page
+/// handles are copied, and the underlying packed pages stay shared
+/// until one side writes (see `crate::model::kvcache`). The FP variant
+/// clones deeply — it has no pages to share.
+#[derive(Clone)]
 pub enum DecodeCache {
     Fp(crate::model::kvcache::FpKvCache),
     Sdr(crate::model::kvcache::SdrKvCache),
@@ -354,6 +360,29 @@ impl DecodeCache {
             DecodeCache::Sdr(c) => c.truncate(tokens),
         }
     }
+
+    /// Fork this cache for prefix sharing: an SDR cache clones page
+    /// handles only (pages shared, COW on write); an FP cache is copied
+    /// deeply. Either way the fork decodes independently from here on.
+    pub fn fork(&self) -> DecodeCache {
+        self.clone()
+    }
+
+    /// Stable page identities + footprints
+    /// `(page_id, packed_bytes, unpacked_bytes)` for residency
+    /// deduplication. Empty for FP caches — they are unpaged and never
+    /// shared, so the pool accounts them by [`DecodeCache::bytes`].
+    pub fn page_footprints(&self) -> Vec<(usize, usize, usize)> {
+        match self {
+            DecodeCache::Fp(_) => Vec::new(),
+            DecodeCache::Sdr(c) => c.page_footprints(),
+        }
+    }
+
+    /// Is this cache paged (and therefore cheap to fork and share)?
+    pub fn is_paged(&self) -> bool {
+        matches!(self, DecodeCache::Sdr(_))
+    }
 }
 
 impl QuantModel {
@@ -368,6 +397,14 @@ impl QuantModel {
     /// FP/SDR policies, whose per-layer KV plans still apply through
     /// [`QuantPolicy::kv_transform`] on the FP path.
     pub fn new_cache(&self, kv_group: usize) -> DecodeCache {
+        self.new_cache_paged(kv_group, crate::model::kvcache::DEFAULT_PAGE_TOKENS)
+    }
+
+    /// [`QuantModel::new_cache`] with an explicit page size (token rows
+    /// per page) for the SDR variant. Page size changes the sharing
+    /// granularity only — stored bytes and attention bits are identical
+    /// across page sizes.
+    pub fn new_cache_paged(&self, kv_group: usize, page_tokens: usize) -> DecodeCache {
         let layers = self.config.layers;
         let kv_dim = self.kv_dim();
         match self.policy.kv_cache_specs(layers, kv_dim, kv_group) {
@@ -381,8 +418,11 @@ impl QuantModel {
                         )
                     })
                     .collect();
-                DecodeCache::Sdr(crate::model::kvcache::SdrKvCache::new_per_layer(
-                    kv_dim, specs, scales,
+                DecodeCache::Sdr(crate::model::kvcache::SdrKvCache::new_per_layer_paged(
+                    kv_dim,
+                    specs,
+                    scales,
+                    page_tokens,
                 ))
             }
             None => DecodeCache::Fp(crate::model::kvcache::FpKvCache::new(layers, kv_dim)),

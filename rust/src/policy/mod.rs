@@ -54,12 +54,18 @@
 //!                base' may omit ":" GROUP to inherit the base group)
 //!            | ";kv=" 4 ":" GROUP                   (KV4 cache plan)
 //!            | ";kv=off"                            (drop the KV plan)
+//!            | ";w=" SITE ("," SITE)* ":" W [":" GROUP]
+//!                                                   (per-site weight override;
+//!                SITE ∈ {wq,wk,wv,wo,gate,up,down,lm_head}, applies at
+//!                every layer, GROUP defaults to the base group)
 //!            | ";dynamic"                           (dynamic act scaling)
 //! ```
 //!
 //! `"w4a4kv4:16"` reproduces today's uniform preset exactly;
 //! `"w4a4:16;layers=0,11:w4a8;kv=4:16"` keeps W4A4 everywhere but
-//! escalates layers 0 and 11 to W4A8. Policies round-trip
+//! escalates layers 0 and 11 to W4A8; `"w4a4kv4:16;w=down,wo:8"`
+//! razors every weight to 4 bits except the down and output
+//! projections, which stay at the 8-bit basis. Policies round-trip
 //! string↔policy↔JSON ([`QuantPolicy::to_json`] /
 //! [`QuantPolicy::from_json`]); malformed groups and unknown `kv`
 //! suffixes are rejected with a clear error instead of silently
@@ -866,6 +872,7 @@ impl QuantPolicy {
         let mut base = base_preset.layer_plan(base_group);
         let mut layer_clauses: Vec<(Vec<usize>, Preset, usize)> = Vec::new();
         let mut kv_clause: Option<Option<SitePlan>> = None;
+        let mut weight_clauses: BTreeMap<Site, SitePlan> = BTreeMap::new();
         let mut dynamic = false;
         for clause in segments {
             let clause = clause.trim();
@@ -887,6 +894,36 @@ impl QuantPolicy {
                     let group = parse_group(group)?;
                     kv_clause = Some(Some(SitePlan::new(8, Some(4), group)));
                 }
+            } else if let Some(rest) = clause.strip_prefix("w=") {
+                let (list, spec) = rest.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!("weight clause format: w=SITE[,SITE]:BITS[:GROUP]")
+                })?;
+                let (bits_str, group) = match spec.split_once(':') {
+                    Some((b, g)) => (b.trim(), parse_group(g)?),
+                    None => (spec.trim(), base_group),
+                };
+                let bits: u32 = match bits_str {
+                    "4" => 4,
+                    "8" => 8,
+                    other => anyhow::bail!(
+                        "unsupported weight override width '{other}' in clause '{clause}' \
+                         (expected 4 or 8)"
+                    ),
+                };
+                let plan = SitePlan::new(8, (bits < 8).then_some(bits), group);
+                for part in list.split(',') {
+                    let key = part.trim();
+                    let site = Site::parse(key).filter(|s| s.is_weight()).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "'{key}' is not a weight site (expected wq, wk, wv, wo, gate, \
+                             up, down, or lm_head)"
+                        )
+                    })?;
+                    anyhow::ensure!(
+                        weight_clauses.insert(site, plan).is_none(),
+                        "duplicate weight override for site '{key}'"
+                    );
+                }
             } else if let Some(rest) = clause.strip_prefix("layers=") {
                 let (list, preset_str) = rest.split_once(':').ok_or_else(|| {
                     anyhow::anyhow!("layer clause format: layers=I,J:PRESET[:GROUP]")
@@ -906,7 +943,8 @@ impl QuantPolicy {
                 layer_clauses.push((idx, preset, group));
             } else {
                 anyhow::bail!(
-                    "unknown policy clause '{clause}' (expected layers=…, kv=…, or dynamic)"
+                    "unknown policy clause '{clause}' (expected layers=…, kv=…, w=…, or \
+                     dynamic)"
                 );
             }
         }
@@ -917,6 +955,10 @@ impl QuantPolicy {
             base.kv = kv;
             base.query = kv;
         }
+        // w= overrides are policy-wide: escalated layers inherit them
+        // too, so a pinned site (say down at 8 bits) stays pinned no
+        // matter which preset governs the layer.
+        base.weight_overrides = weight_clauses;
         let mut overrides = BTreeMap::new();
         for (idx, preset, group) in layer_clauses {
             for li in idx {
@@ -925,6 +967,7 @@ impl QuantPolicy {
                     plan.kv = base.kv;
                     plan.query = base.query;
                 }
+                plan.weight_overrides = base.weight_overrides.clone();
                 overrides.insert(li, plan);
             }
         }
@@ -1106,6 +1149,25 @@ fn razor_dsl(r: &RazorPolicy) -> String {
     if let (false, Some(p)) = (kv_suffix, r.base.kv) {
         s.push_str(&format!(";kv={}:{}", p.target_bits.unwrap_or(p.basis_bits), p.group));
     }
+    // per-site weight overrides, grouped by identical bits[:group]
+    // token in site order (the base map is a BTreeMap, so this is
+    // deterministic and the canonical form re-parses to itself)
+    let mut wtoks: Vec<(String, Vec<&'static str>)> = Vec::new();
+    for (site, p) in &r.base.weight_overrides {
+        let bits = p.target_bits.unwrap_or(p.basis_bits);
+        let tok = if p.group == group {
+            format!("{bits}")
+        } else {
+            format!("{bits}:{}", p.group)
+        };
+        match wtoks.iter_mut().find(|(t, _)| *t == tok) {
+            Some((_, keys)) => keys.push(site.key()),
+            None => wtoks.push((tok, vec![site.key()])),
+        }
+    }
+    for (tok, keys) in wtoks {
+        s.push_str(&format!(";w={}:{tok}", keys.join(",")));
+    }
     // group override layers by identical token, preserving layer order
     let mut tokens: Vec<(String, Vec<usize>)> = Vec::new();
     for (&li, plan) in &r.overrides {
@@ -1224,6 +1286,11 @@ mod tests {
             ("w4a4:16;layers=0:w4a8:nope", "malformed group"),
             ("w4a4:16;frobnicate", "unknown policy clause"),
             ("fp16;kv=4:16", "fp16 takes no clauses"),
+            ("w4a4:16;w=down", "weight clause format"),
+            ("w4a4:16;w=act:8", "not a weight site"),
+            ("w4a4:16;w=down:5", "unsupported weight override width"),
+            ("w4a4:16;w=down:8;w=down:4", "duplicate weight override"),
+            ("w4a4:16;w=down:4:nope", "malformed group"),
         ] {
             let err = QuantPolicy::parse(s).unwrap_err().to_string();
             assert!(
@@ -1241,6 +1308,7 @@ mod tests {
             "w4a8:32",
             "w4a4:16;layers=0,3:w4a8;kv=4:16",
             "w4a4kv4:16;dynamic",
+            "w4a4kv4:16;w=wo,down:8",
         ] {
             let p = QuantPolicy::parse(s).unwrap();
             let j = Json::parse(&p.to_json().to_string()).unwrap();
@@ -1257,6 +1325,30 @@ mod tests {
         assert!(QuantPolicy::from_json(&j).unwrap_err().to_string().contains("scheme"));
         let bad = Json::from_pairs(vec![("kind", Json::from("nope"))]);
         assert!(QuantPolicy::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn weight_clause_pins_sites_and_round_trips() {
+        let p = QuantPolicy::parse("w4a4kv4:16;w=down,wo:8;w=wq:4:32").unwrap();
+        // pinned sites resolve ahead of the class plan, at every layer
+        assert_eq!(p.resolve(0, Site::Down).unwrap().target_bits, None);
+        assert_eq!(p.resolve(5, Site::Wo).unwrap().target_bits, None);
+        let wq = p.resolve(3, Site::Wq).unwrap();
+        assert_eq!((wq.target_bits, wq.group), (Some(4), 32));
+        // everything else keeps the base weight plan
+        assert_eq!(p.resolve(0, Site::Gate).unwrap().target_bits, Some(4));
+        // canonical form groups sites per token and re-parses identically
+        let s = p.to_string();
+        assert_eq!(s, "w4a4kv4:16;w=wq:4:32;w=wo,down:8");
+        let again = QuantPolicy::parse(&s).unwrap();
+        assert_eq!(p.razor(), again.razor());
+        assert_eq!(again.to_string(), s, "canonical form is a fixed point");
+        // escalated layers inherit the pinned sites
+        let p = QuantPolicy::parse("w4a4:16;layers=0:w4a8;w=down:8").unwrap();
+        assert_eq!(p.resolve(0, Site::Down).unwrap().target_bits, None);
+        assert_eq!(p.resolve(1, Site::Down).unwrap().target_bits, None);
+        let s = p.to_string();
+        assert_eq!(QuantPolicy::parse(&s).unwrap().razor(), p.razor(), "'{s}' round-trips");
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Acceptance suite for the paged packed-KV refactor: token streams
+//! must be invariant to the page size (`kv_page_tokens = 1` reproduces
+//! the pre-paging contiguous arithmetic exactly), a session admitted
+//! through a copy-on-write prefix fork must stream bit-identically to
+//! a cold start on the same tokens — through a bare `Engine`, the
+//! threaded `Server`, a ≥2-shard cluster, and speculative decoding
+//! with k ≥ 2 — and page accounting must drain to zero bytes through
+//! cancel/evict churn. Needs no artifacts; runs on the nano preset.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use qrazor::baselines::QRazor;
+use qrazor::cluster::{ClusterConfig, ClusterServer, PlacementPolicy};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{
+    collect_sessions, Engine, FinishReason, RequestId, Sampling, ServeApi, Server, SubmitOptions,
+};
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::util::rng::Rng;
+
+fn model(seed: u64) -> Arc<QuantModel> {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal))
+}
+
+/// Target (W4A8 basis) + draft (packed W4A4) pair from one set of
+/// weights, for the speculative axis.
+fn spec_pair(seed: u64) -> (Arc<QuantModel>, Arc<QuantModel>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let target = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a8kv4(16)), &cal));
+    let draft = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal));
+    (target, draft)
+}
+
+/// Shared-prefix workload: `groups` preambles × `per_group` suffixed
+/// sessions, greedy and seeded-temperature mixed — the shape the
+/// prefix index exists for.
+fn prefix_workload(
+    seed: u64,
+    groups: usize,
+    per_group: usize,
+    prefix_len: usize,
+    vocab: u64,
+) -> Vec<(Vec<u32>, usize, SubmitOptions)> {
+    let mut rng = Rng::new(seed);
+    let preambles: Vec<Vec<u32>> = (0..groups)
+        .map(|_| (0..prefix_len).map(|_| rng.below(vocab) as u32).collect())
+        .collect();
+    (0..groups * per_group)
+        .map(|i| {
+            let mut prompt = preambles[i % groups].clone();
+            let suffix = 2 + rng.index(4);
+            prompt.extend((0..suffix).map(|_| rng.below(vocab) as u32));
+            let mut opts = SubmitOptions::new();
+            if i % 3 == 1 {
+                opts = opts.sampling(Sampling::Temperature {
+                    temp: 0.8,
+                    seed: seed * 1000 + i as u64,
+                });
+            }
+            (prompt, 6, opts)
+        })
+        .collect()
+}
+
+/// Run a workload on a bare engine and return id → (tokens, finish).
+fn engine_streams(
+    model: &Arc<QuantModel>,
+    config: ServeConfig,
+    work: &[(Vec<u32>, usize, SubmitOptions)],
+) -> BTreeMap<u64, (Vec<u32>, FinishReason)> {
+    let mut engine = Engine::new(Arc::clone(model), config);
+    for (i, (prompt, max_new, opts)) in work.iter().enumerate() {
+        engine.submit_request(opts.build(RequestId(i as u64), prompt.clone(), *max_new));
+    }
+    let out = engine
+        .run_to_completion()
+        .into_iter()
+        .map(|r| (r.id.0, (r.tokens, r.finish)))
+        .collect();
+    assert_eq!(engine.kv_bytes(), 0, "pool must drain byte-exactly");
+    out
+}
+
+#[test]
+fn streams_are_invariant_to_the_page_size() {
+    let m = model(31);
+    let vocab = m.config.vocab as u64;
+    let work = prefix_workload(5, 2, 4, 12, vocab);
+    let cfg = |page: usize| ServeConfig {
+        max_batch: 4,
+        kv_page_tokens: page,
+        ..Default::default()
+    };
+    // page_tokens = 1 is the pre-paging token-exact arithmetic; larger
+    // pages must not change a single token
+    let baseline = engine_streams(&m, cfg(1), &work);
+    for page in [4usize, 16, 64] {
+        let paged = engine_streams(&m, cfg(page), &work);
+        assert_eq!(baseline, paged, "page size {page} changed a stream");
+    }
+}
+
+#[test]
+fn forked_sessions_stream_like_cold_starts_through_the_server() {
+    let m = model(32);
+    let vocab = m.config.vocab as u64;
+    let work = prefix_workload(6, 2, 5, 16, vocab);
+    // cold reference: each prompt alone in a fresh engine — no prefix
+    // index entry to fork, no batching
+    let mut cold = BTreeMap::new();
+    for (i, (prompt, max_new, opts)) in work.iter().enumerate() {
+        let one = engine_streams(
+            &m,
+            ServeConfig::default(),
+            &[(prompt.clone(), *max_new, *opts)],
+        );
+        cold.insert(i as u64, one[&0].clone());
+    }
+    // hot path: all sessions through one threaded server, sharing
+    // prefix pages copy-on-write
+    let server = Server::spawn(Arc::clone(&m), ServeConfig { max_batch: 4, ..Default::default() });
+    let mut ids = Vec::new();
+    for (prompt, max_new, opts) in &work {
+        ids.push(server.submit_with(prompt.clone(), *max_new, *opts).unwrap());
+    }
+    let sessions = collect_sessions(&server, work.len()).unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let log = &sessions[id];
+        let resp = log.response.as_ref().expect("finished");
+        assert_eq!(log.tokens(), resp.tokens, "streamed ≡ batch for session {i}");
+        assert_eq!(
+            (resp.tokens.clone(), resp.finish),
+            cold[&(i as u64)],
+            "session {i}: forked stream must equal its cold start"
+        );
+    }
+    let stats = server.stats();
+    assert!(stats.prefix_hits >= 1, "shared preambles must hit the index");
+    assert!(stats.reused_tokens as usize >= 16, "full preamble pages reused");
+    assert_eq!(stats.occupancy.bytes, 0, "sessions drained");
+    server.shutdown();
+}
+
+#[test]
+fn two_shard_cluster_with_prefix_affinity_stays_bit_identical() {
+    let m = model(33);
+    let vocab = m.config.vocab as u64;
+    let work = prefix_workload(7, 2, 4, 40, vocab);
+    let baseline = engine_streams(
+        &m,
+        ServeConfig { max_batch: 4, ..Default::default() },
+        &work,
+    );
+    let cluster = ClusterServer::spawn(
+        Arc::clone(&m),
+        ClusterConfig {
+            shards: 2,
+            placement: PlacementPolicy::PrefixAffinity,
+            ..Default::default()
+        },
+    );
+    let mut ids = Vec::new();
+    for (prompt, max_new, opts) in &work {
+        ids.push(cluster.submit_with(prompt.clone(), *max_new, *opts).unwrap());
+    }
+    let sessions = collect_sessions(&cluster, work.len()).unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let resp = sessions[id].response.as_ref().expect("finished");
+        assert_eq!(
+            &(resp.tokens.clone(), resp.finish),
+            &baseline[&(i as u64)],
+            "session {i}: cluster stream diverged from the single-engine baseline"
+        );
+    }
+    // prefix-affinity routes each preamble group to one shard, so the
+    // per-shard indexes actually hit
+    let stats = cluster.stats();
+    assert!(stats.prefix_hits >= 2, "both preamble groups must reuse pages");
+    let report = cluster.shutdown();
+    for s in &report.shards {
+        assert_eq!(s.final_occupancy.bytes, 0, "shard {} not drained", s.index);
+    }
+}
+
+#[test]
+fn speculative_decode_preserves_fork_equals_cold_at_k2() {
+    let (target, draft) = spec_pair(34);
+    let vocab = target.config.vocab as u64;
+    let mut rng = Rng::new(35);
+    let preamble: Vec<u32> = (0..20).map(|_| rng.below(vocab) as u32).collect();
+    let cfg = ServeConfig { max_batch: 2, spec_k: 2, ..Default::default() };
+    let mk = |suffix: &[u32]| {
+        let mut p = preamble.clone();
+        p.extend_from_slice(suffix);
+        p
+    };
+    // warm engine: first session populates the prefix index (verify
+    // AND draft pools), second forks both in lockstep
+    let mut warm = Engine::with_draft(Arc::clone(&target), Some(Arc::clone(&draft)), cfg.clone());
+    warm.submit(mk(&[7, 8]), 8, Sampling::Greedy);
+    let first = warm.run_to_completion();
+    assert_eq!(first.len(), 1);
+    warm.submit(mk(&[9, 10, 11]), 8, Sampling::Greedy);
+    let forked = warm.run_to_completion();
+    assert_eq!(forked.len(), 1);
+    assert!(warm.metrics.prefix_hits >= 1, "second session must fork the preamble");
+    assert!(warm.metrics.spec.steps > 0, "speculation must actually run");
+    // cold engine: the forked session's prompt from scratch
+    let mut cold = Engine::with_draft(target, Some(draft), cfg);
+    cold.submit(mk(&[9, 10, 11]), 8, Sampling::Greedy);
+    let cold_out = cold.run_to_completion();
+    assert_eq!(
+        (&forked[0].tokens, forked[0].finish),
+        (&cold_out[0].tokens, cold_out[0].finish),
+        "speculative fork must match the cold speculative stream"
+    );
+    assert_eq!(warm.kv_bytes(), 0, "verify pool drained");
+}
+
+#[test]
+fn page_accounting_drains_through_cancel_and_evict_churn() {
+    let m = model(36);
+    let vocab = m.config.vocab as u64;
+    let work = prefix_workload(8, 1, 9, 24, vocab);
+    // pool small enough to force eviction churn while sessions share
+    // the preamble: 8 pages of 16 tokens
+    let server = Server::spawn(
+        Arc::clone(&m),
+        ServeConfig {
+            max_batch: 3,
+            kv_pool_tokens: 128,
+            kv_page_tokens: 16,
+            ..Default::default()
+        },
+    );
+    let mut ids = Vec::new();
+    for (prompt, max_new, opts) in &work {
+        ids.push(server.submit_with(prompt.clone(), *max_new, *opts).unwrap());
+    }
+    // cancel every third session immediately — some queued, some live
+    for id in ids.iter().step_by(3) {
+        server.cancel(*id).unwrap();
+    }
+    let sessions = collect_sessions(&server, work.len()).unwrap();
+    let mut cancelled = 0;
+    for id in &ids {
+        let resp = sessions[id].response.as_ref().expect("resolved");
+        if resp.finish == FinishReason::Cancelled {
+            cancelled += 1;
+        } else {
+            assert_eq!(resp.finish, FinishReason::Length);
+            assert_eq!(resp.tokens.len(), 6);
+        }
+    }
+    assert!(cancelled >= 1, "at least the still-queued cancels must land");
+    let stats = server.stats();
+    assert_eq!(stats.occupancy.bytes, 0, "session bytes drain to zero");
+    assert_eq!(stats.in_flight(), 0);
+    assert!(
+        stats.occupancy.resident_pages <= stats.occupancy.capacity_pages,
+        "retained prefix snapshots stay within page capacity: {:?}",
+        stats.occupancy
+    );
+    server.shutdown();
+}
