@@ -190,11 +190,110 @@ fn shared_prefix_axis(smoke: bool) {
     );
 }
 
+/// Telemetry axis: a mixed workload (priority classes, speculative
+/// draft/verify pair, shared prompt prefixes) on a 2-shard cluster
+/// with stage timing and tracing on. Prints the per-stage latency
+/// breakdown per shard and merged, plus the hot-path aggregates, then
+/// writes the merged registry snapshot (`BENCH_serve_throughput.json`
+/// or `--metrics-json PATH`) and optionally a Chrome trace
+/// (`--trace-out PATH`). `--smoke` re-parses and schema-checks every
+/// artifact it wrote.
+fn telemetry_axis(smoke: bool, metrics_path: &str, trace_path: &str) {
+    use qrazor::obs;
+    obs::set_timing(true);
+    obs::hot_reset();
+    let n_requests = if smoke { 10usize } else { 24 };
+    let max_new = 10usize;
+    println!(
+        "\n=== telemetry axis ({n_requests} requests × {max_new} tokens, 2 shards, \
+         spec k=2, priority mix, shared prefixes) ==="
+    );
+    // Same weights + calibration both times (build() is deterministic),
+    // so the draft is the razored form of the target.
+    let target = build(Box::new(QRazor::w4a8kv4(16)));
+    let draft = std::sync::Arc::new(build(Box::new(QRazor::w4a4kv4(16))));
+    let vocab = target.config.vocab as u64;
+    let trace = qrazor::obs::TraceBuffer::with_default_capacity();
+    let cluster = ClusterServer::spawn_with_telemetry(
+        target,
+        Some(draft),
+        ClusterConfig {
+            shards: 2,
+            serve: ServeConfig {
+                max_batch: 4,
+                max_new_tokens: max_new,
+                spec_k: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        Some(trace.clone()),
+    );
+    let mut rng = Rng::new(29);
+    let preamble: Vec<u32> = (0..12).map(|_| rng.below(vocab) as u32).collect();
+    let mix = [Priority::Interactive, Priority::Standard, Priority::Batch];
+    for i in 0..n_requests {
+        let mut prompt = if i % 2 == 0 { preamble.clone() } else { Vec::new() };
+        let len = 4 + rng.index(8);
+        prompt.extend((0..len).map(|_| rng.below(vocab) as u32));
+        cluster
+            .submit_with(prompt, max_new, SubmitOptions::new().priority(mix[i % mix.len()]))
+            .expect("submit");
+    }
+    let sessions = collect_sessions(&cluster, n_requests).expect("stream");
+    assert_eq!(sessions.len(), n_requests);
+    let report = cluster.shutdown();
+    for s in &report.shards {
+        print!(
+            "{}",
+            s.metrics.stages.render_table(&format!("stage latency, shard {} (ms)", s.index))
+        );
+    }
+    let merged = report.merged_metrics();
+    print!("{}", merged.stages.render_table("stage latency, merged (ms)"));
+    for (name, ns, calls) in obs::hot_snapshot() {
+        if calls > 0 {
+            println!("  hot {name:<18} {calls:>10} calls {:>12.3} ms total", ns as f64 * 1e-6);
+        }
+    }
+    let mut reg = report.registry();
+    obs::export_hot(&mut reg);
+    let json = reg.to_json().to_string();
+    std::fs::write(metrics_path, &json).expect("write registry snapshot");
+    println!("registry snapshot -> {metrics_path}");
+    if !trace_path.is_empty() {
+        std::fs::write(trace_path, trace.to_chrome_json().to_string()).expect("write trace");
+        println!("chrome trace ({} events) -> {trace_path}", trace.events().len());
+    }
+    if smoke {
+        let parsed = qrazor::util::json::Json::parse(&json).expect("registry snapshot parses");
+        obs::validate_registry_json(&parsed).expect("registry snapshot schema");
+        let bad = obs::unbalanced_spans(&trace.events());
+        assert!(bad.is_empty(), "unbalanced trace spans: {bad:?}");
+        assert!(merged.stages.get(obs::Stage::Decode).is_some(), "decode stage timed");
+        assert!(merged.stages.get(obs::Stage::Publish).is_some(), "publish stage timed");
+    }
+    obs::set_timing(false);
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if std::env::args().any(|a| a == "--shared-prefix") {
         // CI entry: just the paged-KV capacity axis
         shared_prefix_axis(smoke);
+        println!("serve_throughput OK");
+        return;
+    }
+    let argv: Vec<String> = std::env::args().collect();
+    let arg_val = |name: &str| -> Option<String> {
+        argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1).cloned())
+    };
+    let metrics_path =
+        arg_val("--metrics-json").unwrap_or_else(|| "BENCH_serve_throughput.json".to_string());
+    let trace_path = arg_val("--trace-out").unwrap_or_default();
+    if std::env::args().any(|a| a == "--telemetry") {
+        // CI entry: just the telemetry axis
+        telemetry_axis(smoke, &metrics_path, &trace_path);
         println!("serve_throughput OK");
         return;
     }
@@ -465,5 +564,6 @@ fn main() {
     }
 
     shared_prefix_axis(smoke);
+    telemetry_axis(smoke, &metrics_path, &trace_path);
     println!("serve_throughput OK");
 }

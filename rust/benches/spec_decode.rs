@@ -161,6 +161,10 @@ impl SpecLm for SynthLm {
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let (real_new, synth_new) = if smoke { (12usize, 400usize) } else { (48, 2000) };
+    // Stage + hot-path timing on for the whole run: the registry
+    // snapshot at the end carries spec_draft/spec_verify aggregates.
+    qrazor::obs::set_timing(true);
+    qrazor::obs::hot_reset();
 
     // ---- section 1: real models -------------------------------------
     println!("=== speculative decode, real models (nano, draft W4A4KV4 -> verify W4A8KV4) ===");
@@ -197,7 +201,7 @@ fn main() {
         ServeConfig { max_batch: 1, max_new_tokens: real_new, spec_k: 4, ..Default::default() },
     );
     let (got, tps, accept, rollbacks) = single_stream(&server, real_new);
-    server.shutdown();
+    let self_draft_metrics = server.shutdown_with_metrics().expect("serve worker");
     assert_eq!(got, want, "self-draft stream diverged");
     assert!(
         (accept - 1.0).abs() < 1e-12,
@@ -292,5 +296,19 @@ fn main() {
         "high-acceptance speculative decode must reach >=1.3x under the Table-5 cost \
          model, got {best:.2}x"
     );
+
+    // ---- registry snapshot: the self-draft serve run's metrics plus
+    // the global hot-path aggregates (spec_draft/spec_verify/packed
+    // attention), schema-checked in smoke mode.
+    let mut reg = self_draft_metrics.to_registry(&[("bench", "spec_decode")]);
+    qrazor::obs::export_hot(&mut reg);
+    let json = reg.to_json().to_string();
+    std::fs::write("BENCH_spec_decode.json", &json).expect("write BENCH_spec_decode.json");
+    println!("registry snapshot -> BENCH_spec_decode.json");
+    if smoke {
+        let parsed = qrazor::util::json::Json::parse(&json).expect("registry snapshot parses");
+        qrazor::obs::validate_registry_json(&parsed).expect("registry snapshot schema");
+    }
+    qrazor::obs::set_timing(false);
     println!("spec_decode OK");
 }

@@ -1,12 +1,41 @@
 //! Cluster-wide metrics: per-shard throughput/latency/occupancy merged
 //! into one view, rendered in the same shape as
 //! [`crate::coordinator::metrics::Metrics::render`] plus a rebalance
-//! signal when shard occupancy skews past a threshold.
+//! signal when shard occupancy skews past a threshold. The canonical
+//! aggregation is [`registry_from_reports`]: per-shard registries
+//! combined with [`crate::obs::Registry::merge`] (counters add,
+//! histograms bucket-merge) instead of hand-written field sums.
 
 use crate::coordinator::kv::PoolOccupancy;
+use crate::coordinator::metrics::Metrics;
+use crate::obs::Registry;
 use crate::util::json::Json;
 
 use super::shard::ShardReport;
+
+/// Fold every shard's final metrics into one [`Metrics`]: counters
+/// add, TTFT/latency/stage histograms bucket-merge (associative and
+/// commutative, so shard order doesn't matter), KV peaks take maxima.
+pub fn merged_metrics(reports: &[ShardReport]) -> Metrics {
+    let mut merged = Metrics::default();
+    for r in reports {
+        merged.merge(&r.metrics);
+    }
+    merged
+}
+
+/// The cluster registry: each shard's metrics exported under its
+/// `shard` label, plus the merged whole under `shard="all"` — all
+/// combined via [`Registry::merge`].
+pub fn registry_from_reports(reports: &[ShardReport]) -> Registry {
+    let mut reg = Registry::new();
+    for r in reports {
+        let idx = r.index.to_string();
+        reg.merge(&r.metrics.to_registry(&[("shard", &idx)]));
+    }
+    reg.merge(&merged_metrics(reports).to_registry(&[("shard", "all")]));
+    reg
+}
 
 /// One shard's contribution to the cluster view. Built either live
 /// (from the router's committed-token accounting plus the latest
@@ -261,6 +290,28 @@ mod tests {
     fn single_shard_never_signals_rebalance() {
         let m = ClusterMetrics { shards: vec![snap(0, 1.0, 0)], elapsed_s: 1.0 };
         assert_eq!(m.rebalance(0.0), None);
+    }
+
+    #[test]
+    fn registry_merge_aggregates_shards() {
+        let mk = |index: usize, completed: u64| {
+            let mut m = Metrics::default();
+            m.requests_submitted = completed;
+            m.requests_completed = completed;
+            m.ttft.push(0.01 * (index + 1) as f64);
+            ShardReport { index, metrics: m, final_occupancy: PoolOccupancy::default() }
+        };
+        let reports = vec![mk(0, 2), mk(1, 3)];
+        let m = merged_metrics(&reports);
+        assert_eq!(m.requests_completed, 5);
+        assert_eq!(m.ttft.len(), 2);
+        let reg = registry_from_reports(&reports);
+        assert_eq!(reg.counter_value("qrazor_requests_completed", &[("shard", "0")]), 2);
+        assert_eq!(reg.counter_value("qrazor_requests_completed", &[("shard", "1")]), 3);
+        assert_eq!(reg.counter_value("qrazor_requests_completed", &[("shard", "all")]), 5);
+        assert_eq!(reg.hist("qrazor_ttft_seconds", &[("shard", "all")]).unwrap().len(), 2);
+        let text = reg.render_prometheus();
+        assert!(text.contains("qrazor_requests_completed{shard=\"all\"} 5"), "{text}");
     }
 
     #[test]

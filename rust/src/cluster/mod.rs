@@ -32,7 +32,12 @@
 //!   [`metrics::RebalanceSignal`] when shard fill skews past a
 //!   threshold; `try_rebalance` actuates it, and its requeue path is
 //!   cancellation-aware (a drained-then-cancelled request is never
-//!   requeued as live work).
+//!   requeued as live work). Final shard reports also fold into the
+//!   central [`crate::obs::Registry`] via [`registry_from_reports`] —
+//!   counters add, latency/stage histograms bucket-merge — and every
+//!   shard can share one [`crate::obs::TraceBuffer`]
+//!   (`ClusterServer::spawn_with_telemetry`) for a cluster-wide
+//!   Chrome trace export.
 //!
 //! The memory shape is the point: the model weights stay
 //! nibble-packed and are shared read-only through one
@@ -50,7 +55,9 @@ pub mod placement;
 pub mod server;
 pub mod shard;
 
-pub use metrics::{ClusterMetrics, RebalanceSignal, ShardSnapshot};
+pub use metrics::{
+    merged_metrics, registry_from_reports, ClusterMetrics, RebalanceSignal, ShardSnapshot,
+};
 pub use placement::{Placement, PlacementPolicy, ShardLoad};
 pub use server::{ClusterConfig, ClusterReport, ClusterServer};
 pub use shard::{ShardEngine, ShardReport, StepPulse};

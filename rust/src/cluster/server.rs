@@ -36,6 +36,7 @@ use crate::coordinator::api::{EventHub, ServeApi, ServeStats};
 use crate::coordinator::kv::PoolOccupancy;
 use crate::coordinator::request::{Request, RequestId, Response, SubmitOptions, TokenEvent};
 use crate::model::quantized::QuantModel;
+use crate::obs::{Registry, StageTimes, TraceBuffer};
 use crate::spec::SpecStats;
 use crate::util::threadpool::num_threads;
 
@@ -94,6 +95,11 @@ struct ShardState {
     submitted: u64,
     completed: u64,
     generated_tokens: u64,
+    /// Running sum of the stage times this shard's pulses carried
+    /// (all zeros unless `obs::set_timing` is on) — the live view;
+    /// the authoritative per-stage histograms arrive in the final
+    /// `ShardReport`.
+    stage_times: StageTimes,
 }
 
 struct RouterInner {
@@ -133,6 +139,20 @@ impl ClusterReport {
         ClusterMetrics::from_reports(&self.shards, self.elapsed_s)
     }
 
+    /// Every shard's metrics folded into one
+    /// [`crate::coordinator::metrics::Metrics`] (histograms
+    /// bucket-merge, counters add, KV peaks take maxima).
+    pub fn merged_metrics(&self) -> crate::coordinator::metrics::Metrics {
+        super::metrics::merged_metrics(&self.shards)
+    }
+
+    /// The cluster registry: each shard's metrics under its `shard`
+    /// label plus the merged whole under `shard="all"`, combined with
+    /// [`Registry::merge`] rather than hand-written field sums.
+    pub fn registry(&self) -> Registry {
+        super::metrics::registry_from_reports(&self.shards)
+    }
+
     pub fn render(&self) -> String {
         self.metrics().render(self.rebalance_threshold)
     }
@@ -165,6 +185,20 @@ impl ClusterServer {
         draft: Option<Arc<QuantModel>>,
         cfg: ClusterConfig,
     ) -> ClusterServer {
+        ClusterServer::spawn_with_telemetry(model, draft, cfg, None)
+    }
+
+    /// Spawn with a shared per-request trace sink: every shard writes
+    /// lifecycle span events into `trace`, stamped with its shard
+    /// index (the Chrome trace `pid`), so one
+    /// [`TraceBuffer::to_chrome_json`] export covers the whole
+    /// cluster — including requests that migrate between shards.
+    pub fn spawn_with_telemetry(
+        model: impl Into<Arc<QuantModel>>,
+        draft: Option<Arc<QuantModel>>,
+        cfg: ClusterConfig,
+        trace: Option<Arc<TraceBuffer>>,
+    ) -> ClusterServer {
         assert!(cfg.shards >= 1, "cluster needs at least one shard");
         let model: Arc<QuantModel> = model.into();
         let state = Arc::new(Mutex::new(RouterInner {
@@ -181,6 +215,7 @@ impl ClusterServer {
                     submitted: 0,
                     completed: 0,
                     generated_tokens: 0,
+                    stage_times: StageTimes::default(),
                 })
                 .collect(),
             inflight: BTreeMap::new(),
@@ -198,12 +233,13 @@ impl ClusterServer {
                 let st = Arc::clone(&state);
                 let tx = done_tx.clone();
                 let etx = events.producer();
-                ShardEngine::spawn(
+                ShardEngine::spawn_with_trace(
                     i,
                     Arc::clone(&model),
                     draft.clone(),
                     cfg.serve.clone(),
                     thread_cap,
+                    trace.clone(),
                     move |idx, pulse: StepPulse| {
                         let mut s = st.lock().unwrap();
                         s.shards[idx].occupancy = pulse.occupancy;
@@ -213,6 +249,7 @@ impl ClusterServer {
                         s.shards[idx].prefix_hits = pulse.prefix_hits;
                         s.shards[idx].reused_tokens = pulse.reused_tokens;
                         s.shards[idx].preemptions = pulse.preemptions;
+                        s.shards[idx].stage_times.merge(&pulse.stage_times);
                         // Accounting before forwarding: a client that
                         // just saw a Finished event reads live state
                         // that already excludes its request.
@@ -386,6 +423,14 @@ impl ClusterServer {
             })
             .collect();
         ClusterMetrics { shards, elapsed_s: self.started.elapsed().as_secs_f64() }
+    }
+
+    /// Live per-shard stage-time sums accumulated from step pulses
+    /// (index = shard; all zeros unless [`crate::obs::set_timing`] is
+    /// on). The final per-stage *histograms* come with the shard
+    /// reports at shutdown.
+    pub fn live_stage_times(&self) -> Vec<StageTimes> {
+        self.state.lock().unwrap().shards.iter().map(|sh| sh.stage_times).collect()
     }
 
     /// Actuate the rebalance signal: when the live committed-fill skew

@@ -24,8 +24,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, RequestId, Response, TokenEvent};
 use crate::coordinator::scheduler::{drive, Engine, LoopMsg, StepLoop};
 use crate::model::quantized::QuantModel;
+use crate::obs::{timing_enabled, StageTimes, TraceBuffer};
 use crate::spec::SpecStats;
 use crate::util::threadpool::with_thread_cap;
+use std::time::Instant;
 
 /// What a shard publishes after every scheduling step (and for
 /// submit-time completions that never see a step).
@@ -41,6 +43,11 @@ pub struct StepPulse {
     pub reused_tokens: u64,
     /// Cumulative low-priority preemptions.
     pub preemptions: u64,
+    /// This step's stage-time accumulator (all zeros unless
+    /// [`crate::obs::set_timing`] is on) — the router merges these
+    /// into live cluster-wide stage stats without waiting for the
+    /// shard's final report.
+    pub stage_times: StageTimes,
     /// Token events emitted by this step, in order.
     pub events: Vec<TokenEvent>,
     /// Responses completed by this step.
@@ -75,6 +82,21 @@ impl ShardEngine {
         draft: Option<Arc<QuantModel>>,
         config: ServeConfig,
         thread_cap: usize,
+        on_step: impl FnMut(usize, StepPulse) + Send + 'static,
+    ) -> ShardEngine {
+        ShardEngine::spawn_with_trace(index, model, draft, config, thread_cap, None, on_step)
+    }
+
+    /// [`ShardEngine::spawn`] with an optional shared trace sink: all
+    /// shards write into the same [`TraceBuffer`], each stamping its
+    /// shard index (the Chrome trace `pid`) on its events.
+    pub fn spawn_with_trace(
+        index: usize,
+        model: Arc<QuantModel>,
+        draft: Option<Arc<QuantModel>>,
+        config: ServeConfig,
+        thread_cap: usize,
+        trace: Option<Arc<TraceBuffer>>,
         mut on_step: impl FnMut(usize, StepPulse) + Send + 'static,
     ) -> ShardEngine {
         let (tx, rx) = mpsc::channel::<LoopMsg>();
@@ -82,21 +104,27 @@ impl ShardEngine {
             .name(format!("qrazor-shard-{index}"))
             .spawn(move || {
                 with_thread_cap(thread_cap, move || {
-                    let mut engine =
-                        drive(Engine::with_draft(model, draft, config), rx, |e, done| {
-                            on_step(
-                                index,
-                                StepPulse {
-                                    occupancy: StepLoop::occupancy(e),
-                                    spec: e.metrics.spec,
-                                    prefix_hits: e.metrics.prefix_hits,
-                                    reused_tokens: e.metrics.reused_tokens,
-                                    preemptions: e.metrics.preemptions,
-                                    events: e.take_events(),
-                                    done,
-                                },
-                            )
-                        });
+                    let mut engine = Engine::with_draft(model, draft, config);
+                    if let Some(buf) = trace {
+                        engine.set_trace(buf, index as u32);
+                    }
+                    let mut engine = drive(engine, rx, |e, done| {
+                        let publish = timing_enabled().then(Instant::now);
+                        let pulse = StepPulse {
+                            occupancy: StepLoop::occupancy(e),
+                            spec: e.metrics.spec,
+                            prefix_hits: e.metrics.prefix_hits,
+                            reused_tokens: e.metrics.reused_tokens,
+                            preemptions: e.metrics.preemptions,
+                            stage_times: e.last_step_stages,
+                            events: e.take_events(),
+                            done,
+                        };
+                        on_step(index, pulse);
+                        if let Some(t0) = publish {
+                            e.note_publish(t0.elapsed());
+                        }
+                    });
                     ShardReport {
                         index,
                         metrics: std::mem::take(&mut engine.metrics),

@@ -36,6 +36,7 @@ use std::time::Instant;
 
 use crate::coordinator::kv::PoolOccupancy;
 use crate::coordinator::request::{RequestId, Response, Sampling, SubmitOptions, TokenEvent};
+use crate::obs::Registry;
 use crate::spec::SpecStats;
 
 /// Live metrics snapshot of a serving front-end — the cross-engine
@@ -74,6 +75,26 @@ impl ServeStats {
     /// Requests submitted but not yet finished.
     pub fn in_flight(&self) -> u64 {
         self.requests_submitted.saturating_sub(self.requests_completed)
+    }
+
+    /// Export the live snapshot into a registry under `labels` — the
+    /// same metric names as [`crate::coordinator::Metrics::export`]
+    /// plus the live-only figures (in-flight, occupancy gauges, event
+    /// drops), so a dashboard can scrape a running surface and the
+    /// final report with one schema.
+    pub fn export(&self, reg: &mut Registry, labels: &[(&str, &str)]) {
+        reg.counter("qrazor_requests_submitted", labels, self.requests_submitted);
+        reg.counter("qrazor_requests_completed", labels, self.requests_completed);
+        reg.counter("qrazor_generated_tokens", labels, self.generated_tokens);
+        reg.counter("qrazor_events_dropped", labels, self.events_dropped);
+        reg.counter("qrazor_prefix_hits", labels, self.prefix_hits);
+        reg.counter("qrazor_prefix_reused_tokens", labels, self.reused_tokens);
+        reg.counter("qrazor_preemptions", labels, self.preemptions);
+        reg.counter("qrazor_spec_rounds", labels, self.spec.steps);
+        reg.gauge("qrazor_shards", labels, self.shards as f64);
+        reg.gauge("qrazor_in_flight", labels, self.in_flight() as f64);
+        reg.gauge("qrazor_kv_bytes_peak", labels, self.kv_bytes_peak as f64);
+        self.occupancy.export(reg, labels);
     }
 }
 

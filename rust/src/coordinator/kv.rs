@@ -32,6 +32,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::request::RequestId;
 use crate::model::quantized::{DecodeCache, QuantModel};
+use crate::obs::Registry;
 
 /// Byte-exact snapshot of one pool's occupancy — the per-shard unit
 /// the cluster layer aggregates and the rebalance signal compares.
@@ -68,6 +69,21 @@ impl PoolOccupancy {
         } else {
             self.reserved_tokens as f64 / self.capacity_tokens as f64
         }
+    }
+
+    /// Export as `qrazor_kv_*` registry gauges. Every figure here is
+    /// additive across pools, so [`Registry::merge`] (gauges add)
+    /// yields the correct cluster-wide totals.
+    pub fn export(&self, reg: &mut Registry, labels: &[(&str, &str)]) {
+        reg.gauge("qrazor_kv_capacity_tokens", labels, self.capacity_tokens as f64);
+        reg.gauge("qrazor_kv_reserved_tokens", labels, self.reserved_tokens as f64);
+        reg.gauge("qrazor_kv_live_sequences", labels, self.live_sequences as f64);
+        reg.gauge("qrazor_kv_bytes", labels, self.bytes as f64);
+        reg.gauge("qrazor_kv_unpacked_bytes", labels, self.unpacked_bytes as f64);
+        reg.gauge("qrazor_kv_capacity_pages", labels, self.capacity_pages as f64);
+        reg.gauge("qrazor_kv_resident_pages", labels, self.resident_pages as f64);
+        reg.gauge("qrazor_kv_shared_pages", labels, self.shared_pages as f64);
+        reg.gauge("qrazor_kv_evicted_pages", labels, self.evicted_pages as f64);
     }
 }
 

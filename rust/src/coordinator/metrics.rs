@@ -1,9 +1,14 @@
 //! Serving metrics: request counts, token throughput, TTFT/latency
-//! percentiles, KV memory high-water mark. Rendered as text by the CLI
-//! and dumped as JSON by the benches.
+//! percentiles, KV memory high-water mark, and per-stage step-latency
+//! histograms. Rendered as text by the CLI, dumped as JSON by the
+//! benches, and projected into the central [`crate::obs::Registry`]
+//! ([`Metrics::to_registry`]) for the Prometheus/JSON exposition
+//! surfaces — cluster aggregation merges those registries instead of
+//! summing fields by hand.
 
 use std::time::Instant;
 
+use crate::obs::{Registry, StageHists};
 use crate::spec::SpecStats;
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
@@ -36,6 +41,9 @@ pub struct Metrics {
     /// Running sequences preempted to make room for strictly
     /// higher-priority queued work.
     pub preemptions: u64,
+    /// Per-stage step-latency histograms (one sample per stage per
+    /// scheduler step; empty until [`crate::obs::set_timing`] is on).
+    pub stages: StageHists,
 }
 
 impl Default for Metrics {
@@ -55,6 +63,7 @@ impl Default for Metrics {
             prefix_hits: 0,
             reused_tokens: 0,
             preemptions: 0,
+            stages: StageHists::default(),
         }
     }
 }
@@ -139,7 +148,11 @@ impl Metrics {
             ("scheduler_steps", Json::from(self.scheduler_steps as usize)),
             ("tokens_per_s", Json::from(self.tokens_per_s())),
             ("ttft_p50_ms", Json::from(self.ttft.pct(50.0) * 1e3)),
+            ("ttft_p95_ms", Json::from(self.ttft.pct(95.0) * 1e3)),
+            ("ttft_p99_ms", Json::from(self.ttft.pct(99.0) * 1e3)),
             ("latency_p50_ms", Json::from(self.latency.pct(50.0) * 1e3)),
+            ("latency_p95_ms", Json::from(self.latency.pct(95.0) * 1e3)),
+            ("latency_p99_ms", Json::from(self.latency.pct(99.0) * 1e3)),
             ("kv_bytes_peak", Json::from(self.kv_bytes_peak)),
             ("kv_bytes_unpacked_peak", Json::from(self.kv_bytes_unpacked_peak)),
             ("spec_rounds", Json::from(self.spec.steps as usize)),
@@ -151,6 +164,65 @@ impl Metrics {
             ("reused_tokens", Json::from(self.reused_tokens as usize)),
             ("preemptions", Json::from(self.preemptions as usize)),
         ])
+    }
+
+    /// Project into the central registry under `labels` (e.g.
+    /// `[("shard", "0")]`). This is the one mapping from the legacy
+    /// field struct to canonical metric names; the cluster merges the
+    /// per-shard registries with [`Registry::merge`], and the
+    /// telemetry suite pins registry ≡ JSON ≡ fields consistency.
+    pub fn export(&self, reg: &mut Registry, labels: &[(&str, &str)]) {
+        reg.counter("qrazor_requests_submitted", labels, self.requests_submitted);
+        reg.counter("qrazor_requests_completed", labels, self.requests_completed);
+        reg.counter("qrazor_prompt_tokens", labels, self.prompt_tokens);
+        reg.counter("qrazor_generated_tokens", labels, self.generated_tokens);
+        reg.counter("qrazor_scheduler_steps", labels, self.scheduler_steps);
+        reg.counter("qrazor_prefix_hits", labels, self.prefix_hits);
+        reg.counter("qrazor_prefix_reused_tokens", labels, self.reused_tokens);
+        reg.counter("qrazor_preemptions", labels, self.preemptions);
+        reg.counter("qrazor_spec_rounds", labels, self.spec.steps);
+        reg.counter("qrazor_spec_drafted", labels, self.spec.drafted);
+        reg.counter("qrazor_spec_accepted", labels, self.spec.accepted);
+        reg.counter("qrazor_spec_rejected", labels, self.spec.rejected);
+        reg.gauge("qrazor_kv_bytes_peak", labels, self.kv_bytes_peak as f64);
+        reg.gauge(
+            "qrazor_kv_bytes_unpacked_peak",
+            labels,
+            self.kv_bytes_unpacked_peak as f64,
+        );
+        // Latency trackers are histogram-backed; exported in seconds
+        // (Prometheus convention), no re-bucketing needed.
+        reg.record_hist("qrazor_ttft_seconds", labels, self.ttft.histogram());
+        reg.record_hist("qrazor_latency_seconds", labels, self.latency.histogram());
+        self.stages.export(reg, labels);
+    }
+
+    /// Fresh registry holding just this engine's metrics.
+    pub fn to_registry(&self, labels: &[(&str, &str)]) -> Registry {
+        let mut reg = Registry::new();
+        self.export(&mut reg, labels);
+        reg
+    }
+
+    /// Fold another engine's metrics in (histograms bucket-merge,
+    /// counters add, KV peaks take maxima) — used for merged cluster
+    /// views alongside the registry merge.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_submitted += other.requests_submitted;
+        self.requests_completed += other.requests_completed;
+        self.prompt_tokens += other.prompt_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.scheduler_steps += other.scheduler_steps;
+        self.ttft.merge(&other.ttft);
+        self.latency.merge(&other.latency);
+        self.kv_bytes_peak = self.kv_bytes_peak.max(other.kv_bytes_peak);
+        self.kv_bytes_unpacked_peak =
+            self.kv_bytes_unpacked_peak.max(other.kv_bytes_unpacked_peak);
+        self.spec.merge(&other.spec);
+        self.prefix_hits += other.prefix_hits;
+        self.reused_tokens += other.reused_tokens;
+        self.preemptions += other.preemptions;
+        self.stages.merge(&other.stages);
     }
 }
 
@@ -194,5 +266,66 @@ mod tests {
         let m = Metrics::new();
         let j = m.to_json().to_string();
         assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn json_carries_percentile_tails() {
+        let mut m = Metrics::new();
+        for i in 1..=50 {
+            m.ttft.push(i as f64 * 0.001);
+            m.latency.push(i as f64 * 0.0004);
+        }
+        let j = m.to_json();
+        for key in [
+            "ttft_p50_ms",
+            "ttft_p95_ms",
+            "ttft_p99_ms",
+            "latency_p50_ms",
+            "latency_p95_ms",
+            "latency_p99_ms",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        // Tails dominate the median on increasing data.
+        let p50 = j.get("ttft_p50_ms").unwrap().as_f64().unwrap();
+        let p99 = j.get("ttft_p99_ms").unwrap().as_f64().unwrap();
+        assert!(p99 > p50, "p99 {p99} should exceed p50 {p50}");
+    }
+
+    #[test]
+    fn registry_export_matches_fields() {
+        let mut m = Metrics::new();
+        m.requests_submitted = 5;
+        m.requests_completed = 4;
+        m.generated_tokens = 99;
+        m.prefix_hits = 2;
+        m.ttft.push(0.01);
+        m.observe_kv_traffic(2048, 8192);
+        let reg = m.to_registry(&[("shard", "0")]);
+        let sh = [("shard", "0")];
+        assert_eq!(reg.counter_value("qrazor_requests_submitted", &sh), 5);
+        assert_eq!(reg.counter_value("qrazor_requests_completed", &sh), 4);
+        assert_eq!(reg.counter_value("qrazor_generated_tokens", &sh), 99);
+        assert_eq!(reg.counter_value("qrazor_prefix_hits", &sh), 2);
+        assert_eq!(reg.gauge_value("qrazor_kv_bytes_peak", &sh), 2048.0);
+        assert_eq!(reg.hist("qrazor_ttft_seconds", &sh).unwrap().len(), 1);
+        let text = reg.render_prometheus();
+        assert!(text.contains("qrazor_requests_submitted{shard=\"0\"} 5"), "{text}");
+    }
+
+    #[test]
+    fn merge_folds_counters_and_latency() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.requests_completed = 1;
+        b.requests_completed = 2;
+        a.ttft.push(0.01);
+        b.ttft.push(0.02);
+        a.kv_bytes_peak = 100;
+        b.kv_bytes_peak = 300;
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 3);
+        assert_eq!(a.ttft.len(), 2);
+        assert_eq!(a.kv_bytes_peak, 300);
     }
 }

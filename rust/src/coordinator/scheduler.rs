@@ -28,6 +28,7 @@ use crate::coordinator::request::{
     FinishReason, Request, RequestId, Response, Sampling, TokenEvent,
 };
 use crate::model::quantized::{DecodeCache, QuantModel};
+use crate::obs::{Stage, StageSpan, StageTimes, TraceBuffer, TraceHandle};
 use crate::spec::{QuantLm, SpecDecoder, SpecStats};
 use crate::tensor::argmax;
 use crate::util::rng::Rng;
@@ -88,6 +89,15 @@ pub struct Engine {
     /// (one token per plain step, a whole accepted prefix per
     /// speculative round), `Finished` with the response.
     events: Vec<TokenEvent>,
+    /// Per-request trace sink (None = tracing off, zero overhead).
+    /// Installed with [`Engine::set_trace`]; cluster shards share one
+    /// buffer and stamp their shard index on every event.
+    trace: Option<TraceHandle>,
+    /// Stage-time accumulator of the most recent [`Engine::step`] —
+    /// all zeros unless [`crate::obs::set_timing`] is on. Cluster
+    /// shards copy it into each `StepPulse` so the router can merge
+    /// per-stage latency live.
+    pub last_step_stages: StageTimes,
 }
 
 impl Engine {
@@ -118,10 +128,18 @@ impl Engine {
             next_id: 0,
             done: Vec::new(),
             events: Vec::new(),
+            trace: None,
+            last_step_stages: StageTimes::default(),
             metrics: Metrics::new(),
             model,
             config,
         }
+    }
+
+    /// Install a per-request trace sink; events this engine emits are
+    /// stamped with `shard` (0 for a single-engine server).
+    pub fn set_trace(&mut self, buf: Arc<TraceBuffer>, shard: u32) {
+        self.trace = Some(TraceHandle::new(buf, shard));
     }
 
     /// Speculative rounds enabled?
@@ -150,6 +168,10 @@ impl Engine {
         self.next_id = self.next_id.max(req.id.0 + 1);
         self.metrics.requests_submitted += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
+        if let Some(t) = &self.trace {
+            t.begin(req.id.0, "request");
+            t.begin(req.id.0, "queued");
+        }
         // A request that could never be admitted — empty prompt, a
         // prompt longer than the per-step prefill budget, or a total
         // need beyond the whole pool — must not enter the queue: it
@@ -171,6 +193,16 @@ impl Engine {
     /// event, no pool state to release, no latency sample.
     fn complete_unstarted(&mut self, req: Request, finish: FinishReason) {
         self.metrics.requests_completed += 1;
+        if let Some(t) = &self.trace {
+            let why = match finish {
+                FinishReason::Cancelled => "cancelled",
+                FinishReason::Expired => "expired",
+                _ => "rejected",
+            };
+            t.instant(req.id.0, why, Vec::new());
+            t.end(req.id.0, "queued");
+            t.end(req.id.0, "request");
+        }
         // A preempted continuation that dies in the queue still owes
         // the caller the tokens its first life streamed.
         let (prompt_len, tokens, first) = match self.preempted.remove(&req.id) {
@@ -205,6 +237,11 @@ impl Engine {
         self.pool.release(id);
         self.draft_pool.release(id); // no-op without a draft cache
         self.metrics.requests_completed += 1;
+        if let Some(t) = &self.trace {
+            t.instant(id.0, "cancelled", Vec::new());
+            t.end(id.0, "decode");
+            t.end(id.0, "request");
+        }
         let (prompt_len, mut tokens, first) = match self.preempted.remove(&id) {
             Some(s) => (s.prompt_len, s.tokens, s.first_token_at.or(a.first_token_at)),
             None => (a.req.prompt.len(), Vec::new(), a.first_token_at),
@@ -243,15 +280,21 @@ impl Engine {
     pub fn step(&mut self) -> usize {
         self.metrics.scheduler_steps += 1;
         let spec_on = self.speculative();
+        // Per-step stage accounting: all spans are no-ops (no clock
+        // read, no allocation) unless `obs::set_timing` is on.
+        let mut st = StageTimes::default();
         // 0. deadline sweep: still-queued requests whose admission
         // deadline has passed finish as expired instead of holding the
         // queue (running requests are never expired).
+        let sweep = StageSpan::begin();
         for req in self.batcher.take_expired(Instant::now()) {
             self.complete_unstarted(req, FinishReason::Expired);
         }
+        sweep.finish(Stage::ExpirySweep, &mut st);
         // 1. admit + prefill
         let pool = &mut self.pool;
         let model = &self.model;
+        let admit_span = StageSpan::begin();
         let admitted = {
             let active = self.active.len();
             // tentative accounting: the pool only reserves after the
@@ -263,9 +306,13 @@ impl Engine {
             // gains entries, so the real reservation can only shrink.
             let mut tentative = pool.reserved_pages();
             let capacity = pool.capacity_pages();
+            let probe_times = &mut st;
             self.batcher.admit(active, |r| {
                 let prefill = r.prompt.len().saturating_sub(1);
+                // the prefix-index probe inside batch formation
+                let probe = StageSpan::begin();
                 let pages = pool.needed_pages(&r.prompt[..prefill], r.need_tokens());
+                probe.finish(Stage::PrefixProbe, probe_times);
                 if tentative + pages <= capacity {
                     tentative += pages;
                     true
@@ -274,6 +321,7 @@ impl Engine {
                 }
             })
         };
+        admit_span.finish(Stage::Admission, &mut st);
         for req in admitted {
             let prompt = &req.prompt;
             assert!(!prompt.is_empty(), "empty prompt");
@@ -282,18 +330,35 @@ impl Engine {
             // comes back already holding the longest indexed prefix of
             // the prompt (full pages shared copy-on-write), and fully
             // shared pages are not reserved again.
+            let kv_admit = StageSpan::begin();
             let reuse = pool
                 .admit_with_prefix(req.id, &prompt[..prefill_len], req.need_tokens(), model)
                 .expect("batcher admitted beyond pool capacity");
+            kv_admit.finish(Stage::KvAdmit, &mut st);
             if reuse > 0 {
                 self.metrics.prefix_hits += 1;
                 self.metrics.reused_tokens += reuse as u64;
             }
+            if let Some(t) = &self.trace {
+                t.end(req.id.0, "queued");
+                t.instant(
+                    req.id.0,
+                    "admitted",
+                    vec![
+                        ("prefix_hit", (reuse > 0).to_string()),
+                        ("reused_tokens", reuse.to_string()),
+                    ],
+                );
+            }
+            let prefill_span = StageSpan::begin();
             let mut cache = pool.take(req.id);
             // prefill: one packed chunk over the not-yet-cached prompt
             // tokens except the last (which becomes the first decode
             // input) — the multi-query attention path, bit-identical
             // to the old token loop and to a cold full prefill.
+            if let Some(t) = &self.trace {
+                t.begin(req.id.0, "prefill");
+            }
             if prefill_len > reuse {
                 model.forward_chunk(&prompt[reuse..prefill_len], reuse, &mut cache);
             }
@@ -315,6 +380,11 @@ impl Engine {
                 self.draft_pool.note_prefix(&prompt[..prefill_len], &dcache);
                 self.draft_pool.put_back(req.id, dcache);
             }
+            if let Some(t) = &self.trace {
+                t.end(req.id.0, "prefill");
+                t.begin(req.id.0, "decode");
+            }
+            prefill_span.finish(Stage::Prefill, &mut st);
             let next_token = *prompt.last().unwrap();
             let pos = prompt.len() - 1;
             // a preempted continuation already announced itself in its
@@ -332,7 +402,9 @@ impl Engine {
         // the request now at the head of the queue, evict the
         // lowest-priority running sequence (strictly below the waiting
         // request's class) and requeue its continuation.
+        let preempt_span = StageSpan::begin();
         self.maybe_preempt();
+        preempt_span.finish(Stage::Preempt, &mut st);
 
         // 2. decode: one quantum per active sequence, in parallel — a
         // single token, or a speculative draft→verify→accept round
@@ -340,6 +412,8 @@ impl Engine {
         // attached and the request decodes greedily.
         let ids: Vec<RequestId> = self.active.keys().copied().collect();
         if ids.is_empty() {
+            self.metrics.stages.observe_step(&st);
+            self.last_step_stages = st;
             return 0;
         }
         enum Job {
@@ -350,6 +424,7 @@ impl Engine {
             Plain { logits: Vec<f32>, cache: DecodeCache },
             Spec { toks: Vec<u32>, verify: DecodeCache, draft: DecodeCache, stats: SpecStats },
         }
+        let decode_span = StageSpan::begin();
         let jobs: Vec<Job> = ids
             .iter()
             .map(|&id| {
@@ -401,7 +476,9 @@ impl Engine {
                 }
             })
         };
+        decode_span.finish(Stage::Decode, &mut st);
 
+        let commit_span = StageSpan::begin();
         let mut generated = 0usize;
         for (id, done) in ids.iter().zip(results) {
             let committed: Vec<u32> = match done {
@@ -414,6 +491,16 @@ impl Engine {
                     self.pool.put_back(*id, verify);
                     self.draft_pool.put_back(*id, draft);
                     self.metrics.observe_spec(&stats);
+                    if let Some(t) = &self.trace {
+                        t.instant(
+                            id.0,
+                            "spec_round",
+                            vec![
+                                ("drafted", stats.drafted.to_string()),
+                                ("accepted", stats.accepted.to_string()),
+                            ],
+                        );
+                    }
                     toks
                 }
             };
@@ -444,6 +531,9 @@ impl Engine {
             // request's Token payloads reproduces its Response.tokens
             // exactly.
             if !appended.is_empty() {
+                if let Some(t) = &self.trace {
+                    t.instant(id.0, "tokens", vec![("count", appended.len().to_string())]);
+                }
                 self.events.push(TokenEvent::Token {
                     id: *id,
                     tokens: appended,
@@ -462,8 +552,10 @@ impl Engine {
             self.pool.bytes() + self.draft_pool.bytes(),
             self.pool.unpacked_bytes() + self.draft_pool.unpacked_bytes(),
         );
+        commit_span.finish(Stage::Commit, &mut st);
 
         // 3. retire finished sequences
+        let retire_span = StageSpan::begin();
         let finished: Vec<RequestId> = self
             .active
             .iter()
@@ -491,6 +583,15 @@ impl Engine {
             } else {
                 FinishReason::Length
             };
+            if let Some(t) = &self.trace {
+                let why = match finish {
+                    FinishReason::StopToken => "stop_token",
+                    _ => "length",
+                };
+                t.end(id.0, "decode");
+                t.instant(id.0, "finished", vec![("reason", why.to_string())]);
+                t.end(id.0, "request");
+            }
             self.metrics.requests_completed += 1;
             self.metrics.ttft.push(ttft);
             self.metrics
@@ -507,12 +608,17 @@ impl Engine {
             self.events.push(TokenEvent::Finished { id, response: resp.clone() });
             self.done.push(resp);
         }
+        retire_span.finish(Stage::Retire, &mut st);
 
         // 4. bound residency: finished sequences may leave the prefix
         // index holding more pages than the pool's capacity; drop the
         // least-recently-used snapshots until it fits again.
+        let evict_span = StageSpan::begin();
         self.pool.evict_to_capacity();
         self.draft_pool.evict_to_capacity();
+        evict_span.finish(Stage::KvEvict, &mut st);
+        self.metrics.stages.observe_step(&st);
+        self.last_step_stages = st;
         generated
     }
 
@@ -557,6 +663,14 @@ impl Engine {
         self.pool.release(id);
         self.draft_pool.release(id); // no-op without a draft cache
         self.metrics.preemptions += 1;
+        // the continuation goes back to waiting: close this life's
+        // decode span and re-open "queued" so the span tree stays
+        // balanced through any number of preemption round-trips
+        if let Some(t) = &self.trace {
+            t.end(id.0, "decode");
+            t.instant(id.0, "preempted", Vec::new());
+            t.begin(id.0, "queued");
+        }
         let mut req = a.req;
         let state = self.preempted.entry(id).or_insert_with(|| PreemptState {
             prompt_len: req.prompt.len(),
@@ -621,6 +735,17 @@ impl Engine {
         self.metrics.requests_submitted -= drained.len() as u64;
         self.metrics.prompt_tokens -=
             drained.iter().map(|r| r.prompt.len() as u64).sum::<u64>();
+        // the receiving shard re-opens "queued"/"request" on requeue;
+        // close them here so per-(request, span) balance survives the
+        // cross-shard hand-off (the trace keys on request id, and the
+        // shard only affects the event's pid).
+        if let Some(t) = &self.trace {
+            for r in &drained {
+                t.instant(r.id.0, "drained", Vec::new());
+                t.end(r.id.0, "queued");
+                t.end(r.id.0, "request");
+            }
+        }
         drained
     }
 
@@ -630,7 +755,21 @@ impl Engine {
         self.next_id = self.next_id.max(req.id.0 + 1);
         self.metrics.requests_submitted += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
+        if let Some(t) = &self.trace {
+            t.begin(req.id.0, "request");
+            t.begin(req.id.0, "queued");
+        }
         self.batcher.push_front(req);
+    }
+
+    /// Fold event-publish time into the stage histograms. The publish
+    /// fan-out happens in the worker loop *after* `step()` folded its
+    /// own accumulator, so the loop measures it and hands it back.
+    pub fn note_publish(&mut self, d: std::time::Duration) {
+        let mut t = StageTimes::default();
+        t.add(Stage::Publish, d);
+        self.metrics.stages.observe_step(&t);
+        self.last_step_stages.merge(&t);
     }
 }
 
@@ -670,6 +809,12 @@ pub trait StepLoop: Send {
     fn requeue_front(&mut self, req: Request) {
         self.submit_request(req);
     }
+    /// Fold event-publish time (measured by the worker loop, which
+    /// fans events out after the step) into the loop's stage
+    /// accounting. Loops without stage metrics ignore it.
+    fn note_publish(&mut self, d: std::time::Duration) {
+        let _ = d;
+    }
 }
 
 impl StepLoop for Engine {
@@ -699,6 +844,9 @@ impl StepLoop for Engine {
     }
     fn requeue_front(&mut self, req: Request) {
         Engine::requeue_front(self, req)
+    }
+    fn note_publish(&mut self, d: std::time::Duration) {
+        Engine::note_publish(self, d)
     }
 }
 

@@ -16,12 +16,15 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::config::ServeConfig;
 use crate::coordinator::api::{EventHub, ServeApi, ServeStats};
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, RequestId, Response, SubmitOptions, TokenEvent};
 use crate::coordinator::scheduler::{drive, Engine, LoopMsg, StepLoop};
 use crate::model::quantized::QuantModel;
+use crate::obs::{timing_enabled, TraceBuffer};
 
 /// Handle to a running server.
 pub struct Server {
@@ -31,7 +34,7 @@ pub struct Server {
     stats: Arc<Mutex<ServeStats>>,
     next_id: AtomicU64,
     max_new_tokens: usize,
-    worker: Option<JoinHandle<String>>,
+    worker: Option<JoinHandle<Metrics>>,
 }
 
 impl Server {
@@ -49,6 +52,20 @@ impl Server {
         draft: Option<Arc<QuantModel>>,
         config: ServeConfig,
     ) -> Server {
+        Server::spawn_with_telemetry(model, draft, config, None)
+    }
+
+    /// Spawn with a per-request trace sink installed on the engine
+    /// (shard 0): every request lifecycle lands in `trace` as span
+    /// events, exportable as Chrome trace JSON
+    /// ([`TraceBuffer::to_chrome_json`]). `None` = tracing off (the
+    /// engine skips the emit entirely).
+    pub fn spawn_with_telemetry(
+        model: impl Into<Arc<QuantModel>>,
+        draft: Option<Arc<QuantModel>>,
+        config: ServeConfig,
+        trace: Option<Arc<TraceBuffer>>,
+    ) -> Server {
         let model: Arc<QuantModel> = model.into();
         let (tx, rx) = mpsc::channel::<LoopMsg>();
         let (done_tx, done_rx) = mpsc::channel::<Response>();
@@ -61,7 +78,14 @@ impl Server {
         let shared = Arc::clone(&stats);
         let max_new_tokens = config.max_new_tokens;
         let worker = std::thread::spawn(move || {
-            let engine = drive(Engine::with_draft(model, draft, config), rx, move |e, done| {
+            let mut engine = Engine::with_draft(model, draft, config);
+            if let Some(buf) = trace {
+                engine.set_trace(buf, 0);
+            }
+            let engine = drive(engine, rx, move |e, done| {
+                // Publish = everything the worker does between steps:
+                // stats snapshot + event fan-out + completion sends.
+                let publish = timing_enabled().then(Instant::now);
                 // Stats first: a client that just saw a Finished event
                 // reads a snapshot that already includes its request.
                 {
@@ -82,8 +106,11 @@ impl Server {
                 for r in done {
                     let _ = done_tx.send(r);
                 }
+                if let Some(t0) = publish {
+                    e.note_publish(t0.elapsed());
+                }
             });
-            engine.metrics.render()
+            engine.metrics
         });
         Server {
             tx,
@@ -107,12 +134,18 @@ impl Server {
 
     /// Shut down, finishing in-flight requests; returns the metrics
     /// summary line.
-    pub fn shutdown(mut self) -> String {
+    pub fn shutdown(self) -> String {
+        self.shutdown_with_metrics()
+            .map(|m| m.render())
+            .unwrap_or_else(|| "worker panicked".into())
+    }
+
+    /// Shut down, returning the engine's final [`Metrics`] (`None` if
+    /// the worker panicked) — the registry-export path:
+    /// `metrics.to_registry(&[("shard", "0")])`.
+    pub fn shutdown_with_metrics(mut self) -> Option<Metrics> {
         let _ = self.tx.send(LoopMsg::Shutdown);
-        self.worker
-            .take()
-            .map(|w| w.join().unwrap_or_else(|_| "worker panicked".into()))
-            .unwrap_or_default()
+        self.worker.take().and_then(|w| w.join().ok())
     }
 }
 

@@ -34,6 +34,11 @@
 //!   multi-worker serving with per-shard packed KV pools, placement
 //!   policies, rebalance actuation, and cluster-wide metrics
 //!   aggregation.
+//! * [`obs`] — unified telemetry: the metric [`obs::Registry`]
+//!   (counters/gauges/mergeable log-bucketed histograms, Prometheus
+//!   text + JSON snapshot), scheduler step-stage timing, and the
+//!   per-request [`obs::TraceBuffer`] exporting Chrome trace_event
+//!   JSON for Perfetto.
 //! * [`util`] / [`tensor`] — zero-dependency substrates.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index
@@ -47,6 +52,7 @@ pub mod data;
 pub mod eval;
 pub mod hw;
 pub mod model;
+pub mod obs;
 pub mod policy;
 pub mod quant;
 pub mod runtime;

@@ -69,6 +69,16 @@ fn cli() -> Cli {
             "serve: draft policy for speculative decoding (razored form of the target)",
         )
         .opt("draft-scheme", Some("w4a4kv4:16"), "legacy alias for --draft-policy")
+        .opt(
+            "metrics-json",
+            Some(""),
+            "serve: write the merged metric registry as JSON to this path (enables stage timing)",
+        )
+        .opt(
+            "trace-out",
+            Some(""),
+            "serve: write a Chrome trace_event JSON (Perfetto-loadable) to this path",
+        )
         .flag("quick", "use the quick evaluation scale")
 }
 
@@ -258,24 +268,69 @@ fn main() -> anyhow::Result<()> {
             let priority_name = args.get_str("priority")?;
             let priority = Priority::parse(&priority_name)
                 .ok_or_else(|| anyhow::anyhow!("unknown priority '{priority_name}'"))?;
+            // Telemetry: --metrics-json turns on stage timing (one
+            // atomic flag; off, the spans never read the clock) and
+            // --trace-out allocates the shared trace ring.
+            let metrics_path = args.get_str("metrics-json")?;
+            let trace_path = args.get_str("trace-out")?;
+            if !metrics_path.is_empty() {
+                qrazor::obs::set_timing(true);
+            }
+            let trace = if trace_path.is_empty() {
+                None
+            } else {
+                Some(qrazor::obs::TraceBuffer::with_default_capacity())
+            };
+            let write_registry = |mut reg: qrazor::obs::Registry| -> anyhow::Result<()> {
+                if metrics_path.is_empty() {
+                    return Ok(());
+                }
+                qrazor::obs::export_hot(&mut reg);
+                std::fs::write(&metrics_path, reg.to_json().to_string())?;
+                println!("metrics registry -> {metrics_path}");
+                Ok(())
+            };
             // Both front-ends implement ServeApi, so the workload
             // driver is shared; only spawn + final report differ.
             if shards > 1 {
                 let placement_name = args.get_str("placement")?;
                 let placement = PlacementPolicy::parse(&placement_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown placement '{placement_name}'"))?;
-                let cluster = ClusterServer::spawn_with_draft(
+                let cluster = ClusterServer::spawn_with_telemetry(
                     qm,
                     draft,
                     ClusterConfig { shards, placement, serve: serve_cfg, ..Default::default() },
+                    trace.clone(),
                 );
                 let (done, dt) = run_serve(&cluster, prompts, max_new, priority)?;
                 let report = cluster.shutdown();
                 println!("served {done} requests in {dt:.2}s\n{}", report.render());
+                let merged = report.merged_metrics();
+                if !merged.stages.is_empty() {
+                    print!("{}", merged.stages.render_table("step-stage latency (all shards, ms)"));
+                }
+                write_registry(report.registry())?;
             } else {
-                let server = Server::spawn_with_draft(qm, draft, serve_cfg);
+                let server = Server::spawn_with_telemetry(qm, draft, serve_cfg, trace.clone());
                 let (done, dt) = run_serve(&server, prompts, max_new, priority)?;
-                println!("served {done} requests in {dt:.2}s\n{}", server.shutdown());
+                match server.shutdown_with_metrics() {
+                    Some(m) => {
+                        println!("served {done} requests in {dt:.2}s\n{}", m.render());
+                        if !m.stages.is_empty() {
+                            print!("{}", m.stages.render_table("step-stage latency (ms)"));
+                        }
+                        write_registry(m.to_registry(&[("shard", "0")]))?;
+                    }
+                    None => println!("served {done} requests in {dt:.2}s\nworker panicked"),
+                }
+            }
+            if let Some(buf) = &trace {
+                std::fs::write(&trace_path, buf.to_chrome_json().to_string())?;
+                println!(
+                    "chrome trace ({} events, {} dropped) -> {trace_path}",
+                    buf.events().len(),
+                    buf.dropped()
+                );
             }
         }
         Some("hw-report") => {

@@ -442,6 +442,10 @@ impl SdrKvCache {
         if n_q == 0 {
             return ctx;
         }
+        // Hot-path timer: this kernel runs inside the parallel decode
+        // jobs, so it accumulates into the global HotStage atomics
+        // rather than the engine's per-step StageTimes.
+        let hot = crate::obs::HotSpan::begin();
         // horizon of the last chunk row = number of visible cached rows
         let max_t = start_pos + n_q;
         let rows = self.tokens(layer);
@@ -557,6 +561,7 @@ impl SdrKvCache {
                 }
             }
         }
+        hot.finish(crate::obs::HotStage::PackedAttention);
         ctx
     }
 

@@ -1,0 +1,57 @@
+//! Unified telemetry: one registry, step-stage timing, per-request
+//! traces.
+//!
+//! Three pieces, all zero-dependency and shared by the single-engine
+//! server, every cluster shard, the CLI, and the benches:
+//!
+//! * [`registry`] — [`Registry`]: named counters, gauges, and bounded
+//!   **mergeable log-bucketed histograms** ([`LogHistogram`], ~4.4%
+//!   one-bucket relative error, O(512) memory regardless of sample
+//!   count) keyed by metric name + static labels (`shard`, `stage`,
+//!   `phase`, …). Renders as Prometheus-style text
+//!   ([`Registry::render_prometheus`] — the future HTTP front-end's
+//!   `/metrics` body) and as a schema-stable JSON snapshot
+//!   ([`Registry::to_json`], validated by [`validate_registry_json`]).
+//!   `coordinator::Metrics` projects into it
+//!   (`Metrics::to_registry`), and cluster aggregation is
+//!   [`Registry::merge`] — counters add, gauges add, histograms
+//!   bucket-merge — instead of hand-written field sums.
+//! * [`timing`] — [`Stage`]-scoped timers over every phase of the
+//!   scheduler step (expiry sweep → admission (prefix probe, KV
+//!   admit) → prefill → decode → commit → preempt → retire → KV evict
+//!   → publish), accumulated per step in [`StageTimes`], folded into
+//!   per-stage [`StageHists`] inside `Metrics`, and carried per shard
+//!   through `StepPulse`. Phases inside the parallel decode jobs
+//!   (packed attention, speculative draft/verify) aggregate into
+//!   global [`HotStage`] atomics instead.
+//! * [`trace`] — [`TraceBuffer`]: a bounded drop-oldest ring of span
+//!   events per request lifecycle (submitted → queued → admitted →
+//!   prefill → decode → …), exported as Chrome `trace_event` JSON for
+//!   Perfetto. See the module doc for the span model.
+//!
+//! **Overhead contract.** All instrumentation is observe-only — it
+//! never reorders admissions, never perturbs token streams (the
+//! serve/paged-KV/policy equivalence suites run with it enabled).
+//! Disabled — timing off ([`set_timing`], the default) and no trace
+//! handle installed — the cost inside the step loop is a relaxed
+//! atomic load per stage boundary: no clock reads, no locks, and
+//! **zero heap allocations** (pinned by a counting-allocator test in
+//! `rust/tests/telemetry.rs`). Enabled, stage timing adds two
+//! `Instant` reads per stage per step, and tracing adds one mutex
+//! push per lifecycle event.
+
+pub mod registry;
+pub mod timing;
+pub mod trace;
+
+pub use registry::{
+    validate_registry_json, LogHistogram, Metric, MetricKey, Registry, HIST_BUCKETS,
+    REGISTRY_SCHEMA,
+};
+pub use timing::{
+    export_hot, hot_reset, hot_snapshot, set_timing, timing_enabled, HotSpan, HotStage,
+    Stage, StageHists, StageSpan, StageTimes, NHOT, NSTAGES,
+};
+pub use trace::{
+    unbalanced_spans, Phase, TraceBuffer, TraceEvent, TraceHandle, DEFAULT_TRACE_EVENTS,
+};

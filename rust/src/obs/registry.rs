@@ -1,0 +1,589 @@
+//! Metric registry: named counters, gauges, and mergeable
+//! log-bucketed histograms with static labels, rendered as
+//! Prometheus-style text or a JSON snapshot (`util::json`).
+//!
+//! The registry is the one machine-readable exposition surface for the
+//! serving stack: `coordinator::Metrics` and `cluster::ClusterMetrics`
+//! project into it (`Metrics::to_registry`), per-shard registries merge
+//! with [`Registry::merge`] (counters add, gauges add, histograms
+//! bucket-merge), and the CLI / benches snapshot it to disk
+//! (`--metrics-json`, `BENCH_*.json`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Number of log buckets a [`LogHistogram`] tracks. With [`SUB`]
+/// buckets per octave this spans `MIN_TRACKED * 2^(HIST_BUCKETS/SUB)`
+/// ≈ 1e-9 .. 1.8e10, which covers nanoseconds-as-seconds through
+/// milliseconds-as-floats through raw token counts.
+pub const HIST_BUCKETS: usize = 512;
+/// Buckets per octave (power of two). Bucket boundaries grow by
+/// `2^(1/SUB)` ≈ 1.0905, so reporting a bucket's geometric midpoint is
+/// within `2^(1/(2*SUB)) - 1` ≈ 4.4% relative error of any sample in
+/// it — the "one bucket" error contract the property tests pin.
+pub const SUB: f64 = 8.0;
+const MIN_TRACKED: f64 = 1e-9;
+
+/// Bounded, mergeable log-bucketed histogram over non-negative
+/// samples. Memory is O([`HIST_BUCKETS`]) regardless of sample count
+/// (the bucket vector is allocated lazily on the first `record`, so a
+/// default-constructed histogram costs nothing until used). Exact
+/// `min`/`max`/`sum` ride along so edges and means stay exact;
+/// percentiles are bucket-midpoint approximations clamped to
+/// `[min, max]`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LogHistogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    counts: Vec<u64>,
+}
+
+fn bucket_of(v: f64) -> usize {
+    if v < MIN_TRACKED {
+        return 0;
+    }
+    let idx = ((v / MIN_TRACKED).log2() * SUB).floor();
+    (idx.max(0.0) as usize).min(HIST_BUCKETS - 1)
+}
+
+fn bucket_mid(i: usize) -> f64 {
+    MIN_TRACKED * ((i as f64 + 0.5) / SUB).exp2()
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Record one sample. Negative samples are clamped to zero (the
+    /// domain is durations/sizes/counts); zero lands in the lowest
+    /// bucket and is still exact through `min`.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { return };
+        if self.counts.is_empty() {
+            self.counts = vec![0u64; HIST_BUCKETS];
+        }
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        self.counts[bucket_of(v)] += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile `p` in `0.0..=100.0`. NaN when empty (matching the
+    /// old exact-sample `Percentiles`). The returned value is the
+    /// geometric midpoint of the bucket holding the target rank,
+    /// clamped to the exact observed `[min, max]`.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0 * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > target {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram in. Associative and commutative: bucket
+    /// counts add, `sum`/`count` add, `min`/`max` take extrema — the
+    /// cluster merges per-shard latency histograms with exactly this.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Snapshot with schema-stable keys (`count`/`sum`/`min`/`max`/
+    /// `p50`/`p95`/`p99`).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("count", Json::from(self.count as f64)),
+            ("sum", Json::from(self.sum)),
+            ("min", Json::from(self.min())),
+            ("max", Json::from(self.max())),
+            ("p50", Json::from(self.pct(50.0))),
+            ("p95", Json::from(self.pct(95.0))),
+            ("p99", Json::from(self.pct(99.0))),
+        ])
+    }
+}
+
+/// A metric name plus its static labels, e.g.
+/// `qrazor_stage_ms{shard="0", stage="prefill"}`. Labels are kept
+/// sorted so the canonical form is deterministic.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    pub fn new(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        MetricKey { name: name.to_string(), labels }
+    }
+
+    /// Canonical flat form used as JSON snapshot key:
+    /// `name` or `name{k=v,k2=v2}`.
+    pub fn flat(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let body: Vec<String> = self.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        format!("{}{{{}}}", self.name, body.join(","))
+    }
+
+    /// Prometheus exposition form: `name{k="v",k2="v2"}`, with `extra`
+    /// appended inside the braces (used for `quantile` labels).
+    fn prom(&self, extra: Option<(&str, &str)>) -> String {
+        let mut parts: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if parts.is_empty() {
+            self.name.clone()
+        } else {
+            format!("{}{{{}}}", self.name, parts.join(","))
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(LogHistogram),
+}
+
+/// The registry: a sorted map of [`MetricKey`] → [`Metric`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    metrics: BTreeMap<MetricKey, Metric>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Add `v` to a counter (creating it at zero).
+    pub fn counter(&mut self, name: &str, labels: &[(&str, &str)], v: u64) {
+        match self
+            .metrics
+            .entry(MetricKey::new(name, labels))
+            .or_insert(Metric::Counter(0))
+        {
+            Metric::Counter(c) => *c += v,
+            _ => debug_assert!(false, "metric {name} registered with a different type"),
+        }
+    }
+
+    /// Set a gauge to `v` (last write wins; merge adds).
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.metrics.insert(MetricKey::new(name, labels), Metric::Gauge(v));
+    }
+
+    /// Record one sample into a histogram (creating it empty).
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        match self
+            .metrics
+            .entry(MetricKey::new(name, labels))
+            .or_insert_with(|| Metric::Hist(LogHistogram::new()))
+        {
+            Metric::Hist(h) => h.record(v),
+            _ => debug_assert!(false, "metric {name} registered with a different type"),
+        }
+    }
+
+    /// Merge a whole prebuilt histogram under a key.
+    pub fn record_hist(&mut self, name: &str, labels: &[(&str, &str)], h: &LogHistogram) {
+        match self
+            .metrics
+            .entry(MetricKey::new(name, labels))
+            .or_insert_with(|| Metric::Hist(LogHistogram::new()))
+        {
+            Metric::Hist(mine) => mine.merge(h),
+            _ => debug_assert!(false, "metric {name} registered with a different type"),
+        }
+    }
+
+    pub fn get(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Metric> {
+        self.metrics.get(&MetricKey::new(name, labels))
+    }
+
+    /// Counter value (0 when absent) — test/assertion helper.
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        match self.get(name, labels) {
+            Some(Metric::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Gauge value (NaN when absent) — test/assertion helper.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        match self.get(name, labels) {
+            Some(Metric::Gauge(g)) => *g,
+            _ => f64::NAN,
+        }
+    }
+
+    pub fn hist(&self, name: &str, labels: &[(&str, &str)]) -> Option<&LogHistogram> {
+        match self.get(name, labels) {
+            Some(Metric::Hist(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&MetricKey, &Metric)> {
+        self.metrics.iter()
+    }
+
+    /// Merge another registry in: counters add, gauges add (every
+    /// gauge in the stack is an additive quantity — bytes, pages,
+    /// sessions — so shard gauges sum to the cluster value),
+    /// histograms bucket-merge. Associative and commutative like the
+    /// histogram merge it is built on — this replaces the hand-written
+    /// per-field sums the cluster aggregator used to carry.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, m) in other.metrics.iter() {
+            match self.metrics.entry(k.clone()) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(m.clone());
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    match (e.get_mut(), m) {
+                        (Metric::Counter(a), Metric::Counter(b)) => *a += *b,
+                        (Metric::Gauge(a), Metric::Gauge(b)) => *a += *b,
+                        (Metric::Hist(a), Metric::Hist(b)) => a.merge(b),
+                        _ => debug_assert!(false, "metric {} merged across types", k.name),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Prometheus-style text exposition. Histograms render as
+    /// summaries: `name{quantile="0.5"}` lines plus `name_sum` /
+    /// `name_count`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name = "";
+        for (k, m) in self.metrics.iter() {
+            if k.name != last_name {
+                let kind = match m {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Hist(_) => "summary",
+                };
+                out.push_str(&format!("# TYPE {} {}\n", k.name, kind));
+                last_name = &k.name;
+            }
+            match m {
+                Metric::Counter(c) => out.push_str(&format!("{} {}\n", k.prom(None), c)),
+                Metric::Gauge(g) => out.push_str(&format!("{} {}\n", k.prom(None), g)),
+                Metric::Hist(h) => {
+                    for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                        let v = h.pct(p);
+                        if v.is_nan() {
+                            continue;
+                        }
+                        out.push_str(&format!("{} {}\n", k.prom(Some(("quantile", q))), v));
+                    }
+                    let mut sum_key = k.clone();
+                    sum_key.name = format!("{}_sum", k.name);
+                    out.push_str(&format!("{} {}\n", sum_key.prom(None), h.sum()));
+                    sum_key.name = format!("{}_count", k.name);
+                    out.push_str(&format!("{} {}\n", sum_key.prom(None), h.len()));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot: `{"schema": .., "counters": {..}, "gauges":
+    /// {..}, "histograms": {..}}` with [`MetricKey::flat`] keys.
+    /// Deterministic (BTreeMap ordering) and schema-stable — the
+    /// bench trajectory files (`BENCH_*.json`) and `--metrics-json`
+    /// are exactly this.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        let mut gauges = Json::obj();
+        let mut hists = Json::obj();
+        for (k, m) in self.metrics.iter() {
+            match m {
+                Metric::Counter(c) => counters.set(&k.flat(), Json::from(*c as f64)),
+                Metric::Gauge(g) => gauges.set(&k.flat(), Json::from(*g)),
+                Metric::Hist(h) => hists.set(&k.flat(), h.to_json()),
+            }
+        }
+        Json::from_pairs(vec![
+            ("schema", Json::from(REGISTRY_SCHEMA)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+}
+
+/// Schema tag stamped into every registry snapshot.
+pub const REGISTRY_SCHEMA: &str = "qrazor.registry.v1";
+
+/// Validate a parsed registry snapshot: schema tag, section shape, and
+/// per-histogram required keys. The bench `--smoke` paths and the CI
+/// observability job run every emitted `BENCH_*.json` /
+/// `--metrics-json` file through this.
+pub fn validate_registry_json(j: &Json) -> anyhow::Result<()> {
+    let schema = j.req("schema")?.as_str().unwrap_or("");
+    if schema != REGISTRY_SCHEMA {
+        anyhow::bail!("registry snapshot schema mismatch: {schema:?}");
+    }
+    for section in ["counters", "gauges", "histograms"] {
+        let s = j.req(section)?;
+        let Json::Obj(m) = s else {
+            anyhow::bail!("registry snapshot section '{section}' is not an object");
+        };
+        if section == "histograms" {
+            for (key, h) in m.iter() {
+                for field in ["count", "sum", "min", "max", "p50", "p95", "p99"] {
+                    if h.get(field).is_none() {
+                        anyhow::bail!("histogram '{key}' missing field '{field}'");
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_empty_is_nan_like_percentiles() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.pct(50.0).is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn hist_single_sample_is_exact() {
+        let mut h = LogHistogram::new();
+        h.record(42.0);
+        assert_eq!(h.pct(0.0), 42.0);
+        assert_eq!(h.pct(50.0), 42.0);
+        assert_eq!(h.pct(100.0), 42.0);
+        assert_eq!(h.min(), 42.0);
+        assert_eq!(h.max(), 42.0);
+    }
+
+    #[test]
+    fn hist_percentile_within_one_bucket_relative_error() {
+        let mut h = LogHistogram::new();
+        let mut xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let g = (1.0f64 / SUB).exp2();
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let rank = (p / 100.0 * (xs.len() - 1) as f64).round() as usize;
+            let exact = xs[rank];
+            let approx = h.pct(p);
+            let ratio = approx / exact;
+            assert!(
+                ratio > 1.0 / g - 1e-9 && ratio < g + 1e-9,
+                "p{p}: approx {approx} vs exact {exact} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn hist_merge_matches_combined_stream() {
+        let (mut a, mut b, mut both) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 0..500 {
+            let v = (i as f64 * 7.3) % 91.0 + 0.5;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn hist_zero_and_subnormal_samples_stay_bounded() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(1e-300);
+        h.record(-3.0); // clamped to 0
+        assert_eq!(h.len(), 3);
+        // All three land in the lowest bucket; the midpoint clamps to
+        // the exact observed [min, max].
+        assert!(h.pct(50.0) <= 1e-300);
+        assert_eq!(h.max(), 1e-300);
+    }
+
+    #[test]
+    fn registry_counters_gauges_hists_roundtrip_json() {
+        let mut r = Registry::new();
+        r.counter("qrazor_requests_completed", &[("shard", "0")], 3);
+        r.counter("qrazor_requests_completed", &[("shard", "0")], 2);
+        r.gauge("qrazor_kv_bytes_peak", &[], 1024.0);
+        r.observe("qrazor_ttft_ms", &[], 5.0);
+        r.observe("qrazor_ttft_ms", &[], 7.0);
+        assert_eq!(r.counter_value("qrazor_requests_completed", &[("shard", "0")]), 5);
+        let j = r.to_json();
+        validate_registry_json(&j).unwrap();
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            re.get("counters").unwrap().get("qrazor_requests_completed{shard=0}"),
+            Some(&Json::Num(5.0))
+        );
+        assert_eq!(
+            re.get("histograms").unwrap().get("qrazor_ttft_ms").unwrap().req("count").unwrap(),
+            &Json::Num(2.0)
+        );
+    }
+
+    #[test]
+    fn registry_merge_adds_counters_gauges_and_buckets() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.counter("c", &[], 1);
+        b.counter("c", &[], 2);
+        a.gauge("g", &[], 10.0);
+        b.gauge("g", &[], 5.0);
+        a.observe("h", &[], 1.0);
+        b.observe("h", &[], 100.0);
+        b.counter("only_b", &[], 7);
+        a.merge(&b);
+        assert_eq!(a.counter_value("c", &[]), 3);
+        assert_eq!(a.gauge_value("g", &[]), 15.0);
+        assert_eq!(a.hist("h", &[]).unwrap().len(), 2);
+        assert_eq!(a.counter_value("only_b", &[]), 7);
+    }
+
+    #[test]
+    fn registry_merge_is_commutative_and_associative() {
+        let mk = |seed: u64| {
+            let mut r = Registry::new();
+            for i in 0..50u64 {
+                let v = ((seed.wrapping_mul(6364136223846793005).wrapping_add(i * 97)) % 1000)
+                    as f64
+                    / 7.0;
+                r.observe("h", &[("shard", if i % 2 == 0 { "0" } else { "1" })], v + 0.1);
+                r.counter("c", &[], i % 3);
+            }
+            r
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+    }
+
+    #[test]
+    fn prometheus_text_matches_registry_contents() {
+        let mut r = Registry::new();
+        r.counter("qrazor_requests_completed", &[("shard", "1")], 4);
+        r.observe("qrazor_ttft_ms", &[], 3.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE qrazor_requests_completed counter"));
+        assert!(text.contains("qrazor_requests_completed{shard=\"1\"} 4"));
+        assert!(text.contains("qrazor_ttft_ms{quantile=\"0.5\"}"));
+        assert!(text.contains("qrazor_ttft_ms_count 1"));
+    }
+
+    #[test]
+    fn snapshot_validation_rejects_missing_fields() {
+        assert!(validate_registry_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(
+            "{\"schema\": \"qrazor.registry.v1\", \"counters\": {}, \"gauges\": {}, \
+             \"histograms\": {\"h\": {\"count\": 1}}}",
+        )
+        .unwrap();
+        assert!(validate_registry_json(&bad).is_err());
+    }
+}

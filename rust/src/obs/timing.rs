@@ -1,0 +1,373 @@
+//! Step-stage timing: scoped timers over every phase of the scheduler
+//! step, near-zero cost when disabled.
+//!
+//! One global atomic flag ([`set_timing`]) gates all of it. Disabled
+//! (the default), a [`StageSpan`] is a `None` on the stack — no clock
+//! read, no allocation, one relaxed atomic load. Enabled, each span
+//! costs two `Instant::now()` calls and adds nanoseconds into the
+//! engine's per-step [`StageTimes`] accumulator (plain stack arrays),
+//! which the step loop folds into per-stage [`StageHists`] (one
+//! bounded log histogram per stage, sample = that stage's total time
+//! in one step, in milliseconds). `StepPulse` carries the per-step
+//! `StageTimes` out of each shard so the cluster can merge live; the
+//! final histograms travel inside `Metrics` through `ShardReport`.
+//!
+//! Phases that run *inside* the parallel decode jobs (packed
+//! attention, speculative draft/verify) can't write into the engine's
+//! accumulator without contention, so they add into the global
+//! [`HotStage`] atomics instead — aggregated across shards, drained
+//! with [`hot_snapshot`]/[`hot_reset`].
+
+use crate::obs::registry::{LogHistogram, Registry};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Scheduler-step stages, in the order the step loop runs them.
+/// `PrefixProbe` and `KvAdmit` nest inside `Admission`; `Publish` is
+/// the event fan-out the worker loop does right after the step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    ExpirySweep,
+    Admission,
+    PrefixProbe,
+    KvAdmit,
+    Prefill,
+    Decode,
+    Commit,
+    Preempt,
+    Retire,
+    KvEvict,
+    Publish,
+}
+
+/// Number of [`Stage`] variants.
+pub const NSTAGES: usize = 11;
+
+impl Stage {
+    pub const ALL: [Stage; NSTAGES] = [
+        Stage::ExpirySweep,
+        Stage::Admission,
+        Stage::PrefixProbe,
+        Stage::KvAdmit,
+        Stage::Prefill,
+        Stage::Decode,
+        Stage::Commit,
+        Stage::Preempt,
+        Stage::Retire,
+        Stage::KvEvict,
+        Stage::Publish,
+    ];
+
+    /// Stable label (the `stage` label value in the registry).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::ExpirySweep => "expiry_sweep",
+            Stage::Admission => "admission",
+            Stage::PrefixProbe => "prefix_probe",
+            Stage::KvAdmit => "kv_admit",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+            Stage::Commit => "commit",
+            Stage::Preempt => "preempt",
+            Stage::Retire => "retire",
+            Stage::KvEvict => "kv_evict",
+            Stage::Publish => "publish",
+        }
+    }
+}
+
+static TIMING: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable stage timing globally (process-wide; all engines).
+pub fn set_timing(on: bool) {
+    TIMING.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn timing_enabled() -> bool {
+    TIMING.load(Ordering::Relaxed)
+}
+
+/// Per-step stage accumulator: nanoseconds and call counts per stage.
+/// Plain `Copy` arrays — building one allocates nothing, so carrying
+/// it through `StepPulse` is free even with timing off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTimes {
+    pub ns: [u64; NSTAGES],
+    pub calls: [u32; NSTAGES],
+}
+
+impl StageTimes {
+    pub fn add(&mut self, s: Stage, d: Duration) {
+        self.ns[s as usize] += d.as_nanos() as u64;
+        self.calls[s as usize] += 1;
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        for i in 0..NSTAGES {
+            self.ns[i] += other.ns[i];
+            self.calls[i] += other.calls[i];
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.calls.iter().all(|&c| c == 0)
+    }
+}
+
+/// A scoped stage timer. `begin()` reads the clock only when timing is
+/// enabled; `finish(stage, times)` folds the elapsed time in. Not a
+/// Drop guard on purpose: the borrow of the accumulator happens only
+/// at `finish`, so spans can bracket code that also borrows the
+/// engine mutably.
+#[derive(Debug)]
+pub struct StageSpan {
+    start: Option<Instant>,
+}
+
+impl StageSpan {
+    #[inline]
+    pub fn begin() -> StageSpan {
+        StageSpan { start: if timing_enabled() { Some(Instant::now()) } else { None } }
+    }
+
+    #[inline]
+    pub fn finish(self, s: Stage, t: &mut StageTimes) {
+        if let Some(start) = self.start {
+            t.add(s, start.elapsed());
+        }
+    }
+}
+
+/// Per-stage histograms of per-step stage latency, in milliseconds.
+/// Lives inside `coordinator::Metrics` so it flows through
+/// `ShardReport` and merges across shards with the rest of the
+/// registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageHists {
+    h: Vec<LogHistogram>,
+}
+
+impl StageHists {
+    fn ensure(&mut self) {
+        if self.h.is_empty() {
+            self.h = vec![LogHistogram::new(); NSTAGES];
+        }
+    }
+
+    /// Fold one step's accumulator in: each stage that ran this step
+    /// contributes one sample (its total ms within the step).
+    pub fn observe_step(&mut self, t: &StageTimes) {
+        if t.is_empty() {
+            return;
+        }
+        self.ensure();
+        for i in 0..NSTAGES {
+            if t.calls[i] > 0 {
+                self.h[i].record(t.ns[i] as f64 * 1e-6);
+            }
+        }
+    }
+
+    pub fn get(&self, s: Stage) -> Option<&LogHistogram> {
+        self.h.get(s as usize).filter(|h| !h.is_empty())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.h.iter().all(|h| h.is_empty())
+    }
+
+    pub fn merge(&mut self, other: &StageHists) {
+        if other.is_empty() {
+            return;
+        }
+        self.ensure();
+        for (a, b) in self.h.iter_mut().zip(other.h.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Export as `qrazor_stage_ms{stage="..."}` histograms (plus the
+    /// extra labels, e.g. `shard`).
+    pub fn export(&self, reg: &mut Registry, labels: &[(&str, &str)]) {
+        for s in Stage::ALL {
+            if let Some(h) = self.get(s) {
+                let mut ls: Vec<(&str, &str)> = labels.to_vec();
+                ls.push(("stage", s.name()));
+                reg.record_hist("qrazor_stage_ms", &ls, h);
+            }
+        }
+    }
+
+    /// Fixed-width breakdown table (stage, steps, p50/p99/max ms) for
+    /// the benches and the CLI summary.
+    pub fn render_table(&self, title: &str) -> String {
+        let mut out = format!(
+            "{title}\n  {:<14} {:>8} {:>10} {:>10} {:>10}\n",
+            "stage", "steps", "p50 ms", "p99 ms", "max ms"
+        );
+        for s in Stage::ALL {
+            if let Some(h) = self.get(s) {
+                out.push_str(&format!(
+                    "  {:<14} {:>8} {:>10.4} {:>10.4} {:>10.4}\n",
+                    s.name(),
+                    h.len(),
+                    h.pct(50.0),
+                    h.pct(99.0),
+                    h.max()
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Hot-path phases timed inside the parallel decode jobs. These add
+/// into process-global atomics (per-shard attribution would need
+/// per-call plumbing through the model forward path); the benches
+/// report them as an aggregate next to the per-shard stage table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HotStage {
+    PackedAttention,
+    SpecDraft,
+    SpecVerify,
+}
+
+/// Number of [`HotStage`] variants.
+pub const NHOT: usize = 3;
+
+impl HotStage {
+    pub const ALL: [HotStage; NHOT] =
+        [HotStage::PackedAttention, HotStage::SpecDraft, HotStage::SpecVerify];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HotStage::PackedAttention => "packed_attention",
+            HotStage::SpecDraft => "spec_draft",
+            HotStage::SpecVerify => "spec_verify",
+        }
+    }
+}
+
+static HOT_NS: [AtomicU64; NHOT] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static HOT_CALLS: [AtomicU64; NHOT] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+/// A scoped hot-path timer; no-op (no clock read) when timing is off.
+#[derive(Debug)]
+pub struct HotSpan {
+    start: Option<Instant>,
+}
+
+impl HotSpan {
+    #[inline]
+    pub fn begin() -> HotSpan {
+        HotSpan { start: if timing_enabled() { Some(Instant::now()) } else { None } }
+    }
+
+    #[inline]
+    pub fn finish(self, s: HotStage) {
+        if let Some(start) = self.start {
+            let ns = start.elapsed().as_nanos() as u64;
+            HOT_NS[s as usize].fetch_add(ns, Ordering::Relaxed);
+            HOT_CALLS[s as usize].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Snapshot of the global hot-path accumulators:
+/// `(name, total_ns, calls)` per [`HotStage`].
+pub fn hot_snapshot() -> [(&'static str, u64, u64); NHOT] {
+    let mut out = [("", 0u64, 0u64); NHOT];
+    for (i, s) in HotStage::ALL.iter().enumerate() {
+        out[i] = (
+            s.name(),
+            HOT_NS[i].load(Ordering::Relaxed),
+            HOT_CALLS[i].load(Ordering::Relaxed),
+        );
+    }
+    out
+}
+
+/// Reset the global hot-path accumulators (bench section boundaries).
+pub fn hot_reset() {
+    for i in 0..NHOT {
+        HOT_NS[i].store(0, Ordering::Relaxed);
+        HOT_CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// Export the hot snapshot as counters
+/// (`qrazor_hot_ns{phase=..}` / `qrazor_hot_calls{phase=..}`).
+pub fn export_hot(reg: &mut Registry) {
+    for (name, ns, calls) in hot_snapshot() {
+        if calls > 0 {
+            reg.counter("qrazor_hot_ns", &[("phase", name)], ns);
+            reg.counter("qrazor_hot_calls", &[("phase", name)], calls);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // The timing flag is process-global and libtest runs in parallel:
+    // serialize the two tests that toggle it.
+    static FLAG_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_span_reads_no_clock_and_records_nothing() {
+        let _g = FLAG_LOCK.lock().unwrap();
+        set_timing(false);
+        let mut t = StageTimes::default();
+        let sp = StageSpan::begin();
+        assert!(sp.start.is_none());
+        sp.finish(Stage::Decode, &mut t);
+        assert!(t.is_empty());
+        let h = HotSpan::begin();
+        assert!(h.start.is_none());
+    }
+
+    #[test]
+    fn enabled_span_accumulates_per_stage() {
+        let _g = FLAG_LOCK.lock().unwrap();
+        set_timing(true);
+        let mut t = StageTimes::default();
+        let sp = StageSpan::begin();
+        std::thread::sleep(Duration::from_millis(1));
+        sp.finish(Stage::Prefill, &mut t);
+        set_timing(false);
+        assert_eq!(t.calls[Stage::Prefill as usize], 1);
+        assert!(t.ns[Stage::Prefill as usize] >= 1_000_000);
+        assert_eq!(t.calls[Stage::Decode as usize], 0);
+    }
+
+    #[test]
+    fn stage_hists_observe_and_merge() {
+        let mut t = StageTimes::default();
+        t.add(Stage::Decode, Duration::from_millis(2));
+        t.add(Stage::Prefill, Duration::from_millis(5));
+        let mut a = StageHists::default();
+        a.observe_step(&t);
+        let mut b = StageHists::default();
+        b.observe_step(&t);
+        b.observe_step(&t);
+        a.merge(&b);
+        assert_eq!(a.get(Stage::Decode).unwrap().len(), 3);
+        assert!(a.get(Stage::KvEvict).is_none());
+        let table = a.render_table("stage breakdown");
+        assert!(table.contains("decode"));
+        assert!(table.contains("prefill"));
+        let mut reg = Registry::new();
+        a.export(&mut reg, &[("shard", "0")]);
+        assert!(reg.hist("qrazor_stage_ms", &[("shard", "0"), ("stage", "decode")]).is_some());
+    }
+
+    #[test]
+    fn empty_step_records_no_samples() {
+        let mut h = StageHists::default();
+        h.observe_step(&StageTimes::default());
+        assert!(h.is_empty());
+    }
+}

@@ -1,0 +1,314 @@
+//! Per-request tracing: a bounded ring of span events covering each
+//! request's lifecycle, exportable as Chrome `trace_event` JSON
+//! (load the file at `ui.perfetto.dev` or `chrome://tracing`).
+//!
+//! Span model — every request produces one closed span tree:
+//!
+//! ```text
+//! request                    B at submit … E at Finished
+//! ├── queued                 B at submit … E at admit/expiry/cancel
+//! │                          (re-opened if the request is preempted
+//! │                           back into the queue)
+//! ├── prefill                B/E around the admission forward_chunk
+//! └── decode                 B at admission … E at retire/cancel/
+//! │                          preempt, with instants inside:
+//! │     · tokens             one per committed flush (n tokens)
+//! │     · spec_round         drafted/accepted per speculative round
+//! ├── admitted / preempted / cancelled / expired   instants
+//! ```
+//!
+//! Begin/End events always come in pairs per `(request, span name)` —
+//! the telemetry suite churns cancel/expiry/preemption/rollback and
+//! asserts the balance — so the exported tree is closed by
+//! construction. Events carry the shard index as the trace `pid` and
+//! the request id as `tid`, which groups cluster traces by shard lane
+//! in Perfetto.
+//!
+//! Overhead contract: the buffer is created enabled; when disabled
+//! (or when the engine has no trace handle at all) every emit path is
+//! a branch on an atomic load — no lock, no allocation, no clock
+//! read. Enabled, each event takes one `Instant` read plus one
+//! mutex-guarded ring push; the ring is bounded (drop-oldest, dropped
+//! count kept), so a long soak cannot grow memory.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Chrome trace_event phase of one event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Span begin (`"B"`).
+    Begin,
+    /// Span end (`"E"`).
+    End,
+    /// Instant (`"i"`).
+    Instant,
+}
+
+impl Phase {
+    fn ph(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+        }
+    }
+}
+
+/// One recorded event. `ts_us` is microseconds since the buffer's
+/// epoch; `shard`/`req` map to trace `pid`/`tid`.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub req: u64,
+    pub shard: u32,
+    pub name: &'static str,
+    pub ph: Phase,
+    pub ts_us: u64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+struct Ring {
+    ev: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Bounded ring of [`TraceEvent`]s shared by every engine feeding one
+/// trace (a server's single engine, or all shards of a cluster).
+pub struct TraceBuffer {
+    epoch: Instant,
+    cap: usize,
+    enabled: AtomicBool,
+    inner: Mutex<Ring>,
+}
+
+/// Default event capacity: enough for a few thousand request
+/// lifecycles before drop-oldest kicks in.
+pub const DEFAULT_TRACE_EVENTS: usize = 65_536;
+
+impl TraceBuffer {
+    pub fn new(cap: usize) -> Arc<TraceBuffer> {
+        Arc::new(TraceBuffer {
+            epoch: Instant::now(),
+            cap: cap.max(16),
+            enabled: AtomicBool::new(true),
+            inner: Mutex::new(Ring { ev: VecDeque::new(), dropped: 0 }),
+        })
+    }
+
+    pub fn with_default_capacity() -> Arc<TraceBuffer> {
+        TraceBuffer::new(DEFAULT_TRACE_EVENTS)
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Record one event (no-op while disabled).
+    pub fn emit(
+        &self,
+        req: u64,
+        shard: u32,
+        name: &'static str,
+        ph: Phase,
+        args: Vec<(&'static str, String)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        let mut g = self.inner.lock().unwrap();
+        if g.ev.len() >= self.cap {
+            g.ev.pop_front();
+            g.dropped += 1;
+        }
+        g.ev.push_back(TraceEvent { req, shard, name, ph, ts_us, args });
+    }
+
+    /// Events dropped to the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Copy out the recorded events (test/assertion surface).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.inner.lock().unwrap().ev.iter().cloned().collect()
+    }
+
+    /// Export as Chrome `trace_event` JSON (the "JSON Array Format"
+    /// wrapped in an object, which both Perfetto and `chrome://tracing`
+    /// load). Instants get scope `"t"` (thread) so they render inside
+    /// the request lane.
+    pub fn to_chrome_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut events = Vec::with_capacity(g.ev.len());
+        for e in g.ev.iter() {
+            let mut pairs = vec![
+                ("name", Json::from(e.name)),
+                ("cat", Json::from("request")),
+                ("ph", Json::from(e.ph.ph())),
+                ("ts", Json::from(e.ts_us as f64)),
+                ("pid", Json::from(e.shard as f64)),
+                ("tid", Json::from(e.req as f64)),
+            ];
+            if e.ph == Phase::Instant {
+                pairs.push(("s", Json::from("t")));
+            }
+            if !e.args.is_empty() {
+                let mut args = Json::obj();
+                for (k, v) in e.args.iter() {
+                    args.set(k, Json::from(v.as_str()));
+                }
+                pairs.push(("args", args));
+            }
+            events.push(Json::from_pairs(pairs));
+        }
+        Json::from_pairs(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::from("ms")),
+        ])
+    }
+}
+
+/// An engine's handle on a shared [`TraceBuffer`]: the buffer plus the
+/// shard index this engine stamps on its events.
+#[derive(Clone)]
+pub struct TraceHandle {
+    pub buf: Arc<TraceBuffer>,
+    pub shard: u32,
+}
+
+impl TraceHandle {
+    pub fn new(buf: Arc<TraceBuffer>, shard: u32) -> TraceHandle {
+        TraceHandle { buf, shard }
+    }
+
+    #[inline]
+    pub fn begin(&self, req: u64, name: &'static str) {
+        self.buf.emit(req, self.shard, name, Phase::Begin, Vec::new());
+    }
+
+    #[inline]
+    pub fn end(&self, req: u64, name: &'static str) {
+        self.buf.emit(req, self.shard, name, Phase::End, Vec::new());
+    }
+
+    #[inline]
+    pub fn instant(&self, req: u64, name: &'static str, args: Vec<(&'static str, String)>) {
+        self.buf.emit(req, self.shard, name, Phase::Instant, args);
+    }
+}
+
+/// Check span balance over a set of events: for every `(req, name)`,
+/// Begin/End counts match and the running depth never goes negative.
+/// Returns the list of violations (empty = every span tree closed).
+pub fn unbalanced_spans(events: &[TraceEvent]) -> Vec<(u64, &'static str, i64)> {
+    use std::collections::BTreeMap;
+    let mut depth: BTreeMap<(u64, &'static str), i64> = BTreeMap::new();
+    let mut bad: Vec<(u64, &'static str, i64)> = Vec::new();
+    for e in events {
+        match e.ph {
+            Phase::Begin => *depth.entry((e.req, e.name)).or_insert(0) += 1,
+            Phase::End => {
+                let d = depth.entry((e.req, e.name)).or_insert(0);
+                *d -= 1;
+                if *d < 0 && !bad.iter().any(|(r, n, _)| *r == e.req && *n == e.name) {
+                    bad.push((e.req, e.name, *d));
+                }
+            }
+            Phase::Instant => {}
+        }
+    }
+    for ((req, name), d) in depth {
+        if d != 0 && !bad.iter().any(|(r, n, _)| *r == req && *n == name) {
+            bad.push((req, name, d));
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let t = TraceBuffer::new(16);
+        for i in 0..40u64 {
+            t.emit(i, 0, "request", Phase::Begin, Vec::new());
+        }
+        let ev = t.events();
+        assert_eq!(ev.len(), 16);
+        assert_eq!(t.dropped(), 24);
+        // Oldest dropped first: the survivors are the freshest tail.
+        assert_eq!(ev[0].req, 24);
+    }
+
+    #[test]
+    fn disabled_buffer_records_nothing() {
+        let t = TraceBuffer::new(16);
+        t.set_enabled(false);
+        t.emit(1, 0, "request", Phase::Begin, Vec::new());
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_required_fields() {
+        let t = TraceBuffer::new(64);
+        let h = TraceHandle::new(t.clone(), 2);
+        h.begin(7, "request");
+        h.instant(7, "admitted", vec![("prefix_hit", "true".to_string())]);
+        h.end(7, "request");
+        let j = t.to_chrome_json();
+        let re = Json::parse(&j.to_string()).unwrap();
+        let evs = re.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 3);
+        for e in evs {
+            for field in ["name", "cat", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(field).is_some(), "missing {field}");
+            }
+        }
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(evs[1].get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(
+            evs[1].get("args").unwrap().get("prefix_hit").unwrap().as_str(),
+            Some("true")
+        );
+        assert_eq!(evs[2].get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(evs[2].get("tid").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn unbalanced_spans_flags_leaks_and_double_closes() {
+        let t = TraceBuffer::new(64);
+        let h = TraceHandle::new(t.clone(), 0);
+        h.begin(1, "request");
+        h.end(1, "request");
+        h.begin(2, "decode"); // never closed
+        h.end(3, "queued"); // closed without open
+        let bad = unbalanced_spans(&t.events());
+        assert_eq!(bad.len(), 2);
+        assert!(bad.iter().any(|(r, n, d)| *r == 2 && *n == "decode" && *d == 1));
+        assert!(bad.iter().any(|(r, n, d)| *r == 3 && *n == "queued" && *d < 0));
+    }
+
+    #[test]
+    fn timestamps_are_monotonic() {
+        let t = TraceBuffer::new(64);
+        for i in 0..10 {
+            t.emit(i, 0, "request", Phase::Instant, Vec::new());
+        }
+        let ev = t.events();
+        for w in ev.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+    }
+}

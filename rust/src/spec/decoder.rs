@@ -150,6 +150,7 @@ impl SpecDecoder {
         let mut chunk = Vec::with_capacity(self.k + 1);
         chunk.push(next);
         if self.k > 0 {
+            let hot = crate::obs::HotSpan::begin();
             // Catch the draft cache up (it lags one row after a fully
             // accepted round, arbitrarily after a sampling fallback).
             let d = draft.cached_tokens();
@@ -164,10 +165,13 @@ impl SpecDecoder {
                 chunk.push(tok);
             }
             stats.drafted += self.k as u64;
+            hot.finish(crate::obs::HotStage::SpecDraft);
         }
 
         // ---- verify: one batched chunk at the basis precision
+        let hot = crate::obs::HotSpan::begin();
         let rows = target.forward_chunk(&chunk, p);
+        hot.finish(crate::obs::HotStage::SpecVerify);
         debug_assert_eq!(rows.len(), chunk.len());
         let choices: Vec<u32> = rows.iter().map(|r| argmax(r) as u32).collect();
 

@@ -1,0 +1,482 @@
+//! Telemetry acceptance suite: span-tree balance through scheduler
+//! churn (cancel, expiry, preemption, speculative rollback) on the
+//! bare engine and on a sharded cluster, Chrome trace export
+//! validity, registry ≡ JSON ≡ legacy-field consistency, the
+//! observe-only contract (streams are byte-identical with telemetry
+//! on), and the zero-allocation guarantee of the disabled paths
+//! (pinned with a counting global allocator). Runs on the nano
+//! preset; no artifacts needed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use qrazor::baselines::{Fp16, QRazor};
+use qrazor::cluster::{ClusterConfig, ClusterServer};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{
+    collect_sessions, Engine, FinishReason, Priority, Request, RequestId, Sampling, ServeApi,
+    Server, SubmitOptions,
+};
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::obs::{
+    self, unbalanced_spans, HotSpan, HotStage, Phase, Stage, StageSpan, StageTimes, TraceBuffer,
+    TraceEvent,
+};
+use qrazor::util::json::Json;
+use qrazor::util::rng::Rng;
+
+// ---------------------------------------------------------------- //
+// counting allocator: every allocation on a thread bumps that
+// thread's counter, so parallel tests never pollute each other's
+// reading. Const-initialized TLS (no lazy init, no destructor) keeps
+// the allocator itself allocation-free.
+// ---------------------------------------------------------------- //
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+/// The step-timing flag is process-global; every test that flips it
+/// (or reads hot-path counters) serializes here so libtest's thread
+/// pool cannot interleave enabled and disabled expectations.
+fn timing_guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------- //
+// model builders (mirroring the serve_api suite)
+// ---------------------------------------------------------------- //
+
+fn model(seed: u64) -> Arc<QuantModel> {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal))
+}
+
+fn spec_pair(seed: u64) -> (Arc<QuantModel>, Arc<QuantModel>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let target = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a8kv4(16)), &cal));
+    let draft = Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal));
+    (target, draft)
+}
+
+/// Fp16 nano model with a one-page KV pool — the deterministic
+/// preemption recipe the scheduler suite pins.
+fn tight_fp16_engine() -> Engine {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, 5);
+    let mut rng = Rng::new(6);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let qm = QuantModel::build(&w, Box::new(Fp16), &cal);
+    Engine::new(
+        qm,
+        ServeConfig { max_batch: 4, max_new_tokens: 8, kv_pool_tokens: 16, ..Default::default() },
+    )
+}
+
+fn workload(seed: u64, n: usize, vocab: u64) -> Vec<(Vec<u32>, usize, SubmitOptions)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let len = 2 + rng.index(10);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+            let max_new = 2 + rng.index(6);
+            let mut opts = SubmitOptions::new();
+            if i % 3 == 1 {
+                opts = opts.sampling(Sampling::Temperature {
+                    temp: 0.9,
+                    seed: seed * 100 + i as u64,
+                });
+            }
+            opts = opts.priority(match i % 3 {
+                0 => Priority::Interactive,
+                1 => Priority::Standard,
+                _ => Priority::Batch,
+            });
+            (prompt, max_new, opts)
+        })
+        .collect()
+}
+
+fn instant_count(events: &[TraceEvent], name: &str) -> usize {
+    events.iter().filter(|e| e.ph == Phase::Instant && e.name == name).count()
+}
+
+// ---------------------------------------------------------------- //
+// span balance under churn
+// ---------------------------------------------------------------- //
+
+/// Preemption, queued-cancel, running-cancel, deadline expiry, and
+/// submit-time rejection in one engine: every request's span tree
+/// must close, with the matching lifecycle instants recorded.
+#[test]
+fn engine_churn_keeps_every_span_tree_closed() {
+    let _g = timing_guard();
+    obs::set_timing(true);
+    let buf = TraceBuffer::new(4096);
+    let mut e = tight_fp16_engine();
+    e.set_trace(buf.clone(), 0);
+
+    // Batch-tier request fills the one-page pool...
+    let mut long = Request::new(RequestId(1), vec![1, 2, 3], 6);
+    long.priority = Priority::Batch;
+    e.submit_request(long);
+    e.step();
+    // ...then an interactive arrival forces a preemption.
+    let mut vip = Request::new(RequestId(2), vec![4, 5], 4);
+    vip.priority = Priority::Interactive;
+    e.submit_request(vip);
+    e.step();
+    // Queued-cancel: a batch request purged before admission.
+    let mut queued = Request::new(RequestId(3), vec![6, 7], 4);
+    queued.priority = Priority::Batch;
+    e.submit_request(queued);
+    assert!(e.cancel(RequestId(3)));
+    // Running-cancel: the vip is mid-decode after the step above.
+    assert!(e.cancel(RequestId(2)));
+    // Expiry: a zero deadline dies in the next sweep.
+    e.submit_request(
+        SubmitOptions::new().deadline(Duration::ZERO).build(RequestId(4), vec![8, 9], 4),
+    );
+    // Rejection: total need beyond the whole pool.
+    e.submit_request(Request::new(RequestId(5), (0..100u32).collect(), 4));
+
+    let mut out = e.run_to_completion();
+    out.extend(e.take_completed());
+    obs::set_timing(false);
+
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 5);
+    let finishes: Vec<(u64, FinishReason)> = out.iter().map(|r| (r.id.0, r.finish)).collect();
+    assert_eq!(
+        finishes,
+        vec![
+            (1, FinishReason::Length),
+            (2, FinishReason::Cancelled),
+            (3, FinishReason::Cancelled),
+            (4, FinishReason::Expired),
+            (5, FinishReason::Error),
+        ],
+    );
+    assert!(e.metrics.preemptions >= 1, "the batch request must be preempted");
+
+    let ev = buf.events();
+    let bad = unbalanced_spans(&ev);
+    assert!(bad.is_empty(), "span trees must close under churn: {bad:?}");
+    for name in ["admitted", "preempted", "expired", "rejected"] {
+        assert!(instant_count(&ev, name) >= 1, "missing lifecycle instant {name:?}");
+    }
+    assert!(instant_count(&ev, "cancelled") >= 2, "queued and running cancels both mark");
+    // Timing was on: the per-stage histograms saw every step.
+    assert!(e.metrics.stages.get(Stage::Decode).is_some(), "decode stage must be timed");
+    assert!(e.metrics.stages.get(Stage::Preempt).is_some(), "preempt stage must be timed");
+}
+
+/// Speculative draft→verify→rollback churn: rounds are traced as
+/// instants, the hot-path counters move, and the trees still close.
+#[test]
+fn spec_rollback_churn_traces_rounds_and_balances() {
+    let _g = timing_guard();
+    obs::set_timing(true);
+    obs::hot_reset();
+    let (target, draft) = spec_pair(11);
+    let buf = TraceBuffer::new(4096);
+    let mut e = Engine::with_draft(
+        target,
+        Some(draft),
+        ServeConfig { max_batch: 4, spec_k: 3, ..Default::default() },
+    );
+    e.set_trace(buf.clone(), 0);
+    for i in 0..4u64 {
+        let mut opts = SubmitOptions::new();
+        if i % 2 == 1 {
+            opts = opts.sampling(Sampling::Temperature { temp: 0.9, seed: 40 + i });
+        }
+        e.submit_request(opts.build(RequestId(i), vec![1 + i as u32, 2, 3 + i as u32], 6));
+    }
+    let out = e.run_to_completion();
+    obs::set_timing(false);
+
+    assert_eq!(out.len(), 4);
+    assert!(e.metrics.spec.steps > 0, "the workload must speculate");
+    let ev = buf.events();
+    let bad = unbalanced_spans(&ev);
+    assert!(bad.is_empty(), "spec churn must not leak spans: {bad:?}");
+    assert!(instant_count(&ev, "spec_round") >= 1, "rounds must be traced");
+    let hot = obs::hot_snapshot();
+    for want in ["spec_draft", "spec_verify", "packed_attention"] {
+        assert!(
+            hot.iter().any(|(name, _ns, calls)| *name == want && *calls > 0),
+            "hot stage {want:?} must accumulate calls: {hot:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- //
+// cluster trace export
+// ---------------------------------------------------------------- //
+
+/// Mixed workload (priorities + cancellation + speculation + prefix
+/// reuse) on a 2-shard cluster: one shared buffer yields a valid
+/// Chrome trace with closed span trees, and the merged registry
+/// carries the cluster totals with per-stage histograms.
+#[test]
+fn cluster_mixed_workload_exports_valid_chrome_trace() {
+    let _g = timing_guard();
+    obs::set_timing(true);
+    let (target, draft) = spec_pair(21);
+    let vocab = target.config.vocab as u64;
+    let trace = TraceBuffer::new(8192);
+    let cluster = ClusterServer::spawn_with_telemetry(
+        target,
+        Some(draft),
+        ClusterConfig {
+            shards: 2,
+            serve: ServeConfig { max_batch: 2, spec_k: 2, ..Default::default() },
+            ..Default::default()
+        },
+        Some(trace.clone()),
+    );
+    let work = workload(9, 10, vocab);
+    let preamble: Vec<u32> = (0..8u32).map(|i| 1 + i).collect();
+    let mut ids = Vec::new();
+    for (i, (prompt, max_new, opts)) in work.iter().enumerate() {
+        // Even arrivals share an 8-token preamble to exercise the
+        // prefix index on whichever shard they land on.
+        let mut p = if i % 2 == 0 { preamble.clone() } else { Vec::new() };
+        p.extend_from_slice(prompt);
+        ids.push(cluster.submit_with(p, *max_new, *opts).unwrap());
+    }
+    // Cancel one request right away — whether it dies queued, running,
+    // or post-finish, the trace must stay balanced.
+    cluster.cancel(ids[3]).unwrap();
+    let sessions = collect_sessions(&cluster, work.len()).unwrap();
+    assert_eq!(sessions.len(), work.len());
+    let report = cluster.shutdown();
+    obs::set_timing(false);
+
+    let ev = trace.events();
+    let bad = unbalanced_spans(&ev);
+    assert!(bad.is_empty(), "cluster span trees must close: {bad:?}");
+    assert_eq!(trace.dropped(), 0, "the ring must not wrap in this workload");
+
+    // Chrome trace_event export: parses, and every event carries the
+    // fields Perfetto requires.
+    let chrome = Json::parse(&trace.to_chrome_json().to_string()).unwrap();
+    let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    for e in events {
+        for field in ["name", "cat", "ph", "ts", "pid", "tid"] {
+            assert!(e.get(field).is_some(), "trace event missing {field}");
+        }
+    }
+
+    // Merged registry: cluster totals under shard="all", schema-valid
+    // JSON, and a merged per-stage latency breakdown.
+    let reg = report.registry();
+    let all = [("shard", "all")];
+    assert_eq!(reg.counter_value("qrazor_requests_submitted", &all), work.len() as u64);
+    assert_eq!(reg.counter_value("qrazor_requests_completed", &all), work.len() as u64);
+    let snapshot = Json::parse(&reg.to_json().to_string()).unwrap();
+    obs::validate_registry_json(&snapshot).unwrap();
+    let merged = report.merged_metrics();
+    assert!(merged.stages.get(Stage::Decode).is_some(), "merged decode histogram");
+    assert!(merged.stages.get(Stage::Publish).is_some(), "merged publish histogram");
+}
+
+// ---------------------------------------------------------------- //
+// registry consistency
+// ---------------------------------------------------------------- //
+
+/// One run, three views: the Prometheus text, the JSON snapshot, and
+/// the legacy `Metrics` fields/JSON must all agree on every figure.
+#[test]
+fn registry_text_json_and_legacy_fields_agree() {
+    let _g = timing_guard();
+    obs::set_timing(true);
+    let m = model(31);
+    let vocab = m.config.vocab as u64;
+    let mut e = Engine::new(m, ServeConfig { max_batch: 4, ..Default::default() });
+    for (i, (prompt, max_new, opts)) in workload(3, 6, vocab).iter().enumerate() {
+        e.submit_request(opts.build(RequestId(i as u64), prompt.clone(), *max_new));
+    }
+    let out = e.run_to_completion();
+    obs::set_timing(false);
+    assert_eq!(out.len(), 6);
+
+    let metrics = &e.metrics;
+    let sh = [("shard", "0")];
+    let reg = metrics.to_registry(&sh);
+
+    // Registry accessors ≡ struct fields.
+    assert_eq!(reg.counter_value("qrazor_requests_submitted", &sh), metrics.requests_submitted);
+    assert_eq!(reg.counter_value("qrazor_requests_completed", &sh), metrics.requests_completed);
+    assert_eq!(reg.counter_value("qrazor_prompt_tokens", &sh), metrics.prompt_tokens);
+    assert_eq!(reg.counter_value("qrazor_generated_tokens", &sh), metrics.generated_tokens);
+    assert_eq!(reg.counter_value("qrazor_scheduler_steps", &sh), metrics.scheduler_steps);
+    assert_eq!(reg.gauge_value("qrazor_kv_bytes_peak", &sh), metrics.kv_bytes_peak as f64);
+    assert_eq!(reg.hist("qrazor_ttft_seconds", &sh).unwrap().len(), metrics.ttft.len());
+    assert_eq!(reg.hist("qrazor_latency_seconds", &sh).unwrap().len(), metrics.latency.len());
+    let decode = [("shard", "0"), ("stage", "decode")];
+    assert!(reg.hist("qrazor_stage_ms", &decode).is_some(), "timed run exports stage hists");
+
+    // Prometheus text carries the same numbers.
+    let text = reg.render_prometheus();
+    for (name, v) in [
+        ("qrazor_requests_submitted", metrics.requests_submitted),
+        ("qrazor_requests_completed", metrics.requests_completed),
+        ("qrazor_generated_tokens", metrics.generated_tokens),
+    ] {
+        let line = format!("{name}{{shard=\"0\"}} {v}");
+        assert!(text.contains(&line), "prometheus text missing {line:?}:\n{text}");
+    }
+
+    // JSON snapshot: schema-valid, and the flat keys hold the same
+    // values as the fields and the legacy Metrics::to_json dump.
+    let snapshot = Json::parse(&reg.to_json().to_string()).unwrap();
+    obs::validate_registry_json(&snapshot).unwrap();
+    let counters = snapshot.get("counters").unwrap();
+    for (key, v) in [
+        ("qrazor_requests_submitted{shard=0}", metrics.requests_submitted),
+        ("qrazor_generated_tokens{shard=0}", metrics.generated_tokens),
+        ("qrazor_scheduler_steps{shard=0}", metrics.scheduler_steps),
+    ] {
+        let got = counters.get(key).and_then(|j| j.as_f64());
+        assert_eq!(got, Some(v as f64), "snapshot counter {key}");
+    }
+    let hists = snapshot.get("histograms").unwrap();
+    let ttft = hists.get("qrazor_ttft_seconds{shard=0}").unwrap();
+    assert_eq!(ttft.get("count").and_then(|j| j.as_usize()), Some(metrics.ttft.len()));
+    let legacy = metrics.to_json();
+    assert_eq!(
+        legacy.get("generated_tokens").and_then(|j| j.as_usize()),
+        Some(metrics.generated_tokens as usize),
+        "legacy JSON agrees with the registry"
+    );
+}
+
+// ---------------------------------------------------------------- //
+// observe-only contract
+// ---------------------------------------------------------------- //
+
+/// Token streams and finish reasons are byte-identical with stage
+/// timing and tracing enabled — instrumentation never perturbs
+/// scheduling.
+#[test]
+fn token_streams_identical_with_telemetry_enabled() {
+    let _g = timing_guard();
+    let m = model(61);
+    let vocab = m.config.vocab as u64;
+    let work = workload(7, 8, vocab);
+
+    // Baseline: telemetry fully off.
+    obs::set_timing(false);
+    let mut base = Engine::new(Arc::clone(&m), ServeConfig { max_batch: 4, ..Default::default() });
+    for (i, (prompt, max_new, opts)) in work.iter().enumerate() {
+        base.submit_request(opts.build(RequestId(i as u64), prompt.clone(), *max_new));
+    }
+    let want: BTreeMap<u64, (Vec<u32>, FinishReason)> = base
+        .run_to_completion()
+        .into_iter()
+        .map(|r| (r.id.0, (r.tokens, r.finish)))
+        .collect();
+
+    // Same workload through a traced, timed server.
+    obs::set_timing(true);
+    let trace = TraceBuffer::new(8192);
+    let server = Server::spawn_with_telemetry(
+        Arc::clone(&m),
+        None,
+        ServeConfig { max_batch: 4, ..Default::default() },
+        Some(trace.clone()),
+    );
+    for (prompt, max_new, opts) in &work {
+        server.submit_with(prompt.clone(), *max_new, *opts).unwrap();
+    }
+    let sessions = collect_sessions(&server, work.len()).unwrap();
+    let got: BTreeMap<u64, (Vec<u32>, FinishReason)> = sessions
+        .into_iter()
+        .map(|(id, log)| {
+            let resp = log.response.expect("session finished");
+            (id.0, (resp.tokens, resp.finish))
+        })
+        .collect();
+    let metrics = server.shutdown_with_metrics().expect("serve worker");
+    obs::set_timing(false);
+
+    assert_eq!(got, want, "telemetry must be observe-only");
+    assert!(!metrics.stages.is_empty(), "the timed run did record stages");
+    assert!(!trace.events().is_empty(), "the traced run did record spans");
+    assert!(unbalanced_spans(&trace.events()).is_empty());
+}
+
+// ---------------------------------------------------------------- //
+// disabled-path overhead
+// ---------------------------------------------------------------- //
+
+/// With timing off and the trace buffer disabled, the hot-path
+/// primitives — stage spans, hot spans, trace emits — allocate
+/// nothing and record nothing.
+#[test]
+fn disabled_telemetry_allocates_nothing_on_hot_paths() {
+    let _g = timing_guard();
+    obs::set_timing(false);
+    let buf = TraceBuffer::new(64);
+    buf.set_enabled(false);
+    let mut times = StageTimes::default();
+
+    let before = allocs_on_this_thread();
+    for _ in 0..1000 {
+        let span = StageSpan::begin();
+        span.finish(Stage::Decode, &mut times);
+        let hot = HotSpan::begin();
+        hot.finish(HotStage::PackedAttention);
+        buf.emit(1, 0, "request", Phase::Begin, Vec::new());
+        buf.emit(1, 0, "request", Phase::End, Vec::new());
+    }
+    let after = allocs_on_this_thread();
+
+    assert_eq!(after, before, "disabled telemetry must not allocate");
+    assert!(times.is_empty(), "disabled stage spans must not accumulate");
+    assert!(buf.events().is_empty(), "disabled buffer must not record");
+    assert_eq!(buf.dropped(), 0);
+}
