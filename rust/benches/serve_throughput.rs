@@ -8,7 +8,10 @@
 //! sharded scale-out sweep, and a streaming-latency axis: per-request
 //! TTFT and inter-token p50/p95 measured from `TokenEvent` timestamps
 //! across shard counts and priority mixes, through the same `ServeApi`
-//! the CLI and example use. `--smoke` runs the reduced CI sweep.
+//! the CLI and example use. `--health` runs the numeric-health axis:
+//! a stale-calibration distribution shift that must trip the drift
+//! alarms and the escalation advisor. `--smoke` runs the reduced CI
+//! sweep.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -276,6 +279,128 @@ fn telemetry_axis(smoke: bool, metrics_path: &str, trace_path: &str) {
     obs::set_timing(false);
 }
 
+/// Numeric-health axis: the same nano serve run twice through the
+/// drift probes — once with fresh calibration (no alarms), once with
+/// the frozen scales attenuated to 0.4× so the live activations sit
+/// ~2.5× past the calibrated range (the stale-calibration /
+/// distribution-shift failure mode). The second run must trip the
+/// per-site drift alarms and the escalation advisor, whose suggested
+/// policy must measurably reduce the activation razoring error.
+/// Writes the `BENCH_quant_health.json` summary (drift p50/p99, alarm
+/// counts, pre/post-escalation error, embedded health snapshot);
+/// `--smoke` schema-checks it.
+fn health_axis(smoke: bool) {
+    use qrazor::obs;
+    use qrazor::policy::health::HealthReport;
+    use qrazor::policy::QuantPolicy;
+    use qrazor::util::json::Json;
+
+    let n_requests = if smoke { 8usize } else { 16 };
+    let max_new = 12usize;
+    println!(
+        "\n=== numeric-health axis ({n_requests} requests × {max_new} tokens, \
+         probe every 2 steps) ==="
+    );
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, 3);
+    // Generous calibration (most of the vocab) so the healthy phase's
+    // live amax stays inside the frozen range at every site.
+    let mut rng = Rng::new(4);
+    let seqs: Vec<Vec<u32>> = (0..32)
+        .map(|_| (0..32).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    let serve = ServeConfig {
+        max_batch: 4,
+        max_new_tokens: max_new,
+        health: obs::HealthConfig { sample_every_n_steps: 2, ..Default::default() },
+        ..Default::default()
+    };
+    obs::set_health(true);
+    // One phase = build from (possibly attenuated) calibration, serve
+    // the deterministic workload on a plain engine, return its health.
+    let run_phase = |attenuation: Option<f32>| -> obs::HealthStats {
+        obs::health_reset();
+        let mut cal = calibrate(&w, &seqs);
+        if let Some(f) = attenuation {
+            cal.calibrator.attenuate(f);
+        }
+        let qm = QuantModel::build(&w, policy.clone(), &cal);
+        let vocab = qm.config.vocab as u64;
+        let mut engine = Engine::new(qm, serve.clone());
+        let mut rng = Rng::new(7);
+        for _ in 0..n_requests {
+            let len = 4 + rng.index(16);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+            engine.submit(prompt, max_new, Sampling::Greedy);
+        }
+        let done = engine.run_to_completion();
+        assert_eq!(done.len(), n_requests);
+        std::mem::take(&mut engine.metrics.health)
+    };
+    let healthy = run_phase(None);
+    let shifted = run_phase(Some(0.4));
+    let snapshot = obs::health_json(Some(&shifted));
+    obs::set_health(false);
+    println!(
+        "  healthy: {} probe steps, {} alarms, drift p50 {:.2}",
+        healthy.probe_steps,
+        healthy.drift_alarms,
+        healthy.drift.pct(50.0)
+    );
+    println!(
+        "  shifted: {} probe steps, {} alarms, drift p50 {:.2} p99 {:.2}",
+        shifted.probe_steps,
+        shifted.drift_alarms,
+        shifted.drift.pct(50.0),
+        shifted.drift.pct(99.0)
+    );
+    let rep = HealthReport::from_stats(&shifted, &policy, 8);
+    print!("{}", rep.render_table());
+    let advice = rep.advice.as_ref().expect("shift workload must trip the advisor");
+    let cal = calibrate(&w, &seqs);
+    let err_before = policy.act_calibration_error(&cal, cfg.layers);
+    let err_after = advice.escalated.act_calibration_error(&cal, cfg.layers);
+    println!("  advisor escalation: razoring error {err_before:.4} -> {err_after:.4}");
+    let summary = Json::from_pairs(vec![
+        ("healthy_alarms", Json::from(healthy.drift_alarms as f64)),
+        ("shifted_alarms", Json::from(shifted.drift_alarms as f64)),
+        ("drift_p50", Json::from(shifted.drift.pct(50.0))),
+        ("drift_p99", Json::from(shifted.drift.pct(99.0))),
+        ("err_before", Json::from(err_before)),
+        ("err_after", Json::from(err_after)),
+        ("advice_dsl", Json::from(advice.dsl.as_str())),
+        ("health", snapshot),
+    ]);
+    std::fs::write("BENCH_quant_health.json", summary.to_string()).expect("write health bench");
+    println!("health summary -> BENCH_quant_health.json");
+    // The axis's contract — cheap enough to pin on every run.
+    assert_eq!(
+        healthy.drift_alarms, 0,
+        "healthy phase must not alarm (drift p50 {:.2})",
+        healthy.drift.pct(50.0)
+    );
+    assert!(
+        shifted.drift_alarms >= 5,
+        "stale scales must trip per-site alarms, got {}",
+        shifted.drift_alarms
+    );
+    assert!(
+        shifted.drift.pct(50.0) > 1.6,
+        "shifted drift p50 should sit near 2.5x, got {:.2}",
+        shifted.drift.pct(50.0)
+    );
+    assert!(
+        err_after < err_before,
+        "advisor escalation must reduce razoring error: {err_before:.4} -> {err_after:.4}"
+    );
+    if smoke {
+        let parsed = Json::parse(&summary.to_string()).expect("health summary parses");
+        obs::validate_health_json(parsed.req("health").expect("embedded snapshot"))
+            .expect("health snapshot schema");
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if std::env::args().any(|a| a == "--shared-prefix") {
@@ -294,6 +419,12 @@ fn main() {
     if std::env::args().any(|a| a == "--telemetry") {
         // CI entry: just the telemetry axis
         telemetry_axis(smoke, &metrics_path, &trace_path);
+        println!("serve_throughput OK");
+        return;
+    }
+    if std::env::args().any(|a| a == "--health") {
+        // CI entry: just the numeric-health / drift-advisor axis
+        health_axis(smoke);
         println!("serve_throughput OK");
         return;
     }
@@ -565,5 +696,6 @@ fn main() {
 
     shared_prefix_axis(smoke);
     telemetry_axis(smoke, &metrics_path, &trace_path);
+    health_axis(smoke);
     println!("serve_throughput OK");
 }

@@ -92,6 +92,7 @@ struct ShardState {
     prefix_hits: u64,
     reused_tokens: u64,
     preemptions: u64,
+    drift_alarms: u64,
     submitted: u64,
     completed: u64,
     generated_tokens: u64,
@@ -212,6 +213,7 @@ impl ClusterServer {
                     prefix_hits: 0,
                     reused_tokens: 0,
                     preemptions: 0,
+                    drift_alarms: 0,
                     submitted: 0,
                     completed: 0,
                     generated_tokens: 0,
@@ -249,6 +251,7 @@ impl ClusterServer {
                         s.shards[idx].prefix_hits = pulse.prefix_hits;
                         s.shards[idx].reused_tokens = pulse.reused_tokens;
                         s.shards[idx].preemptions = pulse.preemptions;
+                        s.shards[idx].drift_alarms = pulse.drift_alarms;
                         s.shards[idx].stage_times.merge(&pulse.stage_times);
                         // Accounting before forwarding: a client that
                         // just saw a Finished event reads live state
@@ -638,6 +641,7 @@ impl ServeApi for ClusterServer {
             st.prefix_hits += sh.prefix_hits;
             st.reused_tokens += sh.reused_tokens;
             st.preemptions += sh.preemptions;
+            st.drift_alarms += sh.drift_alarms;
         }
         st
     }

@@ -43,6 +43,9 @@ pub struct StepPulse {
     pub reused_tokens: u64,
     /// Cumulative low-priority preemptions.
     pub preemptions: u64,
+    /// Cumulative latched scale-drift alarms from the numeric-health
+    /// probes (0 unless the serve config enables probing).
+    pub drift_alarms: u64,
     /// This step's stage-time accumulator (all zeros unless
     /// [`crate::obs::set_timing`] is on) — the router merges these
     /// into live cluster-wide stage stats without waiting for the
@@ -116,6 +119,7 @@ impl ShardEngine {
                             prefix_hits: e.metrics.prefix_hits,
                             reused_tokens: e.metrics.reused_tokens,
                             preemptions: e.metrics.preemptions,
+                            drift_alarms: e.metrics.health.drift_alarms,
                             stage_times: e.last_step_stages,
                             events: e.take_events(),
                             done,

@@ -170,6 +170,9 @@ pub struct ServeConfig {
     /// dropped and counted in `ServeStats::events_dropped`;
     /// `Started`/`Finished` are always delivered). 0 = unbounded.
     pub event_ring: usize,
+    /// Numeric-health deep-probe cadence + drift-alarm tuning
+    /// (`sample_every_n_steps = 0` = probes off, the default).
+    pub health: crate::obs::HealthConfig,
 }
 
 impl Default for ServeConfig {
@@ -185,6 +188,7 @@ impl Default for ServeConfig {
             policy: "w4a4kv4:16".into(),
             draft_policy: "w4a4kv4:16".into(),
             event_ring: 1024,
+            health: crate::obs::HealthConfig::default(),
         }
     }
 }
@@ -204,6 +208,7 @@ impl ServeConfig {
             ("policy", Json::from(self.policy.clone())),
             ("draft_policy", Json::from(self.draft_policy.clone())),
             ("event_ring", Json::from(self.event_ring)),
+            ("health", self.health.to_json()),
         ])
     }
 
@@ -230,6 +235,12 @@ impl ServeConfig {
             policy: get_str("policy")?,
             draft_policy: get_str("draft_policy")?,
             event_ring: get("event_ring")?,
+            // Absent in manifests written before the health axis —
+            // default (probes off) rather than erroring.
+            health: match j.get("health") {
+                None | Some(Json::Null) => crate::obs::HealthConfig::default(),
+                Some(h) => crate::obs::HealthConfig::from_json(h)?,
+            },
         })
     }
 }

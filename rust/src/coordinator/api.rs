@@ -69,6 +69,9 @@ pub struct ServeStats {
     pub reused_tokens: u64,
     /// Running sequences preempted for higher-priority queued work.
     pub preemptions: u64,
+    /// Sites whose numeric-health drift EWMA has latched an alarm,
+    /// summed across engines (0 with probing off).
+    pub drift_alarms: u64,
 }
 
 impl ServeStats {
@@ -90,6 +93,7 @@ impl ServeStats {
         reg.counter("qrazor_prefix_hits", labels, self.prefix_hits);
         reg.counter("qrazor_prefix_reused_tokens", labels, self.reused_tokens);
         reg.counter("qrazor_preemptions", labels, self.preemptions);
+        reg.counter("qrazor_drift_alarms", labels, self.drift_alarms);
         reg.counter("qrazor_spec_rounds", labels, self.spec.steps);
         reg.gauge("qrazor_shards", labels, self.shards as f64);
         reg.gauge("qrazor_in_flight", labels, self.in_flight() as f64);

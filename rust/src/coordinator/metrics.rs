@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use crate::obs::{Registry, StageHists};
+use crate::obs::{HealthStats, Registry, StageHists};
 use crate::spec::SpecStats;
 use crate::util::json::Json;
 use crate::util::stats::Percentiles;
@@ -44,6 +44,10 @@ pub struct Metrics {
     /// Per-stage step-latency histograms (one sample per stage per
     /// scheduler step; empty until [`crate::obs::set_timing`] is on).
     pub stages: StageHists,
+    /// Numeric-health probe aggregate: drift EWMAs, razoring SNR, and
+    /// latched drift alarms (empty until `ServeConfig::health` turns
+    /// probing on).
+    pub health: HealthStats,
 }
 
 impl Default for Metrics {
@@ -64,6 +68,7 @@ impl Default for Metrics {
             reused_tokens: 0,
             preemptions: 0,
             stages: StageHists::default(),
+            health: HealthStats::default(),
         }
     }
 }
@@ -136,6 +141,12 @@ impl Metrics {
         if self.preemptions > 0 {
             s.push_str(&format!(" | preemptions: {}", self.preemptions));
         }
+        if self.health.probe_steps > 0 {
+            s.push_str(&format!(
+                " | health: {} probe steps, {} drift alarms",
+                self.health.probe_steps, self.health.drift_alarms,
+            ));
+        }
         s
     }
 
@@ -163,6 +174,8 @@ impl Metrics {
             ("prefix_hits", Json::from(self.prefix_hits as usize)),
             ("reused_tokens", Json::from(self.reused_tokens as usize)),
             ("preemptions", Json::from(self.preemptions as usize)),
+            ("probe_steps", Json::from(self.health.probe_steps as usize)),
+            ("drift_alarms", Json::from(self.health.drift_alarms as usize)),
         ])
     }
 
@@ -195,6 +208,7 @@ impl Metrics {
         reg.record_hist("qrazor_ttft_seconds", labels, self.ttft.histogram());
         reg.record_hist("qrazor_latency_seconds", labels, self.latency.histogram());
         self.stages.export(reg, labels);
+        self.health.export(reg, labels);
     }
 
     /// Fresh registry holding just this engine's metrics.
@@ -223,6 +237,7 @@ impl Metrics {
         self.reused_tokens += other.reused_tokens;
         self.preemptions += other.preemptions;
         self.stages.merge(&other.stages);
+        self.health.merge(&other.health);
     }
 }
 

@@ -279,6 +279,7 @@ impl Engine {
     /// One scheduling quantum. Returns the number of tokens generated.
     pub fn step(&mut self) -> usize {
         self.metrics.scheduler_steps += 1;
+        let probing = self.begin_probe();
         let spec_on = self.speculative();
         // Per-step stage accounting: all spans are no-ops (no clock
         // read, no allocation) unless `obs::set_timing` is on.
@@ -412,6 +413,7 @@ impl Engine {
         // attached and the request decodes greedily.
         let ids: Vec<RequestId> = self.active.keys().copied().collect();
         if ids.is_empty() {
+            self.finish_probe(probing);
             self.metrics.stages.observe_step(&st);
             self.last_step_stages = st;
             return 0;
@@ -617,9 +619,49 @@ impl Engine {
         self.pool.evict_to_capacity();
         self.draft_pool.evict_to_capacity();
         evict_span.finish(Stage::KvEvict, &mut st);
+        self.finish_probe(probing);
         self.metrics.stages.observe_step(&st);
         self.last_step_stages = st;
         generated
+    }
+
+    /// Arm the deep-probe flag when this step hits the configured
+    /// sampling cadence. With probing unconfigured (the default
+    /// `sample_every_n_steps = 0`) this is a branch on a plain config
+    /// field — no atomics, no allocation.
+    fn begin_probe(&self) -> bool {
+        let n = self.config.health.sample_every_n_steps;
+        let probing = n > 0 && self.metrics.scheduler_steps % n as u64 == 0;
+        if probing {
+            crate::obs::set_probe(true);
+        }
+        probing
+    }
+
+    /// Close a probe step: clear the flag, drain the per-site samples
+    /// through the drift detector into `metrics.health`, and emit a
+    /// `scale_drift_alarm` trace instant for every newly latched site.
+    /// Called on every exit path of [`Engine::step`] so an idle step
+    /// can never leave the probe flag armed.
+    fn finish_probe(&mut self, probing: bool) {
+        if !probing {
+            return;
+        }
+        crate::obs::set_probe(false);
+        self.metrics.health.probe_steps += 1;
+        let det = crate::policy::health::DriftDetector::new(self.config.health);
+        for s in crate::obs::take_probe_samples() {
+            if !det.observe(&mut self.metrics.health, &s) {
+                continue;
+            }
+            if let Some(t) = &self.trace {
+                t.instant(
+                    0,
+                    "scale_drift_alarm",
+                    vec![("site", s.site.clone()), ("drift", format!("{:.3}", s.drift))],
+                );
+            }
+        }
     }
 
     /// When the head of the admission queue cannot fit, preempt the

@@ -99,6 +99,7 @@ impl Server {
                     s.prefix_hits = e.metrics.prefix_hits;
                     s.reused_tokens = e.metrics.reused_tokens;
                     s.preemptions = e.metrics.preemptions;
+                    s.drift_alarms = e.metrics.health.drift_alarms;
                 }
                 for ev in e.take_events() {
                     event_tx.send(ev);

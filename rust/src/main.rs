@@ -79,7 +79,21 @@ fn cli() -> Cli {
             Some(""),
             "serve: write a Chrome trace_event JSON (Perfetto-loadable) to this path",
         )
+        .opt(
+            "health-json",
+            Some(""),
+            "serve: write the numeric-health snapshot JSON to this path (implies --health)",
+        )
+        .opt(
+            "manifest-out",
+            Some(""),
+            "quantize: write the policy manifest + health snapshot JSON to this path",
+        )
         .flag("quick", "use the quick evaluation scale")
+        .flag(
+            "health",
+            "enable numeric-health counters (serve adds sampled drift probes + the advisor)",
+        )
 }
 
 /// The policy string in effect: `--policy` when given, else the legacy
@@ -198,6 +212,15 @@ fn main() -> anyhow::Result<()> {
             } else {
                 policy
             };
+            // Numeric health: count razoring events while the build
+            // compresses every weight site, then report them next to
+            // the plan table (and into --manifest-out).
+            let manifest_out = args.get_str("manifest-out")?;
+            let health_on = args.has("health") || !manifest_out.is_empty();
+            if health_on {
+                qrazor::obs::health_reset();
+                qrazor::obs::set_health(true);
+            }
             let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
             let (packed, unpacked) = qm.weight_operand_bytes();
             println!("policy: {}", qm.policy.name());
@@ -223,12 +246,51 @@ fn main() -> anyhow::Result<()> {
                     fmt(qm.policy.resolve(li, qrazor::policy::Site::KvCache)),
                 );
             }
+            if health_on {
+                qrazor::obs::set_health(false);
+                println!("razoring health (build-time, per site):");
+                println!(
+                    "  {:<14} {:>9} {:>11} {:>9} {:>10} {:>8}",
+                    "site", "groups", "values", "zeroed%", "saturated", "clipped"
+                );
+                for c in qrazor::obs::counters_snapshot() {
+                    println!(
+                        "  {:<14} {:>9} {:>11} {:>8.3}% {:>10} {:>8}",
+                        c.key(),
+                        c.groups,
+                        c.values,
+                        100.0 * c.zeroed_fraction(),
+                        c.saturated,
+                        c.clipped
+                    );
+                }
+                if !manifest_out.is_empty() {
+                    let health = qrazor::obs::health_json(None);
+                    qrazor::obs::validate_health_json(&health)?;
+                    let manifest = qrazor::util::json::Json::from_pairs(vec![
+                        ("policy", qm.policy.to_json()),
+                        ("health", health),
+                    ]);
+                    std::fs::write(&manifest_out, manifest.to_string())?;
+                    println!("manifest -> {manifest_out}");
+                }
+            }
         }
         Some("serve") => {
             let exp = build_experiment(&preset, scale, seed)?;
             let policy_str = policy_arg(&args, "policy", "scheme")?;
             let policy = QuantPolicy::parse(&policy_str)?;
             policy.check_layers(exp.config.layers)?;
+            // Numeric health: --health (or --health-json) turns on the
+            // razoring counters and arms the sampled drift probes; the
+            // shutdown path then renders the drift report + advisor.
+            let health_json_path = args.get_str("health-json")?;
+            let health_on = args.has("health") || !health_json_path.is_empty();
+            if health_on {
+                qrazor::obs::health_reset();
+                qrazor::obs::set_health(true);
+            }
+            let report_policy = policy.clone();
             let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
             let n = args.get_usize("requests")?;
             let max_new = args.get_usize("max-new")?;
@@ -253,6 +315,11 @@ fn main() -> anyhow::Result<()> {
                 spec_k,
                 policy: policy_str,
                 draft_policy: draft_str,
+                health: if health_on {
+                    qrazor::obs::HealthConfig { sample_every_n_steps: 4, ..Default::default() }
+                } else {
+                    qrazor::obs::HealthConfig::default()
+                },
                 ..Default::default()
             };
             println!("serve manifest: {}", serve_cfg.to_json());
@@ -286,8 +353,28 @@ fn main() -> anyhow::Result<()> {
                     return Ok(());
                 }
                 qrazor::obs::export_hot(&mut reg);
+                if health_on {
+                    qrazor::obs::export_counters(&mut reg);
+                }
                 std::fs::write(&metrics_path, reg.to_json().to_string())?;
                 println!("metrics registry -> {metrics_path}");
+                Ok(())
+            };
+            // Drift report + advisor, rendered from whichever front-end
+            // served (merged across shards in the cluster case).
+            let report_health = |stats: &qrazor::obs::HealthStats| -> anyhow::Result<()> {
+                if !health_on {
+                    return Ok(());
+                }
+                let rep =
+                    qrazor::policy::health::HealthReport::from_stats(stats, &report_policy, 8);
+                print!("{}", rep.render_table());
+                if !health_json_path.is_empty() {
+                    let j = qrazor::obs::health_json(Some(stats));
+                    qrazor::obs::validate_health_json(&j)?;
+                    std::fs::write(&health_json_path, j.to_string())?;
+                    println!("health snapshot -> {health_json_path}");
+                }
                 Ok(())
             };
             // Both front-ends implement ServeApi, so the workload
@@ -310,6 +397,7 @@ fn main() -> anyhow::Result<()> {
                     print!("{}", merged.stages.render_table("step-stage latency (all shards, ms)"));
                 }
                 write_registry(report.registry())?;
+                report_health(&merged.health)?;
             } else {
                 let server = Server::spawn_with_telemetry(qm, draft, serve_cfg, trace.clone());
                 let (done, dt) = run_serve(&server, prompts, max_new, priority)?;
@@ -320,6 +408,7 @@ fn main() -> anyhow::Result<()> {
                             print!("{}", m.stages.render_table("step-stage latency (ms)"));
                         }
                         write_registry(m.to_registry(&[("shard", "0")]))?;
+                        report_health(&m.health)?;
                     }
                     None => println!("served {done} requests in {dt:.2}s\nworker panicked"),
                 }

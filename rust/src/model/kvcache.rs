@@ -253,6 +253,17 @@ impl SdrKvCache {
             .iter()
             .map(|&x| crate::quant::round_half_even(x * inv).clamp(-q, q))
             .collect();
+        // Numeric health: stage-1 clip events at the static KV/query
+        // scale (one relaxed load when disabled; the per-group razor
+        // counters bump inside compress_group below).
+        if crate::obs::health::health_enabled() {
+            let clipped = row
+                .iter()
+                .zip(&ints)
+                .filter(|&(&x, &v)| crate::quant::round_half_even(x * inv) != v)
+                .count();
+            crate::obs::health::note_clips(clipped);
+        }
         let mut codes = vec![SdrCode::default(); row.len()];
         let mut flags = Vec::with_capacity(row.len().div_ceil(spec.group));
         for (chunk, out) in ints.chunks(spec.group).zip(codes.chunks_mut(spec.group)) {
@@ -324,6 +335,8 @@ impl SdrKvCache {
             self.table.push(Arc::new(Page::empty(self.specs.len())));
         }
         let pg = Arc::make_mut(&mut self.table[pi]);
+        // Attribute the razor/clip counters to this layer's KV site.
+        let _hs = crate::obs::health::SiteScope::enter(layer, crate::policy::Site::KvCache);
         SdrKvCache::compress_row(spec, k_row, ks, &mut pg.k[layer]);
         SdrKvCache::compress_row(spec, v_row, vs, &mut pg.v[layer]);
     }
@@ -469,13 +482,17 @@ impl SdrKvCache {
         let qgpr = q_dim / g; // groups per query row
         let mut q_signed = vec![0i16; n_q * q_dim];
         let mut q_flags = vec![0u8; n_q * qgpr];
-        for i in 0..n_q {
-            let (codes, flags) =
-                SdrKvCache::razor_row(spec, &q_rows[i * q_dim..(i + 1) * q_dim], q_scale);
-            for (o, c) in q_signed[i * q_dim..(i + 1) * q_dim].iter_mut().zip(&codes) {
-                *o = c.signed() as i16;
+        {
+            // Attribute query-side razor/clip counters to this layer.
+            let _hs = crate::obs::health::SiteScope::enter(layer, crate::policy::Site::Query);
+            for i in 0..n_q {
+                let (codes, flags) =
+                    SdrKvCache::razor_row(spec, &q_rows[i * q_dim..(i + 1) * q_dim], q_scale);
+                for (o, c) in q_signed[i * q_dim..(i + 1) * q_dim].iter_mut().zip(&codes) {
+                    *o = c.signed() as i16;
+                }
+                q_flags[i * qgpr..(i + 1) * qgpr].copy_from_slice(&flags);
             }
-            q_flags[i * qgpr..(i + 1) * qgpr].copy_from_slice(&flags);
         }
 
         let gph = head_dim / g; // groups per head slice

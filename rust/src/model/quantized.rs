@@ -178,6 +178,9 @@ impl QuantModel {
             panic!("{e}");
         }
         let prep = |li: usize, site: Site, weight: &Tensor<f32>, cal_site: &str| {
+            // Attribute weight-razoring health counters to this
+            // (layer, site) while the solver + compressor run.
+            let _hs = crate::obs::health::SiteScope::enter(li, site);
             policy.prep_linear(li, site, weight, cal.sample(cal_site))
         };
         let layers = w
@@ -265,6 +268,7 @@ impl QuantModel {
                 rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
             }
             let act = |x: &Tensor<f32>, s: Option<f32>| self.policy.act(li, Site::Act, x, s);
+            let _hs = crate::obs::health::SiteScope::enter(li, Site::Act);
             let s_in = self.linear_scale(li, Site::Act, &format!("l{li}.attn_in"));
             let mut q = layer.wq.forward_with_packed(&normed, s_in, &act, self.use_packed);
             let mut k = layer.wk.forward_with_packed(&normed, s_in, &act, self.use_packed);
@@ -275,15 +279,20 @@ impl QuantModel {
             // (Fig. 5); the policy resolves each layer's Query/KvCache
             // plans (baselines apply their scheme's kv() hook).
             let kvbits = self.policy.kv_basis_bits(li);
-            let qq = self
-                .policy
-                .query_transform(li, &q, self.act_scale(&format!("l{li}.q"), kvbits));
-            let kq = self
-                .policy
-                .kv_transform(li, &k, self.act_scale(&format!("l{li}.k"), kvbits));
-            let vq = self
-                .policy
-                .kv_transform(li, &v, self.act_scale(&format!("l{li}.v"), kvbits));
+            let qq = {
+                let _q = crate::obs::health::SiteScope::enter(li, Site::Query);
+                self.policy
+                    .query_transform(li, &q, self.act_scale(&format!("l{li}.q"), kvbits))
+            };
+            let (kq, vq) = {
+                let _kv = crate::obs::health::SiteScope::enter(li, Site::KvCache);
+                (
+                    self.policy
+                        .kv_transform(li, &k, self.act_scale(&format!("l{li}.k"), kvbits)),
+                    self.policy
+                        .kv_transform(li, &v, self.act_scale(&format!("l{li}.v"), kvbits)),
+                )
+            };
             let ctx = causal_attention(&qq, &kq, &vq, cfg.heads, cfg.kv_heads, hd);
             let s_out = self.linear_scale(li, Site::Act, &format!("l{li}.attn_out"));
             let attn_out = layer.wo.forward_with_packed(&ctx, s_out, &act, self.use_packed);
@@ -309,6 +318,7 @@ impl QuantModel {
         let act_head =
             |x: &Tensor<f32>, s: Option<f32>| self.policy.act(head_layer, Site::LmHead, x, s);
         let s_head = self.linear_scale(head_layer, Site::LmHead, "lm_head_in");
+        let _hs = crate::obs::health::SiteScope::enter(head_layer, Site::LmHead);
         self.lm_head.forward_with_packed(&normed, s_head, &act_head, self.use_packed)
     }
 }
@@ -412,9 +422,18 @@ impl QuantModel {
                 let scales: Vec<(f32, f32)> = (0..layers)
                     .map(|li| {
                         let bits = self.policy.kv_basis_bits(li);
+                        // An uncalibrated KV site silently serving off
+                        // the 0.01 fallback is exactly the skew the
+                        // health counters exist to expose.
+                        let miss = |site: String| {
+                            crate::obs::health::note_scale_miss(&site);
+                            0.01
+                        };
                         (
-                            self.act_scale(&format!("l{li}.k"), bits).unwrap_or(0.01),
-                            self.act_scale(&format!("l{li}.v"), bits).unwrap_or(0.01),
+                            self.act_scale(&format!("l{li}.k"), bits)
+                                .unwrap_or_else(|| miss(format!("l{li}.k"))),
+                            self.act_scale(&format!("l{li}.v"), bits)
+                                .unwrap_or_else(|| miss(format!("l{li}.v"))),
                         )
                     })
                     .collect();
@@ -481,13 +500,16 @@ impl QuantModel {
                 rmsnorm(x.row(i), &layer.attn_norm, 1e-5, normed.row_mut(i));
             }
             let act = |x: &Tensor<f32>, s: Option<f32>| self.policy.act(li, Site::Act, x, s);
+            let _hs = crate::obs::health::SiteScope::enter(li, Site::Act);
             let kvbits = self.policy.kv_basis_bits(li);
             let s_in = self.linear_scale(li, Site::Act, &format!("l{li}.attn_in"));
+            self.probe_act(li, Site::Act, &format!("l{li}.attn_in"), &normed);
             let mut q = layer.wq.forward_with_packed(&normed, s_in, &act, self.use_packed);
             let mut k = layer.wk.forward_with_packed(&normed, s_in, &act, self.use_packed);
             let v = layer.wv.forward_with_packed(&normed, s_in, &act, self.use_packed);
             apply_rope(&mut q, cfg.heads, hd, start_pos);
             apply_rope(&mut k, cfg.kv_heads, hd, start_pos);
+            self.probe_qkv(li, &q, &k, &v);
             // Append every chunk row before attention: row i's horizon
             // includes its own K/V and all earlier chunk rows, exactly
             // as if the rows had arrived one token at a time.
@@ -498,6 +520,7 @@ impl QuantModel {
                     }
                 }
                 DecodeCache::Fp(c) => {
+                    let _kv = crate::obs::health::SiteScope::enter(li, Site::KvCache);
                     let kq = self
                         .policy
                         .kv_transform(li, &k, self.act_scale(&format!("l{li}.k"), kvbits));
@@ -539,7 +562,10 @@ impl QuantModel {
                 // reconstructed K/V, each chunk row bounded to its own
                 // causal horizon in the same arithmetic order as the
                 // single-token path
-                let qq = self.policy.query_transform(li, &q, s_q);
+                let qq = {
+                    let _q = crate::obs::health::SiteScope::enter(li, Site::Query);
+                    self.policy.query_transform(li, &q, s_q)
+                };
                 let (k_all, v_all) = match cache {
                     DecodeCache::Sdr(c) => (c.k_matrix(li), c.v_matrix(li)),
                     DecodeCache::Fp(c) => (c.k_matrix(li), c.v_matrix(li)),
@@ -576,12 +602,14 @@ impl QuantModel {
                 ctx
             };
             let s_out = self.linear_scale(li, Site::Act, &format!("l{li}.attn_out"));
+            self.probe_act(li, Site::Act, &format!("l{li}.attn_out"), &ctx);
             let attn_out = layer.wo.forward_with_packed(&ctx, s_out, &act, self.use_packed);
             add_assign(&mut x, &attn_out);
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.ffn_norm, 1e-5, normed.row_mut(i));
             }
             let s_ffn = self.linear_scale(li, Site::Act, &format!("l{li}.ffn_in"));
+            self.probe_act(li, Site::Act, &format!("l{li}.ffn_in"), &normed);
             let gate = layer.w_gate.forward_with_packed(&normed, s_ffn, &act, self.use_packed);
             let up = layer.w_up.forward_with_packed(&normed, s_ffn, &act, self.use_packed);
             let mut h = Tensor::zeros(&[t, cfg.ffn_hidden]);
@@ -589,6 +617,7 @@ impl QuantModel {
                 *o = silu(g) * u;
             }
             let s_down = self.linear_scale(li, Site::Act, &format!("l{li}.ffn_down_in"));
+            self.probe_act(li, Site::Act, &format!("l{li}.ffn_down_in"), &h);
             let ffn_out = layer.w_down.forward_with_packed(&h, s_down, &act, self.use_packed);
             add_assign(&mut x, &ffn_out);
         }
@@ -599,7 +628,48 @@ impl QuantModel {
         let act_head =
             |x: &Tensor<f32>, s: Option<f32>| self.policy.act(head_layer, Site::LmHead, x, s);
         let s_head = self.linear_scale(head_layer, Site::LmHead, "lm_head_in");
+        self.probe_act(head_layer, Site::LmHead, "lm_head_in", &normed);
+        let _hs = crate::obs::health::SiteScope::enter(head_layer, Site::LmHead);
         self.lm_head.forward_with_packed(&normed, s_head, &act_head, self.use_packed)
+    }
+
+    /// Deep probe for an activation-razoring site: live amax vs the
+    /// frozen calibration amax, plus the policy transform's own
+    /// reconstruction error on the live tensor. Runs only on sampled
+    /// probe steps ([`crate::obs::health::probe_enabled`]); disabled
+    /// cost is one relaxed atomic load, zero allocations.
+    fn probe_act(&self, li: usize, site: Site, cal_site: &str, x: &Tensor<f32>) {
+        if !crate::obs::health::probe_enabled() {
+            return;
+        }
+        let Some(&frozen) = self.site_amax.get(cal_site) else {
+            return;
+        };
+        let s = self.linear_scale(li, site, cal_site);
+        let razored = self.policy.act(li, site, x, s);
+        crate::obs::health::probe_site(cal_site, x.data(), frozen, razored.data());
+    }
+
+    /// Deep probe for the post-RoPE query/KV razoring sites.
+    fn probe_qkv(&self, li: usize, q: &Tensor<f32>, k: &Tensor<f32>, v: &Tensor<f32>) {
+        if !crate::obs::health::probe_enabled() {
+            return;
+        }
+        let kvbits = self.policy.kv_basis_bits(li);
+        for (name, x) in [("q", q), ("k", k), ("v", v)] {
+            let cal_site = format!("l{li}.{name}");
+            let Some(&frozen) = self.site_amax.get(&cal_site) else {
+                continue;
+            };
+            let s = self.act_scale(&cal_site, kvbits);
+            let t = if name == "q" {
+                let sq = self.policy.query_effective_scale(li, s);
+                self.policy.query_transform(li, x, sq)
+            } else {
+                self.policy.kv_transform(li, x, s)
+            };
+            crate::obs::health::probe_site(&cal_site, x.data(), frozen, t.data());
+        }
     }
 }
 

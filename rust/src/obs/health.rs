@@ -1,0 +1,922 @@
+//! Numeric-health observability for the quantizer: per-(layer, site)
+//! razoring counters, sampled drift/SNR deep probes, and the health
+//! snapshot schema.
+//!
+//! QRazor's accuracy rests on two silent assumptions — stage-1 absmax
+//! scales keep live values in range, and SDR's salient window captures
+//! what matters. This module watches both at serve time, in three
+//! tiers:
+//!
+//! * **Always-available counters** ([`set_health`], default off):
+//!   the razoring choke points (`sdr::razor::compress_group`, the
+//!   fused `qrazor_fake_quant_slice` kernel, stage-1
+//!   `quant/absmax.rs` clamps, the packed KV compressors) bump static
+//!   per-slot atomics — groups/values/zeroed/saturated/clipped plus a
+//!   flag-distribution histogram (which salient window each group
+//!   landed in) — attributed to the current `(layer, Site)` via the
+//!   [`SiteScope`] thread-local guard the model forward installs.
+//!   Snapshot with [`counters_snapshot`], export with
+//!   [`export_counters`] (`qrazor_razor_*{layer=..,site=..}`).
+//! * **Sampled deep probes** ([`set_probe`], driven by
+//!   `HealthConfig::sample_every_n_steps`): on sampled decode steps
+//!   the forward additionally compares live activation amax against
+//!   the frozen calibration amax per site (drift ratio) and measures
+//!   razoring MSE/SNR on the already-materialized pre-quant
+//!   activations ([`probe_site`]); the scheduler drains the
+//!   per-step aggregate with [`take_probe_samples`] into the
+//!   mergeable [`HealthStats`] carried by `coordinator::Metrics`.
+//!   The drift detector and escalation advisor over these live in
+//!   `policy::health`.
+//! * **Scale-miss accounting** (always on — a miss is a
+//!   misconfiguration, not telemetry): `StaticScales::scale` and the
+//!   KV-cache scale lookups count sites that were never calibrated
+//!   ([`note_scale_miss`]), logging each missing site name once.
+//!
+//! **Overhead contract** (same as `obs::timing`): everything is
+//! observe-only — token streams are byte-identical with health
+//! enabled — and the disabled path costs one relaxed atomic load per
+//! choke point (plus a plain thread-local swap per site boundary),
+//! with **zero heap allocations**; pinned by the counting-allocator
+//! test in `rust/tests/quant_health.rs`. Enabled, the counters add a
+//! second pass of relaxed `fetch_add`s per compressed group; probes
+//! allocate, but only on sampled steps.
+
+use crate::obs::registry::{LogHistogram, Registry};
+use crate::policy::Site;
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+// ---- gates ----------------------------------------------------------
+
+static HEALTH: AtomicBool = AtomicBool::new(false);
+static PROBE: AtomicBool = AtomicBool::new(false);
+
+/// Globally enable/disable the numeric-health counters (default off).
+pub fn set_health(on: bool) {
+    HEALTH.store(on, Ordering::Relaxed);
+}
+
+/// One relaxed load — the whole cost of a disabled choke point.
+#[inline]
+pub fn health_enabled() -> bool {
+    HEALTH.load(Ordering::Relaxed)
+}
+
+/// Mark the current scheduler step as a deep-probe step. Set by the
+/// engine at the top of a sampled step, cleared before it returns.
+pub fn set_probe(on: bool) {
+    PROBE.store(on, Ordering::Relaxed);
+}
+
+/// One relaxed load — the whole cost of a non-sampled site boundary.
+#[inline]
+pub fn probe_enabled() -> bool {
+    PROBE.load(Ordering::Relaxed)
+}
+
+/// Deep-probe sampling cadence + drift-alarm tuning, carried by
+/// `ServeConfig`. Default: probes off, alarm when the per-site EWMA of
+/// live/calibrated amax exceeds 1.5×.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthConfig {
+    /// Probe every N scheduler steps (0 = never).
+    pub sample_every_n_steps: usize,
+    /// EWMA drift ratio above which a site latches an alarm.
+    pub alarm_ratio: f64,
+    /// EWMA smoothing factor in (0, 1]; 1.0 = last sample only.
+    pub ewma_alpha: f64,
+    /// Probe samples a site needs before its alarm can fire.
+    pub min_samples: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            sample_every_n_steps: 0,
+            alarm_ratio: 1.5,
+            ewma_alpha: 0.3,
+            min_samples: 2,
+        }
+    }
+}
+
+impl HealthConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("sample_every_n_steps", Json::from(self.sample_every_n_steps)),
+            ("alarm_ratio", Json::from(self.alarm_ratio)),
+            ("ewma_alpha", Json::from(self.ewma_alpha)),
+            ("min_samples", Json::from(self.min_samples as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<HealthConfig> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            j.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("field '{k}' not a number"))
+        };
+        Ok(HealthConfig {
+            sample_every_n_steps: num("sample_every_n_steps")? as usize,
+            alarm_ratio: num("alarm_ratio")?,
+            ewma_alpha: num("ewma_alpha")?,
+            min_samples: num("min_samples")? as u64,
+        })
+    }
+}
+
+// ---- (layer, site) slot attribution ---------------------------------
+
+/// Site kinds tracked per layer (the `policy::Site` variants, in
+/// declaration order).
+pub const NSITE_KINDS: usize = 11;
+/// Layers beyond this fold into the last tracked layer slot.
+pub const MAX_LAYERS: usize = 64;
+/// Slot 0 is "untracked" (no [`SiteScope`] installed).
+const NSLOTS: usize = 1 + MAX_LAYERS * NSITE_KINDS;
+/// Group flags are < 16 for every legal spec (base_bits ≤ 16).
+pub const FLAG_BUCKETS: usize = 16;
+
+fn site_index(site: Site) -> usize {
+    match site {
+        Site::Wq => 0,
+        Site::Wk => 1,
+        Site::Wv => 2,
+        Site::Wo => 3,
+        Site::Gate => 4,
+        Site::Up => 5,
+        Site::Down => 6,
+        Site::LmHead => 7,
+        Site::Act => 8,
+        Site::Query => 9,
+        Site::KvCache => 10,
+    }
+}
+
+const SITE_KIND_NAMES: [&str; NSITE_KINDS] =
+    ["wq", "wk", "wv", "wo", "gate", "up", "down", "lm_head", "act", "query", "kv"];
+
+static GROUPS: [AtomicU64; NSLOTS] = [const { AtomicU64::new(0) }; NSLOTS];
+static VALUES: [AtomicU64; NSLOTS] = [const { AtomicU64::new(0) }; NSLOTS];
+static ZEROED: [AtomicU64; NSLOTS] = [const { AtomicU64::new(0) }; NSLOTS];
+static SATURATED: [AtomicU64; NSLOTS] = [const { AtomicU64::new(0) }; NSLOTS];
+static CLIPPED: [AtomicU64; NSLOTS] = [const { AtomicU64::new(0) }; NSLOTS];
+static FLAGS: [AtomicU64; NSLOTS * FLAG_BUCKETS] =
+    [const { AtomicU64::new(0) }; NSLOTS * FLAG_BUCKETS];
+
+thread_local! {
+    static SLOT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// RAII guard attributing subsequent razor/clip events on this thread
+/// to `(layer, site)`. A plain thread-local swap both ways — no
+/// atomics, no allocation — so the model forward installs it
+/// unconditionally. Nests (restores the previous scope on drop).
+#[must_use]
+pub struct SiteScope {
+    prev: usize,
+}
+
+impl SiteScope {
+    #[inline]
+    pub fn enter(layer: usize, site: Site) -> SiteScope {
+        let slot = 1 + layer.min(MAX_LAYERS - 1) * NSITE_KINDS + site_index(site);
+        SiteScope { prev: SLOT.replace(slot) }
+    }
+}
+
+impl Drop for SiteScope {
+    #[inline]
+    fn drop(&mut self) {
+        SLOT.set(self.prev);
+    }
+}
+
+// ---- choke-point hooks ----------------------------------------------
+
+/// Record one compressed group's outcome: its flag, element count, and
+/// how many codes razored to zero / saturated at the all-ones code.
+/// Call sites gate on [`health_enabled`] themselves (the counting pass
+/// that produces these arguments is the expensive part).
+#[inline]
+pub fn note_razor_group(flag: u8, n: usize, zeroed: usize, saturated: usize) {
+    let s = SLOT.get();
+    GROUPS[s].fetch_add(1, Ordering::Relaxed);
+    VALUES[s].fetch_add(n as u64, Ordering::Relaxed);
+    if zeroed > 0 {
+        ZEROED[s].fetch_add(zeroed as u64, Ordering::Relaxed);
+    }
+    if saturated > 0 {
+        SATURATED[s].fetch_add(saturated as u64, Ordering::Relaxed);
+    }
+    let f = (flag as usize).min(FLAG_BUCKETS - 1);
+    FLAGS[s * FLAG_BUCKETS + f].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record stage-1 range-clamp events (values beyond ±qmax before the
+/// clamp). Call sites gate on [`health_enabled`].
+#[inline]
+pub fn note_clips(clipped: usize) {
+    if clipped > 0 {
+        CLIPPED[SLOT.get()].fetch_add(clipped as u64, Ordering::Relaxed);
+    }
+}
+
+// ---- scale-miss accounting (always on) ------------------------------
+
+static SCALE_MISSES: AtomicU64 = AtomicU64::new(0);
+static MISS_SITES: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
+
+/// Count a static-scale lookup for a site calibration never saw, and
+/// log the site name the first time it misses. Off the hot path by
+/// construction — a serving stack that hits this at all is
+/// misconfigured, which is exactly why it must be visible.
+pub fn note_scale_miss(site: &str) {
+    SCALE_MISSES.fetch_add(1, Ordering::Relaxed);
+    let mut sites = MISS_SITES.lock().unwrap_or_else(|e| e.into_inner());
+    let n = sites.entry(site.to_string()).or_insert(0);
+    if *n == 0 {
+        eprintln!("qrazor-health: no calibrated scale for site '{site}' (fallback scale in use)");
+    }
+    *n += 1;
+}
+
+/// Total static-scale misses since the last [`health_reset`].
+pub fn scale_miss_count() -> u64 {
+    SCALE_MISSES.load(Ordering::Relaxed)
+}
+
+/// Per-site miss counts (sorted by site name).
+pub fn scale_miss_sites() -> Vec<(String, u64)> {
+    let sites = MISS_SITES.lock().unwrap_or_else(|e| e.into_inner());
+    sites.iter().map(|(k, v)| (k.clone(), *v)).collect()
+}
+
+// ---- counter snapshot / export --------------------------------------
+
+/// Razoring counters for one `(layer, site)` slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiteCounters {
+    /// Layer index (clamped to [`MAX_LAYERS`]−1; meaningless for the
+    /// "untracked" slot).
+    pub layer: usize,
+    /// Site kind key (`policy::Site::key`) or `"untracked"`.
+    pub site: &'static str,
+    pub groups: u64,
+    pub values: u64,
+    pub zeroed: u64,
+    pub saturated: u64,
+    pub clipped: u64,
+    /// Group count per flag value (salient-window distribution).
+    pub flags: [u64; FLAG_BUCKETS],
+}
+
+impl SiteCounters {
+    /// Fraction of compressed codes razored to zero (Fig. 2(c), live).
+    pub fn zeroed_fraction(&self) -> f64 {
+        if self.values == 0 {
+            0.0
+        } else {
+            self.zeroed as f64 / self.values as f64
+        }
+    }
+
+    /// Canonical snapshot key: `l{layer}.{site}` (or `untracked`).
+    pub fn key(&self) -> String {
+        if self.site == "untracked" {
+            self.site.to_string()
+        } else {
+            format!("l{}.{}", self.layer, self.site)
+        }
+    }
+}
+
+fn read_slot(slot: usize) -> SiteCounters {
+    let (layer, site) = if slot == 0 {
+        (0, "untracked")
+    } else {
+        ((slot - 1) / NSITE_KINDS, SITE_KIND_NAMES[(slot - 1) % NSITE_KINDS])
+    };
+    let mut flags = [0u64; FLAG_BUCKETS];
+    for (f, out) in flags.iter_mut().enumerate() {
+        *out = FLAGS[slot * FLAG_BUCKETS + f].load(Ordering::Relaxed);
+    }
+    SiteCounters {
+        layer,
+        site,
+        groups: GROUPS[slot].load(Ordering::Relaxed),
+        values: VALUES[slot].load(Ordering::Relaxed),
+        zeroed: ZEROED[slot].load(Ordering::Relaxed),
+        saturated: SATURATED[slot].load(Ordering::Relaxed),
+        clipped: CLIPPED[slot].load(Ordering::Relaxed),
+        flags,
+    }
+}
+
+/// Snapshot every slot that saw activity (groups or clips), sorted by
+/// (layer, site index) with the untracked slot first when non-empty.
+pub fn counters_snapshot() -> Vec<SiteCounters> {
+    (0..NSLOTS)
+        .map(read_slot)
+        .filter(|c| c.groups > 0 || c.clipped > 0)
+        .collect()
+}
+
+/// Counters for one specific `(layer, site)` — test/assertion helper.
+pub fn site_counters(layer: usize, site: Site) -> SiteCounters {
+    read_slot(1 + layer.min(MAX_LAYERS - 1) * NSITE_KINDS + site_index(site))
+}
+
+/// Reset every global health accumulator (bench section boundaries,
+/// test isolation). Probe aggregates and scale-miss logs clear too.
+pub fn health_reset() {
+    for slot in 0..NSLOTS {
+        GROUPS[slot].store(0, Ordering::Relaxed);
+        VALUES[slot].store(0, Ordering::Relaxed);
+        ZEROED[slot].store(0, Ordering::Relaxed);
+        SATURATED[slot].store(0, Ordering::Relaxed);
+        CLIPPED[slot].store(0, Ordering::Relaxed);
+    }
+    for f in FLAGS.iter() {
+        f.store(0, Ordering::Relaxed);
+    }
+    SCALE_MISSES.store(0, Ordering::Relaxed);
+    MISS_SITES.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    PROBES.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Export the counter snapshot into a registry:
+/// `qrazor_razor_{groups,values,zeroed,saturated}{layer=..,site=..}`,
+/// `qrazor_stage1_clipped{..}`, `qrazor_razor_flag{..,flag=..}`, and
+/// `qrazor_scale_misses`.
+pub fn export_counters(reg: &mut Registry) {
+    const FLAG_NAMES: [&str; FLAG_BUCKETS] = [
+        "0", "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15",
+    ];
+    for c in counters_snapshot() {
+        let layer = c.layer.to_string();
+        let labels: [(&str, &str); 2] = [("layer", layer.as_str()), ("site", c.site)];
+        if c.groups > 0 {
+            reg.counter("qrazor_razor_groups", &labels, c.groups);
+            reg.counter("qrazor_razor_values", &labels, c.values);
+            reg.counter("qrazor_razor_zeroed", &labels, c.zeroed);
+            reg.counter("qrazor_razor_saturated", &labels, c.saturated);
+        }
+        if c.clipped > 0 {
+            reg.counter("qrazor_stage1_clipped", &labels, c.clipped);
+        }
+        for (f, &n) in c.flags.iter().enumerate() {
+            if n > 0 {
+                let fl = [("flag", FLAG_NAMES[f]), ("layer", layer.as_str()), ("site", c.site)];
+                reg.counter("qrazor_razor_flag", &fl, n);
+            }
+        }
+    }
+    let misses = scale_miss_count();
+    if misses > 0 {
+        reg.counter("qrazor_scale_misses", &[], misses);
+    }
+}
+
+// ---- sampled deep probes --------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct ProbeAccum {
+    samples: u64,
+    drift_sum: f64,
+    drift_max: f64,
+    mse_sum: f64,
+    ref_sum: f64,
+}
+
+static PROBES: Mutex<BTreeMap<String, ProbeAccum>> = Mutex::new(BTreeMap::new());
+
+/// Deep-probe one site on a sampled step: live amax vs the frozen
+/// calibration amax (drift ratio) and razoring MSE against the
+/// already-materialized pre-quant activations. Call sites gate on
+/// [`probe_enabled`]; allocation is fine here (sampled steps only).
+pub fn probe_site(site: &str, x: &[f32], frozen_amax: f32, razored: &[f32]) {
+    debug_assert_eq!(x.len(), razored.len());
+    let mut amax = 0f32;
+    for &v in x {
+        amax = amax.max(v.abs());
+    }
+    let drift = if frozen_amax > 0.0 { (amax / frozen_amax) as f64 } else { 0.0 };
+    let mut mse = 0f64;
+    let mut ref_pow = 0f64;
+    for (&a, &b) in x.iter().zip(razored) {
+        let d = (a - b) as f64;
+        mse += d * d;
+        ref_pow += a as f64 * a as f64;
+    }
+    let n = x.len().max(1) as f64;
+    let mut probes = PROBES.lock().unwrap_or_else(|e| e.into_inner());
+    let e = probes.entry(site.to_string()).or_default();
+    e.samples += 1;
+    e.drift_sum += drift;
+    e.drift_max = e.drift_max.max(drift);
+    e.mse_sum += mse / n;
+    e.ref_sum += ref_pow / n;
+}
+
+/// One site's aggregate over a probed step (token-averaged).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeSample {
+    /// Calibration-site name (`l3.attn_in`, `lm_head_in`, …).
+    pub site: String,
+    /// Mean live/calibrated amax ratio across this step's probes.
+    pub drift: f64,
+    /// Peak ratio across this step's probes.
+    pub drift_peak: f64,
+    /// Probe invocations folded into this sample.
+    pub samples: u64,
+    /// Mean per-element squared razoring error.
+    pub mse: f64,
+    /// Mean per-element reference power.
+    pub ref_pow: f64,
+}
+
+impl ProbeSample {
+    /// Razoring signal-to-noise in dB; `None` when either side is 0.
+    pub fn snr_db(&self) -> Option<f64> {
+        if self.mse > 0.0 && self.ref_pow > 0.0 {
+            Some(10.0 * (self.ref_pow / self.mse).log10())
+        } else {
+            None
+        }
+    }
+}
+
+/// Drain the probe aggregates accumulated since the last call (the
+/// engine calls this once per sampled step, after the forward).
+pub fn take_probe_samples() -> Vec<ProbeSample> {
+    let drained = {
+        let mut probes = PROBES.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *probes)
+    };
+    drained
+        .into_iter()
+        .map(|(site, a)| {
+            let n = a.samples.max(1) as f64;
+            ProbeSample {
+                site,
+                drift: a.drift_sum / n,
+                drift_peak: a.drift_max,
+                samples: a.samples,
+                mse: a.mse_sum / n,
+                ref_pow: a.ref_sum / n,
+            }
+        })
+        .collect()
+}
+
+// ---- mergeable per-engine health state ------------------------------
+
+/// Drift state for one calibration site (EWMA over probe steps).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SiteHealth {
+    /// EWMA of the drift ratio (live amax / calibrated amax).
+    pub ewma: f64,
+    /// Most recent probe's drift ratio.
+    pub last: f64,
+    /// Peak drift ratio ever observed.
+    pub peak: f64,
+    /// Probe steps folded in.
+    pub samples: u64,
+    /// Latched by the drift detector when `ewma` crosses the alarm
+    /// threshold; cleared only by reset.
+    pub alarmed: bool,
+    /// Sum of per-step mean squared razoring error.
+    pub mse_sum: f64,
+    /// Sum of per-step mean reference power.
+    pub ref_sum: f64,
+}
+
+impl SiteHealth {
+    /// Aggregate razoring SNR in dB (NaN before any probe).
+    pub fn snr_db(&self) -> f64 {
+        if self.mse_sum > 0.0 && self.ref_sum > 0.0 {
+            10.0 * (self.ref_sum / self.mse_sum).log10()
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Fold another shard's state for the same site: sums add, peak
+    /// takes the max, EWMA combines sample-weighted, alarms OR.
+    pub fn merge(&mut self, other: &SiteHealth) {
+        if other.samples == 0 {
+            return;
+        }
+        if self.samples == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (a, b) = (self.samples as f64, other.samples as f64);
+        self.ewma = (self.ewma * a + other.ewma * b) / (a + b);
+        self.last = other.last;
+        self.peak = self.peak.max(other.peak);
+        self.samples += other.samples;
+        self.alarmed |= other.alarmed;
+        self.mse_sum += other.mse_sum;
+        self.ref_sum += other.ref_sum;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("ewma", Json::from(self.ewma)),
+            ("last", Json::from(self.last)),
+            ("peak", Json::from(self.peak)),
+            ("samples", Json::from(self.samples as f64)),
+            ("alarmed", Json::from(self.alarmed)),
+            ("snr_db", Json::from(self.snr_db())),
+        ])
+    }
+}
+
+/// Per-engine numeric-health aggregate: probe cadence counters, the
+/// drift/SNR histograms, and per-site drift state. Mergeable the same
+/// way `Metrics` is (cluster merge ≡ single-shard sums — pinned in
+/// `rust/tests/quant_health.rs`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HealthStats {
+    /// Scheduler steps that ran a deep probe.
+    pub probe_steps: u64,
+    /// Probe invocations folded in (sites × probed tokens).
+    pub probe_samples: u64,
+    /// Sites whose drift EWMA crossed the alarm threshold.
+    pub drift_alarms: u64,
+    /// Distribution of per-step per-site drift ratios.
+    pub drift: LogHistogram,
+    /// Distribution of per-step per-site razoring SNR (dB).
+    pub snr_db: LogHistogram,
+    /// Per calibration site drift state, keyed by site name.
+    pub sites: BTreeMap<String, SiteHealth>,
+}
+
+impl HealthStats {
+    pub fn is_empty(&self) -> bool {
+        self.probe_steps == 0 && self.drift_alarms == 0 && self.sites.is_empty()
+    }
+
+    /// Fold another engine's health state in (associative, sums add).
+    pub fn merge(&mut self, other: &HealthStats) {
+        self.probe_steps += other.probe_steps;
+        self.probe_samples += other.probe_samples;
+        self.drift_alarms += other.drift_alarms;
+        self.drift.merge(&other.drift);
+        self.snr_db.merge(&other.snr_db);
+        for (site, s) in other.sites.iter() {
+            self.sites.entry(site.clone()).or_default().merge(s);
+        }
+    }
+
+    /// Export into a registry under `labels`:
+    /// `qrazor_probe_{steps,samples}`, `qrazor_drift_alarms`, the
+    /// `qrazor_drift_ratio` / `qrazor_razor_snr_db` histograms, and a
+    /// `qrazor_drift_ewma{site=..}` gauge per probed site.
+    pub fn export(&self, reg: &mut Registry, labels: &[(&str, &str)]) {
+        if self.is_empty() {
+            return;
+        }
+        reg.counter("qrazor_probe_steps", labels, self.probe_steps);
+        reg.counter("qrazor_probe_samples", labels, self.probe_samples);
+        reg.counter("qrazor_drift_alarms", labels, self.drift_alarms);
+        if !self.drift.is_empty() {
+            reg.record_hist("qrazor_drift_ratio", labels, &self.drift);
+        }
+        if !self.snr_db.is_empty() {
+            reg.record_hist("qrazor_razor_snr_db", labels, &self.snr_db);
+        }
+        for (site, s) in self.sites.iter() {
+            let mut l: Vec<(&str, &str)> = labels.to_vec();
+            l.push(("site", site.as_str()));
+            reg.gauge("qrazor_drift_ewma", &l, s.ewma);
+            if s.alarmed {
+                reg.counter("qrazor_drift_alarmed", &l, 1);
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut sites = Json::obj();
+        for (site, s) in self.sites.iter() {
+            sites.set(site, s.to_json());
+        }
+        Json::from_pairs(vec![
+            ("probe_steps", Json::from(self.probe_steps as f64)),
+            ("probe_samples", Json::from(self.probe_samples as f64)),
+            ("drift_alarms", Json::from(self.drift_alarms as f64)),
+            ("drift", self.drift.to_json()),
+            ("snr_db", self.snr_db.to_json()),
+            ("sites", sites),
+        ])
+    }
+}
+
+// ---- health snapshot schema -----------------------------------------
+
+/// Schema tag stamped into every health snapshot
+/// (`--health-json`, `quantize --manifest-out`, `BENCH_quant_health`).
+pub const HEALTH_SCHEMA: &str = "qrazor.health.v1";
+
+/// Build the schema-tagged health snapshot: the global counter tables,
+/// scale-miss accounting, and (when probing ran) the per-engine
+/// [`HealthStats`].
+pub fn health_json(stats: Option<&HealthStats>) -> Json {
+    let mut counters = Json::obj();
+    for c in counters_snapshot() {
+        let mut flags = Json::obj();
+        for (f, &n) in c.flags.iter().enumerate() {
+            if n > 0 {
+                flags.set(&f.to_string(), Json::from(n as f64));
+            }
+        }
+        counters.set(
+            &c.key(),
+            Json::from_pairs(vec![
+                ("groups", Json::from(c.groups as f64)),
+                ("values", Json::from(c.values as f64)),
+                ("zeroed", Json::from(c.zeroed as f64)),
+                ("zeroed_fraction", Json::from(c.zeroed_fraction())),
+                ("saturated", Json::from(c.saturated as f64)),
+                ("clipped", Json::from(c.clipped as f64)),
+                ("flags", flags),
+            ]),
+        );
+    }
+    let mut miss_sites = Json::obj();
+    for (site, n) in scale_miss_sites() {
+        miss_sites.set(&site, Json::from(n as f64));
+    }
+    let scale_misses = Json::from_pairs(vec![
+        ("total", Json::from(scale_miss_count() as f64)),
+        ("sites", miss_sites),
+    ]);
+    Json::from_pairs(vec![
+        ("schema", Json::from(HEALTH_SCHEMA)),
+        ("counters", counters),
+        ("scale_misses", scale_misses),
+        ("probes", stats.map(|s| s.to_json()).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Validate a parsed health snapshot: schema tag, counter-entry shape,
+/// scale-miss section, and (when present) the probe section. The CLI
+/// and bench `--smoke` paths run every emitted snapshot through this,
+/// mirroring `validate_registry_json`.
+pub fn validate_health_json(j: &Json) -> anyhow::Result<()> {
+    let schema = j.req("schema")?.as_str().unwrap_or("");
+    if schema != HEALTH_SCHEMA {
+        anyhow::bail!("health snapshot schema mismatch: {schema:?}");
+    }
+    let counters = j.req("counters")?;
+    let Json::Obj(m) = counters else {
+        anyhow::bail!("health snapshot 'counters' is not an object");
+    };
+    for (key, c) in m.iter() {
+        for field in ["groups", "values", "zeroed", "zeroed_fraction", "saturated", "clipped"] {
+            if c.get(field).is_none() {
+                anyhow::bail!("health counter '{key}' missing field '{field}'");
+            }
+        }
+    }
+    let misses = j.req("scale_misses")?;
+    if misses.req("total").is_err() || misses.req("sites").is_err() {
+        anyhow::bail!("health snapshot 'scale_misses' missing total/sites");
+    }
+    match j.req("probes")? {
+        Json::Null => {}
+        probes @ Json::Obj(_) => {
+            for field in ["probe_steps", "probe_samples", "drift_alarms", "drift", "sites"] {
+                if probes.get(field).is_none() {
+                    anyhow::bail!("health probe section missing field '{field}'");
+                }
+            }
+        }
+        _ => anyhow::bail!("health snapshot 'probes' must be an object or null"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Serialize tests that flip the global flags / counters.
+    fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn health_flag_gates_and_resets() {
+        let _g = guard();
+        health_reset();
+        assert!(!health_enabled());
+        set_health(true);
+        assert!(health_enabled());
+        set_health(false);
+        assert!(!health_enabled());
+    }
+
+    #[test]
+    fn site_scope_attributes_and_restores() {
+        let _g = guard();
+        health_reset();
+        {
+            let _outer = SiteScope::enter(3, Site::Act);
+            note_razor_group(5, 16, 4, 1);
+            {
+                let _inner = SiteScope::enter(3, Site::KvCache);
+                note_razor_group(2, 16, 0, 0);
+            }
+            // restored to the outer scope after the inner drops
+            note_clips(2);
+        }
+        let act = site_counters(3, Site::Act);
+        assert_eq!(act.groups, 1);
+        assert_eq!(act.values, 16);
+        assert_eq!(act.zeroed, 4);
+        assert_eq!(act.saturated, 1);
+        assert_eq!(act.clipped, 2);
+        assert_eq!(act.flags[5], 1);
+        assert_eq!(act.key(), "l3.act");
+        assert!((act.zeroed_fraction() - 0.25).abs() < 1e-12);
+        let kv = site_counters(3, Site::KvCache);
+        assert_eq!(kv.groups, 1);
+        assert_eq!(kv.flags[2], 1);
+        health_reset();
+        assert_eq!(site_counters(3, Site::Act).groups, 0);
+    }
+
+    #[test]
+    fn unscoped_events_land_in_the_untracked_slot() {
+        let _g = guard();
+        health_reset();
+        note_razor_group(1, 8, 0, 0);
+        let snap = counters_snapshot();
+        assert!(snap.iter().any(|c| c.site == "untracked" && c.groups >= 1));
+        health_reset();
+    }
+
+    #[test]
+    fn deep_layers_clamp_into_the_last_slot() {
+        let _g = guard();
+        health_reset();
+        {
+            let _s = SiteScope::enter(MAX_LAYERS + 7, Site::Act);
+            note_razor_group(0, 4, 0, 0);
+        }
+        assert_eq!(site_counters(MAX_LAYERS - 1, Site::Act).groups, 1);
+        health_reset();
+    }
+
+    #[test]
+    fn scale_misses_count_per_site() {
+        let _g = guard();
+        health_reset();
+        note_scale_miss("l0.ghost");
+        note_scale_miss("l0.ghost");
+        note_scale_miss("l1.phantom");
+        assert_eq!(scale_miss_count(), 3);
+        let sites = scale_miss_sites();
+        assert_eq!(sites, vec![("l0.ghost".to_string(), 2), ("l1.phantom".to_string(), 1)]);
+        health_reset();
+        assert_eq!(scale_miss_count(), 0);
+    }
+
+    #[test]
+    fn probe_drain_returns_token_averaged_aggregates() {
+        let _g = guard();
+        health_reset();
+        // two probes of the same site: amax 2.0 then 3.0 vs frozen 2.0
+        probe_site("l0.attn_in", &[1.0, -2.0], 2.0, &[1.0, -2.0]);
+        probe_site("l0.attn_in", &[3.0, 0.0], 2.0, &[2.0, 0.0]);
+        let samples = take_probe_samples();
+        assert_eq!(samples.len(), 1);
+        let s = &samples[0];
+        assert_eq!(s.site, "l0.attn_in");
+        assert_eq!(s.samples, 2);
+        assert!((s.drift - 1.25).abs() < 1e-12, "drift {}", s.drift);
+        assert!((s.drift_peak - 1.5).abs() < 1e-12);
+        // second probe's mse = (3-2)^2/2 = 0.5; first is exact
+        assert!((s.mse - 0.25).abs() < 1e-12);
+        assert!(s.snr_db().unwrap() > 0.0);
+        // drained: second take is empty
+        assert!(take_probe_samples().is_empty());
+        health_reset();
+    }
+
+    #[test]
+    fn health_stats_merge_is_field_sums() {
+        let mut a = HealthStats {
+            probe_steps: 2,
+            probe_samples: 10,
+            drift_alarms: 1,
+            ..Default::default()
+        };
+        let mut b = HealthStats {
+            probe_steps: 3,
+            probe_samples: 20,
+            drift_alarms: 2,
+            ..Default::default()
+        };
+        a.drift.record(1.0);
+        b.drift.record(2.0);
+        a.sites.insert(
+            "l0.q".into(),
+            SiteHealth { ewma: 1.0, last: 1.0, peak: 1.2, samples: 2, ..Default::default() },
+        );
+        b.sites.insert(
+            "l0.q".into(),
+            SiteHealth {
+                ewma: 2.0,
+                last: 2.0,
+                peak: 2.5,
+                samples: 2,
+                alarmed: true,
+                ..Default::default()
+            },
+        );
+        b.sites.insert("l1.k".into(), SiteHealth { samples: 1, ..Default::default() });
+        a.merge(&b);
+        assert_eq!(a.probe_steps, 5);
+        assert_eq!(a.probe_samples, 30);
+        assert_eq!(a.drift_alarms, 3);
+        assert_eq!(a.drift.len(), 2);
+        let s = &a.sites["l0.q"];
+        assert!((s.ewma - 1.5).abs() < 1e-12);
+        assert_eq!(s.peak, 2.5);
+        assert_eq!(s.samples, 4);
+        assert!(s.alarmed);
+        assert!(a.sites.contains_key("l1.k"));
+    }
+
+    #[test]
+    fn health_json_snapshot_validates() {
+        let _g = guard();
+        health_reset();
+        {
+            let _s = SiteScope::enter(0, Site::Act);
+            note_razor_group(3, 16, 2, 0);
+            note_clips(1);
+        }
+        note_scale_miss("l9.ghost");
+        let mut stats = HealthStats { probe_steps: 1, ..Default::default() };
+        stats.drift.record(1.1);
+        stats.sites.insert("l0.attn_in".into(), SiteHealth { samples: 1, ..Default::default() });
+        let j = health_json(Some(&stats));
+        validate_health_json(&j).unwrap();
+        let re = Json::parse(&j.to_string()).unwrap();
+        validate_health_json(&re).unwrap();
+        let c = re.get("counters").unwrap().get("l0.act").unwrap();
+        assert_eq!(c.req("values").unwrap(), &Json::Num(16.0));
+        assert_eq!(c.req("clipped").unwrap(), &Json::Num(1.0));
+        assert_eq!(
+            re.get("scale_misses").unwrap().req("total").unwrap(),
+            &Json::Num(1.0)
+        );
+        // counters-only snapshot (no probes) also validates
+        validate_health_json(&health_json(None)).unwrap();
+        health_reset();
+    }
+
+    #[test]
+    fn health_json_rejects_bad_schema_and_shape() {
+        assert!(validate_health_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(
+            "{\"schema\": \"qrazor.health.v1\", \"counters\": {\"l0.act\": {\"groups\": 1}}, \
+             \"scale_misses\": {\"total\": 0, \"sites\": {}}, \"probes\": null}",
+        )
+        .unwrap();
+        assert!(validate_health_json(&bad).is_err());
+        let wrong = Json::parse("{\"schema\": \"qrazor.health.v2\"}").unwrap();
+        assert!(validate_health_json(&wrong).is_err());
+    }
+
+    #[test]
+    fn export_counters_uses_layer_site_labels() {
+        let _g = guard();
+        health_reset();
+        {
+            let _s = SiteScope::enter(2, Site::KvCache);
+            note_razor_group(4, 16, 8, 2);
+            note_razor_group(4, 16, 0, 0);
+        }
+        let mut reg = Registry::new();
+        export_counters(&mut reg);
+        let labels = [("layer", "2"), ("site", "kv")];
+        assert_eq!(reg.counter_value("qrazor_razor_groups", &labels), 2);
+        assert_eq!(reg.counter_value("qrazor_razor_values", &labels), 32);
+        assert_eq!(reg.counter_value("qrazor_razor_zeroed", &labels), 8);
+        assert_eq!(reg.counter_value("qrazor_razor_saturated", &labels), 2);
+        let fl = [("flag", "4"), ("layer", "2"), ("site", "kv")];
+        assert_eq!(reg.counter_value("qrazor_razor_flag", &fl), 2);
+        health_reset();
+    }
+}

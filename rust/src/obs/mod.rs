@@ -28,6 +28,14 @@
 //!   events per request lifecycle (submitted → queued → admitted →
 //!   prefill → decode → …), exported as Chrome `trace_event` JSON for
 //!   Perfetto. See the module doc for the span model.
+//! * [`health`] — numeric health for the quantizer itself: per-
+//!   `(layer, site)` razoring counters (saturation, clips, zeroed
+//!   fraction, flag distribution) at the SDR choke points, sampled
+//!   drift/SNR deep probes against the frozen calibration scales
+//!   ([`HealthStats`], merged like `Metrics`), and the schema-tagged
+//!   `qrazor.health.v1` snapshot ([`health_json`]). The drift
+//!   detector + escalation advisor over these live in
+//!   `policy::health`.
 //!
 //! **Overhead contract.** All instrumentation is observe-only — it
 //! never reorders admissions, never perturbs token streams (the
@@ -40,10 +48,17 @@
 //! `Instant` reads per stage per step, and tracing adds one mutex
 //! push per lifecycle event.
 
+pub mod health;
 pub mod registry;
 pub mod timing;
 pub mod trace;
 
+pub use health::{
+    counters_snapshot, export_counters, health_enabled, health_json, health_reset,
+    note_scale_miss, probe_enabled, set_health, set_probe, take_probe_samples,
+    validate_health_json, HealthConfig, HealthStats, ProbeSample, SiteCounters, SiteHealth,
+    SiteScope, HEALTH_SCHEMA,
+};
 pub use registry::{
     validate_registry_json, LogHistogram, Metric, MetricKey, Registry, HIST_BUCKETS,
     REGISTRY_SCHEMA,

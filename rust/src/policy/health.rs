@@ -1,0 +1,472 @@
+//! Scale-drift detection and the escalation advisor (the decision
+//! layer over `crate::obs::health`).
+//!
+//! The obs layer produces raw [`ProbeSample`]s — per-site live/frozen
+//! amax ratios and razoring error from sampled decode steps. This
+//! module turns them into decisions:
+//!
+//! * [`DriftDetector`] — folds samples into a mergeable
+//!   [`HealthStats`], maintaining a per-site EWMA of the drift ratio
+//!   and latching a one-shot alarm the first time a site's EWMA
+//!   crosses the configured threshold after a warm-up. A drift ratio
+//!   near 1.0 means the frozen calibration still covers the live
+//!   distribution; sustained ratios above ~1.5 mean stage-1 absmax is
+//!   clipping mass the calibrator never saw.
+//! * [`HealthReport`] — the operator view: worst-drifting sites, alarm
+//!   flags, aggregate SNR, and (when the serving policy is
+//!   razor-native) [`Advice`]: a concretely escalated [`QuantPolicy`]
+//!   rendered as a ready-to-apply DSL string via the canonical
+//!   `Display` form, so `--policy '<advice.dsl>'` is the whole fix.
+//!
+//! Advice stays inside the DSL-expressible subset: alarmed activation
+//! sites escalate that layer's act plan A4 → A8 (the same move as
+//! [`QuantPolicy::sensitivity_escalate`], but driven by live drift
+//! instead of offline calibration error); alarmed `q`/`k`/`v` sites
+//! drop KV razoring globally (`kv=off` — per-layer KV drops do not
+//! round-trip the DSL, and a drifted KV site poisons every later
+//! decode step). Sites already at their relaxed form become notes
+//! instead of edits.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::QuantPolicy;
+use crate::obs::health::{HealthConfig, HealthStats, ProbeSample};
+use crate::util::json::Json;
+
+/// EWMA drift detector. Stateless — all evolving state lives in the
+/// [`HealthStats`] it updates, which is what merges across shards.
+#[derive(Clone, Debug, Default)]
+pub struct DriftDetector {
+    pub cfg: HealthConfig,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: HealthConfig) -> DriftDetector {
+        DriftDetector { cfg }
+    }
+
+    /// Fold one probed step's sample for a site into `stats`. Returns
+    /// `true` exactly once per site: on the sample where the EWMA
+    /// first crosses `alarm_ratio` with the warm-up
+    /// (`min_samples`) satisfied. The alarm latches — a site that
+    /// drifts back under the threshold stays flagged until reset,
+    /// because the tokens decoded while it was out of range are
+    /// already suspect.
+    pub fn observe(&self, stats: &mut HealthStats, s: &ProbeSample) -> bool {
+        stats.probe_samples += s.samples;
+        stats.drift.record(s.drift);
+        if let Some(snr) = s.snr_db() {
+            stats.snr_db.record(snr);
+        }
+        let site = stats.sites.entry(s.site.clone()).or_default();
+        site.samples += 1;
+        site.last = s.drift;
+        site.peak = site.peak.max(s.drift_peak);
+        site.mse_sum += s.mse;
+        site.ref_sum += s.ref_pow;
+        site.ewma = if site.samples == 1 {
+            s.drift
+        } else {
+            self.cfg.ewma_alpha * s.drift + (1.0 - self.cfg.ewma_alpha) * site.ewma
+        };
+        if !site.alarmed && site.samples >= self.cfg.min_samples && site.ewma > self.cfg.alarm_ratio
+        {
+            site.alarmed = true;
+            stats.drift_alarms += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Feed a bare drift ratio for `site` (property tests and the
+    /// bench harness; no razoring-error component).
+    pub fn observe_ratio(&self, stats: &mut HealthStats, site: &str, drift: f64) -> bool {
+        self.observe(
+            stats,
+            &ProbeSample {
+                site: site.to_string(),
+                drift,
+                drift_peak: drift,
+                samples: 1,
+                mse: 0.0,
+                ref_pow: 0.0,
+            },
+        )
+    }
+}
+
+/// One row of the worst-sites table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiteReport {
+    pub site: String,
+    pub ewma: f64,
+    pub last: f64,
+    pub peak: f64,
+    pub samples: u64,
+    pub snr_db: f64,
+    pub alarmed: bool,
+}
+
+/// The operator-facing digest of a [`HealthStats`]: worst-N drifting
+/// sites, alarm inventory, and concrete escalation advice.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    /// Sites ordered by drift EWMA, worst first, truncated to the
+    /// requested table size.
+    pub worst: Vec<SiteReport>,
+    /// Every site whose alarm has latched.
+    pub alarmed_sites: Vec<String>,
+    pub probe_steps: u64,
+    pub drift_alarms: u64,
+    /// Escalation advice; `None` when nothing alarmed or nothing is
+    /// DSL-expressible (uniform scheme backends).
+    pub advice: Option<Advice>,
+}
+
+impl HealthReport {
+    /// Digest `stats` against the policy that produced it. `worst_n`
+    /// bounds the table, not the alarm inventory.
+    pub fn from_stats(stats: &HealthStats, policy: &QuantPolicy, worst_n: usize) -> HealthReport {
+        let mut rows: Vec<SiteReport> = stats
+            .sites
+            .iter()
+            .map(|(site, s)| SiteReport {
+                site: site.clone(),
+                ewma: s.ewma,
+                last: s.last,
+                peak: s.peak,
+                samples: s.samples,
+                snr_db: s.snr_db(),
+                alarmed: s.alarmed,
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            b.ewma
+                .partial_cmp(&a.ewma)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.site.cmp(&b.site))
+        });
+        rows.truncate(worst_n);
+        let alarmed_sites: Vec<String> = stats
+            .sites
+            .iter()
+            .filter(|(_, s)| s.alarmed)
+            .map(|(site, _)| site.clone())
+            .collect();
+        let advice = advise(policy, &alarmed_sites);
+        HealthReport {
+            worst: rows,
+            alarmed_sites,
+            probe_steps: stats.probe_steps,
+            drift_alarms: stats.drift_alarms,
+            advice,
+        }
+    }
+
+    /// Plain-text table for the CLI (`serve --health`, `quantize`).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "numeric health: {} probe steps, {} drift alarms",
+            self.probe_steps, self.drift_alarms
+        );
+        if self.worst.is_empty() {
+            out.push_str("  (no probed sites — health probes off or no decode steps)\n");
+            return out;
+        }
+        let _ = writeln!(
+            out,
+            "  {:<16} {:>8} {:>8} {:>8} {:>8} {:>8}  {}",
+            "site", "ewma", "last", "peak", "samples", "snr_db", "alarm"
+        );
+        for r in &self.worst {
+            let _ = writeln!(
+                out,
+                "  {:<16} {:>8.3} {:>8.3} {:>8.3} {:>8} {:>8.1}  {}",
+                r.site,
+                r.ewma,
+                r.last,
+                r.peak,
+                r.samples,
+                r.snr_db,
+                if r.alarmed { "ALARM" } else { "-" }
+            );
+        }
+        match &self.advice {
+            Some(a) => {
+                let _ = writeln!(out, "  advisor: --policy '{}'", a.dsl);
+                for n in &a.notes {
+                    let _ = writeln!(out, "  advisor: {n}");
+                }
+            }
+            None if !self.alarmed_sites.is_empty() => {
+                out.push_str("  advisor: no DSL-expressible escalation for this policy\n");
+            }
+            None => {}
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let worst: Vec<Json> = self
+            .worst
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("site", Json::from(r.site.as_str())),
+                    ("ewma", Json::from(r.ewma)),
+                    ("last", Json::from(r.last)),
+                    ("peak", Json::from(r.peak)),
+                    ("samples", Json::from(r.samples as f64)),
+                    ("snr_db", Json::from(r.snr_db)),
+                    ("alarmed", Json::from(r.alarmed)),
+                ])
+            })
+            .collect();
+        let alarmed: Vec<Json> =
+            self.alarmed_sites.iter().map(|s| Json::from(s.as_str())).collect();
+        Json::from_pairs(vec![
+            ("probe_steps", Json::from(self.probe_steps as f64)),
+            ("drift_alarms", Json::from(self.drift_alarms as f64)),
+            ("worst", Json::Arr(worst)),
+            ("alarmed_sites", Json::Arr(alarmed)),
+            ("advice", self.advice.as_ref().map(|a| a.to_json()).unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+/// A concrete, ready-to-apply escalation.
+#[derive(Clone, Debug)]
+pub struct Advice {
+    /// The escalated policy itself.
+    pub escalated: QuantPolicy,
+    /// Canonical DSL for [`Advice::escalated`] — paste into
+    /// `--policy` to apply.
+    pub dsl: String,
+    /// Layers whose act plan was escalated A4 → A8.
+    pub act_layers: Vec<usize>,
+    /// Whether KV razoring was dropped (`kv=off`) for alarmed
+    /// q/k/v sites.
+    pub kv_dropped: bool,
+    /// Alarmed sites the advisor could not (or did not need to) edit.
+    pub notes: Vec<String>,
+}
+
+impl Advice {
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> =
+            self.act_layers.iter().map(|&l| Json::from(l as f64)).collect();
+        let notes: Vec<Json> = self.notes.iter().map(|n| Json::from(n.as_str())).collect();
+        Json::from_pairs(vec![
+            ("dsl", Json::from(self.dsl.as_str())),
+            ("act_layers", Json::Arr(layers)),
+            ("kv_dropped", Json::from(self.kv_dropped)),
+            ("notes", Json::Arr(notes)),
+        ])
+    }
+}
+
+/// Classify a calibration-site name into the escalation it wants.
+enum SiteClass {
+    /// `l{li}.{attn_in,attn_out,ffn_in,ffn_down_in}` — the layer's
+    /// activation plan.
+    Act(usize),
+    /// `l{li}.{q,k,v}` — the attention operand / KV-cache plans.
+    Kv(usize),
+    /// `lm_head_in` — governed by the base act plan.
+    LmHead,
+    Unknown,
+}
+
+fn classify(site: &str) -> SiteClass {
+    if site == "lm_head_in" {
+        return SiteClass::LmHead;
+    }
+    let Some(rest) = site.strip_prefix('l') else {
+        return SiteClass::Unknown;
+    };
+    let Some((li, kind)) = rest.split_once('.') else {
+        return SiteClass::Unknown;
+    };
+    let Ok(li) = li.parse::<usize>() else {
+        return SiteClass::Unknown;
+    };
+    match kind {
+        "attn_in" | "attn_out" | "ffn_in" | "ffn_down_in" => SiteClass::Act(li),
+        "q" | "k" | "v" => SiteClass::Kv(li),
+        _ => SiteClass::Unknown,
+    }
+}
+
+/// Map alarmed sites to a DSL-expressible escalation of `policy`.
+/// Returns `None` when there is nothing to escalate: no alarms, a
+/// uniform scheme backend (opaque hooks — nothing to rewrite), or
+/// every alarmed site already at its relaxed form.
+pub fn advise(policy: &QuantPolicy, alarmed_sites: &[String]) -> Option<Advice> {
+    if alarmed_sites.is_empty() {
+        return None;
+    }
+    let r = policy.razor()?;
+    let mut act_layers: BTreeMap<usize, bool> = BTreeMap::new();
+    let mut kv_layers: Vec<usize> = Vec::new();
+    let mut notes = Vec::new();
+    for site in alarmed_sites {
+        match classify(site) {
+            SiteClass::Act(li) => {
+                act_layers.entry(li).or_insert(false);
+            }
+            SiteClass::Kv(li) => kv_layers.push(li),
+            SiteClass::LmHead => notes.push(
+                "lm_head_in drifted: the head reads the base act plan; consider a \
+                 full A8 base policy"
+                    .to_string(),
+            ),
+            SiteClass::Unknown => notes.push(format!("unrecognized alarmed site '{site}'")),
+        }
+    }
+    let mut out = r.clone();
+    let mut escalated_layers = Vec::new();
+    for (&li, _) in &act_layers {
+        let mut plan = out.layer(li).clone();
+        match plan.act.as_mut() {
+            Some(a) if a.target_bits == Some(4) => {
+                a.target_bits = Some(8);
+                out.overrides.insert(li, plan);
+                escalated_layers.push(li);
+            }
+            Some(_) => notes.push(format!("layer {li} act already above A4; no edit")),
+            None => notes.push(format!("layer {li} act is FP; no edit")),
+        }
+    }
+    let mut kv_dropped = false;
+    if !kv_layers.is_empty() {
+        // Per-layer KV drops do not round-trip the DSL, so a drifted
+        // q/k/v site relaxes KV razoring globally.
+        let had_kv = out.base.kv.is_some()
+            || out.overrides.values().any(|p| p.kv.is_some() || p.query.is_some());
+        if had_kv {
+            out.base.kv = None;
+            out.base.query = None;
+            for plan in out.overrides.values_mut() {
+                plan.kv = None;
+                plan.query = None;
+            }
+            kv_dropped = true;
+        } else {
+            kv_layers.sort_unstable();
+            kv_layers.dedup();
+            notes.push(format!(
+                "kv/query sites drifted on layers {kv_layers:?} but KV is already FP"
+            ));
+        }
+    }
+    if escalated_layers.is_empty() && !kv_dropped {
+        return None;
+    }
+    let escalated = QuantPolicy::from_razor(out).ok()?;
+    let dsl = escalated.to_string();
+    Some(Advice { escalated, dsl, act_layers: escalated_layers, kv_dropped, notes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detector(alarm: f64, alpha: f64, min: u64) -> DriftDetector {
+        DriftDetector::new(HealthConfig {
+            sample_every_n_steps: 1,
+            alarm_ratio: alarm,
+            ewma_alpha: alpha,
+            min_samples: min,
+        })
+    }
+
+    #[test]
+    fn stationary_drift_never_alarms() {
+        let d = detector(1.5, 0.3, 2);
+        let mut stats = HealthStats::default();
+        for _ in 0..200 {
+            assert!(!d.observe_ratio(&mut stats, "l0.attn_in", 1.02));
+        }
+        assert_eq!(stats.drift_alarms, 0);
+        assert!(!stats.sites["l0.attn_in"].alarmed);
+    }
+
+    #[test]
+    fn ramp_alarms_exactly_once() {
+        let d = detector(1.5, 0.3, 2);
+        let mut stats = HealthStats::default();
+        let mut fires = 0;
+        for i in 0..50 {
+            let drift = 1.0 + i as f64 * 0.05; // monotone ramp past 1.5
+            if d.observe_ratio(&mut stats, "l1.ffn_in", drift) {
+                fires += 1;
+            }
+        }
+        assert_eq!(fires, 1, "alarm must latch, not refire");
+        assert_eq!(stats.drift_alarms, 1);
+        assert!(stats.sites["l1.ffn_in"].alarmed);
+    }
+
+    #[test]
+    fn warmup_suppresses_first_sample_spike() {
+        let d = detector(1.5, 0.3, 3);
+        let mut stats = HealthStats::default();
+        assert!(!d.observe_ratio(&mut stats, "s", 9.0));
+        assert!(!d.observe_ratio(&mut stats, "s", 9.0));
+        assert!(d.observe_ratio(&mut stats, "s", 9.0));
+    }
+
+    #[test]
+    fn advisor_escalates_act_layers_and_round_trips() {
+        let p = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let alarmed = vec!["l1.ffn_in".to_string(), "l1.attn_out".to_string()];
+        let a = advise(&p, &alarmed).expect("escalation expected");
+        assert_eq!(a.act_layers, vec![1]);
+        assert!(!a.kv_dropped);
+        assert_eq!(a.dsl, "w4a4kv4:16;layers=1:w4a8");
+        let re = QuantPolicy::parse(&a.dsl).unwrap();
+        assert_eq!(re.razor(), a.escalated.razor(), "advice DSL must round-trip");
+    }
+
+    #[test]
+    fn advisor_drops_kv_on_kv_site_alarms() {
+        let p = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let a = advise(&p, &["l2.k".to_string()]).expect("kv drop expected");
+        assert!(a.kv_dropped);
+        assert!(a.escalated.razor().unwrap().base.kv.is_none());
+        assert_eq!(a.dsl, "w4a4:16");
+    }
+
+    #[test]
+    fn advisor_none_when_nothing_expressible() {
+        let p = QuantPolicy::uniform(Box::new(crate::baselines::Fp16));
+        assert!(advise(&p, &["l0.attn_in".to_string()]).is_none());
+        let razor = QuantPolicy::parse("w4a8:16").unwrap();
+        // A8 already: act sites produce notes, not edits → None.
+        assert!(advise(&razor, &["l0.attn_in".to_string()]).is_none());
+        assert!(advise(&razor, &[]).is_none());
+    }
+
+    #[test]
+    fn report_orders_worst_first_and_carries_advice() {
+        let d = detector(1.5, 1.0, 1);
+        let mut stats = HealthStats::default();
+        d.observe_ratio(&mut stats, "l0.attn_in", 1.1);
+        d.observe_ratio(&mut stats, "l1.ffn_in", 2.5);
+        d.observe_ratio(&mut stats, "l2.q", 1.3);
+        let p = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let rep = HealthReport::from_stats(&stats, &p, 2);
+        assert_eq!(rep.worst.len(), 2);
+        assert_eq!(rep.worst[0].site, "l1.ffn_in");
+        assert_eq!(rep.alarmed_sites, vec!["l1.ffn_in".to_string()]);
+        let advice = rep.advice.expect("alarmed act site must yield advice");
+        assert_eq!(advice.act_layers, vec![1]);
+        let table = rep.render_table();
+        assert!(table.contains("l1.ffn_in"));
+        assert!(table.contains("ALARM"));
+        assert!(table.contains("--policy"));
+    }
+}

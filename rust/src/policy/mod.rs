@@ -74,7 +74,12 @@
 //! [`QuantPolicy::sensitivity_escalate`] is the calibration-driven
 //! builder: it ranks layers by their activation razoring error over
 //! the recorded [`CalibrationData`] samples and escalates the top-k
-//! most error-sensitive layers from A4 to A8.
+//! most error-sensitive layers from A4 to A8. Its live-serving twin
+//! is [`health`]: a drift detector over the numeric-health probes plus
+//! an advisor that maps alarmed sites to the same DSL-expressible
+//! escalations ([`health::advise`]).
+
+pub mod health;
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -39,6 +39,23 @@ pub fn round_half_even(x: f32) -> i32 {
 fn quantize_slice(xs: &[f32], scale: f32, bits: u32, out: &mut Vec<i32>) {
     let q = qmax(bits);
     let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    if crate::obs::health::health_enabled() {
+        // Counting variant: clip events (values the symmetric range
+        // clamp actually moved) feed the per-(layer, site) health
+        // counters. Static scales make clips the canonical "live data
+        // outgrew calibration" signal.
+        let mut clipped = 0usize;
+        for &x in xs {
+            let r = round_half_even(x * inv);
+            let v = r.clamp(-q, q);
+            if r != v {
+                clipped += 1;
+            }
+            out.push(v);
+        }
+        crate::obs::health::note_clips(clipped);
+        return;
+    }
     for &x in xs {
         let v = round_half_even(x * inv).clamp(-q, q);
         out.push(v);

@@ -100,6 +100,21 @@ pub fn compress_group(spec: &SdrSpec, values: &[i32], out: &mut [SdrCode]) -> u8
         }
         *o = SdrCode { neg: v < 0, code: code as u8 };
     }
+    // Numeric-health counting pass (one relaxed load when disabled):
+    // zeroed codes, saturated codes, and the flag distribution for the
+    // current (layer, site) scope.
+    if crate::obs::health::health_enabled() {
+        let (mut zeroed, mut saturated) = (0usize, 0usize);
+        for (o, &v) in out.iter().zip(values) {
+            if o.code == 0 {
+                zeroed += 1;
+            }
+            if (v.unsigned_abs() >> flag) > all_ones {
+                saturated += 1;
+            }
+        }
+        crate::obs::health::note_razor_group(flag as u8, values.len(), zeroed, saturated);
+    }
     flag as u8
 }
 
@@ -342,6 +357,7 @@ pub fn qrazor_fake_quant_slice(xs: &[f32], spec: SdrSpec, scale: f32, out: &mut 
     let all_ones = spec.salient_max();
     let max_flag = spec.max_flag();
     let mut buf = [0i32; FUSED_MAX_GROUP];
+    let track = crate::obs::health::health_enabled();
     for (chunk, ochunk) in xs.chunks(spec.group).zip(out.chunks_mut(spec.group)) {
         // stage 1 + group OR in one pass
         let mut m_or = 0u32;
@@ -363,6 +379,27 @@ pub fn qrazor_fake_quant_slice(xs: &[f32], spec: SdrSpec, scale: f32, out: &mut 
             }
             let rec = (code << flag) as f32 * scale;
             *o = if v < 0 { -rec } else { rec };
+        }
+        // Numeric-health counting pass. Stage 1 clamps to ±qm before
+        // the group OR, so codes cannot saturate here — the saturation
+        // signal on the fused path is the stage-1 clip count.
+        if track {
+            let (mut clipped, mut zeroed) = (0usize, 0usize);
+            for (&v, &x) in buf.iter().zip(chunk) {
+                if crate::quant::round_half_even(x * inv) != v {
+                    clipped += 1;
+                }
+                let mag = v.unsigned_abs();
+                let mut code = mag >> flag;
+                if code != all_ones && flag > 0 && (mag >> (flag - 1)) & 1 == 1 {
+                    code += 1;
+                }
+                if code == 0 {
+                    zeroed += 1;
+                }
+            }
+            crate::obs::health::note_clips(clipped);
+            crate::obs::health::note_razor_group(flag as u8, chunk.len(), zeroed, 0);
         }
     }
 }

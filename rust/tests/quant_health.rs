@@ -1,0 +1,289 @@
+//! Numeric-health acceptance suite: the observe-only contract (token
+//! streams are byte-identical with health counters + probes on), the
+//! zero-allocation guarantee of the disabled counter path (pinned
+//! with a counting global allocator), drift-EWMA properties (a
+//! monotone ramp alarms exactly once, a stationary series never
+//! does), the escalation advisor's error-reduction claim measured on
+//! calibration data, and cluster-merge ≡ single-shard-sums for the
+//! mergeable health state. Runs on the nano preset; no artifacts
+//! needed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::{Mutex, MutexGuard};
+
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{Engine, Sampling};
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::obs::{self, HealthConfig, HealthStats, SiteScope};
+use qrazor::policy::health::{advise, DriftDetector, HealthReport};
+use qrazor::policy::{QuantPolicy, Site};
+use qrazor::util::rng::Rng;
+
+// ---------------------------------------------------------------- //
+// counting allocator: per-thread counters, so libtest's parallel
+// workers never pollute each other's reading (same pattern as the
+// telemetry suite).
+// ---------------------------------------------------------------- //
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+/// The health flags and counter tables are process-global; every test
+/// that flips or reads them serializes here.
+fn health_guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------- //
+// builders
+// ---------------------------------------------------------------- //
+
+/// Nano model under the razor policy; `attenuate` shrinks the frozen
+/// calibration amax to emulate a live distribution that drifted
+/// `1/factor`× past the calibrated range.
+fn build(seed: u64, attenuate: Option<f32>) -> QuantModel {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let mut cal = calibrate(&w, &seqs);
+    if let Some(f) = attenuate {
+        cal.calibrator.attenuate(f);
+    }
+    QuantModel::build(&w, QuantPolicy::parse("w4a4kv4:16").unwrap(), &cal)
+}
+
+/// One deterministic greedy workload through a bare engine; returns
+/// the per-request token streams (sorted by id) and the engine's
+/// health state.
+fn run_tokens(qm: QuantModel, health: HealthConfig) -> (Vec<Vec<u32>>, HealthStats) {
+    let mut engine = Engine::new(
+        qm,
+        ServeConfig { max_batch: 4, max_new_tokens: 8, health, ..Default::default() },
+    );
+    let vocab = engine.model.config.vocab as u64;
+    let mut rng = Rng::new(9);
+    for _ in 0..6 {
+        let len = 3 + rng.index(10);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+        engine.submit(prompt, 8, Sampling::Greedy);
+    }
+    let mut done = engine.run_to_completion();
+    assert_eq!(done.len(), 6);
+    done.sort_by_key(|r| r.id);
+    (done.into_iter().map(|r| r.tokens).collect(), engine.metrics.health.clone())
+}
+
+// ---------------------------------------------------------------- //
+// observe-only + disabled-path contracts
+// ---------------------------------------------------------------- //
+
+/// Health counters and per-step deep probes must never perturb the
+/// compute: the token streams with everything on are byte-identical
+/// to the streams with everything off.
+#[test]
+fn health_on_streams_byte_identical() {
+    let _g = health_guard();
+    obs::health_reset();
+    obs::set_health(false);
+    let (base, off_stats) = run_tokens(build(3, None), HealthConfig::default());
+    assert_eq!(off_stats.probe_steps, 0, "probes default off");
+
+    obs::health_reset();
+    obs::set_health(true);
+    let (probed, on_stats) = run_tokens(
+        build(3, None),
+        HealthConfig { sample_every_n_steps: 1, ..Default::default() },
+    );
+    obs::set_health(false);
+    assert!(on_stats.probe_steps > 0, "every step probed");
+    assert!(on_stats.probe_samples > 0, "probes saw sites");
+    assert_eq!(base, probed, "health instrumentation must be observe-only");
+}
+
+/// With the counters off, the razoring choke-point hooks and the site
+/// scope guard are one relaxed atomic load / a TLS swap — never an
+/// allocation.
+#[test]
+fn disabled_path_allocates_nothing() {
+    let _g = health_guard();
+    obs::set_health(false);
+    obs::set_probe(false);
+    // Warm the thread-locals outside the measured window.
+    {
+        let _s = SiteScope::enter(0, Site::Act);
+        qrazor::obs::health::note_razor_group(3, 16, 2, 1);
+    }
+    let before = allocs_on_this_thread();
+    for i in 0..1000usize {
+        let _s = SiteScope::enter(i % 4, Site::Act);
+        qrazor::obs::health::note_razor_group((i % 16) as u8, 16, 2, 1);
+        qrazor::obs::health::note_clips(3);
+        assert!(!obs::probe_enabled());
+    }
+    assert_eq!(
+        allocs_on_this_thread() - before,
+        0,
+        "disabled health path must not allocate"
+    );
+}
+
+// ---------------------------------------------------------------- //
+// drift-EWMA properties
+// ---------------------------------------------------------------- //
+
+/// A monotone drift ramp crossing the threshold fires the alarm
+/// exactly once (latched), for several ramp shapes.
+#[test]
+fn drift_ramp_alarms_exactly_once_across_seeds() {
+    for seed in 1u64..=5 {
+        let det = DriftDetector::new(HealthConfig::default());
+        let mut stats = HealthStats::default();
+        let slope = 0.03 + 0.02 * seed as f64;
+        let mut fired = 0usize;
+        for i in 0..80 {
+            if det.observe_ratio(&mut stats, "ramp", 0.9 + slope * i as f64) {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1, "ramp (slope {slope:.2}) must alarm exactly once");
+        assert_eq!(stats.drift_alarms, 1);
+        assert!(stats.sites["ramp"].alarmed, "alarm latches");
+    }
+}
+
+/// A stationary series bounded under the alarm ratio never alarms,
+/// regardless of jitter.
+#[test]
+fn stationary_drift_never_alarms() {
+    for seed in 1u64..=5 {
+        let det = DriftDetector::new(HealthConfig::default());
+        let mut stats = HealthStats::default();
+        let mut rng = Rng::new(seed);
+        for _ in 0..200 {
+            let jitter = rng.below(1000) as f64 / 1000.0; // [0, 1)
+            let fired = det.observe_ratio(&mut stats, "flat", 0.95 + 0.3 * jitter);
+            assert!(!fired, "stationary drift must not alarm");
+        }
+        assert_eq!(stats.drift_alarms, 0);
+        assert!(!stats.sites["flat"].alarmed);
+    }
+}
+
+// ---------------------------------------------------------------- //
+// escalation advisor
+// ---------------------------------------------------------------- //
+
+/// The advisor's suggested escalation must strictly reduce the
+/// measured activation razoring error over the calibration samples —
+/// the same metric the offline sensitivity builder ranks with.
+#[test]
+fn advisor_escalation_reduces_measured_error() {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, 3);
+    let mut rng = Rng::new(4);
+    let seqs: Vec<Vec<u32>> = (0..4)
+        .map(|_| (0..24).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    let alarmed = vec!["l0.attn_in".to_string(), "l1.ffn_in".to_string()];
+    let advice = advise(&policy, &alarmed).expect("act alarms must produce advice");
+    assert_eq!(advice.act_layers, vec![0, 1]);
+    let before = policy.act_calibration_error(&cal, cfg.layers);
+    let after = advice.escalated.act_calibration_error(&cal, cfg.layers);
+    assert!(
+        after < before,
+        "escalation must strictly reduce razoring error: {before:.4} -> {after:.4}"
+    );
+    // The rendered DSL is the whole fix: it parses back to the same
+    // canonical policy.
+    let reparsed = QuantPolicy::parse(&advice.dsl).expect("advice DSL parses");
+    assert_eq!(reparsed.to_string(), advice.escalated.to_string());
+}
+
+/// End to end: serving with stale frozen scales (attenuated 0.4×, a
+/// ~2.5× live drift) must latch per-site alarms and surface advice
+/// through the report.
+#[test]
+fn stale_scales_trip_alarms_and_advice() {
+    let _g = health_guard();
+    obs::health_reset();
+    let (_, stats) = run_tokens(
+        build(3, Some(0.4)),
+        HealthConfig { sample_every_n_steps: 1, ..Default::default() },
+    );
+    assert!(stats.drift_alarms > 0, "stale scales must alarm");
+    let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    let rep = HealthReport::from_stats(&stats, &policy, 8);
+    assert!(!rep.alarmed_sites.is_empty());
+    assert!(rep.advice.is_some(), "alarms on a razor policy must produce advice");
+}
+
+// ---------------------------------------------------------------- //
+// cluster merge ≡ single-shard sums
+// ---------------------------------------------------------------- //
+
+/// Merging two shards' health states equals the single-shard sums:
+/// counters and histograms add, per-site samples add, peaks take the
+/// max, alarms OR.
+#[test]
+fn cluster_merge_equals_single_shard_sums() {
+    let det = DriftDetector::new(HealthConfig::default());
+    let mut a = HealthStats::default();
+    let mut b = HealthStats::default();
+    let mut rng = Rng::new(11);
+    for i in 0..40 {
+        let d = 1.0 + rng.below(2000) as f64 / 1000.0; // [1, 3)
+        let site = ["l0.attn_in", "l1.ffn_in", "l0.q"][i % 3];
+        det.observe_ratio(if i % 2 == 0 { &mut a } else { &mut b }, site, d);
+    }
+    a.probe_steps = 20;
+    b.probe_steps = 20;
+    let mut merged = a.clone();
+    merged.merge(&b);
+    assert_eq!(merged.probe_steps, a.probe_steps + b.probe_steps);
+    assert_eq!(merged.probe_samples, a.probe_samples + b.probe_samples);
+    assert_eq!(merged.drift_alarms, a.drift_alarms + b.drift_alarms);
+    assert_eq!(merged.drift.len(), a.drift.len() + b.drift.len());
+    for (site, m) in merged.sites.iter() {
+        let sa = a.sites.get(site);
+        let sb = b.sites.get(site);
+        let samples = |s: Option<&obs::SiteHealth>| s.map_or(0, |s| s.samples);
+        let peak = |s: Option<&obs::SiteHealth>| s.map_or(0.0, |s| s.peak);
+        let alarmed = |s: Option<&obs::SiteHealth>| s.is_some_and(|s| s.alarmed);
+        assert_eq!(m.samples, samples(sa) + samples(sb), "site {site}");
+        assert_eq!(m.peak, peak(sa).max(peak(sb)), "site {site}");
+        assert_eq!(m.alarmed, alarmed(sa) || alarmed(sb), "site {site}");
+    }
+    // An empty shard is the merge identity.
+    let mut id = a.clone();
+    id.merge(&HealthStats::default());
+    assert_eq!(id, a);
+}
