@@ -1,0 +1,450 @@
+//! Network-front-end soak: thousands of concurrent loopback streaming
+//! sessions against a multi-shard cluster behind `HttpServer`, with
+//! mixed tenants, priority classes, shared prefixes, tight admission
+//! deadlines, and mid-stream client disconnects. Every session drains
+//! its stream through the protocol-checking client, so a single
+//! malformed frame fails the run.
+//!
+//! Reports TTFT and inter-token p50/p99, finish-reason counts
+//! (deadline expiries included), disconnect-cancels, and per-tenant
+//! admission/throttle counters, then asserts the invariants the
+//! front-end promises: zero protocol errors, every session resolved
+//! (completed or cancelled), the packed KV pools drained byte-exactly
+//! to zero, and — on the throttle axis — a rate-capped tenant admitted
+//! within 10% of its token-bucket budget while an uncapped tenant
+//! rides along unthrottled.
+//!
+//! `--smoke` shrinks the session count for CI; `--sessions N` and
+//! `--shards N` override. `--metrics-out`, `--registry-json`, and
+//! `--trace-out` write the Prometheus text, `qrazor.registry.v1`
+//! snapshot, and Chrome-trace artifacts (fetched over the wire, so
+//! the endpoints themselves are exercised).
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use qrazor::baselines::QRazor;
+use qrazor::cluster::{ClusterConfig, ClusterServer};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::net::{client, parse_tenants, HttpServer, NetConfig};
+use qrazor::obs::{self, TraceBuffer};
+use qrazor::util::json::Json;
+use qrazor::util::rng::Rng;
+use qrazor::util::stats::Percentiles;
+
+fn build_model(seed: u64) -> Arc<QuantModel> {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal))
+}
+
+/// What one client session observed.
+#[derive(Default)]
+struct SessionResult {
+    ttft_s: Option<f64>,
+    /// Per-token inter-arrival gaps (batched chunks amortized).
+    gaps: Vec<f64>,
+    tokens: usize,
+    finish: Option<String>,
+    disconnected: bool,
+    proto_error: Option<String>,
+}
+
+/// One streaming session: submit, time the frames, optionally hang up
+/// mid-stream. Any wire-shape surprise lands in `proto_error`.
+fn run_session(addr: SocketAddr, i: usize, vocab: u64) -> SessionResult {
+    // Smear connection attempts so the accept backlog never overflows.
+    thread::sleep(Duration::from_millis((i % 97) as u64));
+    let mut res = SessionResult::default();
+
+    let tenant = match i % 3 {
+        0 => None,
+        1 => Some("free"),
+        _ => Some("pro"),
+    };
+    let mode = if i % 2 == 0 { "sse" } else { "jsonl" };
+    let disconnect = i % 10 == 7;
+    let deadline = i % 17 == 5;
+    // Disconnectors ask for a long stream so plenty of generation
+    // remains to cancel; everyone else stays short.
+    let max_tokens = if disconnect { 192 } else { 16 };
+    // Half the fleet shares a prompt preamble (prefix-cache traffic),
+    // the rest are random.
+    let prompt: Vec<u32> = if i % 2 == 0 {
+        let mut p = vec![5, 9, 2, 6, 5, 3, 5, 8];
+        p.push((i % 50) as u32 + 1);
+        p
+    } else {
+        let mut rng = Rng::new(1000 + i as u64);
+        (0..6).map(|_| rng.below(vocab) as u32).collect()
+    };
+    let prompt_json: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let mut body = format!(
+        "{{\"prompt\":[{}],\"max_tokens\":{max_tokens},\"stream\":\"{mode}\"",
+        prompt_json.join(",")
+    );
+    match i % 7 {
+        0 => body.push_str(",\"priority\":\"interactive\""),
+        3 => body.push_str(",\"priority\":\"batch\""),
+        _ => {}
+    }
+    if deadline {
+        body.push_str(",\"deadline_ms\":1");
+    }
+    body.push('}');
+
+    let t0 = Instant::now();
+    let mut reply = match client::post_completions(addr, tenant, &body) {
+        Ok(r) => r,
+        Err(e) => {
+            res.proto_error = Some(format!("request failed: {e}"));
+            return res;
+        }
+    };
+    if reply.status != 200 {
+        res.proto_error = Some(format!("unexpected status {}", reply.status));
+        return res;
+    }
+    let mut last: Option<Instant> = None;
+    loop {
+        match reply.next_json() {
+            Ok(Some(frame)) => {
+                let now = Instant::now();
+                match frame.get("object").and_then(|o| o.as_str()) {
+                    Some("started") => {}
+                    Some("chunk") => {
+                        let n = frame
+                            .get("tokens")
+                            .and_then(|t| t.as_arr())
+                            .map(|a| a.len())
+                            .unwrap_or(0);
+                        if res.ttft_s.is_none() {
+                            res.ttft_s = Some(t0.elapsed().as_secs_f64());
+                        } else if let Some(prev) = last {
+                            let gap = (now - prev).as_secs_f64();
+                            for _ in 0..n {
+                                res.gaps.push(gap / n.max(1) as f64);
+                            }
+                        }
+                        last = Some(now);
+                        res.tokens += n;
+                        if disconnect {
+                            // Dropping the reply closes the socket:
+                            // the server must cancel the session.
+                            res.disconnected = true;
+                            return res;
+                        }
+                    }
+                    Some("done") => {
+                        res.finish = frame
+                            .get("response")
+                            .and_then(|r| r.get("finish_reason"))
+                            .and_then(|f| f.as_str())
+                            .map(String::from);
+                    }
+                    other => {
+                        res.proto_error = Some(format!("unknown frame object {other:?}"));
+                        return res;
+                    }
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                res.proto_error = Some(e.to_string());
+                return res;
+            }
+        }
+    }
+    if res.finish.is_none() {
+        res.proto_error = Some("stream ended without a done frame".into());
+    }
+    res
+}
+
+fn wait_drained<A: qrazor::coordinator::ServeApi + Send + 'static>(http: &HttpServer<A>) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = http.stats();
+        if st.in_flight() == 0 && st.occupancy.bytes == 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "server never drained: {st:?}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The main soak: `sessions` concurrent streaming clients against a
+/// `shards`-way cluster, all invariants checked after the dust settles.
+fn soak_axis(
+    model: &Arc<QuantModel>,
+    sessions: usize,
+    shards: usize,
+    smoke: bool,
+    metrics_out: &str,
+    registry_out: &str,
+    trace_out: &str,
+) {
+    let vocab = 256u64; // nano preset
+    let serve = ServeConfig { max_batch: 8, max_new_tokens: 256, ..ServeConfig::default() };
+    let cfg = ClusterConfig { shards, serve, ..ClusterConfig::default() };
+    let trace = TraceBuffer::with_default_capacity();
+    let cluster =
+        ClusterServer::spawn_with_telemetry(Arc::clone(model), None, cfg, Some(Arc::clone(&trace)));
+    let tenants = parse_tenants("free;pro:priority=interactive").unwrap();
+    let net_cfg = NetConfig { tenants, ..NetConfig::default() };
+    let http = HttpServer::bind(cluster, net_cfg, "127.0.0.1:0", Some(trace)).unwrap();
+    let addr = http.addr();
+
+    println!("soak: {sessions} concurrent sessions, {shards} shards, addr {addr}");
+    let t0 = Instant::now();
+    let results: Arc<Mutex<Vec<SessionResult>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut handles = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let results = Arc::clone(&results);
+        let h = thread::Builder::new()
+            .stack_size(256 << 10)
+            .spawn(move || {
+                let r = run_session(addr, i, vocab);
+                results.lock().unwrap().push(r);
+            })
+            .expect("spawn session thread");
+        handles.push(h);
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    wait_drained(&http);
+
+    let results = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    assert_eq!(results.len(), sessions);
+    let mut ttft = Percentiles::default();
+    let mut gaps = Percentiles::default();
+    let mut finishes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut disconnects = 0usize;
+    let mut proto_errors = 0usize;
+    let mut streamed_tokens = 0usize;
+    for r in &results {
+        if let Some(e) = &r.proto_error {
+            proto_errors += 1;
+            eprintln!("protocol error: {e}");
+        }
+        if let Some(t) = r.ttft_s {
+            ttft.push(t);
+        }
+        for g in &r.gaps {
+            gaps.push(*g);
+        }
+        streamed_tokens += r.tokens;
+        if r.disconnected {
+            disconnects += 1;
+        }
+        if let Some(f) = &r.finish {
+            *finishes.entry(f.clone()).or_insert(0) += 1;
+        }
+    }
+    let resolved: usize = finishes.values().sum();
+    let expiries = finishes.get("expired").copied().unwrap_or(0);
+    let cancels = http.disconnect_cancels();
+    let throttles: u64 = http
+        .tenant_counters()
+        .iter()
+        .map(|t| t.throttled_rate + t.throttled_quota)
+        .sum();
+
+    println!("  wall {wall:.2}s  streamed_tokens {streamed_tokens}");
+    println!(
+        "  ttft_s      p50 {:.4}  p99 {:.4}  (n={})",
+        ttft.pct(50.0),
+        ttft.pct(99.0),
+        ttft.len()
+    );
+    println!(
+        "  intertok_s  p50 {:.5}  p99 {:.5}  (n={})",
+        gaps.pct(50.0),
+        gaps.pct(99.0),
+        gaps.len()
+    );
+    println!("  finishes {finishes:?}  expiries {expiries}  disconnects {disconnects}");
+    println!("  disconnect_cancels {cancels}  throttles {throttles}");
+    for t in http.tenant_counters() {
+        println!(
+            "  tenant {:<10} admitted {:<6} throttled_rate {} throttled_quota {} dropped {}",
+            t.name, t.admitted, t.throttled_rate, t.throttled_quota, t.events_dropped
+        );
+    }
+
+    // Invariants: a clean wire, every session resolved or cancelled,
+    // and the disconnects actually noticed by the server.
+    assert_eq!(proto_errors, 0, "protocol errors on the wire");
+    assert_eq!(resolved + disconnects, sessions, "unresolved sessions");
+    assert!(
+        cancels >= (disconnects * 4 / 5) as u64,
+        "server noticed {cancels} of {disconnects} disconnects"
+    );
+    assert_eq!(throttles, 0, "no tenant is rate-limited on this axis");
+
+    // Artifacts over the wire, so the endpoints themselves soak.
+    let (st, prom) = client::get(addr, "/metrics").unwrap();
+    assert_eq!(st, 200);
+    let (st, trace_json) = client::get(addr, "/trace").unwrap();
+    assert_eq!(st, 200);
+    let (st, health) = client::get(addr, "/health").unwrap();
+    assert_eq!(st, 200);
+    if !metrics_out.is_empty() {
+        std::fs::write(metrics_out, &prom).expect("write metrics artifact");
+    }
+    if !trace_out.is_empty() {
+        std::fs::write(trace_out, &trace_json).expect("write trace artifact");
+    }
+
+    // KV pools must have drained byte-exactly on every shard.
+    let cluster = http.shutdown();
+    let report = cluster.shutdown();
+    for s in &report.shards {
+        assert_eq!(s.final_occupancy.bytes, 0, "shard {} holds KV bytes after drain", s.index);
+    }
+    assert_eq!(report.total_completed() as usize, sessions, "completions (incl. cancels)");
+
+    let reg_json = report.registry().to_json();
+    if !registry_out.is_empty() {
+        std::fs::write(registry_out, reg_json.to_string()).expect("write registry artifact");
+    }
+    if smoke {
+        obs::validate_registry_json(&reg_json).expect("registry snapshot schema");
+        let parsed = Json::parse(&trace_json).expect("trace endpoint JSON");
+        assert!(
+            parsed.get("traceEvents").and_then(|t| t.as_arr()).is_some(),
+            "trace endpoint shape"
+        );
+        let h = Json::parse(&health).expect("health endpoint JSON");
+        qrazor::obs::validate_health_json(&h).expect("health schema");
+        assert!(prom.contains("qrazor_net_http_requests"), "net counters in /metrics");
+    }
+}
+
+/// Fairness axis: hammer a rate-capped tenant and an uncapped one
+/// side by side; the capped tenant's admitted count must land within
+/// 10% of its token-bucket budget and the open tenant must never see
+/// a 429.
+fn throttle_axis(model: &Arc<QuantModel>, smoke: bool) {
+    let rps = 40.0;
+    let burst = 5.0;
+    let serve = ServeConfig { max_batch: 8, max_new_tokens: 8, ..ServeConfig::default() };
+    let cluster = ClusterServer::spawn(
+        Arc::clone(model),
+        ClusterConfig { shards: 2, serve, ..ClusterConfig::default() },
+    );
+    let tenants = parse_tenants("capped:rps=40,burst=5;open").unwrap();
+    let net_cfg = NetConfig { tenants, ..NetConfig::default() };
+    let http = HttpServer::bind(cluster, net_cfg, "127.0.0.1:0", None).unwrap();
+    let addr = http.addr();
+
+    let window = Duration::from_millis(if smoke { 1500 } else { 3000 });
+    let stop = Arc::new(AtomicBool::new(false));
+    // [capped_ok, capped_429, open_ok, open_429]
+    let counters: Arc<[AtomicU64; 4]> = Arc::new(Default::default());
+    let errors = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for (slot, tenant) in [(0usize, "capped"), (2usize, "open")] {
+        for _ in 0..4 {
+            let stop = Arc::clone(&stop);
+            let counters = Arc::clone(&counters);
+            let errors = Arc::clone(&errors);
+            handles.push(thread::spawn(move || {
+                let body = r#"{"prompt":[1,2,3],"max_tokens":1,"stream":"json"}"#;
+                while !stop.load(Ordering::Relaxed) {
+                    match client::post_completions(addr, Some(tenant), body) {
+                        Ok(reply) => {
+                            let idx = if reply.status == 200 {
+                                slot
+                            } else if reply.status == 429 {
+                                // Back off instead of spinning on
+                                // instant rejections; still attempts
+                                // far faster than the refill rate.
+                                thread::sleep(Duration::from_millis(2));
+                                slot + 1
+                            } else {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            };
+                            counters[idx].fetch_add(1, Ordering::Relaxed);
+                            let _ = reply.read_body();
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }));
+        }
+    }
+    thread::sleep(window);
+    stop.store(true, Ordering::Relaxed);
+    let elapsed = t0.elapsed().as_secs_f64();
+    for h in handles {
+        h.join().unwrap();
+    }
+    wait_drained(&http);
+
+    let capped_ok = counters[0].load(Ordering::Relaxed) as f64;
+    let capped_429 = counters[1].load(Ordering::Relaxed);
+    let open_ok = counters[2].load(Ordering::Relaxed) as f64;
+    let open_429 = counters[3].load(Ordering::Relaxed);
+    let budget = burst + rps * elapsed;
+    println!(
+        "throttle: capped admitted {capped_ok} (budget {budget:.1}, 429s {capped_429})  \
+         open admitted {open_ok} (429s {open_429})"
+    );
+    for t in http.tenant_counters() {
+        println!(
+            "  tenant {:<10} admitted {:<6} throttled_rate {} throttled_quota {}",
+            t.name, t.admitted, t.throttled_rate, t.throttled_quota
+        );
+    }
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "transport errors during hammer");
+    assert!(capped_429 > 0, "capped tenant was never throttled");
+    assert!(
+        capped_ok >= 0.9 * budget && capped_ok <= 1.1 * budget + 1.0,
+        "capped tenant admitted {capped_ok} vs budget {budget:.1} (±10%)"
+    );
+    assert_eq!(open_429, 0, "open tenant saw a 429");
+    assert!(open_ok > capped_ok, "open tenant should outrun the capped one");
+
+    let report = http.shutdown().shutdown();
+    for s in &report.shards {
+        assert_eq!(s.final_occupancy.bytes, 0, "shard {} holds KV bytes after drain", s.index);
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let arg_val = |flag: &str| -> Option<String> {
+        argv.iter().position(|a| a == flag).and_then(|i| argv.get(i + 1)).cloned()
+    };
+    let sessions: usize = arg_val("--sessions")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 128 } else { 1200 });
+    let shards: usize = arg_val("--shards").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let metrics_out = arg_val("--metrics-out").unwrap_or_default();
+    let registry_out = arg_val("--registry-json").unwrap_or_default();
+    let trace_out = arg_val("--trace-out").unwrap_or_default();
+
+    let model = build_model(7);
+    soak_axis(&model, sessions, shards, smoke, &metrics_out, &registry_out, &trace_out);
+    throttle_axis(&model, smoke);
+    println!("soak_serve OK");
+}

@@ -26,6 +26,15 @@ pub enum PlacementPolicy {
     /// on the shard whose paged KV pool already holds those pages, so
     /// the per-shard prefix index actually hits.
     PrefixAffinity,
+    /// Policy-affinity axis for tenant/SLO classes: interactive
+    /// requests pin to shard 0 — the shard an operator serves under an
+    /// A8-escalated quantization policy — while everything else
+    /// balances least-reserved across the remaining shards. Today all
+    /// shards still share one `QuantModel`, so this is purely a
+    /// routing axis (greedy streams stay placement-invariant, which
+    /// the cluster equivalence suite pins); per-shard policies plug in
+    /// on top of it without touching the router.
+    PolicyAffinity,
 }
 
 /// Prompt tokens hashed by [`PlacementPolicy::PrefixAffinity`]. Long
@@ -41,6 +50,7 @@ impl PlacementPolicy {
             "round-robin" => Some(PlacementPolicy::RoundRobin),
             "hash" | "hash-affinity" => Some(PlacementPolicy::HashAffinity),
             "prefix" | "prefix-affinity" => Some(PlacementPolicy::PrefixAffinity),
+            "policy" | "policy-affinity" => Some(PlacementPolicy::PolicyAffinity),
             _ => None,
         }
     }
@@ -90,6 +100,20 @@ impl Placement {
             PlacementPolicy::PrefixAffinity => {
                 let w = req.prompt.len().min(PREFIX_WINDOW);
                 (fnv1a_tokens(&req.prompt[..w]) % loads.len() as u64) as usize
+            }
+            PlacementPolicy::PolicyAffinity => {
+                use crate::coordinator::request::Priority;
+                if loads.len() == 1 || req.priority == Priority::Interactive {
+                    return 0;
+                }
+                // everything else spreads least-reserved over shards 1..
+                loads
+                    .iter()
+                    .enumerate()
+                    .skip(1)
+                    .min_by_key(|(i, l)| (l.committed_tokens, *i))
+                    .map(|(i, _)| i)
+                    .unwrap()
             }
         }
     }
@@ -173,6 +197,24 @@ mod tests {
     }
 
     #[test]
+    fn policy_affinity_pins_interactive_to_shard_zero() {
+        use crate::coordinator::request::Priority;
+        let mut p = Placement::new(PlacementPolicy::PolicyAffinity);
+        let l = loads(&[900, 40, 10]);
+        let mut hot = req(0, vec![1, 2]);
+        hot.priority = Priority::Interactive;
+        assert_eq!(p.choose(&hot, &l), 0, "interactive routes to the escalated shard");
+        // non-interactive traffic spreads least-reserved over shards 1..
+        let std_req = req(1, vec![3, 4]);
+        assert_eq!(p.choose(&std_req, &l), 2);
+        let mut batch = req(2, vec![5]);
+        batch.priority = Priority::Batch;
+        assert_eq!(p.choose(&batch, &loads(&[0, 10, 40])), 1, "shard 0 is reserved");
+        // degenerate single shard takes everything
+        assert_eq!(p.choose(&std_req, &loads(&[5])), 0);
+    }
+
+    #[test]
     fn policy_parse_spellings() {
         assert_eq!(PlacementPolicy::parse("least-reserved"), Some(PlacementPolicy::LeastReserved));
         assert_eq!(PlacementPolicy::parse("round-robin"), Some(PlacementPolicy::RoundRobin));
@@ -182,6 +224,11 @@ mod tests {
         assert_eq!(
             PlacementPolicy::parse("prefix-affinity"),
             Some(PlacementPolicy::PrefixAffinity)
+        );
+        assert_eq!(PlacementPolicy::parse("policy"), Some(PlacementPolicy::PolicyAffinity));
+        assert_eq!(
+            PlacementPolicy::parse("policy-affinity"),
+            Some(PlacementPolicy::PolicyAffinity)
         );
         assert_eq!(PlacementPolicy::parse("bogus"), None);
     }

@@ -738,6 +738,7 @@ mod tests {
             (4, 3, PlacementPolicy::RoundRobin),
             (5, 2, PlacementPolicy::HashAffinity),
             (6, 4, PlacementPolicy::LeastReserved),
+            (7, 3, PlacementPolicy::PolicyAffinity),
         ]
         .iter()
         .enumerate()
@@ -765,6 +766,65 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Policy-affinity placement under a priority mix: interactive
+    /// sessions pin to shard 0 (the would-be A8-escalated shard) while
+    /// standard/batch spread over the rest, and every stream — routed
+    /// or not — still matches the single-engine baseline with the same
+    /// priorities (greedy decode is placement-invariant).
+    #[test]
+    fn policy_affinity_placement_streams_match_baseline() {
+        use crate::coordinator::request::{Priority, RequestId, SubmitOptions};
+        let model = model(23);
+        let vocab = model.config.vocab as u64;
+        let mix = [Priority::Interactive, Priority::Standard, Priority::Batch];
+        let work = workload(9, 9, vocab);
+        // baseline: same prompts + priorities on a bare engine
+        let want: BTreeMap<u64, Vec<u32>> = {
+            let mut engine = Engine::new(
+                Arc::clone(&model),
+                ServeConfig { max_batch: 4, ..Default::default() },
+            );
+            for (i, (prompt, max_new)) in work.iter().enumerate() {
+                let opts = SubmitOptions::new().priority(mix[i % mix.len()]);
+                engine.submit_request(opts.build(RequestId(i as u64), prompt.clone(), *max_new));
+            }
+            engine.run_to_completion().into_iter().map(|r| (r.id.0, r.tokens)).collect()
+        };
+        let cluster = ClusterServer::spawn(
+            Arc::clone(&model),
+            ClusterConfig {
+                shards: 3,
+                placement: PlacementPolicy::PolicyAffinity,
+                serve: ServeConfig { max_batch: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        for (i, (prompt, max_new)) in work.iter().enumerate() {
+            let opts = SubmitOptions::new().priority(mix[i % mix.len()]);
+            cluster.submit_with(prompt.clone(), *max_new, opts).unwrap();
+        }
+        let sessions = collect_sessions(&cluster, work.len()).unwrap();
+        let report = cluster.shutdown();
+        for (id, log) in &sessions {
+            let resp = log.response.as_ref().expect("finished");
+            assert_eq!(
+                want.get(&id.0),
+                Some(&resp.tokens),
+                "request {id:?} diverged under policy-affinity routing"
+            );
+        }
+        // the interactive third of the workload ran somewhere: shard 0
+        // must have served work, and with 9 requests over 3 shards the
+        // non-interactive spread must have reached another shard too
+        let by_shard: Vec<u64> =
+            report.shards.iter().map(|s| s.metrics.requests_completed).collect();
+        assert!(by_shard[0] >= 3, "shard 0 serves the interactive class: {by_shard:?}");
+        assert!(
+            by_shard[1] + by_shard[2] > 0,
+            "non-interactive traffic must spread past shard 0: {by_shard:?}"
+        );
     }
 
     /// The same property through the repo's quickcheck harness:

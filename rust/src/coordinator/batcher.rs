@@ -17,6 +17,15 @@
 //! queue (in queue order, ahead of every priority class) on every
 //! subsequent pass — reordering can therefore delay a request at most
 //! once per competitor, never starve it.
+//!
+//! Multi-tenant fairness: requests carry a tenant class
+//! ([`crate::coordinator::request::SubmitOptions::tenant`], resolved
+//! from the API-key header by the network front-end). Within each
+//! priority class the queue is dealt round-robin across tenants, so
+//! one tenant's burst cannot monopolize an admission pass over
+//! another's trickle. Per-tenant relative order is preserved and a
+//! single-tenant queue is untouched, so in-process callers (and every
+//! pre-existing ordering contract) see identical admission.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -139,6 +148,7 @@ impl Batcher {
                 (true, r.priority.rank(), if spf { r.prompt.len() } else { 0 })
             }
         });
+        self.interleave_tenants();
         // scan without starving: take from the front while budgets allow
         while slots > 0 {
             let Some(front) = self.queue.front() else { break };
@@ -167,6 +177,70 @@ impl Batcher {
             }
         }
         admitted
+    }
+
+    /// Deal each same-priority run of the sorted queue round-robin
+    /// across tenant classes (in first-seen order), preserving each
+    /// tenant's own relative order. The deferred pin at the front is
+    /// left untouched — the starvation guarantee outranks tenant
+    /// fairness — and a queue whose waiting requests all share one
+    /// tenant returns immediately, so the hook is free for in-process
+    /// callers and cannot perturb the single-tenant equivalence
+    /// suites.
+    fn interleave_tenants(&mut self) {
+        let Some(front) = self.queue.front() else { return };
+        let first = front.tenant;
+        if self.queue.iter().all(|r| r.tenant == first) {
+            return;
+        }
+        let n = self.queue.len();
+        let key = |r: &Request| {
+            if r.deferrals > 0 {
+                None // pinned run: never reordered
+            } else {
+                Some(r.priority.rank())
+            }
+        };
+        let keys: Vec<Option<u8>> = self.queue.iter().map(key).collect();
+        let mut slots: Vec<Option<Request>> = self.queue.drain(..).map(Some).collect();
+        let mut out: Vec<Request> = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let mut end = start + 1;
+            while end < n && keys[end] == keys[start] {
+                end += 1;
+            }
+            if keys[start].is_none() {
+                // deferred run: keep queue order
+                for slot in slots[start..end].iter_mut() {
+                    out.push(slot.take().unwrap());
+                }
+            } else {
+                // one lane per tenant, first-seen order, then deal rounds
+                let mut lanes: Vec<(u32, VecDeque<usize>)> = Vec::new();
+                for (i, slot) in slots.iter().enumerate().take(end).skip(start) {
+                    let t = slot.as_ref().unwrap().tenant;
+                    match lanes.iter_mut().find(|(lt, _)| *lt == t) {
+                        Some((_, lane)) => lane.push_back(i),
+                        None => lanes.push((t, VecDeque::from(vec![i]))),
+                    }
+                }
+                loop {
+                    let mut took = false;
+                    for (_, lane) in lanes.iter_mut() {
+                        if let Some(i) = lane.pop_front() {
+                            out.push(slots[i].take().unwrap());
+                            took = true;
+                        }
+                    }
+                    if !took {
+                        break;
+                    }
+                }
+            }
+            start = end;
+        }
+        self.queue = VecDeque::from(out);
     }
 }
 
@@ -377,6 +451,64 @@ mod tests {
         // interactive class first (short prompt first within it), then
         // the standard request
         assert_eq!(ids, vec![RequestId(2), RequestId(1), RequestId(0)]);
+    }
+
+    fn req_tenant(id: u64, tenant: u32) -> Request {
+        let mut r = req(id, 4, 4);
+        r.tenant = tenant;
+        r
+    }
+
+    #[test]
+    fn tenants_interleave_round_robin_within_a_priority_class() {
+        // Arrival aabb from two tenants must admit abab: one tenant's
+        // burst cannot monopolize the pass over another's trickle.
+        let mut b = Batcher::new(Policy::Fcfs, 8, 1000);
+        b.push(req_tenant(0, 1));
+        b.push(req_tenant(1, 1));
+        b.push(req_tenant(2, 2));
+        b.push(req_tenant(3, 2));
+        let ids: Vec<u64> = b.admit(0, |_| true).iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn tenant_interleave_respects_priority_classes() {
+        // Interleaving happens inside a class, never across: a Batch
+        // request from a starved tenant still waits behind Standard.
+        let mut b = Batcher::new(Policy::Fcfs, 8, 1000);
+        let mut batch = req_tenant(0, 2);
+        batch.priority = Priority::Batch;
+        b.push(batch);
+        b.push(req_tenant(1, 1));
+        b.push(req_tenant(2, 1));
+        b.push(req_tenant(3, 2));
+        let ids: Vec<u64> = b.admit(0, |_| true).iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![1, 3, 2, 0], "standard interleaves 1/3, batch tier last");
+    }
+
+    #[test]
+    fn single_tenant_queue_is_untouched_by_the_fairness_hook() {
+        let mut b = Batcher::new(Policy::Fcfs, 8, 1000);
+        for i in 0..5 {
+            b.push(req(i, 4, 4));
+        }
+        let ids: Vec<u64> = b.admit(0, |_| true).iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "identity for one tenant");
+    }
+
+    #[test]
+    fn deferred_pin_outranks_tenant_interleave() {
+        // A deferred request keeps the head of the line even when a
+        // fresh tenant shows up behind it.
+        let mut b = Batcher::new(Policy::Fcfs, 8, 1000);
+        b.push(req_tenant(0, 1));
+        let none = b.admit(0, |_| false); // rejected: pins request 0
+        assert!(none.is_empty());
+        b.push(req_tenant(1, 2));
+        b.push(req_tenant(2, 3));
+        let ids: Vec<u64> = b.admit(0, |_| true).iter().map(|r| r.id.0).collect();
+        assert_eq!(ids[0], 0, "deferred request admits first regardless of tenants");
     }
 
     #[test]

@@ -69,6 +69,12 @@ pub struct SubmitOptions {
     /// when it expires finishes as [`FinishReason::Expired`] instead
     /// of occupying the queue. Running requests are never expired.
     pub deadline: Option<Duration>,
+    /// Tenant class of the submitter (0 = anonymous/default). The
+    /// network front-end resolves the API-key header to a stable
+    /// index; the batcher interleaves tenants fairly within a
+    /// priority class so one tenant's burst cannot monopolize a
+    /// admission pass over another's.
+    pub tenant: u32,
 }
 
 impl Default for SubmitOptions {
@@ -84,6 +90,7 @@ impl SubmitOptions {
             stop_token: None,
             priority: Priority::Standard,
             deadline: None,
+            tenant: 0,
         }
     }
 
@@ -107,6 +114,11 @@ impl SubmitOptions {
         self
     }
 
+    pub fn tenant(mut self, t: u32) -> Self {
+        self.tenant = t;
+        self
+    }
+
     /// Materialize a [`Request`]. The caller owns id uniqueness and
     /// has already clamped `max_new` to the serve config.
     pub fn build(self, id: RequestId, prompt: Vec<u32>, max_new: usize) -> Request {
@@ -115,6 +127,7 @@ impl SubmitOptions {
         req.stop_token = self.stop_token;
         req.priority = self.priority;
         req.deadline = self.deadline;
+        req.tenant = self.tenant;
         req
     }
 }
@@ -133,6 +146,8 @@ pub struct Request {
     /// Queued-admission deadline relative to `arrived` (see
     /// [`SubmitOptions::deadline`]).
     pub deadline: Option<Duration>,
+    /// Tenant class (see [`SubmitOptions::tenant`]); 0 = anonymous.
+    pub tenant: u32,
     pub arrived: Instant,
     /// Times the batcher deferred this request: rejected at the
     /// admission gate (KV backpressure) or overtaken by a later
@@ -153,6 +168,7 @@ impl Request {
             stop_token: None,
             priority: Priority::Standard,
             deadline: None,
+            tenant: 0,
             arrived: Instant::now(),
             deferrals: 0,
         }
@@ -237,6 +253,7 @@ mod tests {
         assert!(r.stop_token.is_none());
         assert_eq!(r.priority, Priority::Standard);
         assert!(r.deadline.is_none());
+        assert_eq!(r.tenant, 0);
         assert!(!r.expired(Instant::now()));
     }
 
@@ -259,12 +276,14 @@ mod tests {
             .sampling(Sampling::Temperature { temp: 0.7, seed: 9 })
             .stop_token(5)
             .priority(Priority::Interactive)
-            .deadline(Duration::from_millis(250));
+            .deadline(Duration::from_millis(250))
+            .tenant(3);
         let r = opts.build(RequestId(8), vec![1, 2], 12);
         assert!(matches!(r.sampling, Sampling::Temperature { seed: 9, .. }));
         assert_eq!(r.stop_token, Some(5));
         assert_eq!(r.priority, Priority::Interactive);
         assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(r.tenant, 3);
         assert_eq!(r.max_new_tokens, 12);
     }
 

@@ -39,6 +39,11 @@
 //!   text + JSON snapshot), scheduler step-stage timing, and the
 //!   per-request [`obs::TraceBuffer`] exporting Chrome trace_event
 //!   JSON for Perfetto.
+//! * [`net`] — the network front-end: a dependency-free HTTP/1.1
+//!   streaming server (SSE / JSON-lines completions, per-tenant
+//!   token-bucket admission, `/metrics` `/health` `/trace`) generic
+//!   over [`coordinator::ServeApi`], so one engine or a whole cluster
+//!   serves sockets unchanged.
 //! * [`util`] / [`tensor`] — zero-dependency substrates.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index
@@ -52,6 +57,7 @@ pub mod data;
 pub mod eval;
 pub mod hw;
 pub mod model;
+pub mod net;
 pub mod obs;
 pub mod policy;
 pub mod quant;

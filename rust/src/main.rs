@@ -7,6 +7,7 @@
 //! qrazor quantize --policy "w4a4:16;layers=0:w4a8"  # policy manifest + footprint
 //! qrazor serve    --model nano --requests 16        # serving demo
 //! qrazor serve    --shards 4 --requests 64          # sharded cluster demo
+//! qrazor serve    --shards 2 --listen 127.0.0.1:8080  # HTTP streaming front-end
 //! qrazor hw-report                                  # Table 5 + Table 8
 //! ```
 //!
@@ -55,7 +56,24 @@ fn cli() -> Cli {
         .opt(
             "placement",
             Some("least-reserved"),
-            "serve: shard placement (least-reserved|round-robin|hash)",
+            "serve: shard placement (least-reserved|round-robin|hash|prefix|policy-affinity)",
+        )
+        .opt(
+            "listen",
+            Some(""),
+            "serve: bind the HTTP front-end on this address (e.g. 127.0.0.1:8080) instead of \
+             running the synthetic workload",
+        )
+        .opt(
+            "serve-secs",
+            Some("0"),
+            "serve: with --listen, serve for N seconds then report (0 = until killed)",
+        )
+        .opt(
+            "tenants",
+            Some(""),
+            "serve: tenant budgets for --listen, e.g. \
+             'free:rps=5,burst=10;pro:priority=interactive'",
         )
         .opt("spec", Some("0"), "serve: speculative lookahead k (0 = off)")
         .opt(
@@ -377,6 +395,75 @@ fn main() -> anyhow::Result<()> {
                 }
                 Ok(())
             };
+            // Network front-end: --listen swaps the synthetic workload
+            // for the HTTP/1.1 streaming server (rust/src/net/) over
+            // the same backends. Requests then arrive over the wire as
+            // POST /v1/completions; /metrics, /health, and /trace are
+            // live the whole time.
+            let listen = args.get_str("listen")?;
+            if !listen.is_empty() {
+                let serve_secs = args.get_u64("serve-secs")?;
+                let tenants_spec = args.get_str("tenants")?;
+                let tenants = if tenants_spec.is_empty() {
+                    Vec::new()
+                } else {
+                    qrazor::net::parse_tenants(&tenants_spec)?
+                };
+                let net_cfg = qrazor::net::NetConfig {
+                    default_max_new: max_new,
+                    tenants,
+                    ..Default::default()
+                };
+                let wait_http = |addr: std::net::SocketAddr| {
+                    println!(
+                        "listening on http://{addr} — POST /v1/completions, \
+                         GET /metrics /health /trace"
+                    );
+                    if serve_secs == 0 {
+                        println!("serving until killed (--serve-secs N to bound)");
+                        loop {
+                            std::thread::sleep(std::time::Duration::from_secs(3600));
+                        }
+                    }
+                    std::thread::sleep(std::time::Duration::from_secs(serve_secs));
+                };
+                if shards > 1 {
+                    let placement_name = args.get_str("placement")?;
+                    let placement = PlacementPolicy::parse(&placement_name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown placement '{placement_name}'"))?;
+                    let cluster = ClusterServer::spawn_with_telemetry(
+                        qm,
+                        draft,
+                        ClusterConfig { shards, placement, serve: serve_cfg, ..Default::default() },
+                        trace.clone(),
+                    );
+                    let http =
+                        qrazor::net::HttpServer::bind(cluster, net_cfg, &listen, trace.clone())?;
+                    wait_http(http.addr());
+                    let report = http.shutdown().shutdown();
+                    println!("{}", report.render());
+                    write_registry(report.registry())?;
+                    report_health(&report.merged_metrics().health)?;
+                } else {
+                    let server = Server::spawn_with_telemetry(qm, draft, serve_cfg, trace.clone());
+                    let http =
+                        qrazor::net::HttpServer::bind(server, net_cfg, &listen, trace.clone())?;
+                    wait_http(http.addr());
+                    match http.shutdown().shutdown_with_metrics() {
+                        Some(m) => {
+                            println!("{}", m.render());
+                            write_registry(m.to_registry(&[("shard", "0")]))?;
+                            report_health(&m.health)?;
+                        }
+                        None => println!("worker panicked"),
+                    }
+                }
+                if let Some(buf) = &trace {
+                    std::fs::write(&trace_path, buf.to_chrome_json().to_string())?;
+                    println!("chrome trace -> {trace_path}");
+                }
+                return Ok(());
+            }
             // Both front-ends implement ServeApi, so the workload
             // driver is shared; only spawn + final report differ.
             if shards > 1 {

@@ -1,0 +1,181 @@
+//! Minimal blocking HTTP/1.1 loopback client — the test/bench
+//! counterpart of [`super::http`]. Speaks exactly the server's
+//! dialect: one request per connection, `Connection: close`, SSE or
+//! JSON-lines streaming bodies delimited by connection close.
+//!
+//! Dropping an [`HttpReply`] mid-stream closes the socket — the
+//! standard way the net tests and the soak bench simulate a client
+//! disconnect (the server answers by cancelling the session).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::util::json::Json;
+
+/// A response with its status/headers parsed and the body left on the
+/// wire for streaming reads.
+pub struct HttpReply {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    reader: BufReader<TcpStream>,
+    sse: bool,
+}
+
+/// Everything a drained streaming session yielded.
+#[derive(Debug, Default)]
+pub struct StreamOutcome {
+    /// A `started` frame arrived.
+    pub started: bool,
+    /// All `chunk` tokens concatenated in arrival order.
+    pub tokens: Vec<u32>,
+    /// The `done` frame's `response` object, when the stream resolved.
+    pub response: Option<Json>,
+    /// Total data frames seen.
+    pub frames: usize,
+}
+
+/// One request; returns once the response head is parsed.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> anyhow::Result<HttpReply> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut w = stream.try_clone()?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n");
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    if let Some(b) = body {
+        w.write_all(b.as_bytes())?;
+    }
+    w.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line: {status_line:?}"))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let sse = headers
+        .get("content-type")
+        .is_some_and(|ct| ct.contains("text/event-stream"));
+    Ok(HttpReply { status, headers, reader, sse })
+}
+
+/// `GET path` and read the whole body.
+pub fn get(addr: SocketAddr, path: &str) -> anyhow::Result<(u16, String)> {
+    let reply = request(addr, "GET", path, &[], None)?;
+    let status = reply.status;
+    Ok((status, reply.read_body()?))
+}
+
+/// `POST /v1/completions` with an optional tenant key.
+pub fn post_completions(
+    addr: SocketAddr,
+    tenant: Option<&str>,
+    body: &str,
+) -> anyhow::Result<HttpReply> {
+    let mut headers: Vec<(&str, &str)> = vec![("Content-Type", "application/json")];
+    if let Some(t) = tenant {
+        headers.push(("X-API-Key", t));
+    }
+    request(addr, "POST", "/v1/completions", &headers, Some(body))
+}
+
+impl HttpReply {
+    pub fn content_type(&self) -> &str {
+        self.headers.get("content-type").map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Read the remaining body to connection close.
+    pub fn read_body(mut self) -> anyhow::Result<String> {
+        let mut out = String::new();
+        self.reader.read_to_string(&mut out)?;
+        Ok(out)
+    }
+
+    /// Next streaming data payload — an SSE `data:` frame or a
+    /// JSON-lines line; `None` at end of stream (`[DONE]` or EOF).
+    pub fn next_data(&mut self) -> anyhow::Result<Option<String>> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Ok(None);
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue; // SSE frame separator
+            }
+            if self.sse {
+                let Some(payload) = line.strip_prefix("data: ") else {
+                    anyhow::bail!("protocol error: non-data SSE line {line:?}");
+                };
+                if payload == "[DONE]" {
+                    return Ok(None);
+                }
+                return Ok(Some(payload.to_string()));
+            }
+            return Ok(Some(line.to_string()));
+        }
+    }
+
+    /// [`next_data`](HttpReply::next_data), parsed.
+    pub fn next_json(&mut self) -> anyhow::Result<Option<Json>> {
+        match self.next_data()? {
+            Some(payload) => Ok(Some(Json::parse(&payload).map_err(anyhow::Error::from)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Drain the stream to its end, checking protocol shape along the
+    /// way (every frame a known object, `done` carrying a response).
+    pub fn drain_stream(&mut self) -> anyhow::Result<StreamOutcome> {
+        let mut out = StreamOutcome::default();
+        while let Some(frame) = self.next_json()? {
+            out.frames += 1;
+            match frame.req("object")?.as_str() {
+                Some("started") => out.started = true,
+                Some("chunk") => {
+                    let arr = frame
+                        .req("tokens")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("chunk without token array"))?;
+                    for t in arr {
+                        out.tokens.push(
+                            t.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric token"))? as u32,
+                        );
+                    }
+                }
+                Some("done") => {
+                    out.response = Some(frame.req("response")?.clone());
+                }
+                other => anyhow::bail!("protocol error: unknown frame object {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,276 @@
+//! HTTP/1.1 wire handling for the network front-end: a minimal
+//! request reader and response writers over any `BufRead`/`Write`
+//! pair — no dependencies, consistent with the repo's vendored/offline
+//! constraint.
+//!
+//! Scope is deliberately narrow: one request per connection
+//! (`Connection: close`), `Content-Length` bodies only (no chunked
+//! requests), and streaming responses delimited by connection close
+//! (SSE and JSON-lines clients treat EOF as end-of-stream, so chunked
+//! transfer coding is unnecessary). Header names are folded to
+//! lowercase at parse time so handlers never worry about case.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+
+use crate::util::json::Json;
+
+/// Cap on the request line + headers, to bound memory before a
+/// request is even parsed.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// A parsed request. `path` excludes the query string (kept verbatim
+/// in `query`); header names are lowercase.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+}
+
+/// A request the server could not accept, with the status line it
+/// should answer before closing the connection.
+#[derive(Debug)]
+pub struct WireError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl WireError {
+    fn new(status: u16, message: impl Into<String>) -> WireError {
+        WireError { status, message: message.into() }
+    }
+}
+
+/// What reading one request from a connection produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(HttpRequest),
+    /// Clean close (or I/O error / read timeout) before a full
+    /// request arrived — nothing to answer.
+    Closed,
+    /// A malformed request the connection should answer with
+    /// [`WireError::status`] and then close.
+    Malformed(WireError),
+}
+
+/// Read one HTTP/1.1 request. `max_body` bounds the declared
+/// `Content-Length` (413 beyond it); the header section is bounded by
+/// [`MAX_HEADER_BYTES`] (431 beyond it).
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> ReadOutcome {
+    let mut header_bytes = 0usize;
+    let request_line = match read_line(r, &mut header_bytes) {
+        Ok(Some(l)) if !l.is_empty() => l,
+        Ok(Some(_)) | Ok(None) => return ReadOutcome::Closed,
+        Err(e) => return ReadOutcome::Malformed(e),
+    };
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if parts.next().is_none() && !m.is_empty() => (m, t, v),
+        _ => return ReadOutcome::Malformed(WireError::new(400, "malformed request line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return ReadOutcome::Malformed(WireError::new(400, "unsupported http version"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = match read_line(r, &mut header_bytes) {
+            Ok(Some(l)) => l,
+            Ok(None) => return ReadOutcome::Closed,
+            Err(e) => return ReadOutcome::Malformed(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return ReadOutcome::Malformed(WireError::new(400, "malformed header line"));
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+
+    let mut body = Vec::new();
+    if let Some(cl) = headers.get("content-length") {
+        let Ok(n) = cl.parse::<usize>() else {
+            return ReadOutcome::Malformed(WireError::new(400, "invalid content-length"));
+        };
+        if n > max_body {
+            return ReadOutcome::Malformed(WireError::new(413, "request body too large"));
+        }
+        body.resize(n, 0);
+        if r.read_exact(&mut body).is_err() {
+            return ReadOutcome::Closed;
+        }
+    }
+    ReadOutcome::Request(HttpRequest { method: method.to_string(), path, query, headers, body })
+}
+
+/// One CRLF-terminated line (CR optional), `Ok(None)` on EOF before
+/// any byte, 431 once the header section exceeds its cap.
+fn read_line<R: BufRead>(r: &mut R, header_bytes: &mut usize) -> Result<Option<String>, WireError> {
+    let mut buf = Vec::new();
+    match r.read_until(b'\n', &mut buf) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(_) => return Ok(None),
+    }
+    *header_bytes += buf.len();
+    if *header_bytes > MAX_HEADER_BYTES {
+        return Err(WireError::new(431, "request headers too large"));
+    }
+    while buf.last() == Some(&b'\n') || buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    Ok(Some(String::from_utf8_lossy(&buf).into_owned()))
+}
+
+/// Canonical reason phrase for the statuses this server answers.
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// A complete (non-streaming) response with `Content-Length`.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// The head of a streaming response: no `Content-Length`, the body is
+/// delimited by connection close.
+pub fn write_stream_head(w: &mut impl Write, content_type: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// A JSON error body: `{"error": {"message": ..., "status": ...}}`.
+pub fn write_json_error(w: &mut impl Write, status: u16, message: &str) -> std::io::Result<()> {
+    let body = Json::from_pairs(vec![(
+        "error",
+        Json::from_pairs(vec![
+            ("message", Json::from(message)),
+            ("status", Json::from(status as usize)),
+        ]),
+    )]);
+    write_response(w, status, "application/json", body.to_string().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> ReadOutcome {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_get_with_query_and_case_folded_headers() {
+        let out = parse("GET /metrics?verbose=1 HTTP/1.1\r\nHost: x\r\nX-API-Key: Alice\r\n\r\n");
+        let ReadOutcome::Request(req) = out else { panic!("expected request, got {out:?}") };
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.query, "verbose=1");
+        assert_eq!(req.header("x-api-key"), Some("Alice"));
+        assert_eq!(req.header("X-Api-Key"), Some("Alice"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let out = parse("POST /v1/completions HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello");
+        let ReadOutcome::Request(req) = out else { panic!("expected request, got {out:?}") };
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn eof_before_request_is_a_clean_close() {
+        assert!(matches!(parse(""), ReadOutcome::Closed));
+        // truncated body: the peer went away mid-request
+        let out = parse("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nhi");
+        assert!(matches!(out, ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn malformed_requests_map_to_4xx() {
+        let ReadOutcome::Malformed(e) = parse("GARBAGE\r\n\r\n") else { panic!("want 400") };
+        assert_eq!(e.status, 400);
+        let ReadOutcome::Malformed(e) = parse("GET / SMTP/3\r\n\r\n") else { panic!("want 400") };
+        assert_eq!(e.status, 400);
+        let ReadOutcome::Malformed(e) = parse("GET / HTTP/1.1\r\nnocolon\r\n\r\n") else {
+            panic!("want 400")
+        };
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_oversized_headers_431() {
+        let out = parse("POST /x HTTP/1.1\r\nContent-Length: 4096\r\n\r\n");
+        let ReadOutcome::Malformed(e) = out else { panic!("want 413") };
+        assert_eq!(e.status, 413);
+
+        let huge = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEADER_BYTES));
+        let ReadOutcome::Malformed(e) = parse(&huge) else { panic!("want 431") };
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn response_writers_emit_parseable_http() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "application/json", b"{}").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+
+        let mut buf = Vec::new();
+        write_json_error(&mut buf, 429, "slow down").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains(r#""message": "slow down""#));
+
+        let mut buf = Vec::new();
+        write_stream_head(&mut buf, "text/event-stream").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(!text.contains("Content-Length"), "streams are close-delimited");
+    }
+}

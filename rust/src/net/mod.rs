@@ -1,0 +1,78 @@
+//! Network front-end: a dependency-free HTTP/1.1 streaming server
+//! over `std::net::TcpListener`, generic over
+//! [`crate::coordinator::ServeApi`] — the single-engine
+//! [`crate::coordinator::Server`] and the sharded
+//! [`crate::cluster::ClusterServer`] both serve it unchanged.
+//!
+//! ## Endpoints
+//!
+//! | Endpoint | What it serves |
+//! |---|---|
+//! | `POST /v1/completions` | OpenAI-style completions; request JSON maps onto [`crate::coordinator::SubmitOptions`] (sampling, stop token, priority class, admission deadline) and the response streams [`crate::coordinator::TokenEvent`]s as SSE (`stream: "sse"`, the default), JSON-lines (`"jsonl"`), or one buffered JSON object (`"json"`) |
+//! | `GET /metrics` | Prometheus text: live `ServeStats` plus per-tenant net counters (`Registry::render_prometheus`) |
+//! | `GET /health` | The `qrazor.health.v1` numeric-health snapshot |
+//! | `GET /trace` | Chrome-trace JSON from the installed `TraceBuffer` |
+//!
+//! Requests carry their tenant in the `X-API-Key` (or `X-Tenant`)
+//! header; no header means the anonymous tenant. Admission is gated
+//! per tenant by a token-bucket rate limit and an inflight quota
+//! ([`TenantSpec`], `429` when exceeded), and admitted requests carry
+//! the tenant's stable index into the batcher, whose round-robin
+//! tenant interleave keeps one tenant's burst from monopolizing an
+//! admission pass. Malformed requests map to `4xx` (`400` bad
+//! JSON/fields, `404`/`405` unknown routes, `413` oversized body,
+//! `431` oversized headers); a client disconnect mid-stream cancels
+//! the session so its packed KV pages are released byte-exactly.
+//!
+//! ## Threading model
+//!
+//! `ServeApi` implementations hold `mpsc::Receiver`s (not `Sync`), so
+//! one *pump* thread owns the backend exclusively; connection threads
+//! talk to it over a command channel and block on per-session
+//! byte-capped queues (see [`server`]). The accept loop is
+//! thread-per-connection — loopback soak testing sustains thousands
+//! of concurrent streams (`benches/soak_serve.rs`).
+
+pub mod client;
+pub mod http;
+pub mod server;
+pub mod tenant;
+
+pub use server::HttpServer;
+pub use tenant::{parse_tenants, Admission, TenantCounters, TenantGovernor, TenantSpec};
+
+/// Front-end tuning. `Default` is production-shaped; tests shrink the
+/// buffers to force edge behavior.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Max `Content-Length` accepted on a request (413 beyond).
+    pub max_body_bytes: usize,
+    /// Per-session cap on undelivered event bytes between the pump
+    /// and a connection — the net-layer guard for `event_ring = 0`
+    /// backends; oldest `Token` events drop first (counted in
+    /// `ServeStats::events_dropped` and per tenant).
+    pub session_buffer_bytes: usize,
+    /// Generation budget when a request omits `max_tokens`.
+    pub default_max_new: usize,
+    /// Fault injection: delay before a connection starts draining its
+    /// session queue (0 = off), so events pile up against the byte
+    /// cap. Only the slow-reader regression test sets this.
+    pub drain_delay_ms: u64,
+    /// Budget for tenants not named in [`NetConfig::tenants`].
+    pub default_tenant: TenantSpec,
+    /// Named tenant budgets, in stable-index order.
+    pub tenants: Vec<(String, TenantSpec)>,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            max_body_bytes: 1 << 20,
+            session_buffer_bytes: 64 << 10,
+            default_max_new: 64,
+            drain_delay_ms: 0,
+            default_tenant: TenantSpec::default(),
+            tenants: Vec::new(),
+        }
+    }
+}

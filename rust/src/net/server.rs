@@ -1,0 +1,888 @@
+//! The HTTP front-end proper: accept loop, per-connection handlers,
+//! and the single pump thread that owns the [`ServeApi`] backend.
+//!
+//! `Server` and `ClusterServer` hold `mpsc::Receiver`s and are not
+//! `Sync`, so connection threads never touch the api directly.
+//! Instead one *pump* thread owns it outright: connections send it
+//! commands (submit / cancel / stats) over a channel, and the pump
+//! drains [`TokenEvent`]s via `poll_event`, routing each to its
+//! session's [`SessionQueue`] — a byte-capped handoff buffer the
+//! connection thread blocks on. The cap (see
+//! [`super::NetConfig::session_buffer_bytes`]) is the net-layer guard
+//! the engine's `event_ring = 0` (unbounded) mode needs: a stalled
+//! consumer drops its **oldest** queued `Token` events (never
+//! `Started`/`Finished`, and never the freshest tail), with drops
+//! counted per tenant and folded into `ServeStats::events_dropped`.
+//!
+//! A client disconnect (any write failure) cancels its session
+//! through [`ServeApi::cancel`], so a dropped socket releases packed
+//! KV pages byte-exactly mid-flight — the net_api suite pins pool
+//! occupancy draining to zero bytes after mid-stream disconnects.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::api::{ServeApi, ServeStats};
+use crate::coordinator::request::{
+    FinishReason, Priority, RequestId, Response, Sampling, SubmitOptions, TokenEvent,
+};
+use crate::obs::{health_json, Registry, TraceBuffer};
+use crate::util::json::Json;
+
+use super::http::{self, HttpRequest, ReadOutcome};
+use super::tenant::{Admission, TenantGovernor, ANONYMOUS};
+use super::NetConfig;
+
+// ---------------------------------------------------------------------------
+// Session handoff queue (pump thread -> connection thread)
+// ---------------------------------------------------------------------------
+
+/// Rough wire cost of a queued event: only `Token` events count
+/// toward the session byte cap (`Started`/`Finished` are at most one
+/// each and must survive).
+fn token_cost(ev: &TokenEvent) -> usize {
+    match ev {
+        TokenEvent::Token { tokens, .. } => 24 + 4 * tokens.len(),
+        _ => 0,
+    }
+}
+
+#[derive(Default)]
+struct QueueInner {
+    events: VecDeque<TokenEvent>,
+    pending_bytes: usize,
+    /// Producer side done: `Finished` routed (or the backend died).
+    closed: bool,
+    /// Consumer side gone (disconnect): drop everything silently.
+    abandoned: bool,
+}
+
+/// The bounded per-session buffer between the pump and one streaming
+/// connection. See the module doc for the drop policy.
+pub(crate) struct SessionQueue {
+    cap_bytes: usize,
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+impl SessionQueue {
+    pub(crate) fn new(cap_bytes: usize) -> Arc<SessionQueue> {
+        Arc::new(SessionQueue {
+            cap_bytes,
+            inner: Mutex::new(QueueInner::default()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Enqueue one event; returns how many older `Token` events the
+    /// byte cap evicted. The newest event is never evicted, so a
+    /// single oversized batch overshoots the cap by at most itself.
+    pub(crate) fn push(&self, ev: TokenEvent) -> u64 {
+        let mut q = self.inner.lock().unwrap();
+        if q.abandoned {
+            return 0;
+        }
+        if matches!(ev, TokenEvent::Finished { .. }) {
+            q.closed = true;
+        }
+        q.pending_bytes += token_cost(&ev);
+        q.events.push_back(ev);
+        let mut dropped = 0u64;
+        while self.cap_bytes > 0 && q.pending_bytes > self.cap_bytes {
+            let last = q.events.len() - 1;
+            let Some(pos) =
+                q.events.iter().take(last).position(|e| matches!(e, TokenEvent::Token { .. }))
+            else {
+                break;
+            };
+            let victim = q.events.remove(pos).expect("position in range");
+            q.pending_bytes -= token_cost(&victim);
+            dropped += 1;
+        }
+        self.cv.notify_all();
+        dropped
+    }
+
+    /// Block for the next event; `None` once the session is closed
+    /// and drained.
+    pub(crate) fn pop(&self) -> Option<TokenEvent> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(ev) = q.events.pop_front() {
+                q.pending_bytes -= token_cost(&ev);
+                return Some(ev);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Consumer disconnected: stop buffering on its behalf.
+    pub(crate) fn abandon(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.abandoned = true;
+        q.events.clear();
+        q.pending_bytes = 0;
+        self.cv.notify_all();
+    }
+
+    /// Producer died without a `Finished`: wake the consumer with EOF.
+    fn close(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pump thread
+// ---------------------------------------------------------------------------
+
+enum Cmd {
+    Submit {
+        prompt: Vec<u32>,
+        max_new: usize,
+        opts: SubmitOptions,
+        tenant: String,
+        queue: Arc<SessionQueue>,
+        reply: mpsc::Sender<Result<RequestId, String>>,
+    },
+    Cancel(RequestId),
+    Stats(mpsc::Sender<ServeStats>),
+}
+
+#[derive(Default)]
+struct NetCounters {
+    http_requests: AtomicU64,
+    completions: AtomicU64,
+    bad_requests: AtomicU64,
+    throttled: AtomicU64,
+    disconnect_cancels: AtomicU64,
+    events_dropped: AtomicU64,
+}
+
+struct Shared {
+    cfg: NetConfig,
+    governor: TenantGovernor,
+    cmd_tx: mpsc::Sender<Cmd>,
+    net: NetCounters,
+    trace: Option<Arc<TraceBuffer>>,
+    /// Accept loop stops; running connections finish.
+    stop: AtomicBool,
+    /// Pump exits once its sessions drain (set after connections join).
+    pump_stop: AtomicBool,
+}
+
+fn pump_loop<A: ServeApi>(api: A, cmd_rx: mpsc::Receiver<Cmd>, shared: Arc<Shared>) -> A {
+    let mut sessions: BTreeMap<RequestId, (Arc<SessionQueue>, String)> = BTreeMap::new();
+    let mut gone = false;
+    loop {
+        let mut busy = false;
+        while let Ok(cmd) = cmd_rx.try_recv() {
+            busy = true;
+            match cmd {
+                Cmd::Submit { prompt, max_new, opts, tenant, queue, reply } => {
+                    match api.submit_with(prompt, max_new, opts) {
+                        Ok(id) => {
+                            sessions.insert(id, (queue, tenant));
+                            let _ = reply.send(Ok(id));
+                        }
+                        Err(e) => {
+                            let _ = reply.send(Err(e.to_string()));
+                        }
+                    }
+                }
+                Cmd::Cancel(id) => {
+                    let _ = api.cancel(id);
+                }
+                Cmd::Stats(reply) => {
+                    let _ = reply.send(api.stats());
+                }
+            }
+        }
+        while !gone {
+            match api.poll_event() {
+                Ok(Some(ev)) => {
+                    busy = true;
+                    let id = ev.id();
+                    let finished = matches!(ev, TokenEvent::Finished { .. });
+                    // events for ids submitted outside this front-end
+                    // (none today) would simply have no session here
+                    if let Some((queue, tenant)) = sessions.get(&id) {
+                        let dropped = queue.push(ev);
+                        if dropped > 0 {
+                            shared.net.events_dropped.fetch_add(dropped, Ordering::Relaxed);
+                            shared.governor.note_dropped(tenant, dropped);
+                        }
+                        if finished {
+                            shared.governor.release(tenant);
+                            sessions.remove(&id);
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    gone = true;
+                }
+            }
+        }
+        if gone {
+            // backend died: resolve every waiting consumer with EOF
+            for (queue, tenant) in sessions.values() {
+                queue.close();
+                shared.governor.release(tenant);
+            }
+            sessions.clear();
+        }
+        if (gone || shared.pump_stop.load(Ordering::Relaxed)) && sessions.is_empty() {
+            // late commands get a shutting-down answer instead of hanging
+            while let Ok(cmd) = cmd_rx.try_recv() {
+                match cmd {
+                    Cmd::Submit { reply, .. } => {
+                        let _ = reply.send(Err("server is shutting down".to_string()));
+                    }
+                    Cmd::Stats(reply) => {
+                        let _ = reply.send(api.stats());
+                    }
+                    Cmd::Cancel(_) => {}
+                }
+            }
+            return api;
+        }
+        if !busy {
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request parsing / wire format
+// ---------------------------------------------------------------------------
+
+/// How `/v1/completions` streams its events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StreamMode {
+    /// `text/event-stream`: `data: {...}` frames, `data: [DONE]` last.
+    Sse,
+    /// `application/x-ndjson`: one JSON object per line.
+    Jsonl,
+    /// Buffer everything, answer one JSON response object.
+    Json,
+}
+
+struct CompletionReq {
+    prompt: Vec<u32>,
+    max_new: usize,
+    sampling: Sampling,
+    stop: Option<u32>,
+    priority: Option<Priority>,
+    deadline: Option<Duration>,
+    mode: StreamMode,
+}
+
+const ALLOWED_FIELDS: &[&str] =
+    &["prompt", "max_tokens", "temperature", "seed", "stop", "priority", "deadline_ms", "stream"];
+
+fn parse_completions(
+    body: &[u8],
+    accept: Option<&str>,
+    default_max_new: usize,
+) -> Result<CompletionReq, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    let Json::Obj(map) = &j else { return Err("body must be a json object".to_string()) };
+    for key in map.keys() {
+        if !ALLOWED_FIELDS.contains(&key.as_str()) {
+            return Err(format!("unknown field '{key}'"));
+        }
+    }
+
+    let prompt_j = j.req("prompt").map_err(|e| e.to_string())?;
+    let arr = prompt_j.as_arr().ok_or("prompt must be an array of token ids")?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v.as_f64().ok_or("prompt must be an array of token ids")?;
+        if n < 0.0 || n > u32::MAX as f64 || n.fract() != 0.0 {
+            return Err("prompt token ids must be integers in u32 range".to_string());
+        }
+        prompt.push(n as u32);
+    }
+    if prompt.is_empty() {
+        return Err("prompt must be a non-empty array of token ids".to_string());
+    }
+
+    let max_new = match j.get("max_tokens") {
+        Some(v) => v.as_usize().filter(|n| *n >= 1).ok_or("max_tokens must be an integer >= 1")?,
+        None => default_max_new,
+    };
+
+    let temp = match j.get("temperature") {
+        Some(v) => v.as_f64().filter(|t| *t >= 0.0).ok_or("temperature must be a number >= 0")?,
+        None => 0.0,
+    };
+    let seed = match j.get("seed") {
+        Some(v) => v.as_f64().filter(|s| *s >= 0.0).ok_or("seed must be a non-negative integer")?
+            as u64,
+        None => 0,
+    };
+    let sampling = if temp > 0.0 {
+        Sampling::Temperature { temp: temp as f32, seed }
+    } else {
+        Sampling::Greedy
+    };
+
+    let stop = match j.get("stop") {
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|s| *s >= 0.0 && *s <= u32::MAX as f64 && s.fract() == 0.0)
+                .ok_or("stop must be a token id")? as u32,
+        ),
+        None => None,
+    };
+
+    let priority = match j.get("priority") {
+        Some(v) => {
+            let s = v.as_str().ok_or("priority must be a string")?;
+            Some(Priority::parse(s).ok_or("priority must be interactive|standard|batch")?)
+        }
+        None => None,
+    };
+
+    let deadline = match j.get("deadline_ms") {
+        Some(v) => Some(Duration::from_millis(
+            v.as_f64().filter(|d| *d >= 0.0).ok_or("deadline_ms must be a non-negative integer")?
+                as u64,
+        )),
+        None => None,
+    };
+
+    let mode = match j.get("stream").map(|v| v.as_str()) {
+        Some(Some("sse")) => StreamMode::Sse,
+        Some(Some("jsonl")) => StreamMode::Jsonl,
+        Some(Some("json")) => StreamMode::Json,
+        Some(_) => return Err("stream must be sse|jsonl|json".to_string()),
+        None => match accept {
+            Some(a) if a.contains("application/x-ndjson") => StreamMode::Jsonl,
+            Some(a) if a.contains("application/json") => StreamMode::Json,
+            _ => StreamMode::Sse,
+        },
+    };
+
+    Ok(CompletionReq { prompt, max_new, sampling, stop, priority, deadline, mode })
+}
+
+fn finish_name(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::StopToken => "stop_token",
+        FinishReason::Error => "error",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Expired => "expired",
+    }
+}
+
+fn response_json(r: &Response) -> Json {
+    Json::from_pairs(vec![
+        ("id", Json::from(r.id.0 as f64)),
+        ("prompt_len", Json::from(r.prompt_len)),
+        ("tokens", Json::Arr(r.tokens.iter().map(|&t| Json::from(t)).collect())),
+        ("finish_reason", Json::from(finish_name(r.finish))),
+        ("ttft_s", Json::from(r.ttft_s)),
+        ("total_s", Json::from(r.total_s)),
+    ])
+}
+
+fn event_json(ev: &TokenEvent) -> Json {
+    match ev {
+        TokenEvent::Started { id, .. } => Json::from_pairs(vec![
+            ("object", Json::from("started")),
+            ("id", Json::from(id.0 as f64)),
+        ]),
+        TokenEvent::Token { id, tokens, .. } => Json::from_pairs(vec![
+            ("object", Json::from("chunk")),
+            ("id", Json::from(id.0 as f64)),
+            ("tokens", Json::Arr(tokens.iter().map(|&t| Json::from(t)).collect())),
+        ]),
+        TokenEvent::Finished { id, response } => Json::from_pairs(vec![
+            ("object", Json::from("done")),
+            ("id", Json::from(id.0 as f64)),
+            ("response", response_json(response)),
+        ]),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut w = stream;
+    let req = match http::read_request(&mut reader, shared.cfg.max_body_bytes) {
+        ReadOutcome::Request(r) => r,
+        ReadOutcome::Closed => return,
+        ReadOutcome::Malformed(e) => {
+            shared.net.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_error(&mut w, e.status, &e.message);
+            return;
+        }
+    };
+    shared.net.http_requests.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions") => handle_completions(shared, &req, &mut w),
+        ("GET", "/metrics") => {
+            let body = metrics_text(shared);
+            let _ = http::write_response(&mut w, 200, "text/plain; version=0.0.4", body.as_bytes());
+        }
+        ("GET", "/health") => {
+            let body = health_json(None).to_string();
+            let _ = http::write_response(&mut w, 200, "application/json", body.as_bytes());
+        }
+        ("GET", "/trace") => {
+            let body = match &shared.trace {
+                Some(t) => t.to_chrome_json().to_string(),
+                None => Json::from_pairs(vec![("traceEvents", Json::Arr(Vec::new()))]).to_string(),
+            };
+            let _ = http::write_response(&mut w, 200, "application/json", body.as_bytes());
+        }
+        (_, "/v1/completions") | (_, "/metrics") | (_, "/health") | (_, "/trace") => {
+            shared.net.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_error(&mut w, 405, "method not allowed");
+        }
+        _ => {
+            shared.net.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_error(&mut w, 404, "no such endpoint");
+        }
+    }
+}
+
+fn handle_completions(shared: &Arc<Shared>, req: &HttpRequest, w: &mut TcpStream) {
+    let tenant =
+        req.header("x-api-key").or_else(|| req.header("x-tenant")).unwrap_or(ANONYMOUS).to_string();
+    let parsed =
+        match parse_completions(&req.body, req.header("accept"), shared.cfg.default_max_new) {
+            Ok(p) => p,
+            Err(msg) => {
+                shared.net.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_json_error(w, 400, &msg);
+                return;
+            }
+        };
+    let tenant_default = match shared.governor.admit(&tenant, Instant::now()) {
+        Admission::Granted { tenant: index, priority } => {
+            let mut opts = SubmitOptions::new().sampling(parsed.sampling).tenant(index);
+            if let Some(st) = parsed.stop {
+                opts = opts.stop_token(st);
+            }
+            opts = opts.priority(parsed.priority.or(priority).unwrap_or(Priority::Standard));
+            if let Some(d) = parsed.deadline {
+                opts = opts.deadline(d);
+            }
+            opts
+        }
+        Admission::ThrottledRate => {
+            shared.net.throttled.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_error(w, 429, "tenant request rate exceeded");
+            return;
+        }
+        Admission::ThrottledQuota => {
+            shared.net.throttled.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_error(w, 429, "tenant inflight quota exceeded");
+            return;
+        }
+    };
+    shared.net.completions.fetch_add(1, Ordering::Relaxed);
+
+    let queue = SessionQueue::new(shared.cfg.session_buffer_bytes);
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let sent = shared.cmd_tx.send(Cmd::Submit {
+        prompt: parsed.prompt,
+        max_new: parsed.max_new,
+        opts: tenant_default,
+        tenant: tenant.clone(),
+        queue: Arc::clone(&queue),
+        reply: reply_tx,
+    });
+    if sent.is_err() {
+        shared.governor.release(&tenant);
+        let _ = http::write_json_error(w, 503, "server is shutting down");
+        return;
+    }
+    let id = match reply_rx.recv() {
+        Ok(Ok(id)) => id,
+        Ok(Err(msg)) => {
+            // backend-side validation (oversized prompt, pool overflow)
+            shared.governor.release(&tenant);
+            shared.net.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json_error(w, 400, &msg);
+            return;
+        }
+        Err(_) => {
+            shared.governor.release(&tenant);
+            let _ = http::write_json_error(w, 503, "server is shutting down");
+            return;
+        }
+    };
+    stream_session(shared, w, &queue, id, parsed.mode);
+}
+
+fn stream_session(
+    shared: &Arc<Shared>,
+    w: &mut TcpStream,
+    queue: &Arc<SessionQueue>,
+    id: RequestId,
+    mode: StreamMode,
+) {
+    if mode == StreamMode::Json {
+        // buffered: the response alone is the body
+        let mut response = None;
+        while let Some(ev) = queue.pop() {
+            if let TokenEvent::Finished { response: r, .. } = ev {
+                response = Some(r);
+            }
+        }
+        match response {
+            Some(r) => {
+                let body = response_json(&r).to_string();
+                let _ = http::write_response(w, 200, "application/json", body.as_bytes());
+            }
+            None => {
+                let _ = http::write_json_error(w, 503, "stream aborted");
+            }
+        }
+        return;
+    }
+
+    let content_type = match mode {
+        StreamMode::Sse => "text/event-stream",
+        _ => "application/x-ndjson",
+    };
+    if http::write_stream_head(w, content_type).is_err() {
+        disconnect(shared, queue, id);
+        return;
+    }
+    if shared.cfg.drain_delay_ms > 0 {
+        // fault injection: stall the drain so events pile into the
+        // session queue (the slow-reader regression test)
+        thread::sleep(Duration::from_millis(shared.cfg.drain_delay_ms));
+    }
+    while let Some(ev) = queue.pop() {
+        let done = matches!(ev, TokenEvent::Finished { .. });
+        let payload = event_json(&ev).to_string();
+        let frame = match mode {
+            StreamMode::Sse => format!("data: {payload}\n\n"),
+            _ => format!("{payload}\n"),
+        };
+        if w.write_all(frame.as_bytes()).and_then(|_| w.flush()).is_err() {
+            disconnect(shared, queue, id);
+            return;
+        }
+        if done && mode == StreamMode::Sse {
+            let _ = w.write_all(b"data: [DONE]\n\n").and_then(|_| w.flush());
+        }
+    }
+}
+
+/// The client went away mid-stream: cancel the session so its KV
+/// reservation is released byte-exactly, and stop buffering for it.
+fn disconnect(shared: &Arc<Shared>, queue: &Arc<SessionQueue>, id: RequestId) {
+    shared.net.disconnect_cancels.fetch_add(1, Ordering::Relaxed);
+    queue.abandon();
+    let _ = shared.cmd_tx.send(Cmd::Cancel(id));
+}
+
+fn serve_stats(shared: &Arc<Shared>) -> Option<ServeStats> {
+    let (tx, rx) = mpsc::channel();
+    shared.cmd_tx.send(Cmd::Stats(tx)).ok()?;
+    rx.recv().ok()
+}
+
+fn metrics_text(shared: &Arc<Shared>) -> String {
+    let mut reg = Registry::new();
+    if let Some(mut st) = serve_stats(shared) {
+        st.events_dropped += shared.net.events_dropped.load(Ordering::Relaxed);
+        st.export(&mut reg, &[]);
+    }
+    shared.governor.export(&mut reg);
+    let n = &shared.net;
+    reg.counter("qrazor_net_http_requests", &[], n.http_requests.load(Ordering::Relaxed));
+    reg.counter("qrazor_net_completions", &[], n.completions.load(Ordering::Relaxed));
+    reg.counter("qrazor_net_bad_requests", &[], n.bad_requests.load(Ordering::Relaxed));
+    reg.counter("qrazor_net_throttled_total", &[], n.throttled.load(Ordering::Relaxed));
+    reg.counter("qrazor_net_disconnect_cancels", &[], n.disconnect_cancels.load(Ordering::Relaxed));
+    reg.counter("qrazor_net_events_dropped", &[], n.events_dropped.load(Ordering::Relaxed));
+    reg.render_prometheus()
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+/// The HTTP/1.1 streaming front-end over any [`ServeApi`]. See the
+/// crate-level docs ([`super`]) for the endpoint reference.
+pub struct HttpServer<A: ServeApi + Send + 'static> {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    pump: Option<JoinHandle<A>>,
+}
+
+impl<A: ServeApi + Send + 'static> HttpServer<A> {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral test port)
+    /// and start serving `api`. `trace` backs `GET /trace`.
+    pub fn bind(
+        api: A,
+        cfg: NetConfig,
+        listen: &str,
+        trace: Option<Arc<TraceBuffer>>,
+    ) -> anyhow::Result<HttpServer<A>> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let governor = TenantGovernor::new(cfg.default_tenant, &cfg.tenants, Instant::now());
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let shared = Arc::new(Shared {
+            cfg,
+            governor,
+            cmd_tx,
+            net: NetCounters::default(),
+            trace,
+            stop: AtomicBool::new(false),
+            pump_stop: AtomicBool::new(false),
+        });
+        let pump = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || pump_loop(api, cmd_rx, shared))
+        };
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            thread::spawn(move || accept_loop(listener, shared, conns))
+        };
+        Ok(HttpServer { addr, shared, accept: Some(accept), conns, pump: Some(pump) })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live backend snapshot with the net layer's own session-buffer
+    /// drops folded into `events_dropped`.
+    pub fn stats(&self) -> ServeStats {
+        let mut st = serve_stats(&self.shared).unwrap_or_default();
+        st.events_dropped += self.shared.net.events_dropped.load(Ordering::Relaxed);
+        st
+    }
+
+    /// `Token` events the net layer dropped under session byte caps.
+    pub fn net_events_dropped(&self) -> u64 {
+        self.shared.net.events_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Mid-stream disconnects that triggered a cancel.
+    pub fn disconnect_cancels(&self) -> u64 {
+        self.shared.net.disconnect_cancels.load(Ordering::Relaxed)
+    }
+
+    /// Per-tenant admission counters (see [`TenantGovernor::snapshot`]).
+    pub fn tenant_counters(&self) -> Vec<super::tenant::TenantCounters> {
+        self.shared.governor.snapshot()
+    }
+
+    /// Graceful stop: no new connections, existing streams run to
+    /// completion, then the backend is handed back so the caller can
+    /// shut it down for its final report.
+    pub fn shutdown(mut self) -> A {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr); // wake the accept loop
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        loop {
+            let next = self.conns.lock().unwrap().pop();
+            match next {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+        self.shared.pump_stop.store(true, Ordering::Relaxed);
+        self.pump.take().expect("pump thread").join().expect("pump thread panicked")
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let handle = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || handle_conn(&shared, stream))
+        };
+        let mut v = conns.lock().unwrap();
+        // sweep finished handlers so the vec stays bounded by the
+        // number of *live* connections (soak runs thousands total)
+        v.retain(|h| !h.is_finished());
+        v.push(handle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(id: u64, tokens: Vec<u32>) -> TokenEvent {
+        TokenEvent::Token { id: RequestId(id), tokens, at: Instant::now() }
+    }
+
+    fn fin(id: u64) -> TokenEvent {
+        TokenEvent::Finished {
+            id: RequestId(id),
+            response: Response {
+                id: RequestId(id),
+                prompt_len: 1,
+                tokens: vec![7],
+                finish: FinishReason::Length,
+                ttft_s: 0.0,
+                total_s: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn session_queue_delivers_in_order_and_closes_on_finished() {
+        let q = SessionQueue::new(1 << 20);
+        assert_eq!(q.push(TokenEvent::Started { id: RequestId(1), at: Instant::now() }), 0);
+        assert_eq!(q.push(tok(1, vec![1])), 0);
+        assert_eq!(q.push(fin(1)), 0);
+        assert!(matches!(q.pop(), Some(TokenEvent::Started { .. })));
+        assert!(matches!(q.pop(), Some(TokenEvent::Token { .. })));
+        assert!(matches!(q.pop(), Some(TokenEvent::Finished { .. })));
+        assert!(q.pop().is_none(), "closed after Finished drains");
+    }
+
+    #[test]
+    fn session_queue_byte_cap_drops_oldest_token_only() {
+        // each 1-token event costs 28 bytes; cap of 60 holds two
+        let q = SessionQueue::new(60);
+        assert_eq!(q.push(TokenEvent::Started { id: RequestId(1), at: Instant::now() }), 0);
+        assert_eq!(q.push(tok(1, vec![10])), 0);
+        assert_eq!(q.push(tok(1, vec![11])), 0);
+        assert_eq!(q.push(tok(1, vec![12])), 1, "third token evicts the oldest");
+        assert_eq!(q.push(fin(1)), 0, "markers never count against the cap");
+        assert!(matches!(q.pop(), Some(TokenEvent::Started { .. })));
+        let TokenEvent::Token { tokens, .. } = q.pop().unwrap() else { panic!("want token") };
+        assert_eq!(tokens, vec![11], "freshest tail survives");
+        let TokenEvent::Token { tokens, .. } = q.pop().unwrap() else { panic!("want token") };
+        assert_eq!(tokens, vec![12]);
+        assert!(matches!(q.pop(), Some(TokenEvent::Finished { .. })));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn session_queue_never_evicts_the_newest_event() {
+        // one oversized batch blows the cap but must still deliver
+        let q = SessionQueue::new(16);
+        assert_eq!(q.push(tok(1, vec![1; 100])), 0);
+        assert!(matches!(q.pop(), Some(TokenEvent::Token { .. })));
+    }
+
+    #[test]
+    fn abandoned_queue_discards_everything() {
+        let q = SessionQueue::new(1 << 20);
+        q.push(tok(1, vec![1]));
+        q.abandon();
+        q.push(tok(1, vec![2]));
+        assert_eq!(q.push(fin(1)), 0);
+        let inner = q.inner.lock().unwrap();
+        assert!(inner.events.is_empty());
+        assert_eq!(inner.pending_bytes, 0);
+    }
+
+    #[test]
+    fn close_wakes_a_drained_consumer_with_eof() {
+        let q = SessionQueue::new(1 << 20);
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn completion_request_parsing_and_4xx_reasons() {
+        let ok = parse_completions(br#"{"prompt":[1,2,3],"max_tokens":8}"#, None, 64).unwrap();
+        assert_eq!(ok.prompt, vec![1, 2, 3]);
+        assert_eq!(ok.max_new, 8);
+        assert_eq!(ok.mode, StreamMode::Sse, "sse is the default framing");
+        assert!(matches!(ok.sampling, Sampling::Greedy));
+
+        let ok = parse_completions(
+            br#"{"prompt":[5],"temperature":0.8,"seed":9,"stop":2,"priority":"batch","deadline_ms":250,"stream":"jsonl"}"#,
+            None,
+            64,
+        )
+        .unwrap();
+        assert!(matches!(ok.sampling, Sampling::Temperature { seed: 9, .. }));
+        assert_eq!(ok.stop, Some(2));
+        assert_eq!(ok.priority, Some(Priority::Batch));
+        assert_eq!(ok.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(ok.mode, StreamMode::Jsonl);
+
+        // Accept negotiation when "stream" is omitted
+        let j = parse_completions(br#"{"prompt":[1]}"#, Some("application/x-ndjson"), 4).unwrap();
+        assert_eq!(j.mode, StreamMode::Jsonl);
+        assert_eq!(j.max_new, 4, "default generation budget");
+
+        for bad in [
+            &b"not json"[..],
+            br#"[1,2]"#,
+            br#"{"max_tokens":4}"#,
+            br#"{"prompt":[]}"#,
+            br#"{"prompt":["a"]}"#,
+            br#"{"prompt":[1.5]}"#,
+            br#"{"prompt":[-1]}"#,
+            br#"{"prompt":[1],"max_tokens":0}"#,
+            br#"{"prompt":[1],"temperature":-0.5}"#,
+            br#"{"prompt":[1],"priority":"vip"}"#,
+            br#"{"prompt":[1],"stream":"xml"}"#,
+            br#"{"prompt":[1],"bogus":1}"#,
+        ] {
+            assert!(
+                parse_completions(bad, None, 64).is_err(),
+                "should reject {}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+    }
+
+    #[test]
+    fn wire_json_shapes() {
+        let ev = tok(3, vec![7, 8]);
+        let j = event_json(&ev).to_string();
+        assert_eq!(j, r#"{"id": 3,"object": "chunk","tokens": [7,8]}"#);
+        let done = event_json(&fin(3)).to_string();
+        assert!(done.contains(r#""object": "done""#));
+        assert!(done.contains(r#""finish_reason": "length""#));
+    }
+}

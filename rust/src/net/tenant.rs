@@ -1,0 +1,419 @@
+//! Multi-tenant admission: per-tenant token-bucket rate limits and
+//! inflight (queue) quotas, resolved from the request's API-key /
+//! tenant header before anything reaches the batcher.
+//!
+//! Two fairness layers compose here. The governor is the *edge*
+//! layer: a tenant over its configured request rate or inflight quota
+//! is answered `429` without consuming engine resources. The *batcher*
+//! layer is the tenant interleave inside
+//! [`crate::coordinator::Batcher`]: admitted requests carry the
+//! governor's stable tenant index in
+//! [`crate::coordinator::SubmitOptions::tenant`], and same-priority
+//! runs are dealt round-robin across tenants so one tenant's burst
+//! cannot monopolize an admission pass.
+//!
+//! The bucket is the classic refill-on-access form: `tokens =
+//! min(burst, tokens + dt * rps)`, one token per admitted request, so
+//! over a window `T` a saturating tenant is admitted at most
+//! `rps * T + burst` requests — the bound the soak bench pins to ±10%.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::request::Priority;
+use crate::obs::Registry;
+
+/// Per-tenant admission budget. The default is fully open (no rate
+/// limit, no quota, no priority override).
+#[derive(Clone, Copy, Debug)]
+pub struct TenantSpec {
+    /// Sustained admitted requests per second (`f64::INFINITY` = unlimited).
+    pub rps: f64,
+    /// Bucket capacity: how large a burst is admitted at once.
+    pub burst: f64,
+    /// Max submitted-but-unfinished requests (queue quota).
+    pub max_inflight: usize,
+    /// Default priority class for this tenant's requests; an explicit
+    /// per-request priority still wins.
+    pub priority: Option<Priority>,
+}
+
+impl Default for TenantSpec {
+    fn default() -> TenantSpec {
+        TenantSpec {
+            rps: f64::INFINITY,
+            burst: f64::INFINITY,
+            max_inflight: usize::MAX,
+            priority: None,
+        }
+    }
+}
+
+/// Parse a CLI tenant table:
+/// `name[:k=v[,k=v...]][;name2:...]` with keys `rps` (f64 > 0),
+/// `burst` (f64 >= 1), `inflight` (usize >= 1), `priority`
+/// (`interactive|standard|batch`). Example:
+/// `free:rps=5,burst=10,inflight=4;pro:priority=interactive`.
+/// Order is preserved — it fixes each tenant's stable index.
+pub fn parse_tenants(s: &str) -> anyhow::Result<Vec<(String, TenantSpec)>> {
+    let mut out: Vec<(String, TenantSpec)> = Vec::new();
+    for entry in s.split(';').filter(|e| !e.trim().is_empty()) {
+        let (name, fields) = match entry.split_once(':') {
+            Some((n, f)) => (n.trim(), f),
+            None => (entry.trim(), ""),
+        };
+        if name.is_empty() {
+            anyhow::bail!("tenant entry '{entry}' has an empty name");
+        }
+        if out.iter().any(|(n, _)| n == name) {
+            anyhow::bail!("tenant '{name}' specified twice");
+        }
+        let mut spec = TenantSpec::default();
+        for field in fields.split(',').filter(|f| !f.trim().is_empty()) {
+            let Some((k, v)) = field.split_once('=') else {
+                anyhow::bail!("tenant '{name}': field '{field}' is not k=v");
+            };
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "rps" => {
+                    spec.rps = v.parse::<f64>().ok().filter(|r| *r > 0.0).ok_or_else(|| {
+                        anyhow::anyhow!("tenant '{name}': rps must be a positive number")
+                    })?;
+                    if !spec.burst.is_finite() {
+                        spec.burst = 1.0; // rate-limited tenants default to no extra burst
+                    }
+                }
+                "burst" => {
+                    spec.burst = v.parse::<f64>().ok().filter(|b| *b >= 1.0).ok_or_else(|| {
+                        anyhow::anyhow!("tenant '{name}': burst must be >= 1")
+                    })?;
+                }
+                "inflight" => {
+                    spec.max_inflight =
+                        v.parse::<usize>().ok().filter(|n| *n >= 1).ok_or_else(|| {
+                            anyhow::anyhow!("tenant '{name}': inflight must be >= 1")
+                        })?;
+                }
+                "priority" => {
+                    spec.priority = Some(Priority::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "tenant '{name}': priority must be interactive|standard|batch"
+                        )
+                    })?);
+                }
+                _ => anyhow::bail!("tenant '{name}': unknown field '{k}'"),
+            }
+        }
+        out.push((name.to_string(), spec));
+    }
+    Ok(out)
+}
+
+/// Outcome of one admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Admitted; carry `tenant` into [`crate::coordinator::SubmitOptions`]
+    /// and apply `priority` when the request named none.
+    Granted { tenant: u32, priority: Option<Priority> },
+    /// Over the token-bucket request rate → 429.
+    ThrottledRate,
+    /// Over the inflight quota → 429.
+    ThrottledQuota,
+}
+
+/// One tenant's counters, for bench reports and tests.
+#[derive(Clone, Debug)]
+pub struct TenantCounters {
+    pub name: String,
+    pub admitted: u64,
+    pub throttled_rate: u64,
+    pub throttled_quota: u64,
+    pub events_dropped: u64,
+    pub inflight: usize,
+}
+
+struct TenantState {
+    index: u32,
+    spec: TenantSpec,
+    tokens: f64,
+    refill_at: Instant,
+    inflight: usize,
+    admitted: u64,
+    throttled_rate: u64,
+    throttled_quota: u64,
+    events_dropped: u64,
+}
+
+impl TenantState {
+    fn new(index: u32, spec: TenantSpec, now: Instant) -> TenantState {
+        TenantState {
+            index,
+            spec,
+            tokens: spec.burst,
+            refill_at: now,
+            inflight: 0,
+            admitted: 0,
+            throttled_rate: 0,
+            throttled_quota: 0,
+            events_dropped: 0,
+        }
+    }
+}
+
+struct GovInner {
+    default_spec: TenantSpec,
+    /// Insertion-ordered names; position = stable tenant index.
+    names: Vec<String>,
+    states: BTreeMap<String, TenantState>,
+}
+
+/// The edge admission gate: one bucket + quota per tenant name, with
+/// unknown names lazily registered under the default spec. Index 0 is
+/// always the anonymous tenant (no header).
+pub struct TenantGovernor {
+    inner: Mutex<GovInner>,
+}
+
+/// Tenant name used when a request carries no tenant header.
+pub const ANONYMOUS: &str = "anonymous";
+
+impl TenantGovernor {
+    pub fn new(
+        default_spec: TenantSpec,
+        tenants: &[(String, TenantSpec)],
+        now: Instant,
+    ) -> TenantGovernor {
+        let mut inner =
+            GovInner { default_spec, names: vec![ANONYMOUS.to_string()], states: BTreeMap::new() };
+        inner.states.insert(ANONYMOUS.to_string(), TenantState::new(0, default_spec, now));
+        for (name, spec) in tenants {
+            if name == ANONYMOUS {
+                inner.states.get_mut(ANONYMOUS).expect("seeded").spec = *spec;
+                continue;
+            }
+            let index = inner.names.len() as u32;
+            inner.names.push(name.clone());
+            inner.states.insert(name.clone(), TenantState::new(index, *spec, now));
+        }
+        TenantGovernor { inner: Mutex::new(inner) }
+    }
+
+    fn state<'a>(inner: &'a mut GovInner, tenant: &str, now: Instant) -> &'a mut TenantState {
+        if !inner.states.contains_key(tenant) {
+            let index = inner.names.len() as u32;
+            inner.names.push(tenant.to_string());
+            inner
+                .states
+                .insert(tenant.to_string(), TenantState::new(index, inner.default_spec, now));
+        }
+        inner.states.get_mut(tenant).expect("just inserted")
+    }
+
+    /// One admission attempt at `now` (passed in so tests and the
+    /// soak bench can reason about exact refill windows).
+    pub fn admit(&self, tenant: &str, now: Instant) -> Admission {
+        let mut inner = self.inner.lock().unwrap();
+        let st = TenantGovernor::state(&mut inner, tenant, now);
+        let dt = now.saturating_duration_since(st.refill_at).as_secs_f64();
+        st.refill_at = now;
+        if st.spec.rps.is_finite() {
+            st.tokens = (st.tokens + dt * st.spec.rps).min(st.spec.burst);
+        }
+        if st.inflight >= st.spec.max_inflight {
+            st.throttled_quota += 1;
+            return Admission::ThrottledQuota;
+        }
+        if st.tokens < 1.0 {
+            st.throttled_rate += 1;
+            return Admission::ThrottledRate;
+        }
+        st.tokens -= 1.0;
+        st.inflight += 1;
+        st.admitted += 1;
+        Admission::Granted { tenant: st.index, priority: st.spec.priority }
+    }
+
+    /// A granted request finished (or failed to submit): free its
+    /// inflight slot.
+    pub fn release(&self, tenant: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(st) = inner.states.get_mut(tenant) {
+            st.inflight = st.inflight.saturating_sub(1);
+        }
+    }
+
+    /// Account `n` net-layer event drops against `tenant`.
+    pub fn note_dropped(&self, tenant: &str, n: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(st) = inner.states.get_mut(tenant) {
+            st.events_dropped += n;
+        }
+    }
+
+    /// Export per-tenant labelled counters/gauges into `reg` (called
+    /// on a fresh registry per `/metrics` scrape).
+    pub fn export(&self, reg: &mut Registry) {
+        let inner = self.inner.lock().unwrap();
+        for (name, st) in &inner.states {
+            let labels = [("tenant", name.as_str())];
+            reg.counter("qrazor_net_requests", &labels, st.admitted);
+            reg.counter(
+                "qrazor_net_throttled",
+                &[("tenant", name.as_str()), ("reason", "rate")],
+                st.throttled_rate,
+            );
+            reg.counter(
+                "qrazor_net_throttled",
+                &[("tenant", name.as_str()), ("reason", "quota")],
+                st.throttled_quota,
+            );
+            reg.counter("qrazor_net_session_events_dropped", &labels, st.events_dropped);
+            reg.gauge("qrazor_net_inflight", &labels, st.inflight as f64);
+        }
+    }
+
+    /// Counter snapshot in tenant-index order.
+    pub fn snapshot(&self) -> Vec<TenantCounters> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .names
+            .iter()
+            .map(|name| {
+                let st = &inner.states[name];
+                TenantCounters {
+                    name: name.clone(),
+                    admitted: st.admitted,
+                    throttled_rate: st.throttled_rate,
+                    throttled_quota: st.throttled_quota,
+                    events_dropped: st.events_dropped,
+                    inflight: st.inflight,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_tenant_table() {
+        let t = parse_tenants("free:rps=5,burst=10,inflight=4,priority=batch;pro").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, "free");
+        assert_eq!(t[0].1.rps, 5.0);
+        assert_eq!(t[0].1.burst, 10.0);
+        assert_eq!(t[0].1.max_inflight, 4);
+        assert_eq!(t[0].1.priority, Some(Priority::Batch));
+        assert_eq!(t[1].0, "pro");
+        assert!(t[1].1.rps.is_infinite(), "bare name gets the open default");
+
+        // a rate without an explicit burst defaults to burst=1
+        let t = parse_tenants("slow:rps=2").unwrap();
+        assert_eq!(t[0].1.burst, 1.0);
+
+        assert!(parse_tenants("x:rps=-1").is_err());
+        assert!(parse_tenants("x:bogus=1").is_err());
+        assert!(parse_tenants("x:priority=vip").is_err());
+        assert!(parse_tenants("a;a").is_err(), "duplicate tenant");
+        assert!(parse_tenants(":rps=1").is_err(), "empty name");
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_over_simulated_time() {
+        let t0 = Instant::now();
+        let spec = TenantSpec { rps: 10.0, burst: 2.0, ..TenantSpec::default() };
+        let gov = TenantGovernor::new(TenantSpec::default(), &[("t".into(), spec)], t0);
+        // the burst admits two back to back, then the bucket is dry
+        assert!(matches!(gov.admit("t", t0), Admission::Granted { .. }));
+        assert!(matches!(gov.admit("t", t0), Admission::Granted { .. }));
+        assert_eq!(gov.admit("t", t0), Admission::ThrottledRate);
+        // 100 ms at 10 rps refills exactly one token
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(matches!(gov.admit("t", t1), Admission::Granted { .. }));
+        assert_eq!(gov.admit("t", t1), Admission::ThrottledRate);
+        // refill caps at burst no matter how long the idle gap
+        let t2 = t1 + Duration::from_secs(3600);
+        assert!(matches!(gov.admit("t", t2), Admission::Granted { .. }));
+        assert!(matches!(gov.admit("t", t2), Admission::Granted { .. }));
+        assert_eq!(gov.admit("t", t2), Admission::ThrottledRate);
+        let snap = gov.snapshot();
+        let t = snap.iter().find(|c| c.name == "t").unwrap();
+        assert_eq!(t.admitted, 5);
+        assert_eq!(t.throttled_rate, 3);
+    }
+
+    #[test]
+    fn inflight_quota_blocks_until_release() {
+        let t0 = Instant::now();
+        let spec = TenantSpec { max_inflight: 2, ..TenantSpec::default() };
+        let gov = TenantGovernor::new(TenantSpec::default(), &[("q".into(), spec)], t0);
+        assert!(matches!(gov.admit("q", t0), Admission::Granted { .. }));
+        assert!(matches!(gov.admit("q", t0), Admission::Granted { .. }));
+        assert_eq!(gov.admit("q", t0), Admission::ThrottledQuota);
+        gov.release("q");
+        assert!(matches!(gov.admit("q", t0), Admission::Granted { .. }));
+        // other tenants are unaffected by q's quota
+        assert!(matches!(gov.admit("other", t0), Admission::Granted { .. }));
+    }
+
+    #[test]
+    fn tenant_indices_are_stable_and_anonymous_is_zero() {
+        let t0 = Instant::now();
+        let gov = TenantGovernor::new(
+            TenantSpec::default(),
+            &[("a".into(), TenantSpec::default()), ("b".into(), TenantSpec::default())],
+            t0,
+        );
+        let ix = |name: &str| match gov.admit(name, t0) {
+            Admission::Granted { tenant, .. } => tenant,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(ix(ANONYMOUS), 0);
+        assert_eq!(ix("a"), 1);
+        assert_eq!(ix("b"), 2);
+        assert_eq!(ix("walk-in"), 3, "unknown tenants register lazily");
+        assert_eq!(ix("a"), 1, "repeat lookups keep the same index");
+    }
+
+    #[test]
+    fn tenant_default_priority_is_surfaced_on_grant() {
+        let t0 = Instant::now();
+        let spec = TenantSpec { priority: Some(Priority::Interactive), ..TenantSpec::default() };
+        let gov = TenantGovernor::new(TenantSpec::default(), &[("vip".into(), spec)], t0);
+        match gov.admit("vip", t0) {
+            Admission::Granted { priority, .. } => {
+                assert_eq!(priority, Some(Priority::Interactive));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match gov.admit("plain", t0) {
+            Admission::Granted { priority, .. } => assert_eq!(priority, None),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn export_writes_per_tenant_labels() {
+        let t0 = Instant::now();
+        let spec = TenantSpec { rps: 1.0, burst: 1.0, ..TenantSpec::default() };
+        let gov = TenantGovernor::new(TenantSpec::default(), &[("free".into(), spec)], t0);
+        let _ = gov.admit("free", t0);
+        let _ = gov.admit("free", t0); // throttled
+        gov.note_dropped("free", 3);
+        let mut reg = Registry::new();
+        gov.export(&mut reg);
+        assert_eq!(reg.counter_value("qrazor_net_requests", &[("tenant", "free")]), 1);
+        assert_eq!(
+            reg.counter_value("qrazor_net_throttled", &[("tenant", "free"), ("reason", "rate")]),
+            1
+        );
+        let dropped = reg.counter_value("qrazor_net_session_events_dropped", &[("tenant", "free")]);
+        assert_eq!(dropped, 3);
+        let text = reg.render_prometheus();
+        assert!(text.contains(r#"qrazor_net_requests{tenant="free"}"#), "{text}");
+    }
+}

@@ -1,0 +1,432 @@
+//! Loopback protocol-conformance suite for the network front-end:
+//! SSE and JSON-lines framing, malformed-request 4xx mapping,
+//! disconnect-cancel KV accounting draining to zero bytes, Prometheus
+//! `/metrics` with per-tenant labels, tenant quota/rate 429s, and the
+//! slow-reader session-buffer guard. Needs no artifacts; runs on the
+//! nano preset against both `Server` and `ClusterServer` backends.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qrazor::baselines::QRazor;
+use qrazor::cluster::{ClusterConfig, ClusterServer};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{Engine, Sampling, Server};
+use qrazor::model::quantized::{calibrate, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::net::{client, parse_tenants, HttpServer, NetConfig, TenantSpec};
+use qrazor::util::json::Json;
+use qrazor::util::rng::Rng;
+
+fn model(seed: u64) -> Arc<QuantModel> {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed + 1);
+    let seqs: Vec<Vec<u32>> = (0..2)
+        .map(|_| (0..16).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    Arc::new(QuantModel::build(&w, Box::new(QRazor::w4a4kv4(16)), &cal))
+}
+
+/// Greedy baseline tokens straight off a bare engine.
+fn baseline_tokens(model: &Arc<QuantModel>, prompt: Vec<u32>, max_new: usize) -> Vec<u32> {
+    let mut e = Engine::new(Arc::clone(model), ServeConfig::default());
+    e.submit(prompt, max_new, Sampling::Greedy);
+    e.run_to_completion().pop().unwrap().tokens
+}
+
+fn wait_drained<A: qrazor::coordinator::ServeApi + Send + 'static>(http: &HttpServer<A>) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let st = http.stats();
+        if st.in_flight() == 0 && st.occupancy.bytes == 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "server never drained: {st:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn sse_stream_matches_engine_baseline_with_exact_framing() {
+    let model = model(11);
+    let prompt = vec![3u32, 1, 4, 1, 5];
+    let want = baseline_tokens(&model, prompt.clone(), 12);
+
+    let server = Server::spawn(Arc::clone(&model), ServeConfig::default());
+    let http = HttpServer::bind(server, NetConfig::default(), "127.0.0.1:0", None).unwrap();
+
+    let body = r#"{"prompt":[3,1,4,1,5],"max_tokens":12,"stream":"sse"}"#;
+    let reply = client::post_completions(http.addr(), None, body).unwrap();
+    assert_eq!(reply.status, 200);
+    assert!(reply.content_type().contains("text/event-stream"), "{}", reply.content_type());
+
+    // raw framing: every frame is `data: <json>` + blank line, the
+    // stream ends with `data: [DONE]`
+    let raw = reply.read_body().unwrap();
+    let frames: Vec<&str> = raw.split("\n\n").filter(|f| !f.is_empty()).collect();
+    assert!(frames.len() >= 3, "started + >=1 chunk + done + [DONE]: {raw:?}");
+    for f in &frames {
+        assert!(f.starts_with("data: "), "bad frame {f:?}");
+    }
+    assert_eq!(*frames.last().unwrap(), "data: [DONE]");
+
+    // semantic pass over the same exchange via the streaming client
+    let mut reply = client::post_completions(http.addr(), None, body).unwrap();
+    let out = reply.drain_stream().unwrap();
+    assert!(out.started, "started frame first");
+    assert_eq!(out.tokens, want, "streamed chunks reproduce the engine baseline");
+    let resp = out.response.expect("done frame");
+    let resp_tokens: Vec<u32> = resp.req("tokens").unwrap().as_arr().unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(resp_tokens, want);
+    assert_eq!(resp.req("finish_reason").unwrap().as_str(), Some("length"));
+    assert_eq!(resp.req("prompt_len").unwrap().as_usize(), Some(5));
+
+    let server = http.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn jsonl_and_buffered_json_modes() {
+    let model = model(13);
+    let want = baseline_tokens(&model, vec![7, 7, 2], 8);
+    let cluster = ClusterServer::spawn(
+        Arc::clone(&model),
+        ClusterConfig { shards: 2, ..Default::default() },
+    );
+    let http = HttpServer::bind(cluster, NetConfig::default(), "127.0.0.1:0", None).unwrap();
+
+    // JSON-lines: every line a standalone JSON object, ndjson type
+    let body = r#"{"prompt":[7,7,2],"max_tokens":8,"stream":"jsonl"}"#;
+    let mut reply = client::post_completions(http.addr(), None, body).unwrap();
+    assert_eq!(reply.status, 200);
+    assert!(reply.content_type().contains("application/x-ndjson"));
+    let out = reply.drain_stream().unwrap();
+    assert!(out.started);
+    assert_eq!(out.tokens, want);
+    assert!(out.response.is_some());
+
+    // Accept-negotiated jsonl when "stream" is omitted
+    let reply = client::request(
+        http.addr(),
+        "POST",
+        "/v1/completions",
+        &[("Accept", "application/x-ndjson")],
+        Some(r#"{"prompt":[7,7,2],"max_tokens":8}"#),
+    )
+    .unwrap();
+    assert!(reply.content_type().contains("application/x-ndjson"));
+    let mut reply = reply;
+    assert_eq!(reply.drain_stream().unwrap().tokens, want);
+
+    // buffered mode: one JSON response object, content-length framed
+    let body = r#"{"prompt":[7,7,2],"max_tokens":8,"stream":"json"}"#;
+    let reply = client::post_completions(http.addr(), None, body).unwrap();
+    assert_eq!(reply.status, 200);
+    assert!(reply.content_type().contains("application/json"));
+    let resp = Json::parse(&reply.read_body().unwrap()).unwrap();
+    let tokens: Vec<u32> = resp.req("tokens").unwrap().as_arr().unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(tokens, want);
+
+    let cluster = http.shutdown();
+    cluster.shutdown();
+}
+
+#[test]
+fn malformed_requests_map_to_4xx() {
+    let model = model(17);
+    let cluster = ClusterServer::spawn(
+        Arc::clone(&model),
+        ClusterConfig {
+            shards: 2,
+            serve: ServeConfig { max_step_tokens: 64, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let cfg = NetConfig { max_body_bytes: 4096, ..Default::default() };
+    let http = HttpServer::bind(cluster, cfg, "127.0.0.1:0", None).unwrap();
+    let addr = http.addr();
+
+    let status = |body: &str| client::post_completions(addr, None, body).unwrap().status;
+    assert_eq!(status("not json"), 400);
+    assert_eq!(status(r#"{"prompt":[]}"#), 400, "empty prompt");
+    assert_eq!(status(r#"{"prompt":["x"]}"#), 400, "non-integer tokens");
+    assert_eq!(status(r#"{"prompt":[1],"priority":"vip"}"#), 400);
+    assert_eq!(status(r#"{"prompt":[1],"stream":"xml"}"#), 400);
+    assert_eq!(status(r#"{"prompt":[1],"bogus":true}"#), 400, "unknown field");
+    // backend validation: a prompt over max_step_tokens is rejected
+    // by the cluster's submit gate and surfaces as a 400
+    let huge: Vec<String> = (0..100).map(|i| i.to_string()).collect();
+    let body = format!(r#"{{"prompt":[{}]}}"#, huge.join(","));
+    assert_eq!(status(&body), 400, "oversized prompt");
+
+    // routing errors
+    let (s, _) = client::get(addr, "/nope").unwrap();
+    assert_eq!(s, 404);
+    let reply = client::request(addr, "GET", "/v1/completions", &[], None).unwrap();
+    assert_eq!(reply.status, 405);
+    let reply = client::request(addr, "DELETE", "/metrics", &[], None).unwrap();
+    assert_eq!(reply.status, 405);
+
+    // a body over the configured cap is refused with 413
+    let big = format!(r#"{{"prompt":[{}]}}"#, vec!["1"; 4000].join(","));
+    let reply = client::post_completions(addr, None, &big).unwrap();
+    assert_eq!(reply.status, 413);
+
+    // error bodies are json with a message
+    let reply = client::post_completions(addr, None, "not json").unwrap();
+    let err = Json::parse(&reply.read_body().unwrap()).unwrap();
+    assert!(err.req("error").unwrap().req("message").unwrap().as_str().is_some());
+
+    // none of the rejects ever reached the backend
+    assert_eq!(http.stats().requests_submitted, 0);
+    let cluster = http.shutdown();
+    cluster.shutdown();
+}
+
+#[test]
+fn disconnect_cancels_session_and_kv_drains_to_zero_bytes() {
+    let model = model(19);
+    let cluster = ClusterServer::spawn(
+        Arc::clone(&model),
+        ClusterConfig {
+            shards: 2,
+            serve: ServeConfig { max_new_tokens: 400, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind(cluster, NetConfig::default(), "127.0.0.1:0", None).unwrap();
+
+    // a long session plus two short survivors on the other shard(s)
+    let long = r#"{"prompt":[1,2,3],"max_tokens":400,"stream":"sse"}"#;
+    let mut victim = client::post_completions(http.addr(), None, long).unwrap();
+    assert_eq!(victim.status, 200);
+    // read until it demonstrably streams, then drop the socket
+    let mut chunks = 0;
+    while let Some(frame) = victim.next_json().unwrap() {
+        if frame.req("object").unwrap().as_str() == Some("chunk") {
+            chunks += 1;
+            if chunks >= 2 {
+                break;
+            }
+        }
+    }
+    drop(victim); // mid-stream disconnect
+
+    let short = r#"{"prompt":[9,9],"max_tokens":6,"stream":"jsonl"}"#;
+    let mut a = client::post_completions(http.addr(), None, short).unwrap();
+    let out = a.drain_stream().unwrap();
+    assert_eq!(out.tokens.len(), 6, "survivors stream to completion");
+
+    // the dropped socket must cancel its session: in-flight falls to
+    // zero and the packed KV pools drain byte-exactly
+    wait_drained(&http);
+    assert!(http.disconnect_cancels() >= 1, "disconnect must be observed");
+
+    let cluster = http.shutdown();
+    let report = cluster.shutdown();
+    for s in &report.shards {
+        assert_eq!(s.final_occupancy.bytes, 0, "shard {} must drain byte-exactly", s.index);
+    }
+    assert_eq!(report.total_completed(), 2 + 1, "victim resolves as a completion too");
+}
+
+#[test]
+fn metrics_health_and_trace_endpoints() {
+    let model = model(23);
+    let server = Server::spawn(Arc::clone(&model), ServeConfig::default());
+    let trace = qrazor::obs::TraceBuffer::with_default_capacity();
+    let cfg = NetConfig {
+        tenants: parse_tenants("acme:inflight=64").unwrap(),
+        ..Default::default()
+    };
+    let http = HttpServer::bind(server, cfg, "127.0.0.1:0", Some(trace)).unwrap();
+
+    let body = r#"{"prompt":[5,6],"max_tokens":4,"stream":"jsonl"}"#;
+    let mut r = client::post_completions(http.addr(), Some("acme"), body).unwrap();
+    r.drain_stream().unwrap();
+    wait_drained(&http);
+
+    let (status, text) = client::get(http.addr(), "/metrics").unwrap();
+    assert_eq!(status, 200);
+    // prometheus text shape: every non-comment line is `name{labels} value`
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name, value) = line.rsplit_once(' ').expect("name value");
+        assert!(!name.is_empty());
+        assert!(value.parse::<f64>().is_ok(), "unparseable sample {line:?}");
+    }
+    assert!(text.contains("qrazor_requests_submitted"), "{text}");
+    assert!(text.contains("qrazor_generated_tokens"), "{text}");
+    assert!(text.contains(r#"qrazor_net_requests{tenant="acme"}"#), "{text}");
+    assert!(text.contains("qrazor_net_http_requests"), "{text}");
+
+    let (status, body) = client::get(http.addr(), "/health").unwrap();
+    assert_eq!(status, 200);
+    let health = Json::parse(&body).unwrap();
+    qrazor::obs::validate_health_json(&health).unwrap();
+
+    let (status, body) = client::get(http.addr(), "/trace").unwrap();
+    assert_eq!(status, 200);
+    let trace_json = Json::parse(&body).unwrap();
+    assert!(trace_json.req("traceEvents").unwrap().as_arr().is_some());
+
+    let server = http.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn tenant_rate_and_quota_limits_answer_429() {
+    let model = model(29);
+    let server = Server::spawn(
+        Arc::clone(&model),
+        ServeConfig { max_new_tokens: 400, ..Default::default() },
+    );
+    // "free": burst of 2, negligible refill → 3rd request throttles.
+    // "solo": one request in flight at a time.
+    let cfg = NetConfig {
+        tenants: parse_tenants("free:rps=0.001,burst=2;solo:inflight=1").unwrap(),
+        ..Default::default()
+    };
+    let http = HttpServer::bind(server, cfg, "127.0.0.1:0", None).unwrap();
+    let addr = http.addr();
+
+    let short = r#"{"prompt":[1,2],"max_tokens":2,"stream":"jsonl"}"#;
+    for _ in 0..2 {
+        let mut r = client::post_completions(addr, Some("free"), short).unwrap();
+        assert_eq!(r.status, 200);
+        r.drain_stream().unwrap();
+    }
+    let reply = client::post_completions(addr, Some("free"), short).unwrap();
+    assert_eq!(reply.status, 429, "rate limit");
+    let err = Json::parse(&reply.read_body().unwrap()).unwrap();
+    let msg = err.req("error").unwrap().req("message").unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("rate"), "{msg}");
+
+    // quota: while solo's long stream is live, a second request 429s…
+    let long = r#"{"prompt":[4,4,4],"max_tokens":400,"stream":"sse"}"#;
+    let mut live = client::post_completions(addr, Some("solo"), long).unwrap();
+    assert_eq!(live.status, 200);
+    assert!(live.next_json().unwrap().is_some(), "stream is live");
+    let reply = client::post_completions(addr, Some("solo"), short).unwrap();
+    assert_eq!(reply.status, 429, "inflight quota");
+    let err = Json::parse(&reply.read_body().unwrap()).unwrap();
+    let msg = err.req("error").unwrap().req("message").unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("quota"), "{msg}");
+    // …and other tenants are unaffected by solo's quota
+    let mut other = client::post_completions(addr, Some("bystander"), short).unwrap();
+    assert_eq!(other.status, 200);
+    other.drain_stream().unwrap();
+    // once the live stream resolves, solo admits again
+    live.drain_stream().unwrap();
+    wait_drained(&http);
+    let mut again = client::post_completions(addr, Some("solo"), short).unwrap();
+    assert_eq!(again.status, 200);
+    again.drain_stream().unwrap();
+
+    let counters = http.tenant_counters();
+    let free = counters.iter().find(|c| c.name == "free").unwrap();
+    assert_eq!(free.admitted, 2);
+    assert_eq!(free.throttled_rate, 1);
+    let solo = counters.iter().find(|c| c.name == "solo").unwrap();
+    assert_eq!(solo.throttled_quota, 1);
+
+    let server = http.shutdown();
+    server.shutdown();
+}
+
+/// Satellite: with the engine's event ring unbounded (`event_ring =
+/// 0`), the net layer's per-session byte cap is the only guard
+/// against a stalled consumer — it must drop oldest `Token` events,
+/// surface the count in `ServeStats::events_dropped` (and per
+/// tenant), and still deliver the complete final response.
+#[test]
+fn slow_reader_is_capped_at_the_net_layer_and_still_resolves() {
+    let model = model(31);
+    let server = Server::spawn(
+        Arc::clone(&model),
+        ServeConfig { event_ring: 0, max_new_tokens: 64, ..Default::default() },
+    );
+    let cfg = NetConfig {
+        // ~2 one-token events fit; the drain stalls 1.5 s so the
+        // session queue provably overflows before the first pop
+        session_buffer_bytes: 64,
+        drain_delay_ms: 1500,
+        ..Default::default()
+    };
+    let http = HttpServer::bind(server, cfg, "127.0.0.1:0", None).unwrap();
+
+    let body = r#"{"prompt":[2,3,4],"max_tokens":48,"stream":"jsonl"}"#;
+    let mut reply = client::post_completions(http.addr(), Some("sluggish"), body).unwrap();
+    assert_eq!(reply.status, 200);
+    let out = reply.drain_stream().unwrap();
+
+    // protocol stays intact: started + done always arrive, and the
+    // response carries the complete token stream…
+    assert!(out.started);
+    let resp = out.response.expect("done frame survives the drops");
+    let resp_tokens = resp.req("tokens").unwrap().as_arr().unwrap().len();
+    assert_eq!(resp_tokens, 48);
+    assert_eq!(resp.req("finish_reason").unwrap().as_str(), Some("length"));
+    // …while the live stream lost its oldest chunks to the byte cap
+    assert!(out.tokens.len() < 48, "some chunks must have dropped");
+    let dropped = http.net_events_dropped();
+    assert!(dropped > 0, "drops must be counted");
+    assert!(http.stats().events_dropped >= dropped, "drops surface in ServeStats");
+    let counters = http.tenant_counters();
+    let t = counters.iter().find(|c| c.name == "sluggish").unwrap();
+    assert_eq!(t.events_dropped, dropped, "drops are attributed to the tenant");
+
+    let server = http.shutdown();
+    server.shutdown();
+}
+
+/// Submit options flow end to end: stop tokens cut generation, a
+/// zero deadline expires a queued request, temperature+seed is
+/// deterministic, and tenant default priorities apply.
+#[test]
+fn submit_options_map_through_the_wire() {
+    let model = model(37);
+    let server = Server::spawn(Arc::clone(&model), ServeConfig::default());
+    let tenants = parse_tenants("vip:priority=interactive").unwrap();
+    let cfg = NetConfig { tenants, ..Default::default() };
+    let http = HttpServer::bind(server, cfg, "127.0.0.1:0", None).unwrap();
+    let addr = http.addr();
+
+    // deterministic sampled run: same seed twice → same tokens
+    let sampled = r#"{"prompt":[3,5],"max_tokens":6,"temperature":0.9,"seed":42,"stream":"jsonl"}"#;
+    let mut r1 = client::post_completions(addr, Some("vip"), sampled).unwrap();
+    let t1 = r1.drain_stream().unwrap().tokens;
+    let mut r2 = client::post_completions(addr, Some("vip"), sampled).unwrap();
+    let t2 = r2.drain_stream().unwrap().tokens;
+    assert_eq!(t1, t2, "seeded sampling is reproducible over the wire");
+    assert_eq!(t1.len(), 6);
+
+    // a stop token halts generation early with the right reason
+    let want = baseline_tokens(&model, vec![3, 5], 6);
+    let stop = want[1];
+    let body =
+        format!(r#"{{"prompt":[3,5],"max_tokens":6,"stop":{stop},"stream":"jsonl"}}"#);
+    let mut r = client::post_completions(addr, None, &body).unwrap();
+    let out = r.drain_stream().unwrap();
+    let resp = out.response.unwrap();
+    assert_eq!(resp.req("finish_reason").unwrap().as_str(), Some("stop_token"));
+    assert!(out.tokens.len() < 6);
+
+    // an already-expired deadline finishes as expired, zero tokens
+    let body = r#"{"prompt":[8,8],"max_tokens":6,"deadline_ms":0,"stream":"jsonl"}"#;
+    let mut r = client::post_completions(addr, None, body).unwrap();
+    let out = r.drain_stream().unwrap();
+    let resp = out.response.unwrap();
+    assert_eq!(resp.req("finish_reason").unwrap().as_str(), Some("expired"));
+    assert!(out.tokens.is_empty());
+
+    let server = http.shutdown();
+    server.shutdown();
+}
