@@ -1,0 +1,146 @@
+//! Cold-start economics of the packed checkpoint: how fast a serving
+//! process reaches its first token from a `qrazor.ckpt.v1` artifact
+//! versus re-quantizing the FP model in-process, and how little FP
+//! memory the streaming writer (`quantize --out --resident-layers`)
+//! keeps resident while packing.
+//!
+//! Axes:
+//! * **spawn**: median wall time of (a) `QuantModel::build` (the
+//!   re-quantization path), (b) `Artifact::open` + eager verified
+//!   load, (c) `Artifact::open` + cold demand-paged load — plus the
+//!   first-token forward for each. The cold load must beat
+//!   re-quantization by ≥5× (the artifact's reason to exist).
+//! * **writer residency**: `write_from_checkpoint` peak resident FP
+//!   bytes under a 1-layer budget versus the in-memory writer (which
+//!   by definition holds the whole FP model) — must shrink ≥2×.
+//!
+//! `--smoke` runs fewer reps for CI; the assertions are identical.
+
+use std::time::Instant;
+
+use qrazor::artifact::{write_from_checkpoint, write_quant_model, Artifact, LoadMode};
+use qrazor::config::ModelConfig;
+use qrazor::model::checkpoint::save_model;
+use qrazor::model::quantized::{calibrate, CalibrationData, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::policy::QuantPolicy;
+use qrazor::util::rng::Rng;
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn time_ms(f: &mut dyn FnMut()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+fn setup() -> (ModelWeights, CalibrationData, Vec<u32>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, 11);
+    let mut rng = Rng::new(12);
+    let seqs: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..24).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    let prompt = seqs[0][..8].to_vec();
+    (w, cal, prompt)
+}
+
+fn spawn_axis(reps: usize) {
+    let (w, cal, prompt) = setup();
+    let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    let dir = std::env::temp_dir().join("qrazor_ckpt_spawn");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("spawn.qrzk");
+    let qm = QuantModel::build(&w, policy.clone(), &cal);
+    let stats = write_quant_model(&path, &qm, None).unwrap();
+    drop(qm);
+
+    let mut build_ms = Vec::new();
+    let mut eager_ms = Vec::new();
+    let mut cold_ms = Vec::new();
+    let mut first_tok_ms = Vec::new();
+    for _ in 0..reps {
+        build_ms.push(time_ms(&mut || {
+            let m = QuantModel::build(&w, policy.clone(), &cal);
+            std::hint::black_box(&m);
+        }));
+        eager_ms.push(time_ms(&mut || {
+            let m = Artifact::open(&path).unwrap().load_model(LoadMode::Eager).unwrap();
+            std::hint::black_box(&m);
+        }));
+        let mut loaded = None;
+        cold_ms.push(time_ms(&mut || {
+            loaded = Some(Artifact::open(&path).unwrap().load_model(LoadMode::Cold).unwrap());
+        }));
+        let m = loaded.unwrap();
+        first_tok_ms.push(time_ms(&mut || {
+            std::hint::black_box(&m.forward_full(&prompt));
+        }));
+    }
+    let (b, e, c, f) =
+        (median(build_ms), median(eager_ms), median(cold_ms), median(first_tok_ms));
+    println!("spawn axis ({reps} reps, nano, w4a4kv4:16, {} B artifact):", stats.bytes_written);
+    println!("  re-quantize (QuantModel::build)      {b:>9.3} ms  + first token {f:.3} ms");
+    println!("  load --load (eager, verified)        {e:>9.3} ms  + first token {f:.3} ms");
+    println!("  load --load --cold (demand-paged)    {c:>9.3} ms  + first token {f:.3} ms");
+    println!("  cold-load speedup over re-quantize   {:>9.1}x", b / c);
+    assert!(
+        b / c >= 5.0,
+        "cold load must be >=5x faster than re-quantization (build {b:.3} ms, load {c:.3} ms)"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+fn residency_axis() {
+    let (w, cal, _) = setup();
+    let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    let dir = std::env::temp_dir().join("qrazor_ckpt_spawn");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("resid_fp.qrzc");
+    let out = dir.join("resid.qrzk");
+    save_model(&ckpt, &w).unwrap();
+    let full_fp = w.config.param_count() * 4;
+
+    let qm = QuantModel::build(&w, policy.clone(), &cal);
+    let mem = write_quant_model(&out, &qm, None).unwrap();
+    drop(qm);
+    println!("writer residency axis (nano, {full_fp} B FP model):");
+    println!(
+        "  in-memory writer                     peak {:>9} B ({} layers resident)",
+        mem.peak_resident_bytes, mem.resident_layers
+    );
+    for budget in [1usize, 2] {
+        let stats = write_from_checkpoint(&out, &ckpt, &w.config, &policy, &cal, None, budget)
+            .unwrap();
+        println!(
+            "  streaming --resident-layers {budget}         peak {:>9} B ({} layers resident)",
+            stats.peak_resident_bytes, stats.resident_layers
+        );
+        assert!(
+            stats.resident_layers <= budget,
+            "budget {budget} exceeded: {}",
+            stats.resident_layers
+        );
+        assert!(
+            stats.peak_resident_bytes * 2 <= mem.peak_resident_bytes,
+            "streaming peak {} must be at least 2x under the in-memory peak {}",
+            stats.peak_resident_bytes,
+            mem.peak_resident_bytes
+        );
+    }
+    for p in [&ckpt, &out] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let reps = if smoke { 7 } else { 31 };
+    spawn_axis(reps);
+    residency_axis();
+    println!("ckpt_spawn OK");
+}

@@ -1,0 +1,480 @@
+//! The static shape of a `qrazor.ckpt.v1` file: magic, checksums,
+//! plane references, the tensor table, the schema-tagged JSON header,
+//! and the canonical tensor order every writer and reader agree on.
+//!
+//! Nothing here touches the filesystem — this module is pure layout
+//! arithmetic and (de)serialization, shared by [`super::writer`],
+//! [`super::reader`], and the CLI's `--manifest-out` sidecar path
+//! (via [`manifest_json`], so the sidecar and the embedded manifest
+//! are byte-identical).
+
+use std::collections::BTreeMap;
+
+use super::ArtifactError;
+use crate::config::ModelConfig;
+use crate::policy::{QuantPolicy, Site};
+use crate::sdr::SdrSpec;
+use crate::util::json::Json;
+
+/// First 8 bytes of every packed checkpoint.
+pub const MAGIC: [u8; 8] = *b"QRZRCKPT";
+/// Format version this build writes and reads.
+pub const VERSION: u32 = 1;
+/// Schema tag embedded in (and required of) the JSON header.
+pub const SCHEMA: &str = "qrazor.ckpt.v1";
+/// Fixed-size binary preamble at offset 0 (patched after streaming).
+pub const PREAMBLE_LEN: usize = 64;
+/// Every tensor plane starts at a multiple of this.
+pub const SECTION_ALIGN: u64 = 64;
+
+/// FNV-1a 64 — the header fingerprint in the preamble. Dependency-free
+/// and stable across platforms; not cryptographic, which is fine: the
+/// threat model is bit rot and truncated copies, not adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Per-plane checksum: FNV-1a 64 folded to 32 bits so it stays exact
+/// inside the f64-backed JSON number space.
+pub fn section_sum(bytes: &[u8]) -> u32 {
+    let h = fnv1a64(bytes);
+    (h ^ (h >> 32)) as u32
+}
+
+/// Round `off` up to the next multiple of `align`.
+pub fn align_up(off: u64, align: u64) -> u64 {
+    off.div_ceil(align) * align
+}
+
+fn bad(detail: impl Into<String>) -> ArtifactError {
+    ArtifactError::BadHeader { detail: detail.into() }
+}
+
+/// Where one byte plane lives in the file, plus its checksum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlaneRef {
+    /// Absolute file offset (a multiple of [`SECTION_ALIGN`]).
+    pub offset: u64,
+    /// Plane length in bytes.
+    pub len: u64,
+    /// [`section_sum`] of the plane bytes.
+    pub sum: u32,
+}
+
+impl PlaneRef {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("len", Json::from(self.len as usize)),
+            ("off", Json::from(self.offset as usize)),
+            ("sum", Json::from(self.sum)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlaneRef, ArtifactError> {
+        let get = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .map(|v| v as u64)
+                .ok_or_else(|| bad(format!("plane ref missing numeric field '{k}'")))
+        };
+        Ok(PlaneRef { offset: get("off")?, len: get("len")?, sum: get("sum")? as u32 })
+    }
+}
+
+fn spec_json(s: &SdrSpec) -> Json {
+    Json::from_pairs(vec![
+        ("basis", Json::from(s.base_bits)),
+        ("group", Json::from(s.group)),
+        ("target", Json::from(s.target_bits)),
+    ])
+}
+
+/// Range-checks before constructing: `SdrSpec::new` asserts, and a
+/// tampered header must surface as an error, never a panic.
+fn spec_from_json(j: &Json) -> Result<SdrSpec, ArtifactError> {
+    let get = |k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad(format!("sdr spec missing numeric field '{k}'")))
+    };
+    let (basis, target, group) = (get("basis")?, get("target")?, get("group")?);
+    if !(2..=16).contains(&target) || basis < target || basis > 16 || group == 0 {
+        return Err(bad(format!(
+            "implausible sdr spec basis={basis} target={target} group={group}"
+        )));
+    }
+    Ok(SdrSpec::new(basis as u32, target as u32, group))
+}
+
+/// One entry of the tensor table.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorRecord {
+    /// A full-precision tensor (embeddings, norms, unpacked linears):
+    /// one plane of little-endian f32s.
+    Fp32 { name: String, shape: Vec<usize>, data: PlaneRef },
+    /// A packed 4-bit SDR weight: nibble codes, nibble-packed group
+    /// flags, per-row f32 scales, plus the weight and activation specs
+    /// the GEMM pairs it with.
+    Packed4 {
+        name: String,
+        rows: usize,
+        cols: usize,
+        spec: SdrSpec,
+        act: SdrSpec,
+        codes: PlaneRef,
+        flags: PlaneRef,
+        scales: PlaneRef,
+    },
+}
+
+impl TensorRecord {
+    pub fn name(&self) -> &str {
+        match self {
+            TensorRecord::Fp32 { name, .. } | TensorRecord::Packed4 { name, .. } => name,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            TensorRecord::Fp32 { name, shape, data } => Json::from_pairs(vec![
+                ("data", data.to_json()),
+                ("kind", Json::from("fp32")),
+                ("name", Json::from(name.clone())),
+                ("shape", Json::from(shape.clone())),
+            ]),
+            TensorRecord::Packed4 { name, rows, cols, spec, act, codes, flags, scales } => {
+                Json::from_pairs(vec![
+                    ("act", spec_json(act)),
+                    ("codes", codes.to_json()),
+                    ("cols", Json::from(*cols)),
+                    ("flags", flags.to_json()),
+                    ("kind", Json::from("packed4")),
+                    ("name", Json::from(name.clone())),
+                    ("rows", Json::from(*rows)),
+                    ("scales", scales.to_json()),
+                    ("spec", spec_json(spec)),
+                ])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<TensorRecord, ArtifactError> {
+        let name = j
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| bad("tensor record missing 'name'"))?
+            .to_string();
+        let field = |k: &str| {
+            j.get(k).ok_or_else(|| bad(format!("tensor record '{name}' missing '{k}'")))
+        };
+        match j.get("kind").and_then(|k| k.as_str()) {
+            Some("fp32") => {
+                let shape = field("shape")?
+                    .as_arr()
+                    .ok_or_else(|| bad(format!("tensor '{name}': 'shape' not an array")))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize()
+                            .ok_or_else(|| bad(format!("tensor '{name}': bad shape entry")))
+                    })
+                    .collect::<Result<Vec<usize>, _>>()?;
+                let data = PlaneRef::from_json(field("data")?)?;
+                Ok(TensorRecord::Fp32 { name, shape, data })
+            }
+            Some("packed4") => {
+                let dim = |k: &str| {
+                    field(k)?
+                        .as_usize()
+                        .ok_or_else(|| bad(format!("tensor '{name}': '{k}' not a number")))
+                };
+                let (rows, cols) = (dim("rows")?, dim("cols")?);
+                let spec = spec_from_json(field("spec")?)?;
+                let act = spec_from_json(field("act")?)?;
+                let codes = PlaneRef::from_json(field("codes")?)?;
+                let flags = PlaneRef::from_json(field("flags")?)?;
+                let scales = PlaneRef::from_json(field("scales")?)?;
+                Ok(TensorRecord::Packed4 { name, rows, cols, spec, act, codes, flags, scales })
+            }
+            Some(other) => Err(bad(format!("tensor '{name}': unknown kind '{other}'"))),
+            None => Err(bad(format!("tensor '{name}': 'kind' must be a string"))),
+        }
+    }
+}
+
+/// The policy manifest object: identical in the `--manifest-out`
+/// sidecar and inside the checkpoint header. `health`, when present,
+/// is a `qrazor.health.v1` snapshot ([`crate::obs::health_json`]).
+pub fn manifest_json(policy: &QuantPolicy, health: Option<Json>) -> Json {
+    let mut j = Json::from_pairs(vec![("policy", policy.to_json())]);
+    if let Some(h) = health {
+        j.set("health", h);
+    }
+    j
+}
+
+/// The parsed JSON header of a packed checkpoint.
+#[derive(Clone, Debug)]
+pub struct Header {
+    pub config: ModelConfig,
+    pub policy: QuantPolicy,
+    /// Static per-site activation amax (the calibration product),
+    /// stored as f32 bit patterns so the round trip is exact.
+    pub site_amax: BTreeMap<String, f32>,
+    /// Optional `qrazor.health.v1` snapshot captured at write time.
+    pub health: Option<Json>,
+    pub tensors: Vec<TensorRecord>,
+}
+
+impl Header {
+    pub fn to_json(&self) -> Json {
+        let mut amax = Json::obj();
+        for (k, v) in &self.site_amax {
+            amax.set(k, Json::from(v.to_bits()));
+        }
+        Json::from_pairs(vec![
+            ("manifest", manifest_json(&self.policy, self.health.clone())),
+            ("model", self.config.to_json()),
+            ("schema", Json::from(SCHEMA)),
+            ("site_amax", amax),
+            ("tensors", Json::Arr(self.tensors.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Header, ArtifactError> {
+        let schema = j.get("schema").and_then(|s| s.as_str());
+        if schema != Some(SCHEMA) {
+            return Err(bad(format!(
+                "schema is '{}', expected '{SCHEMA}'",
+                schema.unwrap_or("<missing>")
+            )));
+        }
+        let manifest = j.get("manifest").ok_or_else(|| bad("missing 'manifest'"))?;
+        let policy_j = manifest.get("policy").ok_or_else(|| bad("manifest missing 'policy'"))?;
+        // A scheme-kind policy is a *compatibility* failure, not a
+        // malformed header: the bytes are fine, the policy just cannot
+        // round-trip. Check before the generic parse so it gets its
+        // own actionable variant.
+        if policy_j.get("kind").and_then(|k| k.as_str()) == Some("scheme") {
+            let name = policy_j.get("name").and_then(|n| n.as_str()).unwrap_or("?");
+            return Err(ArtifactError::PolicyIncompatible {
+                detail: format!(
+                    "the manifest records opaque scheme '{name}', which cannot be \
+                     reconstructed; rebuild the checkpoint with a razor-native policy"
+                ),
+            });
+        }
+        let policy =
+            QuantPolicy::from_json(policy_j).map_err(|e| bad(format!("policy manifest: {e}")))?;
+        let model = j.get("model").ok_or_else(|| bad("missing 'model'"))?;
+        let config =
+            ModelConfig::from_json(model).map_err(|e| bad(format!("model config: {e}")))?;
+        let health = manifest.get("health").cloned();
+        let mut site_amax = BTreeMap::new();
+        match j.get("site_amax") {
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    let bits = v
+                        .as_usize()
+                        .and_then(|b| u32::try_from(b).ok())
+                        .ok_or_else(|| bad(format!("site_amax['{k}'] is not an f32 bit pattern")))?;
+                    site_amax.insert(k.clone(), f32::from_bits(bits));
+                }
+            }
+            _ => return Err(bad("missing 'site_amax' object")),
+        }
+        let tensors = j
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| bad("missing 'tensors' array"))?
+            .iter()
+            .map(TensorRecord::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Header { config, policy, site_amax, health, tensors })
+    }
+}
+
+/// One slot of the canonical tensor order.
+#[derive(Clone, Debug)]
+pub struct CanonicalTensor {
+    /// Artifact-namespace tensor name (`embed`, `l{li}.wq`, …).
+    pub name: String,
+    /// Expected full-precision shape (`[rows, cols]` for linears).
+    pub shape: Vec<usize>,
+    /// `(layer, site)` when the slot is a policy-prepared linear; the
+    /// lm_head uses layer index `config.layers` by the policy's own
+    /// convention.
+    pub linear: Option<(usize, Site)>,
+}
+
+/// The canonical tensor order of a packed checkpoint — the exact
+/// sequence every writer emits and the reader validates the table
+/// against. Layer-contiguous, mirroring
+/// [`crate::model::ModelWeights::to_named`], so a streaming writer
+/// holds one layer at a time.
+pub fn canonical_tensors(config: &ModelConfig) -> Vec<CanonicalTensor> {
+    let d = config.dim;
+    let kv_dim = config.head_dim() * config.kv_heads;
+    let f = config.ffn_hidden;
+    let t = |name: String, shape: Vec<usize>, linear| CanonicalTensor { name, shape, linear };
+    let mut out = Vec::with_capacity(3 + config.layers * 9);
+    out.push(t("embed".into(), vec![config.vocab, d], None));
+    for li in 0..config.layers {
+        out.push(t(format!("l{li}.attn_norm"), vec![d], None));
+        out.push(t(format!("l{li}.wq"), vec![d, d], Some((li, Site::Wq))));
+        out.push(t(format!("l{li}.wk"), vec![kv_dim, d], Some((li, Site::Wk))));
+        out.push(t(format!("l{li}.wv"), vec![kv_dim, d], Some((li, Site::Wv))));
+        out.push(t(format!("l{li}.wo"), vec![d, d], Some((li, Site::Wo))));
+        out.push(t(format!("l{li}.ffn_norm"), vec![d], None));
+        out.push(t(format!("l{li}.gate"), vec![f, d], Some((li, Site::Gate))));
+        out.push(t(format!("l{li}.up"), vec![f, d], Some((li, Site::Up))));
+        out.push(t(format!("l{li}.down"), vec![d, f], Some((li, Site::Down))));
+    }
+    out.push(t("final_norm".into(), vec![d], None));
+    out.push(t("lm_head".into(), vec![config.vocab, d], Some((config.layers, Site::LmHead))));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // fold is deterministic and sensitive to every byte
+        assert_ne!(section_sum(b"abc"), section_sum(b"abd"));
+    }
+
+    #[test]
+    fn align_up_rounds_to_multiples() {
+        assert_eq!(align_up(0, 64), 0);
+        assert_eq!(align_up(1, 64), 64);
+        assert_eq!(align_up(64, 64), 64);
+        assert_eq!(align_up(65, 64), 128);
+    }
+
+    #[test]
+    fn header_json_roundtrip() {
+        let config = ModelConfig::preset("nano").unwrap();
+        let policy = QuantPolicy::parse("w4a4kv4:16;layers=0:w4a8").unwrap();
+        let mut site_amax = BTreeMap::new();
+        site_amax.insert("l0.attn_in".to_string(), 1.25f32);
+        site_amax.insert("lm_head_in".to_string(), 0.1f32);
+        let spec = SdrSpec::new(16, 4, 16);
+        let header = Header {
+            config: config.clone(),
+            policy,
+            site_amax,
+            health: Some(Json::from_pairs(vec![("schema", Json::from("qrazor.health.v1"))])),
+            tensors: vec![
+                TensorRecord::Fp32 {
+                    name: "embed".into(),
+                    shape: vec![256, 64],
+                    data: PlaneRef { offset: 64, len: 65536, sum: 7 },
+                },
+                TensorRecord::Packed4 {
+                    name: "l0.wq".into(),
+                    rows: 64,
+                    cols: 64,
+                    spec,
+                    act: SdrSpec::new(16, 8, 16),
+                    codes: PlaneRef { offset: 65600, len: 2048, sum: 1 },
+                    flags: PlaneRef { offset: 67648, len: 128, sum: 2 },
+                    scales: PlaneRef { offset: 67776, len: 256, sum: 3 },
+                },
+            ],
+        };
+        let text = header.to_json().to_string();
+        let back = Header::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.config, config);
+        assert_eq!(back.policy.name(), header.policy.name());
+        assert_eq!(back.site_amax, header.site_amax);
+        assert_eq!(back.health, header.health);
+        assert_eq!(back.tensors, header.tensors);
+        // exact f32 round trip through the bit-pattern encoding
+        assert_eq!(back.site_amax["l0.attn_in"].to_bits(), 1.25f32.to_bits());
+    }
+
+    #[test]
+    fn header_rejects_wrong_schema_and_scheme_policies() {
+        let config = ModelConfig::preset("nano").unwrap();
+        let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let header = Header {
+            config,
+            policy,
+            site_amax: BTreeMap::new(),
+            health: None,
+            tensors: vec![],
+        };
+        let mut j = header.to_json();
+        j.set("schema", Json::from("qrazor.ckpt.v999"));
+        match Header::from_json(&j) {
+            Err(ArtifactError::BadHeader { detail }) => assert!(detail.contains("schema")),
+            other => panic!("expected BadHeader, got {other:?}"),
+        }
+        let mut j = header.to_json();
+        j.set(
+            "manifest",
+            Json::from_pairs(vec![(
+                "policy",
+                Json::from_pairs(vec![
+                    ("kind", Json::from("scheme")),
+                    ("name", Json::from("smoothquant")),
+                ]),
+            )]),
+        );
+        match Header::from_json(&j) {
+            Err(ArtifactError::PolicyIncompatible { detail }) => {
+                assert!(detail.contains("smoothquant"))
+            }
+            other => panic!("expected PolicyIncompatible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tampered_spec_is_an_error_not_a_panic() {
+        let j = Json::parse(r#"{"basis": 4, "group": 16, "target": 16}"#).unwrap();
+        assert!(matches!(spec_from_json(&j), Err(ArtifactError::BadHeader { .. })));
+        let j = Json::parse(r#"{"basis": 16, "group": 0, "target": 4}"#).unwrap();
+        assert!(matches!(spec_from_json(&j), Err(ArtifactError::BadHeader { .. })));
+    }
+
+    #[test]
+    fn canonical_order_is_layer_contiguous() {
+        let config = ModelConfig::preset("nano").unwrap();
+        let order = canonical_tensors(&config);
+        assert_eq!(order.len(), 3 + config.layers * 9);
+        assert_eq!(order[0].name, "embed");
+        assert_eq!(order[1].name, "l0.attn_norm");
+        assert_eq!(order[2].name, "l0.wq");
+        assert_eq!(order[2].linear, Some((0, Site::Wq)));
+        assert_eq!(order[order.len() - 2].name, "final_norm");
+        assert_eq!(order[order.len() - 1].name, "lm_head");
+        assert_eq!(order[order.len() - 1].linear, Some((config.layers, Site::LmHead)));
+        // shapes match the FP parameter list (modulo the artifact names)
+        let specs = crate::model::ModelWeights::param_specs(&config);
+        for (c, (_, shape)) in order.iter().zip(&specs) {
+            assert_eq!(&c.shape, shape, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn manifest_json_orders_health_before_policy() {
+        let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let health = Json::from_pairs(vec![("schema", Json::from("qrazor.health.v1"))]);
+        let m = manifest_json(&policy, Some(health.clone()));
+        // identical to the legacy sidecar construction
+        let legacy = Json::from_pairs(vec![("policy", policy.to_json()), ("health", health)]);
+        assert_eq!(m.to_string_pretty(), legacy.to_string_pretty());
+        let text = m.to_string_pretty();
+        assert!(text.find("\"health\"").unwrap() < text.find("\"policy\"").unwrap());
+        // without health the key is absent entirely
+        assert!(manifest_json(&policy, None).get("health").is_none());
+    }
+}

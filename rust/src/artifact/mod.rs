@@ -1,0 +1,145 @@
+//! Packed SDR checkpoints: the `qrazor.ckpt.v1` on-disk format,
+//! its streaming writer, and the mmap-backed zero-copy loader.
+//!
+//! A packed checkpoint persists a policy-quantized model *as served*:
+//! every prepared linear's nibble/flag/scale planes (or its fp32
+//! effective weight where the policy doesn't pack), the embedding and
+//! norm tensors, the calibrated static scales, and the policy manifest
+//! — so `serve --load` reconstructs the exact serving operands with
+//! **zero re-quantization** (the razoring counters stay at zero through
+//! a load; see [`crate::obs::health::razored_groups_total`]).
+//!
+//! ## File layout
+//!
+//! ```text
+//! offset 0    preamble (64 B):
+//!               [ 0.. 8)  magic  b"QRZRCKPT"
+//!               [ 8..12)  u32 LE version (= 1)
+//!               [12..16)  u32 LE reserved (= 0)
+//!               [16..24)  u64 LE header offset
+//!               [24..32)  u64 LE header length
+//!               [32..40)  u64 LE FNV-1a 64 of the header JSON
+//!               [40..64)  zeros
+//! offset 64   tensor sections, each 64-byte aligned (zero padding in
+//!             the gaps), one to three byte planes per tensor:
+//!               fp32    → data  (f32 LE)
+//!               packed4 → codes (nibble pairs) | flags | scales (f32 LE)
+//! tail        header JSON (`qrazor.ckpt.v1`): model config, policy
+//!             manifest (+ optional `qrazor.health.v1` snapshot),
+//!             static per-site amax (f32 bit patterns), and the tensor
+//!             table (name, kind, shape/specs, per-plane offset,
+//!             length, and checksum)
+//! ```
+//!
+//! The header trails the sections so the writer streams tensors in one
+//! forward pass — quantize a layer, write it, drop it — and patches
+//! the 64-byte preamble at the end. Sequential onloading
+//! ([`write_from_checkpoint`]) leans on this: it scans an FP `QRZC`
+//! checkpoint tensor-by-tensor, preps each linear under the policy, and
+//! keeps at most `--resident-layers` worth of FP weights in memory.
+//!
+//! Loading ([`Artifact::open`] + [`Artifact::load_model`]) maps the
+//! file once (`Arc<Mmap>`) and builds every packed operand as a
+//! [`crate::sdr::PlaneStore`] *window* into that mapping: no plane is
+//! copied, clones share pages, and a cluster spawn hands the same
+//! mapped model `Arc` to all shards. [`LoadMode::Cold`] skips the
+//! checksum sweep so cold layers fault in from the page cache on first
+//! touch; [`LoadMode::Eager`] verifies every section first.
+//!
+//! Corruption and misuse surface as typed [`ArtifactError`]s — a
+//! truncated download, a flipped bit, a header that disagrees with its
+//! own tensor table, or a policy that cannot round-trip through the
+//! manifest each name their failure instead of panicking.
+
+pub mod layout;
+pub mod reader;
+pub mod writer;
+
+pub use layout::{manifest_json, Header, PlaneRef, TensorRecord, SCHEMA, VERSION};
+pub use reader::{Artifact, LoadMode};
+pub use writer::{write_from_checkpoint, write_model, write_quant_model, WriteStats};
+
+/// Everything that can go wrong opening, validating, or loading a
+/// packed checkpoint. Each variant carries enough context to act on:
+/// re-copy the file, rebuild it, or fix the policy — never a panic.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Underlying I/O failure (missing file, permission, short read).
+    Io(std::io::Error),
+    /// The file ends before a region the header promises.
+    Truncated { what: String, need: u64, have: u64 },
+    /// The first 8 bytes are not the `QRZRCKPT` magic.
+    BadMagic { found: [u8; 8] },
+    /// A format version this build does not read.
+    BadVersion { found: u32, supported: u32 },
+    /// The header JSON bytes do not hash to the preamble's checksum.
+    HeaderChecksum { expected: u64, computed: u64 },
+    /// The header JSON is unparseable or structurally invalid.
+    BadHeader { detail: String },
+    /// A tensor plane's bytes do not hash to the table's checksum.
+    SectionChecksum { tensor: String, plane: &'static str, expected: u32, computed: u32 },
+    /// The tensor table disagrees with the embedded model config or
+    /// policy manifest (wrong names, shapes, specs, or plane sizes).
+    TableMismatch { detail: String },
+    /// The policy cannot be persisted to or reconstructed from a
+    /// checkpoint manifest (e.g. an opaque scheme backend).
+    PolicyIncompatible { detail: String },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "checkpoint i/o error: {e}"),
+            ArtifactError::Truncated { what, need, have } => write!(
+                f,
+                "checkpoint truncated: {what} needs {need} bytes but the file has {have} — \
+                 re-copy the file or rebuild it with `quantize --out`"
+            ),
+            ArtifactError::BadMagic { found } => write!(
+                f,
+                "not a packed QRazor checkpoint (magic {found:02x?}); expected the \
+                 'QRZRCKPT' preamble written by `quantize --out`"
+            ),
+            ArtifactError::BadVersion { found, supported } => write!(
+                f,
+                "unsupported checkpoint version {found} (this build reads version {supported})"
+            ),
+            ArtifactError::HeaderChecksum { expected, computed } => write!(
+                f,
+                "header checksum mismatch (stored {expected:#018x}, computed {computed:#018x}) \
+                 — the file was corrupted after writing"
+            ),
+            ArtifactError::BadHeader { detail } => {
+                write!(f, "malformed checkpoint header: {detail}")
+            }
+            ArtifactError::SectionChecksum { tensor, plane, expected, computed } => write!(
+                f,
+                "checksum mismatch in tensor '{tensor}' plane '{plane}' \
+                 (stored {expected:#010x}, computed {computed:#010x}) — the file was \
+                 corrupted after writing"
+            ),
+            ArtifactError::TableMismatch { detail } => write!(
+                f,
+                "checkpoint tensor table disagrees with its own header: {detail}"
+            ),
+            ArtifactError::PolicyIncompatible { detail } => {
+                write!(f, "policy incompatible with packed checkpoints: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> ArtifactError {
+        ArtifactError::Io(e)
+    }
+}

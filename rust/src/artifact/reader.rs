@@ -1,0 +1,409 @@
+//! Mmap-backed zero-copy loading of packed checkpoints.
+//!
+//! [`Artifact::open`] maps the file once, validates the preamble and
+//! header, and cross-checks the tensor table against the embedded
+//! model config and policy manifest — every packed linear's specs and
+//! plane sizes must be exactly what [`QuantPolicy::packs_weight`]
+//! derives for its `(layer, site)`, so a header edited after writing
+//! cannot smuggle mismatched operands into the GEMMs.
+//!
+//! [`Artifact::load_model`] then assembles a [`QuantModel`] whose
+//! packed planes are [`PlaneStore`] windows into the shared
+//! `Arc<Mmap>`: no nibble or flag byte is copied, clones of the model
+//! handle (including every cluster shard) reference the same mapped
+//! pages, and **no quantization runs** — the razoring counters
+//! ([`crate::obs::health::razored_groups_total`]) stay untouched
+//! through a load. [`LoadMode::Eager`] checksums every section before
+//! building; [`LoadMode::Cold`] skips the sweep, so untouched layers
+//! are faulted in from the page cache on first access.
+
+use std::sync::Arc;
+
+use super::layout::{canonical_tensors, fnv1a64, section_sum, Header, PlaneRef, TensorRecord};
+use super::ArtifactError;
+use crate::baselines::{PackedWeight, PreparedLinear};
+use crate::model::quantized::{LayerParts, ModelParts, QuantModel};
+use crate::policy::QuantPolicy;
+use crate::sdr::packed::PackedSdrMatrix;
+use crate::sdr::PlaneStore;
+use crate::tensor::Tensor;
+use crate::util::mmap::Mmap;
+
+/// How much validation a load performs before serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Checksum every tensor plane before building the model — the
+    /// default for anything long-lived.
+    Eager,
+    /// Skip the checksum sweep; planes fault in on first touch. Header
+    /// and table validation still run in full.
+    Cold,
+}
+
+/// An opened, validated packed checkpoint: the shared mapping plus its
+/// parsed header.
+pub struct Artifact {
+    map: Arc<Mmap>,
+    header: Header,
+}
+
+impl Artifact {
+    /// Map `path` and validate everything except section payloads:
+    /// preamble (magic, version), header checksum and JSON, and full
+    /// structural agreement between the tensor table, the model
+    /// config, and the policy manifest.
+    pub fn open(path: &std::path::Path) -> Result<Artifact, ArtifactError> {
+        let map = Arc::new(Mmap::open(path)?);
+        let bytes = map.as_slice();
+        if bytes.len() < super::layout::PREAMBLE_LEN {
+            return Err(ArtifactError::Truncated {
+                what: "preamble".to_string(),
+                need: super::layout::PREAMBLE_LEN as u64,
+                have: bytes.len() as u64,
+            });
+        }
+        if bytes[0..8] != super::layout::MAGIC {
+            let mut found = [0u8; 8];
+            found.copy_from_slice(&bytes[0..8]);
+            return Err(ArtifactError::BadMagic { found });
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != super::layout::VERSION {
+            return Err(ArtifactError::BadVersion {
+                found: version,
+                supported: super::layout::VERSION,
+            });
+        }
+        let h_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let h_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let h_sum = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        let end = h_off.checked_add(h_len).filter(|&e| e <= bytes.len() as u64);
+        let Some(end) = end else {
+            return Err(ArtifactError::Truncated {
+                what: "header".to_string(),
+                need: h_off.saturating_add(h_len),
+                have: bytes.len() as u64,
+            });
+        };
+        let header_bytes = &bytes[h_off as usize..end as usize];
+        let computed = fnv1a64(header_bytes);
+        if computed != h_sum {
+            return Err(ArtifactError::HeaderChecksum { expected: h_sum, computed });
+        }
+        let text = std::str::from_utf8(header_bytes).map_err(|e| ArtifactError::BadHeader {
+            detail: format!("header is not utf-8: {e}"),
+        })?;
+        let json = crate::util::json::Json::parse(text)
+            .map_err(|e| ArtifactError::BadHeader { detail: e.to_string() })?;
+        let header = Header::from_json(&json)?;
+        let artifact = Artifact { map, header };
+        artifact.validate_table(h_off)?;
+        Ok(artifact)
+    }
+
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    /// The shared mapping — exposed so callers (and tests) can observe
+    /// plane sharing via `Arc::strong_count`.
+    pub fn map(&self) -> &Arc<Mmap> {
+        &self.map
+    }
+
+    fn mismatch(detail: String) -> ArtifactError {
+        ArtifactError::TableMismatch { detail }
+    }
+
+    /// One plane's bounds + alignment check; returns its bytes.
+    fn plane(&self, tensor: &str, what: &str, p: &PlaneRef) -> Result<&[u8], ArtifactError> {
+        let file = self.map.len() as u64;
+        let end = p.offset.checked_add(p.len).filter(|&e| e <= file);
+        let Some(end) = end else {
+            return Err(ArtifactError::Truncated {
+                what: format!("tensor '{tensor}' plane '{what}'"),
+                need: p.offset.saturating_add(p.len),
+                have: file,
+            });
+        };
+        if p.offset % super::layout::SECTION_ALIGN != 0 {
+            return Err(Self::mismatch(format!(
+                "tensor '{tensor}' plane '{what}' at unaligned offset {}",
+                p.offset
+            )));
+        }
+        Ok(&self.map.as_slice()[p.offset as usize..end as usize])
+    }
+
+    /// Structural cross-check: the tensor table must spell out exactly
+    /// the canonical tensors of the embedded config, with kinds, specs,
+    /// shapes, and plane sizes matching what the embedded policy
+    /// produces. `h_off` bounds the section region (planes must not
+    /// overlap the header).
+    fn validate_table(&self, h_off: u64) -> Result<(), ArtifactError> {
+        let canon = canonical_tensors(&self.header.config);
+        if self.header.tensors.len() != canon.len() {
+            return Err(Self::mismatch(format!(
+                "table has {} tensors, a '{}' model needs {}",
+                self.header.tensors.len(),
+                self.header.config.name,
+                canon.len()
+            )));
+        }
+        for (rec, c) in self.header.tensors.iter().zip(&canon) {
+            if rec.name() != c.name {
+                return Err(Self::mismatch(format!(
+                    "table entry '{}' where '{}' was expected",
+                    rec.name(),
+                    c.name
+                )));
+            }
+            let packs = c.linear.and_then(|(li, site)| self.header.policy.packs_weight(li, site));
+            match (rec, packs) {
+                (TensorRecord::Fp32 { name, shape, data }, None) => {
+                    if shape != &c.shape {
+                        return Err(Self::mismatch(format!(
+                            "tensor '{name}' has shape {shape:?}, expected {:?}",
+                            c.shape
+                        )));
+                    }
+                    let n: usize = shape.iter().product();
+                    if data.len != (n * 4) as u64 {
+                        return Err(Self::mismatch(format!(
+                            "tensor '{name}' data plane is {} bytes, expected {}",
+                            data.len,
+                            n * 4
+                        )));
+                    }
+                    self.check_plane_region(name, "data", data, h_off)?;
+                }
+                (
+                    TensorRecord::Packed4 { name, rows, cols, spec, act, codes, flags, scales },
+                    Some((wspec, aspec)),
+                ) => {
+                    if [*rows, *cols] != [c.shape[0], c.shape[1]] {
+                        return Err(Self::mismatch(format!(
+                            "tensor '{name}' is {rows}x{cols}, expected {}x{}",
+                            c.shape[0], c.shape[1]
+                        )));
+                    }
+                    if *spec != wspec || *act != aspec {
+                        return Err(Self::mismatch(format!(
+                            "tensor '{name}' specs disagree with the policy manifest"
+                        )));
+                    }
+                    let n = rows * cols;
+                    let nflags = rows * cols.div_ceil(spec.group);
+                    let expect = [
+                        ("codes", codes, n.div_ceil(2) as u64),
+                        ("flags", flags, nflags.div_ceil(2) as u64),
+                        ("scales", scales, (rows * 4) as u64),
+                    ];
+                    for (what, p, want) in expect {
+                        if p.len != want {
+                            return Err(Self::mismatch(format!(
+                                "tensor '{name}' plane '{what}' is {} bytes, expected {want}",
+                                p.len
+                            )));
+                        }
+                        self.check_plane_region(name, what, p, h_off)?;
+                    }
+                }
+                (TensorRecord::Fp32 { name, .. }, Some(_)) => {
+                    return Err(Self::mismatch(format!(
+                        "policy packs '{name}' but the table stores it as fp32"
+                    )));
+                }
+                (TensorRecord::Packed4 { name, .. }, None) => {
+                    return Err(Self::mismatch(format!(
+                        "table stores '{name}' packed but the policy does not pack it"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_plane_region(
+        &self,
+        tensor: &str,
+        what: &str,
+        p: &PlaneRef,
+        h_off: u64,
+    ) -> Result<(), ArtifactError> {
+        self.plane(tensor, what, p)?;
+        if p.offset < super::layout::PREAMBLE_LEN as u64 || p.offset + p.len > h_off {
+            return Err(Self::mismatch(format!(
+                "tensor '{tensor}' plane '{what}' lies outside the section region"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Checksum every tensor plane against the table. O(file size);
+    /// [`LoadMode::Eager`] runs this, [`LoadMode::Cold`] skips it.
+    pub fn verify(&self) -> Result<(), ArtifactError> {
+        for rec in &self.header.tensors {
+            let planes: Vec<(&'static str, &PlaneRef)> = match rec {
+                TensorRecord::Fp32 { data, .. } => vec![("data", data)],
+                TensorRecord::Packed4 { codes, flags, scales, .. } => {
+                    vec![("codes", codes), ("flags", flags), ("scales", scales)]
+                }
+            };
+            for (what, p) in planes {
+                let bytes = self.plane(rec.name(), what, p)?;
+                let computed = section_sum(bytes);
+                if computed != p.sum {
+                    return Err(ArtifactError::SectionChecksum {
+                        tensor: rec.name().to_string(),
+                        plane: what,
+                        expected: p.sum,
+                        computed,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn fp32_data(&self, rec: &TensorRecord) -> Result<Vec<f32>, ArtifactError> {
+        let TensorRecord::Fp32 { name, data, .. } = rec else {
+            return Err(Self::mismatch(format!("'{}' is not an fp32 tensor", rec.name())));
+        };
+        let bytes = self.plane(name, "data", data)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn fp32_tensor(&self, rec: &TensorRecord) -> Result<Tensor<f32>, ArtifactError> {
+        let TensorRecord::Fp32 { shape, .. } = rec else {
+            return Err(Self::mismatch(format!("'{}' is not an fp32 tensor", rec.name())));
+        };
+        Ok(Tensor::from_vec(shape, self.fp32_data(rec)?))
+    }
+
+    /// One prepared linear from a table slot: a zero-copy packed
+    /// operand for `packed4` records, the stored effective weight for
+    /// `fp32` ones. Loaded packed linears carry a placeholder empty
+    /// weight tensor — the packed GEMM never reads it.
+    fn linear(&self, rec: &TensorRecord) -> Result<PreparedLinear, ArtifactError> {
+        match rec {
+            TensorRecord::Fp32 { .. } => Ok(PreparedLinear {
+                weight: self.fp32_tensor(rec)?,
+                act_override: None,
+                packed: None,
+            }),
+            TensorRecord::Packed4 { name, rows, cols, spec, act, codes, flags, scales } => {
+                let scale_bytes = self.plane(name, "scales", scales)?;
+                let scales_v: Vec<f32> = scale_bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let window = |p: &PlaneRef| {
+                    PlaneStore::mapped(Arc::clone(&self.map), p.offset as usize, p.len as usize)
+                };
+                let weight = PackedSdrMatrix {
+                    spec: *spec,
+                    rows: *rows,
+                    cols: *cols,
+                    nibbles: window(codes),
+                    flag_bytes: window(flags),
+                    scales: scales_v,
+                };
+                Ok(PreparedLinear {
+                    weight: Tensor::zeros(&[0, 0]),
+                    act_override: None,
+                    packed: Some(PackedWeight { weight, act_spec: *act }),
+                })
+            }
+        }
+    }
+
+    /// Assemble a servable [`QuantModel`] from the mapped planes.
+    /// Zero re-quantization, zero plane copies (fp32 tensors and
+    /// per-row scales are decoded once; nibble/flag planes stay
+    /// mapped). [`LoadMode::Eager`] checksums everything first.
+    pub fn load_model(&self, mode: LoadMode) -> Result<QuantModel, ArtifactError> {
+        if mode == LoadMode::Eager {
+            self.verify()?;
+        }
+        let cfg = &self.header.config;
+        let t = &self.header.tensors;
+        let embed = self.fp32_tensor(&t[0])?;
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for li in 0..cfg.layers {
+            let base = 1 + li * 9;
+            layers.push(LayerParts {
+                attn_norm: self.fp32_data(&t[base])?,
+                wq: self.linear(&t[base + 1])?,
+                wk: self.linear(&t[base + 2])?,
+                wv: self.linear(&t[base + 3])?,
+                wo: self.linear(&t[base + 4])?,
+                ffn_norm: self.fp32_data(&t[base + 5])?,
+                w_gate: self.linear(&t[base + 6])?,
+                w_up: self.linear(&t[base + 7])?,
+                w_down: self.linear(&t[base + 8])?,
+            });
+        }
+        let final_norm = self.fp32_data(&t[1 + cfg.layers * 9])?;
+        let lm_head = self.linear(&t[2 + cfg.layers * 9])?;
+        Ok(QuantModel::from_parts(ModelParts {
+            config: cfg.clone(),
+            policy: self.header.policy.clone(),
+            embed,
+            layers,
+            final_norm,
+            lm_head,
+            site_amax: self.header.site_amax.clone(),
+        }))
+    }
+}
+
+// The heavyweight round-trip, corruption-taxonomy, and serving
+// bit-identity suites live in `rust/tests/artifact.rs`; unit tests
+// here cover only reader-internal arithmetic that integration tests
+// would reach indirectly.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::quantized::calibrate;
+    use crate::model::ModelWeights;
+    use crate::util::rng::Rng;
+
+    fn write_nano(path: &std::path::Path) -> QuantModel {
+        let cfg = crate::config::ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 21);
+        let mut rng = Rng::new(4);
+        let seqs: Vec<Vec<u32>> = (0..3)
+            .map(|_| (0..20).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let qm = QuantModel::build(&w, policy, &cal);
+        super::super::writer::write_quant_model(path, &qm, None).unwrap();
+        qm
+    }
+
+    #[test]
+    fn open_verify_load_shares_one_mapping() {
+        let dir = std::env::temp_dir().join("qrazor_test_artifact_reader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("share.qrzk");
+        let qm = write_nano(&path);
+        let art = Artifact::open(&path).unwrap();
+        art.verify().unwrap();
+        let before = Arc::strong_count(art.map());
+        let loaded = art.load_model(LoadMode::Eager).unwrap();
+        // every packed plane holds the same Arc — no plane was copied
+        assert!(Arc::strong_count(art.map()) > before);
+        assert_eq!(loaded.config, qm.config);
+        assert_eq!(loaded.policy.name(), qm.policy.name());
+        assert_eq!(loaded.site_amax, qm.site_amax);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io() {
+        let path = std::env::temp_dir().join("qrazor_no_such_artifact.qrzk");
+        assert!(matches!(Artifact::open(&path), Err(ArtifactError::Io(_))));
+    }
+}

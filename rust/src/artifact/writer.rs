@@ -1,0 +1,444 @@
+//! Streaming writers for packed checkpoints.
+//!
+//! Three entry points, one file format:
+//!
+//! * [`write_quant_model`] — serialize an already-built
+//!   [`QuantModel`]: zero additional quantization, every packed plane
+//!   is written as-is.
+//! * [`write_model`] — quantize FP weights under a policy while
+//!   writing, one linear at a time. Byte-identical output to building
+//!   the model first and calling [`write_quant_model`] (the prep is
+//!   deterministic and runs in the same canonical order).
+//! * [`write_from_checkpoint`] — sequential onloading: scan an FP
+//!   `QRZC` checkpoint tensor-by-tensor and quantize-and-write each as
+//!   it streams past, holding at most `resident_layers` layers of FP
+//!   weights in memory. Byte-identical to the other two for the same
+//!   inputs.
+//!
+//! All three stream sections first and patch the 64-byte preamble
+//! last, so a crash mid-write leaves a file whose zeroed magic fails
+//! [`super::Artifact::open`] immediately.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::layout::{
+    align_up, canonical_tensors, fnv1a64, section_sum, Header, PlaneRef, TensorRecord, MAGIC,
+    PREAMBLE_LEN, SECTION_ALIGN, VERSION,
+};
+use super::ArtifactError;
+use crate::baselines::PreparedLinear;
+use crate::config::ModelConfig;
+use crate::model::checkpoint::scan_named;
+use crate::model::quantized::{weight_cal_site, CalibrationData, QuantModel};
+use crate::model::ModelWeights;
+use crate::obs::health::SiteScope;
+use crate::policy::{QuantPolicy, Site};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// What a write did: size, tensor count, and the residency high-water
+/// mark of the streaming path.
+#[derive(Clone, Copy, Debug)]
+pub struct WriteStats {
+    /// Total file size in bytes.
+    pub bytes_written: u64,
+    /// Tensor table entries written.
+    pub tensors: usize,
+    /// Peak bytes of FP weight tensors held resident while streaming.
+    /// The from-memory paths report the whole model (it was already
+    /// resident); [`write_from_checkpoint`] reports its actual
+    /// high-water mark.
+    pub peak_resident_bytes: usize,
+    /// Peak count of distinct layers resident at once.
+    pub resident_layers: usize,
+}
+
+fn ensure_serializable(policy: &QuantPolicy) -> Result<(), ArtifactError> {
+    if policy.artifact_serializable() {
+        Ok(())
+    } else {
+        Err(ArtifactError::PolicyIncompatible {
+            detail: format!(
+                "policy '{}' is scheme-backed and cannot round-trip through a manifest; \
+                 use a razor-native policy (the w4a4/w4a8 DSL)",
+                policy.name()
+            ),
+        })
+    }
+}
+
+fn f32_bytes(data: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+/// Low-level section streamer: aligns, writes, checksums, records.
+struct ArtifactWriter {
+    f: BufWriter<File>,
+    pos: u64,
+    tensors: Vec<TensorRecord>,
+}
+
+impl ArtifactWriter {
+    fn create(path: &Path) -> Result<ArtifactWriter, ArtifactError> {
+        let mut f = BufWriter::new(File::create(path)?);
+        // Placeholder preamble — patched by `finish`. Until then the
+        // magic reads as zeros, so a partial file never validates.
+        f.write_all(&[0u8; PREAMBLE_LEN])?;
+        Ok(ArtifactWriter { f, pos: PREAMBLE_LEN as u64, tensors: Vec::new() })
+    }
+
+    fn write_plane(&mut self, bytes: &[u8]) -> Result<PlaneRef, ArtifactError> {
+        let target = align_up(self.pos, SECTION_ALIGN);
+        let pad = (target - self.pos) as usize;
+        if pad > 0 {
+            self.f.write_all(&vec![0u8; pad])?;
+        }
+        self.f.write_all(bytes)?;
+        self.pos = target + bytes.len() as u64;
+        Ok(PlaneRef { offset: target, len: bytes.len() as u64, sum: section_sum(bytes) })
+    }
+
+    fn put_fp32(&mut self, name: &str, shape: &[usize], data: &[f32]) -> Result<(), ArtifactError> {
+        let plane = self.write_plane(&f32_bytes(data))?;
+        self.tensors.push(TensorRecord::Fp32 {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: plane,
+        });
+        Ok(())
+    }
+
+    /// Packed linears store their three planes; unpacked ones store the
+    /// prepared *effective* weight as fp32 (already fake-quantized, so
+    /// the loaded model computes exactly what the built one does).
+    fn put_linear(&mut self, name: &str, pl: &PreparedLinear) -> Result<(), ArtifactError> {
+        match &pl.packed {
+            Some(pw) => {
+                let w = &pw.weight;
+                let codes = self.write_plane(&w.nibbles)?;
+                let flags = self.write_plane(&w.flag_bytes)?;
+                let scales = self.write_plane(&f32_bytes(&w.scales))?;
+                self.tensors.push(TensorRecord::Packed4 {
+                    name: name.to_string(),
+                    rows: w.rows,
+                    cols: w.cols,
+                    spec: w.spec,
+                    act: pw.act_spec,
+                    codes,
+                    flags,
+                    scales,
+                });
+                Ok(())
+            }
+            None => self.put_fp32(name, pl.weight.shape(), pl.weight.data()),
+        }
+    }
+
+    /// Write the trailing header, patch the preamble, flush. Returns
+    /// `(total_bytes, tensor_count)`.
+    fn finish(
+        mut self,
+        config: &ModelConfig,
+        policy: &QuantPolicy,
+        site_amax: &BTreeMap<String, f32>,
+        health: Option<Json>,
+    ) -> Result<(u64, usize), ArtifactError> {
+        let ntensors = self.tensors.len();
+        let header = Header {
+            config: config.clone(),
+            policy: policy.clone(),
+            site_amax: site_amax.clone(),
+            health,
+            tensors: std::mem::take(&mut self.tensors),
+        };
+        let json = header.to_json().to_string();
+        let bytes = json.as_bytes();
+        let h_off = align_up(self.pos, SECTION_ALIGN);
+        let pad = (h_off - self.pos) as usize;
+        if pad > 0 {
+            self.f.write_all(&vec![0u8; pad])?;
+        }
+        self.f.write_all(bytes)?;
+        let total = h_off + bytes.len() as u64;
+        let mut preamble = [0u8; PREAMBLE_LEN];
+        preamble[0..8].copy_from_slice(&MAGIC);
+        preamble[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        preamble[16..24].copy_from_slice(&h_off.to_le_bytes());
+        preamble[24..32].copy_from_slice(&(bytes.len() as u64).to_le_bytes());
+        preamble[32..40].copy_from_slice(&fnv1a64(bytes).to_le_bytes());
+        self.f.seek(SeekFrom::Start(0))?;
+        self.f.write_all(&preamble)?;
+        self.f.flush()?;
+        Ok((total, ntensors))
+    }
+}
+
+/// Serialize a built [`QuantModel`] — no quantization runs; packed
+/// planes and effective weights are written exactly as the model
+/// serves them.
+pub fn write_quant_model(
+    path: &Path,
+    qm: &QuantModel,
+    health: Option<Json>,
+) -> anyhow::Result<WriteStats> {
+    ensure_serializable(&qm.policy)?;
+    let mut w = ArtifactWriter::create(path)?;
+    let cfg = &qm.config;
+    w.put_fp32("embed", qm.embed_view().shape(), qm.embed_view().data())?;
+    for li in 0..cfg.layers {
+        let view = qm.layer_view(li);
+        w.put_fp32(&format!("l{li}.attn_norm"), &[view.attn_norm.len()], view.attn_norm)?;
+        for (site, pl) in &view.linears[..4] {
+            w.put_linear(&format!("l{li}.{}", site.key()), pl)?;
+        }
+        w.put_fp32(&format!("l{li}.ffn_norm"), &[view.ffn_norm.len()], view.ffn_norm)?;
+        for (site, pl) in &view.linears[4..] {
+            w.put_linear(&format!("l{li}.{}", site.key()), pl)?;
+        }
+    }
+    w.put_fp32("final_norm", &[qm.final_norm_view().len()], qm.final_norm_view())?;
+    w.put_linear("lm_head", qm.lm_head_view())?;
+    let (bytes_written, tensors) = w.finish(cfg, &qm.policy, &qm.site_amax, health)?;
+    let peak = cfg.param_count() * 4;
+    Ok(WriteStats {
+        bytes_written,
+        tensors,
+        peak_resident_bytes: peak,
+        resident_layers: cfg.layers,
+    })
+}
+
+/// Quantize `w` under `policy` while writing — one linear prepared at
+/// a time, in canonical order, so the output is byte-identical to
+/// [`write_quant_model`] of `QuantModel::build(w, policy, cal)`.
+pub fn write_model(
+    path: &Path,
+    w: &ModelWeights,
+    policy: &QuantPolicy,
+    cal: &CalibrationData,
+    health: Option<Json>,
+) -> anyhow::Result<WriteStats> {
+    ensure_serializable(policy)?;
+    policy.check_layers(w.config.layers)?;
+    let mut out = ArtifactWriter::create(path)?;
+    let prep = |li: usize, site: Site, weight: &Tensor<f32>| {
+        let _hs = SiteScope::enter(li, site);
+        policy.prep_linear(li, site, weight, cal.sample(&weight_cal_site(li, site)))
+    };
+    out.put_fp32("embed", w.embed.shape(), w.embed.data())?;
+    for (li, l) in w.layers.iter().enumerate() {
+        out.put_fp32(&format!("l{li}.attn_norm"), &[l.attn_norm.len()], &l.attn_norm)?;
+        let head = [(Site::Wq, &l.wq), (Site::Wk, &l.wk), (Site::Wv, &l.wv), (Site::Wo, &l.wo)];
+        for (site, t) in head {
+            out.put_linear(&format!("l{li}.{}", site.key()), &prep(li, site, t))?;
+        }
+        out.put_fp32(&format!("l{li}.ffn_norm"), &[l.ffn_norm.len()], &l.ffn_norm)?;
+        let ffn = [(Site::Gate, &l.w_gate), (Site::Up, &l.w_up), (Site::Down, &l.w_down)];
+        for (site, t) in ffn {
+            out.put_linear(&format!("l{li}.{}", site.key()), &prep(li, site, t))?;
+        }
+    }
+    out.put_fp32("final_norm", &[w.final_norm.len()], &w.final_norm)?;
+    out.put_linear("lm_head", &prep(w.config.layers, Site::LmHead, &w.lm_head))?;
+    let site_amax: BTreeMap<String, f32> = cal
+        .calibrator
+        .sites()
+        .map(|s| (s.to_string(), cal.calibrator.amax(s).unwrap()))
+        .collect();
+    let (bytes_written, tensors) = out.finish(&w.config, policy, &site_amax, health)?;
+    Ok(WriteStats {
+        bytes_written,
+        tensors,
+        peak_resident_bytes: w.config.param_count() * 4,
+        resident_layers: w.config.layers,
+    })
+}
+
+/// Sequential layer onloading: stream an FP `QRZC` checkpoint, prep
+/// and write each tensor as it arrives, and hold at most
+/// `resident_layers` layers of FP weights pending at any moment
+/// (0 = unbounded). The output is byte-identical to [`write_model`]
+/// over the same weights — only the residency profile differs.
+///
+/// `QRZC` files written by `save_model` are layer-contiguous in
+/// canonical order, so their pending set never exceeds one tensor;
+/// the budget exists for checkpoints produced out of order, where the
+/// pending map absorbs the permutation.
+pub fn write_from_checkpoint(
+    out_path: &Path,
+    ckpt: &Path,
+    config: &ModelConfig,
+    policy: &QuantPolicy,
+    cal: &CalibrationData,
+    health: Option<Json>,
+    resident_layers: usize,
+) -> anyhow::Result<WriteStats> {
+    ensure_serializable(policy)?;
+    policy.check_layers(config.layers)?;
+    let canon = canonical_tensors(config);
+    let specs = ModelWeights::param_specs(config);
+    debug_assert_eq!(canon.len(), specs.len());
+    let index: BTreeMap<&str, usize> =
+        specs.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
+    let mut writer = ArtifactWriter::create(out_path)?;
+    let mut pending: BTreeMap<usize, Tensor<f32>> = BTreeMap::new();
+    let mut cursor = 0usize;
+    let mut pending_bytes = 0usize;
+    let mut peak_bytes = 0usize;
+    let mut peak_layers = 0usize;
+    // Slot → layer index, for residency accounting (None for embed,
+    // final_norm, lm_head — they are not part of any layer budget).
+    let layer_of = |slot: usize| -> Option<usize> {
+        if (1..1 + config.layers * 9).contains(&slot) {
+            Some((slot - 1) / 9)
+        } else {
+            None
+        }
+    };
+    scan_named(ckpt, |name, t| {
+        let Some(&slot) = index.get(name) else {
+            anyhow::bail!(
+                "checkpoint tensor '{name}' is not part of a '{}' model",
+                config.name
+            );
+        };
+        anyhow::ensure!(
+            slot >= cursor && !pending.contains_key(&slot),
+            "checkpoint repeats tensor '{name}'"
+        );
+        anyhow::ensure!(
+            t.shape() == canon[slot].shape.as_slice(),
+            "tensor '{name}' has shape {:?}, expected {:?}",
+            t.shape(),
+            canon[slot].shape
+        );
+        pending_bytes += t.len() * 4;
+        pending.insert(slot, t);
+        let resident: std::collections::BTreeSet<usize> =
+            pending.keys().filter_map(|&s| layer_of(s)).collect();
+        if resident_layers > 0 && resident.len() > resident_layers {
+            anyhow::bail!(
+                "checkpoint order requires {} layers of FP weights resident, over the \
+                 --resident-layers budget of {resident_layers}; raise the budget or rewrite \
+                 the checkpoint in layer order",
+                resident.len()
+            );
+        }
+        peak_bytes = peak_bytes.max(pending_bytes);
+        peak_layers = peak_layers.max(resident.len());
+        while let Some(t) = pending.remove(&cursor) {
+            pending_bytes -= t.len() * 4;
+            let c = &canon[cursor];
+            match c.linear {
+                Some((li, site)) => {
+                    let pl = {
+                        let _hs = SiteScope::enter(li, site);
+                        policy.prep_linear(li, site, &t, cal.sample(&weight_cal_site(li, site)))
+                    };
+                    writer.put_linear(&c.name, &pl)?;
+                }
+                None => writer.put_fp32(&c.name, &c.shape, t.data())?,
+            }
+            cursor += 1;
+        }
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        cursor == canon.len(),
+        "checkpoint is missing tensors from '{}' onward ({} of {} written)",
+        specs[cursor].0,
+        cursor,
+        canon.len()
+    );
+    let site_amax: BTreeMap<String, f32> = cal
+        .calibrator
+        .sites()
+        .map(|s| (s.to_string(), cal.calibrator.amax(s).unwrap()))
+        .collect();
+    let (bytes_written, tensors) = writer.finish(config, policy, &site_amax, health)?;
+    Ok(WriteStats {
+        bytes_written,
+        tensors,
+        peak_resident_bytes: peak_bytes,
+        resident_layers: peak_layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::quantized::calibrate;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelWeights, CalibrationData) {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 5);
+        let mut rng = Rng::new(17);
+        let seqs: Vec<Vec<u32>> = (0..3)
+            .map(|_| (0..20).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+            .collect();
+        let cal = calibrate(&w, &seqs);
+        (w, cal)
+    }
+
+    #[test]
+    fn preamble_and_alignment_are_well_formed() {
+        let (w, cal) = setup();
+        let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+        let dir = std::env::temp_dir().join("qrazor_test_artifact_writer");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("well_formed.qrzk");
+        let qm = QuantModel::build(&w, policy, &cal);
+        let stats = write_quant_model(&path, &qm, None).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len() as u64, stats.bytes_written);
+        assert_eq!(&bytes[0..8], &MAGIC);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), VERSION);
+        let h_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let h_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+        let h_sum = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        assert_eq!(h_off % SECTION_ALIGN as usize, 0);
+        assert_eq!(h_off + h_len, bytes.len());
+        let header_bytes = &bytes[h_off..h_off + h_len];
+        assert_eq!(fnv1a64(header_bytes), h_sum);
+        let j = Json::parse(std::str::from_utf8(header_bytes).unwrap()).unwrap();
+        let header = Header::from_json(&j).unwrap();
+        assert_eq!(header.tensors.len(), stats.tensors);
+        assert_eq!(header.tensors.len(), 3 + w.config.layers * 9);
+        for t in &header.tensors {
+            let planes = match t {
+                TensorRecord::Fp32 { data, .. } => vec![*data],
+                TensorRecord::Packed4 { codes, flags, scales, .. } => {
+                    vec![*codes, *flags, *scales]
+                }
+            };
+            for p in planes {
+                assert_eq!(p.offset % SECTION_ALIGN, 0, "{}", t.name());
+                let lo = p.offset as usize;
+                let hi = lo + p.len as usize;
+                assert!(hi <= h_off, "{} plane overlaps header", t.name());
+                assert_eq!(section_sum(&bytes[lo..hi]), p.sum, "{}", t.name());
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scheme_policy_is_rejected_up_front() {
+        let (w, cal) = setup();
+        let policy: QuantPolicy = Box::new(crate::baselines::Fp16).into();
+        let dir = std::env::temp_dir().join("qrazor_test_artifact_writer");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rejected.qrzk");
+        let err = write_model(&path, &w, &policy, &cal, None).unwrap_err();
+        assert!(err.to_string().contains("razor-native"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

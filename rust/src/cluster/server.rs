@@ -175,6 +175,20 @@ impl ClusterServer {
         ClusterServer::spawn_with_draft(model, None, cfg)
     }
 
+    /// Open a packed checkpoint, load it zero-copy, and spawn the
+    /// cluster over it: every shard clones one `Arc` of the mapped
+    /// model, so the whole cluster serves from a single mapping with
+    /// zero re-quantization.
+    pub fn spawn_from_artifact(
+        path: &std::path::Path,
+        mode: crate::artifact::LoadMode,
+        cfg: ClusterConfig,
+    ) -> anyhow::Result<ClusterServer> {
+        let art = crate::artifact::Artifact::open(path)?;
+        let qm = art.load_model(mode)?;
+        Ok(ClusterServer::spawn(qm, cfg))
+    }
+
     /// Spawn with an optional speculative draft model: every shard
     /// engine gets the same `Arc`-shared drafter and runs
     /// draft→verify→accept rounds when `cfg.serve.spec_k > 0` — the

@@ -43,6 +43,20 @@ impl Server {
         Server::spawn_with_draft(model, None, config)
     }
 
+    /// Open a packed checkpoint, load it zero-copy (no
+    /// re-quantization), and spawn the engine over the mapped model.
+    /// The mapping lives inside the model's plane stores, so it stays
+    /// valid for the server's lifetime.
+    pub fn spawn_from_artifact(
+        path: &std::path::Path,
+        mode: crate::artifact::LoadMode,
+        config: ServeConfig,
+    ) -> anyhow::Result<Server> {
+        let art = crate::artifact::Artifact::open(path)?;
+        let qm = art.load_model(mode)?;
+        Ok(Server::spawn(qm, config))
+    }
+
     /// Spawn with an optional speculative draft model (the razored
     /// W4A4 form of the same weights); greedy sessions then decode in
     /// draft→verify→accept rounds when `config.spec_k > 0`, streaming

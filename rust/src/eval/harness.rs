@@ -225,6 +225,14 @@ impl Experiment {
         self.eval_model(&qm, &name)
     }
 
+    /// Run the full metric set over an already-built model — the
+    /// `eval --load` path, where the model came out of a packed
+    /// checkpoint instead of `QuantModel::build`.
+    pub fn eval_prebuilt(&self, qm: &QuantModel) -> SchemeResult {
+        let name = qm.name();
+        self.eval_model(qm, &name)
+    }
+
     /// Quantize under `policy` and run the full metric set plus the
     /// footprint probe (a short decode that measures the cache's
     /// effective bits as served, not as advertised).

@@ -39,6 +39,14 @@
 //!   text + JSON snapshot), scheduler step-stage timing, and the
 //!   per-request [`obs::TraceBuffer`] exporting Chrome trace_event
 //!   JSON for Perfetto.
+//! * [`artifact`] — packed SDR checkpoints: the `qrazor.ckpt.v1`
+//!   on-disk format (nibble/flag/scale planes per packed linear,
+//!   64-byte-aligned sections, schema-tagged header with the policy
+//!   manifest and per-section checksums), a streaming writer with
+//!   bounded-resident sequential onloading (`quantize --out
+//!   --resident-layers`), and an mmap-backed zero-copy loader
+//!   (`serve --load`) that rebuilds serving operands with zero
+//!   re-quantization.
 //! * [`net`] — the network front-end: a dependency-free HTTP/1.1
 //!   streaming server (SSE / JSON-lines completions, per-tenant
 //!   token-bucket admission, `/metrics` `/health` `/trace`) generic
@@ -49,6 +57,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
 
+pub mod artifact;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

@@ -5,6 +5,10 @@
 //! qrazor eval     --model nano --policy w4a4kv4:16  # tables' metric set
 //! qrazor eval     --policy "w4a4:16|w4a8:16"        # per-policy sweep
 //! qrazor quantize --policy "w4a4:16;layers=0:w4a8"  # policy manifest + footprint
+//! qrazor quantize --policy w4a4kv4:16 --out m.qrzk  # packed checkpoint (qrazor.ckpt.v1)
+//! qrazor quantize --out m.qrzk --resident-layers 2  # ...streamed, bounded FP residency
+//! qrazor serve    --load m.qrzk --requests 16       # serve it — zero re-quantization
+//! qrazor eval     --load m.qrzk                     # metric set over the mapped operands
 //! qrazor serve    --model nano --requests 16        # serving demo
 //! qrazor serve    --shards 4 --requests 64          # sharded cluster demo
 //! qrazor serve    --shards 2 --listen 127.0.0.1:8080  # HTTP streaming front-end
@@ -107,7 +111,32 @@ fn cli() -> Cli {
             Some(""),
             "quantize: write the policy manifest + health snapshot JSON to this path",
         )
+        .opt(
+            "out",
+            Some(""),
+            "quantize: write the packed checkpoint (qrazor.ckpt.v1) to this path",
+        )
+        .opt(
+            "resident-layers",
+            Some("0"),
+            "quantize: with --out, stream from the FP checkpoint keeping at most N layers of \
+             FP weights resident (0 = build the whole model in memory)",
+        )
+        .opt(
+            "load",
+            Some(""),
+            "serve/eval: load the model from a packed checkpoint instead of quantizing",
+        )
+        .opt(
+            "draft-load",
+            Some(""),
+            "serve: load the speculative draft model from a second packed checkpoint",
+        )
         .flag("quick", "use the quick evaluation scale")
+        .flag(
+            "cold",
+            "with --load, skip the checksum sweep; planes fault in on first touch",
+        )
         .flag(
             "health",
             "enable numeric-health counters (serve adds sampled drift probes + the advisor)",
@@ -193,6 +222,29 @@ fn main() -> anyhow::Result<()> {
         }
         Some("eval") => {
             let exp = build_experiment(&preset, scale, seed)?;
+            let load = args.get_str("load")?;
+            if !load.is_empty() {
+                // Evaluate a packed checkpoint as loaded — the metric
+                // set runs over the mapped operands, so this doubles as
+                // an end-to-end bit-identity check against the in-
+                // process build of the same policy.
+                let mode = if args.has("cold") {
+                    qrazor::artifact::LoadMode::Cold
+                } else {
+                    qrazor::artifact::LoadMode::Eager
+                };
+                let art = qrazor::artifact::Artifact::open(std::path::Path::new(&load))?;
+                let qm = art.load_model(mode)?;
+                anyhow::ensure!(
+                    qm.config == exp.config,
+                    "checkpoint holds a '{}' model but --model selects '{}'",
+                    qm.config.name,
+                    exp.config.name
+                );
+                let rows = vec![exp.eval_fp(), exp.eval_prebuilt(&qm)];
+                println!("{}", render_table(&format!("eval ({preset}, --load)"), &rows));
+                return Ok(());
+            }
             let spec = policy_arg(&args, "policy", "scheme")?;
             // '|'-separated sweep: every policy runs through the
             // identical pipeline, reported with its footprint.
@@ -230,42 +282,43 @@ fn main() -> anyhow::Result<()> {
             } else {
                 policy
             };
-            // Numeric health: count razoring events while the build
-            // compresses every weight site, then report them next to
-            // the plan table (and into --manifest-out).
+            // Numeric health: count razoring events while the build (or
+            // the streaming writer) compresses every weight site, then
+            // report them next to the plan table (and into
+            // --manifest-out / the packed checkpoint header).
             let manifest_out = args.get_str("manifest-out")?;
-            let health_on = args.has("health") || !manifest_out.is_empty();
+            let out = args.get_str("out")?;
+            let resident = args.get_usize("resident-layers")?;
+            if resident > 0 && out.is_empty() {
+                anyhow::bail!("--resident-layers bounds the streaming writer; it needs --out");
+            }
+            let health_on = args.has("health") || !manifest_out.is_empty() || !out.is_empty();
             if health_on {
                 qrazor::obs::health_reset();
                 qrazor::obs::set_health(true);
             }
-            let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
-            let (packed, unpacked) = qm.weight_operand_bytes();
-            println!("policy: {}", qm.policy.name());
-            println!("manifest: {}", qm.policy.to_json());
-            println!(
-                "weight operand stream: {packed} B packed / {unpacked} B unpacked ({:.2}x)",
-                packed as f64 / unpacked.max(1) as f64
-            );
-            for li in 0..exp.config.layers {
-                let fmt = |p: Option<qrazor::policy::SitePlan>| match p {
-                    None => "fp".to_string(),
-                    Some(p) => format!(
-                        "b{}t{}g{}",
-                        p.basis_bits,
-                        p.target_bits.map_or("-".into(), |t| t.to_string()),
-                        p.group
-                    ),
-                };
-                println!(
-                    "  layer {li:>2}: w={} act={} kv={}",
-                    fmt(qm.policy.resolve(li, qrazor::policy::Site::Wq)),
-                    fmt(qm.policy.resolve(li, qrazor::policy::Site::Act)),
-                    fmt(qm.policy.resolve(li, qrazor::policy::Site::KvCache)),
-                );
-            }
-            if health_on {
-                qrazor::obs::set_health(false);
+            println!("policy: {}", policy.name());
+            println!("manifest: {}", policy.to_json());
+            let print_plan = |policy: &QuantPolicy| {
+                for li in 0..exp.config.layers {
+                    let fmt = |p: Option<qrazor::policy::SitePlan>| match p {
+                        None => "fp".to_string(),
+                        Some(p) => format!(
+                            "b{}t{}g{}",
+                            p.basis_bits,
+                            p.target_bits.map_or("-".into(), |t| t.to_string()),
+                            p.group
+                        ),
+                    };
+                    println!(
+                        "  layer {li:>2}: w={} act={} kv={}",
+                        fmt(policy.resolve(li, qrazor::policy::Site::Wq)),
+                        fmt(policy.resolve(li, qrazor::policy::Site::Act)),
+                        fmt(policy.resolve(li, qrazor::policy::Site::KvCache)),
+                    );
+                }
+            };
+            let print_counters = || {
                 println!("razoring health (build-time, per site):");
                 println!(
                     "  {:<14} {:>9} {:>11} {:>9} {:>10} {:>8}",
@@ -282,53 +335,152 @@ fn main() -> anyhow::Result<()> {
                         c.clipped
                     );
                 }
+            };
+            if resident == 0 {
+                // In-memory path: build the whole model, then persist.
+                let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
+                let (packed, unpacked) = qm.weight_operand_bytes();
+                println!(
+                    "weight operand stream: {packed} B packed / {unpacked} B unpacked ({:.2}x)",
+                    packed as f64 / unpacked.max(1) as f64
+                );
+                print_plan(&qm.policy);
+                let health = if health_on {
+                    qrazor::obs::set_health(false);
+                    print_counters();
+                    let h = qrazor::obs::health_json(None);
+                    qrazor::obs::validate_health_json(&h)?;
+                    Some(h)
+                } else {
+                    None
+                };
+                if !out.is_empty() {
+                    let s = qrazor::artifact::write_quant_model(
+                        std::path::Path::new(&out),
+                        &qm,
+                        health.clone(),
+                    )?;
+                    println!(
+                        "packed checkpoint -> {out} ({} tensors, {} B)",
+                        s.tensors, s.bytes_written
+                    );
+                }
                 if !manifest_out.is_empty() {
-                    let health = qrazor::obs::health_json(None);
-                    qrazor::obs::validate_health_json(&health)?;
-                    let manifest = qrazor::util::json::Json::from_pairs(vec![
-                        ("policy", qm.policy.to_json()),
-                        ("health", health),
-                    ]);
+                    let manifest = qrazor::artifact::manifest_json(&qm.policy, health);
+                    std::fs::write(&manifest_out, manifest.to_string())?;
+                    println!("manifest -> {manifest_out}");
+                }
+            } else {
+                // Sequential onloading: persist the FP weights as a
+                // QRZC stream, then quantize tensor-by-tensor off that
+                // file with at most `resident` layers of FP weights in
+                // memory at once. No full QuantModel is ever built.
+                print_plan(&policy);
+                let out_p = std::path::PathBuf::from(&out);
+                let tmp = out_p.with_extension("fp.tmp");
+                qrazor::model::checkpoint::save_model(&tmp, &exp.weights)?;
+                let r = qrazor::artifact::write_from_checkpoint(
+                    &out_p,
+                    &tmp,
+                    &exp.config,
+                    &policy,
+                    &exp.cal,
+                    None,
+                    resident,
+                );
+                std::fs::remove_file(&tmp).ok();
+                let s = r?;
+                let health = if health_on {
+                    qrazor::obs::set_health(false);
+                    print_counters();
+                    let h = qrazor::obs::health_json(None);
+                    qrazor::obs::validate_health_json(&h)?;
+                    Some(h)
+                } else {
+                    None
+                };
+                println!(
+                    "packed checkpoint -> {out} ({} tensors, {} B; peak {} FP bytes \
+                     across {} resident layer(s))",
+                    s.tensors, s.bytes_written, s.peak_resident_bytes, s.resident_layers
+                );
+                if !manifest_out.is_empty() {
+                    let manifest = qrazor::artifact::manifest_json(&policy, health);
                     std::fs::write(&manifest_out, manifest.to_string())?;
                     println!("manifest -> {manifest_out}");
                 }
             }
         }
         Some("serve") => {
-            let exp = build_experiment(&preset, scale, seed)?;
-            let policy_str = policy_arg(&args, "policy", "scheme")?;
-            let policy = QuantPolicy::parse(&policy_str)?;
-            policy.check_layers(exp.config.layers)?;
             // Numeric health: --health (or --health-json) turns on the
             // razoring counters and arms the sampled drift probes; the
             // shutdown path then renders the drift report + advisor.
+            // Armed before the model exists either way: a build fills
+            // the counters, a --load leaves them at zero.
             let health_json_path = args.get_str("health-json")?;
             let health_on = args.has("health") || !health_json_path.is_empty();
             if health_on {
                 qrazor::obs::health_reset();
                 qrazor::obs::set_health(true);
             }
-            let report_policy = policy.clone();
-            let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
+            let spec_k = args.get_usize("spec")?;
+            let load = args.get_str("load")?;
+            let (qm, draft, policy_str, draft_str) = if !load.is_empty() {
+                // Packed-checkpoint serving: the model (and optional
+                // draft) comes out of the mapped file zero-copy, with
+                // zero re-quantization — no experiment, weights, or
+                // calibration are built at all.
+                let mode = if args.has("cold") {
+                    qrazor::artifact::LoadMode::Cold
+                } else {
+                    qrazor::artifact::LoadMode::Eager
+                };
+                let art = qrazor::artifact::Artifact::open(std::path::Path::new(&load))?;
+                let qm = art.load_model(mode)?;
+                let draft_load = args.get_str("draft-load")?;
+                let draft = if spec_k > 0 {
+                    if draft_load.is_empty() {
+                        anyhow::bail!(
+                            "speculative serving from a packed checkpoint needs --draft-load"
+                        );
+                    }
+                    let d = qrazor::artifact::Artifact::open(std::path::Path::new(&draft_load))?
+                        .load_model(mode)?;
+                    Some(std::sync::Arc::new(d))
+                } else {
+                    None
+                };
+                let policy_str = qm.policy.name();
+                let draft_str = draft.as_ref().map(|d| d.policy.name()).unwrap_or_default();
+                println!("loaded packed checkpoint {load} (policy {policy_str})");
+                (qm, draft, policy_str, draft_str)
+            } else {
+                let exp = build_experiment(&preset, scale, seed)?;
+                let policy_str = policy_arg(&args, "policy", "scheme")?;
+                let policy = QuantPolicy::parse(&policy_str)?;
+                policy.check_layers(exp.config.layers)?;
+                let qm = QuantModel::build(&exp.weights, policy, &exp.cal);
+                // Speculative serving: the draft/verify pair is two
+                // named policies over the same weights and calibration.
+                let draft_str = policy_arg(&args, "draft-policy", "draft-scheme")?;
+                let draft = if spec_k > 0 {
+                    let draft_policy = QuantPolicy::parse(&draft_str)?;
+                    draft_policy.check_layers(exp.config.layers)?;
+                    Some(std::sync::Arc::new(QuantModel::build(
+                        &exp.weights,
+                        draft_policy,
+                        &exp.cal,
+                    )))
+                } else {
+                    None
+                };
+                (qm, draft, policy_str, draft_str)
+            };
+            let report_policy = qm.policy.clone();
+            let vocab = qm.config.vocab;
             let n = args.get_usize("requests")?;
             let max_new = args.get_usize("max-new")?;
             let shards = args.get_usize("shards")?;
-            let spec_k = args.get_usize("spec")?;
-            // Speculative serving: the draft/verify pair is two named
-            // policies over the same weights and calibration — no
-            // second checkpoint involved.
-            let draft_str = policy_arg(&args, "draft-policy", "draft-scheme")?;
-            let draft = if spec_k > 0 {
-                let draft_policy = QuantPolicy::parse(&draft_str)?;
-                draft_policy.check_layers(exp.config.layers)?;
-                Some(std::sync::Arc::new(QuantModel::build(
-                    &exp.weights,
-                    draft_policy,
-                    &exp.cal,
-                )))
-            } else {
-                None
-            };
             let serve_cfg = ServeConfig {
                 spec_k,
                 policy: policy_str,
@@ -345,9 +497,8 @@ fn main() -> anyhow::Result<()> {
             let mut prompts = Vec::with_capacity(n);
             for _ in 0..n {
                 let len = 4 + rng.index(24);
-                let prompt: Vec<u32> = (0..len)
-                    .map(|_| rng.below(exp.config.vocab as u64) as u32)
-                    .collect();
+                let prompt: Vec<u32> =
+                    (0..len).map(|_| rng.below(vocab as u64) as u32).collect();
                 prompts.push(prompt);
             }
             let priority_name = args.get_str("priority")?;

@@ -63,6 +63,40 @@ pub fn load_named(path: &Path) -> anyhow::Result<BTreeMap<String, Tensor<f32>>> 
     Ok(out)
 }
 
+/// Stream named tensors to `f` one at a time, in file order, without
+/// materializing the whole checkpoint. [`ModelWeights::to_named`]
+/// writes layer-contiguously, so a scan sees each block's nine tensors
+/// together — the bounded-residency onloading path of the packed
+/// checkpoint writer (`crate::artifact`) relies on exactly that to
+/// keep at most a few layers of FP weights resident.
+pub fn scan_named(
+    path: &Path,
+    mut f: impl FnMut(&str, Tensor<f32>) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a QRazor checkpoint (bad magic)");
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    r.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    anyhow::ensure!(count < 100_000, "implausible tensor count {count}");
+    for _ in 0..count {
+        r.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(name_len < 4096, "implausible name length");
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let t = Tensor::read_from(&mut r)?;
+        f(&name, t)?;
+    }
+    Ok(())
+}
+
 /// Save a full model.
 pub fn save_model(path: &Path, w: &ModelWeights) -> anyhow::Result<()> {
     save_named(path, &w.to_named())
@@ -89,6 +123,32 @@ mod tests {
         assert_eq!(back.embed, w.embed);
         assert_eq!(back.layers[0].w_gate, w.layers[0].w_gate);
         assert_eq!(back.lm_head, w.lm_head);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scan_visits_every_tensor_in_file_order() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let w = ModelWeights::init_random(&cfg, 11);
+        let dir = std::env::temp_dir().join("qrazor_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scan.qrzc");
+        save_model(&path, &w).unwrap();
+        let expect = w.to_named();
+        let mut seen = Vec::new();
+        scan_named(&path, |name, t| {
+            seen.push((name.to_string(), t));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen.len(), expect.len());
+        for ((an, at), (bn, bt)) in seen.iter().zip(&expect) {
+            assert_eq!(an, bn);
+            assert_eq!(at, bt, "{an}");
+        }
+        // errors from the visitor propagate
+        let err = scan_named(&path, |_, _| anyhow::bail!("stop here")).unwrap_err();
+        assert!(err.to_string().contains("stop here"));
         std::fs::remove_file(&path).ok();
     }
 

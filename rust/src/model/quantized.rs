@@ -127,6 +127,26 @@ pub fn calibrate(w: &ModelWeights, sequences: &[Vec<u32>]) -> CalibrationData {
     cal
 }
 
+/// Calibration-site key whose recorded activations feed the weight
+/// solver for `(li, site)` — the shared-input mapping [`QuantModel::build`]
+/// uses (wq/wk/wv share the attention input, gate/up the FFN input).
+/// The artifact writer's streaming path re-preps with exactly this
+/// mapping so its output is byte-identical to a built model's.
+///
+/// Panics on non-weight sites — they have no weight to solve for.
+pub fn weight_cal_site(li: usize, site: Site) -> String {
+    match site {
+        Site::Wq | Site::Wk | Site::Wv => format!("l{li}.attn_in"),
+        Site::Wo => format!("l{li}.attn_out"),
+        Site::Gate | Site::Up => format!("l{li}.ffn_in"),
+        Site::Down => format!("l{li}.ffn_down_in"),
+        Site::LmHead => "lm_head_in".to_string(),
+        Site::Act | Site::Query | Site::KvCache => {
+            panic!("{site:?} is not a weight site")
+        }
+    }
+}
+
 /// One quantized transformer block's prepared linears.
 struct QuantLayer {
     attn_norm: Vec<f32>,
@@ -138,6 +158,43 @@ struct QuantLayer {
     w_gate: PreparedLinear,
     w_up: PreparedLinear,
     w_down: PreparedLinear,
+}
+
+/// One reconstructed block for [`QuantModel::from_parts`] — the same
+/// fields as the private `QuantLayer`, but public so the packed
+/// checkpoint loader (`crate::artifact`) can assemble a model without
+/// rerunning any quantization.
+pub struct LayerParts {
+    pub attn_norm: Vec<f32>,
+    pub wq: PreparedLinear,
+    pub wk: PreparedLinear,
+    pub wv: PreparedLinear,
+    pub wo: PreparedLinear,
+    pub ffn_norm: Vec<f32>,
+    pub w_gate: PreparedLinear,
+    pub w_up: PreparedLinear,
+    pub w_down: PreparedLinear,
+}
+
+/// Everything [`QuantModel::from_parts`] needs to assemble a servable
+/// model from a loaded checkpoint.
+pub struct ModelParts {
+    pub config: ModelConfig,
+    pub policy: QuantPolicy,
+    pub embed: Tensor<f32>,
+    pub layers: Vec<LayerParts>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: PreparedLinear,
+    pub site_amax: BTreeMap<String, f32>,
+}
+
+/// Borrowed view of one block's tensors in canonical artifact order,
+/// for the checkpoint writer. `linears` runs wq, wk, wv, wo, gate, up,
+/// down — the [`Site::WEIGHTS`] order minus the head.
+pub(crate) struct LayerView<'a> {
+    pub attn_norm: &'a [f32],
+    pub ffn_norm: &'a [f32],
+    pub linears: [(Site, &'a PreparedLinear); 7],
 }
 
 /// A model quantized under a [`QuantPolicy`]: prepared weights + static
@@ -177,11 +234,11 @@ impl QuantModel {
         if let Err(e) = policy.check_layers(w.config.layers) {
             panic!("{e}");
         }
-        let prep = |li: usize, site: Site, weight: &Tensor<f32>, cal_site: &str| {
+        let prep = |li: usize, site: Site, weight: &Tensor<f32>| {
             // Attribute weight-razoring health counters to this
             // (layer, site) while the solver + compressor run.
             let _hs = crate::obs::health::SiteScope::enter(li, site);
-            policy.prep_linear(li, site, weight, cal.sample(cal_site))
+            policy.prep_linear(li, site, weight, cal.sample(&weight_cal_site(li, site)))
         };
         let layers = w
             .layers
@@ -189,14 +246,14 @@ impl QuantModel {
             .enumerate()
             .map(|(li, l)| QuantLayer {
                 attn_norm: l.attn_norm.clone(),
-                wq: prep(li, Site::Wq, &l.wq, &format!("l{li}.attn_in")),
-                wk: prep(li, Site::Wk, &l.wk, &format!("l{li}.attn_in")),
-                wv: prep(li, Site::Wv, &l.wv, &format!("l{li}.attn_in")),
-                wo: prep(li, Site::Wo, &l.wo, &format!("l{li}.attn_out")),
+                wq: prep(li, Site::Wq, &l.wq),
+                wk: prep(li, Site::Wk, &l.wk),
+                wv: prep(li, Site::Wv, &l.wv),
+                wo: prep(li, Site::Wo, &l.wo),
                 ffn_norm: l.ffn_norm.clone(),
-                w_gate: prep(li, Site::Gate, &l.w_gate, &format!("l{li}.ffn_in")),
-                w_up: prep(li, Site::Up, &l.w_up, &format!("l{li}.ffn_in")),
-                w_down: prep(li, Site::Down, &l.w_down, &format!("l{li}.ffn_down_in")),
+                w_gate: prep(li, Site::Gate, &l.w_gate),
+                w_up: prep(li, Site::Up, &l.w_up),
+                w_down: prep(li, Site::Down, &l.w_down),
             })
             .collect();
         let site_amax = cal
@@ -206,7 +263,7 @@ impl QuantModel {
             .collect();
         QuantModel {
             config: w.config.clone(),
-            lm_head: prep(w.config.layers, Site::LmHead, &w.lm_head, "lm_head_in"),
+            lm_head: prep(w.config.layers, Site::LmHead, &w.lm_head),
             embed: w.embed.clone(),
             layers,
             final_norm: w.final_norm.clone(),
@@ -214,6 +271,81 @@ impl QuantModel {
             site_amax,
             use_packed: true,
         }
+    }
+
+    /// Assemble a model from externally constructed parts — the packed
+    /// checkpoint loader's entry point (`crate::artifact`). The parts
+    /// carry prepared linears whose planes may be zero-copy windows
+    /// into a shared mapping; no quantization runs here.
+    ///
+    /// The result always has `use_packed: true`: a loaded packed linear
+    /// carries a placeholder empty weight tensor (the artifact stores
+    /// only the packed planes), so the staged fake-quant path has
+    /// nothing to run against and flipping `use_packed` off on a loaded
+    /// model fails loudly instead of silently degrading.
+    pub fn from_parts(p: ModelParts) -> QuantModel {
+        assert_eq!(
+            p.layers.len(),
+            p.config.layers,
+            "parts carry {} layers, config says {}",
+            p.layers.len(),
+            p.config.layers
+        );
+        QuantModel {
+            config: p.config,
+            policy: p.policy,
+            embed: p.embed,
+            layers: p
+                .layers
+                .into_iter()
+                .map(|l| QuantLayer {
+                    attn_norm: l.attn_norm,
+                    wq: l.wq,
+                    wk: l.wk,
+                    wv: l.wv,
+                    wo: l.wo,
+                    ffn_norm: l.ffn_norm,
+                    w_gate: l.w_gate,
+                    w_up: l.w_up,
+                    w_down: l.w_down,
+                })
+                .collect(),
+            final_norm: p.final_norm,
+            lm_head: p.lm_head,
+            site_amax: p.site_amax,
+            use_packed: true,
+        }
+    }
+
+    /// Borrowed view of block `li`'s tensors in canonical artifact
+    /// order — what the checkpoint writer serializes.
+    pub(crate) fn layer_view(&self, li: usize) -> LayerView<'_> {
+        let l = &self.layers[li];
+        LayerView {
+            attn_norm: &l.attn_norm,
+            ffn_norm: &l.ffn_norm,
+            linears: [
+                (Site::Wq, &l.wq),
+                (Site::Wk, &l.wk),
+                (Site::Wv, &l.wv),
+                (Site::Wo, &l.wo),
+                (Site::Gate, &l.w_gate),
+                (Site::Up, &l.w_up),
+                (Site::Down, &l.w_down),
+            ],
+        }
+    }
+
+    pub(crate) fn embed_view(&self) -> &Tensor<f32> {
+        &self.embed
+    }
+
+    pub(crate) fn final_norm_view(&self) -> &[f32] {
+        &self.final_norm
+    }
+
+    pub(crate) fn lm_head_view(&self) -> &PreparedLinear {
+        &self.lm_head
     }
 
     /// Weight operand bytes one full forward streams through its GEMMs:

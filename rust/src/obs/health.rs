@@ -328,6 +328,14 @@ pub fn site_counters(layer: usize, site: Site) -> SiteCounters {
     read_slot(1 + layer.min(MAX_LAYERS - 1) * NSITE_KINDS + site_index(site))
 }
 
+/// Total razored groups across every `(layer, site)` slot since the
+/// last [`health_reset`]. Zero means no `compress_group` ran at all —
+/// the packed checkpoint loader's "no re-quantization" guarantee is
+/// asserted against exactly this.
+pub fn razored_groups_total() -> u64 {
+    counters_snapshot().iter().map(|c| c.groups).sum()
+}
+
 /// Reset every global health accumulator (bench section boundaries,
 /// test isolation). Probe aggregates and scale-miss logs clear too.
 pub fn health_reset() {

@@ -55,7 +55,8 @@ pub mod trace;
 
 pub use health::{
     counters_snapshot, export_counters, health_enabled, health_json, health_reset,
-    note_scale_miss, probe_enabled, set_health, set_probe, take_probe_samples,
+    note_scale_miss, probe_enabled, razored_groups_total, set_health, set_probe,
+    take_probe_samples,
     validate_health_json, HealthConfig, HealthStats, ProbeSample, SiteCounters, SiteHealth,
     SiteScope, HEALTH_SCHEMA,
 };

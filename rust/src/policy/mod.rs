@@ -579,13 +579,39 @@ impl QuantPolicy {
         }
     }
 
+    /// Does the prepared linear at `(layer, site)` carry a packed SDR
+    /// weight operand, and with which `(weight_spec, act_spec)`? The
+    /// single gate [`QuantPolicy::prep_linear`] and the packed
+    /// checkpoint reader (`crate::artifact`) share: a weight razoring
+    /// to 4 bits paired with an activation razoring to 4 or 8 bits
+    /// (the paper's W4A4 / W4A8 scenarios). `None` for uniform scheme
+    /// backends and for unpacked sites.
+    pub fn packs_weight(&self, layer: usize, site: Site) -> Option<(SdrSpec, SdrSpec)> {
+        let r = self.razor()?;
+        let wp = r.resolve(layer, site)?;
+        let ap = r.act_plan(layer, site)?;
+        (wp.target_bits == Some(4)
+            && wp.razors()
+            && matches!(ap.target_bits, Some(4) | Some(8))
+            && ap.razors())
+        .then(|| (wp.spec(), ap.spec()))
+    }
+
+    /// Can this policy be embedded in — and reconstructed from — a
+    /// packed checkpoint manifest? True exactly for razor-native
+    /// policies; uniform scheme backends serialize as an opaque name
+    /// ([`QuantPolicy::to_json`]) and cannot round-trip.
+    pub fn artifact_serializable(&self) -> bool {
+        matches!(self.backend, Backend::Razor(_))
+    }
+
     // ---- model-facing behavior ------------------------------------------
 
     /// Prepare one linear at `(layer, site)`. Razor backends attach the
     /// packed nibble weight whenever the weight razors to 4 bits and
     /// the activation razors to 4 or 8 (the paper's W4A4 / W4A8
     /// scenarios — A4 pairs with the nibble GEMM, A8 with the
-    /// byte-coded one).
+    /// byte-coded one; the gate is [`QuantPolicy::packs_weight`]).
     pub fn prep_linear(
         &self,
         layer: usize,
@@ -598,30 +624,18 @@ impl QuantPolicy {
             Backend::Uniform(s) => s.prep_linear(w, calib),
             Backend::Razor(r) => {
                 let wp = r.resolve(layer, site);
-                let ap = r.act_plan(layer, site);
                 let weight = match wp {
                     None => w.clone(),
                     Some(p) if !p.razors() => fake_quant(w, p.basis_bits, Granularity::PerChannel),
                     Some(p) => qrazor_fake_quant(w, p.spec(), Granularity::PerChannel),
                 };
-                let packed = match (wp, ap) {
-                    (Some(wp), Some(ap))
-                        if wp.target_bits == Some(4)
-                            && wp.razors()
-                            && matches!(ap.target_bits, Some(4) | Some(8))
-                            && ap.razors() =>
-                    {
-                        let q = QuantTensor::quantize(w, wp.basis_bits, Granularity::PerChannel);
-                        Some(PackedWeight {
-                            weight: PackedSdrMatrix::from_matrix(&SdrMatrix::compress(
-                                wp.spec(),
-                                &q,
-                            )),
-                            act_spec: ap.spec(),
-                        })
+                let packed = self.packs_weight(layer, site).map(|(wspec, act_spec)| {
+                    let q = QuantTensor::quantize(w, wspec.base_bits, Granularity::PerChannel);
+                    PackedWeight {
+                        weight: PackedSdrMatrix::from_matrix(&SdrMatrix::compress(wspec, &q)),
+                        act_spec,
                     }
-                    _ => None,
-                };
+                });
                 PreparedLinear { weight, act_override: None, packed }
             }
         }

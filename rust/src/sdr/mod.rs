@@ -19,6 +19,9 @@
 //!   [`razor::SdrMatrix`]).
 //! * [`packed`] — nibble-packed storage + flag store with exact memory
 //!   accounting (the effective-bits claims of Tables 2/4).
+//! * [`store`] — the byte backing of those planes: owned heap buffers
+//!   for in-process quantization, or zero-copy windows into a shared
+//!   memory-mapped checkpoint (`crate::artifact`).
 //! * [`gemm`] — decompression-free integer GEMM (Fig. 3(b)) and the
 //!   decompress-then-multiply reference (Fig. 3(a)) it is bit-equal to.
 
@@ -26,5 +29,7 @@ pub mod gemm;
 pub mod packed;
 pub mod razor;
 pub mod signmag;
+pub mod store;
 
 pub use razor::{SdrMatrix, SdrSpec, SdrVector};
+pub use store::PlaneStore;

@@ -10,6 +10,7 @@
 
 use super::razor::{SdrCode, SdrMatrix, SdrSpec};
 use super::signmag::SignMag;
+use super::store::PlaneStore;
 
 /// Signed value of a packed `sign | 3-bit magnitude` nibble, indexed by
 /// the raw 4-bit field — the lookup the packed GEMM/attention kernels
@@ -191,13 +192,18 @@ pub fn unpack_flags(bytes: &[u8], n: usize) -> Vec<u8> {
 /// At-rest packed SDR matrix. Only valid for `target_bits == 4`
 /// (the W4/A4/KV4 formats); 8-bit-target SDR (the A8 ablation) stores
 /// codes as plain bytes via [`PackedSdrMatrix::bytes_per_value`] logic.
+///
+/// The nibble and flag planes live in a [`PlaneStore`]: owned bytes
+/// when quantized in-process, zero-copy windows into a shared mapped
+/// checkpoint when loaded through `crate::artifact`. Either way the
+/// planes deref to `&[u8]`, so every consumer is backing-agnostic.
 #[derive(Clone, Debug)]
 pub struct PackedSdrMatrix {
     pub spec: SdrSpec,
     pub rows: usize,
     pub cols: usize,
-    pub nibbles: Vec<u8>,
-    pub flag_bytes: Vec<u8>,
+    pub nibbles: PlaneStore,
+    pub flag_bytes: PlaneStore,
     pub scales: Vec<f32>,
 }
 
@@ -208,8 +214,8 @@ impl PackedSdrMatrix {
             spec: m.spec,
             rows: m.rows,
             cols: m.cols,
-            nibbles: pack_nibbles(&m.codes),
-            flag_bytes: pack_flags(&m.flags),
+            nibbles: pack_nibbles(&m.codes).into(),
+            flag_bytes: pack_flags(&m.flags).into(),
             scales: m.scales.clone(),
         }
     }
@@ -263,15 +269,15 @@ pub struct ByteSdrMatrix {
     pub rows: usize,
     pub cols: usize,
     /// Sign-magnitude code bytes, row-major, one per element.
-    pub codes: Vec<u8>,
-    pub flag_bytes: Vec<u8>,
+    pub codes: PlaneStore,
+    pub flag_bytes: PlaneStore,
     pub scales: Vec<f32>,
 }
 
 impl ByteSdrMatrix {
     pub fn from_matrix(m: &SdrMatrix) -> ByteSdrMatrix {
         assert_eq!(m.spec.target_bits, 8, "byte coding is an 8-bit format");
-        let codes = m
+        let codes: Vec<u8> = m
             .codes
             .iter()
             .map(|c| {
@@ -283,8 +289,8 @@ impl ByteSdrMatrix {
             spec: m.spec,
             rows: m.rows,
             cols: m.cols,
-            codes,
-            flag_bytes: pack_flags(&m.flags),
+            codes: codes.into(),
+            flag_bytes: pack_flags(&m.flags).into(),
             scales: m.scales.clone(),
         }
     }

@@ -1,0 +1,158 @@
+//! Backing storage for packed SDR planes: owned heap bytes or a window
+//! into a shared memory-mapped checkpoint.
+//!
+//! [`PlaneStore`] is what [`super::packed::PackedSdrMatrix`] and
+//! [`super::packed::ByteSdrMatrix`] hold their nibble/code/flag planes
+//! in. In-process quantization produces `Owned` planes (exactly the old
+//! `Vec<u8>` behavior — `From<Vec<u8>>` keeps every construction site a
+//! one-word change), while the artifact loader (`crate::artifact`)
+//! produces `Mapped` windows into one `Arc<Mmap>` per checkpoint file:
+//! zero-copy, demand-paged by the OS, and shared across every linear,
+//! shard, and clone. All consumers read through `Deref<Target = [u8]>`,
+//! so the GEMM/attention kernels are byte-identical over either
+//! backing.
+
+use std::sync::Arc;
+
+use crate::util::mmap::Mmap;
+
+#[derive(Clone)]
+enum Backing {
+    Owned(Vec<u8>),
+    Mapped { map: Arc<Mmap>, offset: usize, len: usize },
+}
+
+/// An immutable byte plane: owned, or a window of a shared mapping.
+/// Clone is cheap for mapped planes (one `Arc` bump) and a deep copy
+/// for owned ones — matching the pre-refactor `Vec<u8>` semantics.
+#[derive(Clone)]
+pub struct PlaneStore {
+    backing: Backing,
+}
+
+impl PlaneStore {
+    /// A window `[offset, offset + len)` of a shared mapping. Bounds
+    /// are checked once here so `as_slice` never can't.
+    pub fn mapped(map: Arc<Mmap>, offset: usize, len: usize) -> PlaneStore {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= map.len()),
+            "plane window {offset}+{len} exceeds mapping of {} bytes",
+            map.len()
+        );
+        PlaneStore { backing: Backing::Mapped { map, offset, len } }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Owned(v) => v,
+            Backing::Mapped { map, offset, len } => &map.as_slice()[*offset..*offset + *len],
+        }
+    }
+
+    /// Is this plane a window into a mapped checkpoint (true) or an
+    /// owned heap buffer (false)?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, Backing::Mapped { .. })
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            Backing::Owned(v) => v.len(),
+            Backing::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out to an owned buffer (mapped planes detach from the map).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl From<Vec<u8>> for PlaneStore {
+    fn from(v: Vec<u8>) -> PlaneStore {
+        PlaneStore { backing: Backing::Owned(v) }
+    }
+}
+
+impl std::ops::Deref for PlaneStore {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a PlaneStore {
+    type Item = &'a u8;
+    type IntoIter = std::slice::Iter<'a, u8>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl PartialEq for PlaneStore {
+    fn eq(&self, other: &PlaneStore) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for PlaneStore {}
+
+impl std::fmt::Debug for PlaneStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "owned" };
+        write!(f, "PlaneStore({kind}, {} bytes)", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_roundtrip_and_deref() {
+        let p: PlaneStore = vec![1u8, 2, 3].into();
+        assert!(!p.is_mapped());
+        assert_eq!(p.len(), 3);
+        assert_eq!(&p[..], &[1, 2, 3]);
+        assert_eq!(p.iter().copied().sum::<u8>(), 6);
+        assert_eq!(p.to_vec(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn mapped_window_reads_through_shared_map() {
+        let dir = std::env::temp_dir().join("qrazor_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("window_{}", std::process::id()));
+        std::fs::write(&path, (0..64u8).collect::<Vec<u8>>()).unwrap();
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        let a = PlaneStore::mapped(Arc::clone(&map), 8, 4);
+        let b = PlaneStore::mapped(Arc::clone(&map), 12, 4);
+        assert!(a.is_mapped());
+        assert_eq!(&a[..], &[8, 9, 10, 11]);
+        assert_eq!(&b[..], &[12, 13, 14, 15]);
+        // clones share the same mapping, not copies of it
+        let c = a.clone();
+        assert_eq!(Arc::strong_count(&map), 4);
+        assert_eq!(&c[..], &a[..]);
+        // equality is by bytes, across backings
+        let owned: PlaneStore = vec![8u8, 9, 10, 11].into();
+        assert_eq!(a, owned);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds mapping")]
+    fn out_of_bounds_window_is_rejected_at_construction() {
+        let dir = std::env::temp_dir().join("qrazor_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("oob_{}", std::process::id()));
+        std::fs::write(&path, vec![0u8; 16]).unwrap();
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+        PlaneStore::mapped(map, 10, 10);
+    }
+}

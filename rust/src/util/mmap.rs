@@ -1,0 +1,190 @@
+//! Read-only memory mapping with zero dependencies.
+//!
+//! The packed-checkpoint loader (`crate::artifact`) wants weight planes
+//! backed by the page cache instead of heap copies, so cluster spawn is
+//! O(mmap) and cold layers can be demand-paged. The vendored dependency
+//! set has no `memmap2`, so on Unix this calls `mmap`/`munmap` through
+//! a two-symbol `extern "C"` block (libc is already linked by `std`);
+//! elsewhere it degrades to an owned read of the whole file — same API,
+//! no zero-copy.
+
+use std::fs::File;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // POSIX values shared by Linux and the BSD family (incl. macOS).
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// An immutable byte view of a file: a real `MAP_PRIVATE` mapping on
+/// Unix, an owned buffer elsewhere. Dropping unmaps (or frees).
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut std::os::raw::c_void,
+    #[cfg(unix)]
+    len: usize,
+    #[cfg(not(unix))]
+    data: Vec<u8>,
+}
+
+// The mapping is read-only and owned until drop: shared references to
+// its bytes are as safe to send/share as `&[u8]` into a `Vec`.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. A zero-length file maps to an empty view.
+    pub fn open(path: &Path) -> std::io::Result<Mmap> {
+        let file = File::open(path)?;
+        let len = usize::try_from(file.metadata()?.len()).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "file too large to map on this platform",
+            )
+        })?;
+        Self::from_file(&file, len)
+    }
+
+    #[cfg(unix)]
+    fn from_file(file: &File, len: usize) -> std::io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1, not null.
+        if ptr as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    fn from_file(file: &File, len: usize) -> std::io::Result<Mmap> {
+        use std::io::Read;
+        let mut data = Vec::with_capacity(len);
+        let mut f = file;
+        f.read_to_end(&mut data)?;
+        Ok(Mmap { data })
+    }
+
+    #[cfg(unix)]
+    pub fn as_slice(&self) -> &[u8] {
+        if self.ptr.is_null() {
+            &[]
+        } else {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            unsafe {
+                sys::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qrazor_test_mmap");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp("contents");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(&m[..], &payload[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp("empty");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(Mmap::open(Path::new("/definitely/not/here.bin")).is_err());
+    }
+
+    #[test]
+    fn mapping_outlives_the_open_handle() {
+        // The fd is closed when `open` returns; the mapping must still
+        // be readable (POSIX keeps the mapping alive past close()).
+        let path = tmp("outlives");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.iter().all(|&b| b == 7));
+        std::fs::remove_file(&path).ok();
+        assert!(m.iter().all(|&b| b == 7));
+    }
+}

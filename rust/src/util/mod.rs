@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod mmap;
 pub mod quickcheck;
 pub mod rng;
 pub mod stats;

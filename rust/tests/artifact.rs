@@ -1,0 +1,479 @@
+//! Acceptance suite for the packed SDR checkpoint format
+//! (`qrazor.ckpt.v1`): round-trip **bit-identity** across the policy
+//! DSL presets (logits and greedy token streams, eager and cold
+//! loads), byte-equality of the three writer entry points, the
+//! corrupt-artifact error taxonomy, serving identity through the
+//! single engine / a 2-shard cluster / the speculative draft-verify
+//! pair loaded from two artifacts, zero re-quantization on load, and
+//! the streaming writer's bounded-residency contract.
+//!
+//! The health flags and razoring counters are process-global and the
+//! zero-requantization test reads them, so every test here serializes
+//! on one lock — any concurrent build would pollute the counters.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use qrazor::artifact::layout::fnv1a64;
+use qrazor::artifact::{
+    manifest_json, write_from_checkpoint, write_model, write_quant_model, Artifact,
+    ArtifactError, LoadMode,
+};
+use qrazor::cluster::{ClusterConfig, ClusterServer};
+use qrazor::config::{ModelConfig, ServeConfig};
+use qrazor::coordinator::{collect_sessions, Sampling, ServeApi, Server};
+use qrazor::model::quantized::{calibrate, CalibrationData, QuantModel};
+use qrazor::model::ModelWeights;
+use qrazor::policy::{QuantPolicy, Site};
+use qrazor::util::json::Json;
+use qrazor::util::rng::Rng;
+
+/// Every test flips or reads process-global state (health counters) or
+/// hammers the thread pool; serialize the whole suite.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(seed: u64) -> (ModelWeights, CalibrationData, Vec<Vec<u32>>) {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let w = ModelWeights::init_random(&cfg, seed);
+    let mut rng = Rng::new(seed ^ 0x51D7);
+    let seqs: Vec<Vec<u32>> = (0..3)
+        .map(|_| (0..20).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let cal = calibrate(&w, &seqs);
+    (w, cal, seqs)
+}
+
+fn tdir() -> PathBuf {
+    let d = std::env::temp_dir().join("qrazor_artifact_suite");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The DSL presets the round-trip must hold for: uniform A4/A8 pairs
+/// with and without KV4, a non-default group, a mixed per-layer
+/// escalation, a per-site weight pin (down/wo stay at the 8-bit basis,
+/// so the table mixes packed and fp32 records), and fp16.
+const PRESETS: [&str; 8] = [
+    "fp16",
+    "w4a4:16",
+    "w4a4kv4:16",
+    "w4a8:16",
+    "w4a8kv4:16",
+    "w4a4kv4:32",
+    "w4a4:16;layers=0:w4a8;kv=4:16",
+    "w4a4kv4:16;w=down,wo:8",
+];
+
+fn argmax(v: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Greedy decode through the incremental cache — prefill one chunk,
+/// then token-by-token, exactly what the serving engine does.
+fn greedy(qm: &QuantModel, prompt: &[u32], n: usize) -> Vec<u32> {
+    let group = qm.policy.resolve(0, Site::KvCache).map(|p| p.group).unwrap_or(16);
+    let mut cache = qm.new_cache(group);
+    let logits = qm.forward_chunk(prompt, 0, &mut cache);
+    let mut last = logits.row(prompt.len() - 1).to_vec();
+    let mut pos = prompt.len();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let tok = argmax(&last);
+        out.push(tok);
+        last = qm.forward_token(tok, pos, &mut cache);
+        pos += 1;
+    }
+    out
+}
+
+fn greedy_workload(api: &impl ServeApi, vocab: u64, n: usize) -> Vec<(u64, Vec<u32>)> {
+    let mut rng = Rng::new(77);
+    let mut ids = Vec::new();
+    for _ in 0..n {
+        let len = 3 + rng.index(6);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.below(vocab) as u32).collect();
+        ids.push(api.submit(prompt, 6, Sampling::Greedy).unwrap());
+    }
+    let sessions = collect_sessions(api, n).unwrap();
+    ids.iter()
+        .map(|id| (id.0, sessions[id].response.as_ref().unwrap().tokens.clone()))
+        .collect()
+}
+
+// ---------------------------------------------------------------- //
+// round trip
+// ---------------------------------------------------------------- //
+
+#[test]
+fn round_trip_is_bit_identical_across_presets() {
+    let _g = lock();
+    let (w, cal, seqs) = setup(101);
+    let tokens = &seqs[0][..10];
+    for (i, dsl) in PRESETS.iter().enumerate() {
+        let qm = QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal);
+        let want_logits = qm.forward_full(tokens);
+        let want_stream = greedy(&qm, &seqs[1][..5], 6);
+        let path = tdir().join(format!("rt_{i}.qrzk"));
+        write_quant_model(&path, &qm, None).unwrap();
+        let art = Artifact::open(&path).unwrap();
+        art.verify().unwrap();
+        assert_eq!(art.header().policy.name(), qm.policy.name(), "{dsl}");
+        for mode in [LoadMode::Eager, LoadMode::Cold] {
+            let loaded = art.load_model(mode).unwrap();
+            assert_eq!(loaded.config, qm.config, "{dsl}");
+            assert_eq!(loaded.site_amax, qm.site_amax, "{dsl}: static scales must round-trip");
+            assert_eq!(
+                loaded.forward_full(tokens).data(),
+                want_logits.data(),
+                "{dsl} ({mode:?}): loaded logits diverged from the in-process build"
+            );
+            assert_eq!(
+                greedy(&loaded, &seqs[1][..5], 6),
+                want_stream,
+                "{dsl} ({mode:?}): greedy stream diverged"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+// ---------------------------------------------------------------- //
+// writers agree
+// ---------------------------------------------------------------- //
+
+#[test]
+fn all_three_writers_produce_identical_bytes() {
+    let _g = lock();
+    let (w, cal, _) = setup(157);
+    let policy = QuantPolicy::parse("w4a4:16;layers=0:w4a8;kv=4:16").unwrap();
+    let qm = QuantModel::build(&w, policy.clone(), &cal);
+    let a = tdir().join("wr_inmem.qrzk");
+    let b = tdir().join("wr_model.qrzk");
+    let c = tdir().join("wr_stream.qrzk");
+    let ckpt = tdir().join("wr_fp.qrzc");
+    write_quant_model(&a, &qm, None).unwrap();
+    write_model(&b, &w, &policy, &cal, None).unwrap();
+    qrazor::model::checkpoint::save_model(&ckpt, &w).unwrap();
+    let stats = write_from_checkpoint(&c, &ckpt, &w.config, &policy, &cal, None, 1).unwrap();
+    let bytes = std::fs::read(&a).unwrap();
+    assert_eq!(bytes, std::fs::read(&b).unwrap(), "write_model diverged from write_quant_model");
+    assert_eq!(bytes, std::fs::read(&c).unwrap(), "streaming writer diverged");
+    // a layer-ordered checkpoint streams one layer at a time, far
+    // below the whole FP model
+    assert_eq!(stats.resident_layers, 1);
+    let full = w.config.param_count() * 4;
+    assert!(
+        stats.peak_resident_bytes < full / 2,
+        "peak {} must stay well under the full FP bytes {full}",
+        stats.peak_resident_bytes
+    );
+    for p in [&a, &b, &c, &ckpt] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn streaming_writer_enforces_the_resident_budget() {
+    let _g = lock();
+    let (w, cal, _) = setup(163);
+    let policy = QuantPolicy::parse("w4a4kv4:16").unwrap();
+    // Interleave the checkpoint: layer 0's wq arrives dead last, so
+    // every later tensor must stay resident until then — budget 1
+    // cannot hold that, budget 2 (all of nano's layers) can.
+    let mut named = w.to_named();
+    let i0 = named.iter().position(|(n, _)| n == "layers.0.wq").unwrap();
+    let moved = named.remove(i0);
+    named.push(moved);
+    let ckpt = tdir().join("ooo_fp.qrzc");
+    qrazor::model::checkpoint::save_named(&ckpt, &named).unwrap();
+    let out = tdir().join("ooo.qrzk");
+    let err = write_from_checkpoint(&out, &ckpt, &w.config, &policy, &cal, None, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("resident-layers"), "unexpected error: {err}");
+    let stats = write_from_checkpoint(&out, &ckpt, &w.config, &policy, &cal, None, 2).unwrap();
+    assert_eq!(stats.resident_layers, 2);
+    // the artifact is canonical regardless of arrival order
+    let reference = tdir().join("ooo_ref.qrzk");
+    write_model(&reference, &w, &policy, &cal, None).unwrap();
+    assert_eq!(std::fs::read(&out).unwrap(), std::fs::read(&reference).unwrap());
+    for p in [&ckpt, &out, &reference] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+// ---------------------------------------------------------------- //
+// one manifest builder
+// ---------------------------------------------------------------- //
+
+#[test]
+fn manifest_builder_reproduces_legacy_cli_bytes() {
+    let _g = lock();
+    let policy = QuantPolicy::parse("w4a4:16;layers=0:w4a8;kv=4:16").unwrap();
+    qrazor::obs::health_reset();
+    let health = qrazor::obs::health_json(None);
+    // The pre-artifact CLI built `quantize --manifest-out` exactly so;
+    // the shared builder must reproduce it byte for byte.
+    let legacy =
+        Json::from_pairs(vec![("policy", policy.to_json()), ("health", health.clone())]);
+    assert_eq!(manifest_json(&policy, Some(health)).to_string(), legacy.to_string());
+    let bare = manifest_json(&policy, None);
+    assert_eq!(bare.get("policy").unwrap().to_string(), policy.to_json().to_string());
+    assert!(bare.get("health").is_none());
+}
+
+// ---------------------------------------------------------------- //
+// corruption taxonomy
+// ---------------------------------------------------------------- //
+
+fn header_span(bytes: &[u8]) -> (usize, usize) {
+    let off = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let len = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    (off, len)
+}
+
+/// Rewrite the trailing header JSON through `f`, re-patching the
+/// preamble's length and checksum — so only the *content* disagrees,
+/// never the framing.
+fn rewrite_header(path: &Path, f: &dyn Fn(&str) -> String) {
+    let mut bytes = std::fs::read(path).unwrap();
+    let (off, len) = header_span(&bytes);
+    let new = f(std::str::from_utf8(&bytes[off..off + len]).unwrap());
+    bytes.truncate(off);
+    bytes.extend_from_slice(new.as_bytes());
+    bytes[24..32].copy_from_slice(&(new.len() as u64).to_le_bytes());
+    bytes[32..40].copy_from_slice(&fnv1a64(new.as_bytes()).to_le_bytes());
+    std::fs::write(path, bytes).unwrap();
+}
+
+#[test]
+fn corrupt_artifacts_name_their_failure() {
+    let _g = lock();
+    let (w, cal, _) = setup(131);
+    let qm = QuantModel::build(&w, QuantPolicy::parse("w4a4kv4:16").unwrap(), &cal);
+    let good = tdir().join("taxonomy.qrzk");
+    write_quant_model(&good, &qm, None).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let (h_off, h_len) = header_span(&bytes);
+
+    let open_mutated = |name: &str, mutate: &dyn Fn(&mut Vec<u8>)| -> ArtifactError {
+        let p = tdir().join(name);
+        let mut b = bytes.clone();
+        mutate(&mut b);
+        std::fs::write(&p, &b).unwrap();
+        let e = Artifact::open(&p).err().expect("corruption must not open cleanly");
+        std::fs::remove_file(&p).ok();
+        e
+    };
+
+    // missing file
+    let missing = Artifact::open(Path::new("/nonexistent/qrazor.qrzk"));
+    assert!(matches!(missing, Err(ArtifactError::Io(_))));
+    // shorter than the preamble
+    let e = open_mutated("tx_short.qrzk", &|b| b.truncate(40));
+    assert!(matches!(e, ArtifactError::Truncated { .. }), "{e}");
+    // wrong magic
+    let e = open_mutated("tx_magic.qrzk", &|b| b[0] ^= 0xff);
+    assert!(matches!(e, ArtifactError::BadMagic { .. }), "{e}");
+    // future version
+    let e = open_mutated("tx_version.qrzk", &|b| {
+        b[8..12].copy_from_slice(&99u32.to_le_bytes())
+    });
+    assert!(matches!(e, ArtifactError::BadVersion { found: 99, supported: 1 }), "{e}");
+    // file ends inside the header
+    let e = open_mutated("tx_trunc.qrzk", &|b| b.truncate(h_off + h_len - 3));
+    assert!(matches!(e, ArtifactError::Truncated { .. }), "{e}");
+    // header bytes flipped after writing
+    let e = open_mutated("tx_hsum.qrzk", &|b| b[h_off] ^= 0x01);
+    assert!(matches!(e, ArtifactError::HeaderChecksum { .. }), "{e}");
+
+    // a flipped payload byte: opens (structure is intact), fails
+    // verify/eager-load with the tensor and plane named, still loads
+    // cold (payload validation is deferred by design)
+    let p = tdir().join("tx_section.qrzk");
+    let mut b = bytes.clone();
+    b[64] ^= 0x01;
+    std::fs::write(&p, &b).unwrap();
+    let art = Artifact::open(&p).unwrap();
+    match art.verify() {
+        Err(ArtifactError::SectionChecksum { tensor, plane, .. }) => {
+            assert_eq!(tensor, "embed");
+            assert_eq!(plane, "data");
+        }
+        other => panic!("expected SectionChecksum, got {other:?}"),
+    }
+    assert!(matches!(
+        art.load_model(LoadMode::Eager),
+        Err(ArtifactError::SectionChecksum { .. })
+    ));
+    assert!(art.load_model(LoadMode::Cold).is_ok(), "cold load defers payload checksums");
+    std::fs::remove_file(&p).ok();
+
+    // header edits that keep the checksum valid but contradict the
+    // table: wrong schema, scheme-backed policy, tampered dims/specs
+    let tamper = |name: &str, f: &dyn Fn(&str) -> String| -> ArtifactError {
+        let p = tdir().join(name);
+        std::fs::copy(&good, &p).unwrap();
+        rewrite_header(&p, f);
+        let e = Artifact::open(&p).err().expect("tampered header must not open");
+        std::fs::remove_file(&p).ok();
+        e
+    };
+    let e = tamper("tx_schema.qrzk", &|h| h.replacen("qrazor.ckpt.v1", "qrazor.ckpt.v9", 1));
+    assert!(matches!(e, ArtifactError::BadHeader { .. }), "{e}");
+    let e = tamper("tx_scheme.qrzk", &|h| {
+        let pat = "\"kind\": \"razor\"";
+        assert!(h.contains(pat), "no policy kind in header");
+        h.replacen(pat, "\"kind\": \"scheme\"", 1)
+    });
+    assert!(matches!(e, ArtifactError::PolicyIncompatible { .. }), "{e}");
+    let e = tamper("tx_rows.qrzk", &|h| {
+        let pat = "\"rows\": 64";
+        assert!(h.contains(pat), "no packed record in header");
+        h.replacen(pat, "\"rows\": 63", 1)
+    });
+    assert!(matches!(e, ArtifactError::TableMismatch { .. }), "{e}");
+    let e = tamper("tx_spec.qrzk", &|h| {
+        let pat = "\"spec\": {\"basis\": 8,\"group\": 16,\"target\": 4}";
+        assert!(h.contains(pat), "no weight spec in header");
+        h.replacen(pat, "\"spec\": {\"basis\": 8,\"group\": 16,\"target\": 8}", 1)
+    });
+    assert!(matches!(e, ArtifactError::TableMismatch { .. }), "{e}");
+
+    std::fs::remove_file(&good).ok();
+}
+
+// ---------------------------------------------------------------- //
+// serving identity
+// ---------------------------------------------------------------- //
+
+#[test]
+fn serving_from_artifact_is_stream_identical() {
+    let _g = lock();
+    let (w, cal, _) = setup(211);
+    let dsl = "w4a4kv4:16;layers=0:w4a8";
+    let qm = QuantModel::build(&w, QuantPolicy::parse(dsl).unwrap(), &cal);
+    let vocab = w.config.vocab as u64;
+    let path = tdir().join("serve.qrzk");
+    write_quant_model(&path, &qm, None).unwrap();
+    let serve_cfg = ServeConfig { max_new_tokens: 8, policy: dsl.into(), ..Default::default() };
+
+    let server = Server::spawn(qm, serve_cfg.clone());
+    let want = greedy_workload(&server, vocab, 6);
+    server.shutdown();
+
+    // single engine, eager and cold
+    for mode in [LoadMode::Eager, LoadMode::Cold] {
+        let loaded = Server::spawn_from_artifact(&path, mode, serve_cfg.clone()).unwrap();
+        let got = greedy_workload(&loaded, vocab, 6);
+        loaded.shutdown();
+        assert_eq!(want, got, "{mode:?}: loaded engine streams diverged");
+    }
+
+    // 2-shard cluster from the same artifact, across KV page sizes —
+    // the streams must not depend on pages, shards, or the load path
+    for pages in [1usize, 8] {
+        let cfg = ServeConfig { kv_page_tokens: pages, ..serve_cfg.clone() };
+        let cluster = ClusterServer::spawn_from_artifact(
+            &path,
+            LoadMode::Eager,
+            ClusterConfig { shards: 2, serve: cfg, ..Default::default() },
+        )
+        .unwrap();
+        let got = greedy_workload(&cluster, vocab, 6);
+        cluster.shutdown();
+        assert_eq!(want, got, "page size {pages}: cluster streams diverged");
+    }
+
+    // one mapping feeds every consumer: loading clones the Arc into
+    // the packed planes instead of copying them
+    let art = Artifact::open(&path).unwrap();
+    let before = Arc::strong_count(art.map());
+    let loaded = art.load_model(LoadMode::Eager).unwrap();
+    assert!(
+        Arc::strong_count(art.map()) > before,
+        "loaded planes must share the artifact's mapping"
+    );
+    drop(loaded);
+    assert_eq!(Arc::strong_count(art.map()), before);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn speculative_pair_from_two_artifacts_matches_plain_decode() {
+    let _g = lock();
+    let (w, cal, _) = setup(223);
+    let target = QuantModel::build(&w, QuantPolicy::parse("w4a8kv4:16").unwrap(), &cal);
+    let draft = QuantModel::build(&w, QuantPolicy::parse("w4a4kv4:16").unwrap(), &cal);
+    let tp = tdir().join("spec_target.qrzk");
+    let dp = tdir().join("spec_draft.qrzk");
+    write_quant_model(&tp, &target, None).unwrap();
+    write_quant_model(&dp, &draft, None).unwrap();
+    let vocab = w.config.vocab as u64;
+    let base_cfg = ServeConfig {
+        max_new_tokens: 8,
+        policy: "w4a8kv4:16".into(),
+        draft_policy: "w4a4kv4:16".into(),
+        ..Default::default()
+    };
+
+    let plain = Server::spawn_from_artifact(&tp, LoadMode::Eager, base_cfg.clone()).unwrap();
+    let want = greedy_workload(&plain, vocab, 6);
+    plain.shutdown();
+
+    let t_qm = Artifact::open(&tp).unwrap().load_model(LoadMode::Eager).unwrap();
+    let d_qm = Artifact::open(&dp).unwrap().load_model(LoadMode::Eager).unwrap();
+    let spec = Server::spawn_with_draft(
+        t_qm,
+        Some(Arc::new(d_qm)),
+        ServeConfig { spec_k: 2, ..base_cfg },
+    );
+    let got = greedy_workload(&spec, vocab, 6);
+    let stats = spec.stats();
+    spec.shutdown();
+    assert_eq!(want, got, "speculative streams from two artifacts must match plain decode");
+    assert!(stats.spec.steps > 0, "speculative rounds must actually run");
+    for p in [&tp, &dp] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+// ---------------------------------------------------------------- //
+// zero re-quantization
+// ---------------------------------------------------------------- //
+
+#[test]
+fn loading_runs_zero_requantization() {
+    let _g = lock();
+    let (w, cal, seqs) = setup(227);
+    let qm = QuantModel::build(&w, QuantPolicy::parse("w4a4kv4:16").unwrap(), &cal);
+    let path = tdir().join("zero_requant.qrzk");
+    write_quant_model(&path, &qm, None).unwrap();
+    drop(qm);
+    qrazor::obs::health_reset();
+    qrazor::obs::set_health(true);
+    let art = Artifact::open(&path).unwrap();
+    let loaded = art.load_model(LoadMode::Eager).unwrap();
+    assert_eq!(
+        qrazor::obs::razored_groups_total(),
+        0,
+        "open + verify + load must not razor a single group"
+    );
+    let _ = loaded.forward_full(&seqs[0][..8]);
+    assert!(
+        qrazor::obs::razored_groups_total() > 0,
+        "the counter is live: a forward razors activations"
+    );
+    qrazor::obs::set_health(false);
+    qrazor::obs::health_reset();
+    std::fs::remove_file(&path).ok();
+}
